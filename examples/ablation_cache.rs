@@ -1,0 +1,80 @@
+//! Eviction-policy and prefetch ablation tool.
+//!
+//! The paper fixes FIFO (footnote 1) and folds prefetch into the
+//! inference thread; this example lets you vary both knobs and watch the
+//! hit rate / blocking-miss / throughput trade-off.
+//!
+//! Run: `cargo run --release --example ablation_cache -- --model switch64`
+
+use std::sync::Arc;
+
+use sida_moe::config::ServeConfig;
+use sida_moe::coordinator::{Pipeline, PipelineConfig};
+use sida_moe::memory::CostModel;
+use sida_moe::metrics::Table;
+use sida_moe::runtime::ModelBundle;
+use sida_moe::util::cli::Cli;
+use sida_moe::workload::{ArrivalProcess, Profile, TraceGenerator};
+
+fn main() -> anyhow::Result<()> {
+    sida_moe::util::logging::init();
+    let cli = Cli::new("ablation_cache", "eviction x prefetch ablation")
+        .opt("model", "model config", "switch64")
+        .opt("dataset", "dataset profile", "sst2")
+        .opt("requests", "requests per cell", "10")
+        .opt("layer-frac", "budget as a fraction of one MoE layer", "0.5");
+    let args = cli.parse();
+    let model = args.get_or("model", "switch64");
+    let dataset = args.get_or("dataset", "sst2");
+    let n = args.get_usize("requests", 10);
+    let frac = args.get_f64("layer-frac", 0.5);
+
+    let root = sida_moe::default_artifacts_root();
+    if !root.join(&model).join("model.json").is_file() {
+        println!("artifacts for {model} not built — run `make artifacts`");
+        return Ok(());
+    }
+    let bundle = Arc::new(ModelBundle::load_named(&root, &model)?);
+    let cost = CostModel::paper_scale(bundle.topology.expert_param_bytes);
+    let layer_sim =
+        cost.sim_bytes(bundle.topology.expert_param_bytes * bundle.topology.num_experts);
+    let budget = (layer_sim as f64 * frac) as usize;
+
+    let mut gen =
+        TraceGenerator::new(Profile::named(&dataset)?, bundle.topology.vocab, 0);
+    let requests = gen.trace(n, ArrivalProcess::ClosedLoop);
+
+    let mut t = Table::new(
+        "eviction x prefetch ablation",
+        &[
+            "policy", "prefetch", "hit %", "blocking misses", "evictions",
+            "req/s",
+        ],
+    );
+    for policy in ["fifo", "lru", "lfu", "clock"] {
+        for prefetch in [true, false] {
+            let cfg = PipelineConfig {
+                k_used: ServeConfig::paper_k_for(&dataset),
+                budget_sim_bytes: budget,
+                policy: policy.into(),
+                prefetch,
+                real_sleep: true,
+                ..Default::default()
+            };
+            let out = Pipeline::new(bundle.clone(), &dataset, cfg)?.serve(&requests)?;
+            let s = &out.stats;
+            let hit = 100.0 * s.cache_hits as f64
+                / (s.cache_hits + s.cache_misses).max(1) as f64;
+            t.row(vec![
+                policy.into(),
+                prefetch.to_string(),
+                format!("{hit:.1}"),
+                s.blocking_misses.to_string(),
+                s.evictions.to_string(),
+                format!("{:.2}", s.throughput()),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}

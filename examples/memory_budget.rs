@@ -1,0 +1,86 @@
+//! Memory-budget sweep (Fig 11 as an interactive tool).
+//!
+//! Sweeps the simulated device budget for one model/dataset and compares
+//! SiDA, Reactive (no prediction) and Layerwise (model-parallel
+//! streaming) — the constrained-memory scenario the paper's intro
+//! motivates (commodity 24-48GB GPUs serving 27-54GB models).
+//!
+//! Run: `cargo run --release --example memory_budget -- --model switch128`
+
+use std::sync::Arc;
+
+use sida_moe::baselines::{run_baseline, BaselineConfig, Method};
+use sida_moe::config::ServeConfig;
+use sida_moe::coordinator::{Pipeline, PipelineConfig};
+use sida_moe::memory::CostModel;
+use sida_moe::metrics::report::fmt_bytes;
+use sida_moe::metrics::Table;
+use sida_moe::runtime::ModelBundle;
+use sida_moe::util::cli::Cli;
+use sida_moe::workload::{ArrivalProcess, Profile, TraceGenerator};
+
+fn main() -> anyhow::Result<()> {
+    sida_moe::util::logging::init();
+    let cli = Cli::new("memory_budget", "budget sweep: SiDA vs offloading baselines")
+        .opt("model", "model config", "switch128")
+        .opt("dataset", "dataset profile", "sst2")
+        .opt("requests", "requests per cell", "8")
+        .opt("fracs", "comma-separated budget fractions of one MoE layer", "0.25,0.5,1,2");
+    let args = cli.parse();
+    let model = args.get_or("model", "switch128");
+    let dataset = args.get_or("dataset", "sst2");
+    let n = args.get_usize("requests", 8);
+
+    let root = sida_moe::default_artifacts_root();
+    if !root.join(&model).join("model.json").is_file() {
+        println!("artifacts for {model} not built — run `make artifacts`");
+        return Ok(());
+    }
+    let bundle = Arc::new(ModelBundle::load_named(&root, &model)?);
+    let cost = CostModel::paper_scale(bundle.topology.expert_param_bytes);
+    let layer_sim =
+        cost.sim_bytes(bundle.topology.expert_param_bytes * bundle.topology.num_experts);
+    println!(
+        "{model}: one MoE layer = {} simulated; sweeping budgets",
+        fmt_bytes(layer_sim)
+    );
+
+    let mut gen =
+        TraceGenerator::new(Profile::named(&dataset)?, bundle.topology.vocab, 0);
+    let requests = gen.trace(n, ArrivalProcess::ClosedLoop);
+
+    let mut t = Table::new(
+        "throughput vs budget",
+        &["budget", "layerwise req/s", "reactive req/s", "sida req/s", "sida hit %"],
+    );
+    for frac_str in args.get_or("fracs", "0.25,0.5,1,2").split(',') {
+        let frac: f64 = frac_str.trim().parse().unwrap_or(1.0);
+        let budget = (layer_sim as f64 * frac) as usize;
+        let bcfg = BaselineConfig {
+            budget_sim_bytes: budget,
+            real_sleep: true,
+            ..Default::default()
+        };
+        let lw = run_baseline(bundle.clone(), &dataset, Method::Layerwise, &requests, &bcfg)?;
+        let re = run_baseline(bundle.clone(), &dataset, Method::Reactive, &requests, &bcfg)?;
+        let pcfg = PipelineConfig {
+            k_used: ServeConfig::paper_k_for(&dataset),
+            budget_sim_bytes: budget,
+            real_sleep: true,
+            ..Default::default()
+        };
+        let sida = Pipeline::new(bundle.clone(), &dataset, pcfg)?.serve(&requests)?;
+        let s = &sida.stats;
+        let hit =
+            100.0 * s.cache_hits as f64 / (s.cache_hits + s.cache_misses).max(1) as f64;
+        t.row(vec![
+            fmt_bytes(budget),
+            format!("{:.2}", lw.stats.throughput()),
+            format!("{:.2}", re.stats.throughput()),
+            format!("{:.2}", s.throughput()),
+            format!("{hit:.1}"),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

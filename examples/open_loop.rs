@@ -1,0 +1,74 @@
+//! Open-loop load test: Poisson arrivals against the SiDA coordinator.
+//!
+//! Where `serve_trace` measures capacity (closed loop), this example
+//! measures client-visible latency under a target offered load —
+//! queueing + hash build + inference — sweeping the arrival rate up to
+//! saturation.
+//!
+//! Run: `cargo run --release --example open_loop -- --model switch64 --rates 20,50,100`
+
+use std::sync::Arc;
+
+use sida_moe::config::ServeConfig;
+use sida_moe::coordinator::{replay_open_loop, Pipeline, PipelineConfig};
+use sida_moe::metrics::report::fmt_secs;
+use sida_moe::metrics::Table;
+use sida_moe::runtime::ModelBundle;
+use sida_moe::util::cli::Cli;
+use sida_moe::workload::{ArrivalProcess, Profile, TraceGenerator};
+
+fn main() -> anyhow::Result<()> {
+    sida_moe::util::logging::init();
+    let cli = Cli::new("open_loop", "Poisson load test against the SiDA coordinator")
+        .opt("model", "model config", "switch64")
+        .opt("dataset", "dataset profile", "sst2")
+        .opt("requests", "requests per rate", "20")
+        .opt("rates", "comma-separated arrival rates (req/s)", "20,50,100")
+        .opt("queue-cap", "admission queue bound", "32");
+    let args = cli.parse();
+    let model = args.get_or("model", "switch64");
+    let dataset = args.get_or("dataset", "sst2");
+    let n = args.get_usize("requests", 20);
+
+    let root = sida_moe::default_artifacts_root();
+    if !root.join(&model).join("model.json").is_file() {
+        println!("artifacts for {model} not built — run `make artifacts`");
+        return Ok(());
+    }
+    let bundle = Arc::new(ModelBundle::load_named(&root, &model)?);
+    let cfg = PipelineConfig {
+        k_used: ServeConfig::paper_k_for(&dataset),
+        want_cls: true,
+        ..Default::default()
+    };
+    let pipeline = Pipeline::new(bundle.clone(), &dataset, cfg)?;
+
+    // warm the executables + cache once
+    let mut gen = TraceGenerator::new(Profile::named(&dataset)?, bundle.topology.vocab, 7);
+    let warm = gen.trace(4, ArrivalProcess::ClosedLoop);
+    let _ = pipeline.serve(&warm)?;
+
+    let mut t = Table::new(
+        "open-loop latency under offered load",
+        &["rate (req/s)", "served", "rejected", "mean queueing", "p50", "p95", "p99"],
+    );
+    for rate_str in args.get_or("rates", "20,50,100").split(',') {
+        let rate: f64 = rate_str.trim().parse().unwrap_or(20.0);
+        let mut gen =
+            TraceGenerator::new(Profile::named(&dataset)?, bundle.topology.vocab, 11);
+        let trace = gen.trace(n, ArrivalProcess::Poisson { rate });
+        let report = replay_open_loop(&pipeline, &trace, args.get_usize("queue-cap", 32))?;
+        let mut s = report.outcome.stats;
+        t.row(vec![
+            format!("{rate:.0}"),
+            s.requests.to_string(),
+            report.rejected.to_string(),
+            fmt_secs(report.mean_queueing_secs),
+            fmt_secs(s.latency.p50()),
+            fmt_secs(s.latency.p95()),
+            fmt_secs(s.latency.p99()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Quickstart: the smallest end-to-end tour of the public API.
+//!
+//! Loads the build-time-trained switch8 bundle, builds a hash table for
+//! one sentence (the hash-building thread's job), serves a short trace
+//! through the SiDA pipeline, and prints predictions + stats.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first)
+
+use std::sync::Arc;
+
+use sida_moe::coordinator::{HashBuilder, Pipeline, PipelineConfig};
+use sida_moe::runtime::ModelBundle;
+use sida_moe::workload::{ArrivalProcess, Profile, TraceGenerator};
+
+fn main() -> anyhow::Result<()> {
+    sida_moe::util::logging::init();
+    let root = sida_moe::default_artifacts_root();
+    if !root.join("switch8").join("model.json").is_file() {
+        println!("artifacts not built — run `make artifacts` first");
+        return Ok(());
+    }
+
+    // 1. load a model bundle: compiled HLO artifacts + weights + topology
+    let bundle = Arc::new(ModelBundle::load_named(&root, "switch8")?);
+    println!(
+        "loaded {} ({} experts x {} MoE layers, PJRT platform: {})",
+        bundle.topology.name,
+        bundle.topology.num_experts,
+        bundle.topology.num_moe_layers(),
+        bundle.engine.platform(),
+    );
+
+    // 2. the data-aware half: predict expert activation for one sentence
+    //    without running the model at all
+    let mut gen = TraceGenerator::new(Profile::named("sst2")?, bundle.topology.vocab, 42);
+    let (ids, n_tokens, topic) = gen.sentence();
+    let builder = HashBuilder::new(&bundle, "sst2")?;
+    let table = builder.build(0, &ids)?;
+    let mask: Vec<f32> = ids.iter().map(|&t| if t != 0 { 1.0 } else { 0.0 }).collect();
+    println!("\nsentence: {n_tokens} tokens (topic {topic})");
+    for layer in 0..table.m {
+        println!(
+            "  MoE layer {layer}: predicted active experts {:?} (idle {:.0}%)",
+            table.predicted_experts(layer, 1, &mask),
+            100.0 * table.idle_ratio(layer, bundle.topology.num_experts, &mask),
+        );
+    }
+
+    // 3. serve a small closed-loop trace through the full two-thread
+    //    pipeline (hash-building thread + prefetch + inference thread)
+    let requests = gen.trace(8, ArrivalProcess::ClosedLoop);
+    let pipeline = Pipeline::new(
+        bundle,
+        "sst2",
+        PipelineConfig { want_cls: true, ..Default::default() },
+    )?;
+    let outcome = pipeline.serve(&requests)?;
+    let mut stats = outcome.stats;
+    println!("\nserved {} requests in {:.3}s", stats.requests, stats.wall_secs);
+    println!("  throughput      {:.1} req/s", stats.throughput());
+    println!(
+        "  latency p50/p95 {:.2} / {:.2} ms",
+        stats.latency.p50() * 1e3,
+        stats.latency.p95() * 1e3
+    );
+    println!(
+        "  cache           {} hits / {} misses ({} blocking)",
+        stats.cache_hits, stats.cache_misses, stats.blocking_misses
+    );
+    println!("  expert calls    {}", stats.phases.expert_invocations);
+    for r in outcome.per_request.iter().take(3) {
+        println!(
+            "  request {} -> class {:?} in {:.2} ms",
+            r.id,
+            r.cls_pred,
+            r.latency_secs * 1e3
+        );
+    }
+    Ok(())
+}

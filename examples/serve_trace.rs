@@ -1,0 +1,137 @@
+//! End-to-end serving driver (the required validation example).
+//!
+//! Loads a build-time-trained Switch model, serves a mixed batched
+//! request trace through the full SiDA stack — hash-building thread,
+//! prefetch stage, inference thread, expert cache under a device-memory
+//! budget with modeled PCIe transfer costs actually slept on the
+//! critical path — and reports latency/throughput, hash-hit rate and
+//! memory saving against the Standard baseline on the same trace.
+//!
+//! Run: `cargo run --release --example serve_trace -- --model switch64`
+//! Results recorded in EXPERIMENTS.md §End-to-end.
+
+use std::sync::Arc;
+
+use sida_moe::baselines::{run_baseline, BaselineConfig, Method};
+use sida_moe::config::ServeConfig;
+use sida_moe::coordinator::{Pipeline, PipelineConfig};
+use sida_moe::memory::CostModel;
+use sida_moe::metrics::report::{fmt_bytes, fmt_secs};
+use sida_moe::metrics::Table;
+use sida_moe::runtime::ModelBundle;
+use sida_moe::util::cli::Cli;
+use sida_moe::workload::{ArrivalProcess, Profile, TraceGenerator};
+
+fn main() -> anyhow::Result<()> {
+    sida_moe::util::logging::init();
+    let cli = Cli::new("serve_trace", "end-to-end SiDA serving driver")
+        .opt("model", "model config", "switch64")
+        .opt("requests", "requests per dataset", "16")
+        .opt("budget-gb", "device budget (sim GB)", "8")
+        .opt("seed", "trace seed", "0");
+    let args = cli.parse();
+    let model = args.get_or("model", "switch64");
+    let n = args.get_usize("requests", 16);
+    let budget = (args.get_f64("budget-gb", 8.0) * 1e9) as usize;
+
+    let root = sida_moe::default_artifacts_root();
+    if !root.join(&model).join("model.json").is_file() {
+        println!("artifacts for {model} not built — run `make artifacts`");
+        return Ok(());
+    }
+    let bundle = Arc::new(ModelBundle::load_named(&root, &model)?);
+    let cost = CostModel::paper_scale(bundle.topology.expert_param_bytes);
+    let full_sim = cost.sim_bytes(bundle.topology.total_param_bytes);
+    println!(
+        "model {model}: {} experts/layer, full residency {} (simulated), budget {}",
+        bundle.topology.num_experts,
+        fmt_bytes(full_sim),
+        fmt_bytes(budget),
+    );
+
+    let mut t = Table::new(
+        "end-to-end serving (real-slept transfer model)",
+        &[
+            "dataset", "method", "req/s", "p50", "p95", "p99", "hash hit %",
+            "peak device", "mem saved %",
+        ],
+    );
+    let mut total_tokens = 0u64;
+    for dataset in ["sst2", "mrpc", "multirc"] {
+        let mut gen = TraceGenerator::new(
+            Profile::named(dataset)?,
+            bundle.topology.vocab,
+            args.get_u64("seed", 0),
+        );
+        let requests = gen.trace(n, ArrivalProcess::ClosedLoop);
+        total_tokens += requests.iter().map(|r| r.n_tokens as u64).sum::<u64>();
+
+        // SiDA
+        let pcfg = PipelineConfig {
+            k_used: ServeConfig::paper_k_for(dataset),
+            budget_sim_bytes: budget,
+            real_sleep: true,
+            want_cls: true,
+            ..Default::default()
+        };
+        let sida = Pipeline::new(bundle.clone(), dataset, pcfg)?.serve(&requests)?;
+        let mut s = sida.stats.clone();
+        let dense_sim = cost
+            .sim_bytes(bundle.topology.total_param_bytes - bundle.topology.moe_param_bytes);
+        let sida_peak = dense_sim + s.peak_device_bytes;
+        let hit =
+            100.0 * s.cache_hits as f64 / (s.cache_hits + s.cache_misses).max(1) as f64;
+        t.row(vec![
+            dataset.into(),
+            "sida".into(),
+            format!("{:.2}", s.throughput()),
+            fmt_secs(s.latency.p50()),
+            fmt_secs(s.latency.p95()),
+            fmt_secs(s.latency.p99()),
+            format!("{hit:.1}"),
+            fmt_bytes(sida_peak),
+            format!(
+                "{:.1}",
+                100.0 * (full_sim.saturating_sub(sida_peak)) as f64 / full_sim as f64
+            ),
+        ]);
+
+        // Standard baseline on the same trace
+        let bcfg =
+            BaselineConfig { real_sleep: true, want_cls: true, ..Default::default() };
+        let std_out =
+            run_baseline(bundle.clone(), dataset, Method::Standard, &requests, &bcfg)?;
+        let mut s = std_out.stats.clone();
+        t.row(vec![
+            dataset.into(),
+            "standard".into(),
+            format!("{:.2}", s.throughput()),
+            fmt_secs(s.latency.p50()),
+            fmt_secs(s.latency.p95()),
+            fmt_secs(s.latency.p99()),
+            "-".into(),
+            fmt_bytes(full_sim),
+            "0.0".into(),
+        ]);
+
+        // classifier agreement (fidelity proxy)
+        let mut a = sida.per_request.clone();
+        a.sort_by_key(|r| r.id);
+        let mut bb = std_out.per_request.clone();
+        bb.sort_by_key(|r| r.id);
+        let agree = a
+            .iter()
+            .zip(bb.iter())
+            .filter(|(x, y)| x.cls_pred == y.cls_pred)
+            .count();
+        println!(
+            "{dataset}: classifier agreement SiDA vs Standard {}/{}",
+            agree,
+            requests.len()
+        );
+    }
+    t.print();
+    println!("total real tokens served per method: {total_tokens}");
+    t.save_csv("target/bench_results/serve_trace.csv")?;
+    Ok(())
+}

@@ -1,0 +1,7 @@
+"""Build-time Python for the SiDA-MoE reproduction (L1 kernels + L2 model).
+
+Everything in this package runs exactly once, at `make artifacts`:
+training the tiny Switch models and hash functions, verifying kernels,
+and lowering serving entry points to HLO text for the Rust coordinator.
+Python is never on the request path.
+"""

@@ -1,0 +1,154 @@
+"""Model and dataset configuration registry for the SiDA-MoE reproduction.
+
+The paper evaluates Switch-base-{8,64,128,256} (HF checkpoints) on
+SST2 / MRPC (GLUE) and MultiRC (SuperGLUE).  This testbed has no GPU and
+no checkpoints, so we build Switch-*style* models with the same expert
+counts but tiny dense dims (see DESIGN.md §2), trained at build time on a
+synthetic topic-clustered corpus.  Everything that matters to the serving
+system — which experts fire, per-expert weight granularity, the
+expert-dominated byte budget — is preserved.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import Dict, List, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A Switch-style decoder-only LM with MoE FFN layers."""
+
+    name: str
+    vocab: int = 256
+    d_model: int = 64
+    d_ff: int = 128
+    n_heads: int = 4
+    n_blocks: int = 4
+    # blocks whose FFN is a Switch MoE layer (every other block, per Switch)
+    moe_blocks: Tuple[int, ...] = (1, 3)
+    num_experts: int = 8
+    n_classes: int = 4
+    # router softmax temperature used at train time
+    router_z_loss: float = 1e-3
+    aux_loss_coef: float = 1e-2
+
+    @property
+    def num_moe_layers(self) -> int:
+        return len(self.moe_blocks)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def expert_param_count(self) -> int:
+        """Parameters of a single expert MLP (w1, b1, w2, b2)."""
+        return self.d_model * self.d_ff + self.d_ff + self.d_ff * self.d_model + self.d_model
+
+    def moe_param_count(self) -> int:
+        return self.num_moe_layers * self.num_experts * self.expert_param_count()
+
+    def dense_param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        per_block_attn = 4 * (d * d + d) + 2 * d  # qkvo + ln
+        per_block_ffn = d * f + f + f * d + d + 2 * d  # mlp + ln
+        n_dense_ffn = self.n_blocks - self.num_moe_layers
+        embed = v * d + MAX_SEQ_LEN * d
+        head = 2 * d + d * v + v  # final ln + lm head
+        cls = d * self.n_classes + self.n_classes
+        # router weights live with the dense params (they are offloaded in SiDA)
+        routers = self.num_moe_layers * (d * self.num_experts)
+        return (
+            self.n_blocks * per_block_attn
+            + n_dense_ffn * per_block_ffn
+            + self.num_moe_layers * 2 * d  # moe block ln
+            + embed
+            + head
+            + cls
+            + routers
+        )
+
+    def total_param_count(self) -> int:
+        return self.moe_param_count() + self.dense_param_count()
+
+
+@dataclass(frozen=True)
+class HashFnConfig:
+    """The SiDA hash function: FC compress -> 2-layer LSTM -> sparse
+    attention (SparseMax) -> residual -> FC to per-MoE-layer expert logits.
+    """
+
+    hidden: int = 48
+    n_lstm_layers: int = 2
+    top_k: int = 4  # predicted experts exported per token per layer
+    # truncated-KD truncation (paper uses T=30; capped at num_experts)
+    kd_top_t: int = 30
+    lambda_ce: float = 0.005  # paper: lambda = 0.005 weighting L_CE
+    # NOTE(paper §3.5): objective is lambda*L_CE + L_TKD.  With
+    # lambda=0.005 the CE term is tiny; we follow the paper's constants.
+
+
+@dataclass(frozen=True)
+class DatasetProfile:
+    """Synthetic stand-in for a GLUE/SuperGLUE dataset: matched sentence
+    length distribution + topic-clustered token statistics."""
+
+    name: str
+    seq_len: int  # padded model sequence length for this profile
+    min_len: int
+    max_len: int
+    n_topics: int = 4
+    # Zipf exponent of the per-topic token distribution
+    zipf_a: float = 1.3
+    # fraction of tokens drawn from the topic band vs the global tail
+    topic_frac: float = 0.75
+
+
+MAX_SEQ_LEN = 256
+
+# --- registry -------------------------------------------------------------
+
+MODEL_CONFIGS: Dict[str, ModelConfig] = {
+    "switch8": ModelConfig(name="switch8", num_experts=8),
+    "switch64": ModelConfig(name="switch64", num_experts=64),
+    "switch128": ModelConfig(name="switch128", num_experts=128),
+    "switch256": ModelConfig(name="switch256", num_experts=256),
+}
+
+# SST2: short sentences (paper Fig 2: mostly 5-30 tokens)
+# MRPC: mid-length (paper: clustered 50-80)
+# MultiRC: long paragraphs (paper: 200-500; we cap at 256 for CPU budget,
+#          documented in DESIGN.md §2)
+DATASET_PROFILES: Dict[str, DatasetProfile] = {
+    "sst2": DatasetProfile(name="sst2", seq_len=32, min_len=5, max_len=30),
+    "mrpc": DatasetProfile(name="mrpc", seq_len=96, min_len=40, max_len=90),
+    "multirc": DatasetProfile(name="multirc", seq_len=256, min_len=150, max_len=250),
+}
+
+# token-count buckets for the per-expert FFN artifact (rust pads up)
+EXPERT_TOKEN_BUCKETS: Tuple[int, ...] = (4, 16, 64, 256)
+
+HASH_CONFIG = HashFnConfig()
+
+
+def config_summary() -> List[dict]:
+    rows = []
+    for name, cfg in MODEL_CONFIGS.items():
+        total = cfg.total_param_count()
+        moe = cfg.moe_param_count()
+        rows.append(
+            {
+                "name": name,
+                "params": total,
+                "moe_params": moe,
+                "moe_frac": moe / total,
+            }
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in config_summary():
+        print(
+            f"{row['name']:10s} total={row['params']/1e6:7.2f}M "
+            f"moe={row['moe_params']/1e6:7.2f}M ({100*row['moe_frac']:5.1f}%)"
+        )

@@ -1,0 +1,104 @@
+"""Synthetic topic-clustered corpora standing in for SST2 / MRPC / MultiRC.
+
+Why synthetic works here (DESIGN.md §2): the paper's serving results are
+parameterized by (a) sentence length distribution and (b) data-dependent,
+non-uniform expert activation.  A topic-clustered token model gives the
+router clustered inputs to specialize on, so the trained Switch model
+exhibits the same sentence-level activation sparsity the paper measures
+(Fig 4), and the hash function has real structure to learn (Tab 5).
+
+Token space layout (vocab=256 by default):
+  0           PAD
+  1           BOS
+  2           EOS
+  3..V-1      content tokens, carved into `n_topics` contiguous bands
+Each sentence picks a topic; `topic_frac` of its tokens are Zipf-drawn
+from the topic band, the rest from the global distribution.  The label of
+a sentence is its topic id (classification task, Tab 4 stand-in).
+"""
+
+from dataclasses import dataclass
+from typing import Iterator, Tuple
+
+import numpy as np
+
+from .configs import DatasetProfile
+
+PAD, BOS, EOS = 0, 1, 2
+CONTENT_START = 3
+
+
+@dataclass
+class Batch:
+    ids: np.ndarray  # i32 [B, L]   padded token ids
+    lengths: np.ndarray  # i32 [B]  true lengths incl BOS/EOS
+    labels: np.ndarray  # i32 [B]   topic id
+    mask: np.ndarray  # f32 [B, L]  1.0 on real tokens
+
+
+class SyntheticCorpus:
+    """Deterministic, seedable corpus generator for one dataset profile."""
+
+    def __init__(self, profile: DatasetProfile, vocab: int, seed: int = 0):
+        assert vocab > CONTENT_START + profile.n_topics
+        self.profile = profile
+        self.vocab = vocab
+        self.seed = seed
+        n_content = vocab - CONTENT_START
+        self.band = n_content // profile.n_topics
+        # per-topic Zipf weights over the band
+        ranks = np.arange(1, self.band + 1, dtype=np.float64)
+        w = ranks ** (-profile.zipf_a)
+        self.topic_weights = w / w.sum()
+        gw = np.arange(1, n_content + 1, dtype=np.float64) ** (-1.05)
+        self.global_weights = gw / gw.sum()
+        self.n_content = n_content
+
+    def _rng(self, salt: int) -> np.random.Generator:
+        return np.random.default_rng((self.seed, hash(self.profile.name) & 0xFFFF, salt))
+
+    def sample_sentence(self, rng: np.random.Generator) -> Tuple[np.ndarray, int, int]:
+        p = self.profile
+        topic = int(rng.integers(0, p.n_topics))
+        length = int(rng.integers(p.min_len, p.max_len + 1))
+        length = min(length, p.seq_len - 2)
+        n_topic_tok = int(round(p.topic_frac * length))
+        band_lo = CONTENT_START + topic * self.band
+        topic_toks = band_lo + rng.choice(self.band, size=n_topic_tok, p=self.topic_weights)
+        global_toks = CONTENT_START + rng.choice(
+            self.n_content, size=length - n_topic_tok, p=self.global_weights
+        )
+        body = np.concatenate([topic_toks, global_toks])
+        rng.shuffle(body)
+        ids = np.full(p.seq_len, PAD, dtype=np.int32)
+        ids[0] = BOS
+        ids[1 : 1 + length] = body
+        ids[1 + length] = EOS
+        return ids, length + 2, topic
+
+    def batches(self, batch_size: int, n_batches: int, salt: int = 0) -> Iterator[Batch]:
+        rng = self._rng(salt)
+        for _ in range(n_batches):
+            ids = np.zeros((batch_size, self.profile.seq_len), dtype=np.int32)
+            lengths = np.zeros(batch_size, dtype=np.int32)
+            labels = np.zeros(batch_size, dtype=np.int32)
+            for b in range(batch_size):
+                ids[b], lengths[b], labels[b] = self.sample_sentence(rng)
+            mask = (ids != PAD).astype(np.float32)
+            yield Batch(ids=ids, lengths=lengths, labels=labels, mask=mask)
+
+    def eval_batch(self, batch_size: int, salt: int = 10_000) -> Batch:
+        return next(self.batches(batch_size, 1, salt=salt))
+
+
+def mixed_corpus_batches(
+    corpora, batch_size: int, n_batches: int, seed: int = 0
+) -> Iterator[Batch]:
+    """Round-robin over several profiles (the 'C4-like' pretraining mix).
+
+    All profiles must share a seq_len for batching; callers pad externally
+    if mixing profiles of different lengths.
+    """
+    iters = [c.batches(batch_size, n_batches, salt=1000 + i) for i, c in enumerate(corpora)]
+    for j in range(n_batches):
+        yield next(iters[j % len(iters)])

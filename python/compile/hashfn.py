@@ -1,0 +1,206 @@
+"""L2: the SiDA hash function (paper §3.4) + truncated KD loss (§3.5).
+
+Architecture (paper §3.4.2, conditions (1)-(3)):
+  embeddings [B,L,D]
+    -> FC compress D->H                      (lightweight)
+    -> 2-layer LSTM over L                   (sequential information)
+    -> dot-product self-attention with
+       **SparseMax** weights                 (sparse focus on the 1-4
+                                              critical embeddings)
+    -> residual add of the compressed
+       current embedding                     (current token is always the
+                                              most crucial, §3.4.2)
+    -> FC to M*E logits per token            (one router head per MoE layer)
+
+Training objective (paper §3.5): lambda * L_CE + L_TKD(T) — truncated KD
+over the teacher router's top-T logits plus cross-entropy on the top-1
+expert; lambda = 0.005, T = 30 (capped at E).
+
+Like model.py, the training path uses ref-kernel math and the serving
+entry (`make_entry_hash`) uses the Pallas kernels so they lower into the
+AOT HLO.
+"""
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import HashFnConfig, ModelConfig
+from .kernels import ref
+
+HashParams = Dict
+
+
+def init_hash_params(cfg: ModelConfig, hcfg: HashFnConfig, seed: int = 1) -> HashParams:
+    rng = np.random.default_rng(seed)
+    d, h = cfg.d_model, hcfg.hidden
+    m, e = cfg.num_moe_layers, cfg.num_experts
+
+    def dense(shape, scale=None):
+        scale = scale if scale is not None else (1.0 / np.sqrt(shape[0]))
+        return jnp.asarray(rng.normal(0.0, scale, size=shape), jnp.float32)
+
+    def zeros(shape):
+        return jnp.zeros(shape, jnp.float32)
+
+    lstm_layers = []
+    for i in range(hcfg.n_lstm_layers):
+        in_dim = h
+        lstm_layers.append(
+            {
+                "wx": dense((in_dim, 4 * h)),
+                "wh": dense((h, 4 * h)),
+                # forget-gate bias init at 1.0 helps tiny LSTMs converge
+                "b": jnp.concatenate(
+                    [zeros((h,)), jnp.ones((h,), jnp.float32), zeros((2 * h,))]
+                ),
+            }
+        )
+    return {
+        "compress_w": dense((d, h)),
+        "compress_b": zeros((h,)),
+        "lstm": lstm_layers,
+        "out_w": dense((h, m * e), scale=0.02),
+        "out_b": zeros((m * e,)),
+    }
+
+
+def _lstm_layer(layer: HashParams, xs, cell_fn):
+    """Run one LSTM layer over the sequence.  xs: [L, B, H] -> [L, B, H]."""
+    bsz = xs.shape[1]
+    hdim = layer["wh"].shape[0]
+    h0 = jnp.zeros((bsz, hdim), jnp.float32)
+    c0 = jnp.zeros((bsz, hdim), jnp.float32)
+
+    def step(carry, x):
+        h, c = carry
+        h2, c2 = cell_fn(x, h, c, layer["wx"], layer["wh"], layer["b"])
+        return (h2, c2), h2
+
+    _, ys = jax.lax.scan(step, (h0, c0), xs)
+    return ys
+
+
+def hash_forward(hp: HashParams, embedded, cfg: ModelConfig, hcfg: HashFnConfig,
+                 *, use_pallas: bool = False, pallas_lstm: bool = True):
+    """embedded: [B, L, D] (token+pos embeddings) -> logits [B, L, M, E].
+
+    `use_pallas` selects the Pallas kernels; `pallas_lstm=False` keeps
+    the Pallas SparseMax attention but uses the fused-jnp LSTM cell.
+    The serving entry uses that combination: an interpret-mode Pallas
+    cell inside a `lax.scan` while-body lowers to dynamic-slice-heavy
+    HLO that dominates the hash-build latency (EXPERIMENTS.md §Perf
+    iteration 3); the jnp cell is numerically identical (pytest
+    `test_pallas_path_matches_ref`).
+    """
+    if use_pallas:
+        from .kernels import lstm_cell, sparse_attention
+
+        cell_fn = lstm_cell if pallas_lstm else ref.lstm_cell_ref
+        attn_fn = sparse_attention
+    else:
+        cell_fn, attn_fn = ref.lstm_cell_ref, ref.sparse_attention_ref
+
+    bsz, L, d = embedded.shape
+    m, e = cfg.num_moe_layers, cfg.num_experts
+    z = embedded @ hp["compress_w"] + hp["compress_b"]  # [B, L, H]
+
+    xs = jnp.transpose(z, (1, 0, 2))  # [L, B, H]
+    for layer in hp["lstm"]:
+        xs = _lstm_layer(layer, xs, cell_fn)
+    hseq = jnp.transpose(xs, (1, 0, 2))  # [B, L, H]
+
+    attended = jax.vmap(attn_fn)(hseq)  # SparseMax attention per sample
+    r = attended + z  # residual: current embedding always matters (§3.4.2)
+    logits = r @ hp["out_w"] + hp["out_b"]
+    return logits.reshape(bsz, L, m, e)
+
+
+# --------------------------------------------------------------------------
+# truncated knowledge distillation (paper §3.5)
+# --------------------------------------------------------------------------
+
+def tkd_loss(student_logits, teacher_logits, mask, top_t: int):
+    """KL(teacher_topT || student) restricted to the teacher's top-T experts.
+
+    student/teacher logits: [B, L, M, E]; mask: [B, L].
+    """
+    e = teacher_logits.shape[-1]
+    t = min(top_t, e)
+    top_vals, top_idx = jax.lax.top_k(teacher_logits, t)  # [B,L,M,T]
+    # teacher distribution renormalized over its top-T support
+    t_logp = jax.nn.log_softmax(top_vals, axis=-1)
+    s_sel = jnp.take_along_axis(student_logits, top_idx, axis=-1)
+    # student log-prob over the same support (renormalized) — the paper's
+    # truncation: the student only has to match where the teacher puts mass
+    s_logp = jax.nn.log_softmax(s_sel, axis=-1)
+    kl = jnp.sum(jnp.exp(t_logp) * (t_logp - s_logp), axis=-1)  # [B,L,M]
+    w = mask[..., None]
+    return jnp.sum(kl * w) / jnp.maximum(jnp.sum(w) * kl.shape[-1], 1.0)
+
+
+def ce_loss(student_logits, teacher_idx, mask):
+    """Cross-entropy on the teacher's top-1 expert.  teacher_idx: [B,L,M]."""
+    logp = jax.nn.log_softmax(student_logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, teacher_idx[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    w = mask[..., None]
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w) * nll.shape[-1], 1.0)
+
+
+def hash_loss(hp, embedded, teacher_logits, teacher_idx, mask, cfg, hcfg):
+    """Paper objective: lambda * L_CE + L_TKD(T)."""
+    s = hash_forward(hp, embedded, cfg, hcfg)
+    l_tkd = tkd_loss(s, teacher_logits, mask, hcfg.kd_top_t)
+    l_ce = ce_loss(s, teacher_idx, mask)
+    return hcfg.lambda_ce * l_ce + l_tkd, {"tkd": l_tkd, "ce": l_ce}
+
+
+def hits_at_k(student_logits, teacher_idx, mask, k: int = 3) -> jnp.ndarray:
+    """Hash-hit rate (paper Tab 5): is the teacher's top-1 expert inside
+    the student's top-k prediction?"""
+    _, pred = jax.lax.top_k(student_logits, k)  # [B,L,M,k]
+    hit = jnp.any(pred == teacher_idx[..., None], axis=-1).astype(jnp.float32)
+    w = mask[..., None]
+    return jnp.sum(hit * w) / jnp.maximum(jnp.sum(w) * hit.shape[-1], 1.0)
+
+
+# --------------------------------------------------------------------------
+# serving entry point
+# --------------------------------------------------------------------------
+
+def make_entry_hash(cfg: ModelConfig, hcfg: HashFnConfig):
+    """Hash-thread artifact: ids + embedding table + hash params ->
+    (top-K expert ids i32 [1,L,M,K], alphas f32 [1,L,M,K]).
+
+    Alphas are the student softmax probabilities of the predicted experts
+    (the hash function approximates the router's scaling factor, §3.5);
+    the Rust side renormalizes over the K it actually uses.
+    """
+    k = hcfg.top_k
+
+    def entry_hash(ids, tok, pos, compress_w, compress_b,
+                   l0_wx, l0_wh, l0_b, l1_wx, l1_wh, l1_b, out_w, out_b):
+        hp = {
+            "compress_w": compress_w,
+            "compress_b": compress_b,
+            "lstm": [
+                {"wx": l0_wx, "wh": l0_wh, "b": l0_b},
+                {"wx": l1_wx, "wh": l1_wh, "b": l1_b},
+            ],
+            "out_w": out_w,
+            "out_b": out_b,
+        }
+        embedded = jnp.take(tok, ids, axis=0) + pos[None, :, :]
+        logits = hash_forward(hp, embedded, cfg, hcfg, use_pallas=True,
+                              pallas_lstm=False)
+        probs = jax.nn.softmax(logits, axis=-1)
+        # top-k via sort, not lax.top_k: the TopK HLO op ("largest=true")
+        # postdates xla_extension 0.5.1's text parser (aot_recipe gotcha)
+        neg = -probs
+        top_idx = jnp.argsort(neg, axis=-1)[..., :k]
+        top_p = -jnp.sort(neg, axis=-1)[..., :k]
+        return top_idx.astype(jnp.int32), top_p
+
+    return entry_hash

@@ -1,0 +1,9 @@
+"""Pallas kernels (L1) + pure-jnp oracles for the SiDA-MoE reproduction."""
+
+from .moe import expert_ffn
+from .router import router_top1
+from .sparse_attn import sparse_attention
+from .lstm import lstm_cell
+from . import ref
+
+__all__ = ["expert_ffn", "router_top1", "sparse_attention", "lstm_cell", "ref"]

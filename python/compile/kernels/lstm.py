@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: fused LSTM cell for the SiDA hash function.
+
+The hash function's backbone is a 2-layer LSTM (paper §3.4.2).  The cell
+is the inner-loop hot spot: a [B, I]x[I, 4H] + [B, H]x[H, 4H] gate matmul
+followed by the elementwise gate math.  Fusing all of it in one Pallas
+block keeps the gate pre-activations in VMEM instead of materializing the
+[B, 4H] tensor in HBM between matmul and nonlinearity.
+
+The sequence loop lives at L2 (lax.scan in hashfn.py) so the scanned HLO
+contains one fused cell per layer.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_cell_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, h2_ref, c2_ref):
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    gates = (
+        jnp.dot(x, wx_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(h, wh_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    H = h.shape[-1]
+    i = jax.nn.sigmoid(gates[:, 0 * H : 1 * H])
+    f = jax.nn.sigmoid(gates[:, 1 * H : 2 * H])
+    g = jnp.tanh(gates[:, 2 * H : 3 * H])
+    o = jax.nn.sigmoid(gates[:, 3 * H : 4 * H])
+    c2 = f * c + i * g
+    h2_ref[...] = o * jnp.tanh(c2)
+    c2_ref[...] = c2
+
+
+@jax.jit
+def lstm_cell(x, h, c, wx, wh, b):
+    """Fused LSTM cell.  x: [B, I], h/c: [B, H] -> (h', c')."""
+    bsz, hidden = h.shape
+    return pl.pallas_call(
+        _lstm_cell_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, hidden), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, hidden), jnp.float32),
+        ],
+        interpret=True,
+    )(x, h, c, wx, wh, b)

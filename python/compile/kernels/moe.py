@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: single-expert FFN — the serving hot spot.
+
+The paper's hot spot is the per-expert MLP invoked on the token slice the
+router (or, in SiDA, the hash table) assigned to that expert.  The CUDA
+implementation tiles this over threadblocks; the TPU adaptation (DESIGN.md
+§Hardware-Adaptation) tiles over VMEM with BlockSpec:
+
+  * grid = (T / BT,) over token tiles
+  * each step stages an [BT, D] activation tile plus the full [D, F] /
+    [F, D] weight tiles in VMEM and drives the MXU with two block matmuls
+    fused around the ReLU — the HBM<->VMEM schedule the paper expressed
+    with threadblocks is expressed here by the BlockSpec index maps.
+
+VMEM budget (scaled-up config d=768, f=3072, bf16, BT=128):
+  x tile 128x768 (0.19 MiB) + w1 768x3072 (4.5 MiB) + h 128x3072
+  (0.75 MiB) + w2 3072x768 (4.5 MiB) + out (0.19 MiB) ~= 10.2 MiB < 16 MiB
+  VMEM/core; with F-tiling (BF=1536) double-buffering also fits.
+At the repro dims (64/128) everything fits in one tile trivially.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_T = 128
+
+
+def _expert_ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One token-tile step: o = relu(x @ w1 + b1) @ w2 + b2."""
+    x = x_ref[...]
+    # MXU-shaped block matmul; keep accumulation in f32.
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    h = jnp.maximum(h + b1_ref[...], 0.0)
+    o = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = o + b2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def expert_ffn(x, w1, b1, w2, b2, *, block_t: int = DEFAULT_BLOCK_T):
+    """Pallas single-expert FFN.  x: [T, D] -> [T, D].
+
+    T must be a multiple of the token tile (callers pad; the rust
+    coordinator pads to the bucket sizes in configs.EXPERT_TOKEN_BUCKETS).
+    """
+    t, d = x.shape
+    f = w1.shape[1]
+    bt = min(block_t, t)
+    assert t % bt == 0, f"token count {t} not a multiple of tile {bt}"
+    grid = (t // bt,)
+    return pl.pallas_call(
+        _expert_ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),  # activation tile
+            pl.BlockSpec((d, f), lambda i: (0, 0)),  # w1 resident
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),  # w2 resident
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=True,
+    )(x, w1, b1, w2, b2)

@@ -1,0 +1,105 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: pytest asserts each Pallas kernel
+(interpret mode) against these under hypothesis-driven shape/seed sweeps,
+and the L2 model uses them on the *training* path (fast on CPU) while the
+AOT serving artifacts use the Pallas versions — so the oracle doubles as
+the numerical contract between training and serving.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_ffn_ref(x, w1, b1, w2, b2):
+    """One expert MLP: relu(x @ w1 + b1) @ w2 + b2.
+
+    x: [T, D], w1: [D, F], b1: [F], w2: [F, D], b2: [D] -> [T, D]
+    """
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    return h @ w2 + b2
+
+
+def router_top1_ref(x, wr):
+    """Switch router: logits, softmax probs, top-1 index and its alpha.
+
+    x: [T, D], wr: [D, E] -> (logits [T,E], idx i32[T], alpha [T])
+    """
+    logits = x @ wr
+    probs = jax.nn.softmax(logits, axis=-1)
+    idx = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    alpha = jnp.take_along_axis(probs, idx[:, None], axis=-1)[:, 0]
+    return logits, idx, alpha
+
+
+@jax.custom_vjp
+def sparsemax_ref(z):
+    """SparseMax (Martins & Astudillo 2016): Euclidean projection of each
+    row of z onto the probability simplex.  z: [..., L] -> [..., L].
+
+    Closed form: sort descending, find the support size k(z), threshold
+    tau, clamp.  The support set {j : 1 + j*z_(j) > cssv_j} is contiguous
+    from j=1, so cssv_k = sum(z_sorted * cond) — no gather needed.
+
+    A custom VJP supplies the analytic Jacobian (Martins & Astudillo
+    Prop. 1: J = diag(s) - s s^T / |S| on the support S) — both because
+    it is exact/cheap and because differentiating through jnp.sort hits a
+    jaxlib operand_batching_dims limitation under vmap in this
+    environment.
+    """
+    return _sparsemax_fwd_impl(z)
+
+
+def _sparsemax_fwd_impl(z):
+    z_sorted = jnp.sort(z, axis=-1)[..., ::-1]
+    L = z.shape[-1]
+    rng = jnp.arange(1, L + 1, dtype=z.dtype)
+    cssv = jnp.cumsum(z_sorted, axis=-1)
+    cond = (1.0 + rng * z_sorted > cssv).astype(z.dtype)
+    k = jnp.sum(cond, axis=-1, keepdims=True)  # support size, >= 1
+    cssv_k = jnp.sum(z_sorted * cond, axis=-1, keepdims=True)
+    tau = (cssv_k - 1.0) / k
+    return jnp.maximum(z - tau, 0.0)
+
+
+def _sparsemax_fwd(z):
+    p = _sparsemax_fwd_impl(z)
+    return p, p
+
+
+def _sparsemax_bwd(p, g):
+    s = (p > 0.0).astype(g.dtype)  # support indicator
+    k = jnp.maximum(jnp.sum(s, axis=-1, keepdims=True), 1.0)
+    gs = jnp.sum(g * s, axis=-1, keepdims=True)
+    return (s * (g - gs / k),)
+
+
+sparsemax_ref.defvjp(_sparsemax_fwd, _sparsemax_bwd)
+
+
+def sparse_attention_ref(h):
+    """Self-attention over an LSTM output sequence with SparseMax weights.
+
+    h: [L, H] (query = key = value = h, dot-product scores, paper §3.4.2)
+    -> [L, H]
+    """
+    scores = h @ h.T / jnp.sqrt(jnp.asarray(h.shape[-1], h.dtype))
+    w = sparsemax_ref(scores)
+    return w @ h
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """Fused LSTM cell, gate order [i, f, g, o].
+
+    x: [B, I], h,c: [B, H], wx: [I, 4H], wh: [H, 4H], b: [4H]
+    -> (h', c')
+    """
+    gates = x @ wx + h @ wh + b
+    H = h.shape[-1]
+    i = jax.nn.sigmoid(gates[..., 0 * H : 1 * H])
+    f = jax.nn.sigmoid(gates[..., 1 * H : 2 * H])
+    g = jnp.tanh(gates[..., 2 * H : 3 * H])
+    o = jax.nn.sigmoid(gates[..., 3 * H : 4 * H])
+    c2 = f * c + i * g
+    h2 = o * jnp.tanh(c2)
+    return h2, c2

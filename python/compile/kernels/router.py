@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: Switch router (logits + softmax + top-1 + alpha).
+
+Used on the *baseline* serving paths (Standard / Reactive) where the true
+router runs on-device; on the SiDA path routers never execute — the hash
+table replaces them (paper §3.1: "all routers are offloaded to the main
+memory and do not participate in the forward pass").
+
+Grid is over token tiles; the [D, E] router matrix stays VMEM-resident
+across steps (E <= 256, D <= 768 -> <= 0.4 MiB bf16).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _router_kernel(x_ref, wr_ref, logits_ref, idx_ref, alpha_ref):
+    x = x_ref[...]
+    logits = jnp.dot(x, wr_ref[...], preferred_element_type=jnp.float32)
+    logits_ref[...] = logits
+    # numerically-stable softmax over experts
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    idx = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    idx_ref[...] = idx
+    alpha_ref[...] = jnp.take_along_axis(probs, idx[:, None], axis=-1)[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def router_top1(x, wr, *, block_t: int = 128):
+    """x: [T, D], wr: [D, E] -> (logits [T,E] f32, idx [T] i32, alpha [T] f32)."""
+    t, d = x.shape
+    e = wr.shape[1]
+    bt = min(block_t, t)
+    assert t % bt == 0
+    grid = (t // bt,)
+    return pl.pallas_call(
+        _router_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, e), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, e), lambda i: (i, 0)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, e), jnp.float32),
+            jax.ShapeDtypeStruct((t,), jnp.int32),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, wr)

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: sparse self-attention with SparseMax weights.
+
+This is the attention layer of the SiDA hash function (paper §3.4.2):
+Q = K = V = the LSTM output sequence; dot-product scores; SparseMax
+instead of SoftMax so each position attends to the handful of critical
+embeddings (the sparse cross-embedding dependency, c-hat in 1..4 per
+paper Fig 6/7).
+
+The whole [L, H] sequence fits VMEM at hash-function scale (L <= 256,
+H <= 64 -> 64 KiB), so the kernel runs as a single fused block: scores,
+simplex projection, and the weighted sum never round-trip to HBM.
+SparseMax needs a descending sort along the key axis; in interpret mode
+this lowers to XLA's sort HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sparsemax(z):
+    """Row-wise Euclidean projection onto the simplex (see ref.sparsemax_ref)."""
+    L = z.shape[-1]
+    z_sorted = jnp.sort(z, axis=-1)[..., ::-1]
+    rng = jnp.arange(1, L + 1, dtype=z.dtype)
+    cssv = jnp.cumsum(z_sorted, axis=-1)
+    cond = (1.0 + rng * z_sorted > cssv).astype(z.dtype)
+    k = jnp.sum(cond, axis=-1, keepdims=True)
+    cssv_k = jnp.sum(z_sorted * cond, axis=-1, keepdims=True)
+    tau = (cssv_k - 1.0) / k
+    return jnp.maximum(z - tau, 0.0)
+
+
+def _sparse_attn_kernel(h_ref, o_ref):
+    h = h_ref[...]
+    scale = jax.lax.rsqrt(jnp.asarray(h.shape[-1], h.dtype))
+    scores = jnp.dot(h, h.T, preferred_element_type=jnp.float32) * scale
+    w = _sparsemax(scores)
+    o_ref[...] = jnp.dot(w, h, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def sparse_attention(h):
+    """h: [L, H] -> [L, H] with SparseMax attention weights."""
+    l, hd = h.shape
+    return pl.pallas_call(
+        _sparse_attn_kernel,
+        out_shape=jax.ShapeDtypeStruct((l, hd), jnp.float32),
+        interpret=True,
+    )(h)

@@ -1,0 +1,343 @@
+"""L2: Switch-Transformer-style decoder-only LM in JAX.
+
+Two code paths share one parameter PyTree:
+
+* **Training path** (`forward`, `loss_fn`): pure-jnp math (kernels/ref.py
+  semantics), gather-based top-1 MoE dispatch — O(tokens), independent of
+  the expert count, so training switch256 on CPU stays cheap.
+* **Serving entry points** (`entry_*`): shape-specialized functions with
+  *weights as runtime arguments*, lowered by aot.py to HLO text.  The
+  expert FFN entry uses the Pallas kernel (kernels/moe.py).  Per-expert
+  weights stay runtime args because the whole point of SiDA is that the
+  Rust coordinator decides which expert weights are resident where.
+
+Architecture (stand-in for Switch-base, DESIGN.md §2): token+pos
+embedding, `n_blocks` pre-LN blocks (causal MHA + FFN), FFN replaced by a
+Switch MoE layer on `moe_blocks`, final LN, LM head, mean-pool classifier
+head.
+"""
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig, MAX_SEQ_LEN
+from .kernels import ref
+
+Params = Dict
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    rng = np.random.default_rng(seed)
+    d, f, v, e = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.num_experts
+
+    def dense(shape, scale=None):
+        scale = scale if scale is not None else (1.0 / np.sqrt(shape[0]))
+        return jnp.asarray(rng.normal(0.0, scale, size=shape), jnp.float32)
+
+    def zeros(shape):
+        return jnp.zeros(shape, jnp.float32)
+
+    def ones(shape):
+        return jnp.ones(shape, jnp.float32)
+
+    blocks = []
+    for i in range(cfg.n_blocks):
+        blk = {
+            "ln1_g": ones((d,)), "ln1_b": zeros((d,)),
+            "wq": dense((d, d)), "bq": zeros((d,)),
+            "wk": dense((d, d)), "bk": zeros((d,)),
+            "wv": dense((d, d)), "bv": zeros((d,)),
+            "wo": dense((d, d)), "bo": zeros((d,)),
+            "ln2_g": ones((d,)), "ln2_b": zeros((d,)),
+        }
+        if i in cfg.moe_blocks:
+            blk["wr"] = dense((d, e), scale=0.02)
+            blk["experts"] = {
+                "w1": jnp.asarray(rng.normal(0, 1 / np.sqrt(d), size=(e, d, f)), jnp.float32),
+                "b1": zeros((e, f)),
+                "w2": jnp.asarray(rng.normal(0, 1 / np.sqrt(f), size=(e, f, d)), jnp.float32),
+                "b2": zeros((e, d)),
+            }
+        else:
+            blk["w1"] = dense((d, f))
+            blk["b1"] = zeros((f,))
+            blk["w2"] = dense((f, d))
+            blk["b2"] = zeros((d,))
+        blocks.append(blk)
+
+    return {
+        "embed": {"tok": dense((v, d), scale=0.02), "pos": dense((MAX_SEQ_LEN, d), scale=0.02)},
+        "blocks": blocks,
+        "final_ln_g": ones((d,)), "final_ln_b": zeros((d,)),
+        "lm_head": {"w": dense((d, v)), "b": zeros((v,))},
+        "cls_head": {"w": dense((d, cfg.n_classes)), "b": zeros((cfg.n_classes,))},
+    }
+
+
+# --------------------------------------------------------------------------
+# shared math
+# --------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps: float = 1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def embed(params: Params, ids):
+    """ids: i32 [B, L] -> [B, L, D] (token + positional)."""
+    tok = jnp.take(params["embed"]["tok"], ids, axis=0)
+    pos = params["embed"]["pos"][: ids.shape[1]][None, :, :]
+    return tok + pos
+
+
+def attention(blk: Params, x, mask, n_heads: int):
+    """Pre-LN causal multi-head attention with pad masking + residual.
+
+    x: [B, L, D], mask: f32 [B, L] (1.0 = real token).
+    """
+    bsz, L, d = x.shape
+    hd = d // n_heads
+    xln = layer_norm(x, blk["ln1_g"], blk["ln1_b"])
+    q = (xln @ blk["wq"] + blk["bq"]).reshape(bsz, L, n_heads, hd)
+    k = (xln @ blk["wk"] + blk["bk"]).reshape(bsz, L, n_heads, hd)
+    v = (xln @ blk["wv"] + blk["bv"]).reshape(bsz, L, n_heads, hd)
+    scores = jnp.einsum("blhe,bmhe->bhlm", q, k) / np.sqrt(hd)
+    causal = jnp.tril(jnp.ones((L, L), jnp.float32))
+    bias = (causal[None, None] * mask[:, None, None, :] - 1.0) * 1e9
+    w = jax.nn.softmax(scores + bias, axis=-1)
+    o = jnp.einsum("bhlm,bmhe->blhe", w, v).reshape(bsz, L, d)
+    return x + o @ blk["wo"] + blk["bo"]
+
+
+def dense_ffn(blk: Params, x):
+    xln = layer_norm(x, blk["ln2_g"], blk["ln2_b"])
+    return x + ref.expert_ffn_ref(xln, blk["w1"], blk["b1"], blk["w2"], blk["b2"])
+
+
+def moe_ffn_train(blk: Params, x, mask, cfg: ModelConfig):
+    """Gather-based top-1 Switch MoE layer (training path).
+
+    Returns (y, router_logits [B,L,E], idx [B,L], alpha [B,L], aux_loss).
+    Cost is independent of E: each token gathers its own expert's weights.
+    """
+    xln = layer_norm(x, blk["ln2_g"], blk["ln2_b"])
+    logits = xln @ blk["wr"]  # [B, L, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    idx = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B, L]
+    alpha = jnp.take_along_axis(probs, idx[..., None], axis=-1)[..., 0]
+
+    ex = blk["experts"]
+    w1 = ex["w1"][idx]  # [B, L, D, F]
+    b1 = ex["b1"][idx]
+    w2 = ex["w2"][idx]
+    b2 = ex["b2"][idx]
+    h = jnp.maximum(jnp.einsum("bld,bldf->blf", xln, w1) + b1, 0.0)
+    out = jnp.einsum("blf,blfd->bld", h, w2) + b2
+    y = x + alpha[..., None] * out * mask[..., None]
+
+    # Switch load-balance loss: E * sum_e f_e * P_e over real tokens.
+    e = cfg.num_experts
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32) * mask[..., None]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    f_e = jnp.sum(onehot, axis=(0, 1)) / denom
+    p_e = jnp.sum(probs * mask[..., None], axis=(0, 1)) / denom
+    aux = e * jnp.sum(f_e * p_e)
+    # router z-loss keeps logits bounded (Switch paper trick)
+    zloss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return y, logits, idx, alpha, aux + cfg.router_z_loss * zloss
+
+
+def forward(params: Params, ids, mask, cfg: ModelConfig):
+    """Full training-path forward.
+
+    Returns dict with lm_logits [B,L,V], cls_logits [B,C], per-MoE-layer
+    router logits/idx/alpha, the embedding-layer output (hash-fn input),
+    and the summed aux loss.
+    """
+    x = embed(params, ids)
+    embedded = x
+    router_logits, router_idx, router_alpha = [], [], []
+    aux_total = 0.0
+    for i, blk in enumerate(params["blocks"]):
+        x = attention(blk, x, mask, cfg.n_heads)
+        if i in cfg.moe_blocks:
+            x, lg, idx, al, aux = moe_ffn_train(blk, x, mask, cfg)
+            router_logits.append(lg)
+            router_idx.append(idx)
+            router_alpha.append(al)
+            aux_total = aux_total + aux
+        else:
+            x = dense_ffn(blk, x)
+    x = layer_norm(x, params["final_ln_g"], params["final_ln_b"])
+    lm_logits = x @ params["lm_head"]["w"] + params["lm_head"]["b"]
+    pooled = jnp.sum(x * mask[..., None], axis=1) / jnp.maximum(
+        jnp.sum(mask, axis=1, keepdims=True), 1.0
+    )
+    cls_logits = pooled @ params["cls_head"]["w"] + params["cls_head"]["b"]
+    return {
+        "lm_logits": lm_logits,
+        "cls_logits": cls_logits,
+        "router_logits": router_logits,
+        "router_idx": router_idx,
+        "router_alpha": router_alpha,
+        "embedded": embedded,
+        "aux": aux_total,
+    }
+
+
+def forward_forced_routing(params: Params, ids, mask, cfg: ModelConfig, forced_idx, forced_alpha):
+    """Forward with router decisions *replaced* by external (hash) choices.
+
+    forced_idx: i32 [M, B, L], forced_alpha: f32 [M, B, L].  This is the
+    python-side twin of the Rust SiDA path, used for fidelity goldens
+    (Tab 3/4): the router never runs; expert choice and alpha come from
+    the hash function.
+    """
+    x = embed(params, ids)
+    m = 0
+    for i, blk in enumerate(params["blocks"]):
+        x = attention(blk, x, mask, cfg.n_heads)
+        if i in cfg.moe_blocks:
+            xln = layer_norm(x, blk["ln2_g"], blk["ln2_b"])
+            idx = forced_idx[m]
+            alpha = forced_alpha[m]
+            ex = blk["experts"]
+            h = jnp.maximum(jnp.einsum("bld,bldf->blf", xln, ex["w1"][idx]) + ex["b1"][idx], 0.0)
+            out = jnp.einsum("blf,blfd->bld", h, ex["w2"][idx]) + ex["b2"][idx]
+            x = x + alpha[..., None] * out * mask[..., None]
+            m += 1
+        else:
+            x = dense_ffn(blk, x)
+    x = layer_norm(x, params["final_ln_g"], params["final_ln_b"])
+    lm_logits = x @ params["lm_head"]["w"] + params["lm_head"]["b"]
+    pooled = jnp.sum(x * mask[..., None], axis=1) / jnp.maximum(
+        jnp.sum(mask, axis=1, keepdims=True), 1.0
+    )
+    cls_logits = pooled @ params["cls_head"]["w"] + params["cls_head"]["b"]
+    return {"lm_logits": lm_logits, "cls_logits": cls_logits}
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+def lm_loss(lm_logits, ids, mask):
+    """Causal next-token CE over real (non-pad) target positions."""
+    logp = jax.nn.log_softmax(lm_logits[:, :-1], axis=-1)
+    tgt = ids[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    m = mask[:, 1:]
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def cls_loss(cls_logits, labels):
+    logp = jax.nn.log_softmax(cls_logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1))
+
+
+def loss_fn(params: Params, ids, mask, labels, cfg: ModelConfig):
+    out = forward(params, ids, mask, cfg)
+    l_lm = lm_loss(out["lm_logits"], ids, mask)
+    l_cls = cls_loss(out["cls_logits"], labels)
+    total = l_lm + 0.5 * l_cls + cfg.aux_loss_coef * out["aux"]
+    return total, {"lm": l_lm, "cls": l_cls, "aux": out["aux"]}
+
+
+# --------------------------------------------------------------------------
+# serving entry points (lowered to HLO by aot.py; weights are runtime args)
+# --------------------------------------------------------------------------
+
+def entry_embed(ids, tok, pos):
+    """(i32 [1,L], [V,D], [L,D]) -> [1,L,D]."""
+    return (jnp.take(tok, ids, axis=0) + pos[None, :, :],)
+
+
+def make_entry_attn(cfg: ModelConfig):
+    n_heads = cfg.n_heads
+
+    def entry_attn(x, mask, ln_g, ln_b, wq, bq, wk, bk, wv, bv, wo, bo):
+        blk = {
+            "ln1_g": ln_g, "ln1_b": ln_b,
+            "wq": wq, "bq": bq, "wk": wk, "bk": bk,
+            "wv": wv, "bv": bv, "wo": wo, "bo": bo,
+        }
+        return (attention(blk, x, mask, n_heads),)
+
+    return entry_attn
+
+
+def entry_dense_ffn(x, ln_g, ln_b, w1, b1, w2, b2):
+    """Dense FFN block via the Pallas expert kernel: [1,L,D] -> [1,L,D]."""
+    from .kernels import expert_ffn
+
+    bsz, L, d = x.shape
+    xln = layer_norm(x, ln_g, ln_b).reshape(L, d)
+    y = expert_ffn(xln, w1, b1, w2, b2, block_t=min(128, L))
+    return (x + y.reshape(bsz, L, d),)
+
+
+def entry_moe_ln(x, ln_g, ln_b):
+    """The MoE block's pre-FFN layernorm, split out so the coordinator
+    computes router/expert inputs exactly once: [1,L,D] -> [1,L,D]."""
+    return (layer_norm(x, ln_g, ln_b),)
+
+
+def entry_router(xln, wr):
+    """Baseline router on the LN'd hidden states: [1,L,D],[D,E] ->
+    (logits [1,L,E], idx i32 [1,L], alpha [1,L])."""
+    from .kernels import router_top1
+
+    bsz, L, d = xln.shape
+    logits, idx, alpha = router_top1(xln.reshape(L, d), wr, block_t=min(128, L))
+    return logits[None], idx[None], alpha[None]
+
+
+def make_entry_expert(bucket: int):
+    """Per-expert FFN on a padded token bucket: ([T,D], w1,b1,w2,b2) -> [T,D].
+
+    T = bucket (static); the Rust coordinator packs the tokens routed to
+    this expert into the smallest bucket >= count and zero-pads the rest.
+    """
+    from .kernels import expert_ffn
+
+    def entry_expert(xtok, w1, b1, w2, b2):
+        return (expert_ffn(xtok, w1, b1, w2, b2, block_t=min(128, bucket)),)
+
+    return entry_expert
+
+
+def entry_moe_combine(x, y, alpha, mask):
+    """Residual combine after expert compute: x + alpha*y*mask.
+
+    x, y: [1,L,D]; alpha, mask: [1,L]."""
+    return (x + alpha[..., None] * y * mask[..., None],)
+
+
+def entry_lm_head(x, ln_g, ln_b, w, b):
+    xn = layer_norm(x, ln_g, ln_b)
+    return (xn @ w + b,)
+
+
+def entry_cls_head(x, mask, ln_g, ln_b, w, b):
+    xn = layer_norm(x, ln_g, ln_b)
+    pooled = jnp.sum(xn * mask[..., None], axis=1) / jnp.maximum(
+        jnp.sum(mask, axis=1, keepdims=True), 1.0
+    )
+    return (pooled @ w + b,)
+
+
+def entry_lm_nll(lm_logits, ids, mask):
+    """Per-sentence summed NLL + token count (for rust-side perplexity)."""
+    logp = jax.nn.log_softmax(lm_logits[:, :-1], axis=-1)
+    tgt = ids[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    m = mask[:, 1:]
+    return jnp.sum(nll * m, axis=1), jnp.sum(m, axis=1)

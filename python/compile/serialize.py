@@ -1,0 +1,97 @@
+"""Weight serialization: flat raw-f32/i32 blob + JSON manifest.
+
+The Rust coordinator owns every tensor at serving time (experts must be
+individually addressable so the memory manager can move them between
+tiers), so the format is deliberately trivial to parse without external
+crates: one little-endian binary blob and a JSON manifest of
+{name, dtype, shape, offset, nbytes} records, 64-byte aligned.
+
+Expert weights are stored **per expert** (`blocks.1.expert.17.w1`, ...):
+the unit of offloading in SiDA is a single expert.
+"""
+
+import json
+import os
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+ALIGN = 64
+
+
+def flatten_model_params(params) -> List[Tuple[str, np.ndarray]]:
+    out: List[Tuple[str, np.ndarray]] = []
+    out.append(("embed.tok", np.asarray(params["embed"]["tok"])))
+    out.append(("embed.pos", np.asarray(params["embed"]["pos"])))
+    for i, blk in enumerate(params["blocks"]):
+        p = f"blocks.{i}."
+        for key in ("ln1_g", "ln1_b", "wq", "bq", "wk", "bk", "wv", "bv",
+                    "wo", "bo", "ln2_g", "ln2_b"):
+            out.append((p + key, np.asarray(blk[key])))
+        if "experts" in blk:
+            out.append((p + "wr", np.asarray(blk["wr"])))
+            ex = blk["experts"]
+            n_exp = ex["w1"].shape[0]
+            for e in range(n_exp):
+                for key in ("w1", "b1", "w2", "b2"):
+                    out.append((f"{p}expert.{e}.{key}", np.asarray(ex[key][e])))
+        else:
+            for key in ("w1", "b1", "w2", "b2"):
+                out.append((p + key, np.asarray(blk[key])))
+    out.append(("final_ln_g", np.asarray(params["final_ln_g"])))
+    out.append(("final_ln_b", np.asarray(params["final_ln_b"])))
+    out.append(("lm_head.w", np.asarray(params["lm_head"]["w"])))
+    out.append(("lm_head.b", np.asarray(params["lm_head"]["b"])))
+    out.append(("cls_head.w", np.asarray(params["cls_head"]["w"])))
+    out.append(("cls_head.b", np.asarray(params["cls_head"]["b"])))
+    return out
+
+
+def flatten_hash_params(hp) -> List[Tuple[str, np.ndarray]]:
+    out = [
+        ("hash.compress_w", np.asarray(hp["compress_w"])),
+        ("hash.compress_b", np.asarray(hp["compress_b"])),
+    ]
+    for i, layer in enumerate(hp["lstm"]):
+        for key in ("wx", "wh", "b"):
+            out.append((f"hash.lstm.{i}.{key}", np.asarray(layer[key])))
+    out.append(("hash.out_w", np.asarray(hp["out_w"])))
+    out.append(("hash.out_b", np.asarray(hp["out_b"])))
+    return out
+
+
+def write_weights(dirpath: str, tensors: List[Tuple[str, np.ndarray]]) -> dict:
+    """Write weights.bin + manifest.json; returns the manifest dict."""
+    os.makedirs(dirpath, exist_ok=True)
+    records = []
+    offset = 0
+    blob = bytearray()
+    for name, arr in tensors:
+        if arr.dtype == np.float32:
+            dtype = "f32"
+        elif arr.dtype == np.int32:
+            dtype = "i32"
+        else:
+            arr = arr.astype(np.float32)
+            dtype = "f32"
+        raw = np.ascontiguousarray(arr).tobytes()
+        pad = (-offset) % ALIGN
+        blob.extend(b"\0" * pad)
+        offset += pad
+        records.append(
+            {
+                "name": name,
+                "dtype": dtype,
+                "shape": list(arr.shape),
+                "offset": offset,
+                "nbytes": len(raw),
+            }
+        )
+        blob.extend(raw)
+        offset += len(raw)
+    with open(os.path.join(dirpath, "weights.bin"), "wb") as f:
+        f.write(bytes(blob))
+    manifest = {"version": 1, "total_bytes": offset, "tensors": records}
+    with open(os.path.join(dirpath, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest

@@ -1,0 +1,267 @@
+"""Build-time training: tiny Switch LMs + SiDA hash functions.
+
+Runs once under `make artifacts` (aot.py drives it).  Three stages per
+model config, mirroring the paper's §4 setup:
+
+  1. train the Switch model on the synthetic corpus mix (AdamW, causal LM
+     + classifier + Switch load-balance aux loss);
+  2. record the teacher data — router logits / top-1 ids per MoE layer —
+     on the train split;
+  3. train the hash function with lambda*L_CE + L_TKD(T) (paper §3.5) and
+     evaluate the hash-hit rate on a held-out split (paper Tab 5).
+
+No optax in this environment, so AdamW is implemented directly on the
+PyTree.
+"""
+
+import functools
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashfn, model
+from .configs import (
+    DATASET_PROFILES,
+    HASH_CONFIG,
+    HashFnConfig,
+    ModelConfig,
+)
+from .data import SyntheticCorpus
+
+
+# --------------------------------------------------------------------------
+# AdamW on a PyTree
+# --------------------------------------------------------------------------
+
+class AdamW:
+    """Minimal AdamW (Loshchilov & Hutter 2019) over jax PyTrees."""
+
+    def __init__(self, lr=5e-4, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01):
+        self.lr, self.b1, self.b2, self.eps, self.wd = lr, b1, b2, eps, weight_decay
+
+    def init(self, params):
+        z = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+    def update(self, params, grads, state):
+        t = state["t"] + 1
+        b1, b2 = self.b1, self.b2
+        m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        lr, eps, wd = self.lr, self.eps, self.wd
+
+        def step(p, m_, v_):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            return p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+
+        new_params = jax.tree_util.tree_map(step, params, m, v)
+        return new_params, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------------
+# stage 1: train the Switch model
+# --------------------------------------------------------------------------
+
+def train_switch(
+    cfg: ModelConfig,
+    steps: int = 240,
+    batch_size: int = 8,
+    seed: int = 0,
+    lr: float = 1e-3,
+    log_every: int = 40,
+) -> Tuple[Dict, List[Dict]]:
+    """Train on the corpus mix.  Each profile keeps its own seq_len (jax
+    re-jits once per shape — 3 shapes total — which is much cheaper on CPU
+    than padding every batch to the longest profile)."""
+    profiles = list(DATASET_PROFILES.values())
+    corpora = [SyntheticCorpus(p, cfg.vocab, seed=seed) for p in profiles]
+    params = model.init_params(cfg, seed=seed)
+    opt = AdamW(lr=lr)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def train_step(params, opt_state, ids, mask, labels):
+        (loss, parts), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+            params, ids, mask, labels, cfg
+        )
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, loss, parts
+
+    history = []
+    t0 = time.time()
+    gens = [c.batches(batch_size, steps, salt=7) for c in corpora]
+    for step in range(steps):
+        batch = next(gens[step % len(gens)])
+        params, opt_state, loss, parts = train_step(
+            params, opt_state, jnp.asarray(batch.ids), jnp.asarray(batch.mask),
+            jnp.asarray(batch.labels)
+        )
+        if step % log_every == 0 or step == steps - 1:
+            rec = {
+                "step": step,
+                "loss": float(loss),
+                "lm": float(parts["lm"]),
+                "cls": float(parts["cls"]),
+                "aux": float(parts["aux"]),
+                "wall_s": time.time() - t0,
+            }
+            history.append(rec)
+            print(
+                f"[{cfg.name}] step {step:4d} loss={rec['loss']:.4f} "
+                f"lm={rec['lm']:.4f} cls={rec['cls']:.4f} aux={rec['aux']:.4f}"
+            )
+    return params, history
+
+
+# --------------------------------------------------------------------------
+# stage 2: teacher data for the hash function
+# --------------------------------------------------------------------------
+
+def collect_teacher(params, cfg: ModelConfig, profile_name: str, n_batches: int = 24,
+                    batch_size: int = 8, seed: int = 0, salt: int = 77):
+    """Run the trained model and record (embedded, router logits, top-1 ids,
+    mask) — the hash function's training set (paper: 'pairs of input token
+    embeddings and MoE expert activation patterns')."""
+    profile = DATASET_PROFILES[profile_name]
+    corpus = SyntheticCorpus(profile, cfg.vocab, seed=seed)
+    fwd = jax.jit(functools.partial(model.forward, cfg=cfg))
+    embs, logits, idxs, masks, ids_all, labels = [], [], [], [], [], []
+    for batch in corpus.batches(batch_size, n_batches, salt=salt):
+        out = fwd(params, jnp.asarray(batch.ids), jnp.asarray(batch.mask))
+        embs.append(np.asarray(out["embedded"]))
+        logits.append(np.stack([np.asarray(l) for l in out["router_logits"]], axis=2))
+        idxs.append(np.stack([np.asarray(i) for i in out["router_idx"]], axis=2))
+        masks.append(batch.mask)
+        ids_all.append(batch.ids)
+        labels.append(batch.labels)
+    return {
+        "embedded": np.concatenate(embs),  # [N, L, D]
+        "teacher_logits": np.concatenate(logits),  # [N, L, M, E]
+        "teacher_idx": np.concatenate(idxs),  # [N, L, M]
+        "mask": np.concatenate(masks),  # [N, L]
+        "ids": np.concatenate(ids_all),  # [N, L]
+        "labels": np.concatenate(labels),  # [N]
+    }
+
+
+# --------------------------------------------------------------------------
+# stage 3: train the hash function
+# --------------------------------------------------------------------------
+
+def train_hash(
+    cfg: ModelConfig,
+    teacher: Dict[str, np.ndarray],
+    hcfg: HashFnConfig = HASH_CONFIG,
+    steps: int = 300,
+    batch_size: int = 16,
+    seed: int = 1,
+    lr: float = 3e-3,
+    log_every: int = 50,
+):
+    hp = hashfn.init_hash_params(cfg, hcfg, seed=seed)
+    opt = AdamW(lr=lr, weight_decay=1e-4)
+    opt_state = opt.init(hp)
+    n = teacher["embedded"].shape[0]
+
+    @jax.jit
+    def train_step(hp, opt_state, emb, tlg, tid, msk):
+        (loss, parts), grads = jax.value_and_grad(hashfn.hash_loss, has_aux=True)(
+            hp, emb, tlg, tid, msk, cfg, hcfg
+        )
+        hp, opt_state = opt.update(hp, grads, opt_state)
+        return hp, opt_state, loss, parts
+
+    rng = np.random.default_rng(seed)
+    history = []
+    for step in range(steps):
+        sel = rng.choice(n, size=min(batch_size, n), replace=False)
+        hp, opt_state, loss, parts = train_step(
+            hp,
+            opt_state,
+            jnp.asarray(teacher["embedded"][sel]),
+            jnp.asarray(teacher["teacher_logits"][sel]),
+            jnp.asarray(teacher["teacher_idx"][sel]),
+            jnp.asarray(teacher["mask"][sel]),
+        )
+        if step % log_every == 0 or step == steps - 1:
+            rec = {"step": step, "loss": float(loss), "tkd": float(parts["tkd"]),
+                   "ce": float(parts["ce"])}
+            history.append(rec)
+            print(f"[hash/{cfg.name}] step {step:4d} loss={rec['loss']:.4f} "
+                  f"tkd={rec['tkd']:.4f} ce={rec['ce']:.4f}")
+    return hp, history
+
+
+def eval_hash(hp, cfg: ModelConfig, hcfg: HashFnConfig, teacher_eval) -> Dict[str, float]:
+    """Held-out hash-hit rates (Tab 5 uses top-3; we also report top-1)."""
+    s = hashfn.hash_forward(
+        hp, jnp.asarray(teacher_eval["embedded"]), cfg, hcfg
+    )
+    tid = jnp.asarray(teacher_eval["teacher_idx"])
+    msk = jnp.asarray(teacher_eval["mask"])
+    return {
+        "hits_top1": float(hashfn.hits_at_k(s, tid, msk, k=1)),
+        "hits_top3": float(hashfn.hits_at_k(s, tid, msk, k=3)),
+        f"hits_top{hcfg.top_k}": float(hashfn.hits_at_k(s, tid, msk, k=hcfg.top_k)),
+    }
+
+
+# --------------------------------------------------------------------------
+# evaluation helpers used for goldens (Tab 3 / Tab 4 python twins)
+# --------------------------------------------------------------------------
+
+def eval_quality(params, hp, cfg: ModelConfig, hcfg: HashFnConfig, profile_name: str,
+                 n_batches: int = 8, batch_size: int = 8, seed: int = 3, top_k_used: int = 1):
+    """Perplexity + classification accuracy with (a) the true router and
+    (b) hash-forced routing — the fidelity comparison of Tab 3/4."""
+    profile = DATASET_PROFILES[profile_name]
+    corpus = SyntheticCorpus(profile, cfg.vocab, seed=seed)
+    fwd = jax.jit(functools.partial(model.forward, cfg=cfg))
+    fwd_forced = jax.jit(functools.partial(model.forward_forced_routing, cfg=cfg))
+    hfwd = jax.jit(functools.partial(hashfn.hash_forward, cfg=cfg, hcfg=hcfg))
+
+    nll_r, nll_h, ntok = 0.0, 0.0, 0.0
+    acc_r, acc_h, n = 0.0, 0.0, 0
+    for batch in corpus.batches(batch_size, n_batches, salt=4242):
+        ids = jnp.asarray(batch.ids)
+        msk = jnp.asarray(batch.mask)
+        out = fwd(params, ids, msk)
+        emb = out["embedded"]
+        logits = hfwd(hp, emb)  # [B,L,M,E]
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_idx = jax.lax.top_k(probs, top_k_used)
+        # rust uses the hash's best expert and its (renormalized) alpha;
+        # with top_k_used=1 alpha is the student's top prob
+        f_idx = jnp.transpose(top_idx[..., 0], (2, 0, 1)).astype(jnp.int32)  # [M,B,L]
+        f_alpha = jnp.transpose(top_p[..., 0], (2, 0, 1))
+        out_h = fwd_forced(params, ids, msk, forced_idx=f_idx, forced_alpha=f_alpha)
+
+        m = msk[:, 1:]
+
+        def batch_nll(lm_logits):
+            logp = jax.nn.log_softmax(lm_logits[:, :-1], axis=-1)
+            tgt = ids[:, 1:]
+            nl = -jnp.take_along_axis(logp, tgt[..., None].astype(jnp.int32), axis=-1)[..., 0]
+            return float(jnp.sum(nl * m))
+
+        nll_r += batch_nll(out["lm_logits"])
+        nll_h += batch_nll(out_h["lm_logits"])
+        ntok += float(jnp.sum(m))
+        lbl = jnp.asarray(batch.labels)
+        acc_r += float(jnp.sum(jnp.argmax(out["cls_logits"], -1) == lbl))
+        acc_h += float(jnp.sum(jnp.argmax(out_h["cls_logits"], -1) == lbl))
+        n += batch.ids.shape[0]
+
+    return {
+        "ppl_router": float(np.exp(nll_r / max(ntok, 1))),
+        "ppl_hash": float(np.exp(nll_h / max(ntok, 1))),
+        "acc_router": acc_r / max(n, 1),
+        "acc_hash": acc_h / max(n, 1),
+        "fidelity": (acc_h / max(n, 1)) / max(acc_r / max(n, 1), 1e-9),
+    }

@@ -1,0 +1,120 @@
+"""Corpus generator + serializer tests."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import serialize
+from compile.configs import DATASET_PROFILES, MODEL_CONFIGS
+from compile.data import BOS, CONTENT_START, EOS, PAD, SyntheticCorpus
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pname", list(DATASET_PROFILES))
+def test_sentence_structure(pname):
+    prof = DATASET_PROFILES[pname]
+    corpus = SyntheticCorpus(prof, 256, seed=0)
+    batch = corpus.eval_batch(8)
+    assert batch.ids.shape == (8, prof.seq_len)
+    for b in range(8):
+        n = batch.lengths[b]
+        assert batch.ids[b, 0] == BOS
+        assert batch.ids[b, n - 1] == EOS
+        assert (batch.ids[b, n:] == PAD).all()
+        assert (batch.ids[b, 1 : n - 1] >= CONTENT_START).all()
+        assert (batch.mask[b] == (batch.ids[b] != PAD)).all()
+
+
+def test_lengths_in_profile_band():
+    prof = DATASET_PROFILES["mrpc"]
+    corpus = SyntheticCorpus(prof, 256, seed=1)
+    for batch in corpus.batches(16, 3):
+        body = batch.lengths - 2
+        assert (body >= prof.min_len).all()
+        assert (body <= min(prof.max_len, prof.seq_len - 2)).all()
+
+
+def test_determinism_and_salt_independence():
+    prof = DATASET_PROFILES["sst2"]
+    a = SyntheticCorpus(prof, 256, seed=7).eval_batch(4, salt=5)
+    b = SyntheticCorpus(prof, 256, seed=7).eval_batch(4, salt=5)
+    c = SyntheticCorpus(prof, 256, seed=7).eval_batch(4, salt=6)
+    np.testing.assert_array_equal(a.ids, b.ids)
+    assert not np.array_equal(a.ids, c.ids)
+
+
+def test_topic_clustering_dominates():
+    prof = DATASET_PROFILES["sst2"]
+    corpus = SyntheticCorpus(prof, 256, seed=3)
+    batch = corpus.eval_batch(16)
+    band = corpus.band
+    hits = 0
+    total = 0
+    for b in range(16):
+        lo = CONTENT_START + batch.labels[b] * band
+        body = batch.ids[b, 1 : batch.lengths[b] - 1]
+        hits += ((body >= lo) & (body < lo + band)).sum()
+        total += len(body)
+    assert hits / total > 0.6  # topic_frac=0.75 minus global-draw overlap
+
+
+# ---------------------------------------------------------------------------
+# serializer
+# ---------------------------------------------------------------------------
+
+@given(
+    shapes=st.lists(
+        st.tuples(st.integers(1, 5), st.integers(1, 7)), min_size=1, max_size=6
+    ),
+    seed=st.integers(0, 1000),
+)
+def test_write_weights_roundtrip(tmp_path_factory, shapes, seed):
+    rng = np.random.default_rng(seed)
+    tensors = [
+        (f"t{i}", rng.normal(size=s).astype(np.float32)) for i, s in enumerate(shapes)
+    ]
+    d = tmp_path_factory.mktemp("ser")
+    manifest = serialize.write_weights(str(d), tensors)
+    blob = open(os.path.join(d, "weights.bin"), "rb").read()
+    assert len(blob) == manifest["total_bytes"]
+    for rec, (name, arr) in zip(manifest["tensors"], tensors):
+        assert rec["name"] == name
+        assert rec["offset"] % serialize.ALIGN == 0
+        got = np.frombuffer(
+            blob[rec["offset"] : rec["offset"] + rec["nbytes"]], np.float32
+        ).reshape(rec["shape"])
+        np.testing.assert_array_equal(got, arr)
+
+
+def test_flatten_model_params_expert_granularity():
+    from compile import model
+
+    cfg = MODEL_CONFIGS["switch8"]
+    params = model.init_params(cfg, seed=0)
+    flat = dict(serialize.flatten_model_params(params))
+    # per-expert addressability — the unit of offloading
+    for b in cfg.moe_blocks:
+        for e in range(cfg.num_experts):
+            for part in ("w1", "b1", "w2", "b2"):
+                assert f"blocks.{b}.expert.{e}.{part}" in flat
+    assert flat["blocks.1.expert.0.w1"].shape == (cfg.d_model, cfg.d_ff)
+    assert "embed.tok" in flat and "lm_head.w" in flat
+    # router stays a separate (offloadable) tensor
+    assert f"blocks.{cfg.moe_blocks[0]}.wr" in flat
+
+
+def test_manifest_json_is_valid(tmp_path):
+    rng = np.random.default_rng(0)
+    serialize.write_weights(str(tmp_path), [("a", rng.normal(size=(3,)).astype(np.float32))])
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    assert manifest["version"] == 1
+    assert manifest["tensors"][0]["dtype"] == "f32"

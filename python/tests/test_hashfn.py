@@ -1,0 +1,145 @@
+"""Hash-function tests: forward shapes, TKD/CE losses, hit-rate metric,
+pallas/ref agreement, serving-entry consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import hashfn
+from compile.configs import HASH_CONFIG, MODEL_CONFIGS
+
+CFG = MODEL_CONFIGS["switch8"]
+HC = HASH_CONFIG
+
+
+@pytest.fixture(scope="module")
+def hp():
+    return hashfn.init_hash_params(CFG, HC, seed=0)
+
+
+def emb(seed=0, b=2, l=16):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(b, l, CFG.d_model)), jnp.float32)
+
+
+def test_forward_shape(hp):
+    out = hashfn.hash_forward(hp, emb(), CFG, HC)
+    assert out.shape == (2, 16, CFG.num_moe_layers, CFG.num_experts)
+
+
+def test_pallas_path_matches_ref_path(hp):
+    e = emb(1)
+    ref_out = hashfn.hash_forward(hp, e, CFG, HC, use_pallas=False)
+    pallas_out = hashfn.hash_forward(hp, e, CFG, HC, use_pallas=True)
+    np.testing.assert_allclose(
+        np.asarray(pallas_out), np.asarray(ref_out), rtol=5e-5, atol=5e-5
+    )
+
+
+def test_tkd_loss_zero_when_student_equals_teacher(hp):
+    rng = np.random.default_rng(2)
+    t = jnp.asarray(rng.normal(size=(2, 8, 2, CFG.num_experts)), jnp.float32)
+    mask = jnp.ones((2, 8), jnp.float32)
+    loss = hashfn.tkd_loss(t, t, mask, HC.kd_top_t)
+    assert float(loss) < 1e-6
+
+
+def test_tkd_loss_positive_for_mismatch(hp):
+    rng = np.random.default_rng(3)
+    t = jnp.asarray(rng.normal(size=(2, 8, 2, CFG.num_experts)), jnp.float32)
+    s = jnp.asarray(rng.normal(size=(2, 8, 2, CFG.num_experts)), jnp.float32)
+    mask = jnp.ones((2, 8), jnp.float32)
+    assert float(hashfn.tkd_loss(s, t, mask, HC.kd_top_t)) > 0.0
+
+
+def test_tkd_truncation_ignores_tail():
+    """Student's values OUTSIDE the teacher's top-T must not affect TKD."""
+    rng = np.random.default_rng(4)
+    e = 16
+    t = jnp.asarray(rng.normal(size=(1, 4, 1, e)), jnp.float32)
+    s1 = jnp.asarray(rng.normal(size=(1, 4, 1, e)), jnp.float32)
+    top_t = 4
+    # perturb student logits on indices NOT in teacher top-4
+    order = np.argsort(-np.asarray(t), axis=-1)
+    s2 = np.asarray(s1).copy()
+    tail = order[..., top_t:]
+    np.put_along_axis(s2, tail, np.asarray(s1)[0, 0, 0, 0] + 123.0, axis=-1)
+    mask = jnp.ones((1, 4), jnp.float32)
+    l1 = hashfn.tkd_loss(s1, t, mask, top_t)
+    l2 = hashfn.tkd_loss(jnp.asarray(s2), t, mask, top_t)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_ce_loss_decreases_with_correct_prediction():
+    e = CFG.num_experts
+    tid = jnp.zeros((1, 4, 2), jnp.int32)
+    mask = jnp.ones((1, 4), jnp.float32)
+    good = jnp.zeros((1, 4, 2, e), jnp.float32).at[..., 0].set(10.0)
+    bad = jnp.zeros((1, 4, 2, e), jnp.float32).at[..., 1].set(10.0)
+    assert float(hashfn.ce_loss(good, tid, mask)) < float(hashfn.ce_loss(bad, tid, mask))
+
+
+def test_hits_at_k_bounds_and_monotonicity():
+    rng = np.random.default_rng(5)
+    s = jnp.asarray(rng.normal(size=(2, 8, 2, CFG.num_experts)), jnp.float32)
+    tid = jnp.asarray(rng.integers(0, CFG.num_experts, size=(2, 8, 2)), jnp.int32)
+    mask = jnp.ones((2, 8), jnp.float32)
+    h1 = float(hashfn.hits_at_k(s, tid, mask, k=1))
+    h3 = float(hashfn.hits_at_k(s, tid, mask, k=3))
+    hk = float(hashfn.hits_at_k(s, tid, mask, k=CFG.num_experts))
+    assert 0.0 <= h1 <= h3 <= hk
+    assert abs(hk - 1.0) < 1e-6  # k=E always hits
+
+
+def test_hits_respects_mask():
+    s = jnp.zeros((1, 2, 1, 4), jnp.float32).at[0, 0, 0, 2].set(5.0)
+    tid = jnp.asarray([[[2], [3]]], jnp.int32)  # token0 correct, token1 wrong
+    full = jnp.asarray([[1.0, 1.0]], jnp.float32)
+    only0 = jnp.asarray([[1.0, 0.0]], jnp.float32)
+    assert abs(float(hashfn.hits_at_k(s, tid, full, k=1)) - 0.5) < 1e-6
+    assert abs(float(hashfn.hits_at_k(s, tid, only0, k=1)) - 1.0) < 1e-6
+
+
+def test_hash_loss_gradients_flow(hp):
+    """Every hash parameter must receive a nonzero gradient."""
+    rng = np.random.default_rng(6)
+    e = emb(7, b=2, l=8)
+    t_logits = jnp.asarray(
+        rng.normal(size=(2, 8, CFG.num_moe_layers, CFG.num_experts)), jnp.float32
+    )
+    t_idx = jnp.argmax(t_logits, -1).astype(jnp.int32)
+    mask = jnp.ones((2, 8), jnp.float32)
+    grads = jax.grad(
+        lambda p: hashfn.hash_loss(p, e, t_logits, t_idx, mask, CFG, HC)[0]
+    )(hp)
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in leaves)
+    nonzero = sum(float(jnp.sum(jnp.abs(g))) > 0 for g in leaves)
+    assert nonzero == len(leaves), f"only {nonzero}/{len(leaves)} grads nonzero"
+
+
+def test_entry_hash_topk_consistent_with_forward(hp):
+    """The serving entry's sort-based top-k must agree with the softmax
+    of hash_forward (same params, same ids)."""
+    entry = hashfn.make_entry_hash(CFG, HC)
+    rng = np.random.default_rng(8)
+    L = 12
+    ids = jnp.asarray(rng.integers(3, CFG.vocab, size=(1, L)), jnp.int32)
+    tok = jnp.asarray(rng.normal(size=(CFG.vocab, CFG.d_model)) * 0.1, jnp.float32)
+    pos = jnp.asarray(rng.normal(size=(L, CFG.d_model)) * 0.1, jnp.float32)
+    idx, p = entry(
+        ids, tok, pos, hp["compress_w"], hp["compress_b"],
+        hp["lstm"][0]["wx"], hp["lstm"][0]["wh"], hp["lstm"][0]["b"],
+        hp["lstm"][1]["wx"], hp["lstm"][1]["wh"], hp["lstm"][1]["b"],
+        hp["out_w"], hp["out_b"],
+    )
+    assert idx.shape == (1, L, CFG.num_moe_layers, HC.top_k)
+    emb_in = jnp.take(tok, ids, axis=0) + pos[None]
+    logits = hashfn.hash_forward(hp, emb_in, CFG, HC)
+    probs = jax.nn.softmax(logits, -1)
+    want_idx = np.argsort(-np.asarray(probs), axis=-1)[..., : HC.top_k]
+    np.testing.assert_array_equal(np.asarray(idx), want_idx)
+    # probabilities descending
+    p_np = np.asarray(p)
+    assert (np.diff(p_np, axis=-1) <= 1e-6).all()

@@ -1,0 +1,188 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/seeds per the testing strategy (DESIGN.md §6);
+`assert_allclose` is THE correctness signal for the serving artifacts,
+since the same kernels lower into the AOT HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import expert_ffn, lstm_cell, router_top1, sparse_attention
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def arr(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# expert FFN
+# ---------------------------------------------------------------------------
+
+@given(
+    t=st.sampled_from([4, 16, 64, 128, 256]),
+    d=st.sampled_from([8, 32, 64]),
+    f=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_expert_ffn_matches_ref(t, d, f, seed):
+    rng = np.random.default_rng(seed)
+    x, w1, w2 = arr(rng, t, d), arr(rng, d, f), arr(rng, f, d)
+    b1, b2 = arr(rng, f), arr(rng, d)
+    got = expert_ffn(x, w1, b1, w2, b2)
+    want = ref.expert_ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_expert_ffn_tiled_equals_single_block():
+    rng = np.random.default_rng(0)
+    x, w1, w2 = arr(rng, 256, 64), arr(rng, 64, 128), arr(rng, 128, 64)
+    b1, b2 = arr(rng, 128), arr(rng, 64)
+    np.testing.assert_allclose(
+        expert_ffn(x, w1, b1, w2, b2, block_t=64),
+        expert_ffn(x, w1, b1, w2, b2, block_t=256),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_expert_ffn_zero_rows_passthrough_bias():
+    """Zero-padded rows produce relu(b1)@w2+b2 — the packing convention
+    the Rust coordinator relies on (it never scatters padded rows)."""
+    rng = np.random.default_rng(1)
+    w1, w2 = arr(rng, 8, 16), arr(rng, 16, 8)
+    b1, b2 = arr(rng, 16), arr(rng, 8)
+    x = jnp.zeros((4, 8), jnp.float32)
+    got = expert_ffn(x, w1, b1, w2, b2)
+    want = jnp.maximum(b1, 0.0) @ w2 + b2
+    np.testing.assert_allclose(got, jnp.broadcast_to(want, (4, 8)), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+
+@given(
+    t=st.sampled_from([4, 32, 128]),
+    d=st.sampled_from([16, 64]),
+    e=st.sampled_from([4, 8, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_router_matches_ref(t, d, e, seed):
+    rng = np.random.default_rng(seed)
+    x, wr = arr(rng, t, d), arr(rng, d, e)
+    gl, gi, ga = router_top1(x, wr)
+    wl, wi, wa = ref.router_top1_ref(x, wr)
+    np.testing.assert_allclose(gl, wl, rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(gi, wi)
+    np.testing.assert_allclose(ga, wa, rtol=2e-5, atol=2e-5)
+
+
+def test_router_alpha_is_softmax_prob():
+    rng = np.random.default_rng(2)
+    x, wr = arr(rng, 16, 8), arr(rng, 8, 4)
+    _, idx, alpha = router_top1(x, wr)
+    assert bool(jnp.all(alpha > 0.0)) and bool(jnp.all(alpha <= 1.0))
+    # top-1 of softmax has prob >= 1/E
+    assert bool(jnp.all(alpha >= 1.0 / 4 - 1e-6))
+
+
+# ---------------------------------------------------------------------------
+# sparsemax / sparse attention
+# ---------------------------------------------------------------------------
+
+@given(
+    l=st.sampled_from([2, 8, 32, 96]),
+    h=st.sampled_from([4, 16, 48]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sparse_attention_matches_ref(l, h, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, l, h)
+    np.testing.assert_allclose(
+        sparse_attention(x), ref.sparse_attention_ref(x), rtol=2e-5, atol=2e-5
+    )
+
+
+@given(seed=st.integers(0, 2**31 - 1), l=st.sampled_from([2, 5, 17, 64]))
+def test_sparsemax_on_simplex(seed, l):
+    rng = np.random.default_rng(seed)
+    z = arr(rng, 7, l) * 3.0
+    p = ref.sparsemax_ref(z)
+    np.testing.assert_allclose(jnp.sum(p, axis=-1), 1.0, rtol=1e-5, atol=1e-5)
+    assert bool(jnp.all(p >= 0.0))
+
+
+def test_sparsemax_is_sparse_for_peaked_input():
+    z = jnp.asarray([[10.0, 0.0, 0.0, 0.0]], jnp.float32)
+    p = ref.sparsemax_ref(z)
+    np.testing.assert_allclose(p, [[1.0, 0.0, 0.0, 0.0]], atol=1e-6)
+
+
+def test_sparsemax_uniform_input_uniform_output():
+    z = jnp.ones((1, 8), jnp.float32)
+    p = ref.sparsemax_ref(z)
+    np.testing.assert_allclose(p, np.full((1, 8), 1 / 8), atol=1e-6)
+
+
+def test_sparsemax_matches_softmax_limit_ordering():
+    """sparsemax preserves the argmax of the input."""
+    rng = np.random.default_rng(3)
+    z = arr(rng, 16, 10)
+    p = ref.sparsemax_ref(z)
+    np.testing.assert_array_equal(jnp.argmax(p, -1), jnp.argmax(z, -1))
+
+
+def test_sparsemax_custom_vjp_matches_finite_difference():
+    rng = np.random.default_rng(4)
+    z = np.asarray(rng.normal(size=(6,)), np.float32)
+
+    def f(z):
+        return jnp.sum(ref.sparsemax_ref(z) ** 2)
+
+    g = jax.grad(f)(jnp.asarray(z))
+    eps = 1e-3
+    for i in range(6):
+        zp, zm = z.copy(), z.copy()
+        zp[i] += eps
+        zm[i] -= eps
+        fd = (f(jnp.asarray(zp)) - f(jnp.asarray(zm))) / (2 * eps)
+        np.testing.assert_allclose(g[i], fd, rtol=2e-2, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# LSTM cell
+# ---------------------------------------------------------------------------
+
+@given(
+    b=st.sampled_from([1, 4, 16]),
+    i=st.sampled_from([8, 48]),
+    h=st.sampled_from([8, 48]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lstm_cell_matches_ref(b, i, h, seed):
+    rng = np.random.default_rng(seed)
+    x, hh, cc = arr(rng, b, i), arr(rng, b, h), arr(rng, b, h)
+    wx, wh, bias = arr(rng, i, 4 * h), arr(rng, h, 4 * h), arr(rng, 4 * h)
+    gh, gc = lstm_cell(x, hh, cc, wx, wh, bias)
+    wh_, wc_ = ref.lstm_cell_ref(x, hh, cc, wx, wh, bias)
+    np.testing.assert_allclose(gh, wh_, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(gc, wc_, rtol=2e-5, atol=2e-5)
+
+
+def test_lstm_cell_state_bounded():
+    """|h| <= 1 by construction (tanh o sigmoid gating)."""
+    rng = np.random.default_rng(5)
+    x = arr(rng, 8, 16) * 10
+    h = arr(rng, 8, 12)
+    c = arr(rng, 8, 12)
+    wx, wh, b = arr(rng, 16, 48), arr(rng, 12, 48), arr(rng, 48)
+    h2, _ = lstm_cell(x, h, c, wx, wh, b)
+    assert bool(jnp.all(jnp.abs(h2) <= 1.0 + 1e-6))

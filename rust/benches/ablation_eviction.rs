@@ -1,0 +1,52 @@
+//! Ablation — eviction policy under tight budgets.
+//!
+//! The paper fixes FIFO "for fair comparison with baselines, although
+//! other strategies could also be effective" (§4.3 footnote).  This
+//! bench quantifies that footnote: SiDA with FIFO/LRU/LFU/Clock at
+//! budgets around one MoE layer's footprint.
+
+use sida_moe::baselines::Method;
+use sida_moe::bench_support as bs;
+use sida_moe::memory::CostModel;
+use sida_moe::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner(
+        "Ablation: eviction policy x budget",
+        "paper footnote 1: FIFO chosen for fairness; alternatives viable",
+    );
+    let n = bs::n_requests(10);
+    let mut t = Table::new(
+        "eviction ablation — SiDA on switch128/sst2",
+        &[
+            "budget (layer frac)", "policy", "hit rate %", "evictions",
+            "transfer (GB)", "throughput (req/s)",
+        ],
+    );
+    let b = bs::load("switch128")?;
+    let cost = CostModel::paper_scale(b.topology.expert_param_bytes);
+    let layer_bytes = cost.sim_bytes(b.topology.expert_param_bytes * b.topology.num_experts);
+    for frac in [0.125, 0.25, 0.5] {
+        let budget = ((layer_bytes as f64) * frac) as usize;
+        for policy in ["fifo", "lru", "lfu", "clock"] {
+            let spec = bs::RunSpec::new("sst2", n)
+                .budget(budget)
+                .policy_name(policy);
+            let out = bs::run_method(b.clone(), Method::Sida, &spec)?;
+            let s = &out.stats;
+            let hit = 100.0 * s.cache_hits as f64
+                / (s.cache_hits + s.cache_misses).max(1) as f64;
+            t.row(vec![
+                format!("{frac}"),
+                policy.to_string(),
+                format!("{hit:.1}"),
+                s.evictions.to_string(),
+                format!("{:.2}", s.transferred_bytes as f64 / 1e9),
+                format!("{:.2}", s.throughput()),
+            ]);
+        }
+    }
+    t.print();
+    t.save_csv(&bs::csv_path("ablation_eviction"))?;
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Figure 10 — Inference latency of SiDA vs baselines.
+//!
+//! Paper: SiDA reduces latency to ~25% of baselines on SST2/MRPC and
+//! ~60% on MultiRC for the large models (down to 28% on
+//! Switch-base-256); improvements grow as sentences shorten.
+
+use sida_moe::baselines::Method;
+use sida_moe::bench_support as bs;
+use sida_moe::metrics::report::fmt_secs;
+use sida_moe::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner(
+        "Fig 10: latency vs baselines",
+        "SiDA latency down to 25-28% of baselines on large models",
+    );
+    let n = bs::n_requests(10);
+    let methods = [
+        Method::Standard,
+        Method::DeepspeedLike,
+        Method::TutelLike,
+        Method::Sida,
+    ];
+    let mut t = Table::new(
+        "Fig 10 — p50 latency",
+        &[
+            "dataset", "model", "standard", "deepspeed", "tutel", "sida",
+            "sida / standard",
+        ],
+    );
+    for dataset in bs::ALL_DATASETS {
+        for name in bs::ALL_MODELS {
+            let b = bs::load(name)?;
+            let mut p50 = Vec::new();
+            for m in methods {
+                let spec = bs::RunSpec::new(dataset, n);
+                let mut out = bs::run_method(b.clone(), m, &spec)?;
+                p50.push(out.stats.latency.p50());
+            }
+            t.row(vec![
+                dataset.to_string(),
+                name.to_string(),
+                fmt_secs(p50[0]),
+                fmt_secs(p50[1]),
+                fmt_secs(p50[2]),
+                fmt_secs(p50[3]),
+                format!("{:.0}%", 100.0 * p50[3] / p50[0].max(1e-12)),
+            ]);
+        }
+    }
+    t.print();
+    t.save_csv(&bs::csv_path("fig10_latency"))?;
+    println!("paper shape check: SiDA/Standard ratio shrinks as E grows");
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Figure 3 — MoE overhead breakdown on SST2.
+//!
+//! Paper: expert selection + invocation + communication consume up to
+//! 72% of total inference time on Switch-base-256, growing with expert
+//! count, because the default implementation invokes *every* expert
+//! (Remark 1: at B=1, invocation count dictates inference time).
+//! We serve with the Standard method and report the phase breakdown.
+
+use sida_moe::baselines::Method;
+use sida_moe::bench_support as bs;
+use sida_moe::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner(
+        "Fig 3: MoE overhead breakdown (Standard, SST2)",
+        "MoE overhead up to 72% of inference time at E=256, growing with E",
+    );
+    let n = bs::n_requests(8);
+    let mut t = Table::new(
+        "Fig 3 — time breakdown per forward (Standard)",
+        &[
+            "model", "ideal (dense) %", "selection %", "expert invocation %",
+            "MoE overhead %", "invocations/req",
+        ],
+    );
+    for name in bs::ALL_MODELS {
+        let b = bs::load(name)?;
+        let spec = bs::RunSpec::new("sst2", n);
+        let out = bs::run_method(b, Method::Standard, &spec)?;
+        let ph = &out.stats.phases;
+        let total = ph.total();
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1}", 100.0 * ph.dense_secs / total),
+            format!("{:.1}", 100.0 * ph.selection_secs / total),
+            format!("{:.1}", 100.0 * ph.expert_secs / total),
+            format!("{:.1}", 100.0 * ph.moe_overhead() / total),
+            format!("{:.0}", ph.expert_invocations as f64 / out.stats.requests as f64),
+        ]);
+    }
+    t.print();
+    t.save_csv(&bs::csv_path("fig3_moe_overhead"))?;
+    println!("paper shape check: overhead % must grow monotonically with E");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Figure 4 — Expert Activation in Switch Transformers (SST2).
+//!
+//! Paper: sentence-level sparsity persists — Switch-base-256 activates
+//! <20% of experts, Switch-base-128 <40%; even the longest sentences
+//! leave >70-80% of experts idle.  We run the true router over generated
+//! sentences, bucket by sentence length, and report the idle-expert
+//! ratio per model.
+
+use std::collections::BTreeMap;
+
+use sida_moe::bench_support as bs;
+use sida_moe::metrics::Table;
+use sida_moe::model::{ExpertProvider, ForwardOptions, ModelRunner};
+
+fn main() -> anyhow::Result<()> {
+    bs::banner(
+        "Fig 4: sentence-level expert activation sparsity",
+        "idle ratio >80% (E=256), >70% (E=128) even for the longest sentences",
+    );
+    let n = bs::n_requests(24);
+    let mut t = Table::new(
+        "Fig 4 — idle expert ratio by sentence length (router-measured)",
+        &["model", "len bucket", "sentences", "active experts (mean)", "idle ratio"],
+    );
+    for name in bs::ALL_MODELS {
+        let b = bs::load(name)?;
+        let e_total = b.topology.num_experts as f64;
+        // span short + long sentences: sst2 and multirc profiles
+        for dataset in ["sst2", "multirc"] {
+            let runner = ModelRunner::new(b.clone(), dataset)?;
+            let reqs = bs::trace_for(&b, dataset, n, 7);
+            let mut buckets: BTreeMap<usize, (usize, f64)> = BTreeMap::new();
+            for req in &reqs {
+                let mut provider = ExpertProvider::HostLiterals;
+                let out = runner.forward(&req.ids, None, &mut provider,
+                    ForwardOptions::default())?;
+                let mask = ModelRunner::mask_of(&req.ids);
+                let active: f64 = out
+                    .routing
+                    .iter()
+                    .map(|r| r.active_experts(&mask).len() as f64)
+                    .sum::<f64>()
+                    / out.routing.len() as f64;
+                let bucket = (req.n_tokens / 32) * 32;
+                let entry = buckets.entry(bucket).or_insert((0, 0.0));
+                entry.0 += 1;
+                entry.1 += active;
+            }
+            for (bucket, (count, sum_active)) in buckets {
+                let mean_active = sum_active / count as f64;
+                t.row(vec![
+                    name.to_string(),
+                    format!("{}-{}", bucket, bucket + 31),
+                    count.to_string(),
+                    format!("{mean_active:.1}"),
+                    format!("{:.1}%", 100.0 * (1.0 - mean_active / e_total)),
+                ]);
+            }
+        }
+    }
+    t.print();
+    t.save_csv(&bs::csv_path("fig4_activation_sparsity"))?;
+    Ok(())
+}

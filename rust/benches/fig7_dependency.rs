@@ -1,0 +1,155 @@
+//! Figures 6 + 7 — sparse cross-embedding dependency on expert activation.
+//!
+//! Fig 6 is the combinatorial model (Eq. 2): E[p-hat] = 1 - C(L-1-c, pL)
+//! / C(L-1, pL) for candidate critical-token counts c.  Fig 7 measures
+//! p-hat empirically: corrupt a random fraction p of the other tokens
+//! (token corruption) or swap a fraction of positions (position
+//! corruption) and record how often token i's expert assignment changes.
+//! Reading the two together gives the best-fit c-hat, which the paper
+//! finds in 1..4 — the justification for a lightweight hash function.
+
+use sida_moe::bench_support as bs;
+use sida_moe::metrics::Table;
+use sida_moe::model::{ExpertProvider, ForwardOptions, ModelRunner};
+use sida_moe::util::rng::Rng;
+
+/// Eq. 2 of the paper.
+fn expected_phat(l: usize, c: usize, p: f64) -> f64 {
+    let k = (p * l as f64).floor() as usize;
+    // 1 - C(L-1-c, k)/C(L-1, k) computed in log space
+    if k + c > l - 1 {
+        return 1.0;
+    }
+    let ln_c = |n: usize, r: usize| -> f64 {
+        // ln C(n, r) via lgamma-free accumulation
+        let mut s = 0.0;
+        for i in 0..r {
+            s += ((n - i) as f64).ln() - ((i + 1) as f64).ln();
+        }
+        s
+    };
+    1.0 - (ln_c(l - 1 - c, k) - ln_c(l - 1, k)).exp()
+}
+
+fn main() -> anyhow::Result<()> {
+    bs::banner(
+        "Fig 6+7: sparse cross-embedding dependency",
+        "best-fit critical-token count c-hat in 1..4 (Switch-base-128, C4)",
+    );
+    let model = std::env::var("DEP_MODEL").unwrap_or_else(|_| "switch128".to_string());
+    let b = bs::load(&model)?;
+    // longest profile stands in for C4's L=512 (we cap at 256; DESIGN §2)
+    let dataset = "multirc";
+    let runner = ModelRunner::new(b.clone(), dataset)?;
+    let n_sentences = bs::n_requests(4);
+    let n_positions = bs::n_requests(8);
+    let ps = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+
+    // --- Fig 6: the model curves --------------------------------------
+    let mut t6 = Table::new(
+        "Fig 6 — E[p-hat] under Eq. 2 (L=256)",
+        &["c", "p=0.1", "p=0.3", "p=0.5", "p=0.7", "p=0.9"],
+    );
+    for c in [1usize, 2, 4, 8, 16] {
+        t6.row(
+            std::iter::once(c.to_string())
+                .chain([0.1, 0.3, 0.5, 0.7, 0.9].iter().map(|&p| {
+                    format!("{:.3}", expected_phat(256, c, p))
+                }))
+                .collect(),
+        );
+    }
+    t6.print();
+    t6.save_csv(&bs::csv_path("fig6_model"))?;
+
+    // --- Fig 7: empirical corruption ----------------------------------
+    let reqs = bs::trace_for(&b, dataset, n_sentences, 23);
+    let mut rng = Rng::new(0xF16_7);
+    let vocab = b.topology.vocab as u64;
+
+    let router_experts = |ids: &[i32]| -> anyhow::Result<Vec<Vec<usize>>> {
+        let mut provider = ExpertProvider::HostLiterals;
+        let out = runner.forward(ids, None, &mut provider, ForwardOptions::default())?;
+        Ok(out.routing.iter().map(|r| r.top1.clone()).collect())
+    };
+
+    let mut t7 = Table::new(
+        "Fig 7 — empirical P(expert activation changes) vs corruption p",
+        &["mode", "p", "p-hat", "best-fit c"],
+    );
+    for mode in ["token", "position"] {
+        for &p in &ps {
+            let mut changed = 0usize;
+            let mut total = 0usize;
+            for req in &reqs {
+                let base = router_experts(&req.ids)?;
+                let real = req.n_tokens;
+                for _ in 0..n_positions {
+                    // position i of interest (inside the real tokens)
+                    let i = 1 + rng.usize_below(real.saturating_sub(2).max(1));
+                    let mut ids = req.ids.clone();
+                    let others: Vec<usize> =
+                        (1..real - 1).filter(|&t| t != i).collect();
+                    let n_corrupt =
+                        ((p * others.len() as f64).floor() as usize).min(others.len());
+                    let sel = rng.sample_indices(others.len(), n_corrupt);
+                    match mode {
+                        "token" => {
+                            for &s in &sel {
+                                let t = others[s];
+                                // new token distinct from original and ids[i]
+                                loop {
+                                    let cand = 3 + rng.below(vocab - 3) as i32;
+                                    if cand != req.ids[t] && cand != req.ids[i] {
+                                        ids[t] = cand;
+                                        break;
+                                    }
+                                }
+                            }
+                        }
+                        _ => {
+                            // swap selected positions pairwise
+                            let mut chosen: Vec<usize> =
+                                sel.iter().map(|&s| others[s]).collect();
+                            rng.shuffle(&mut chosen);
+                            for pair in chosen.chunks(2) {
+                                if let [a, bpos] = pair {
+                                    ids.swap(*a, *bpos);
+                                }
+                            }
+                        }
+                    }
+                    let corrupted = router_experts(&ids)?;
+                    // any MoE layer changing token i's expert counts
+                    let delta = base
+                        .iter()
+                        .zip(corrupted.iter())
+                        .any(|(b, c)| b[i] != c[i]);
+                    if delta {
+                        changed += 1;
+                    }
+                    total += 1;
+                }
+            }
+            let phat = changed as f64 / total.max(1) as f64;
+            // best-fit c under Eq. 2
+            let best_c = (1..=32)
+                .min_by(|&a, &bc| {
+                    let ea = (expected_phat(256, a, p) - phat).abs();
+                    let eb = (expected_phat(256, bc, p) - phat).abs();
+                    ea.partial_cmp(&eb).unwrap()
+                })
+                .unwrap();
+            t7.row(vec![
+                mode.to_string(),
+                format!("{p:.1}"),
+                format!("{phat:.3}"),
+                best_c.to_string(),
+            ]);
+        }
+    }
+    t7.print();
+    t7.save_csv(&bs::csv_path("fig7_dependency"))?;
+    println!("paper shape check: p-hat grows with p; best-fit c stays small (1-4)");
+    Ok(())
+}

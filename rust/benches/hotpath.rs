@@ -1,0 +1,115 @@
+//! Hot-path microbenchmark — the profiling harness behind
+//! EXPERIMENTS.md §Perf (L3).
+//!
+//! Reports per-artifact dispatch statistics over a SiDA serving run
+//! (calls, total time, mean) plus the isolated costs of the three
+//! per-request stages: hash build, expert invocation (per bucket), and
+//! end-to-end forward.  Re-run after each optimization to record the
+//! before/after deltas.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use sida_moe::baselines::Method;
+use sida_moe::bench_support as bs;
+use sida_moe::coordinator::HashBuilder;
+use sida_moe::metrics::Table;
+use sida_moe::model::{ExpertProvider, ForwardOptions, ModelRunner};
+use sida_moe::runtime::stage_expert_parts;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner(
+        "hotpath: per-stage microbenchmarks",
+        "(internal perf harness, not a paper figure)",
+    );
+    let model = std::env::var("HOTPATH_MODEL").unwrap_or_else(|_| "switch128".to_string());
+    let b = bs::load(&model)?;
+    let runner = Arc::new(ModelRunner::new(b.clone(), "sst2")?);
+    let builder = HashBuilder::new(&b, "sst2")?;
+    let reqs = bs::trace_for(&b, "sst2", bs::n_requests(8), 3);
+
+    // --- stage costs ----------------------------------------------------
+    let mut t = Table::new("stage micro-costs", &["stage", "mean", "calls"]);
+    // hash build (warm: first dispatch pays one-time PJRT setup)
+    builder.build(0, &reqs[0].ids)?;
+    let t0 = Instant::now();
+    for req in &reqs {
+        builder.build(req.id, &req.ids)?;
+    }
+    t.row(vec![
+        "hash build (warm)".into(),
+        format!("{:.3}ms", t0.elapsed().as_secs_f64() * 1e3 / reqs.len() as f64),
+        reqs.len().to_string(),
+    ]);
+    // expert staging (H2D)
+    let t0 = Instant::now();
+    let iters = 32;
+    for i in 0..iters {
+        let _ = stage_expert_parts(
+            &b.engine,
+            &b.weights,
+            b.topology.moe_blocks[0],
+            i % b.topology.num_experts,
+        )?;
+    }
+    t.row(vec![
+        "expert stage (4 bufs)".into(),
+        format!("{:.3}ms", t0.elapsed().as_secs_f64() * 1e3 / iters as f64),
+        iters.to_string(),
+    ]);
+    // single expert invocation per bucket
+    let staged = runner.stage_all_experts()?;
+    for &bucket in &b.topology.buckets.clone() {
+        if bucket > runner.seq_len * 2 {
+            continue;
+        }
+        let (ids, _, _) = {
+            let mut gen = sida_moe::workload::TraceGenerator::new(
+                sida_moe::workload::Profile::named("sst2").unwrap(),
+                b.topology.vocab,
+                1,
+            );
+            gen.sentence()
+        };
+        let mut provider = ExpertProvider::AllResident(&staged);
+        // warm
+        let _ = runner.forward(&ids, None, &mut provider, ForwardOptions::default())?;
+        let t0 = Instant::now();
+        let iters = 8;
+        for _ in 0..iters {
+            let mut provider = ExpertProvider::AllResident(&staged);
+            let _ = runner.forward(&ids, None, &mut provider, ForwardOptions::default())?;
+        }
+        t.row(vec![
+            format!("full fwd (adaptive, warm, bucket<= {bucket})"),
+            format!("{:.3}ms", t0.elapsed().as_secs_f64() * 1e3 / iters as f64),
+            iters.to_string(),
+        ]);
+        break; // one representative row; buckets covered below via stats
+    }
+    t.print();
+
+    // --- per-artifact dispatch stats over a serving run ------------------
+    let spec = bs::RunSpec::new("sst2", bs::n_requests(8)).sleep(false);
+    let _ = bs::run_method(b.clone(), Method::Sida, &spec)?;
+    let mut stats = b.engine.all_stats();
+    stats.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
+    let mut t2 = Table::new(
+        "per-artifact dispatch stats (SiDA serving run)",
+        &["artifact", "calls", "total (ms)", "mean (us)"],
+    );
+    for (name, s) in stats.iter().take(12) {
+        if s.calls == 0 {
+            continue;
+        }
+        t2.row(vec![
+            name.clone(),
+            s.calls.to_string(),
+            format!("{:.2}", s.total_secs * 1e3),
+            format!("{:.1}", s.total_secs * 1e6 / s.calls as f64),
+        ]);
+    }
+    t2.print();
+    t2.save_csv(&bs::csv_path("hotpath"))?;
+    Ok(())
+}

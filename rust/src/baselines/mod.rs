@@ -1,0 +1,252 @@
+//! Baseline serving methods (paper §4 Setup + Fig 11), all over the same
+//! runtime/memory substrate so comparisons isolate the policy:
+//!
+//! | method        | routing | experts invoked      | expert residency      | dispatch capacity | weights fed from |
+//! |---------------|---------|----------------------|-----------------------|-------------------|------------------|
+//! | Standard      | router  | **all E** (§2.3)     | all on device         | fixed (full L)    | host literals    |
+//! | DeepspeedLike | router  | all E                | all on device         | fixed (full L)    | staged buffers   |
+//! | TutelLike     | router  | all E                | all on device         | adaptive bucket   | staged buffers   |
+//! | Layerwise     | router  | all E                | streamed per layer    | fixed (full L)    | cache            |
+//! | Reactive      | router  | non-empty only       | cached, fetch-on-miss | adaptive bucket   | cache            |
+//! | (SiDA lives in coordinator::pipeline)                                                                       |
+//!
+//! All three Fig-9/10 baselines invoke every expert, per the paper §2.3:
+//! "the default implementation ... invokes every expert, irrespective of
+//! whether any tokens are assigned to it, to align with hardware" — that
+//! invoke-all behaviour is exactly why Table 1 rates them "slow".  They
+//! differ in the optimizations their systems actually bring: Standard
+//! (HF transformers) re-feeds weights from host each call; DeepSpeed-
+//! Inference adds optimized kernels over pre-staged weights at fixed
+//! capacity; Tutel adds adaptive parallelism (the dispatch bucket adapts
+//! to the real token count).  Layerwise is the "Standard" model-parallel
+//! offloading of Fig 11: each MoE layer's full expert set is streamed
+//! onto the device right before the layer runs.  Reactive offloads like
+//! SiDA but without prediction: every miss blocks the critical path
+//! after the router output — the naive scheme the paper's Challenge 1
+//! dismisses (an extra ablation, not a paper baseline).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::pipeline::{argmax, RequestResult, ServeOutcome};
+use crate::experts::{make_policy, ExpertCache, ExpertKey};
+use crate::memory::CostModel;
+use crate::metrics::ServeStats;
+use crate::model::{ExpertProvider, ForwardOptions, ModelRunner};
+use crate::runtime::ModelBundle;
+use crate::workload::Request;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Sida,
+    Standard,
+    DeepspeedLike,
+    TutelLike,
+    Layerwise,
+    Reactive,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "sida" => Method::Sida,
+            "standard" => Method::Standard,
+            "deepspeed" => Method::DeepspeedLike,
+            "tutel" => Method::TutelLike,
+            "layerwise" => Method::Layerwise,
+            "reactive" => Method::Reactive,
+            other => anyhow::bail!(
+                "unknown method '{other}' (sida|standard|deepspeed|tutel|layerwise|reactive)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Sida => "sida",
+            Method::Standard => "standard",
+            Method::DeepspeedLike => "deepspeed",
+            Method::TutelLike => "tutel",
+            Method::Layerwise => "layerwise",
+            Method::Reactive => "reactive",
+        }
+    }
+
+    pub fn all_baselines() -> [Method; 3] {
+        [Method::Standard, Method::DeepspeedLike, Method::TutelLike]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BaselineConfig {
+    /// simulated device budget (Layerwise / Reactive); all-resident
+    /// methods ignore it and account the full MoE footprint
+    pub budget_sim_bytes: usize,
+    pub real_sleep: bool,
+    pub want_lm: bool,
+    pub want_cls: bool,
+}
+
+impl Default for BaselineConfig {
+    fn default() -> Self {
+        BaselineConfig {
+            budget_sim_bytes: 8 << 30,
+            real_sleep: false,
+            want_lm: false,
+            want_cls: false,
+        }
+    }
+}
+
+/// Serve a closed-loop trace with a router-driven baseline.
+pub fn run_baseline(
+    bundle: Arc<ModelBundle>,
+    profile: &str,
+    method: Method,
+    requests: &[Request],
+    cfg: &BaselineConfig,
+) -> Result<ServeOutcome> {
+    assert_ne!(method, Method::Sida, "SiDA is served by coordinator::Pipeline");
+    let runner = ModelRunner::new(bundle.clone(), profile)?;
+    let topo = bundle.topology.clone();
+    let real_expert_bytes = bundle.weights.expert_bytes(topo.moe_blocks[0], 0)?;
+    let cost = CostModel::paper_scale(real_expert_bytes).with_real_sleep(cfg.real_sleep);
+
+    let opts = ForwardOptions {
+        invoke_all: !matches!(method, Method::Reactive),
+        fixed_bucket: matches!(
+            method,
+            Method::Standard | Method::DeepspeedLike | Method::Layerwise
+        ),
+        want_lm: cfg.want_lm,
+        want_cls: cfg.want_cls,
+    };
+
+    // residency setup
+    let all_resident;
+    let mut cache;
+    let full_moe_sim_bytes = cost.sim_bytes(topo.moe_param_bytes);
+    let mut provider_kind: u8 = 0; // 0 = all-resident, 1 = cached, 2 = host literals
+    match method {
+        Method::Standard => {
+            // HF-transformers-style: weights re-fed from host every call
+            provider_kind = 2;
+            all_resident = None;
+            cache = None;
+        }
+        Method::DeepspeedLike | Method::TutelLike => {
+            all_resident = Some(runner.stage_all_experts()?);
+            cache = None;
+        }
+        Method::Layerwise | Method::Reactive => {
+            provider_kind = 1;
+            all_resident = None;
+            cache = Some(ExpertCache::new(
+                cfg.budget_sim_bytes,
+                cost.clone(),
+                make_policy("fifo")?,
+            ));
+        }
+        Method::Sida => unreachable!(),
+    }
+
+    let t_start = Instant::now();
+    let mut stats = ServeStats::default();
+    let mut per_request = Vec::new();
+
+    for req in requests {
+        let t0 = Instant::now();
+        let out = if provider_kind == 0 {
+            let mut provider = ExpertProvider::AllResident(all_resident.as_ref().unwrap());
+            runner.forward(&req.ids, None, &mut provider, opts)?
+        } else if provider_kind == 2 {
+            let mut provider = ExpertProvider::HostLiterals;
+            runner.forward(&req.ids, None, &mut provider, opts)?
+        } else {
+            let c = cache.as_mut().unwrap();
+            if method == Method::Layerwise {
+                // stream each MoE layer's full expert set before use;
+                // with the budget below a layer's footprint this thrashes
+                // (Fig 11's model-parallel "Standard")
+                for &block in &topo.moe_blocks {
+                    for expert in 0..topo.num_experts {
+                        let key = ExpertKey::new(block, expert);
+                        let real = bundle.weights.expert_bytes(block, expert)?;
+                        let engine = bundle.engine.clone();
+                        let weights = bundle.weights.clone();
+                        // blocking: layer streaming sits on the critical path
+                        let _ = c.ensure(key, real, true, || {
+                            crate::runtime::stage_expert_parts(&engine, &weights, block, expert)
+                        })?;
+                    }
+                }
+            }
+            let mut provider = ExpertProvider::Cached { cache: c, blocking: true };
+            runner.forward(&req.ids, None, &mut provider, opts)?
+        };
+        let latency = t0.elapsed().as_secs_f64();
+        stats.latency.record(latency);
+        stats.phases.add(&out.times);
+        stats.requests += 1;
+
+        let cls_pred = out.cls_logits.as_ref().map(|v| argmax(v));
+        let (lm_nll, lm_tokens) = match (&out.lm_logits, cfg.want_lm) {
+            (Some(logits), true) => {
+                let (nll, cnt) = runner.lm_nll(logits, &req.ids)?;
+                (Some(nll), Some(cnt))
+            }
+            _ => (None, None),
+        };
+        per_request.push(RequestResult {
+            id: req.id,
+            latency_secs: latency,
+            cls_pred,
+            lm_nll,
+            lm_tokens,
+            n_tokens: req.n_tokens,
+        });
+    }
+    stats.wall_secs = t_start.elapsed().as_secs_f64();
+
+    match &cache {
+        Some(c) => {
+            let cs = c.stats();
+            stats.cache_hits = cs.hits;
+            stats.cache_misses = cs.misses;
+            stats.blocking_misses = cs.blocking_misses;
+            stats.evictions = cs.evictions;
+            stats.transferred_bytes = cs.transferred_sim_bytes;
+            stats.peak_device_bytes = c.peak();
+            stats.budget_bytes = c.budget();
+            // modeled transfer time is already inside phases.transfer_secs
+        }
+        None => {
+            // all-resident methods pay the full MoE footprint
+            stats.peak_device_bytes = full_moe_sim_bytes;
+            stats.budget_bytes = full_moe_sim_bytes;
+        }
+    }
+    Ok(ServeOutcome { stats, per_request })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [
+            Method::Sida,
+            Method::Standard,
+            Method::DeepspeedLike,
+            Method::TutelLike,
+            Method::Layerwise,
+            Method::Reactive,
+        ] {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("foo").is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! Serving configuration: JSON config files + CLI overrides.
+//!
+//! A config fully describes one serving run (model, dataset profile,
+//! method, memory budget, workload).  `sida-moe serve --config x.json`
+//! loads one; every field can be overridden on the command line.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// model config name (switch8|switch64|switch128|switch256)
+    pub model: String,
+    /// dataset profile (sst2|mrpc|multirc)
+    pub dataset: String,
+    /// serving method (sida|standard|deepspeed|tutel|layerwise|reactive)
+    pub method: String,
+    /// simulated device budget in GB (paper scale)
+    pub budget_gb: f64,
+    /// eviction policy for cached methods
+    pub policy: String,
+    /// hash experts consumed per token (paper: 1 for sst2, 3 otherwise)
+    pub k_used: usize,
+    /// sleep modeled transfer cost on the critical path
+    pub real_sleep: bool,
+    /// run the prefetch stage of the SiDA pipeline
+    pub prefetch: bool,
+    /// number of requests in the trace
+    pub n_requests: usize,
+    /// workload seed
+    pub seed: u64,
+    /// compute LM logits + NLL per request
+    pub want_lm: bool,
+    /// compute classifier logits per request
+    pub want_cls: bool,
+    /// artifacts root directory
+    pub artifacts: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: "switch8".into(),
+            dataset: "sst2".into(),
+            method: "sida".into(),
+            budget_gb: 8.0,
+            policy: "fifo".into(),
+            k_used: 1,
+            real_sleep: false,
+            prefetch: true,
+            n_requests: 32,
+            seed: 0,
+            want_lm: false,
+            want_cls: true,
+            artifacts: "artifacts".into(),
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = ServeConfig::default();
+        let obj = j.as_obj()?;
+        for (key, val) in obj {
+            match key.as_str() {
+                "model" => cfg.model = val.as_str()?.to_string(),
+                "dataset" => cfg.dataset = val.as_str()?.to_string(),
+                "method" => cfg.method = val.as_str()?.to_string(),
+                "budget_gb" => cfg.budget_gb = val.as_f64()?,
+                "policy" => cfg.policy = val.as_str()?.to_string(),
+                "k_used" => cfg.k_used = val.as_usize()?,
+                "real_sleep" => cfg.real_sleep = val.as_bool()?,
+                "prefetch" => cfg.prefetch = val.as_bool()?,
+                "n_requests" => cfg.n_requests = val.as_usize()?,
+                "seed" => cfg.seed = val.as_u64()?,
+                "want_lm" => cfg.want_lm = val.as_bool()?,
+                "want_cls" => cfg.want_cls = val.as_bool()?,
+                "artifacts" => cfg.artifacts = val.as_str()?.to_string(),
+                other => anyhow::bail!("unknown config key '{other}'"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Apply CLI overrides (only keys present in `args`).
+    pub fn apply_args(&mut self, args: &crate::util::cli::Args) {
+        if let Some(v) = args.get("model") {
+            self.model = v.to_string();
+        }
+        if let Some(v) = args.get("dataset") {
+            self.dataset = v.to_string();
+        }
+        if let Some(v) = args.get("method") {
+            self.method = v.to_string();
+        }
+        if let Some(v) = args.get("budget-gb") {
+            if let Ok(x) = v.parse() {
+                self.budget_gb = x;
+            }
+        }
+        if let Some(v) = args.get("policy") {
+            self.policy = v.to_string();
+        }
+        if let Some(v) = args.get("k-used") {
+            if let Ok(x) = v.parse() {
+                self.k_used = x;
+            }
+        }
+        if let Some(v) = args.get("requests") {
+            if let Ok(x) = v.parse() {
+                self.n_requests = x;
+            }
+        }
+        if let Some(v) = args.get("seed") {
+            if let Ok(x) = v.parse() {
+                self.seed = x;
+            }
+        }
+        if let Some(v) = args.get("artifacts") {
+            self.artifacts = v.to_string();
+        }
+        if args.flag("real-sleep") {
+            self.real_sleep = true;
+        }
+        if args.flag("no-prefetch") {
+            self.prefetch = false;
+        }
+        if args.flag("lm") {
+            self.want_lm = true;
+        }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        (self.budget_gb * 1e9) as usize
+    }
+
+    /// The paper's per-dataset k: top-1 for SST2, top-3 for MRPC/MultiRC.
+    pub fn paper_k_for(dataset: &str) -> usize {
+        if dataset == "sst2" {
+            1
+        } else {
+            3
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let j = Json::parse(
+            r#"{"model":"switch128","dataset":"mrpc","method":"standard",
+                "budget_gb":24.5,"policy":"lru","k_used":3,"real_sleep":true,
+                "prefetch":false,"n_requests":64,"seed":7,"want_lm":true,
+                "want_cls":false,"artifacts":"a"}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.model, "switch128");
+        assert_eq!(c.k_used, 3);
+        assert!((c.budget_gb - 24.5).abs() < 1e-9);
+        assert!(c.real_sleep);
+        assert!(!c.prefetch);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let j = Json::parse(r#"{"modell":"x"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn defaults_fill_missing() {
+        let j = Json::parse(r#"{"model":"switch64"}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.model, "switch64");
+        assert_eq!(c.dataset, "sst2");
+        assert_eq!(c.policy, "fifo");
+    }
+
+    #[test]
+    fn paper_k() {
+        assert_eq!(ServeConfig::paper_k_for("sst2"), 1);
+        assert_eq!(ServeConfig::paper_k_for("mrpc"), 3);
+        assert_eq!(ServeConfig::paper_k_for("multirc"), 3);
+    }
+
+    #[test]
+    fn budget_bytes_conversion() {
+        let mut c = ServeConfig::default();
+        c.budget_gb = 2.0;
+        assert_eq!(c.budget_bytes(), 2_000_000_000);
+    }
+}

@@ -1,0 +1,160 @@
+//! The expert hash table H_i (paper Fig 5): per-token, per-MoE-layer
+//! predicted expert ids and scaling factors, produced by the
+//! hash-building thread and consumed by the inference thread.
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{to_f32_vec, to_i32_vec};
+
+#[derive(Debug, Clone)]
+pub struct HashTable {
+    pub batch_id: u64,
+    pub seq_len: usize,
+    /// number of MoE layers (M)
+    pub m: usize,
+    /// predictions exported per token per layer (K)
+    pub k: usize,
+    /// [L, M, K] row-major
+    pub idx: Vec<i32>,
+    /// [L, M, K] student softmax probabilities (approximate alphas)
+    pub alpha: Vec<f32>,
+    /// wall time the hash-building thread spent producing this table
+    pub build_secs: f64,
+}
+
+impl HashTable {
+    pub fn new(
+        batch_id: u64,
+        seq_len: usize,
+        m: usize,
+        k: usize,
+        idx: Vec<i32>,
+        alpha: Vec<f32>,
+        build_secs: f64,
+    ) -> Result<Self> {
+        if idx.len() != seq_len * m * k || alpha.len() != seq_len * m * k {
+            bail!(
+                "hash table size mismatch: idx {} alpha {} expected {}",
+                idx.len(),
+                alpha.len(),
+                seq_len * m * k
+            );
+        }
+        Ok(HashTable { batch_id, seq_len, m, k, idx, alpha, build_secs })
+    }
+
+    /// Build from the hash artifact's output literals
+    /// (idx i32 [1,L,M,K], alpha f32 [1,L,M,K]).
+    pub fn from_literals(
+        batch_id: u64,
+        seq_len: usize,
+        m: usize,
+        k: usize,
+        idx_lit: &xla::Literal,
+        alpha_lit: &xla::Literal,
+        build_secs: f64,
+    ) -> Result<Self> {
+        Self::new(
+            batch_id,
+            seq_len,
+            m,
+            k,
+            to_i32_vec(idx_lit)?,
+            to_f32_vec(alpha_lit)?,
+            build_secs,
+        )
+    }
+
+    #[inline]
+    fn at(&self, token: usize, layer: usize, rank: usize) -> usize {
+        debug_assert!(token < self.seq_len && layer < self.m && rank < self.k);
+        (token * self.m + layer) * self.k + rank
+    }
+
+    /// Predicted expert for `token` at MoE layer `layer`, rank `rank`.
+    pub fn expert_at(&self, token: usize, layer: usize, rank: usize) -> usize {
+        self.idx[self.at(token, layer, rank)] as usize
+    }
+
+    /// Predicted scaling factor at the same position.
+    pub fn alpha_at(&self, token: usize, layer: usize, rank: usize) -> f32 {
+        self.alpha[self.at(token, layer, rank)]
+    }
+
+    /// Unique experts predicted active at `layer` over masked tokens,
+    /// considering the first `k_used` ranks — the prefetch set.
+    pub fn predicted_experts(&self, layer: usize, k_used: usize, mask: &[f32]) -> Vec<usize> {
+        let mut set = BTreeSet::new();
+        for t in 0..self.seq_len {
+            if mask.get(t).copied().unwrap_or(0.0) == 0.0 {
+                continue;
+            }
+            for r in 0..k_used.min(self.k) {
+                set.insert(self.expert_at(t, layer, r));
+            }
+        }
+        set.into_iter().collect()
+    }
+
+    /// Sentence-level activation sparsity at `layer` (Fig 4): fraction of
+    /// the expert pool NOT activated.
+    pub fn idle_ratio(&self, layer: usize, num_experts: usize, mask: &[f32]) -> f64 {
+        let active = self.predicted_experts(layer, 1, mask).len();
+        1.0 - active as f64 / num_experts as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> HashTable {
+        // L=3, M=2, K=2
+        let idx = vec![
+            0, 1, /* t0 l0 */ 2, 3, /* t0 l1 */
+            0, 2, /* t1 l0 */ 2, 0, /* t1 l1 */
+            5, 1, /* t2 l0 */ 3, 2, /* t2 l1 */
+        ];
+        let alpha = vec![
+            0.9, 0.1, 0.8, 0.2, //
+            0.7, 0.3, 0.6, 0.4, //
+            0.5, 0.5, 0.9, 0.1,
+        ];
+        HashTable::new(7, 3, 2, 2, idx, alpha, 0.001).unwrap()
+    }
+
+    #[test]
+    fn indexing() {
+        let t = table();
+        assert_eq!(t.expert_at(0, 0, 0), 0);
+        assert_eq!(t.expert_at(0, 1, 1), 3);
+        assert_eq!(t.expert_at(2, 0, 0), 5);
+        assert!((t.alpha_at(1, 1, 0) - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn predicted_set_respects_mask_and_k() {
+        let t = table();
+        let mask = vec![1.0, 1.0, 0.0]; // token 2 is padding
+        assert_eq!(t.predicted_experts(0, 1, &mask), vec![0]);
+        assert_eq!(t.predicted_experts(0, 2, &mask), vec![0, 1, 2]);
+        let full = vec![1.0, 1.0, 1.0];
+        assert_eq!(t.predicted_experts(0, 1, &full), vec![0, 5]);
+    }
+
+    #[test]
+    fn idle_ratio_matches_active_count() {
+        let t = table();
+        let full = vec![1.0, 1.0, 1.0];
+        // layer 1, top-1 experts: {2, 2, 3} -> 2 active of 8
+        let r = t.idle_ratio(1, 8, &full);
+        assert!((r - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn size_validation() {
+        assert!(HashTable::new(0, 3, 2, 2, vec![0; 11], vec![0.0; 12], 0.0).is_err());
+    }
+}

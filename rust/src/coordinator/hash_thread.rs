@@ -1,0 +1,86 @@
+//! Hash-building thread (paper Fig 5, steps (1)-a..c): run the offline-
+//! trained hash function on each incoming batch and enqueue the expert
+//! hash table.
+//!
+//! `HashBuilder` wraps the `hash_L{L}` artifact — the LSTM + SparseMax
+//! attention predictor lowered to HLO — with its weight literals cached,
+//! so a build is a single PJRT dispatch.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::hash_table::HashTable;
+use crate::runtime::{literal_i32, Executable, ModelBundle};
+
+pub struct HashBuilder {
+    exe: Arc<Executable>,
+    /// hash-entry weight args in artifact order (after ids)
+    weight_lits: Vec<xla::Literal>,
+    pub seq_len: usize,
+    pub m: usize,
+    pub k: usize,
+}
+
+// literal cache is read-only after construction; execution is PJRT-safe
+unsafe impl Send for HashBuilder {}
+unsafe impl Sync for HashBuilder {}
+
+impl HashBuilder {
+    pub fn new(bundle: &ModelBundle, profile: &str) -> Result<Self> {
+        let topo = &bundle.topology;
+        let seq_len = topo.seq_len(profile)?;
+        let exe = bundle.engine.load(&format!("hash_L{seq_len}"))?;
+        let w = &bundle.weights;
+        let d = topo.d_model;
+        // arg order fixed by hashfn.make_entry_hash:
+        // ids, tok, pos, compress_w, compress_b,
+        // l0_wx, l0_wh, l0_b, l1_wx, l1_wh, l1_b, out_w, out_b
+        let pos_full = w.f32_slice("embed.pos")?;
+        let pos_lit =
+            crate::runtime::literal_from_f32s(&[seq_len, d], &pos_full[..seq_len * d])?;
+        let mut weight_lits = vec![w.literal("embed.tok")?, pos_lit];
+        for name in [
+            "hash.compress_w",
+            "hash.compress_b",
+            "hash.lstm.0.wx",
+            "hash.lstm.0.wh",
+            "hash.lstm.0.b",
+            "hash.lstm.1.wx",
+            "hash.lstm.1.wh",
+            "hash.lstm.1.b",
+            "hash.out_w",
+            "hash.out_b",
+        ] {
+            weight_lits.push(w.literal(name)?);
+        }
+        Ok(HashBuilder {
+            exe,
+            weight_lits,
+            seq_len,
+            m: topo.num_moe_layers(),
+            k: topo.hash.top_k,
+        })
+    }
+
+    /// Run the predictor on one sentence (batch of 1, padded ids).
+    pub fn build(&self, batch_id: u64, ids: &[i32]) -> Result<HashTable> {
+        let t0 = Instant::now();
+        let ids_lit = literal_i32(&[1, self.seq_len], ids)?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.weight_lits.len());
+        args.push(&ids_lit);
+        args.extend(self.weight_lits.iter());
+        let out = self.exe.run(&args)?;
+        let build_secs = t0.elapsed().as_secs_f64();
+        HashTable::from_literals(
+            batch_id,
+            self.seq_len,
+            self.m,
+            self.k,
+            &out[0],
+            &out[1],
+            build_secs,
+        )
+    }
+}

@@ -1,0 +1,17 @@
+//! The SiDA coordinator — the paper's system contribution (Fig 5,
+//! Algorithm 1): a hash-building thread that predicts expert activation
+//! ahead of time, a bounded hash-table queue, and an inference thread
+//! that serves with routers replaced by hash tables and experts moved
+//! between host RAM and a budgeted device tier.
+
+pub mod batcher;
+pub mod hash_table;
+pub mod hash_thread;
+pub mod pipeline;
+pub mod scheduler;
+
+pub use batcher::{AdmitOutcome, Batcher};
+pub use scheduler::{replay_open_loop, OpenLoopReport};
+pub use hash_table::HashTable;
+pub use hash_thread::HashBuilder;
+pub use pipeline::{argmax, Pipeline, PipelineConfig, RequestResult, ServeOutcome};

@@ -1,0 +1,300 @@
+//! The SiDA two-thread serving pipeline (paper Fig 5 + Algorithm 1).
+//!
+//! Three OS threads realize the paper's design:
+//!
+//!   hash-building thread   runs the hash artifact on batch X_j, pushes
+//!                          H_j onto the bounded hash-table queue
+//!   prefetch stage         pops (X_i, H_i), loads the predicted experts
+//!                          into the device cache ahead of compute — the
+//!                          paper folds this into the inference thread's
+//!                          "dynamical loading right after the finish of
+//!                          inference on the previous batch" (pipeline
+//!                          parallelism); a dedicated stage realizes the
+//!                          same overlap explicitly
+//!   inference thread       forwards X_i with the hash table replacing
+//!                          every router (routers never execute)
+//!
+//! The inference thread "never idles except at the very beginning"
+//! (paper §3.1) because a hash build + prefetch is faster than a forward
+//! pass; the bounded queue provides the backpressure that keeps the
+//! pipeline stable.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::hash_table::HashTable;
+use crate::coordinator::hash_thread::HashBuilder;
+use crate::experts::{make_policy, ExpertCache, ExpertKey};
+use crate::memory::CostModel;
+use crate::metrics::ServeStats;
+use crate::model::{ExpertProvider, ForwardOptions, ModelRunner};
+use crate::runtime::ModelBundle;
+use crate::workload::Request;
+
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// experts consumed per token from the hash table (paper §4: top-1
+    /// for SST2, top-3 for MRPC/MultiRC)
+    pub k_used: usize,
+    /// simulated device budget in bytes for expert weights
+    pub budget_sim_bytes: usize,
+    /// eviction policy name (paper default: fifo)
+    pub policy: String,
+    /// sleep modeled transfer time on the critical path
+    pub real_sleep: bool,
+    /// run the prefetch stage (false = fetch on demand at compute time,
+    /// an ablation that shows what the look-ahead buys)
+    pub prefetch: bool,
+    /// hash-table queue depth
+    pub queue_depth: usize,
+    pub want_lm: bool,
+    pub want_cls: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            k_used: 1,
+            budget_sim_bytes: 8 << 30,
+            policy: "fifo".into(),
+            real_sleep: false,
+            prefetch: true,
+            queue_depth: 8,
+            want_lm: false,
+            want_cls: false,
+        }
+    }
+}
+
+/// Result of serving one trace through the pipeline.
+pub struct ServeOutcome {
+    pub stats: ServeStats,
+    /// per-request (id, latency, cls_argmax, lm_nll-sum, token count)
+    pub per_request: Vec<RequestResult>,
+}
+
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub id: u64,
+    pub latency_secs: f64,
+    pub cls_pred: Option<usize>,
+    pub lm_nll: Option<f64>,
+    pub lm_tokens: Option<f64>,
+    pub n_tokens: usize,
+}
+
+pub struct Pipeline {
+    pub bundle: Arc<ModelBundle>,
+    pub runner: Arc<ModelRunner>,
+    pub cache: Arc<Mutex<ExpertCache>>,
+    pub cfg: PipelineConfig,
+    pub profile: String,
+}
+
+impl Pipeline {
+    pub fn new(bundle: Arc<ModelBundle>, profile: &str, cfg: PipelineConfig) -> Result<Self> {
+        let runner = Arc::new(ModelRunner::new(bundle.clone(), profile)?);
+        let real_expert_bytes = bundle.weights.expert_bytes(bundle.topology.moe_blocks[0], 0)?;
+        let cost = CostModel::paper_scale(real_expert_bytes).with_real_sleep(cfg.real_sleep);
+        let cache = Arc::new(Mutex::new(ExpertCache::new(
+            cfg.budget_sim_bytes,
+            cost,
+            make_policy(&cfg.policy)?,
+        )));
+        Ok(Pipeline {
+            bundle,
+            runner,
+            cache,
+            cfg,
+            profile: profile.to_string(),
+        })
+    }
+
+    /// Serve a closed-loop trace; returns aggregate + per-request stats.
+    pub fn serve(&self, requests: &[Request]) -> Result<ServeOutcome> {
+        let builder = HashBuilder::new(&self.bundle, &self.profile)?;
+        let (tx, rx): (
+            SyncSender<(Request, HashTable)>,
+            Receiver<(Request, HashTable)>,
+        ) = sync_channel(self.cfg.queue_depth);
+
+        let reqs = requests.to_vec();
+        let t_start = Instant::now();
+
+        // ---- hash-building thread -------------------------------------
+        let hash_handle = std::thread::Builder::new()
+            .name("sida-hash".into())
+            .spawn(move || -> Result<f64> {
+                let mut total_build = 0.0;
+                for req in reqs {
+                    let table = builder.build(req.id, &req.ids)?;
+                    total_build += table.build_secs;
+                    if tx.send((req, table)).is_err() {
+                        break; // inference side hung up
+                    }
+                }
+                Ok(total_build)
+            })
+            .expect("spawn hash thread");
+
+        // ---- prefetch stage (optional) --------------------------------
+        // The prefetcher sits between the hash queue and the inference
+        // queue, warming the cache for batch i+1 while batch i computes.
+        let (ptx, prx): (
+            SyncSender<(Request, HashTable)>,
+            Receiver<(Request, HashTable)>,
+        ) = sync_channel(self.cfg.queue_depth);
+        let prefetch_handle = if self.cfg.prefetch {
+            let cache = self.cache.clone();
+            let bundle = self.bundle.clone();
+            let k_used = self.cfg.k_used;
+            let moe_blocks = self.bundle.topology.moe_blocks.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("sida-prefetch".into())
+                    .spawn(move || -> Result<()> {
+                        while let Ok((req, table)) = rx.recv() {
+                            let mask: Vec<f32> = req
+                                .ids
+                                .iter()
+                                .map(|&t| if t != 0 { 1.0 } else { 0.0 })
+                                .collect();
+                            for (layer, &block) in moe_blocks.iter().enumerate() {
+                                for expert in table.predicted_experts(layer, k_used, &mask) {
+                                    let key = ExpertKey::new(block, expert);
+                                    let real =
+                                        bundle.weights.expert_bytes(block, expert)?;
+                                    let engine = bundle.engine.clone();
+                                    let weights = bundle.weights.clone();
+                                    let mut guard = cache.lock().unwrap();
+                                    // non-blocking: prefetch misses do not
+                                    // stall the inference thread
+                                    let _ = guard.ensure(key, real, false, || {
+                                        crate::runtime::stage_expert_parts(
+                                            &engine, &weights, block, expert,
+                                        )
+                                    })?;
+                                }
+                            }
+                            if ptx.send((req, table)).is_err() {
+                                break;
+                            }
+                        }
+                        Ok(())
+                    })
+                    .expect("spawn prefetch thread"),
+            )
+        } else {
+            // pass-through
+            let rx_moved = rx;
+            Some(
+                std::thread::Builder::new()
+                    .name("sida-passthrough".into())
+                    .spawn(move || -> Result<()> {
+                        while let Ok(item) = rx_moved.recv() {
+                            if ptx.send(item).is_err() {
+                                break;
+                            }
+                        }
+                        Ok(())
+                    })
+                    .expect("spawn passthrough thread"),
+            )
+        };
+
+        // ---- inference thread (this thread) ----------------------------
+        let mut stats = ServeStats::default();
+        let mut per_request = Vec::new();
+        let opts = ForwardOptions {
+            invoke_all: false,
+            fixed_bucket: false,
+            want_lm: self.cfg.want_lm,
+            want_cls: self.cfg.want_cls,
+        };
+        while let Ok((req, table)) = prx.recv() {
+            let t0 = Instant::now();
+            let mut provider = ExpertProvider::Shared {
+                cache: &self.cache,
+                blocking: true,
+            };
+            let out = self.runner.forward(
+                &req.ids,
+                Some((&table, self.cfg.k_used)),
+                &mut provider,
+                opts,
+            )?;
+            let latency = t0.elapsed().as_secs_f64();
+            stats.latency.record(latency);
+            stats.phases.add(&out.times);
+            stats.requests += 1;
+            stats.hash_build_secs += table.build_secs;
+
+            let cls_pred = out.cls_logits.as_ref().map(|v| argmax(v));
+            let (lm_nll, lm_tokens) = match (&out.lm_logits, self.cfg.want_lm) {
+                (Some(logits), true) => {
+                    let (nll, cnt) = self.runner.lm_nll(logits, &req.ids)?;
+                    (Some(nll), Some(cnt))
+                }
+                _ => (None, None),
+            };
+            per_request.push(RequestResult {
+                id: req.id,
+                latency_secs: latency,
+                cls_pred,
+                lm_nll,
+                lm_tokens,
+                n_tokens: req.n_tokens,
+            });
+        }
+        stats.wall_secs = t_start.elapsed().as_secs_f64();
+
+        if let Some(h) = prefetch_handle {
+            h.join().expect("prefetch thread panicked")?;
+        }
+        let _hash_secs = hash_handle.join().expect("hash thread panicked")?;
+
+        let cache = self.cache.lock().unwrap();
+        let cs = cache.stats();
+        stats.cache_hits = cs.hits;
+        stats.cache_misses = cs.misses;
+        stats.blocking_misses = cs.blocking_misses;
+        stats.evictions = cs.evictions;
+        stats.transferred_bytes = cs.transferred_sim_bytes;
+        stats.peak_device_bytes = cache.peak();
+        stats.budget_bytes = cache.budget();
+        Ok(ServeOutcome { stats, per_request })
+    }
+}
+
+pub fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+        assert_eq!(argmax(&[1.0, 1.0]), 0); // first wins ties
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = PipelineConfig::default();
+        assert_eq!(c.k_used, 1);
+        assert_eq!(c.policy, "fifo");
+        assert!(c.prefetch);
+    }
+}

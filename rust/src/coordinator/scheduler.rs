@@ -1,0 +1,112 @@
+//! Open-loop scheduling: replay a timed arrival trace against the SiDA
+//! pipeline and measure queueing delay on top of service latency.
+//!
+//! The closed-loop path (`Pipeline::serve`) measures capacity; this
+//! scheduler measures the latency a *load* produces: requests arrive by
+//! wall clock (Poisson or recorded timestamps), wait in the bounded
+//! admission queue (`Batcher`), and are served in arrival order.  The
+//! reported per-request latency = queueing + hash wait + inference —
+//! what a client of the TCP front-end would observe.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::pipeline::{Pipeline, RequestResult, ServeOutcome};
+use crate::metrics::ServeStats;
+use crate::model::{ExpertProvider, ForwardOptions};
+use crate::workload::Request;
+
+pub struct OpenLoopReport {
+    pub outcome: ServeOutcome,
+    /// time spent waiting in the admission queue, per request quantiles
+    pub mean_queueing_secs: f64,
+    pub rejected: u64,
+}
+
+/// Replay an arrival-stamped trace.  Requests whose `arrival` has not
+/// come yet are waited for; the admission queue is bounded at
+/// `queue_cap` and overflowing requests are rejected (counted).
+pub fn replay_open_loop(
+    pipeline: &Pipeline,
+    trace: &[Request],
+    queue_cap: usize,
+) -> Result<OpenLoopReport> {
+    let builder = crate::coordinator::hash_thread::HashBuilder::new(
+        &pipeline.bundle,
+        &pipeline.profile,
+    )?;
+    let mut batcher = Batcher::new(queue_cap);
+    let mut pending: Vec<Request> = trace.to_vec();
+    pending.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+
+    let opts = ForwardOptions {
+        want_cls: pipeline.cfg.want_cls,
+        want_lm: pipeline.cfg.want_lm,
+        ..Default::default()
+    };
+    let t_start = Instant::now();
+    let mut stats = ServeStats::default();
+    let mut per_request = Vec::new();
+    let mut queueing_total = 0.0;
+
+    while !pending.is_empty() || !batcher.is_empty() {
+        let now = t_start.elapsed().as_secs_f64();
+        batcher.admit_due(&mut pending, now);
+        let Some(req) = batcher.next() else {
+            // idle until the next arrival
+            if let Some(next) = pending.first() {
+                let wait = (next.arrival - now).max(0.0);
+                std::thread::sleep(std::time::Duration::from_secs_f64(wait.min(0.05)));
+            }
+            continue;
+        };
+        let dequeue_at = t_start.elapsed().as_secs_f64();
+        queueing_total += (dequeue_at - req.arrival).max(0.0);
+
+        // synchronous hash build + forward (the pipelined variant is
+        // Pipeline::serve; open-loop measures client-visible latency)
+        let table = builder.build(req.id, &req.ids)?;
+        let t0 = Instant::now();
+        let mut provider = ExpertProvider::Shared { cache: &pipeline.cache, blocking: true };
+        let out = pipeline.runner.forward(
+            &req.ids,
+            Some((&table, pipeline.cfg.k_used)),
+            &mut provider,
+            opts,
+        )?;
+        let service = t0.elapsed().as_secs_f64();
+        let latency = (dequeue_at - req.arrival).max(0.0) + table.build_secs + service;
+        stats.latency.record(latency);
+        stats.phases.add(&out.times);
+        stats.requests += 1;
+        stats.hash_build_secs += table.build_secs;
+        per_request.push(RequestResult {
+            id: req.id,
+            latency_secs: latency,
+            cls_pred: out.cls_logits.as_ref().map(|v| crate::coordinator::argmax(v)),
+            lm_nll: None,
+            lm_tokens: None,
+            n_tokens: req.n_tokens,
+        });
+    }
+    stats.wall_secs = t_start.elapsed().as_secs_f64();
+    {
+        let cache = pipeline.cache.lock().unwrap();
+        let cs = cache.stats();
+        stats.cache_hits = cs.hits;
+        stats.cache_misses = cs.misses;
+        stats.blocking_misses = cs.blocking_misses;
+        stats.evictions = cs.evictions;
+        stats.transferred_bytes = cs.transferred_sim_bytes;
+        stats.peak_device_bytes = cache.peak();
+        stats.budget_bytes = cache.budget();
+    }
+    let n = stats.requests.max(1) as f64;
+    Ok(OpenLoopReport {
+        outcome: ServeOutcome { stats, per_request },
+        mean_queueing_secs: queueing_total / n,
+        rejected: batcher.rejected,
+    })
+}

@@ -1,0 +1,240 @@
+//! Expert cache: residency of per-expert weights on the simulated GPU
+//! tier, with pluggable eviction and transfer-cost accounting.
+//!
+//! This is the mechanism behind the paper's inference-thread step (2)-c:
+//! "load activated experts to GPU and offload inactivated experts to
+//! RAM", with "a first-in-first-out scheme applied on experts if no
+//! memory budgets remain".  The cache stores the staged PJRT device
+//! buffers (4 parts per expert: w1, b1, w2, b2); the host copy always
+//! remains in the `WeightStore`, so eviction is free (drop the buffers).
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::experts::policy::EvictionPolicy;
+use crate::experts::ExpertKey;
+use crate::memory::{CostModel, DevicePool, ReserveOutcome};
+use crate::runtime::DeviceBuffer;
+
+/// The four staged parts of one resident expert (w1, b1, w2, b2) in
+/// artifact argument order.
+pub struct ResidentExpert {
+    pub parts: [DeviceBuffer; 4],
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// simulated bytes moved host->device
+    pub transferred_sim_bytes: u64,
+    /// modeled seconds spent on transfers (== wall time in real_sleep mode)
+    pub modeled_transfer_secs: f64,
+    /// transfers that happened on the critical path (inference thread
+    /// blocked on them) as opposed to prefetched ahead of time
+    pub blocking_misses: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+impl fmt::Display for CacheStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "hits={} misses={} (blocking {}) evictions={} transfer={:.1}MB modeled={:.3}s",
+            self.hits,
+            self.misses,
+            self.blocking_misses,
+            self.evictions,
+            self.transferred_sim_bytes as f64 / 1e6,
+            self.modeled_transfer_secs
+        )
+    }
+}
+
+pub struct ExpertCache {
+    pool: DevicePool<ExpertKey>,
+    cost: CostModel,
+    policy: Box<dyn EvictionPolicy>,
+    resident: HashMap<ExpertKey, Arc<ResidentExpert>>,
+    pinned: HashSet<ExpertKey>,
+    stats: CacheStats,
+}
+
+impl ExpertCache {
+    /// `budget_sim_bytes` is the simulated device budget (paper scale).
+    pub fn new(budget_sim_bytes: usize, cost: CostModel, policy: Box<dyn EvictionPolicy>) -> Self {
+        ExpertCache {
+            pool: DevicePool::new(budget_sim_bytes),
+            cost,
+            policy,
+            resident: HashMap::new(),
+            pinned: HashSet::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+        self.pool.reset_peak();
+    }
+
+    pub fn budget(&self) -> usize {
+        self.pool.budget()
+    }
+
+    pub fn used(&self) -> usize {
+        self.pool.used()
+    }
+
+    pub fn peak(&self) -> usize {
+        self.pool.peak()
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn contains(&self, key: &ExpertKey) -> bool {
+        self.resident.contains_key(key)
+    }
+
+    pub fn get(&self, key: &ExpertKey) -> Option<Arc<ResidentExpert>> {
+        self.resident.get(key).cloned()
+    }
+
+    /// Pin an expert against eviction (it is about to be used by the
+    /// current layer's compute).
+    pub fn pin(&mut self, key: ExpertKey) {
+        self.pinned.insert(key);
+    }
+
+    pub fn unpin(&mut self, key: &ExpertKey) {
+        self.pinned.remove(key);
+    }
+
+    pub fn unpin_all(&mut self) {
+        self.pinned.clear();
+    }
+
+    /// Ensure `key` is resident; on a miss, evict per policy until the
+    /// expert fits, call `fetch` to stage the buffers, and charge the
+    /// modeled transfer cost.  `blocking` marks misses that stall the
+    /// inference thread (vs prefetch from the hash-building side).
+    ///
+    /// Returns (resident expert, hit?, modeled transfer seconds).
+    pub fn ensure<F>(
+        &mut self,
+        key: ExpertKey,
+        real_bytes: usize,
+        blocking: bool,
+        fetch: F,
+    ) -> Result<(Arc<ResidentExpert>, bool, f64)>
+    where
+        F: FnOnce() -> Result<[DeviceBuffer; 4]>,
+    {
+        if let Some(r) = self.resident.get(&key) {
+            self.stats.hits += 1;
+            self.policy.on_access(key);
+            return Ok((r.clone(), true, 0.0));
+        }
+        let sim_bytes = self.cost.sim_bytes(real_bytes);
+        if sim_bytes > self.pool.budget() {
+            bail!(
+                "expert {key:?} ({sim_bytes} sim bytes) larger than device budget {}",
+                self.pool.budget()
+            );
+        }
+        while !self.pool.fits(sim_bytes) {
+            match self.policy.victim(&self.pinned) {
+                Some(victim) => {
+                    self.pool.release(&victim);
+                    self.resident.remove(&victim);
+                    self.stats.evictions += 1;
+                }
+                None => bail!(
+                    "device budget exhausted and every resident expert is pinned \
+                     (budget {} used {} need {})",
+                    self.pool.budget(),
+                    self.pool.used(),
+                    sim_bytes
+                ),
+            }
+        }
+        let parts = fetch()?;
+        match self.pool.reserve(key, sim_bytes) {
+            ReserveOutcome::Ok => {}
+            other => bail!("pool reserve failed unexpectedly: {other:?}"),
+        }
+        self.policy.on_insert(key);
+        let arc = Arc::new(ResidentExpert { parts });
+        self.resident.insert(key, arc.clone());
+        self.stats.misses += 1;
+        if blocking {
+            self.stats.blocking_misses += 1;
+        }
+        self.stats.transferred_sim_bytes += sim_bytes as u64;
+        let secs = self.cost.charge_transfer(sim_bytes);
+        self.stats.modeled_transfer_secs += secs;
+        Ok((arc, false, secs))
+    }
+
+    /// Drop an expert from the device tier explicitly.
+    pub fn invalidate(&mut self, key: &ExpertKey) {
+        if self.resident.remove(key).is_some() {
+            self.pool.release(key);
+            self.policy.on_evict(*key);
+        }
+    }
+
+    /// Drop everything (model switch / reset between bench phases).
+    pub fn clear(&mut self) {
+        let keys: Vec<ExpertKey> = self.resident.keys().copied().collect();
+        for k in keys {
+            self.invalidate(&k);
+        }
+        self.pinned.clear();
+    }
+
+    /// Internal-consistency check used by the property tests: pool and
+    /// resident map must agree exactly, and usage must be within budget.
+    pub fn check_invariants(&self) -> Result<()> {
+        if self.pool.used() > self.pool.budget() {
+            bail!("used {} exceeds budget {}", self.pool.used(), self.pool.budget());
+        }
+        if self.pool.len() != self.resident.len() {
+            bail!(
+                "pool regions {} != resident entries {}",
+                self.pool.len(),
+                self.resident.len()
+            );
+        }
+        for key in self.resident.keys() {
+            if self.pool.bytes_of(key).is_none() {
+                bail!("resident {key:?} missing from pool");
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,23 @@
+//! Expert residency management: keys, eviction policies, device cache.
+
+pub mod cache;
+pub mod policy;
+pub mod prefetch;
+
+pub use cache::{CacheStats, ExpertCache, ResidentExpert};
+pub use prefetch::{plan_prefetch, PlannedFetch};
+pub use policy::{make_policy, EvictionPolicy};
+
+/// Identity of one expert: (transformer block index, expert index).
+/// The unit of offloading in SiDA.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ExpertKey {
+    pub block: usize,
+    pub expert: usize,
+}
+
+impl ExpertKey {
+    pub fn new(block: usize, expert: usize) -> Self {
+        ExpertKey { block, expert }
+    }
+}

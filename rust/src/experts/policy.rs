@@ -1,0 +1,297 @@
+//! Eviction policies for the expert cache.
+//!
+//! The paper uses FIFO (§4.3 footnote: "For fair comparison with
+//! baselines, we use FIFO, although other strategies could also be
+//! effective") — LRU / LFU / Clock are provided as the ablation that
+//! footnote invites (bench `ablation_eviction`).
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use crate::experts::ExpertKey;
+
+pub trait EvictionPolicy: Send {
+    fn name(&self) -> &'static str;
+    /// A new key became resident.
+    fn on_insert(&mut self, key: ExpertKey);
+    /// A resident key was accessed (cache hit).
+    fn on_access(&mut self, key: ExpertKey);
+    /// Choose a victim among resident keys, skipping pinned ones.
+    fn victim(&mut self, pinned: &HashSet<ExpertKey>) -> Option<ExpertKey>;
+    /// A key was evicted (by us or externally invalidated).
+    fn on_evict(&mut self, key: ExpertKey);
+}
+
+pub fn make_policy(name: &str) -> anyhow::Result<Box<dyn EvictionPolicy>> {
+    match name {
+        "fifo" => Ok(Box::new(FifoPolicy::default())),
+        "lru" => Ok(Box::new(LruPolicy::default())),
+        "lfu" => Ok(Box::new(LfuPolicy::default())),
+        "clock" => Ok(Box::new(ClockPolicy::default())),
+        other => anyhow::bail!("unknown eviction policy '{other}' (fifo|lru|lfu|clock)"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// First-in-first-out (the paper's choice).
+#[derive(Default)]
+pub struct FifoPolicy {
+    queue: VecDeque<ExpertKey>,
+}
+
+impl EvictionPolicy for FifoPolicy {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn on_insert(&mut self, key: ExpertKey) {
+        self.queue.push_back(key);
+    }
+
+    fn on_access(&mut self, _key: ExpertKey) {}
+
+    fn victim(&mut self, pinned: &HashSet<ExpertKey>) -> Option<ExpertKey> {
+        // oldest unpinned entry; pinned entries keep their position
+        let pos = self.queue.iter().position(|k| !pinned.contains(k))?;
+        self.queue.remove(pos)
+    }
+
+    fn on_evict(&mut self, key: ExpertKey) {
+        if let Some(pos) = self.queue.iter().position(|k| *k == key) {
+            self.queue.remove(pos);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Least-recently-used.
+#[derive(Default)]
+pub struct LruPolicy {
+    /// access order, most recent at the back
+    order: VecDeque<ExpertKey>,
+}
+
+impl LruPolicy {
+    fn touch(&mut self, key: ExpertKey) {
+        if let Some(pos) = self.order.iter().position(|k| *k == key) {
+            self.order.remove(pos);
+        }
+        self.order.push_back(key);
+    }
+}
+
+impl EvictionPolicy for LruPolicy {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn on_insert(&mut self, key: ExpertKey) {
+        self.touch(key);
+    }
+
+    fn on_access(&mut self, key: ExpertKey) {
+        self.touch(key);
+    }
+
+    fn victim(&mut self, pinned: &HashSet<ExpertKey>) -> Option<ExpertKey> {
+        let pos = self.order.iter().position(|k| !pinned.contains(k))?;
+        self.order.remove(pos)
+    }
+
+    fn on_evict(&mut self, key: ExpertKey) {
+        if let Some(pos) = self.order.iter().position(|k| *k == key) {
+            self.order.remove(pos);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Least-frequently-used with FIFO tiebreak.
+#[derive(Default)]
+pub struct LfuPolicy {
+    freq: HashMap<ExpertKey, u64>,
+    arrival: VecDeque<ExpertKey>,
+}
+
+impl EvictionPolicy for LfuPolicy {
+    fn name(&self) -> &'static str {
+        "lfu"
+    }
+
+    fn on_insert(&mut self, key: ExpertKey) {
+        self.freq.insert(key, 1);
+        self.arrival.push_back(key);
+    }
+
+    fn on_access(&mut self, key: ExpertKey) {
+        *self.freq.entry(key).or_insert(0) += 1;
+    }
+
+    fn victim(&mut self, pinned: &HashSet<ExpertKey>) -> Option<ExpertKey> {
+        let candidate = self
+            .arrival
+            .iter()
+            .filter(|k| !pinned.contains(k))
+            .min_by_key(|k| self.freq.get(k).copied().unwrap_or(0))
+            .copied()?;
+        self.on_evict(candidate);
+        Some(candidate)
+    }
+
+    fn on_evict(&mut self, key: ExpertKey) {
+        self.freq.remove(&key);
+        if let Some(pos) = self.arrival.iter().position(|k| *k == key) {
+            self.arrival.remove(pos);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Clock (second-chance FIFO).
+#[derive(Default)]
+pub struct ClockPolicy {
+    ring: Vec<ExpertKey>,
+    referenced: HashMap<ExpertKey, bool>,
+    hand: usize,
+}
+
+impl EvictionPolicy for ClockPolicy {
+    fn name(&self) -> &'static str {
+        "clock"
+    }
+
+    fn on_insert(&mut self, key: ExpertKey) {
+        self.ring.push(key);
+        self.referenced.insert(key, false);
+    }
+
+    fn on_access(&mut self, key: ExpertKey) {
+        if let Some(r) = self.referenced.get_mut(&key) {
+            *r = true;
+        }
+    }
+
+    fn victim(&mut self, pinned: &HashSet<ExpertKey>) -> Option<ExpertKey> {
+        if self.ring.iter().all(|k| pinned.contains(k)) {
+            return None;
+        }
+        // at most two sweeps: one clearing reference bits, one taking
+        let max_steps = self.ring.len() * 2 + 1;
+        for _ in 0..max_steps {
+            if self.ring.is_empty() {
+                return None;
+            }
+            self.hand %= self.ring.len();
+            let key = self.ring[self.hand];
+            if pinned.contains(&key) {
+                self.hand += 1;
+                continue;
+            }
+            let referenced = self.referenced.get(&key).copied().unwrap_or(false);
+            if referenced {
+                self.referenced.insert(key, false);
+                self.hand += 1;
+            } else {
+                self.ring.remove(self.hand);
+                self.referenced.remove(&key);
+                return Some(key);
+            }
+        }
+        None
+    }
+
+    fn on_evict(&mut self, key: ExpertKey) {
+        if let Some(pos) = self.ring.iter().position(|k| *k == key) {
+            if pos < self.hand {
+                self.hand -= 1;
+            }
+            self.ring.remove(pos);
+        }
+        self.referenced.remove(&key);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(e: usize) -> ExpertKey {
+        ExpertKey { block: 1, expert: e }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut p = FifoPolicy::default();
+        p.on_insert(k(0));
+        p.on_insert(k(1));
+        p.on_insert(k(2));
+        p.on_access(k(0)); // access must not change FIFO order
+        let none = HashSet::new();
+        assert_eq!(p.victim(&none), Some(k(0)));
+        assert_eq!(p.victim(&none), Some(k(1)));
+    }
+
+    #[test]
+    fn fifo_skips_pinned() {
+        let mut p = FifoPolicy::default();
+        p.on_insert(k(0));
+        p.on_insert(k(1));
+        let pinned: HashSet<_> = [k(0)].into_iter().collect();
+        assert_eq!(p.victim(&pinned), Some(k(1)));
+        assert_eq!(p.victim(&pinned), None);
+    }
+
+    #[test]
+    fn lru_prefers_stale() {
+        let mut p = LruPolicy::default();
+        p.on_insert(k(0));
+        p.on_insert(k(1));
+        p.on_insert(k(2));
+        p.on_access(k(0));
+        let none = HashSet::new();
+        assert_eq!(p.victim(&none), Some(k(1)));
+    }
+
+    #[test]
+    fn lfu_prefers_cold() {
+        let mut p = LfuPolicy::default();
+        p.on_insert(k(0));
+        p.on_insert(k(1));
+        p.on_access(k(0));
+        p.on_access(k(0));
+        p.on_access(k(1));
+        let none = HashSet::new();
+        assert_eq!(p.victim(&none), Some(k(1)));
+    }
+
+    #[test]
+    fn clock_second_chance() {
+        let mut p = ClockPolicy::default();
+        p.on_insert(k(0));
+        p.on_insert(k(1));
+        p.on_access(k(0)); // reference bit set -> second chance
+        let none = HashSet::new();
+        assert_eq!(p.victim(&none), Some(k(1)));
+        // k0's bit was left set; next victim clears then takes it
+        assert_eq!(p.victim(&none), Some(k(0)));
+    }
+
+    #[test]
+    fn clock_all_pinned_returns_none() {
+        let mut p = ClockPolicy::default();
+        p.on_insert(k(0));
+        let pinned: HashSet<_> = [k(0)].into_iter().collect();
+        assert_eq!(p.victim(&pinned), None);
+    }
+
+    #[test]
+    fn make_policy_names() {
+        for name in ["fifo", "lru", "lfu", "clock"] {
+            assert_eq!(make_policy(name).unwrap().name(), name);
+        }
+        assert!(make_policy("arc").is_err());
+    }
+}

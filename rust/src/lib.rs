@@ -1,0 +1,49 @@
+//! # SiDA-MoE — Sparsity-Inspired Data-Aware serving for large MoE models
+//!
+//! Production-quality reproduction of *SiDA-MoE* (Du et al., MLSys 2024)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas kernels — expert FFN,
+//!   router, SparseMax attention, fused LSTM cell — verified against
+//!   pure-jnp oracles and lowered (interpret mode) into the AOT HLO.
+//! * **L2** (`python/compile/`): the Switch-style model and the SiDA
+//!   hash function in JAX, trained at build time, exported as HLO text +
+//!   a flat weight blob.  Python never runs at serving time.
+//! * **L3** (this crate): the serving system — PJRT runtime, simulated
+//!   GPU memory tier, expert cache with pluggable eviction, the
+//!   hash-building/inference thread pipeline, baselines, workloads,
+//!   metrics, config, and a TCP front-end.
+//!
+//! See DESIGN.md for the full system inventory and the experiment index
+//! mapping every table/figure of the paper to a bench target.
+
+pub mod baselines;
+pub mod bench_support;
+pub mod config;
+pub mod coordinator;
+pub mod experts;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod workload;
+
+/// Default artifacts root relative to the repo checkout.
+pub fn default_artifacts_root() -> std::path::PathBuf {
+    // honor SIDA_ARTIFACTS, else look for ./artifacts upward from cwd
+    if let Ok(p) = std::env::var("SIDA_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,327 @@
+//! `sida-moe` — CLI entrypoint for the SiDA-MoE serving system.
+//!
+//! Subcommands:
+//!   serve      run a serving trace (SiDA or a baseline) and print a report
+//!   server     start the TCP line-protocol front-end
+//!   inspect    show a model's topology + memory breakdown (Tab 2 row)
+//!   hash       build + print a hash table for one generated sentence
+//!
+//! Examples:
+//!   sida-moe serve --model switch128 --dataset sst2 --method sida
+//!   sida-moe serve --model switch64 --dataset mrpc --method standard
+//!   sida-moe server --model switch8 --addr 127.0.0.1:7700
+//!   sida-moe inspect --model switch256
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use sida_moe::baselines::{run_baseline, BaselineConfig, Method};
+use sida_moe::config::ServeConfig;
+use sida_moe::coordinator::{HashBuilder, Pipeline, PipelineConfig};
+use sida_moe::metrics::report::{fmt_bytes, fmt_secs};
+use sida_moe::metrics::Table;
+use sida_moe::runtime::ModelBundle;
+use sida_moe::server::{run_server, ServerState};
+use sida_moe::util::cli::Cli;
+use sida_moe::workload::{ArrivalProcess, Profile, TraceGenerator};
+
+fn main() {
+    sida_moe::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let sub = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let tail = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    let result = match sub {
+        "serve" => cmd_serve(tail),
+        "server" => cmd_server(tail),
+        "inspect" => cmd_inspect(tail),
+        "hash" => cmd_hash(tail),
+        "validate" => cmd_validate(tail),
+        _ => {
+            eprintln!(
+                "sida-moe — SiDA-MoE serving system (MLSys 2024 reproduction)\n\n\
+                 subcommands:\n  serve    run a serving trace and print a report\n  \
+                 server   start the TCP front-end\n  inspect  model topology + memory breakdown\n  \
+                 hash     build a hash table for one sentence\n  \
+                 validate check all artifacts load and shapes agree\n\n\
+                 run `sida-moe <subcommand> --help` for options"
+            );
+            std::process::exit(if sub == "help" { 0 } else { 2 });
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn serve_cli() -> Cli {
+    Cli::new("sida-moe serve", "run one serving trace")
+        .opt("config", "JSON config file", "")
+        .opt("model", "model config (switch8|switch64|switch128|switch256)", "switch8")
+        .opt("dataset", "dataset profile (sst2|mrpc|multirc)", "sst2")
+        .opt("method", "sida|standard|deepspeed|tutel|layerwise|reactive", "sida")
+        .opt("budget-gb", "simulated device budget (GB)", "8")
+        .opt("policy", "eviction policy (fifo|lru|lfu|clock)", "fifo")
+        .opt("k-used", "hash experts per token (0 = paper default)", "0")
+        .opt("requests", "number of requests", "32")
+        .opt("seed", "workload seed", "0")
+        .opt("artifacts", "artifacts root", "")
+        .flag("real-sleep", "sleep modeled transfer time on the critical path")
+        .flag("no-prefetch", "disable the SiDA prefetch stage")
+        .flag("lm", "also compute LM NLL per request")
+}
+
+fn load_serve_config(tail: &[String]) -> Result<ServeConfig> {
+    let args = serve_cli().parse_tail(tail);
+    let mut cfg = match args.get("config") {
+        Some("") | None => ServeConfig::default(),
+        Some(path) => ServeConfig::load(std::path::Path::new(path))?,
+    };
+    cfg.apply_args(&args);
+    if args.get("k-used") == Some("0") {
+        cfg.k_used = ServeConfig::paper_k_for(&cfg.dataset);
+    }
+    if cfg.artifacts.is_empty() || cfg.artifacts == "artifacts" {
+        cfg.artifacts = sida_moe::default_artifacts_root().display().to_string();
+    }
+    Ok(cfg)
+}
+
+fn cmd_serve(tail: &[String]) -> Result<()> {
+    let cfg = load_serve_config(tail)?;
+    let bundle = Arc::new(ModelBundle::load_named(
+        std::path::Path::new(&cfg.artifacts),
+        &cfg.model,
+    )?);
+    let profile = Profile::named(&cfg.dataset)?;
+    let mut gen = TraceGenerator::new(profile, bundle.topology.vocab, cfg.seed);
+    let requests = gen.trace(cfg.n_requests, ArrivalProcess::ClosedLoop);
+    let method = Method::parse(&cfg.method)?;
+
+    println!(
+        "serving {} x {} with {} ({} requests, budget {})",
+        cfg.model,
+        cfg.dataset,
+        cfg.method,
+        cfg.n_requests,
+        fmt_bytes(cfg.budget_bytes())
+    );
+    let outcome = match method {
+        Method::Sida => {
+            let pcfg = PipelineConfig {
+                k_used: cfg.k_used,
+                budget_sim_bytes: cfg.budget_bytes(),
+                policy: cfg.policy.clone(),
+                real_sleep: cfg.real_sleep,
+                prefetch: cfg.prefetch,
+                queue_depth: 8,
+                want_lm: cfg.want_lm,
+                want_cls: cfg.want_cls,
+            };
+            Pipeline::new(bundle, &cfg.dataset, pcfg)?.serve(&requests)?
+        }
+        m => {
+            let bcfg = BaselineConfig {
+                budget_sim_bytes: cfg.budget_bytes(),
+                real_sleep: cfg.real_sleep,
+                want_lm: cfg.want_lm,
+                want_cls: cfg.want_cls,
+            };
+            run_baseline(bundle, &cfg.dataset, m, &requests, &bcfg)?
+        }
+    };
+
+    let mut stats = outcome.stats;
+    let mut t = Table::new(
+        "serve report",
+        &["metric", "value"],
+    );
+    t.row(vec!["requests".into(), stats.requests.to_string()]);
+    t.row(vec!["wall".into(), fmt_secs(stats.wall_secs)]);
+    t.row(vec![
+        "throughput".into(),
+        format!("{:.2} req/s", stats.throughput()),
+    ]);
+    t.row(vec!["latency p50".into(), fmt_secs(stats.latency.p50())]);
+    t.row(vec!["latency p95".into(), fmt_secs(stats.latency.p95())]);
+    t.row(vec!["latency p99".into(), fmt_secs(stats.latency.p99())]);
+    t.row(vec![
+        "expert invocations".into(),
+        stats.phases.expert_invocations.to_string(),
+    ]);
+    t.row(vec![
+        "moe overhead".into(),
+        format!(
+            "{:.1}%",
+            100.0 * stats.phases.moe_overhead() / stats.phases.total().max(1e-12)
+        ),
+    ]);
+    t.row(vec!["peak device".into(), fmt_bytes(stats.peak_device_bytes)]);
+    t.row(vec![
+        "cache hit rate".into(),
+        format!(
+            "{:.1}%",
+            100.0 * stats.cache_hits as f64
+                / (stats.cache_hits + stats.cache_misses).max(1) as f64
+        ),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_server(tail: &[String]) -> Result<()> {
+    let cli = Cli::new("sida-moe server", "TCP line-protocol front-end")
+        .opt("model", "model config", "switch8")
+        .opt("dataset", "dataset profile (fixes seq len)", "sst2")
+        .opt("budget-gb", "simulated device budget (GB)", "8")
+        .opt("addr", "listen address", "127.0.0.1:7700")
+        .opt("artifacts", "artifacts root", "");
+    let args = cli.parse_tail(tail);
+    let root = match args.get("artifacts") {
+        Some("") | None => sida_moe::default_artifacts_root(),
+        Some(p) => p.into(),
+    };
+    let bundle = Arc::new(ModelBundle::load_named(&root, &args.get_or("model", "switch8"))?);
+    let k = ServeConfig::paper_k_for(args.get("dataset").unwrap_or("sst2"));
+    let state = Arc::new(ServerState::new(
+        bundle,
+        args.get("dataset").unwrap_or("sst2"),
+        (args.get_f64("budget-gb", 8.0) * 1e9) as usize,
+        k,
+    )?);
+    run_server(state, args.get("addr").unwrap_or("127.0.0.1:7700"))
+}
+
+fn cmd_inspect(tail: &[String]) -> Result<()> {
+    let cli = Cli::new("sida-moe inspect", "model topology + memory breakdown")
+        .opt("model", "model config", "switch8")
+        .opt("artifacts", "artifacts root", "");
+    let args = cli.parse_tail(tail);
+    let root = match args.get("artifacts") {
+        Some("") | None => sida_moe::default_artifacts_root(),
+        Some(p) => p.into(),
+    };
+    let bundle = ModelBundle::load_named(&root, &args.get_or("model", "switch8"))?;
+    let topo = &bundle.topology;
+    println!("model {}", topo.name);
+    println!("  vocab={} d_model={} d_ff={} heads={}", topo.vocab, topo.d_model, topo.d_ff, topo.n_heads);
+    println!("  blocks={} moe_blocks={:?} experts/layer={}", topo.n_blocks, topo.moe_blocks, topo.num_experts);
+    println!("  hash: hidden={} lstm_layers={} top_k={}", topo.hash.hidden, topo.hash.n_lstm_layers, topo.hash.top_k);
+    let moe = topo.moe_param_bytes;
+    let total = topo.total_param_bytes;
+    println!(
+        "  params: total {} | MoE {} ({:.2}%)",
+        fmt_bytes(total),
+        fmt_bytes(moe),
+        100.0 * moe as f64 / total as f64
+    );
+    println!("  profiles: {:?}", topo.profiles);
+    println!("  expert buckets: {:?}", topo.buckets);
+    println!("  PJRT platform: {}", bundle.engine.platform());
+    Ok(())
+}
+
+fn cmd_hash(tail: &[String]) -> Result<()> {
+    let cli = Cli::new("sida-moe hash", "build a hash table for one sentence")
+        .opt("model", "model config", "switch8")
+        .opt("dataset", "dataset profile", "sst2")
+        .opt("seed", "sentence seed", "0")
+        .opt("artifacts", "artifacts root", "");
+    let args = cli.parse_tail(tail);
+    let root = match args.get("artifacts") {
+        Some("") | None => sida_moe::default_artifacts_root(),
+        Some(p) => p.into(),
+    };
+    let bundle = Arc::new(ModelBundle::load_named(&root, &args.get_or("model", "switch8"))?);
+    let dataset = args.get_or("dataset", "sst2");
+    let profile = Profile::named(&dataset)?;
+    let mut gen = TraceGenerator::new(profile, bundle.topology.vocab, args.get_u64("seed", 0));
+    let (ids, n_tokens, topic) = gen.sentence();
+    let builder = HashBuilder::new(&bundle, &dataset)?;
+    let table = builder.build(0, &ids)?;
+    println!(
+        "sentence: {n_tokens} tokens, topic {topic}; hash built in {:.3}ms",
+        table.build_secs * 1e3
+    );
+    let mask: Vec<f32> = ids.iter().map(|&t| if t != 0 { 1.0 } else { 0.0 }).collect();
+    for layer in 0..table.m {
+        let active = table.predicted_experts(layer, 1, &mask);
+        println!(
+            "  MoE layer {layer}: {} / {} experts predicted active (idle {:.0}%) -> {:?}",
+            active.len(),
+            bundle.topology.num_experts,
+            100.0 * table.idle_ratio(layer, bundle.topology.num_experts, &mask),
+            &active[..active.len().min(16)]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_validate(tail: &[String]) -> Result<()> {
+    let cli = Cli::new("sida-moe validate", "load every artifact, cross-check shapes")
+        .opt("model", "model config or 'all'", "all")
+        .opt("artifacts", "artifacts root", "");
+    let args = cli.parse_tail(tail);
+    let root = match args.get("artifacts") {
+        Some("") | None => sida_moe::default_artifacts_root(),
+        Some(p) => p.into(),
+    };
+    let models: Vec<String> = match args.get("model") {
+        Some("all") | None => ["switch8", "switch64", "switch128", "switch256"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        Some(m) => vec![m.to_string()],
+    };
+    for name in models {
+        let dir = root.join(&name);
+        if !dir.join("model.json").is_file() {
+            println!("{name}: MISSING (run `make artifacts`)");
+            continue;
+        }
+        let bundle = ModelBundle::load_named(&root, &name)?;
+        let topo = &bundle.topology;
+        // compile every entry
+        let mut entries: Vec<String> = Vec::new();
+        for (_, &l) in &topo.profiles {
+            for e in [
+                "embed", "attn", "dense_ffn", "moe_ln", "router", "moe_combine",
+                "lm_head", "cls_head", "lm_nll", "hash",
+            ] {
+                entries.push(format!("{e}_L{l}"));
+            }
+        }
+        for &b in &topo.buckets {
+            entries.push(format!("expert_T{b}"));
+        }
+        bundle.engine.preload(&entries)?;
+        // weights: every expert addressable with consistent bytes
+        for &blk in &topo.moe_blocks {
+            for e in 0..topo.num_experts {
+                let bytes = bundle.weights.expert_bytes(blk, e)?;
+                anyhow::ensure!(
+                    bytes == topo.expert_param_bytes,
+                    "{name}: expert ({blk},{e}) bytes {bytes} != {}",
+                    topo.expert_param_bytes
+                );
+            }
+        }
+        // hash weights match the topology's hidden size
+        let h = topo.hash.hidden;
+        let m = bundle.weights.meta("hash.lstm.0.wx")?;
+        anyhow::ensure!(
+            m.shape == vec![h, 4 * h],
+            "{name}: hash lstm shape {:?} != [{h}, {}]",
+            m.shape,
+            4 * h
+        );
+        println!(
+            "{name}: OK — {} entries compiled, {} experts x {} layers verified",
+            entries.len(),
+            topo.num_experts,
+            topo.num_moe_layers()
+        );
+    }
+    Ok(())
+}

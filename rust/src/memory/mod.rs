@@ -1,0 +1,16 @@
+//! Simulated GPU-memory tier: byte-budget pool + transfer cost model.
+//!
+//! Compute in this repro runs for real on the PJRT CPU client; *memory
+//! placement* is what we simulate (DESIGN.md §2, substitution table).
+//! The pool enforces a device-byte budget at paper scale, and the cost
+//! model charges modeled PCIe time for host->device expert movement —
+//! exactly the cost SiDA's hash-prefetching removes from the critical
+//! path.
+
+pub mod cost;
+pub mod hierarchy;
+pub mod pool;
+
+pub use cost::CostModel;
+pub use hierarchy::{HierarchyStats, Tier, TierCosts, TieredStore};
+pub use pool::{DevicePool, ReserveOutcome};

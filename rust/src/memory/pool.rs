@@ -1,0 +1,153 @@
+//! Device-memory pool: byte-budget accounting for the simulated GPU tier.
+//!
+//! Tracks which named regions (experts, dense weights, activations) are
+//! resident and enforces the budget.  Pure accounting — the actual
+//! staged PJRT buffers live in the expert cache; this type is the
+//! invariant holder (`used <= budget`, reservation/release consistency)
+//! and is what the property tests hammer.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReserveOutcome {
+    /// fitted within budget
+    Ok,
+    /// would exceed budget; nothing changed
+    WouldExceed,
+    /// already resident; refreshed only
+    AlreadyResident,
+}
+
+#[derive(Debug)]
+pub struct DevicePool<K: Eq + Hash + Clone> {
+    budget: usize,
+    used: usize,
+    regions: HashMap<K, usize>,
+    /// high-water mark of `used` (peak residency, Fig 8)
+    peak: usize,
+}
+
+impl<K: Eq + Hash + Clone> DevicePool<K> {
+    pub fn new(budget: usize) -> Self {
+        DevicePool { budget, used: 0, regions: HashMap::new(), peak: 0 }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    pub fn free(&self) -> usize {
+        self.budget.saturating_sub(self.used)
+    }
+
+    pub fn contains(&self, key: &K) -> bool {
+        self.regions.contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.regions.is_empty()
+    }
+
+    pub fn bytes_of(&self, key: &K) -> Option<usize> {
+        self.regions.get(key).copied()
+    }
+
+    /// Reserve `bytes` for `key`.  Fails (without side effects) if the
+    /// budget would be exceeded; callers evict and retry.
+    pub fn reserve(&mut self, key: K, bytes: usize) -> ReserveOutcome {
+        if self.regions.contains_key(&key) {
+            return ReserveOutcome::AlreadyResident;
+        }
+        if self.used + bytes > self.budget {
+            return ReserveOutcome::WouldExceed;
+        }
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        self.regions.insert(key, bytes);
+        ReserveOutcome::Ok
+    }
+
+    /// Release a region; returns its size (0 if it was not resident).
+    pub fn release(&mut self, key: &K) -> usize {
+        match self.regions.remove(key) {
+            Some(bytes) => {
+                debug_assert!(self.used >= bytes);
+                self.used -= bytes;
+                bytes
+            }
+            None => 0,
+        }
+    }
+
+    /// Would `bytes` more fit right now?
+    pub fn fits(&self, bytes: usize) -> bool {
+        self.used + bytes <= self.budget
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &K> {
+        self.regions.keys()
+    }
+
+    /// Reset peak tracking (per-benchmark-phase measurement).
+    pub fn reset_peak(&mut self) {
+        self.peak = self.used;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_and_release() {
+        let mut p: DevicePool<u32> = DevicePool::new(100);
+        assert_eq!(p.reserve(1, 60), ReserveOutcome::Ok);
+        assert_eq!(p.reserve(2, 50), ReserveOutcome::WouldExceed);
+        assert_eq!(p.used(), 60);
+        assert_eq!(p.reserve(1, 60), ReserveOutcome::AlreadyResident);
+        assert_eq!(p.release(&1), 60);
+        assert_eq!(p.used(), 0);
+        assert_eq!(p.release(&1), 0);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut p: DevicePool<u32> = DevicePool::new(100);
+        p.reserve(1, 40);
+        p.reserve(2, 40);
+        p.release(&1);
+        p.reserve(3, 10);
+        assert_eq!(p.peak(), 80);
+        assert_eq!(p.used(), 50);
+        p.reset_peak();
+        assert_eq!(p.peak(), 50);
+    }
+
+    #[test]
+    fn exact_fill() {
+        let mut p: DevicePool<&str> = DevicePool::new(10);
+        assert_eq!(p.reserve("a", 10), ReserveOutcome::Ok);
+        assert!(!p.fits(1));
+        assert!(p.fits(0));
+    }
+
+    #[test]
+    fn zero_budget_rejects_everything_nonzero() {
+        let mut p: DevicePool<u32> = DevicePool::new(0);
+        assert_eq!(p.reserve(1, 1), ReserveOutcome::WouldExceed);
+        assert_eq!(p.reserve(2, 0), ReserveOutcome::Ok);
+    }
+}

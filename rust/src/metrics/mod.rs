@@ -1,0 +1,68 @@
+//! Serving metrics: latency distributions, throughput, phase breakdowns,
+//! and the markdown/CSV reporters the benches print paper tables with.
+
+pub mod histogram;
+pub mod report;
+
+pub use histogram::LatencyHistogram;
+pub use report::Table;
+
+use crate::model::PhaseTimes;
+
+/// Aggregate over one serving run (one method x model x dataset cell).
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub wall_secs: f64,
+    pub latency: LatencyHistogram,
+    pub phases: PhaseTimes,
+    /// hash-building thread: total build time (overlapped, not critical path)
+    pub hash_build_secs: f64,
+    /// peak simulated device bytes (Fig 8)
+    pub peak_device_bytes: usize,
+    /// device budget in effect
+    pub budget_bytes: usize,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub blocking_misses: u64,
+    pub evictions: u64,
+    pub transferred_bytes: u64,
+}
+
+impl ServeStats {
+    pub fn throughput(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.requests as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn tokens_per_sec(&self, tokens: u64) -> f64 {
+        if self.wall_secs > 0.0 {
+            tokens as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let mut s = ServeStats::default();
+        s.requests = 10;
+        s.wall_secs = 2.0;
+        assert!((s.throughput() - 5.0).abs() < 1e-9);
+        assert!((s.tokens_per_sec(100) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_wall_is_safe() {
+        let s = ServeStats::default();
+        assert_eq!(s.throughput(), 0.0);
+    }
+}

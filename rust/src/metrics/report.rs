@@ -1,0 +1,152 @@
+//! Table reporter: aligned text tables (the benches print paper-style
+//! rows) + CSV emission for plotting.
+
+use std::fmt::Write as _;
+
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let _ = writeln!(out, "\n== {} ==", self.title);
+        let line =
+            |cells: &[String], w: &[usize]| -> String {
+                let mut s = String::from("| ");
+                for (i, c) in cells.iter().enumerate() {
+                    let _ = write!(s, "{:<width$} | ", c, width = w[i]);
+                }
+                s.trim_end().to_string()
+            };
+        let _ = writeln!(out, "{}", line(&self.headers, &w));
+        let mut sep = String::from("|");
+        for width in &w {
+            let _ = write!(sep, "{}|", "-".repeat(width + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &w));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| -> String {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// Write CSV beside the bench output for plotting.
+    pub fn save_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+/// Format seconds adaptively (ms below 1s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Format bytes as GB/MB.
+pub fn fmt_bytes(b: usize) -> String {
+    let gb = b as f64 / 1e9;
+    if gb >= 1.0 {
+        format!("{gb:.2}GB")
+    } else {
+        format!("{:.1}MB", b as f64 / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns() {
+        let mut t = Table::new("demo", &["model", "throughput"]);
+        t.row(vec!["switch8".into(), "12.5".into()]);
+        t.row(vec!["switch256".into(), "3.1".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("| switch8"));
+        assert!(s.contains("| switch256"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["has,comma".into()]);
+        assert!(t.to_csv().contains("\"has,comma\""));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_secs(0.0123), "12.30ms");
+        assert_eq!(fmt_secs(2.5), "2.500s");
+        assert_eq!(fmt_bytes(2_500_000_000), "2.50GB");
+        assert_eq!(fmt_bytes(500_000), "0.5MB");
+    }
+}

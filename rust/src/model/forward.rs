@@ -1,0 +1,682 @@
+//! Forward-pass orchestration: the Rust twin of `python/compile/model.py`.
+//!
+//! Batch size is 1 throughout (paper §2: "all experiments are conducted
+//! with a batch size of 1 to isolate the influence of batch size"), so a
+//! sequence of L tokens flows through artifacts specialized to `[1, L]`.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::hash_table::HashTable;
+use crate::experts::{ExpertCache, ExpertKey};
+use crate::runtime::{
+    literal_from_f32s, literal_i32, to_f32_vec, to_i32_vec, DeviceBuffer, Executable, ModelBundle,
+};
+
+/// Wall-time breakdown of one forward pass (Fig 3's phases).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimes {
+    /// embed + attention + dense FFN + heads — the paper's "ideal
+    /// inference time"
+    pub dense_secs: f64,
+    /// router execution (baselines) or hash-table wait (SiDA)
+    pub selection_secs: f64,
+    /// per-expert dispatch + compute
+    pub expert_secs: f64,
+    /// modeled H2D transfer time charged on the critical path
+    pub transfer_secs: f64,
+    /// number of expert invocations issued
+    pub expert_invocations: u64,
+}
+
+impl PhaseTimes {
+    pub fn total(&self) -> f64 {
+        self.dense_secs + self.selection_secs + self.expert_secs + self.transfer_secs
+    }
+
+    pub fn moe_overhead(&self) -> f64 {
+        self.selection_secs + self.expert_secs + self.transfer_secs
+    }
+
+    pub fn add(&mut self, other: &PhaseTimes) {
+        self.dense_secs += other.dense_secs;
+        self.selection_secs += other.selection_secs;
+        self.expert_secs += other.expert_secs;
+        self.transfer_secs += other.transfer_secs;
+        self.expert_invocations += other.expert_invocations;
+    }
+}
+
+/// Per-MoE-layer routing decision: for each token, the experts that
+/// compute it and their (renormalized) combine weights.
+#[derive(Debug, Clone)]
+pub struct RoutingDecision {
+    /// [L] primary expert per token (rank 0)
+    pub top1: Vec<usize>,
+    /// token -> [(expert, alpha)] for k_used experts
+    pub assignments: Vec<Vec<(usize, f32)>>,
+}
+
+impl RoutingDecision {
+    /// Unique experts used, ascending.
+    pub fn active_experts(&self, mask: &[f32]) -> Vec<usize> {
+        let mut set: Vec<usize> = Vec::new();
+        for (t, assign) in self.assignments.iter().enumerate() {
+            if mask.get(t).copied().unwrap_or(0.0) == 0.0 {
+                continue;
+            }
+            for &(e, _) in assign {
+                if !set.contains(&e) {
+                    set.push(e);
+                }
+            }
+        }
+        set.sort_unstable();
+        set
+    }
+
+    /// expert -> masked token positions it must compute (one rank level).
+    pub fn tokens_per_expert(&self, mask: &[f32]) -> BTreeMap<usize, Vec<(usize, f32)>> {
+        let mut map: BTreeMap<usize, Vec<(usize, f32)>> = BTreeMap::new();
+        for (t, assign) in self.assignments.iter().enumerate() {
+            if mask.get(t).copied().unwrap_or(0.0) == 0.0 {
+                continue;
+            }
+            for &(e, a) in assign {
+                map.entry(e).or_default().push((t, a));
+            }
+        }
+        map
+    }
+}
+
+/// Who supplies expert weights to an invocation — the axis on which
+/// SiDA and the baselines differ.
+pub enum ExpertProvider<'a> {
+    /// Everything staged on device up front (Standard / DeepSpeed-like /
+    /// Tutel-like baselines; memory = full MoE bytes).
+    AllResident(&'a HashMap<ExpertKey, [DeviceBuffer; 4]>),
+    /// The SiDA cache: budget + eviction + modeled transfer cost.
+    /// `blocking` marks fetches that stall the critical path.
+    Cached { cache: &'a mut ExpertCache, blocking: bool },
+    /// Same cache shared with a concurrent prefetcher (the two-thread
+    /// SiDA pipeline).
+    Shared { cache: &'a std::sync::Mutex<ExpertCache>, blocking: bool },
+    /// Feed host literals every call (naive full offload; no device
+    /// residency at all).
+    HostLiterals,
+}
+
+/// Per-call switches for `ModelRunner::forward`.
+#[derive(Debug, Clone, Copy)]
+pub struct ForwardOptions {
+    /// invoke every expert whether or not tokens were routed to it —
+    /// the paper's "default implementation" (§2.3) used by Standard
+    pub invoke_all: bool,
+    /// pad every expert invocation to the full-L bucket (fixed capacity
+    /// dispatch, DeepSpeed-style) instead of the adaptive smallest bucket
+    pub fixed_bucket: bool,
+    pub want_lm: bool,
+    pub want_cls: bool,
+}
+
+impl Default for ForwardOptions {
+    fn default() -> Self {
+        ForwardOptions {
+            invoke_all: false,
+            fixed_bucket: false,
+            want_lm: false,
+            want_cls: false,
+        }
+    }
+}
+
+/// Output of one forward pass.
+pub struct ForwardOutput {
+    /// final hidden states [1, L, D] (host values)
+    pub hidden: Vec<f32>,
+    pub lm_logits: Option<Vec<f32>>,
+    pub cls_logits: Option<Vec<f32>>,
+    /// per-MoE-layer routing actually used
+    pub routing: Vec<RoutingDecision>,
+    pub times: PhaseTimes,
+}
+
+/// Drives one model config at one profile seq-len.
+pub struct ModelRunner {
+    pub bundle: Arc<ModelBundle>,
+    pub profile: String,
+    pub seq_len: usize,
+    exe_embed: Arc<Executable>,
+    exe_attn: Arc<Executable>,
+    exe_dense_ffn: Arc<Executable>,
+    exe_moe_ln: Arc<Executable>,
+    exe_router: Arc<Executable>,
+    exe_combine: Arc<Executable>,
+    exe_lm_head: Arc<Executable>,
+    exe_cls_head: Arc<Executable>,
+    exe_lm_nll: Arc<Executable>,
+    exe_expert: BTreeMap<usize, Arc<Executable>>,
+    /// cached host literals for all non-expert weights, keyed by name
+    lits: HashMap<String, xla::Literal>,
+    /// positional table sliced to seq_len
+    pos_lit: xla::Literal,
+}
+
+// the literal cache is read-only after construction; PJRT execution is
+// internally synchronized (see runtime::engine)
+unsafe impl Send for ModelRunner {}
+unsafe impl Sync for ModelRunner {}
+
+impl ModelRunner {
+    pub fn new(bundle: Arc<ModelBundle>, profile: &str) -> Result<Self> {
+        let topo = &bundle.topology;
+        let seq_len = topo.seq_len(profile)?;
+        let eng = &bundle.engine;
+        let l = seq_len;
+        let exe_embed = eng.load(&format!("embed_L{l}"))?;
+        let exe_attn = eng.load(&format!("attn_L{l}"))?;
+        let exe_dense_ffn = eng.load(&format!("dense_ffn_L{l}"))?;
+        let exe_moe_ln = eng.load(&format!("moe_ln_L{l}"))?;
+        let exe_router = eng.load(&format!("router_L{l}"))?;
+        let exe_combine = eng.load(&format!("moe_combine_L{l}"))?;
+        let exe_lm_head = eng.load(&format!("lm_head_L{l}"))?;
+        let exe_cls_head = eng.load(&format!("cls_head_L{l}"))?;
+        let exe_lm_nll = eng.load(&format!("lm_nll_L{l}"))?;
+        let mut exe_expert = BTreeMap::new();
+        for &b in &topo.buckets {
+            exe_expert.insert(b, eng.load(&format!("expert_T{b}"))?);
+        }
+
+        // cache host literals for every non-expert tensor we feed
+        let mut lits = HashMap::new();
+        let mut names: Vec<String> = vec![
+            "embed.tok".into(),
+            "final_ln_g".into(),
+            "final_ln_b".into(),
+            "lm_head.w".into(),
+            "lm_head.b".into(),
+            "cls_head.w".into(),
+            "cls_head.b".into(),
+        ];
+        for b in 0..topo.n_blocks {
+            for part in [
+                "ln1_g", "ln1_b", "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo", "ln2_g",
+                "ln2_b",
+            ] {
+                names.push(format!("blocks.{b}.{part}"));
+            }
+            if topo.moe_layer_index(b).is_some() {
+                names.push(format!("blocks.{b}.wr"));
+            } else {
+                for part in ["w1", "b1", "w2", "b2"] {
+                    names.push(format!("blocks.{b}.{part}"));
+                }
+            }
+        }
+        for name in names {
+            lits.insert(name.clone(), bundle.weights.literal(&name)?);
+        }
+
+        // positional slice [L, D]
+        let pos_full = bundle.weights.f32_slice("embed.pos")?;
+        let d = topo.d_model;
+        let pos_lit = literal_from_f32s(&[l, d], &pos_full[..l * d])?;
+
+        Ok(ModelRunner {
+            bundle,
+            profile: profile.to_string(),
+            seq_len,
+            exe_embed,
+            exe_attn,
+            exe_dense_ffn,
+            exe_moe_ln,
+            exe_router,
+            exe_combine,
+            exe_lm_head,
+            exe_cls_head,
+            exe_lm_nll,
+            exe_expert,
+            lits,
+            pos_lit,
+        })
+    }
+
+    fn lit(&self, name: &str) -> Result<&xla::Literal> {
+        self.lits
+            .get(name)
+            .with_context(|| format!("literal '{name}' not cached"))
+    }
+
+    pub fn mask_of(ids: &[i32]) -> Vec<f32> {
+        ids.iter().map(|&t| if t != 0 { 1.0 } else { 0.0 }).collect()
+    }
+
+    /// Embed a sentence: ids (padded to seq_len) -> [1, L, D] literal.
+    pub fn embed(&self, ids: &[i32]) -> Result<xla::Literal> {
+        debug_assert_eq!(ids.len(), self.seq_len);
+        let ids_lit = literal_i32(&[1, self.seq_len], ids)?;
+        let out = self
+            .exe_embed
+            .run(&[&ids_lit, self.lit("embed.tok")?, &self.pos_lit])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    fn run_attn(&self, x: &xla::Literal, mask: &xla::Literal, block: usize) -> Result<xla::Literal> {
+        let b = block;
+        let args: Vec<&xla::Literal> = vec![
+            x,
+            mask,
+            self.lit(&format!("blocks.{b}.ln1_g"))?,
+            self.lit(&format!("blocks.{b}.ln1_b"))?,
+            self.lit(&format!("blocks.{b}.wq"))?,
+            self.lit(&format!("blocks.{b}.bq"))?,
+            self.lit(&format!("blocks.{b}.wk"))?,
+            self.lit(&format!("blocks.{b}.bk"))?,
+            self.lit(&format!("blocks.{b}.wv"))?,
+            self.lit(&format!("blocks.{b}.bv"))?,
+            self.lit(&format!("blocks.{b}.wo"))?,
+            self.lit(&format!("blocks.{b}.bo"))?,
+        ];
+        Ok(self.exe_attn.run(&args)?.into_iter().next().unwrap())
+    }
+
+    fn run_dense_ffn(&self, x: &xla::Literal, block: usize) -> Result<xla::Literal> {
+        let b = block;
+        let args: Vec<&xla::Literal> = vec![
+            x,
+            self.lit(&format!("blocks.{b}.ln2_g"))?,
+            self.lit(&format!("blocks.{b}.ln2_b"))?,
+            self.lit(&format!("blocks.{b}.w1"))?,
+            self.lit(&format!("blocks.{b}.b1"))?,
+            self.lit(&format!("blocks.{b}.w2"))?,
+            self.lit(&format!("blocks.{b}.b2"))?,
+        ];
+        Ok(self.exe_dense_ffn.run(&args)?.into_iter().next().unwrap())
+    }
+
+    fn run_moe_ln(&self, x: &xla::Literal, block: usize) -> Result<xla::Literal> {
+        let b = block;
+        let args: Vec<&xla::Literal> = vec![
+            x,
+            self.lit(&format!("blocks.{b}.ln2_g"))?,
+            self.lit(&format!("blocks.{b}.ln2_b"))?,
+        ];
+        Ok(self.exe_moe_ln.run(&args)?.into_iter().next().unwrap())
+    }
+
+    /// Run the true router on LN'd hidden states -> per-token top-1.
+    pub fn run_router(&self, xln: &xla::Literal, block: usize) -> Result<RoutingDecision> {
+        let args: Vec<&xla::Literal> =
+            vec![xln, self.lit(&format!("blocks.{block}.wr"))?];
+        let out = self.exe_router.run(&args)?;
+        // outputs: logits [1,L,E], idx i32 [1,L], alpha [1,L]
+        let idx = to_i32_vec(&out[1])?;
+        let alpha = to_f32_vec(&out[2])?;
+        let top1: Vec<usize> = idx.iter().map(|&i| i as usize).collect();
+        let assignments = top1
+            .iter()
+            .zip(alpha.iter())
+            .map(|(&e, &a)| vec![(e, a)])
+            .collect();
+        Ok(RoutingDecision { top1, assignments })
+    }
+
+    /// Routing decision from a SiDA hash table for one MoE layer.
+    /// `k_used` experts per token, alphas renormalized over the k used
+    /// (paper §4: top-1 for SST2, top-3 for MRPC/MultiRC).
+    pub fn routing_from_hash(
+        &self,
+        table: &HashTable,
+        moe_layer: usize,
+        k_used: usize,
+    ) -> RoutingDecision {
+        let l = self.seq_len;
+        let mut top1 = Vec::with_capacity(l);
+        let mut assignments = Vec::with_capacity(l);
+        for t in 0..l {
+            let mut assign: Vec<(usize, f32)> = (0..k_used.min(table.k))
+                .map(|r| {
+                    (
+                        table.expert_at(t, moe_layer, r),
+                        table.alpha_at(t, moe_layer, r),
+                    )
+                })
+                .collect();
+            let norm: f32 = assign.iter().map(|(_, a)| *a).sum::<f32>().max(1e-9);
+            for pair in assign.iter_mut() {
+                pair.1 /= norm;
+            }
+            // rescale to the hash's top-1 confidence so magnitude tracks
+            // the router's alpha (the student softmax approximates it)
+            let lead = table.alpha_at(t, moe_layer, 0);
+            for pair in assign.iter_mut() {
+                pair.1 *= lead;
+            }
+            top1.push(assign[0].0);
+            assignments.push(assign);
+        }
+        RoutingDecision { top1, assignments }
+    }
+
+    /// Invoke one expert on a packed token bucket.
+    #[allow(clippy::too_many_arguments)]
+    fn invoke_expert(
+        &self,
+        block: usize,
+        expert: usize,
+        xln_host: &[f32],
+        token_alphas: &[(usize, f32)],
+        y_acc: &mut [f32],
+        provider: &mut ExpertProvider<'_>,
+        fixed_bucket: bool,
+        times: &mut PhaseTimes,
+    ) -> Result<()> {
+        let d = self.bundle.topology.d_model;
+        let count = token_alphas.len().max(1);
+        let bucket = if fixed_bucket {
+            self.bundle.topology.bucket_for(self.seq_len)
+        } else {
+            self.bundle.topology.bucket_for(count)
+        };
+        if count > bucket {
+            // split across multiple calls (count > largest bucket)
+            let (head, tail) = token_alphas.split_at(bucket);
+            self.invoke_expert(
+                block, expert, xln_host, head, y_acc, provider, fixed_bucket, times,
+            )?;
+            return self.invoke_expert(
+                block, expert, xln_host, tail, y_acc, provider, fixed_bucket, times,
+            );
+        }
+        // pack tokens
+        let mut packed = vec![0f32; bucket * d];
+        for (row, &(t, _)) in token_alphas.iter().enumerate() {
+            packed[row * d..(row + 1) * d].copy_from_slice(&xln_host[t * d..(t + 1) * d]);
+        }
+        let exe = self
+            .exe_expert
+            .get(&bucket)
+            .with_context(|| format!("no expert artifact for bucket {bucket}"))?;
+
+        let key = ExpertKey::new(block, expert);
+        // Residency first (transfer time accounted separately from
+        // dispatch/compute time so Fig 3's breakdown stays honest).
+        let fetch = || -> Result<[DeviceBuffer; 4]> {
+            crate::runtime::stage_expert_parts(
+                &self.bundle.engine,
+                &self.bundle.weights,
+                block,
+                expert,
+            )
+        };
+        let resident_for_cache = match provider {
+            ExpertProvider::Cached { cache, blocking } => {
+                let real_bytes = self.bundle.weights.expert_bytes(block, expert)?;
+                let (resident, _hit, secs) = cache.ensure(key, real_bytes, *blocking, fetch)?;
+                times.transfer_secs += secs;
+                cache.pin(key);
+                Some(resident)
+            }
+            ExpertProvider::Shared { cache, blocking } => {
+                let real_bytes = self.bundle.weights.expert_bytes(block, expert)?;
+                let mut guard = cache.lock().unwrap();
+                let (resident, _hit, secs) = guard.ensure(key, real_bytes, *blocking, fetch)?;
+                times.transfer_secs += secs;
+                guard.pin(key);
+                Some(resident)
+            }
+            _ => None,
+        };
+
+        let t0 = Instant::now();
+        let out = match provider {
+            ExpertProvider::AllResident(map) => {
+                let parts = map
+                    .get(&key)
+                    .with_context(|| format!("expert {key:?} not staged"))?;
+                let x_buf = self.bundle.engine.stage_f32(&[bucket, d], &packed)?;
+                let bufs: Vec<&xla::PjRtBuffer> = vec![
+                    &x_buf.0, &parts[0].0, &parts[1].0, &parts[2].0, &parts[3].0,
+                ];
+                exe.run_buffers(&bufs)?
+            }
+            ExpertProvider::Cached { cache, .. } => {
+                let resident = resident_for_cache.as_ref().unwrap();
+                let x_buf = self.bundle.engine.stage_f32(&[bucket, d], &packed)?;
+                let bufs: Vec<&xla::PjRtBuffer> = vec![
+                    &x_buf.0,
+                    &resident.parts[0].0,
+                    &resident.parts[1].0,
+                    &resident.parts[2].0,
+                    &resident.parts[3].0,
+                ];
+                let out = exe.run_buffers(&bufs)?;
+                cache.unpin(&key);
+                out
+            }
+            ExpertProvider::Shared { cache, .. } => {
+                let resident = resident_for_cache.as_ref().unwrap();
+                let x_buf = self.bundle.engine.stage_f32(&[bucket, d], &packed)?;
+                let bufs: Vec<&xla::PjRtBuffer> = vec![
+                    &x_buf.0,
+                    &resident.parts[0].0,
+                    &resident.parts[1].0,
+                    &resident.parts[2].0,
+                    &resident.parts[3].0,
+                ];
+                let out = exe.run_buffers(&bufs)?;
+                cache.lock().unwrap().unpin(&key);
+                out
+            }
+            ExpertProvider::HostLiterals => {
+                let names = crate::runtime::WeightStore::expert_part_names(block, expert);
+                let x_lit = literal_from_f32s(&[bucket, d], &packed)?;
+                let owned = [
+                    x_lit,
+                    self.bundle.weights.literal(&names[0])?,
+                    self.bundle.weights.literal(&names[1])?,
+                    self.bundle.weights.literal(&names[2])?,
+                    self.bundle.weights.literal(&names[3])?,
+                ];
+                let args: Vec<&xla::Literal> = owned.iter().collect();
+                exe.run(&args)?
+            }
+        };
+        times.expert_secs += t0.elapsed().as_secs_f64();
+        times.expert_invocations += 1;
+
+        // scatter weighted rows back
+        let y = to_f32_vec(&out[0])?;
+        for (row, &(t, alpha)) in token_alphas.iter().enumerate() {
+            let dst = &mut y_acc[t * d..(t + 1) * d];
+            let src = &y[row * d..(row + 1) * d];
+            for (o, v) in dst.iter_mut().zip(src.iter()) {
+                *o += alpha * v;
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one MoE layer given a routing decision.  The decision's
+    /// alphas are applied host-side during scatter; the combine artifact
+    /// adds the residual with alpha=1 on real tokens.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_moe_layer(
+        &self,
+        x: &xla::Literal,
+        mask_host: &[f32],
+        mask_lit: &xla::Literal,
+        block: usize,
+        routing: &RoutingDecision,
+        provider: &mut ExpertProvider<'_>,
+        opts: ForwardOptions,
+        times: &mut PhaseTimes,
+    ) -> Result<xla::Literal> {
+        let topo = &self.bundle.topology;
+        let d = topo.d_model;
+        let l = self.seq_len;
+        let xln = self.run_moe_ln(x, block)?;
+        let xln_host = to_f32_vec(&xln)?;
+        let mut y_acc = vec![0f32; l * d];
+        let per_expert = routing.tokens_per_expert(mask_host);
+
+        if opts.invoke_all {
+            // the paper's default implementation: every expert is invoked
+            // whether or not tokens were assigned to it (§2.3)
+            for expert in 0..topo.num_experts {
+                let assignments = per_expert
+                    .get(&expert)
+                    .cloned()
+                    .unwrap_or_else(|| vec![(0usize, 0.0f32)]);
+                self.invoke_expert(
+                    block, expert, &xln_host, &assignments, &mut y_acc, provider,
+                    opts.fixed_bucket, times,
+                )?;
+            }
+        } else {
+            for (expert, assignments) in per_expert.iter() {
+                self.invoke_expert(
+                    block, *expert, &xln_host, assignments, &mut y_acc, provider,
+                    opts.fixed_bucket, times,
+                )?;
+            }
+        }
+
+        let y_lit = literal_from_f32s(&[1, l, d], &y_acc)?;
+        let ones = literal_from_f32s(&[1, l], &vec![1.0f32; l])?;
+        let out = self
+            .exe_combine
+            .run(&[x, &y_lit, &ones, mask_lit])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Full forward pass.  `routing_for` supplies the per-MoE-layer
+    /// decision: SiDA reads the hash table; baselines run the router
+    /// (passing `None` here runs the router on the fly).
+    pub fn forward(
+        &self,
+        ids: &[i32],
+        hash_routing: Option<(&HashTable, usize)>,
+        provider: &mut ExpertProvider<'_>,
+        opts: ForwardOptions,
+    ) -> Result<ForwardOutput> {
+        let topo = self.bundle.topology.clone();
+        if ids.len() != self.seq_len {
+            bail!("ids len {} != seq_len {}", ids.len(), self.seq_len);
+        }
+        let mut times = PhaseTimes::default();
+        let mask_host = Self::mask_of(ids);
+        let mask_lit = literal_from_f32s(&[1, self.seq_len], &mask_host)?;
+
+        let t0 = Instant::now();
+        let mut x = self.embed(ids)?;
+        times.dense_secs += t0.elapsed().as_secs_f64();
+
+        let mut routing_used = Vec::new();
+        for block in 0..topo.n_blocks {
+            let t_attn = Instant::now();
+            x = self.run_attn(&x, &mask_lit, block)?;
+            times.dense_secs += t_attn.elapsed().as_secs_f64();
+
+            match topo.moe_layer_index(block) {
+                None => {
+                    let t_ffn = Instant::now();
+                    x = self.run_dense_ffn(&x, block)?;
+                    times.dense_secs += t_ffn.elapsed().as_secs_f64();
+                }
+                Some(moe_layer) => {
+                    // expert selection
+                    let t_sel = Instant::now();
+                    let routing = match hash_routing {
+                        Some((table, k_used)) => {
+                            self.routing_from_hash(table, moe_layer, k_used)
+                        }
+                        None => {
+                            let xln = self.run_moe_ln(&x, block)?;
+                            self.run_router(&xln, block)?
+                        }
+                    };
+                    times.selection_secs += t_sel.elapsed().as_secs_f64();
+
+                    x = self.run_moe_layer(
+                        &x, &mask_host, &mask_lit, block, &routing, provider, opts, &mut times,
+                    )?;
+                    routing_used.push(routing);
+                }
+            }
+        }
+
+        let mut lm_logits = None;
+        let mut cls_logits = None;
+        let t_head = Instant::now();
+        if opts.want_lm {
+            let out = self.exe_lm_head.run(&[
+                &x,
+                self.lit("final_ln_g")?,
+                self.lit("final_ln_b")?,
+                self.lit("lm_head.w")?,
+                self.lit("lm_head.b")?,
+            ])?;
+            lm_logits = Some(to_f32_vec(&out[0])?);
+        }
+        if opts.want_cls {
+            let out = self.exe_cls_head.run(&[
+                &x,
+                &mask_lit,
+                self.lit("final_ln_g")?,
+                self.lit("final_ln_b")?,
+                self.lit("cls_head.w")?,
+                self.lit("cls_head.b")?,
+            ])?;
+            cls_logits = Some(to_f32_vec(&out[0])?);
+        }
+        times.dense_secs += t_head.elapsed().as_secs_f64();
+
+        let hidden = to_f32_vec(&x)?;
+        Ok(ForwardOutput {
+            hidden,
+            lm_logits,
+            cls_logits,
+            routing: routing_used,
+            times,
+        })
+    }
+
+    /// Per-sentence LM NLL + token count via the lm_nll artifact.
+    pub fn lm_nll(&self, lm_logits: &[f32], ids: &[i32]) -> Result<(f64, f64)> {
+        let l = self.seq_len;
+        let v = self.bundle.topology.vocab;
+        let mask = Self::mask_of(ids);
+        let logits_lit = literal_from_f32s(&[1, l, v], lm_logits)?;
+        let ids_lit = literal_i32(&[1, l], ids)?;
+        let mask_lit = literal_from_f32s(&[1, l], &mask)?;
+        let out = self.exe_lm_nll.run(&[&logits_lit, &ids_lit, &mask_lit])?;
+        let nll = to_f32_vec(&out[0])?[0] as f64;
+        let cnt = to_f32_vec(&out[1])?[0] as f64;
+        Ok((nll, cnt))
+    }
+
+    /// Stage every expert of every MoE layer on device (baseline setup).
+    pub fn stage_all_experts(&self) -> Result<HashMap<ExpertKey, [DeviceBuffer; 4]>> {
+        let topo = &self.bundle.topology;
+        let mut map = HashMap::new();
+        for &block in &topo.moe_blocks {
+            for expert in 0..topo.num_experts {
+                map.insert(
+                    ExpertKey::new(block, expert),
+                    crate::runtime::stage_expert_parts(
+                        &self.bundle.engine,
+                        &self.bundle.weights,
+                        block,
+                        expert,
+                    )?,
+                );
+            }
+        }
+        Ok(map)
+    }
+}

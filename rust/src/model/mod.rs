@@ -1,0 +1,12 @@
+//! Model orchestration over sliced artifacts.
+//!
+//! `ModelRunner` drives one model config at one dataset profile
+//! (sequence length), calling the shape-specialized artifacts in order:
+//! embed -> [attn -> ffn]* -> heads.  MoE FFN layers are dispatched
+//! per expert; *who* provides the expert weights (all-resident buffers,
+//! the SiDA cache, or plain host literals) is abstracted by
+//! [`ExpertProvider`], which is what separates SiDA from the baselines.
+
+pub mod forward;
+
+pub use forward::{ExpertProvider, ForwardOptions, ForwardOutput, ModelRunner, PhaseTimes, RoutingDecision};

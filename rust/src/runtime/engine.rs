@@ -1,0 +1,250 @@
+//! PJRT engine: loads HLO-text artifacts, compiles them on the CPU
+//! client, caches executables, and runs them.
+//!
+//! This is the only module that touches the `xla` crate's execution API.
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax>=0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md).
+//!
+//! ## Threading
+//!
+//! The wrapped `xla` types hold raw pointers and are `!Send`.  The PJRT
+//! CPU client itself is thread-safe (its C++ implementation locks
+//! internally and execution is re-entrant), and literals are plain host
+//! buffers, so `Engine`/`Executable` are marked Send+Sync; the SiDA
+//! pipeline relies on this to run the hash-building thread and the
+//! inference thread concurrently over one client.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A compiled serving entry point.
+pub struct Executable {
+    pub name: String,
+    inner: xla::PjRtLoadedExecutable,
+    /// cumulative dispatch statistics (hot-path profiling)
+    pub stats: Mutex<ExecStats>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+// SAFETY: see module docs — the PJRT CPU client is internally
+// synchronized; executables and literals are usable from any thread as
+// long as the client outlives them (guaranteed: Engine owns the client
+// and executables hold a client refcount through the xla crate).
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with host literals; returns the flattened output tuple.
+    /// Takes borrows — `execute` accepts `Borrow<Literal>`, so callers
+    /// never clone weight literals onto the hot path (Literal::clone is
+    /// a full host copy in the C++ wrapper).
+    pub fn run(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        log::trace!("exec {} ({} literal args)", self.name, args.len());
+        let out = self
+            .inner
+            .execute::<&xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let result = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: no output device", self.name))?
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: empty output", self.name))?
+            .to_literal_sync()?;
+        // aot.py lowers everything with return_tuple=True
+        let parts = result.to_tuple()?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut s = self.stats.lock().unwrap();
+        s.calls += 1;
+        s.total_secs += dt;
+        Ok(parts)
+    }
+
+    /// Execute with pre-staged device buffers (the resident-expert path).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        log::trace!("exec(b) {} ({} buffer args)", self.name, args.len());
+        let out = self
+            .inner
+            .execute_b(args)
+            .with_context(|| format!("executing(b) {}", self.name))?;
+        let result = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: no output device", self.name))?
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: empty output", self.name))?
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut s = self.stats.lock().unwrap();
+        s.calls += 1;
+        s.total_secs += dt;
+        Ok(parts)
+    }
+
+    pub fn snapshot_stats(&self) -> ExecStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+/// Device-buffer wrapper so staged expert weights can cross threads.
+pub struct DeviceBuffer(pub xla::PjRtBuffer);
+
+// SAFETY: same argument as Executable — PJRT CPU buffers are host memory
+// managed by the internally-synchronized client.
+unsafe impl Send for DeviceBuffer {}
+unsafe impl Sync for DeviceBuffer {}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    /// cumulative compile statistics
+    pub compile_stats: Mutex<ExecStats>,
+}
+
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        if !artifacts_dir.is_dir() {
+            bail!(
+                "artifacts dir {} not found — run `make artifacts` first",
+                artifacts_dir.display()
+            );
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+            compile_stats: Mutex::new(ExecStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load + compile `<entry>.hlo.txt`, memoized by entry name.
+    pub fn load(&self, entry: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(entry) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifacts_dir.join(format!("{entry}.hlo.txt"));
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {entry}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut cs = self.compile_stats.lock().unwrap();
+            cs.calls += 1;
+            cs.total_secs += dt;
+        }
+        log::debug!("compiled {entry} in {dt:.3}s");
+        let arc = Arc::new(Executable {
+            name: entry.to_string(),
+            inner: exe,
+            stats: Mutex::new(ExecStats::default()),
+        });
+        self.cache.lock().unwrap().insert(entry.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Pre-compile a set of entries (pipeline warmup).
+    pub fn preload(&self, entries: &[String]) -> Result<()> {
+        for e in entries {
+            self.load(e)?;
+        }
+        Ok(())
+    }
+
+    /// Stage host f32 data onto the device (the H2D transfer of the
+    /// memory model; cost accounting lives in `memory::cost`).
+    ///
+    /// NOTE: this goes through `buffer_from_host_buffer`, whose C wrapper
+    /// uses `kImmutableOnlyDuringCall` semantics (synchronous copy).  The
+    /// literal-based `BufferFromHostLiteral` path is ASYNC in the PJRT
+    /// CPU client — the literal must outlive the transfer, which a
+    /// `stage(&temporary)` call pattern violates (observed as a
+    /// `literal.size_bytes() == b->size()` CHECK crash).  Never stage
+    /// from literals.
+    /// (Also: only the *typed* `buffer_from_host_buffer::<T>` is safe —
+    /// the crate's `buffer_from_host_raw_bytes` passes the ElementType
+    /// ordinal where the C API expects a PrimitiveType, silently staging
+    /// F32 data as F16.)
+    pub fn stage_f32(&self, dims: &[usize], data: &[f32]) -> Result<DeviceBuffer> {
+        Ok(DeviceBuffer(
+            self.client.buffer_from_host_buffer(data, dims, None)?,
+        ))
+    }
+
+    /// Stage i32 data (token ids).
+    pub fn stage_i32(&self, dims: &[usize], data: &[i32]) -> Result<DeviceBuffer> {
+        Ok(DeviceBuffer(
+            self.client.buffer_from_host_buffer(data, dims, None)?,
+        ))
+    }
+
+    /// Stage raw little-endian bytes with an explicit element type
+    /// (weights straight out of the blob; see `stage_f32` for semantics).
+    pub fn stage_raw(
+        &self,
+        ty: xla::ElementType,
+        dims: &[usize],
+        bytes: &[u8],
+    ) -> Result<DeviceBuffer> {
+        match ty {
+            xla::ElementType::F32 => {
+                debug_assert_eq!(bytes.as_ptr() as usize % 4, 0);
+                let data = unsafe {
+                    std::slice::from_raw_parts(bytes.as_ptr() as *const f32, bytes.len() / 4)
+                };
+                self.stage_f32(dims, data)
+            }
+            xla::ElementType::S32 => {
+                debug_assert_eq!(bytes.as_ptr() as usize % 4, 0);
+                let data = unsafe {
+                    std::slice::from_raw_parts(bytes.as_ptr() as *const i32, bytes.len() / 4)
+                };
+                self.stage_i32(dims, data)
+            }
+            other => bail!("stage_raw: unsupported element type {other:?}"),
+        }
+    }
+
+    /// Dispatch-time statistics across all cached executables.
+    pub fn all_stats(&self) -> Vec<(String, ExecStats)> {
+        self.cache
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.snapshot_stats()))
+            .collect()
+    }
+}

@@ -1,0 +1,71 @@
+//! Runtime layer: PJRT engine, weight store, topology descriptor.
+//!
+//! `Engine` loads and executes the HLO-text artifacts produced by
+//! `python/compile/aot.py`; `WeightStore` owns every tensor on the host;
+//! `Topology` mirrors `model.json`.  Together they form a `ModelBundle`,
+//! the unit the coordinator and all baselines operate on.
+
+pub mod engine;
+pub mod tensor;
+pub mod topology;
+pub mod weights;
+
+pub use engine::{DeviceBuffer, Engine, ExecStats, Executable};
+pub use tensor::{literal_from_f32s, literal_i32, to_f32_vec, to_i32_vec, Dtype, TensorMeta};
+pub use topology::Topology;
+pub use weights::WeightStore;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+/// Stage one named weight tensor onto the device straight from the blob
+/// (synchronous-copy semantics; see `Engine::stage_f32`).
+pub fn stage_weight(
+    engine: &Engine,
+    weights: &WeightStore,
+    name: &str,
+) -> Result<DeviceBuffer> {
+    let meta = weights.meta(name)?;
+    engine.stage_raw(meta.dtype.element_type(), &meta.shape, weights.bytes(name)?)
+}
+
+/// Stage the four parts of one expert in artifact argument order.
+pub fn stage_expert_parts(
+    engine: &Engine,
+    weights: &WeightStore,
+    block: usize,
+    expert: usize,
+) -> Result<[DeviceBuffer; 4]> {
+    let names = WeightStore::expert_part_names(block, expert);
+    Ok([
+        stage_weight(engine, weights, &names[0])?,
+        stage_weight(engine, weights, &names[1])?,
+        stage_weight(engine, weights, &names[2])?,
+        stage_weight(engine, weights, &names[3])?,
+    ])
+}
+
+/// Everything needed to serve one model config: compiled-artifact engine,
+/// host weights, topology.
+pub struct ModelBundle {
+    pub engine: Arc<Engine>,
+    pub weights: Arc<WeightStore>,
+    pub topology: Arc<Topology>,
+}
+
+impl ModelBundle {
+    /// Load from `artifacts/<config>/`.
+    pub fn load(config_dir: &Path) -> Result<Self> {
+        let engine = Arc::new(Engine::new(config_dir)?);
+        let weights = Arc::new(WeightStore::load(config_dir)?);
+        let topology = Arc::new(Topology::load(config_dir)?);
+        Ok(ModelBundle { engine, weights, topology })
+    }
+
+    /// Conventional root: `artifacts/<name>` under the repo root.
+    pub fn load_named(artifacts_root: &Path, name: &str) -> Result<Self> {
+        Self::load(&artifacts_root.join(name))
+    }
+}

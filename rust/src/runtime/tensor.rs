@@ -1,0 +1,133 @@
+//! Host tensor views over the weight blob + conversion to XLA literals.
+
+use crate::util::json::{Json, JsonError};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Self, JsonError> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            _ => Err(JsonError::Type { wanted: "f32|i32", got: "other" }),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        4
+    }
+
+    pub fn element_type(&self) -> xla::ElementType {
+        match self {
+            Dtype::F32 => xla::ElementType::F32,
+            Dtype::I32 => xla::ElementType::S32,
+        }
+    }
+}
+
+/// Metadata record from manifest.json.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+impl TensorMeta {
+    pub fn from_json(j: &Json) -> Result<Self, JsonError> {
+        Ok(TensorMeta {
+            name: j.get_str("name")?.to_string(),
+            dtype: Dtype::parse(j.get_str("dtype")?)?,
+            shape: j.get("shape")?.usize_vec()?,
+            offset: j.get_usize("offset")?,
+            nbytes: j.get_usize("nbytes")?,
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Build an f32 literal from raw little-endian bytes.
+pub fn literal_f32(shape: &[usize], bytes: &[u8]) -> anyhow::Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Build an i32 literal from host values.
+pub fn literal_i32(shape: &[usize], values: &[i32]) -> anyhow::Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(values.as_ptr() as *const u8, values.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Build an f32 literal from host values.
+pub fn literal_from_f32s(shape: &[usize], values: &[f32]) -> anyhow::Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(values.as_ptr() as *const u8, values.len() * 4)
+    };
+    literal_f32(shape, bytes)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32_vec(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract an i32 vector from a literal.
+pub fn to_i32_vec(lit: &xla::Literal) -> anyhow::Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("i32").unwrap(), Dtype::I32);
+        assert!(Dtype::parse("f64").is_err());
+    }
+
+    #[test]
+    fn meta_from_json() {
+        let j = Json::parse(
+            r#"{"name":"w","dtype":"f32","shape":[2,3],"offset":64,"nbytes":24}"#,
+        )
+        .unwrap();
+        let m = TensorMeta::from_json(&j).unwrap();
+        assert_eq!(m.name, "w");
+        assert_eq!(m.shape, vec![2, 3]);
+        assert_eq!(m.element_count(), 6);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let vals = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = literal_from_f32s(&[2, 3], &vals).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), vals);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let vals = [7i32, -1, 0, 42];
+        let lit = literal_i32(&[4], &vals).unwrap();
+        assert_eq!(to_i32_vec(&lit).unwrap(), vals);
+    }
+}

@@ -1,0 +1,174 @@
+//! Topology descriptor: the Rust-side mirror of `model.json`.
+//!
+//! Everything the coordinator needs to drive the sliced artifacts —
+//! dims, which blocks are MoE, expert counts, dataset profiles (static
+//! sequence lengths) and the token buckets the per-expert artifact was
+//! specialized for.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct HashTopo {
+    pub hidden: usize,
+    pub n_lstm_layers: usize,
+    pub top_k: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_heads: usize,
+    pub n_blocks: usize,
+    pub moe_blocks: Vec<usize>,
+    pub num_experts: usize,
+    pub n_classes: usize,
+    pub max_seq_len: usize,
+    pub hash: HashTopo,
+    /// dataset profile name -> static sequence length
+    pub profiles: BTreeMap<String, usize>,
+    /// token buckets for expert_T{bucket}.hlo.txt, ascending
+    pub buckets: Vec<usize>,
+    pub expert_param_bytes: usize,
+    pub moe_param_bytes: usize,
+    pub total_param_bytes: usize,
+}
+
+impl Topology {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("model.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing model.json")?;
+        let hash = j.get("hash")?;
+        let mut profiles = BTreeMap::new();
+        for (k, v) in j.get("profiles")?.as_obj()? {
+            profiles.insert(k.clone(), v.as_usize()?);
+        }
+        let mut buckets = j.get("buckets")?.usize_vec()?;
+        buckets.sort_unstable();
+        let topo = Topology {
+            name: j.get_str("name")?.to_string(),
+            vocab: j.get_usize("vocab")?,
+            d_model: j.get_usize("d_model")?,
+            d_ff: j.get_usize("d_ff")?,
+            n_heads: j.get_usize("n_heads")?,
+            n_blocks: j.get_usize("n_blocks")?,
+            moe_blocks: j.get("moe_blocks")?.usize_vec()?,
+            num_experts: j.get_usize("num_experts")?,
+            n_classes: j.get_usize("n_classes")?,
+            max_seq_len: j.get_usize("max_seq_len")?,
+            hash: HashTopo {
+                hidden: hash.get_usize("hidden")?,
+                n_lstm_layers: hash.get_usize("n_lstm_layers")?,
+                top_k: hash.get_usize("top_k")?,
+            },
+            profiles,
+            buckets,
+            expert_param_bytes: j.get_usize("expert_param_bytes")?,
+            moe_param_bytes: j.get_usize("moe_param_bytes")?,
+            total_param_bytes: j.get_usize("total_param_bytes")?,
+        };
+        if topo.buckets.is_empty() {
+            bail!("model.json has no expert token buckets");
+        }
+        Ok(topo)
+    }
+
+    /// Number of MoE layers (M in the paper).
+    pub fn num_moe_layers(&self) -> usize {
+        self.moe_blocks.len()
+    }
+
+    /// MoE-layer ordinal of a block index, if it is a MoE block.
+    pub fn moe_layer_index(&self, block: usize) -> Option<usize> {
+        self.moe_blocks.iter().position(|&b| b == block)
+    }
+
+    /// Smallest bucket >= `count` (the largest bucket if count exceeds
+    /// all — callers then split the token set into multiple calls).
+    pub fn bucket_for(&self, count: usize) -> usize {
+        for &b in &self.buckets {
+            if b >= count {
+                return b;
+            }
+        }
+        *self.buckets.last().unwrap()
+    }
+
+    /// Sequence length for a dataset profile.
+    pub fn seq_len(&self, profile: &str) -> Result<usize> {
+        self.profiles
+            .get(profile)
+            .copied()
+            .with_context(|| format!("unknown dataset profile '{profile}'"))
+    }
+
+    /// Total experts across all MoE layers.
+    pub fn total_experts(&self) -> usize {
+        self.num_moe_layers() * self.num_experts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn fake_topology_json() -> String {
+        r#"{
+            "name":"switch8","vocab":256,"d_model":64,"d_ff":128,
+            "n_heads":4,"n_blocks":4,"moe_blocks":[1,3],"num_experts":8,
+            "n_classes":4,"max_seq_len":256,
+            "hash":{"hidden":48,"n_lstm_layers":2,"top_k":4},
+            "profiles":{"sst2":32,"mrpc":96,"multirc":256},
+            "buckets":[4,16,64,256],
+            "expert_param_bytes":66048,"moe_param_bytes":1056768,
+            "total_param_bytes":2000000
+        }"#
+        .to_string()
+    }
+
+    fn load_fake() -> Topology {
+        let dir = std::env::temp_dir().join(format!("sida_topo_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("model.json"), fake_topology_json()).unwrap();
+        let t = Topology::load(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        t
+    }
+
+    #[test]
+    fn parses_fields() {
+        let t = load_fake();
+        assert_eq!(t.name, "switch8");
+        assert_eq!(t.moe_blocks, vec![1, 3]);
+        assert_eq!(t.num_moe_layers(), 2);
+        assert_eq!(t.seq_len("sst2").unwrap(), 32);
+        assert!(t.seq_len("unknown").is_err());
+    }
+
+    #[test]
+    fn moe_layer_index() {
+        let t = load_fake();
+        assert_eq!(t.moe_layer_index(1), Some(0));
+        assert_eq!(t.moe_layer_index(3), Some(1));
+        assert_eq!(t.moe_layer_index(0), None);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let t = load_fake();
+        assert_eq!(t.bucket_for(1), 4);
+        assert_eq!(t.bucket_for(4), 4);
+        assert_eq!(t.bucket_for(5), 16);
+        assert_eq!(t.bucket_for(64), 64);
+        assert_eq!(t.bucket_for(300), 256); // split case
+    }
+}

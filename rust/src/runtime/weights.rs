@@ -1,0 +1,178 @@
+//! Weight store: manifest.json + weights.bin reader.
+//!
+//! Loads the flat blob emitted by `python/compile/serialize.py` and
+//! exposes tensors by name.  Expert tensors (`blocks.{b}.expert.{e}.w1`
+//! etc.) are the unit of offloading: the store hands out *host literals*
+//! on demand; tier placement (host RAM vs simulated device memory) is the
+//! expert cache's job, not the store's.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::tensor::{literal_f32, Dtype, TensorMeta};
+use crate::util::json::Json;
+
+pub struct WeightStore {
+    blob: Vec<u8>,
+    metas: HashMap<String, TensorMeta>,
+    pub total_bytes: usize,
+}
+
+impl WeightStore {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let total_bytes = j.get_usize("total_bytes")?;
+        let mut metas = HashMap::new();
+        for t in j.get("tensors")?.as_arr()? {
+            let m = TensorMeta::from_json(t)?;
+            metas.insert(m.name.clone(), m);
+        }
+        let blob = std::fs::read(dir.join("weights.bin")).context("reading weights.bin")?;
+        if blob.len() != total_bytes {
+            bail!(
+                "weights.bin size {} != manifest total_bytes {}",
+                blob.len(),
+                total_bytes
+            );
+        }
+        Ok(WeightStore { blob, metas, total_bytes })
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&TensorMeta> {
+        self.metas
+            .get(name)
+            .with_context(|| format!("tensor '{name}' not in manifest"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.metas.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.metas.keys().map(|s| s.as_str())
+    }
+
+    pub fn bytes(&self, name: &str) -> Result<&[u8]> {
+        let m = self.meta(name)?;
+        Ok(&self.blob[m.offset..m.offset + m.nbytes])
+    }
+
+    /// View as f32 (alignment guaranteed: serializer aligns to 64 bytes).
+    pub fn f32_slice(&self, name: &str) -> Result<&[f32]> {
+        let m = self.meta(name)?;
+        if m.dtype != Dtype::F32 {
+            bail!("tensor '{name}' is not f32");
+        }
+        let bytes = &self.blob[m.offset..m.offset + m.nbytes];
+        debug_assert_eq!(bytes.as_ptr() as usize % 4, 0);
+        Ok(unsafe {
+            std::slice::from_raw_parts(bytes.as_ptr() as *const f32, bytes.len() / 4)
+        })
+    }
+
+    /// Materialize a host literal (one copy out of the blob).
+    pub fn literal(&self, name: &str) -> Result<xla::Literal> {
+        let m = self.meta(name)?;
+        if m.dtype != Dtype::F32 {
+            bail!("literal(): only f32 weights expected, got {name}");
+        }
+        literal_f32(&m.shape, self.bytes(name)?)
+    }
+
+    /// Bytes of one tensor (for memory accounting).
+    pub fn nbytes(&self, name: &str) -> Result<usize> {
+        Ok(self.meta(name)?.nbytes)
+    }
+
+    /// Sum of bytes across all tensors whose name starts with `prefix`
+    /// (e.g. every expert of one layer, or the whole MoE share — Tab 2).
+    pub fn bytes_with_prefix(&self, prefix: &str) -> usize {
+        self.metas
+            .values()
+            .filter(|m| m.name.starts_with(prefix))
+            .map(|m| m.nbytes)
+            .sum()
+    }
+
+    /// Names of the four parts of one expert, in artifact argument order.
+    pub fn expert_part_names(block: usize, expert: usize) -> [String; 4] {
+        [
+            format!("blocks.{block}.expert.{expert}.w1"),
+            format!("blocks.{block}.expert.{expert}.b1"),
+            format!("blocks.{block}.expert.{expert}.w2"),
+            format!("blocks.{block}.expert.{expert}.b2"),
+        ]
+    }
+
+    /// Total bytes of one expert (all four parts).
+    pub fn expert_bytes(&self, block: usize, expert: usize) -> Result<usize> {
+        let mut total = 0;
+        for name in Self::expert_part_names(block, expert) {
+            total += self.nbytes(&name)?;
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Build a tiny store on disk and read it back.
+    fn fake_store(dir: &Path) {
+        let t0: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0];
+        let t1: Vec<f32> = vec![0.5; 16];
+        let mut blob: Vec<u8> = Vec::new();
+        for v in &t0 {
+            blob.extend_from_slice(&v.to_le_bytes());
+        }
+        while blob.len() % 64 != 0 {
+            blob.push(0);
+        }
+        let off1 = blob.len();
+        for v in &t1 {
+            blob.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::File::create(dir.join("weights.bin"))
+            .unwrap()
+            .write_all(&blob)
+            .unwrap();
+        let manifest = format!(
+            r#"{{"version":1,"total_bytes":{},"tensors":[
+                {{"name":"a","dtype":"f32","shape":[2,2],"offset":0,"nbytes":16}},
+                {{"name":"blocks.0.expert.3.w1","dtype":"f32","shape":[4,4],"offset":{off1},"nbytes":64}}
+            ]}}"#,
+            blob.len()
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    #[test]
+    fn load_and_read() {
+        let dir = std::env::temp_dir().join(format!("sida_ws_test_{}", std::process::id()));
+        fake_store(&dir);
+        let ws = WeightStore::load(&dir).unwrap();
+        assert!(ws.has("a"));
+        assert_eq!(ws.f32_slice("a").unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(ws.meta("blocks.0.expert.3.w1").unwrap().shape, vec![4, 4]);
+        assert_eq!(ws.bytes_with_prefix("blocks.0.expert."), 64);
+        let lit = ws.literal("a").unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(ws.literal("missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn expert_part_names_format() {
+        let names = WeightStore::expert_part_names(1, 17);
+        assert_eq!(names[0], "blocks.1.expert.17.w1");
+        assert_eq!(names[3], "blocks.1.expert.17.b2");
+    }
+}

@@ -1,0 +1,192 @@
+//! Serving front-end: a line-protocol TCP server over the SiDA pipeline.
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"ids": [1, 17, 42, ..., 2]}          token ids (unpadded ok)
+//!   <- {"id": 3, "label": 2, "latency_ms": 1.9}
+//!   -> {"cmd": "stats"}                       server counters
+//!   -> {"cmd": "shutdown"}
+//!
+//! No tokio in the vendored crate set, so this is a std::net +
+//! thread-per-connection server; the SiDA pipeline behind it is
+//! internally threaded (hash-building / prefetch / inference), matching
+//! the paper's architecture where the front-end only feeds batches.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::hash_thread::HashBuilder;
+use crate::coordinator::pipeline::argmax;
+use crate::experts::{make_policy, ExpertCache};
+use crate::memory::CostModel;
+use crate::model::{ExpertProvider, ForwardOptions, ModelRunner};
+use crate::runtime::ModelBundle;
+use crate::util::json::{obj, Json};
+
+pub struct ServerState {
+    pub runner: ModelRunner,
+    pub hash: HashBuilder,
+    pub cache: Mutex<ExpertCache>,
+    pub k_used: usize,
+    pub served: AtomicU64,
+    pub shutdown: AtomicBool,
+}
+
+impl ServerState {
+    pub fn new(
+        bundle: Arc<ModelBundle>,
+        profile: &str,
+        budget_sim_bytes: usize,
+        k_used: usize,
+    ) -> Result<Self> {
+        let runner = ModelRunner::new(bundle.clone(), profile)?;
+        let hash = HashBuilder::new(&bundle, profile)?;
+        let real = bundle.weights.expert_bytes(bundle.topology.moe_blocks[0], 0)?;
+        let cache = Mutex::new(ExpertCache::new(
+            budget_sim_bytes,
+            CostModel::paper_scale(real),
+            make_policy("fifo")?,
+        ));
+        Ok(ServerState {
+            runner,
+            hash,
+            cache,
+            k_used,
+            served: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    /// Serve one request synchronously (hash build + forward).
+    pub fn serve_one(&self, ids_unpadded: &[i32]) -> Result<(usize, f64)> {
+        let l = self.runner.seq_len;
+        let mut ids = vec![0i32; l];
+        let n = ids_unpadded.len().min(l);
+        ids[..n].copy_from_slice(&ids_unpadded[..n]);
+        let t0 = Instant::now();
+        let req_id = self.served.fetch_add(1, Ordering::SeqCst);
+        let table = self.hash.build(req_id, &ids)?;
+        let mut provider = ExpertProvider::Shared { cache: &self.cache, blocking: true };
+        let out = self.runner.forward(
+            &ids,
+            Some((&table, self.k_used)),
+            &mut provider,
+            ForwardOptions { want_cls: true, ..Default::default() },
+        )?;
+        let label = out.cls_logits.as_ref().map(|v| argmax(v)).unwrap_or(0);
+        Ok((label, t0.elapsed().as_secs_f64()))
+    }
+}
+
+fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    log::info!("connection from {peer}");
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                writeln!(writer, "{}", obj(vec![("error", Json::Str(e.to_string()))]))?;
+                continue;
+            }
+        };
+        if let Some(cmd) = req.opt("cmd") {
+            match cmd.as_str().unwrap_or("") {
+                "stats" => {
+                    let served = state.served.load(Ordering::SeqCst);
+                    let cache = state.cache.lock().unwrap();
+                    let cs = cache.stats().clone();
+                    writeln!(
+                        writer,
+                        "{}",
+                        obj(vec![
+                            ("served", Json::Num(served as f64)),
+                            ("cache_hits", Json::Num(cs.hits as f64)),
+                            ("cache_misses", Json::Num(cs.misses as f64)),
+                            ("device_used_bytes", Json::Num(cache.used() as f64)),
+                        ])
+                    )?;
+                }
+                "shutdown" => {
+                    state.shutdown.store(true, Ordering::SeqCst);
+                    writeln!(writer, "{}", obj(vec![("ok", Json::Bool(true))]))?;
+                    return Ok(());
+                }
+                other => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        obj(vec![("error", Json::Str(format!("unknown cmd '{other}'")))])
+                    )?;
+                }
+            }
+            continue;
+        }
+        let ids: Vec<i32> = match req.get("ids").and_then(|v| v.as_arr().map(|a| a.to_vec())) {
+            Ok(arr) => arr.iter().filter_map(|v| v.as_i64().ok()).map(|v| v as i32).collect(),
+            Err(e) => {
+                writeln!(writer, "{}", obj(vec![("error", Json::Str(e.to_string()))]))?;
+                continue;
+            }
+        };
+        match state.serve_one(&ids) {
+            Ok((label, secs)) => {
+                let id = state.served.load(Ordering::SeqCst) - 1;
+                writeln!(
+                    writer,
+                    "{}",
+                    obj(vec![
+                        ("id", Json::Num(id as f64)),
+                        ("label", Json::Num(label as f64)),
+                        ("latency_ms", Json::Num(secs * 1e3)),
+                    ])
+                )?;
+            }
+            Err(e) => {
+                writeln!(writer, "{}", obj(vec![("error", Json::Str(e.to_string()))]))?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run the TCP server until a `shutdown` command arrives.
+pub fn run_server(state: Arc<ServerState>, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    println!("sida-moe serving on {addr} (model {})", state.runner.bundle.topology.name);
+    let mut handles = Vec::new();
+    loop {
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                let st = state.clone();
+                handles.push(std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(st, stream) {
+                        log::warn!("connection error: {e:#}");
+                    }
+                }));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}

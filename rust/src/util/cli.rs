@@ -1,0 +1,220 @@
+//! Minimal CLI argument parser (no `clap` in the vendored crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands, with generated usage text.  Only what the `sida-moe`
+//! binary, examples and bench harnesses need.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<ArgSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli { name, about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let kind = if spec.is_flag { "" } else { " <value>" };
+            let def = match spec.default {
+                Some(d) => format!(" (default: {d})"),
+                None if spec.is_flag => String::new(),
+                None => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{}{kind}\n      {}{def}\n", spec.name, spec.help));
+        }
+        s
+    }
+
+    /// Parse from an iterator of args (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    out.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{key} needs a value"))?,
+                    };
+                    out.values.insert(key, val);
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        // apply defaults, check required
+        for spec in &self.specs {
+            if spec.is_flag {
+                continue;
+            }
+            if !out.values.contains_key(spec.name) {
+                match spec.default {
+                    Some(d) => {
+                        out.values.insert(spec.name.to_string(), d.to_string());
+                    }
+                    None => return Err(format!("missing required option --{}", spec.name)),
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn parse(&self) -> Args {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Parse args that appear after a subcommand name.
+    pub fn parse_tail(&self, tail: &[String]) -> Args {
+        match self.parse_from(tail.iter().cloned()) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("test", "t")
+            .opt("model", "model name", "switch8")
+            .req("dataset", "dataset name")
+            .flag("verbose", "verbosity")
+    }
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = cli().parse_from(v(&["--dataset", "sst2"])).unwrap();
+        assert_eq!(a.get("model"), Some("switch8"));
+        assert_eq!(a.get("dataset"), Some("sst2"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = cli()
+            .parse_from(v(&["--dataset=mrpc", "--model=switch256", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get("model"), Some("switch256"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse_from(v(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse_from(v(&["--dataset", "x", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cli().parse_from(v(&["serve", "--dataset", "x"])).unwrap();
+        assert_eq!(a.positional, vec!["serve"]);
+    }
+
+    #[test]
+    fn numeric_getters() {
+        let c = Cli::new("n", "n").opt("steps", "s", "10").opt("rate", "r", "1.5");
+        let a = c.parse_from(v(&["--steps", "32"])).unwrap();
+        assert_eq!(a.get_usize("steps", 0), 32);
+        assert!((a.get_f64("rate", 0.0) - 1.5).abs() < 1e-9);
+    }
+}

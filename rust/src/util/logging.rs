@@ -1,0 +1,49 @@
+//! Minimal `log` backend: stderr with level filtering from
+//! `SIDA_LOG` (error|warn|info|debug|trace; default warn).
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger {
+    max: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.max
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{:5}] {}: {}", record.level(), record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent — later calls are no-ops).
+/// The vendored `log` crate is built without its `std` feature, so the
+/// logger is a leaked static rather than `set_boxed_logger`.
+pub fn init() {
+    let level = match std::env::var("SIDA_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("info") => Level::Info,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Warn,
+    };
+    let logger: &'static StderrLogger = Box::leak(Box::new(StderrLogger { max: level }));
+    if log::set_logger(logger).is_ok() {
+        log::set_max_level(LevelFilter::Trace);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::warn!("logging smoke test");
+    }
+}

@@ -1,0 +1,169 @@
+//! Tiny property-based testing harness (no `proptest` in the vendored
+//! crate set).
+//!
+//! Deliberately small: seeded case generation via [`crate::util::rng::Rng`]
+//! plus greedy input shrinking for failing cases.  Properties are written
+//! as closures from a generated value to `Result<(), String>`; on failure
+//! the harness shrinks with user-supplied shrinkers and panics with the
+//! minimal counterexample and its seed so the case can be replayed.
+
+use crate::util::rng::Rng;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop { cases: 128, seed: 0xC0FFEE, max_shrink_steps: 500 }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize) -> Self {
+        Prop { cases, ..Default::default() }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Run `check` on `cases` values from `gen`.  On failure, shrink via
+    /// `shrink` (yielding candidate simpler values) and panic with the
+    /// minimal failing input's Debug rendering.
+    pub fn check<T, G, S, C>(&self, name: &str, mut gen: G, shrink: S, check: C)
+    where
+        T: std::fmt::Debug + Clone,
+        G: FnMut(&mut Rng) -> T,
+        S: Fn(&T) -> Vec<T>,
+        C: Fn(&T) -> Result<(), String>,
+    {
+        let mut rng = Rng::new(self.seed);
+        for case in 0..self.cases {
+            let mut input = gen(&mut rng);
+            if let Err(mut msg) = check(&input) {
+                // greedy shrink
+                let mut steps = 0;
+                'outer: while steps < self.max_shrink_steps {
+                    for cand in shrink(&input) {
+                        steps += 1;
+                        if let Err(m2) = check(&cand) {
+                            input = cand;
+                            msg = m2;
+                            continue 'outer;
+                        }
+                        if steps >= self.max_shrink_steps {
+                            break;
+                        }
+                    }
+                    break;
+                }
+                panic!(
+                    "property '{name}' failed (case {case}, seed {:#x}):\n  input: {:?}\n  error: {msg}",
+                    self.seed, input
+                );
+            }
+        }
+    }
+}
+
+/// Shrinker for vectors: drop halves, drop single elements, shrink tails.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = v.len();
+    if n == 0 {
+        return out;
+    }
+    out.push(v[..n / 2].to_vec());
+    out.push(v[n / 2..].to_vec());
+    if n <= 16 {
+        for i in 0..n {
+            let mut c = v.to_vec();
+            c.remove(i);
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Shrinker for unsigned scalars: 0, halves, decrements.
+pub fn shrink_usize(x: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if x > 0 {
+        out.push(0);
+        out.push(x / 2);
+        out.push(x - 1);
+    }
+    out.sort_unstable();
+    out.dedup();
+    out.retain(|&v| v != x);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Prop::new(64).check(
+            "reverse twice is identity",
+            |r| (0..r.usize_below(20)).map(|_| r.next_u64()).collect::<Vec<_>>(),
+            |v| shrink_vec(v),
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v { Ok(()) } else { Err("mismatch".into()) }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'sum < 100'")]
+    fn failing_property_panics_with_name() {
+        Prop::new(64).check(
+            "sum < 100",
+            |r| (0..10).map(|_| r.usize_below(50)).collect::<Vec<usize>>(),
+            |v| shrink_vec(v),
+            |v| {
+                if v.iter().sum::<usize>() < 100 {
+                    Ok(())
+                } else {
+                    Err(format!("sum = {}", v.iter().sum::<usize>()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // property: no element >= 1000. The shrinker should reduce the
+        // vector to (nearly) a single offending element.
+        let result = std::panic::catch_unwind(|| {
+            Prop::new(256).check(
+                "all < 1000",
+                |r| (0..20).map(|_| r.usize_below(1200)).collect::<Vec<usize>>(),
+                |v| shrink_vec(v),
+                |v| {
+                    if v.iter().all(|&x| x < 1000) {
+                        Ok(())
+                    } else {
+                        Err("big element".into())
+                    }
+                },
+            )
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // the minimal input reported should be a short vector
+        let inside = msg.split("input: ").nth(1).unwrap();
+        let commas = inside.split(']').next().unwrap().matches(',').count();
+        assert!(commas <= 4, "shrunk input still long: {msg}");
+    }
+}

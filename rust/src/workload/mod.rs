@@ -1,0 +1,13 @@
+//! Workload substrate: synthetic request traces mirroring the dataset
+//! profiles of `python/compile/data.py` (SST2-short, MRPC-mid,
+//! MultiRC-long), plus arrival processes.
+//!
+//! The token model is the same topic-clustered construction the Python
+//! side trains on — `topic_frac` of a sentence's tokens Zipf-drawn from
+//! a topic band, the rest from a global tail — so the hash function sees
+//! serving traffic from the distribution it was trained on (data-aware
+//! by construction, exactly the paper's setting).
+
+pub mod trace;
+
+pub use trace::{ArrivalProcess, Profile, Request, TraceGenerator};

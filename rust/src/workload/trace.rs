@@ -1,0 +1,207 @@
+//! Synthetic sentence/trace generation (Rust twin of data.py).
+
+use crate::util::rng::Rng;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const CONTENT_START: i32 = 3;
+
+/// Dataset profile: length band + padded model sequence length.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub name: String,
+    pub seq_len: usize,
+    pub min_len: usize,
+    pub max_len: usize,
+    pub n_topics: usize,
+    pub zipf_a: f64,
+    pub topic_frac: f64,
+}
+
+impl Profile {
+    /// The three paper datasets (must agree with configs.DATASET_PROFILES).
+    pub fn named(name: &str) -> anyhow::Result<Profile> {
+        let (seq_len, min_len, max_len) = match name {
+            "sst2" => (32, 5, 30),
+            "mrpc" => (96, 40, 90),
+            "multirc" => (256, 150, 250),
+            other => anyhow::bail!("unknown profile '{other}' (sst2|mrpc|mrpc|multirc)"),
+        };
+        Ok(Profile {
+            name: name.to_string(),
+            seq_len,
+            min_len,
+            max_len,
+            n_topics: 4,
+            zipf_a: 1.3,
+            topic_frac: 0.75,
+        })
+    }
+
+    pub fn all() -> Vec<Profile> {
+        ["sst2", "mrpc", "multirc"]
+            .iter()
+            .map(|n| Profile::named(n).unwrap())
+            .collect()
+    }
+}
+
+/// One serving request (batch of 1, per the paper's B=1 evaluation).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// padded token ids, len == profile.seq_len
+    pub ids: Vec<i32>,
+    /// true token count incl BOS/EOS
+    pub n_tokens: usize,
+    /// topic id (classification label twin)
+    pub label: usize,
+    /// seconds after trace start at which the request arrives
+    pub arrival: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalProcess {
+    /// next request is issued the moment the previous completes
+    ClosedLoop,
+    /// Poisson arrivals at `rate` requests/sec
+    Poisson { rate: f64 },
+}
+
+pub struct TraceGenerator {
+    pub profile: Profile,
+    pub vocab: usize,
+    rng: Rng,
+    band: usize,
+    n_content: usize,
+}
+
+impl TraceGenerator {
+    pub fn new(profile: Profile, vocab: usize, seed: u64) -> Self {
+        let n_content = vocab - CONTENT_START as usize;
+        let band = n_content / profile.n_topics;
+        TraceGenerator { profile, vocab, rng: Rng::new(seed), band, n_content }
+    }
+
+    /// Sample one padded sentence; returns (ids, true_len, topic).
+    pub fn sentence(&mut self) -> (Vec<i32>, usize, usize) {
+        let p = &self.profile;
+        let topic = self.rng.usize_below(p.n_topics);
+        let mut length = self.rng.range(p.min_len as u64, p.max_len as u64 + 1) as usize;
+        length = length.min(p.seq_len - 2);
+        let n_topic_tok = (p.topic_frac * length as f64).round() as usize;
+        let band_lo = CONTENT_START as usize + topic * self.band;
+        let mut body: Vec<i32> = Vec::with_capacity(length);
+        for _ in 0..n_topic_tok {
+            body.push((band_lo + self.rng.zipf(self.band, p.zipf_a)) as i32);
+        }
+        for _ in n_topic_tok..length {
+            body.push(CONTENT_START + self.rng.zipf(self.n_content, 1.05) as i32);
+        }
+        self.rng.shuffle(&mut body);
+        let mut ids = vec![PAD; p.seq_len];
+        ids[0] = BOS;
+        ids[1..1 + length].copy_from_slice(&body);
+        ids[1 + length] = EOS;
+        (ids, length + 2, topic)
+    }
+
+    /// Generate a trace of `n` requests under an arrival process.
+    pub fn trace(&mut self, n: usize, arrivals: ArrivalProcess) -> Vec<Request> {
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0f64;
+        for id in 0..n {
+            let (ids, n_tokens, label) = self.sentence();
+            let arrival = match arrivals {
+                ArrivalProcess::ClosedLoop => 0.0,
+                ArrivalProcess::Poisson { rate } => {
+                    t += self.rng.exp(rate);
+                    t
+                }
+            };
+            out.push(Request { id: id as u64, ids, n_tokens, label, arrival });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sentence_structure() {
+        let mut g = TraceGenerator::new(Profile::named("sst2").unwrap(), 256, 1);
+        for _ in 0..50 {
+            let (ids, n, topic) = g.sentence();
+            assert_eq!(ids.len(), 32);
+            assert_eq!(ids[0], BOS);
+            assert!(topic < 4);
+            assert!((7..=32).contains(&n));
+            // EOS directly after body; padding after
+            assert_eq!(ids[n - 1], EOS);
+            for &t in &ids[n..] {
+                assert_eq!(t, PAD);
+            }
+            for &t in &ids[1..n - 1] {
+                assert!((CONTENT_START..256).contains(&t));
+            }
+        }
+    }
+
+    #[test]
+    fn length_bands_match_profiles() {
+        for p in Profile::all() {
+            let mut g = TraceGenerator::new(p.clone(), 256, 3);
+            for _ in 0..20 {
+                let (_, n, _) = g.sentence();
+                assert!(n >= p.min_len.min(p.seq_len - 2));
+                assert!(n <= p.seq_len);
+            }
+        }
+    }
+
+    #[test]
+    fn topic_band_dominates() {
+        let p = Profile::named("mrpc").unwrap();
+        let mut g = TraceGenerator::new(p, 256, 5);
+        // a sentence's tokens should concentrate in one band
+        let (ids, n, topic) = g.sentence();
+        let band = (256 - CONTENT_START as usize) / 4;
+        let lo = CONTENT_START as usize + topic * band;
+        let hi = lo + band;
+        let in_band = ids[1..n - 1]
+            .iter()
+            .filter(|&&t| (t as usize) >= lo && (t as usize) < hi)
+            .count();
+        assert!(in_band as f64 >= 0.5 * (n - 2) as f64);
+    }
+
+    #[test]
+    fn poisson_arrivals_increase() {
+        let mut g = TraceGenerator::new(Profile::named("sst2").unwrap(), 256, 7);
+        let tr = g.trace(20, ArrivalProcess::Poisson { rate: 100.0 });
+        for w in tr.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        assert!(tr.last().unwrap().arrival > 0.0);
+    }
+
+    #[test]
+    fn closed_loop_arrivals_zero() {
+        let mut g = TraceGenerator::new(Profile::named("sst2").unwrap(), 256, 7);
+        let tr = g.trace(5, ArrivalProcess::ClosedLoop);
+        assert!(tr.iter().all(|r| r.arrival == 0.0));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let p = Profile::named("sst2").unwrap();
+        let a = TraceGenerator::new(p.clone(), 256, 42).trace(5, ArrivalProcess::ClosedLoop);
+        let b = TraceGenerator::new(p, 256, 42).trace(5, ArrivalProcess::ClosedLoop);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.ids, y.ids);
+        }
+    }
+}

@@ -1,0 +1,353 @@
+//! Artifact-backed integration tests: load the real switch8 bundle and
+//! check the Rust serving stack against the Python goldens emitted at
+//! build time (`artifacts/switch8/golden.json`).
+//!
+//! These tests are skipped (with a visible message) if artifacts are
+//! missing — run `make artifacts` first.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use sida_moe::coordinator::HashBuilder;
+use sida_moe::experts::{make_policy, ExpertCache};
+use sida_moe::memory::CostModel;
+use sida_moe::model::{ExpertProvider, ForwardOptions, ModelRunner};
+use sida_moe::runtime::ModelBundle;
+use sida_moe::util::json::Json;
+
+fn artifacts_root() -> Option<PathBuf> {
+    let root = sida_moe::default_artifacts_root();
+    if root.join("switch8").join("model.json").is_file() {
+        Some(root)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn bundle() -> Option<Arc<ModelBundle>> {
+    let root = artifacts_root()?;
+    Some(Arc::new(ModelBundle::load_named(&root, "switch8").expect("load bundle")))
+}
+
+fn golden(bundle: &ModelBundle) -> Json {
+    let text =
+        std::fs::read_to_string(bundle.engine.artifacts_dir().join("golden.json")).unwrap();
+    Json::parse(&text).unwrap()
+}
+
+fn ids_of(sentence: &Json) -> Vec<Vec<i32>> {
+    sentence
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|row| {
+            row.as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_i64().unwrap() as i32)
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn manifest_weights_and_topology_consistent() {
+    let Some(b) = bundle() else { return };
+    let topo = &b.topology;
+    // every expert of every MoE layer is individually addressable
+    for &blk in &topo.moe_blocks {
+        for e in 0..topo.num_experts {
+            let bytes = b.weights.expert_bytes(blk, e).unwrap();
+            assert_eq!(bytes, topo.expert_param_bytes, "expert ({blk},{e})");
+        }
+    }
+    // Tab 2 shape: MoE bytes dominate as expert count grows; for switch8
+    // at tiny dims just check the bookkeeping matches the manifest
+    let moe_from_manifest: usize = topo
+        .moe_blocks
+        .iter()
+        .map(|&blk| b.weights.bytes_with_prefix(&format!("blocks.{blk}.expert.")))
+        .sum();
+    assert_eq!(moe_from_manifest, topo.moe_param_bytes);
+}
+
+#[test]
+fn router_decisions_match_python_golden() {
+    let Some(b) = bundle() else { return };
+    let g = golden(&b);
+    let runner = ModelRunner::new(b.clone(), "sst2").unwrap();
+    let prof = g.get("profiles").unwrap().get("sst2").unwrap();
+    let ids = ids_of(prof.get("ids").unwrap());
+    let want_idx = prof.get("router_idx").unwrap(); // [B][M][L]
+    let staged = runner.stage_all_experts().unwrap();
+    for (s, sent_ids) in ids.iter().enumerate() {
+        let mut provider = ExpertProvider::AllResident(&staged);
+        let out = runner
+            .forward(sent_ids, None, &mut provider, ForwardOptions::default())
+            .unwrap();
+        let mask = ModelRunner::mask_of(sent_ids);
+        for (m, routing) in out.routing.iter().enumerate() {
+            let want: Vec<usize> = want_idx.as_arr().unwrap()[s].as_arr().unwrap()[m]
+                .usize_vec()
+                .unwrap();
+            for (t, (&got, &want)) in routing.top1.iter().zip(want.iter()).enumerate() {
+                if mask[t] > 0.0 {
+                    assert_eq!(got, want, "sentence {s} layer {m} token {t}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hash_tables_match_python_golden() {
+    let Some(b) = bundle() else { return };
+    let g = golden(&b);
+    for profile in ["sst2", "mrpc", "multirc"] {
+        let builder = HashBuilder::new(&b, profile).unwrap();
+        let prof = g.get("profiles").unwrap().get(profile).unwrap();
+        let ids = ids_of(prof.get("ids").unwrap());
+        let want = prof.get("hash_top_idx").unwrap(); // [B][L][M][K]
+        for (s, sent_ids) in ids.iter().enumerate() {
+            let table = builder.build(s as u64, sent_ids).unwrap();
+            let ws = &want.as_arr().unwrap()[s];
+            for t in 0..table.seq_len {
+                for m in 0..table.m {
+                    for r in 0..table.k {
+                        let w = ws.as_arr().unwrap()[t].as_arr().unwrap()[m]
+                            .as_arr()
+                            .unwrap()[r]
+                            .as_usize()
+                            .unwrap();
+                        assert_eq!(
+                            table.expert_at(t, m, r),
+                            w,
+                            "{profile} s{s} t{t} m{m} r{r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lm_logits_match_python_golden_slice() {
+    let Some(b) = bundle() else { return };
+    let g = golden(&b);
+    let runner = ModelRunner::new(b.clone(), "sst2").unwrap();
+    let prof = g.get("profiles").unwrap().get("sst2").unwrap();
+    let ids = ids_of(prof.get("ids").unwrap());
+    let want_slice = prof.get("lm_logits_slice").unwrap(); // [B][4][8]
+    let staged = runner.stage_all_experts().unwrap();
+    let v = b.topology.vocab;
+    for (s, sent_ids) in ids.iter().enumerate() {
+        let mut provider = ExpertProvider::AllResident(&staged);
+        let out = runner
+            .forward(
+                sent_ids,
+                None,
+                &mut provider,
+                ForwardOptions { want_lm: true, want_cls: true, ..Default::default() },
+            )
+            .unwrap();
+        let lm = out.lm_logits.unwrap();
+        for t in 0..4 {
+            for c in 0..8 {
+                let want = want_slice.as_arr().unwrap()[s].as_arr().unwrap()[t]
+                    .as_arr()
+                    .unwrap()[c]
+                    .as_f64()
+                    .unwrap() as f32;
+                let got = lm[t * v + c];
+                assert!(
+                    (got - want).abs() < 2e-2 + 0.01 * want.abs(),
+                    "sentence {s} tok {t} vocab {c}: {got} vs {want}"
+                );
+            }
+        }
+        // classifier agreement
+        let want_cls: Vec<f64> = prof.get("cls_logits").unwrap().as_arr().unwrap()[s]
+            .f64_vec()
+            .unwrap();
+        let got_cls = out.cls_logits.unwrap();
+        let got_arg = sida_moe::coordinator::argmax(&got_cls);
+        let want_arg = want_cls
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(got_arg, want_arg, "sentence {s} classifier argmax");
+    }
+}
+
+#[test]
+fn sida_forward_equals_router_forward_when_hash_is_perfect() {
+    // If we build a hash table FROM the router's decisions, the SiDA
+    // path must reproduce the router path bit-for-bit (same experts,
+    // same alphas).
+    let Some(b) = bundle() else { return };
+    let runner = ModelRunner::new(b.clone(), "sst2").unwrap();
+    let staged = runner.stage_all_experts().unwrap();
+    let mut gen = sida_moe::workload::TraceGenerator::new(
+        sida_moe::workload::Profile::named("sst2").unwrap(),
+        b.topology.vocab,
+        3,
+    );
+    let (ids, _, _) = gen.sentence();
+
+    let mut provider = ExpertProvider::AllResident(&staged);
+    let base = runner
+        .forward(&ids, None, &mut provider, ForwardOptions { want_lm: true, ..Default::default() })
+        .unwrap();
+
+    // fabricate a "perfect" hash table from the observed routing
+    let l = runner.seq_len;
+    let m = b.topology.num_moe_layers();
+    let k = b.topology.hash.top_k;
+    let mut idx = vec![0i32; l * m * k];
+    let mut alpha = vec![0f32; l * m * k];
+    for (mi, routing) in base.routing.iter().enumerate() {
+        for t in 0..l {
+            let (e, a) = routing.assignments[t][0];
+            idx[(t * m + mi) * k] = e as i32;
+            alpha[(t * m + mi) * k] = a;
+        }
+    }
+    let table = sida_moe::coordinator::HashTable::new(0, l, m, k, idx, alpha, 0.0).unwrap();
+
+    let mut provider = ExpertProvider::AllResident(&staged);
+    let sida = runner
+        .forward(
+            &ids,
+            Some((&table, 1)),
+            &mut provider,
+            ForwardOptions { want_lm: true, ..Default::default() },
+        )
+        .unwrap();
+
+    let base_lm = base.lm_logits.unwrap();
+    let sida_lm = sida.lm_logits.unwrap();
+    for (i, (a, c)) in base_lm.iter().zip(sida_lm.iter()).enumerate() {
+        assert!((a - c).abs() < 1e-3, "lm logit {i}: {a} vs {c}");
+    }
+}
+
+#[test]
+fn cached_provider_matches_all_resident_numerically() {
+    let Some(b) = bundle() else { return };
+    let runner = ModelRunner::new(b.clone(), "sst2").unwrap();
+    let staged = runner.stage_all_experts().unwrap();
+    let mut gen = sida_moe::workload::TraceGenerator::new(
+        sida_moe::workload::Profile::named("sst2").unwrap(),
+        b.topology.vocab,
+        11,
+    );
+    let (ids, _, _) = gen.sentence();
+    let mut p1 = ExpertProvider::AllResident(&staged);
+    let o1 = runner.forward(&ids, None, &mut p1, ForwardOptions::default()).unwrap();
+
+    let real = b.weights.expert_bytes(b.topology.moe_blocks[0], 0).unwrap();
+    let mut cache = ExpertCache::new(
+        1 << 30,
+        CostModel::physical(real),
+        make_policy("fifo").unwrap(),
+    );
+    let mut p2 = ExpertProvider::Cached { cache: &mut cache, blocking: true };
+    let o2 = runner.forward(&ids, None, &mut p2, ForwardOptions::default()).unwrap();
+    for (a, c) in o1.hidden.iter().zip(o2.hidden.iter()) {
+        assert!((a - c).abs() < 1e-4);
+    }
+    cache.check_invariants().unwrap();
+    assert!(cache.stats().misses > 0);
+
+    // a second pass over the same sentence must be all hits
+    let miss_before = cache.stats().misses;
+    let mut p3 = ExpertProvider::Cached { cache: &mut cache, blocking: true };
+    let _ = runner.forward(&ids, None, &mut p3, ForwardOptions::default()).unwrap();
+    assert_eq!(cache.stats().misses, miss_before, "second pass should hit");
+}
+
+#[test]
+fn host_literal_provider_matches_buffers() {
+    let Some(b) = bundle() else { return };
+    let runner = ModelRunner::new(b.clone(), "sst2").unwrap();
+    let staged = runner.stage_all_experts().unwrap();
+    let mut gen = sida_moe::workload::TraceGenerator::new(
+        sida_moe::workload::Profile::named("sst2").unwrap(),
+        b.topology.vocab,
+        13,
+    );
+    let (ids, _, _) = gen.sentence();
+    let mut p1 = ExpertProvider::AllResident(&staged);
+    let o1 = runner.forward(&ids, None, &mut p1, ForwardOptions::default()).unwrap();
+    let mut p2 = ExpertProvider::HostLiterals;
+    let o2 = runner.forward(&ids, None, &mut p2, ForwardOptions::default()).unwrap();
+    for (a, c) in o1.hidden.iter().zip(o2.hidden.iter()) {
+        assert!((a - c).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn invoke_all_matches_selective_numerics() {
+    // Standard's "invoke every expert" must not change outputs — idle
+    // experts contribute zero (their token set is empty / zero alpha).
+    let Some(b) = bundle() else { return };
+    let runner = ModelRunner::new(b.clone(), "sst2").unwrap();
+    let staged = runner.stage_all_experts().unwrap();
+    let mut gen = sida_moe::workload::TraceGenerator::new(
+        sida_moe::workload::Profile::named("sst2").unwrap(),
+        b.topology.vocab,
+        17,
+    );
+    let (ids, _, _) = gen.sentence();
+    let mut p1 = ExpertProvider::AllResident(&staged);
+    let o1 = runner.forward(&ids, None, &mut p1, ForwardOptions::default()).unwrap();
+    let mut p2 = ExpertProvider::AllResident(&staged);
+    let o2 = runner
+        .forward(
+            &ids,
+            None,
+            &mut p2,
+            ForwardOptions { invoke_all: true, fixed_bucket: true, ..Default::default() },
+        )
+        .unwrap();
+    for (a, c) in o1.hidden.iter().zip(o2.hidden.iter()) {
+        assert!((a - c).abs() < 1e-4);
+    }
+    assert!(o2.times.expert_invocations > o1.times.expert_invocations);
+}
+
+#[test]
+fn lm_nll_matches_golden_mean() {
+    let Some(b) = bundle() else { return };
+    let g = golden(&b);
+    let runner = ModelRunner::new(b.clone(), "sst2").unwrap();
+    let prof = g.get("profiles").unwrap().get("sst2").unwrap();
+    let ids = ids_of(prof.get("ids").unwrap());
+    let want_mean = prof.get_f64("lm_mean_nll").unwrap();
+    let staged = runner.stage_all_experts().unwrap();
+    let mut total_nll = 0.0;
+    let mut total_tok = 0.0;
+    for sent_ids in &ids {
+        let mut p = ExpertProvider::AllResident(&staged);
+        let out = runner
+            .forward(
+                sent_ids,
+                None,
+                &mut p,
+                ForwardOptions { want_lm: true, ..Default::default() },
+            )
+            .unwrap();
+        let (nll, cnt) = runner.lm_nll(&out.lm_logits.unwrap(), sent_ids).unwrap();
+        total_nll += nll;
+        total_tok += cnt;
+    }
+    let got_mean = total_nll / total_tok;
+    assert!(
+        (got_mean - want_mean).abs() < 0.02 * want_mean.abs() + 0.02,
+        "mean NLL {got_mean} vs golden {want_mean}"
+    );
+}

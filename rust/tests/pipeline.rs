@@ -1,0 +1,206 @@
+//! End-to-end pipeline tests: the two-thread SiDA coordinator over real
+//! artifacts, plus cross-method behavioural checks.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use sida_moe::baselines::{run_baseline, BaselineConfig, Method};
+use sida_moe::coordinator::{Pipeline, PipelineConfig};
+use sida_moe::runtime::ModelBundle;
+use sida_moe::workload::{ArrivalProcess, Profile, TraceGenerator};
+
+fn artifacts_root() -> Option<PathBuf> {
+    let root = sida_moe::default_artifacts_root();
+    if root.join("switch8").join("model.json").is_file() {
+        Some(root)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn bundle() -> Option<Arc<ModelBundle>> {
+    let root = artifacts_root()?;
+    Some(Arc::new(ModelBundle::load_named(&root, "switch8").expect("load bundle")))
+}
+
+fn trace(b: &ModelBundle, n: usize, seed: u64) -> Vec<sida_moe::workload::Request> {
+    let mut gen =
+        TraceGenerator::new(Profile::named("sst2").unwrap(), b.topology.vocab, seed);
+    gen.trace(n, ArrivalProcess::ClosedLoop)
+}
+
+#[test]
+fn pipeline_serves_every_request_exactly_once() {
+    let Some(b) = bundle() else { return };
+    let reqs = trace(&b, 10, 0);
+    let p = Pipeline::new(b, "sst2", PipelineConfig::default()).unwrap();
+    let out = p.serve(&reqs).unwrap();
+    assert_eq!(out.stats.requests, 10);
+    let mut ids: Vec<u64> = out.per_request.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..10).collect::<Vec<u64>>());
+    // two-thread overlap: hash building happened
+    assert!(out.stats.hash_build_secs > 0.0);
+    // cache was exercised
+    assert!(out.stats.cache_hits + out.stats.cache_misses > 0);
+}
+
+#[test]
+fn pipeline_respects_memory_budget() {
+    let Some(b) = bundle() else { return };
+    let reqs = trace(&b, 8, 1);
+    // budget of exactly 3 paper-scale experts
+    let expert_sim = sida_moe::memory::CostModel::paper_scale(
+        b.weights.expert_bytes(b.topology.moe_blocks[0], 0).unwrap(),
+    )
+    .sim_expert_bytes;
+    let cfg = PipelineConfig {
+        budget_sim_bytes: 3 * expert_sim + 1024,
+        ..Default::default()
+    };
+    let p = Pipeline::new(b, "sst2", cfg).unwrap();
+    let out = p.serve(&reqs).unwrap();
+    assert_eq!(out.stats.requests, 8);
+    assert!(
+        out.stats.peak_device_bytes <= 3 * expert_sim + 1024,
+        "peak {} exceeds budget",
+        out.stats.peak_device_bytes
+    );
+    assert!(out.stats.evictions > 0, "tight budget must evict");
+    let cache = p.cache.lock().unwrap();
+    cache.check_invariants().unwrap();
+}
+
+#[test]
+fn prefetch_reduces_blocking_misses() {
+    let Some(b) = bundle() else { return };
+    let reqs = trace(&b, 12, 2);
+    let with = Pipeline::new(
+        b.clone(),
+        "sst2",
+        PipelineConfig { prefetch: true, ..Default::default() },
+    )
+    .unwrap()
+    .serve(&reqs)
+    .unwrap();
+    let without = Pipeline::new(
+        b,
+        "sst2",
+        PipelineConfig { prefetch: false, ..Default::default() },
+    )
+    .unwrap()
+    .serve(&reqs)
+    .unwrap();
+    assert!(
+        with.stats.blocking_misses <= without.stats.blocking_misses,
+        "prefetch ({}) should not block more than no-prefetch ({})",
+        with.stats.blocking_misses,
+        without.stats.blocking_misses
+    );
+    // with prefetch, (nearly) all misses come from the prefetch stage
+    assert!(with.stats.blocking_misses < with.stats.cache_misses.max(1));
+}
+
+#[test]
+fn standard_invokes_every_expert_sida_does_not() {
+    let Some(b) = bundle() else { return };
+    let reqs = trace(&b, 4, 3);
+    let e = b.topology.num_experts as u64;
+    let m = b.topology.num_moe_layers() as u64;
+
+    let std_out = run_baseline(
+        b.clone(),
+        "sst2",
+        Method::Standard,
+        &reqs,
+        &BaselineConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(
+        std_out.stats.phases.expert_invocations,
+        e * m * reqs.len() as u64,
+        "Standard must invoke every expert every layer (paper §2.3)"
+    );
+
+    let sida_out = Pipeline::new(b, "sst2", PipelineConfig::default())
+        .unwrap()
+        .serve(&reqs)
+        .unwrap();
+    assert!(
+        sida_out.stats.phases.expert_invocations < std_out.stats.phases.expert_invocations,
+        "SiDA must invoke fewer experts"
+    );
+}
+
+#[test]
+fn sida_and_baseline_agree_on_classifier_when_hash_is_accurate() {
+    // cls predictions from SiDA (hash routing) should mostly agree with
+    // the router-driven baseline — fidelity (Tab 4's mechanism)
+    let Some(b) = bundle() else { return };
+    let reqs = trace(&b, 10, 4);
+    let bcfg = BaselineConfig { want_cls: true, ..Default::default() };
+    let base = run_baseline(b.clone(), "sst2", Method::TutelLike, &reqs, &bcfg).unwrap();
+    let pcfg = PipelineConfig { want_cls: true, ..Default::default() };
+    let sida = Pipeline::new(b, "sst2", pcfg).unwrap().serve(&reqs).unwrap();
+    let mut sida_sorted = sida.per_request.clone();
+    sida_sorted.sort_by_key(|r| r.id);
+    let mut base_sorted = base.per_request.clone();
+    base_sorted.sort_by_key(|r| r.id);
+    let agree = sida_sorted
+        .iter()
+        .zip(base_sorted.iter())
+        .filter(|(a, b)| a.cls_pred == b.cls_pred)
+        .count();
+    assert!(
+        agree * 10 >= reqs.len() * 8,
+        "classifier agreement too low: {agree}/{}",
+        reqs.len()
+    );
+}
+
+#[test]
+fn layerwise_transfers_more_than_sida_under_same_budget() {
+    let Some(b) = bundle() else { return };
+    let reqs = trace(&b, 6, 5);
+    let expert_sim = sida_moe::memory::CostModel::paper_scale(
+        b.weights.expert_bytes(b.topology.moe_blocks[0], 0).unwrap(),
+    )
+    .sim_expert_bytes;
+    let budget = 6 * expert_sim; // below one full layer (8 experts)
+
+    let lw = run_baseline(
+        b.clone(),
+        "sst2",
+        Method::Layerwise,
+        &reqs,
+        &BaselineConfig { budget_sim_bytes: budget, ..Default::default() },
+    )
+    .unwrap();
+    let sida = Pipeline::new(
+        b,
+        "sst2",
+        PipelineConfig { budget_sim_bytes: budget, ..Default::default() },
+    )
+    .unwrap()
+    .serve(&reqs)
+    .unwrap();
+    assert!(
+        sida.stats.transferred_bytes < lw.stats.transferred_bytes,
+        "SiDA ({}) must move fewer bytes than layer streaming ({})",
+        sida.stats.transferred_bytes,
+        lw.stats.transferred_bytes
+    );
+}
+
+#[test]
+fn server_state_serves_requests() {
+    let Some(b) = bundle() else { return };
+    let state =
+        sida_moe::server::ServerState::new(b, "sst2", 8 << 30, 1).unwrap();
+    let (label, secs) = state.serve_one(&[1, 40, 41, 42, 2]).unwrap();
+    assert!(label < 4);
+    assert!(secs > 0.0);
+    let (label2, _) = state.serve_one(&[1, 40, 41, 42, 2]).unwrap();
+    assert_eq!(label, label2, "same input, same prediction");
+}

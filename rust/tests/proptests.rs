@@ -1,0 +1,433 @@
+//! Property-based tests over the pure-logic substrates (no artifacts
+//! needed): device pool, eviction policies, hash table, batcher, JSON
+//! round-trips, cost model, histogram quantiles, workload structure.
+//!
+//! Uses the in-repo `util::prop` harness (the vendored crate set has no
+//! proptest); failing cases shrink and report a replayable seed.
+
+use std::collections::HashSet;
+
+use sida_moe::coordinator::{AdmitOutcome, Batcher, HashTable};
+use sida_moe::experts::{make_policy, ExpertKey};
+use sida_moe::memory::{CostModel, DevicePool, ReserveOutcome};
+use sida_moe::metrics::LatencyHistogram;
+use sida_moe::util::json::Json;
+use sida_moe::util::prop::{shrink_vec, Prop};
+use sida_moe::util::rng::Rng;
+use sida_moe::workload::Request;
+
+// ---------------------------------------------------------------------------
+// DevicePool: used <= budget under arbitrary reserve/release sequences
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum PoolOp {
+    Reserve(u8, usize),
+    Release(u8),
+}
+
+fn gen_pool_ops(r: &mut Rng) -> Vec<PoolOp> {
+    (0..r.usize_below(60))
+        .map(|_| {
+            if r.bool(0.6) {
+                PoolOp::Reserve(r.below(12) as u8, r.usize_below(40))
+            } else {
+                PoolOp::Release(r.below(12) as u8)
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn pool_never_exceeds_budget() {
+    Prop::new(256).check(
+        "pool: used <= budget, accounting consistent",
+        gen_pool_ops,
+        |v| shrink_vec(v),
+        |ops| {
+            let budget = 100;
+            let mut pool: DevicePool<u8> = DevicePool::new(budget);
+            let mut model: std::collections::HashMap<u8, usize> = Default::default();
+            for op in ops {
+                match op {
+                    PoolOp::Reserve(k, b) => {
+                        let out = pool.reserve(*k, *b);
+                        match out {
+                            ReserveOutcome::Ok => {
+                                model.insert(*k, *b);
+                            }
+                            ReserveOutcome::AlreadyResident => {
+                                if !model.contains_key(k) {
+                                    return Err("AlreadyResident but model disagrees".into());
+                                }
+                            }
+                            ReserveOutcome::WouldExceed => {
+                                let used: usize = model.values().sum();
+                                if used + b <= budget {
+                                    return Err(format!(
+                                        "WouldExceed but {used}+{b} <= {budget}"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                    PoolOp::Release(k) => {
+                        let freed = pool.release(k);
+                        let want = model.remove(k).unwrap_or(0);
+                        if freed != want {
+                            return Err(format!("release {k}: {freed} != {want}"));
+                        }
+                    }
+                }
+                let used: usize = model.values().sum();
+                if pool.used() != used {
+                    return Err(format!("used {} != model {used}", pool.used()));
+                }
+                if pool.used() > budget {
+                    return Err("budget exceeded".into());
+                }
+                if pool.peak() < pool.used() {
+                    return Err("peak below used".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Eviction policies: victims are resident, never pinned
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum CacheOp {
+    Insert(u8),
+    Access(u8),
+    Evict,
+    Pin(u8),
+    Unpin(u8),
+}
+
+fn gen_cache_ops(r: &mut Rng) -> Vec<CacheOp> {
+    (0..r.usize_below(80))
+        .map(|_| match r.below(5) {
+            0 | 1 => CacheOp::Insert(r.below(10) as u8),
+            2 => CacheOp::Access(r.below(10) as u8),
+            3 => CacheOp::Evict,
+            _ => {
+                if r.bool(0.5) {
+                    CacheOp::Pin(r.below(10) as u8)
+                } else {
+                    CacheOp::Unpin(r.below(10) as u8)
+                }
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn policies_never_evict_pinned_and_track_membership() {
+    for policy_name in ["fifo", "lru", "lfu", "clock"] {
+        Prop::new(128).check(
+            policy_name,
+            gen_cache_ops,
+            |v| shrink_vec(v),
+            |ops| {
+                let mut policy = make_policy(policy_name).unwrap();
+                let mut resident: HashSet<ExpertKey> = HashSet::new();
+                let mut pinned: HashSet<ExpertKey> = HashSet::new();
+                for op in ops {
+                    match op {
+                        CacheOp::Insert(e) => {
+                            let k = ExpertKey::new(0, *e as usize);
+                            if resident.insert(k) {
+                                policy.on_insert(k);
+                            }
+                        }
+                        CacheOp::Access(e) => {
+                            let k = ExpertKey::new(0, *e as usize);
+                            if resident.contains(&k) {
+                                policy.on_access(k);
+                            }
+                        }
+                        CacheOp::Pin(e) => {
+                            let k = ExpertKey::new(0, *e as usize);
+                            if resident.contains(&k) {
+                                pinned.insert(k);
+                            }
+                        }
+                        CacheOp::Unpin(e) => {
+                            pinned.remove(&ExpertKey::new(0, *e as usize));
+                        }
+                        CacheOp::Evict => match policy.victim(&pinned) {
+                            Some(v) => {
+                                if !resident.remove(&v) {
+                                    return Err(format!("victim {v:?} not resident"));
+                                }
+                                if pinned.contains(&v) {
+                                    return Err(format!("evicted pinned {v:?}"));
+                                }
+                            }
+                            None => {
+                                if !resident.iter().all(|k| pinned.contains(k)) {
+                                    return Err(
+                                        "no victim though unpinned entries exist".into()
+                                    );
+                                }
+                            }
+                        },
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn fifo_evicts_in_insertion_order() {
+    Prop::new(128).check(
+        "fifo order",
+        |r| {
+            let mut seen = HashSet::new();
+            let mut v = Vec::new();
+            for _ in 0..r.usize_below(12) {
+                let e = r.below(100) as usize;
+                if seen.insert(e) {
+                    v.push(e);
+                }
+            }
+            v
+        },
+        |v| shrink_vec(v),
+        |inserts| {
+            let mut policy = make_policy("fifo").unwrap();
+            for &e in inserts {
+                policy.on_insert(ExpertKey::new(1, e));
+            }
+            let none = HashSet::new();
+            for &want in inserts {
+                match policy.victim(&none) {
+                    Some(got) if got.expert == want => {}
+                    other => return Err(format!("expected {want}, got {other:?}")),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Cost model
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cost_model_monotone_in_bytes() {
+    Prop::new(128).check(
+        "transfer cost monotone",
+        |r| (r.usize_below(1 << 20), r.usize_below(1 << 20)),
+        |_| vec![],
+        |(a, b)| {
+            let cm = CostModel::paper_scale(66_048);
+            let (lo, hi) = (a.min(b), a.max(b));
+            if cm.transfer_secs(*lo.min(&hi)) <= cm.transfer_secs(*hi.max(&lo)) + 1e-12 {
+                Ok(())
+            } else {
+                Err("not monotone".into())
+            }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// HashTable: prefetch set == union of per-token experts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hash_table_predicted_set_is_union() {
+    Prop::new(128).check(
+        "hash table union",
+        |r| {
+            let l = 1 + r.usize_below(20);
+            let m = 1 + r.usize_below(3);
+            let k = 1 + r.usize_below(4);
+            let e = 4 + r.usize_below(12);
+            let idx: Vec<i32> = (0..l * m * k).map(|_| r.below(e as u64) as i32).collect();
+            let alpha: Vec<f32> = (0..l * m * k).map(|_| r.f64() as f32).collect();
+            let mask: Vec<f32> =
+                (0..l).map(|_| if r.bool(0.8) { 1.0 } else { 0.0 }).collect();
+            (l, m, k, idx, alpha, mask)
+        },
+        |_| vec![],
+        |(l, m, k, idx, alpha, mask)| {
+            let t = HashTable::new(0, *l, *m, *k, idx.clone(), alpha.clone(), 0.0)
+                .map_err(|e| e.to_string())?;
+            for layer in 0..*m {
+                for k_used in 1..=*k {
+                    let got = t.predicted_experts(layer, k_used, mask);
+                    let mut want: Vec<usize> = Vec::new();
+                    for tok in 0..*l {
+                        if mask[tok] == 0.0 {
+                            continue;
+                        }
+                        for r in 0..k_used {
+                            want.push(t.expert_at(tok, layer, r));
+                        }
+                    }
+                    want.sort_unstable();
+                    want.dedup();
+                    if got != want {
+                        return Err(format!("layer {layer} k {k_used}: {got:?} != {want:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Batcher: exactly-once, order-preserving under interleaved fill/drain
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batcher_exactly_once_in_order() {
+    Prop::new(128).check(
+        "batcher exactly once",
+        |r| (1 + r.usize_below(30), 1 + r.usize_below(40)),
+        |_| vec![],
+        |(cap, n)| {
+            let mut b = Batcher::new(*cap);
+            let mut next_out = 0u64;
+            let mut next_in = 0u64;
+            while next_out < *n as u64 {
+                while next_in < *n as u64 {
+                    let req = Request {
+                        id: next_in,
+                        ids: vec![1, 2],
+                        n_tokens: 2,
+                        label: 0,
+                        arrival: 0.0,
+                    };
+                    if b.admit(req) == AdmitOutcome::Rejected {
+                        break;
+                    }
+                    next_in += 1;
+                }
+                match b.next() {
+                    Some(r) if r.id == next_out => next_out += 1,
+                    Some(r) => return Err(format!("out of order: {} != {next_out}", r.id)),
+                    None => return Err("empty while work remains".into()),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// JSON round-trip on random documents
+// ---------------------------------------------------------------------------
+
+fn gen_json(r: &mut Rng, depth: usize) -> Json {
+    if depth == 0 {
+        return match r.below(4) {
+            0 => Json::Null,
+            1 => Json::Bool(r.bool(0.5)),
+            2 => Json::Num((r.below(2_000_000) as f64) / 4.0 - 1000.0),
+            _ => Json::Str(format!("s{}", r.below(1000))),
+        };
+    }
+    match r.below(6) {
+        0 => Json::Arr((0..r.usize_below(5)).map(|_| gen_json(r, depth - 1)).collect()),
+        1 => Json::Obj(
+            (0..r.usize_below(5))
+                .map(|i| (format!("k{i}"), gen_json(r, depth - 1)))
+                .collect(),
+        ),
+        _ => gen_json(r, 0),
+    }
+}
+
+#[test]
+fn json_roundtrip_random_documents() {
+    Prop::new(256).check(
+        "json roundtrip",
+        |r| gen_json(r, 3),
+        |_| vec![],
+        |doc| {
+            let text = doc.to_string();
+            let back = Json::parse(&text).map_err(|e| e.to_string())?;
+            if back == *doc {
+                Ok(())
+            } else {
+                Err(format!("{back:?} != {doc:?}"))
+            }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Histogram quantiles vs naive reference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn histogram_quantiles_match_reference() {
+    Prop::new(128).check(
+        "histogram quantiles",
+        |r| (0..1 + r.usize_below(200)).map(|_| r.f64() * 100.0).collect::<Vec<f64>>(),
+        |v| shrink_vec(v),
+        |samples| {
+            let mut h = LatencyHistogram::default();
+            for &s in samples {
+                h.record(s);
+            }
+            let mut sorted = samples.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.5, 0.95, 0.99, 1.0] {
+                let rank = ((q * sorted.len() as f64).ceil() as usize).max(1) - 1;
+                let want = sorted[rank.min(sorted.len() - 1)];
+                let got = h.quantile(q);
+                if (got - want).abs() > 1e-12 {
+                    return Err(format!("q{q}: {got} != {want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Workload structure
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trace_requests_well_formed() {
+    use sida_moe::workload::{ArrivalProcess, Profile, TraceGenerator};
+    Prop::new(32).check(
+        "trace well-formed",
+        |r| (r.next_u64(), ["sst2", "mrpc", "multirc"][r.usize_below(3)]),
+        |_| vec![],
+        |(seed, profile)| {
+            let p = Profile::named(profile).unwrap();
+            let seq_len = p.seq_len;
+            let mut g = TraceGenerator::new(p, 256, *seed);
+            for req in g.trace(10, ArrivalProcess::ClosedLoop) {
+                if req.ids.len() != seq_len {
+                    return Err("bad len".into());
+                }
+                if req.ids[0] != 1 {
+                    return Err("no BOS".into());
+                }
+                let n = req.n_tokens;
+                if req.ids[n - 1] != 2 {
+                    return Err("no EOS".into());
+                }
+                if req.ids[n..].iter().any(|&t| t != 0) {
+                    return Err("garbage after EOS".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
