@@ -1,0 +1,39 @@
+# SiDA-MoE build entry points.
+#
+#   make test       hermetic build + test (no artifacts needed)
+#   make lint       clippy -D warnings + rustfmt check
+#   make artifacts  train the tiny models and export HLO + weights
+#                   (requires the python/ JAX environment)
+#   make bench      run every bench target (skips cleanly without
+#                   artifacts / the pjrt feature)
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: test lint fmt bench artifacts artifacts-quick clean
+
+test:
+	$(CARGO) build --release
+	$(CARGO) test -q
+
+lint:
+	$(CARGO) clippy --all-targets -- -D warnings -A clippy::style -A clippy::complexity
+	$(CARGO) fmt --check
+
+fmt:
+	$(CARGO) fmt
+
+bench:
+	$(CARGO) bench
+
+# Build-time training + AOT export (python/compile/aot.py). The serving
+# stack never runs Python; these artifacts feed the opt-in golden layer
+# (tests/golden.rs, --features pjrt).
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out ../artifacts --config all
+
+artifacts-quick:
+	cd python && $(PYTHON) -m compile.aot --out ../artifacts --config switch8 --quick
+
+clean:
+	$(CARGO) clean

@@ -63,12 +63,11 @@ fn main() -> anyhow::Result<()> {
             };
             let out = Pipeline::new(bundle.clone(), &dataset, cfg)?.serve(&requests)?;
             let s = &out.stats;
-            let hit = 100.0 * s.cache_hits as f64
-                / (s.cache_hits + s.cache_misses).max(1) as f64;
+            let hit = sida_moe::metrics::report::fmt_rate(s.hit_rate());
             t.row(vec![
                 policy.into(),
                 prefetch.to_string(),
-                format!("{hit:.1}"),
+                hit,
                 s.blocking_misses.to_string(),
                 s.evictions.to_string(),
                 format!("{:.2}", s.throughput()),

@@ -71,14 +71,13 @@ fn main() -> anyhow::Result<()> {
         };
         let sida = Pipeline::new(bundle.clone(), &dataset, pcfg)?.serve(&requests)?;
         let s = &sida.stats;
-        let hit =
-            100.0 * s.cache_hits as f64 / (s.cache_hits + s.cache_misses).max(1) as f64;
+        let hit = sida_moe::metrics::report::fmt_rate(s.hit_rate());
         t.row(vec![
             fmt_bytes(budget),
             format!("{:.2}", lw.stats.throughput()),
             format!("{:.2}", re.stats.throughput()),
             format!("{:.2}", s.throughput()),
-            format!("{hit:.1}"),
+            hit,
         ]);
     }
     t.print();

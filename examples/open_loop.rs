@@ -58,7 +58,7 @@ fn main() -> anyhow::Result<()> {
             TraceGenerator::new(Profile::named(&dataset)?, bundle.topology.vocab, 11);
         let trace = gen.trace(n, ArrivalProcess::Poisson { rate });
         let report = replay_open_loop(&pipeline, &trace, args.get_usize("queue-cap", 32))?;
-        let mut s = report.outcome.stats;
+        let s = report.outcome.stats;
         t.row(vec![
             format!("{rate:.0}"),
             s.requests.to_string(),

@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         PipelineConfig { want_cls: true, ..Default::default() },
     )?;
     let outcome = pipeline.serve(&requests)?;
-    let mut stats = outcome.stats;
+    let stats = outcome.stats;
     println!("\nserved {} requests in {:.3}s", stats.requests, stats.wall_secs);
     println!("  throughput      {:.1} req/s", stats.throughput());
     println!(

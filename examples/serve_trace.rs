@@ -75,12 +75,11 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         };
         let sida = Pipeline::new(bundle.clone(), dataset, pcfg)?.serve(&requests)?;
-        let mut s = sida.stats.clone();
+        let s = sida.stats.clone();
         let dense_sim = cost
             .sim_bytes(bundle.topology.total_param_bytes - bundle.topology.moe_param_bytes);
         let sida_peak = dense_sim + s.peak_device_bytes;
-        let hit =
-            100.0 * s.cache_hits as f64 / (s.cache_hits + s.cache_misses).max(1) as f64;
+        let hit = sida_moe::metrics::report::fmt_rate(s.hit_rate());
         t.row(vec![
             dataset.into(),
             "sida".into(),
@@ -88,7 +87,7 @@ fn main() -> anyhow::Result<()> {
             fmt_secs(s.latency.p50()),
             fmt_secs(s.latency.p95()),
             fmt_secs(s.latency.p99()),
-            format!("{hit:.1}"),
+            hit,
             fmt_bytes(sida_peak),
             format!(
                 "{:.1}",
@@ -101,7 +100,7 @@ fn main() -> anyhow::Result<()> {
             BaselineConfig { real_sleep: true, want_cls: true, ..Default::default() };
         let std_out =
             run_baseline(bundle.clone(), dataset, Method::Standard, &requests, &bcfg)?;
-        let mut s = std_out.stats.clone();
+        let s = std_out.stats.clone();
         t.row(vec![
             dataset.into(),
             "standard".into(),

@@ -34,12 +34,10 @@ fn main() -> anyhow::Result<()> {
                 .policy_name(policy);
             let out = bs::run_method(b.clone(), Method::Sida, &spec)?;
             let s = &out.stats;
-            let hit = 100.0 * s.cache_hits as f64
-                / (s.cache_hits + s.cache_misses).max(1) as f64;
             t.row(vec![
                 format!("{frac}"),
                 policy.to_string(),
-                format!("{hit:.1}"),
+                sida_moe::metrics::report::fmt_rate(s.hit_rate()),
                 s.evictions.to_string(),
                 format!("{:.2}", s.transferred_bytes as f64 / 1e9),
                 format!("{:.2}", s.throughput()),

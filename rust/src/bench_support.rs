@@ -22,6 +22,13 @@ pub const ALL_DATASETS: [&str; 3] = ["sst2", "mrpc", "multirc"];
 /// Artifacts root, or exit 0 with a message (benches must not fail CI
 /// when artifacts are absent).
 pub fn artifacts_or_exit() -> PathBuf {
+    if !cfg!(feature = "pjrt") {
+        println!(
+            "SKIP bench: built without the `pjrt` feature — artifact-backed \
+             benches need `cargo bench --features pjrt` (see DESIGN.md)"
+        );
+        std::process::exit(0);
+    }
     let root = crate::default_artifacts_root();
     if !root.join("switch8").join("model.json").is_file() {
         println!("SKIP bench: artifacts not built — run `make artifacts` first");

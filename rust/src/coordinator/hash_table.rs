@@ -6,7 +6,7 @@ use std::collections::BTreeSet;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::{to_f32_vec, to_i32_vec};
+use crate::runtime::{to_f32_vec, to_i32_vec, Literal};
 
 #[derive(Debug, Clone)]
 pub struct HashTable {
@@ -52,8 +52,8 @@ impl HashTable {
         seq_len: usize,
         m: usize,
         k: usize,
-        idx_lit: &xla::Literal,
-        alpha_lit: &xla::Literal,
+        idx_lit: &Literal,
+        alpha_lit: &Literal,
         build_secs: f64,
     ) -> Result<Self> {
         Self::new(

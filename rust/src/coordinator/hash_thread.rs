@@ -12,20 +12,16 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::hash_table::HashTable;
-use crate::runtime::{literal_i32, Executable, ModelBundle};
+use crate::runtime::{literal_i32, Executable, Literal, ModelBundle};
 
 pub struct HashBuilder {
     exe: Arc<Executable>,
     /// hash-entry weight args in artifact order (after ids)
-    weight_lits: Vec<xla::Literal>,
+    weight_lits: Vec<Literal>,
     pub seq_len: usize,
     pub m: usize,
     pub k: usize,
 }
-
-// literal cache is read-only after construction; execution is PJRT-safe
-unsafe impl Send for HashBuilder {}
-unsafe impl Sync for HashBuilder {}
 
 impl HashBuilder {
     pub fn new(bundle: &ModelBundle, profile: &str) -> Result<Self> {
@@ -68,7 +64,7 @@ impl HashBuilder {
     pub fn build(&self, batch_id: u64, ids: &[i32]) -> Result<HashTable> {
         let t0 = Instant::now();
         let ids_lit = literal_i32(&[1, self.seq_len], ids)?;
-        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.weight_lits.len());
+        let mut args: Vec<&Literal> = Vec::with_capacity(1 + self.weight_lits.len());
         args.push(&ids_lit);
         args.extend(self.weight_lits.iter());
         let out = self.exe.run(&args)?;

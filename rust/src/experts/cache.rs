@@ -40,12 +40,15 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
-    pub fn hit_rate(&self) -> f64 {
+    /// Hit fraction over all lookups, or `None` when there was no
+    /// traffic — a cache that was never consulted has no hit rate, and
+    /// reporting `0.0` would read as "0% hits" in reports.
+    pub fn hit_rate(&self) -> Option<f64> {
         let total = self.hits + self.misses;
         if total == 0 {
-            0.0
+            None
         } else {
-            self.hits as f64 / total as f64
+            Some(self.hits as f64 / total as f64)
         }
     }
 }
@@ -54,10 +57,11 @@ impl fmt::Display for CacheStats {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "hits={} misses={} (blocking {}) evictions={} transfer={:.1}MB modeled={:.3}s",
+            "hits={} misses={} (blocking {}) hit_rate={} evictions={} transfer={:.1}MB modeled={:.3}s",
             self.hits,
             self.misses,
             self.blocking_misses,
+            crate::metrics::report::fmt_rate(self.hit_rate()),
             self.evictions,
             self.transferred_sim_bytes as f64 / 1e6,
             self.modeled_transfer_secs
@@ -217,6 +221,11 @@ impl ExpertCache {
         self.pinned.clear();
     }
 
+    /// Keys currently resident (test/diagnostic use).
+    pub fn resident_keys(&self) -> Vec<ExpertKey> {
+        self.resident.keys().copied().collect()
+    }
+
     /// Internal-consistency check used by the property tests: pool and
     /// resident map must agree exactly, and usage must be within budget.
     pub fn check_invariants(&self) -> Result<()> {
@@ -236,5 +245,26 @@ impl ExpertCache {
             }
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_none_without_traffic() {
+        let s = CacheStats::default();
+        assert_eq!(s.hit_rate(), None);
+        assert!(s.to_string().contains("hit_rate=n/a"));
+    }
+
+    #[test]
+    fn hit_rate_some_with_traffic() {
+        let s = CacheStats { hits: 3, misses: 1, ..Default::default() };
+        assert!((s.hit_rate().unwrap() - 0.75).abs() < 1e-12);
+        assert!(s.to_string().contains("hit_rate=75.0%"));
+        let all_miss = CacheStats { hits: 0, misses: 5, ..Default::default() };
+        assert_eq!(all_miss.hit_rate(), Some(0.0));
     }
 }

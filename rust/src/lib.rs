@@ -9,10 +9,12 @@
 //! * **L2** (`python/compile/`): the Switch-style model and the SiDA
 //!   hash function in JAX, trained at build time, exported as HLO text +
 //!   a flat weight blob.  Python never runs at serving time.
-//! * **L3** (this crate): the serving system — PJRT runtime, simulated
-//!   GPU memory tier, expert cache with pluggable eviction, the
-//!   hash-building/inference thread pipeline, baselines, workloads,
-//!   metrics, config, and a TCP front-end.
+//! * **L3** (this crate): the serving system — pluggable execution
+//!   backends (pure-Rust reference engine; PJRT behind the `pjrt`
+//!   feature), simulated GPU memory tier, expert cache with pluggable
+//!   eviction, the hash-building/inference thread pipeline, baselines,
+//!   workloads, metrics, config, a TCP front-end, and the hermetic
+//!   `testkit` that fabricates synthetic bundles for `cargo test`.
 //!
 //! See DESIGN.md for the full system inventory and the experiment index
 //! mapping every table/figure of the paper to a bench target.
@@ -27,23 +29,136 @@ pub mod metrics;
 pub mod model;
 pub mod runtime;
 pub mod server;
+pub mod testkit;
 pub mod util;
 pub mod workload;
 
 /// Default artifacts root relative to the repo checkout.
+///
+/// Honors `SIDA_ARTIFACTS`; otherwise walks upward from the current
+/// directory looking for an `artifacts/` dir.  The walk is fenced at the
+/// repo boundary — the first ancestor holding a `.git` or a workspace
+/// `Cargo.toml` — so an unbuilt checkout reports where artifacts WOULD
+/// live instead of escaping and silently picking up an unrelated
+/// `artifacts/` directory higher in the filesystem.  (A bare package
+/// manifest is not a fence: `cargo test` runs with cwd `rust/`, whose
+/// `Cargo.toml` sits one level below the artifacts root.)
 pub fn default_artifacts_root() -> std::path::PathBuf {
-    // honor SIDA_ARTIFACTS, else look for ./artifacts upward from cwd
     if let Ok(p) = std::env::var("SIDA_ARTIFACTS") {
         return p.into();
     }
-    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let cwd = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    artifacts_root_from(&cwd)
+}
+
+fn is_repo_root(dir: &std::path::Path) -> bool {
+    if dir.join(".git").exists() {
+        return true;
+    }
+    let manifest = dir.join("Cargo.toml");
+    if manifest.is_file() {
+        if let Ok(text) = std::fs::read_to_string(&manifest) {
+            return text.contains("[workspace]");
+        }
+    }
+    false
+}
+
+fn artifacts_root_from(start: &std::path::Path) -> std::path::PathBuf {
+    let mut dir = start.to_path_buf();
     loop {
         let cand = dir.join("artifacts");
         if cand.is_dir() {
             return cand;
         }
+        if is_repo_root(&dir) {
+            return cand;
+        }
         if !dir.pop() {
             return "artifacts".into();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::artifacts_root_from;
+    use std::fs;
+
+    fn scratch(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("sida_root_{}_{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn finds_artifacts_beside_cwd() {
+        let root = scratch("beside");
+        fs::create_dir_all(root.join("artifacts")).unwrap();
+        assert_eq!(artifacts_root_from(&root), root.join("artifacts"));
+        fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn walks_up_to_artifacts() {
+        let root = scratch("up");
+        fs::create_dir_all(root.join("artifacts")).unwrap();
+        let nested = root.join("a").join("b");
+        fs::create_dir_all(&nested).unwrap();
+        assert_eq!(artifacts_root_from(&nested), root.join("artifacts"));
+        fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn stops_at_repo_boundary_instead_of_escaping() {
+        // outer/: artifacts/ (unrelated) — inner/: workspace Cargo.toml,
+        // no artifacts.  The walk must stop at inner/ (the repo root)
+        // instead of escaping to outer/.
+        let outer = scratch("fence");
+        fs::create_dir_all(outer.join("artifacts")).unwrap();
+        let inner = outer.join("repo");
+        fs::create_dir_all(&inner).unwrap();
+        fs::write(inner.join("Cargo.toml"), "[workspace]\nmembers = []\n").unwrap();
+        let nested = inner.join("rust").join("src");
+        fs::create_dir_all(&nested).unwrap();
+        assert_eq!(artifacts_root_from(&nested), inner.join("artifacts"));
+        fs::remove_dir_all(&outer).ok();
+    }
+
+    #[test]
+    fn git_dir_is_a_fence_too() {
+        let outer = scratch("gitfence");
+        fs::create_dir_all(outer.join("artifacts")).unwrap();
+        let inner = outer.join("checkout");
+        fs::create_dir_all(inner.join(".git")).unwrap();
+        let nested = inner.join("src");
+        fs::create_dir_all(&nested).unwrap();
+        assert_eq!(artifacts_root_from(&nested), inner.join("artifacts"));
+        fs::remove_dir_all(&outer).ok();
+    }
+
+    #[test]
+    fn package_manifest_alone_does_not_fence() {
+        // repo/: .git + artifacts/; repo/rust/: plain package Cargo.toml.
+        // Walking from rust/ must pass the package manifest and find the
+        // repo-root artifacts (the layout `cargo test` actually runs in).
+        let root = scratch("pkg");
+        fs::create_dir_all(root.join(".git")).unwrap();
+        fs::create_dir_all(root.join("artifacts")).unwrap();
+        let pkg = root.join("rust");
+        fs::create_dir_all(&pkg).unwrap();
+        fs::write(pkg.join("Cargo.toml"), "[package]\nname = \"x\"\n").unwrap();
+        assert_eq!(artifacts_root_from(&pkg), root.join("artifacts"));
+        fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn artifacts_beside_manifest_still_win() {
+        let root = scratch("both");
+        fs::write(root.join("Cargo.toml"), "[workspace]\n").unwrap();
+        fs::create_dir_all(root.join("artifacts")).unwrap();
+        assert_eq!(artifacts_root_from(&root), root.join("artifacts"));
+        fs::remove_dir_all(&root).ok();
     }
 }

@@ -55,10 +55,22 @@ fn main() {
     }
 }
 
+/// Load an artifact bundle by name, or fabricate the in-memory synthetic
+/// bundle when `name` is "synthetic" — the latter needs no artifacts and
+/// no PJRT backend, so every subcommand works out of the box:
+///
+///   sida-moe serve --model synthetic --dataset tiny
+fn load_bundle(artifacts_root: &std::path::Path, name: &str) -> Result<Arc<ModelBundle>> {
+    if name == "synthetic" {
+        return sida_moe::testkit::bundle(&sida_moe::testkit::SynthSpec::default());
+    }
+    Ok(Arc::new(ModelBundle::load_named(artifacts_root, name)?))
+}
+
 fn serve_cli() -> Cli {
     Cli::new("sida-moe serve", "run one serving trace")
         .opt("config", "JSON config file", "")
-        .opt("model", "model config (switch8|switch64|switch128|switch256)", "switch8")
+        .opt("model", "model config (switch8|switch64|switch128|switch256|synthetic)", "switch8")
         .opt("dataset", "dataset profile (sst2|mrpc|multirc)", "sst2")
         .opt("method", "sida|standard|deepspeed|tutel|layerwise|reactive", "sida")
         .opt("budget-gb", "simulated device budget (GB)", "8")
@@ -88,13 +100,18 @@ fn load_serve_config(tail: &[String]) -> Result<ServeConfig> {
     Ok(cfg)
 }
 
+/// Workload profile by name, including the synthetic bundle's `tiny`.
+fn profile_named(name: &str) -> Result<Profile> {
+    if name == sida_moe::testkit::TINY_PROFILE {
+        return Ok(sida_moe::testkit::tiny_profile());
+    }
+    Profile::named(name)
+}
+
 fn cmd_serve(tail: &[String]) -> Result<()> {
     let cfg = load_serve_config(tail)?;
-    let bundle = Arc::new(ModelBundle::load_named(
-        std::path::Path::new(&cfg.artifacts),
-        &cfg.model,
-    )?);
-    let profile = Profile::named(&cfg.dataset)?;
+    let bundle = load_bundle(std::path::Path::new(&cfg.artifacts), &cfg.model)?;
+    let profile = profile_named(&cfg.dataset)?;
     let mut gen = TraceGenerator::new(profile, bundle.topology.vocab, cfg.seed);
     let requests = gen.trace(cfg.n_requests, ArrivalProcess::ClosedLoop);
     let method = Method::parse(&cfg.method)?;
@@ -132,7 +149,7 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
         }
     };
 
-    let mut stats = outcome.stats;
+    let stats = outcome.stats;
     let mut t = Table::new(
         "serve report",
         &["metric", "value"],
@@ -160,11 +177,7 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
     t.row(vec!["peak device".into(), fmt_bytes(stats.peak_device_bytes)]);
     t.row(vec![
         "cache hit rate".into(),
-        format!(
-            "{:.1}%",
-            100.0 * stats.cache_hits as f64
-                / (stats.cache_hits + stats.cache_misses).max(1) as f64
-        ),
+        sida_moe::metrics::report::fmt_rate(stats.hit_rate()),
     ]);
     t.print();
     Ok(())
@@ -182,7 +195,7 @@ fn cmd_server(tail: &[String]) -> Result<()> {
         Some("") | None => sida_moe::default_artifacts_root(),
         Some(p) => p.into(),
     };
-    let bundle = Arc::new(ModelBundle::load_named(&root, &args.get_or("model", "switch8"))?);
+    let bundle = load_bundle(&root, &args.get_or("model", "switch8"))?;
     let k = ServeConfig::paper_k_for(args.get("dataset").unwrap_or("sst2"));
     let state = Arc::new(ServerState::new(
         bundle,
@@ -202,7 +215,7 @@ fn cmd_inspect(tail: &[String]) -> Result<()> {
         Some("") | None => sida_moe::default_artifacts_root(),
         Some(p) => p.into(),
     };
-    let bundle = ModelBundle::load_named(&root, &args.get_or("model", "switch8"))?;
+    let bundle = load_bundle(&root, &args.get_or("model", "switch8"))?;
     let topo = &bundle.topology;
     println!("model {}", topo.name);
     println!("  vocab={} d_model={} d_ff={} heads={}", topo.vocab, topo.d_model, topo.d_ff, topo.n_heads);
@@ -218,7 +231,7 @@ fn cmd_inspect(tail: &[String]) -> Result<()> {
     );
     println!("  profiles: {:?}", topo.profiles);
     println!("  expert buckets: {:?}", topo.buckets);
-    println!("  PJRT platform: {}", bundle.engine.platform());
+    println!("  engine platform: {}", bundle.engine.platform());
     Ok(())
 }
 
@@ -233,9 +246,9 @@ fn cmd_hash(tail: &[String]) -> Result<()> {
         Some("") | None => sida_moe::default_artifacts_root(),
         Some(p) => p.into(),
     };
-    let bundle = Arc::new(ModelBundle::load_named(&root, &args.get_or("model", "switch8"))?);
+    let bundle = load_bundle(&root, &args.get_or("model", "switch8"))?;
     let dataset = args.get_or("dataset", "sst2");
-    let profile = Profile::named(&dataset)?;
+    let profile = profile_named(&dataset)?;
     let mut gen = TraceGenerator::new(profile, bundle.topology.vocab, args.get_u64("seed", 0));
     let (ids, n_tokens, topic) = gen.sentence();
     let builder = HashBuilder::new(&bundle, &dataset)?;

@@ -30,6 +30,17 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
+    /// Cache hit fraction, `None` when the run produced no cache traffic
+    /// (all-resident baselines) — distinct from a true 0% hit rate.
+    pub fn hit_rate(&self) -> Option<f64> {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            None
+        } else {
+            Some(self.cache_hits as f64 / total as f64)
+        }
+    }
+
     pub fn throughput(&self) -> f64 {
         if self.wall_secs > 0.0 {
             self.requests as f64 / self.wall_secs
@@ -64,5 +75,15 @@ mod tests {
     fn zero_wall_is_safe() {
         let s = ServeStats::default();
         assert_eq!(s.throughput(), 0.0);
+    }
+
+    #[test]
+    fn hit_rate_distinguishes_no_traffic_from_all_misses() {
+        let mut s = ServeStats::default();
+        assert_eq!(s.hit_rate(), None);
+        s.cache_misses = 4;
+        assert_eq!(s.hit_rate(), Some(0.0));
+        s.cache_hits = 12;
+        assert!((s.hit_rate().unwrap() - 0.75).abs() < 1e-12);
     }
 }

@@ -94,6 +94,15 @@ impl Table {
     }
 }
 
+/// Format an optional ratio as a percentage, `n/a` when undefined
+/// (e.g. a cache hit rate with zero traffic).
+pub fn fmt_rate(r: Option<f64>) -> String {
+    match r {
+        Some(v) => format!("{:.1}%", 100.0 * v),
+        None => "n/a".to_string(),
+    }
+}
+
 /// Format seconds adaptively (ms below 1s).
 pub fn fmt_secs(s: f64) -> String {
     if s < 1.0 {
@@ -148,5 +157,7 @@ mod tests {
         assert_eq!(fmt_secs(2.5), "2.500s");
         assert_eq!(fmt_bytes(2_500_000_000), "2.50GB");
         assert_eq!(fmt_bytes(500_000), "0.5MB");
+        assert_eq!(fmt_rate(Some(0.375)), "37.5%");
+        assert_eq!(fmt_rate(None), "n/a");
     }
 }

@@ -13,7 +13,8 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::hash_table::HashTable;
 use crate::experts::{ExpertCache, ExpertKey};
 use crate::runtime::{
-    literal_from_f32s, literal_i32, to_f32_vec, to_i32_vec, DeviceBuffer, Executable, ModelBundle,
+    literal_from_f32s, literal_i32, to_f32_vec, to_i32_vec, DeviceBuffer, Executable, Literal,
+    ModelBundle,
 };
 
 /// Wall-time breakdown of one forward pass (Fig 3's phases).
@@ -111,7 +112,7 @@ pub enum ExpertProvider<'a> {
 }
 
 /// Per-call switches for `ModelRunner::forward`.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct ForwardOptions {
     /// invoke every expert whether or not tokens were routed to it —
     /// the paper's "default implementation" (§2.3) used by Standard
@@ -121,17 +122,6 @@ pub struct ForwardOptions {
     pub fixed_bucket: bool,
     pub want_lm: bool,
     pub want_cls: bool,
-}
-
-impl Default for ForwardOptions {
-    fn default() -> Self {
-        ForwardOptions {
-            invoke_all: false,
-            fixed_bucket: false,
-            want_lm: false,
-            want_cls: false,
-        }
-    }
 }
 
 /// Output of one forward pass.
@@ -161,15 +151,10 @@ pub struct ModelRunner {
     exe_lm_nll: Arc<Executable>,
     exe_expert: BTreeMap<usize, Arc<Executable>>,
     /// cached host literals for all non-expert weights, keyed by name
-    lits: HashMap<String, xla::Literal>,
+    lits: HashMap<String, Literal>,
     /// positional table sliced to seq_len
-    pos_lit: xla::Literal,
+    pos_lit: Literal,
 }
-
-// the literal cache is read-only after construction; PJRT execution is
-// internally synchronized (see runtime::engine)
-unsafe impl Send for ModelRunner {}
-unsafe impl Sync for ModelRunner {}
 
 impl ModelRunner {
     pub fn new(bundle: Arc<ModelBundle>, profile: &str) -> Result<Self> {
@@ -245,7 +230,7 @@ impl ModelRunner {
         })
     }
 
-    fn lit(&self, name: &str) -> Result<&xla::Literal> {
+    fn lit(&self, name: &str) -> Result<&Literal> {
         self.lits
             .get(name)
             .with_context(|| format!("literal '{name}' not cached"))
@@ -256,7 +241,7 @@ impl ModelRunner {
     }
 
     /// Embed a sentence: ids (padded to seq_len) -> [1, L, D] literal.
-    pub fn embed(&self, ids: &[i32]) -> Result<xla::Literal> {
+    pub fn embed(&self, ids: &[i32]) -> Result<Literal> {
         debug_assert_eq!(ids.len(), self.seq_len);
         let ids_lit = literal_i32(&[1, self.seq_len], ids)?;
         let out = self
@@ -265,9 +250,9 @@ impl ModelRunner {
         Ok(out.into_iter().next().unwrap())
     }
 
-    fn run_attn(&self, x: &xla::Literal, mask: &xla::Literal, block: usize) -> Result<xla::Literal> {
+    fn run_attn(&self, x: &Literal, mask: &Literal, block: usize) -> Result<Literal> {
         let b = block;
-        let args: Vec<&xla::Literal> = vec![
+        let args: Vec<&Literal> = vec![
             x,
             mask,
             self.lit(&format!("blocks.{b}.ln1_g"))?,
@@ -284,9 +269,9 @@ impl ModelRunner {
         Ok(self.exe_attn.run(&args)?.into_iter().next().unwrap())
     }
 
-    fn run_dense_ffn(&self, x: &xla::Literal, block: usize) -> Result<xla::Literal> {
+    fn run_dense_ffn(&self, x: &Literal, block: usize) -> Result<Literal> {
         let b = block;
-        let args: Vec<&xla::Literal> = vec![
+        let args: Vec<&Literal> = vec![
             x,
             self.lit(&format!("blocks.{b}.ln2_g"))?,
             self.lit(&format!("blocks.{b}.ln2_b"))?,
@@ -298,9 +283,9 @@ impl ModelRunner {
         Ok(self.exe_dense_ffn.run(&args)?.into_iter().next().unwrap())
     }
 
-    fn run_moe_ln(&self, x: &xla::Literal, block: usize) -> Result<xla::Literal> {
+    fn run_moe_ln(&self, x: &Literal, block: usize) -> Result<Literal> {
         let b = block;
-        let args: Vec<&xla::Literal> = vec![
+        let args: Vec<&Literal> = vec![
             x,
             self.lit(&format!("blocks.{b}.ln2_g"))?,
             self.lit(&format!("blocks.{b}.ln2_b"))?,
@@ -309,8 +294,8 @@ impl ModelRunner {
     }
 
     /// Run the true router on LN'd hidden states -> per-token top-1.
-    pub fn run_router(&self, xln: &xla::Literal, block: usize) -> Result<RoutingDecision> {
-        let args: Vec<&xla::Literal> =
+    pub fn run_router(&self, xln: &Literal, block: usize) -> Result<RoutingDecision> {
+        let args: Vec<&Literal> =
             vec![xln, self.lit(&format!("blocks.{block}.wr"))?];
         let out = self.exe_router.run(&args)?;
         // outputs: logits [1,L,E], idx i32 [1,L], alpha [1,L]
@@ -439,20 +424,19 @@ impl ModelRunner {
                     .get(&key)
                     .with_context(|| format!("expert {key:?} not staged"))?;
                 let x_buf = self.bundle.engine.stage_f32(&[bucket, d], &packed)?;
-                let bufs: Vec<&xla::PjRtBuffer> = vec![
-                    &x_buf.0, &parts[0].0, &parts[1].0, &parts[2].0, &parts[3].0,
-                ];
+                let bufs: Vec<&DeviceBuffer> =
+                    vec![&x_buf, &parts[0], &parts[1], &parts[2], &parts[3]];
                 exe.run_buffers(&bufs)?
             }
             ExpertProvider::Cached { cache, .. } => {
                 let resident = resident_for_cache.as_ref().unwrap();
                 let x_buf = self.bundle.engine.stage_f32(&[bucket, d], &packed)?;
-                let bufs: Vec<&xla::PjRtBuffer> = vec![
-                    &x_buf.0,
-                    &resident.parts[0].0,
-                    &resident.parts[1].0,
-                    &resident.parts[2].0,
-                    &resident.parts[3].0,
+                let bufs: Vec<&DeviceBuffer> = vec![
+                    &x_buf,
+                    &resident.parts[0],
+                    &resident.parts[1],
+                    &resident.parts[2],
+                    &resident.parts[3],
                 ];
                 let out = exe.run_buffers(&bufs)?;
                 cache.unpin(&key);
@@ -461,12 +445,12 @@ impl ModelRunner {
             ExpertProvider::Shared { cache, .. } => {
                 let resident = resident_for_cache.as_ref().unwrap();
                 let x_buf = self.bundle.engine.stage_f32(&[bucket, d], &packed)?;
-                let bufs: Vec<&xla::PjRtBuffer> = vec![
-                    &x_buf.0,
-                    &resident.parts[0].0,
-                    &resident.parts[1].0,
-                    &resident.parts[2].0,
-                    &resident.parts[3].0,
+                let bufs: Vec<&DeviceBuffer> = vec![
+                    &x_buf,
+                    &resident.parts[0],
+                    &resident.parts[1],
+                    &resident.parts[2],
+                    &resident.parts[3],
                 ];
                 let out = exe.run_buffers(&bufs)?;
                 cache.lock().unwrap().unpin(&key);
@@ -482,7 +466,7 @@ impl ModelRunner {
                     self.bundle.weights.literal(&names[2])?,
                     self.bundle.weights.literal(&names[3])?,
                 ];
-                let args: Vec<&xla::Literal> = owned.iter().collect();
+                let args: Vec<&Literal> = owned.iter().collect();
                 exe.run(&args)?
             }
         };
@@ -507,15 +491,15 @@ impl ModelRunner {
     #[allow(clippy::too_many_arguments)]
     pub fn run_moe_layer(
         &self,
-        x: &xla::Literal,
+        x: &Literal,
         mask_host: &[f32],
-        mask_lit: &xla::Literal,
+        mask_lit: &Literal,
         block: usize,
         routing: &RoutingDecision,
         provider: &mut ExpertProvider<'_>,
         opts: ForwardOptions,
         times: &mut PhaseTimes,
-    ) -> Result<xla::Literal> {
+    ) -> Result<Literal> {
         let topo = &self.bundle.topology;
         let d = topo.d_model;
         let l = self.seq_len;

@@ -1,32 +1,54 @@
-//! PJRT engine: loads HLO-text artifacts, compiles them on the CPU
-//! client, caches executables, and runs them.
+//! Execution engine: entry-point dispatch over a pluggable [`Backend`].
 //!
-//! This is the only module that touches the `xla` crate's execution API.
-//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax>=0.5
-//! serialized protos carry 64-bit instruction ids that xla_extension
-//! 0.5.1 rejects; the text parser reassigns ids (see
-//! /opt/xla-example/README.md).
+//! Historically this module talked to PJRT directly; the backend trait
+//! was extracted so the same `ModelRunner`/coordinator/server stack can
+//! run on either implementation:
 //!
-//! ## Threading
+//! * [`testkit::RefBackend`](crate::testkit) — a pure-Rust reference
+//!   implementation of every serving entry point (`embed_L*`, `attn_L*`,
+//!   `expert_T*`, `hash_L*`, ...), driven by the synthetic in-memory
+//!   bundle.  This is what `cargo test` exercises hermetically: no
+//!   Python, no artifacts, no native toolchain.
+//! * `runtime::pjrt::PjrtBackend` (behind the `pjrt` cargo feature) —
+//!   the original path that loads the HLO-text artifacts produced by
+//!   `python/compile/aot.py` and executes them on the XLA CPU client.
+//!   See DESIGN.md for how to vendor the `xla` crate and enable it.
 //!
-//! The wrapped `xla` types hold raw pointers and are `!Send`.  The PJRT
-//! CPU client itself is thread-safe (its C++ implementation locks
-//! internally and execution is re-entrant), and literals are plain host
-//! buffers, so `Engine`/`Executable` are marked Send+Sync; the SiDA
-//! pipeline relies on this to run the hash-building thread and the
-//! inference thread concurrently over one client.
+//! `Executable::run` keeps per-entry dispatch statistics either way, so
+//! the hot-path profiling (`benches/hotpath.rs`) is backend-agnostic.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Result};
 
-/// A compiled serving entry point.
+use crate::runtime::tensor::{literal_f32, ElementType, Literal};
+
+/// An execution backend: maps (entry name, literal args) -> output
+/// literals.  Implementations must be internally synchronized — the SiDA
+/// pipeline dispatches from the hash-building thread and the inference
+/// thread concurrently.
+pub trait Backend: Send + Sync {
+    /// Human-readable platform name ("reference-cpu", "Host", ...).
+    fn platform(&self) -> String;
+
+    /// Prepare an entry for execution (compile/validate).  Called once
+    /// per entry by `Engine::load`; the default is a no-op for backends
+    /// with nothing to compile.
+    fn prepare(&self, _entry: &str) -> Result<()> {
+        Ok(())
+    }
+
+    /// Execute one entry point.
+    fn dispatch(&self, entry: &str, args: &[&Literal]) -> Result<Vec<Literal>>;
+}
+
+/// A loaded serving entry point, bound to its backend.
 pub struct Executable {
     pub name: String,
-    inner: xla::PjRtLoadedExecutable,
+    backend: Arc<dyn Backend>,
     /// cumulative dispatch statistics (hot-path profiling)
     pub stats: Mutex<ExecStats>,
 }
@@ -37,64 +59,23 @@ pub struct ExecStats {
     pub total_secs: f64,
 }
 
-// SAFETY: see module docs — the PJRT CPU client is internally
-// synchronized; executables and literals are usable from any thread as
-// long as the client outlives them (guaranteed: Engine owns the client
-// and executables hold a client refcount through the xla crate).
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
-
 impl Executable {
     /// Execute with host literals; returns the flattened output tuple.
-    /// Takes borrows — `execute` accepts `Borrow<Literal>`, so callers
-    /// never clone weight literals onto the hot path (Literal::clone is
-    /// a full host copy in the C++ wrapper).
-    pub fn run(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+    pub fn run(&self, args: &[&Literal]) -> Result<Vec<Literal>> {
         let t0 = Instant::now();
         log::trace!("exec {} ({} literal args)", self.name, args.len());
-        let out = self
-            .inner
-            .execute::<&xla::Literal>(args)
-            .with_context(|| format!("executing {}", self.name))?;
-        let result = out
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow!("{}: no output device", self.name))?
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow!("{}: empty output", self.name))?
-            .to_literal_sync()?;
-        // aot.py lowers everything with return_tuple=True
-        let parts = result.to_tuple()?;
+        let out = self.backend.dispatch(&self.name, args)?;
         let dt = t0.elapsed().as_secs_f64();
         let mut s = self.stats.lock().unwrap();
         s.calls += 1;
         s.total_secs += dt;
-        Ok(parts)
+        Ok(out)
     }
 
     /// Execute with pre-staged device buffers (the resident-expert path).
-    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
-        let t0 = Instant::now();
-        log::trace!("exec(b) {} ({} buffer args)", self.name, args.len());
-        let out = self
-            .inner
-            .execute_b(args)
-            .with_context(|| format!("executing(b) {}", self.name))?;
-        let result = out
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow!("{}: no output device", self.name))?
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow!("{}: empty output", self.name))?
-            .to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        let dt = t0.elapsed().as_secs_f64();
-        let mut s = self.stats.lock().unwrap();
-        s.calls += 1;
-        s.total_secs += dt;
-        Ok(parts)
+    pub fn run_buffers(&self, args: &[&DeviceBuffer]) -> Result<Vec<Literal>> {
+        let lits: Vec<&Literal> = args.iter().map(|b| &b.0).collect();
+        self.run(&lits)
     }
 
     pub fn snapshot_stats(&self) -> ExecStats {
@@ -102,26 +83,25 @@ impl Executable {
     }
 }
 
-/// Device-buffer wrapper so staged expert weights can cross threads.
-pub struct DeviceBuffer(pub xla::PjRtBuffer);
-
-// SAFETY: same argument as Executable — PJRT CPU buffers are host memory
-// managed by the internally-synchronized client.
-unsafe impl Send for DeviceBuffer {}
-unsafe impl Sync for DeviceBuffer {}
+/// A staged "device-resident" tensor.  On the reference backend the
+/// device tier is simulated (budget + transfer-cost accounting live in
+/// `memory::`), so residency is a host literal held by the expert cache;
+/// under `pjrt` the literal is (re)staged onto the PJRT device at
+/// dispatch time.
+pub struct DeviceBuffer(pub Literal);
 
 pub struct Engine {
-    client: xla::PjRtClient,
+    backend: Arc<dyn Backend>,
     artifacts_dir: PathBuf,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
-    /// cumulative compile statistics
+    /// cumulative compile/prepare statistics
     pub compile_stats: Mutex<ExecStats>,
 }
 
-unsafe impl Send for Engine {}
-unsafe impl Sync for Engine {}
-
 impl Engine {
+    /// Artifact-backed engine over `artifacts/<config>/` (the opt-in
+    /// golden path).  Requires the `pjrt` feature; the default build has
+    /// no HLO executor and reports how to get one.
     pub fn new(artifacts_dir: &Path) -> Result<Self> {
         if !artifacts_dir.is_dir() {
             bail!(
@@ -129,47 +109,59 @@ impl Engine {
                 artifacts_dir.display()
             );
         }
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Engine {
-            client,
+        Self::artifact_backend(artifacts_dir)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn artifact_backend(artifacts_dir: &Path) -> Result<Self> {
+        let backend = Arc::new(crate::runtime::pjrt::PjrtBackend::new(artifacts_dir)?);
+        Ok(Self::with_backend(backend, artifacts_dir))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn artifact_backend(_artifacts_dir: &Path) -> Result<Self> {
+        bail!(
+            "artifact execution requires the `pjrt` cargo feature \
+             (cargo build --features pjrt after vendoring the xla crate; \
+             see DESIGN.md); hermetic runs use the synthetic testkit bundle"
+        )
+    }
+
+    /// Engine over an explicit backend (the testkit path).
+    pub fn with_backend(backend: Arc<dyn Backend>, artifacts_dir: &Path) -> Self {
+        Engine {
+            backend,
             artifacts_dir: artifacts_dir.to_path_buf(),
             cache: Mutex::new(HashMap::new()),
             compile_stats: Mutex::new(ExecStats::default()),
-        })
+        }
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
     pub fn artifacts_dir(&self) -> &Path {
         &self.artifacts_dir
     }
 
-    /// Load + compile `<entry>.hlo.txt`, memoized by entry name.
+    /// Load (prepare) one entry, memoized by entry name.
     pub fn load(&self, entry: &str) -> Result<Arc<Executable>> {
         if let Some(exe) = self.cache.lock().unwrap().get(entry) {
             return Ok(exe.clone());
         }
-        let path = self.artifacts_dir.join(format!("{entry}.hlo.txt"));
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("loading HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {entry}"))?;
+        self.backend.prepare(entry)?;
         let dt = t0.elapsed().as_secs_f64();
         {
             let mut cs = self.compile_stats.lock().unwrap();
             cs.calls += 1;
             cs.total_secs += dt;
         }
-        log::debug!("compiled {entry} in {dt:.3}s");
+        log::debug!("prepared {entry} in {dt:.3}s");
         let arc = Arc::new(Executable {
             name: entry.to_string(),
-            inner: exe,
+            backend: self.backend.clone(),
             stats: Mutex::new(ExecStats::default()),
         });
         self.cache.lock().unwrap().insert(entry.to_string(), arc.clone());
@@ -184,61 +176,44 @@ impl Engine {
         Ok(())
     }
 
-    /// Stage host f32 data onto the device (the H2D transfer of the
-    /// memory model; cost accounting lives in `memory::cost`).
-    ///
-    /// NOTE: this goes through `buffer_from_host_buffer`, whose C wrapper
-    /// uses `kImmutableOnlyDuringCall` semantics (synchronous copy).  The
-    /// literal-based `BufferFromHostLiteral` path is ASYNC in the PJRT
-    /// CPU client — the literal must outlive the transfer, which a
-    /// `stage(&temporary)` call pattern violates (observed as a
-    /// `literal.size_bytes() == b->size()` CHECK crash).  Never stage
-    /// from literals.
-    /// (Also: only the *typed* `buffer_from_host_buffer::<T>` is safe —
-    /// the crate's `buffer_from_host_raw_bytes` passes the ElementType
-    /// ordinal where the C API expects a PrimitiveType, silently staging
-    /// F32 data as F16.)
+    /// Stage host f32 data onto the (simulated) device — the H2D
+    /// transfer of the memory model; cost accounting lives in
+    /// `memory::cost`.
     pub fn stage_f32(&self, dims: &[usize], data: &[f32]) -> Result<DeviceBuffer> {
-        Ok(DeviceBuffer(
-            self.client.buffer_from_host_buffer(data, dims, None)?,
-        ))
+        Ok(DeviceBuffer(Literal::from_f32s(dims, data.to_vec())?))
     }
 
     /// Stage i32 data (token ids).
     pub fn stage_i32(&self, dims: &[usize], data: &[i32]) -> Result<DeviceBuffer> {
-        Ok(DeviceBuffer(
-            self.client.buffer_from_host_buffer(data, dims, None)?,
-        ))
+        Ok(DeviceBuffer(Literal::from_i32s(dims, data.to_vec())?))
     }
 
     /// Stage raw little-endian bytes with an explicit element type
-    /// (weights straight out of the blob; see `stage_f32` for semantics).
+    /// (weights straight out of the blob).
     pub fn stage_raw(
         &self,
-        ty: xla::ElementType,
+        ty: ElementType,
         dims: &[usize],
         bytes: &[u8],
     ) -> Result<DeviceBuffer> {
         match ty {
-            xla::ElementType::F32 => {
-                debug_assert_eq!(bytes.as_ptr() as usize % 4, 0);
-                let data = unsafe {
-                    std::slice::from_raw_parts(bytes.as_ptr() as *const f32, bytes.len() / 4)
-                };
-                self.stage_f32(dims, data)
+            ElementType::F32 => Ok(DeviceBuffer(literal_f32(dims, bytes)?)),
+            ElementType::S32 => {
+                anyhow::ensure!(
+                    bytes.len() % 4 == 0,
+                    "i32 staging: byte length {} not a multiple of 4",
+                    bytes.len()
+                );
+                let values: Vec<i32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Ok(DeviceBuffer(Literal::from_i32s(dims, values)?))
             }
-            xla::ElementType::S32 => {
-                debug_assert_eq!(bytes.as_ptr() as usize % 4, 0);
-                let data = unsafe {
-                    std::slice::from_raw_parts(bytes.as_ptr() as *const i32, bytes.len() / 4)
-                };
-                self.stage_i32(dims, data)
-            }
-            other => bail!("stage_raw: unsupported element type {other:?}"),
         }
     }
 
-    /// Dispatch-time statistics across all cached executables.
+    /// Dispatch-time statistics across all loaded executables.
     pub fn all_stats(&self) -> Vec<(String, ExecStats)> {
         self.cache
             .lock()
@@ -246,5 +221,75 @@ impl Engine {
             .iter()
             .map(|(k, v)| (k.clone(), v.snapshot_stats()))
             .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy backend: "double_*" entries double their single f32 arg.
+    struct Doubler;
+
+    impl Backend for Doubler {
+        fn platform(&self) -> String {
+            "doubler".into()
+        }
+
+        fn dispatch(&self, entry: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
+            anyhow::ensure!(entry.starts_with("double"), "unknown entry {entry}");
+            let x = args[0].f32s()?;
+            let y: Vec<f32> = x.iter().map(|v| v * 2.0).collect();
+            Ok(vec![Literal::from_f32s(args[0].shape(), y)?])
+        }
+    }
+
+    fn engine() -> Engine {
+        Engine::with_backend(Arc::new(Doubler), Path::new("<test>"))
+    }
+
+    #[test]
+    fn load_is_memoized_and_runs() {
+        let eng = engine();
+        let a = eng.load("double_x").unwrap();
+        let b = eng.load("double_x").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let x = Literal::from_f32s(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let out = a.run(&[&x]).unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[2.0, 4.0, 6.0]);
+        assert_eq!(a.snapshot_stats().calls, 1);
+        assert_eq!(eng.all_stats().len(), 1);
+    }
+
+    #[test]
+    fn run_buffers_equals_run() {
+        let eng = engine();
+        let exe = eng.load("double_y").unwrap();
+        let buf = eng.stage_f32(&[2], &[1.5, -1.0]).unwrap();
+        let out = exe.run_buffers(&[&buf]).unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[3.0, -2.0]);
+    }
+
+    #[test]
+    fn stage_raw_roundtrips() {
+        let eng = engine();
+        let mut bytes = Vec::new();
+        for v in [4.0f32, 0.25] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let b = eng.stage_raw(ElementType::F32, &[2], &bytes).unwrap();
+        assert_eq!(b.0.f32s().unwrap(), &[4.0, 0.25]);
+        let mut ib = Vec::new();
+        for v in [7i32, -9] {
+            ib.extend_from_slice(&v.to_le_bytes());
+        }
+        let b = eng.stage_raw(ElementType::S32, &[2], &ib).unwrap();
+        assert_eq!(b.0.i32s().unwrap(), &[7, -9]);
+    }
+
+    #[test]
+    fn missing_artifacts_dir_is_an_error() {
+        let err = Engine::new(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(err.to_string().contains("not found"));
     }
 }

@@ -1,17 +1,23 @@
-//! Runtime layer: PJRT engine, weight store, topology descriptor.
+//! Runtime layer: execution engine, weight store, topology descriptor.
 //!
-//! `Engine` loads and executes the HLO-text artifacts produced by
-//! `python/compile/aot.py`; `WeightStore` owns every tensor on the host;
-//! `Topology` mirrors `model.json`.  Together they form a `ModelBundle`,
-//! the unit the coordinator and all baselines operate on.
+//! `Engine` dispatches serving entry points over a pluggable [`Backend`]
+//! (the pure-Rust reference engine by default; PJRT over the HLO-text
+//! artifacts produced by `python/compile/aot.py` behind the `pjrt`
+//! feature); `WeightStore` owns every tensor on the host; `Topology`
+//! mirrors `model.json`.  Together they form a `ModelBundle`, the unit
+//! the coordinator and all baselines operate on.
 
 pub mod engine;
+pub mod pjrt;
 pub mod tensor;
 pub mod topology;
 pub mod weights;
 
-pub use engine::{DeviceBuffer, Engine, ExecStats, Executable};
-pub use tensor::{literal_from_f32s, literal_i32, to_f32_vec, to_i32_vec, Dtype, TensorMeta};
+pub use engine::{Backend, DeviceBuffer, Engine, ExecStats, Executable};
+pub use tensor::{
+    literal_f32, literal_from_f32s, literal_i32, to_f32_vec, to_i32_vec, Dtype, ElementType,
+    Literal, TensorMeta,
+};
 pub use topology::Topology;
 pub use weights::WeightStore;
 
@@ -20,8 +26,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-/// Stage one named weight tensor onto the device straight from the blob
-/// (synchronous-copy semantics; see `Engine::stage_f32`).
+/// Stage one named weight tensor onto the device straight from the blob.
 pub fn stage_weight(
     engine: &Engine,
     weights: &WeightStore,
@@ -47,8 +52,8 @@ pub fn stage_expert_parts(
     ])
 }
 
-/// Everything needed to serve one model config: compiled-artifact engine,
-/// host weights, topology.
+/// Everything needed to serve one model config: engine, host weights,
+/// topology.
 pub struct ModelBundle {
     pub engine: Arc<Engine>,
     pub weights: Arc<WeightStore>,
@@ -56,7 +61,8 @@ pub struct ModelBundle {
 }
 
 impl ModelBundle {
-    /// Load from `artifacts/<config>/`.
+    /// Load from `artifacts/<config>/` (requires the `pjrt` feature for
+    /// execution; see `testkit::bundle` for the hermetic synthetic path).
     pub fn load(config_dir: &Path) -> Result<Self> {
         let engine = Arc::new(Engine::new(config_dir)?);
         let weights = Arc::new(WeightStore::load(config_dir)?);

@@ -1,0 +1,168 @@
+//! PJRT backend (opt-in, `--features pjrt`): loads HLO-text artifacts,
+//! compiles them on the XLA CPU client, and runs them.
+//!
+//! This is the only module that touches the `xla` crate's execution API;
+//! the rest of the system speaks `runtime::tensor::Literal` and reaches
+//! execution through the [`Backend`](crate::runtime::engine::Backend)
+//! trait.  Interchange is HLO *text* (`HloModuleProto::from_text_file`):
+//! jax>=0.5 serialized protos carry 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! ## Threading
+//!
+//! The wrapped `xla` types hold raw pointers and are `!Send`.  The PJRT
+//! CPU client itself is thread-safe (its C++ implementation locks
+//! internally and execution is re-entrant), and literals are plain host
+//! buffers, so the backend is marked Send+Sync; the SiDA pipeline relies
+//! on this to run the hash-building thread and the inference thread
+//! concurrently over one client.
+//!
+//! ## Staging semantics
+//!
+//! Host->device staging must go through the typed
+//! `buffer_from_host_buffer::<T>` path, whose C wrapper uses
+//! `kImmutableOnlyDuringCall` semantics (synchronous copy).  The
+//! literal-based `BufferFromHostLiteral` path is ASYNC in the PJRT CPU
+//! client — the literal must outlive the transfer, which a
+//! `stage(&temporary)` call pattern violates (observed as a
+//! `literal.size_bytes() == b->size()` CHECK crash).  Never stage from
+//! literals.  (Also: the crate's `buffer_from_host_raw_bytes` passes the
+//! ElementType ordinal where the C API expects a PrimitiveType, silently
+//! staging F32 data as F16 — only the typed path is safe.)
+
+#![cfg(feature = "pjrt")]
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::engine::Backend;
+use crate::runtime::tensor::{Dtype, Literal};
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    /// compiled entries behind Arc so dispatch can clone a handle out
+    /// and release the map lock before executing — the hash-building
+    /// and inference threads must overlap (see module docs)
+    compiled: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// SAFETY: see module docs — the PJRT CPU client is internally
+// synchronized; executables and literals are usable from any thread as
+// long as the client outlives them (guaranteed: the backend owns the
+// client and executables hold a client refcount through the xla crate).
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtBackend {
+            client,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    fn to_xla(&self, lit: &Literal) -> Result<xla::Literal> {
+        let shape = lit.shape();
+        match lit.dtype() {
+            Dtype::F32 => {
+                let values = lit.f32s()?;
+                let bytes: Vec<u8> =
+                    values.iter().flat_map(|v| v.to_le_bytes()).collect();
+                Ok(xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    shape,
+                    &bytes,
+                )?)
+            }
+            Dtype::I32 => {
+                let values = lit.i32s()?;
+                let bytes: Vec<u8> =
+                    values.iter().flat_map(|v| v.to_le_bytes()).collect();
+                Ok(xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    shape,
+                    &bytes,
+                )?)
+            }
+        }
+    }
+
+    fn from_xla(&self, lit: &xla::Literal) -> Result<Literal> {
+        let shape: Vec<usize> = lit
+            .shape()?
+            .dimensions()
+            .iter()
+            .map(|&d| d as usize)
+            .collect();
+        match lit.element_type()? {
+            xla::ElementType::F32 => Literal::from_f32s(&shape, lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => Literal::from_i32s(&shape, lit.to_vec::<i32>()?),
+            other => anyhow::bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn prepare(&self, entry: &str) -> Result<()> {
+        if self.compiled.lock().unwrap().contains_key(entry) {
+            return Ok(());
+        }
+        let path = self.artifacts_dir.join(format!("{entry}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {entry}"))?;
+        self.compiled.lock().unwrap().insert(entry.to_string(), Arc::new(exe));
+        Ok(())
+    }
+
+    // NOTE: every dispatch converts its argument literals to
+    // xla::Literals (a host copy).  The pre-trait engine cached weight
+    // literals as xla::Literals inside ModelRunner/HashBuilder and
+    // passed borrows; a backend-side conversion cache would restore
+    // that — do it before using this backend for perf measurements.
+    fn dispatch(&self, entry: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
+        self.prepare(entry)?;
+        let xla_args: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| self.to_xla(a))
+            .collect::<Result<Vec<_>>>()?;
+        let arg_refs: Vec<&xla::Literal> = xla_args.iter().collect();
+        // clone the handle out and drop the lock: execution must not
+        // serialize the hash-building and inference threads
+        let exe = self
+            .compiled
+            .lock()
+            .unwrap()
+            .get(entry)
+            .cloned()
+            .ok_or_else(|| anyhow!("{entry}: vanished from compile cache"))?;
+        let out = exe
+            .execute::<&xla::Literal>(&arg_refs)
+            .with_context(|| format!("executing {entry}"))?;
+        let result = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{entry}: no output device"))?
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{entry}: empty output"))?
+            .to_literal_sync()?;
+        // aot.py lowers everything with return_tuple=True
+        let parts = result.to_tuple()?;
+        parts.iter().map(|p| self.from_xla(p)).collect()
+    }
+}

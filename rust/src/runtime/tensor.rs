@@ -1,4 +1,11 @@
-//! Host tensor views over the weight blob + conversion to XLA literals.
+//! Host tensor substrate: the `Literal` type every backend speaks.
+//!
+//! A `Literal` is a shaped, typed host buffer — the interchange unit
+//! between the coordinator and an execution backend (`runtime::engine`).
+//! The default build executes on the pure-Rust reference backend
+//! (`testkit::RefBackend`), where literals ARE the device representation;
+//! under the `pjrt` feature they are converted to `xla::Literal`s at the
+//! dispatch boundary.
 
 use crate::util::json::{Json, JsonError};
 
@@ -6,6 +13,13 @@ use crate::util::json::{Json, JsonError};
 pub enum Dtype {
     F32,
     I32,
+}
+
+/// Backend-facing element type (mirrors XLA's primitive-type naming).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
 }
 
 impl Dtype {
@@ -21,10 +35,10 @@ impl Dtype {
         4
     }
 
-    pub fn element_type(&self) -> xla::ElementType {
+    pub fn element_type(&self) -> ElementType {
         match self {
-            Dtype::F32 => xla::ElementType::F32,
-            Dtype::I32 => xla::ElementType::S32,
+            Dtype::F32 => ElementType::F32,
+            Dtype::I32 => ElementType::S32,
         }
     }
 }
@@ -55,43 +69,105 @@ impl TensorMeta {
     }
 }
 
-/// Build an f32 literal from raw little-endian bytes.
-pub fn literal_f32(shape: &[usize], bytes: &[u8]) -> anyhow::Result<xla::Literal> {
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        shape,
-        bytes,
-    )?)
+/// Typed payload of a literal.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A shaped host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    shape: Vec<usize>,
+    data: LiteralData,
+}
+
+impl Literal {
+    pub fn from_f32s(shape: &[usize], values: Vec<f32>) -> anyhow::Result<Self> {
+        let want: usize = shape.iter().product();
+        anyhow::ensure!(
+            values.len() == want,
+            "literal shape {shape:?} wants {want} elements, got {}",
+            values.len()
+        );
+        Ok(Literal { shape: shape.to_vec(), data: LiteralData::F32(values) })
+    }
+
+    pub fn from_i32s(shape: &[usize], values: Vec<i32>) -> anyhow::Result<Self> {
+        let want: usize = shape.iter().product();
+        anyhow::ensure!(
+            values.len() == want,
+            "literal shape {shape:?} wants {want} elements, got {}",
+            values.len()
+        );
+        Ok(Literal { shape: shape.to_vec(), data: LiteralData::I32(values) })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            LiteralData::F32(_) => Dtype::F32,
+            LiteralData::I32(_) => Dtype::I32,
+        }
+    }
+
+    /// Borrow the f32 payload (error if i32-typed).
+    pub fn f32s(&self) -> anyhow::Result<&[f32]> {
+        match &self.data {
+            LiteralData::F32(v) => Ok(v),
+            LiteralData::I32(_) => anyhow::bail!("literal is i32, expected f32"),
+        }
+    }
+
+    /// Borrow the i32 payload (error if f32-typed).
+    pub fn i32s(&self) -> anyhow::Result<&[i32]> {
+        match &self.data {
+            LiteralData::I32(v) => Ok(v),
+            LiteralData::F32(_) => anyhow::bail!("literal is f32, expected i32"),
+        }
+    }
+}
+
+/// Build an f32 literal from raw little-endian bytes (blob slices).
+pub fn literal_f32(shape: &[usize], bytes: &[u8]) -> anyhow::Result<Literal> {
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "f32 literal byte length {} not a multiple of 4",
+        bytes.len()
+    );
+    let values: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Literal::from_f32s(shape, values)
 }
 
 /// Build an i32 literal from host values.
-pub fn literal_i32(shape: &[usize], values: &[i32]) -> anyhow::Result<xla::Literal> {
-    let bytes: &[u8] = unsafe {
-        std::slice::from_raw_parts(values.as_ptr() as *const u8, values.len() * 4)
-    };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::S32,
-        shape,
-        bytes,
-    )?)
+pub fn literal_i32(shape: &[usize], values: &[i32]) -> anyhow::Result<Literal> {
+    Literal::from_i32s(shape, values.to_vec())
 }
 
 /// Build an f32 literal from host values.
-pub fn literal_from_f32s(shape: &[usize], values: &[f32]) -> anyhow::Result<xla::Literal> {
-    let bytes: &[u8] = unsafe {
-        std::slice::from_raw_parts(values.as_ptr() as *const u8, values.len() * 4)
-    };
-    literal_f32(shape, bytes)
+pub fn literal_from_f32s(shape: &[usize], values: &[f32]) -> anyhow::Result<Literal> {
+    Literal::from_f32s(shape, values.to_vec())
 }
 
 /// Extract an f32 vector from a literal.
-pub fn to_f32_vec(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
+pub fn to_f32_vec(lit: &Literal) -> anyhow::Result<Vec<f32>> {
+    Ok(lit.f32s()?.to_vec())
 }
 
 /// Extract an i32 vector from a literal.
-pub fn to_i32_vec(lit: &xla::Literal) -> anyhow::Result<Vec<i32>> {
-    Ok(lit.to_vec::<i32>()?)
+pub fn to_i32_vec(lit: &Literal) -> anyhow::Result<Vec<i32>> {
+    Ok(lit.i32s()?.to_vec())
 }
 
 #[cfg(test)]
@@ -122,6 +198,8 @@ mod tests {
         let vals = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
         let lit = literal_from_f32s(&[2, 3], &vals).unwrap();
         assert_eq!(to_f32_vec(&lit).unwrap(), vals);
+        assert_eq!(lit.shape(), &[2, 3]);
+        assert_eq!(lit.dtype(), Dtype::F32);
     }
 
     #[test]
@@ -129,5 +207,22 @@ mod tests {
         let vals = [7i32, -1, 0, 42];
         let lit = literal_i32(&[4], &vals).unwrap();
         assert_eq!(to_i32_vec(&lit).unwrap(), vals);
+        assert!(to_f32_vec(&lit).is_err());
+    }
+
+    #[test]
+    fn literal_from_le_bytes() {
+        let mut bytes = Vec::new();
+        for v in [0.5f32, -2.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let lit = literal_f32(&[2], &bytes).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), vec![0.5, -2.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Literal::from_f32s(&[2, 2], vec![1.0; 3]).is_err());
+        assert!(Literal::from_i32s(&[5], vec![1; 4]).is_err());
     }
 }

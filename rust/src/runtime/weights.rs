@@ -1,21 +1,51 @@
-//! Weight store: manifest.json + weights.bin reader.
+//! Weight store: manifest + blob reader (disk or in-memory).
 //!
-//! Loads the flat blob emitted by `python/compile/serialize.py` and
-//! exposes tensors by name.  Expert tensors (`blocks.{b}.expert.{e}.w1`
-//! etc.) are the unit of offloading: the store hands out *host literals*
-//! on demand; tier placement (host RAM vs simulated device memory) is the
-//! expert cache's job, not the store's.
+//! Loads the flat blob emitted by `python/compile/serialize.py` — or one
+//! fabricated by `testkit::synth` — and exposes tensors by name.  Expert
+//! tensors (`blocks.{b}.expert.{e}.w1` etc.) are the unit of offloading:
+//! the store hands out *host literals* on demand; tier placement (host
+//! RAM vs simulated device memory) is the expert cache's job, not the
+//! store's.
 
 use std::collections::HashMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::tensor::{literal_f32, Dtype, TensorMeta};
+use crate::runtime::tensor::{literal_f32, Dtype, Literal, TensorMeta};
 use crate::util::json::Json;
 
+/// 8-byte-aligned byte buffer so `f32_slice` views are always sound
+/// (`Vec<u8>` alone only guarantees 1-byte alignment).
+struct Blob {
+    storage: Vec<u64>,
+    len: usize,
+}
+
+impl Blob {
+    fn from_bytes(bytes: &[u8]) -> Self {
+        let words = bytes.len().div_ceil(8);
+        let mut storage = vec![0u64; words];
+        // SAFETY: u64 storage is at least bytes.len() long and any byte
+        // pattern is a valid u64.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                bytes.as_ptr(),
+                storage.as_mut_ptr() as *mut u8,
+                bytes.len(),
+            );
+        }
+        Blob { storage, len: bytes.len() }
+    }
+
+    fn bytes(&self) -> &[u8] {
+        // SAFETY: storage holds at least `len` initialized bytes.
+        unsafe { std::slice::from_raw_parts(self.storage.as_ptr() as *const u8, self.len) }
+    }
+}
+
 pub struct WeightStore {
-    blob: Vec<u8>,
+    blob: Blob,
     metas: HashMap<String, TensorMeta>,
     pub total_bytes: usize,
 }
@@ -27,10 +57,9 @@ impl WeightStore {
             .with_context(|| format!("reading {}", manifest_path.display()))?;
         let j = Json::parse(&text).context("parsing manifest.json")?;
         let total_bytes = j.get_usize("total_bytes")?;
-        let mut metas = HashMap::new();
+        let mut metas = Vec::new();
         for t in j.get("tensors")?.as_arr()? {
-            let m = TensorMeta::from_json(t)?;
-            metas.insert(m.name.clone(), m);
+            metas.push(TensorMeta::from_json(t)?);
         }
         let blob = std::fs::read(dir.join("weights.bin")).context("reading weights.bin")?;
         if blob.len() != total_bytes {
@@ -40,7 +69,32 @@ impl WeightStore {
                 total_bytes
             );
         }
-        Ok(WeightStore { blob, metas, total_bytes })
+        Self::from_parts(&blob, metas)
+    }
+
+    /// Build from an in-memory blob + manifest (the testkit path).
+    pub fn from_parts(blob: &[u8], metas: Vec<TensorMeta>) -> Result<Self> {
+        let mut map = HashMap::new();
+        for m in metas {
+            if m.offset % 4 != 0 {
+                bail!("tensor '{}' offset {} not 4-byte aligned", m.name, m.offset);
+            }
+            if m.offset + m.nbytes > blob.len() {
+                bail!(
+                    "tensor '{}' [{}, +{}) overruns blob of {} bytes",
+                    m.name,
+                    m.offset,
+                    m.nbytes,
+                    blob.len()
+                );
+            }
+            map.insert(m.name.clone(), m);
+        }
+        Ok(WeightStore {
+            blob: Blob::from_bytes(blob),
+            metas: map,
+            total_bytes: blob.len(),
+        })
     }
 
     pub fn meta(&self, name: &str) -> Result<&TensorMeta> {
@@ -59,24 +113,27 @@ impl WeightStore {
 
     pub fn bytes(&self, name: &str) -> Result<&[u8]> {
         let m = self.meta(name)?;
-        Ok(&self.blob[m.offset..m.offset + m.nbytes])
+        Ok(&self.blob.bytes()[m.offset..m.offset + m.nbytes])
     }
 
-    /// View as f32 (alignment guaranteed: serializer aligns to 64 bytes).
+    /// View as f32 (alignment guaranteed: the blob storage is 8-byte
+    /// aligned and `from_parts` rejects unaligned offsets).
     pub fn f32_slice(&self, name: &str) -> Result<&[f32]> {
         let m = self.meta(name)?;
         if m.dtype != Dtype::F32 {
             bail!("tensor '{name}' is not f32");
         }
-        let bytes = &self.blob[m.offset..m.offset + m.nbytes];
+        let bytes = &self.blob.bytes()[m.offset..m.offset + m.nbytes];
         debug_assert_eq!(bytes.as_ptr() as usize % 4, 0);
+        // SAFETY: 4-byte-aligned (checked at construction), length is a
+        // multiple of 4 by manifest construction, any bits are valid f32.
         Ok(unsafe {
             std::slice::from_raw_parts(bytes.as_ptr() as *const f32, bytes.len() / 4)
         })
     }
 
     /// Materialize a host literal (one copy out of the blob).
-    pub fn literal(&self, name: &str) -> Result<xla::Literal> {
+    pub fn literal(&self, name: &str) -> Result<Literal> {
         let m = self.meta(name)?;
         if m.dtype != Dtype::F32 {
             bail!("literal(): only f32 weights expected, got {name}");
@@ -124,8 +181,7 @@ mod tests {
     use super::*;
     use std::io::Write;
 
-    /// Build a tiny store on disk and read it back.
-    fn fake_store(dir: &Path) {
+    fn fake_blob() -> (Vec<u8>, String) {
         let t0: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0];
         let t1: Vec<f32> = vec![0.5; 16];
         let mut blob: Vec<u8> = Vec::new();
@@ -139,11 +195,6 @@ mod tests {
         for v in &t1 {
             blob.extend_from_slice(&v.to_le_bytes());
         }
-        std::fs::create_dir_all(dir).unwrap();
-        std::fs::File::create(dir.join("weights.bin"))
-            .unwrap()
-            .write_all(&blob)
-            .unwrap();
         let manifest = format!(
             r#"{{"version":1,"total_bytes":{},"tensors":[
                 {{"name":"a","dtype":"f32","shape":[2,2],"offset":0,"nbytes":16}},
@@ -151,6 +202,17 @@ mod tests {
             ]}}"#,
             blob.len()
         );
+        (blob, manifest)
+    }
+
+    /// Build a tiny store on disk and read it back.
+    fn fake_store(dir: &Path) {
+        let (blob, manifest) = fake_blob();
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::File::create(dir.join("weights.bin"))
+            .unwrap()
+            .write_all(&blob)
+            .unwrap();
         std::fs::write(dir.join("manifest.json"), manifest).unwrap();
     }
 
@@ -164,9 +226,40 @@ mod tests {
         assert_eq!(ws.meta("blocks.0.expert.3.w1").unwrap().shape, vec![4, 4]);
         assert_eq!(ws.bytes_with_prefix("blocks.0.expert."), 64);
         let lit = ws.literal("a").unwrap();
-        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.f32s().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
         assert!(ws.literal("missing").is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn from_parts_matches_disk_load() {
+        let (blob, manifest) = fake_blob();
+        let j = Json::parse(&manifest).unwrap();
+        let metas: Vec<TensorMeta> = j
+            .get("tensors")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| TensorMeta::from_json(t).unwrap())
+            .collect();
+        let ws = WeightStore::from_parts(&blob, metas).unwrap();
+        assert_eq!(ws.f32_slice("a").unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(ws.total_bytes, blob.len());
+    }
+
+    #[test]
+    fn from_parts_rejects_overrun_and_misalignment() {
+        let meta = |off: usize| TensorMeta {
+            name: "x".into(),
+            dtype: Dtype::F32,
+            shape: vec![4],
+            offset: off,
+            nbytes: 16,
+        };
+        assert!(WeightStore::from_parts(&[0u8; 8], vec![meta(0)]).is_err());
+        assert!(WeightStore::from_parts(&[0u8; 32], vec![meta(2)]).is_err());
+        assert!(WeightStore::from_parts(&[0u8; 32], vec![meta(0)]).is_ok());
     }
 
     #[test]

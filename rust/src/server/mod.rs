@@ -162,8 +162,14 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
 /// Run the TCP server until a `shutdown` command arrives.
 pub fn run_server(state: Arc<ServerState>, addr: &str) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
-    listener.set_nonblocking(true)?;
     println!("sida-moe serving on {addr} (model {})", state.runner.bundle.topology.name);
+    run_server_on(state, listener)
+}
+
+/// Serve on an already-bound listener (lets tests bind port 0 and read
+/// the ephemeral address before starting the accept loop).
+pub fn run_server_on(state: Arc<ServerState>, listener: TcpListener) -> Result<()> {
+    listener.set_nonblocking(true)?;
     let mut handles = Vec::new();
     loop {
         if state.shutdown.load(Ordering::SeqCst) {

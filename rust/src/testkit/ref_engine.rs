@@ -1,0 +1,675 @@
+//! The pure-Rust reference backend: every serving entry point the PJRT
+//! artifacts expose, implemented directly over host `Literal`s with the
+//! exact semantics of `python/compile/model.py`'s `entry_*` functions.
+//!
+//! One backend instance serves one synthetic bundle.  Besides the plain
+//! math entries, it implements the SiDA hash artifact (`hash_L*`) as an
+//! *oracle with a configurable error rate*: it computes the true
+//! router's top-k decisions by running the model forward internally,
+//! then corrupts each token/layer top-1 prediction with probability
+//! `1 - agreement` (deterministically, keyed on the sentence).  At
+//! `agreement = 1.0` the hash tables are bit-identical to the router's
+//! decisions, so the SiDA serving path must reproduce the dense
+//! baseline's logits exactly — the paper's fidelity contract, made
+//! testable without training an LSTM predictor.
+//!
+//! Numeric identity matters here: the oracle's internal forward reuses
+//! the very same `layer_norm`/`matmul`/`ffn` functions the dispatched
+//! entries run, with the same accumulation order, so "hash routing ==
+//! router routing implies identical logits" holds bit-for-bit.
+
+// index-explicit loops deliberately mirror the python einsum shapes; the
+// entry signatures mirror the artifact argument lists
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::engine::Backend;
+use crate::runtime::{Literal, Topology, WeightStore};
+use crate::util::rng::Rng;
+
+pub struct RefBackend {
+    topo: Arc<Topology>,
+    weights: Arc<WeightStore>,
+    /// probability that a hash prediction's top-1 agrees with the router
+    agreement: f64,
+    seed: u64,
+}
+
+// ---------------------------------------------------------------------------
+// shared math (f32, row-major) — used by both dispatch and the oracle
+// ---------------------------------------------------------------------------
+
+const LN_EPS: f32 = 1e-6;
+
+fn layer_norm(x: &[f32], rows: usize, d: usize, g: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; rows * d];
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        let mut mu = 0f32;
+        for &v in row {
+            mu += v;
+        }
+        mu /= d as f32;
+        let mut var = 0f32;
+        for &v in row {
+            let c = v - mu;
+            var += c * c;
+        }
+        var /= d as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        let dst = &mut out[r * d..(r + 1) * d];
+        for j in 0..d {
+            dst[j] = (row[j] - mu) * inv * g[j] + b[j];
+        }
+    }
+    out
+}
+
+/// x [rows, inner] @ w [inner, cols] -> [rows, cols]
+fn matmul(x: &[f32], w: &[f32], rows: usize, inner: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0f32; rows * cols];
+    for r in 0..rows {
+        let xrow = &x[r * inner..(r + 1) * inner];
+        let orow = &mut out[r * cols..(r + 1) * cols];
+        for (kk, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * cols..(kk + 1) * cols];
+            for c in 0..cols {
+                orow[c] += xv * wrow[c];
+            }
+        }
+        // zero x-values skipped above contribute exactly 0.0 in f32, so
+        // the skip is a pure speedup with identical results
+    }
+    out
+}
+
+fn add_bias(y: &mut [f32], rows: usize, cols: usize, b: &[f32]) {
+    for r in 0..rows {
+        let row = &mut y[r * cols..(r + 1) * cols];
+        for c in 0..cols {
+            row[c] += b[c];
+        }
+    }
+}
+
+fn softmax_inplace(v: &mut [f32]) {
+    let mut mx = f32::NEG_INFINITY;
+    for &x in v.iter() {
+        if x > mx {
+            mx = x;
+        }
+    }
+    let mut sum = 0f32;
+    for x in v.iter_mut() {
+        *x = (*x - mx).exp();
+        sum += *x;
+    }
+    for x in v.iter_mut() {
+        *x /= sum;
+    }
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// relu((x @ w1) + b1) @ w2 + b2 on [rows, d] tokens — the expert /
+/// dense-FFN body (no residual).
+fn ffn(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    f: usize,
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    b2: &[f32],
+) -> Vec<f32> {
+    let mut h = matmul(x, w1, rows, d, f);
+    add_bias(&mut h, rows, f, b1);
+    for v in h.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+    let mut y = matmul(&h, w2, rows, f, d);
+    add_bias(&mut y, rows, d, b2);
+    y
+}
+
+/// Pre-LN causal multi-head attention with pad masking + residual
+/// (entry_attn semantics).  x: [L, D] (batch of 1), mask: [L].
+#[allow(clippy::too_many_arguments)]
+fn attention(
+    x: &[f32],
+    mask: &[f32],
+    l: usize,
+    d: usize,
+    n_heads: usize,
+    ln_g: &[f32],
+    ln_b: &[f32],
+    wq: &[f32],
+    bq: &[f32],
+    wk: &[f32],
+    bk: &[f32],
+    wv: &[f32],
+    bv: &[f32],
+    wo: &[f32],
+    bo: &[f32],
+) -> Vec<f32> {
+    let hd = d / n_heads;
+    let xln = layer_norm(x, l, d, ln_g, ln_b);
+    let mut q = matmul(&xln, wq, l, d, d);
+    add_bias(&mut q, l, d, bq);
+    let mut k = matmul(&xln, wk, l, d, d);
+    add_bias(&mut k, l, d, bk);
+    let mut v = matmul(&xln, wv, l, d, d);
+    add_bias(&mut v, l, d, bv);
+
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut o = vec![0f32; l * d];
+    let mut scores = vec![0f32; l];
+    for head in 0..n_heads {
+        let off = head * hd;
+        for lq in 0..l {
+            for lk in 0..l {
+                let mut dot = 0f32;
+                for e in 0..hd {
+                    dot += q[lq * d + off + e] * k[lk * d + off + e];
+                }
+                let causal = if lk <= lq { 1.0f32 } else { 0.0 };
+                scores[lk] = dot * scale + (causal * mask[lk] - 1.0) * 1e9;
+            }
+            softmax_inplace(&mut scores);
+            for e in 0..hd {
+                let mut acc = 0f32;
+                for lk in 0..l {
+                    acc += scores[lk] * v[lk * d + off + e];
+                }
+                o[lq * d + off + e] = acc;
+            }
+        }
+    }
+    let mut proj = matmul(&o, wo, l, d, d);
+    add_bias(&mut proj, l, d, bo);
+    for i in 0..l * d {
+        proj[i] += x[i];
+    }
+    proj
+}
+
+/// Clamp a token id into the embedding table like `jnp.take` (clip
+/// mode) does in the artifact path: negatives to 0, overflow to V-1.
+/// Keeps hostile TCP input (ids >= vocab) from panicking the backend.
+fn clip_id(id: i32, vocab: usize) -> usize {
+    (id.max(0) as usize).min(vocab - 1)
+}
+
+/// FNV-1a over the id bytes — the per-sentence fingerprint that keys the
+/// deterministic hash-corruption stream.
+fn ids_fingerprint(ids: &[i32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &i in ids {
+        for b in i.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+
+impl RefBackend {
+    pub fn new(
+        topo: Arc<Topology>,
+        weights: Arc<WeightStore>,
+        agreement: f64,
+        seed: u64,
+    ) -> Self {
+        RefBackend { topo, weights, agreement, seed }
+    }
+
+    fn w(&self, name: &str) -> Result<&[f32]> {
+        self.weights.f32_slice(name)
+    }
+
+    fn block_attn(&self, x: &[f32], mask: &[f32], l: usize, blk: usize) -> Result<Vec<f32>> {
+        let d = self.topo.d_model;
+        Ok(attention(
+            x,
+            mask,
+            l,
+            d,
+            self.topo.n_heads,
+            self.w(&format!("blocks.{blk}.ln1_g"))?,
+            self.w(&format!("blocks.{blk}.ln1_b"))?,
+            self.w(&format!("blocks.{blk}.wq"))?,
+            self.w(&format!("blocks.{blk}.bq"))?,
+            self.w(&format!("blocks.{blk}.wk"))?,
+            self.w(&format!("blocks.{blk}.bk"))?,
+            self.w(&format!("blocks.{blk}.wv"))?,
+            self.w(&format!("blocks.{blk}.bv"))?,
+            self.w(&format!("blocks.{blk}.wo"))?,
+            self.w(&format!("blocks.{blk}.bo"))?,
+        ))
+    }
+
+    /// The hash oracle: run the true model forward (top-1 routing at
+    /// every MoE layer, exactly the arithmetic `ModelRunner` performs),
+    /// record the router's top-k per token/layer, then corrupt top-1
+    /// predictions at rate `1 - agreement`.
+    fn oracle_hash(&self, ids: &[i32]) -> Result<(Vec<i32>, Vec<f32>)> {
+        let topo = &self.topo;
+        let l = ids.len();
+        let d = topo.d_model;
+        let e = topo.num_experts;
+        let m = topo.num_moe_layers();
+        let k = topo.hash.top_k;
+        let mask: Vec<f32> = ids.iter().map(|&t| if t != 0 { 1.0 } else { 0.0 }).collect();
+
+        // embed
+        let tok = self.w("embed.tok")?;
+        let pos = self.w("embed.pos")?;
+        let mut x = vec![0f32; l * d];
+        for t in 0..l {
+            let id = clip_id(ids[t], topo.vocab);
+            for j in 0..d {
+                x[t * d + j] = tok[id * d + j] + pos[t * d + j];
+            }
+        }
+
+        let mut idx_out = vec![0i32; l * m * k];
+        let mut alpha_out = vec![0f32; l * m * k];
+
+        for blk in 0..topo.n_blocks {
+            x = self.block_attn(&x, &mask, l, blk)?;
+            match topo.moe_layer_index(blk) {
+                None => {
+                    let xln = layer_norm(
+                        &x,
+                        l,
+                        d,
+                        self.w(&format!("blocks.{blk}.ln2_g"))?,
+                        self.w(&format!("blocks.{blk}.ln2_b"))?,
+                    );
+                    let y = ffn(
+                        &xln,
+                        l,
+                        d,
+                        topo.d_ff,
+                        self.w(&format!("blocks.{blk}.w1"))?,
+                        self.w(&format!("blocks.{blk}.b1"))?,
+                        self.w(&format!("blocks.{blk}.w2"))?,
+                        self.w(&format!("blocks.{blk}.b2"))?,
+                    );
+                    for i in 0..l * d {
+                        x[i] += y[i];
+                    }
+                }
+                Some(layer) => {
+                    let xln = layer_norm(
+                        &x,
+                        l,
+                        d,
+                        self.w(&format!("blocks.{blk}.ln2_g"))?,
+                        self.w(&format!("blocks.{blk}.ln2_b"))?,
+                    );
+                    let wr = self.w(&format!("blocks.{blk}.wr"))?;
+                    let logits = matmul(&xln, wr, l, d, e);
+                    let mut y_acc = vec![0f32; l * d];
+                    for t in 0..l {
+                        let mut probs = logits[t * e..(t + 1) * e].to_vec();
+                        let top1 = argmax(&probs);
+                        softmax_inplace(&mut probs);
+                        // top-k by repeated argmax (first-max tie break,
+                        // matching jnp.argmax for rank 0)
+                        let mut taken = vec![false; e];
+                        for r in 0..k {
+                            let mut best = usize::MAX;
+                            for cand in 0..e {
+                                if taken[cand] {
+                                    continue;
+                                }
+                                if best == usize::MAX || probs[cand] > probs[best] {
+                                    best = cand;
+                                }
+                            }
+                            let best = if r == 0 { top1 } else { best };
+                            taken[best] = true;
+                            idx_out[(t * m + layer) * k + r] = best as i32;
+                            alpha_out[(t * m + layer) * k + r] = probs[best];
+                        }
+                        // true top-1 layer output for masked tokens —
+                        // same scatter arithmetic as ModelRunner
+                        if mask[t] > 0.0 {
+                            let alpha = probs[top1];
+                            let names = WeightStore::expert_part_names(blk, top1);
+                            let y = ffn(
+                                &xln[t * d..(t + 1) * d],
+                                1,
+                                d,
+                                self.topo.d_ff,
+                                self.w(&names[0])?,
+                                self.w(&names[1])?,
+                                self.w(&names[2])?,
+                                self.w(&names[3])?,
+                            );
+                            for j in 0..d {
+                                y_acc[t * d + j] += alpha * y[j];
+                            }
+                        }
+                    }
+                    // residual combine with alpha = ones (the runner
+                    // applies routing alphas during scatter)
+                    for t in 0..l {
+                        for j in 0..d {
+                            x[t * d + j] += y_acc[t * d + j] * mask[t];
+                        }
+                    }
+                }
+            }
+        }
+
+        // deterministic corruption of top-1 predictions (needs at least
+        // two experts to have a "wrong" one to substitute)
+        if self.agreement < 1.0 && e > 1 {
+            let fp = ids_fingerprint(ids);
+            for layer in 0..m {
+                for t in 0..l {
+                    let mut r = Rng::new(
+                        self.seed
+                            ^ fp
+                            ^ (layer as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                            ^ (t as u64).wrapping_mul(0xD1B54A32D192ED03),
+                    );
+                    if !r.bool(self.agreement) {
+                        let at = (t * m + layer) * k;
+                        let e0 = idx_out[at] as usize;
+                        let wrong = (e0 + 1 + r.usize_below(e - 1)) % e;
+                        idx_out[at] = wrong as i32;
+                    }
+                }
+            }
+        }
+        Ok((idx_out, alpha_out))
+    }
+}
+
+fn arg<'a>(args: &[&'a Literal], i: usize, entry: &str) -> Result<&'a Literal> {
+    args.get(i)
+        .copied()
+        .with_context(|| format!("{entry}: missing argument {i}"))
+}
+
+impl Backend for RefBackend {
+    fn platform(&self) -> String {
+        "reference-cpu".into()
+    }
+
+    fn prepare(&self, entry: &str) -> Result<()> {
+        let base = entry
+            .rsplit_once('_')
+            .map(|(b, _)| b)
+            .unwrap_or(entry);
+        match base {
+            "embed" | "attn" | "dense_ffn" | "moe_ln" | "router" | "moe_combine"
+            | "lm_head" | "cls_head" | "lm_nll" | "expert" | "hash" => Ok(()),
+            other => bail!("reference backend: unknown entry family '{other}' ({entry})"),
+        }
+    }
+
+    fn dispatch(&self, entry: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let d = self.topo.d_model;
+        let base = entry
+            .rsplit_once('_')
+            .map(|(b, _)| b)
+            .unwrap_or(entry);
+        match base {
+            // (i32 [1,L], tok [V,D], pos [L,D]) -> [1,L,D]
+            "embed" => {
+                let ids = arg(args, 0, entry)?.i32s()?;
+                let tok = arg(args, 1, entry)?.f32s()?;
+                let pos = arg(args, 2, entry)?.f32s()?;
+                let l = ids.len();
+                let vocab = tok.len() / d;
+                let mut out = vec![0f32; l * d];
+                for t in 0..l {
+                    let id = clip_id(ids[t], vocab);
+                    for j in 0..d {
+                        out[t * d + j] = tok[id * d + j] + pos[t * d + j];
+                    }
+                }
+                Ok(vec![Literal::from_f32s(&[1, l, d], out)?])
+            }
+            // (x, mask, ln_g, ln_b, wq, bq, wk, bk, wv, bv, wo, bo) -> x'
+            "attn" => {
+                let x = arg(args, 0, entry)?;
+                let l = x.shape()[1];
+                let xs = x.f32s()?;
+                let mask = arg(args, 1, entry)?.f32s()?;
+                let out = attention(
+                    xs,
+                    mask,
+                    l,
+                    d,
+                    self.topo.n_heads,
+                    arg(args, 2, entry)?.f32s()?,
+                    arg(args, 3, entry)?.f32s()?,
+                    arg(args, 4, entry)?.f32s()?,
+                    arg(args, 5, entry)?.f32s()?,
+                    arg(args, 6, entry)?.f32s()?,
+                    arg(args, 7, entry)?.f32s()?,
+                    arg(args, 8, entry)?.f32s()?,
+                    arg(args, 9, entry)?.f32s()?,
+                    arg(args, 10, entry)?.f32s()?,
+                    arg(args, 11, entry)?.f32s()?,
+                );
+                Ok(vec![Literal::from_f32s(&[1, l, d], out)?])
+            }
+            // (x, ln_g, ln_b, w1, b1, w2, b2) -> x + ffn(LN(x))
+            "dense_ffn" => {
+                let x = arg(args, 0, entry)?;
+                let l = x.shape()[1];
+                let xs = x.f32s()?;
+                let f = arg(args, 3, entry)?.shape()[1];
+                let xln = layer_norm(
+                    xs,
+                    l,
+                    d,
+                    arg(args, 1, entry)?.f32s()?,
+                    arg(args, 2, entry)?.f32s()?,
+                );
+                let mut y = ffn(
+                    &xln,
+                    l,
+                    d,
+                    f,
+                    arg(args, 3, entry)?.f32s()?,
+                    arg(args, 4, entry)?.f32s()?,
+                    arg(args, 5, entry)?.f32s()?,
+                    arg(args, 6, entry)?.f32s()?,
+                );
+                for i in 0..l * d {
+                    y[i] += xs[i];
+                }
+                Ok(vec![Literal::from_f32s(&[1, l, d], y)?])
+            }
+            // (x, ln_g, ln_b) -> LN(x)
+            "moe_ln" => {
+                let x = arg(args, 0, entry)?;
+                let l = x.shape()[1];
+                let out = layer_norm(
+                    x.f32s()?,
+                    l,
+                    d,
+                    arg(args, 1, entry)?.f32s()?,
+                    arg(args, 2, entry)?.f32s()?,
+                );
+                Ok(vec![Literal::from_f32s(&[1, l, d], out)?])
+            }
+            // (xln, wr) -> (logits [1,L,E], idx i32 [1,L], alpha [1,L])
+            "router" => {
+                let xln = arg(args, 0, entry)?;
+                let l = xln.shape()[1];
+                let wr = arg(args, 1, entry)?;
+                let e = wr.shape()[1];
+                let logits = matmul(xln.f32s()?, wr.f32s()?, l, d, e);
+                let mut idx = vec![0i32; l];
+                let mut alpha = vec![0f32; l];
+                for t in 0..l {
+                    let mut probs = logits[t * e..(t + 1) * e].to_vec();
+                    let top1 = argmax(&probs);
+                    softmax_inplace(&mut probs);
+                    idx[t] = top1 as i32;
+                    alpha[t] = probs[top1];
+                }
+                Ok(vec![
+                    Literal::from_f32s(&[1, l, e], logits)?,
+                    Literal::from_i32s(&[1, l], idx)?,
+                    Literal::from_f32s(&[1, l], alpha)?,
+                ])
+            }
+            // (xtok [T,D], w1, b1, w2, b2) -> [T,D]
+            "expert" => {
+                let x = arg(args, 0, entry)?;
+                let t = x.shape()[0];
+                let f = arg(args, 1, entry)?.shape()[1];
+                let y = ffn(
+                    x.f32s()?,
+                    t,
+                    d,
+                    f,
+                    arg(args, 1, entry)?.f32s()?,
+                    arg(args, 2, entry)?.f32s()?,
+                    arg(args, 3, entry)?.f32s()?,
+                    arg(args, 4, entry)?.f32s()?,
+                );
+                Ok(vec![Literal::from_f32s(&[t, d], y)?])
+            }
+            // (x, y, alpha [1,L], mask [1,L]) -> x + alpha*y*mask
+            "moe_combine" => {
+                let x = arg(args, 0, entry)?;
+                let l = x.shape()[1];
+                let xs = x.f32s()?;
+                let ys = arg(args, 1, entry)?.f32s()?;
+                let alpha = arg(args, 2, entry)?.f32s()?;
+                let mask = arg(args, 3, entry)?.f32s()?;
+                let mut out = vec![0f32; l * d];
+                for t in 0..l {
+                    for j in 0..d {
+                        out[t * d + j] = xs[t * d + j] + alpha[t] * ys[t * d + j] * mask[t];
+                    }
+                }
+                Ok(vec![Literal::from_f32s(&[1, l, d], out)?])
+            }
+            // (x, ln_g, ln_b, w [D,V], b) -> [1,L,V]
+            "lm_head" => {
+                let x = arg(args, 0, entry)?;
+                let l = x.shape()[1];
+                let w = arg(args, 3, entry)?;
+                let v = w.shape()[1];
+                let xn = layer_norm(
+                    x.f32s()?,
+                    l,
+                    d,
+                    arg(args, 1, entry)?.f32s()?,
+                    arg(args, 2, entry)?.f32s()?,
+                );
+                let mut logits = matmul(&xn, w.f32s()?, l, d, v);
+                add_bias(&mut logits, l, v, arg(args, 4, entry)?.f32s()?);
+                Ok(vec![Literal::from_f32s(&[1, l, v], logits)?])
+            }
+            // (x, mask, ln_g, ln_b, w [D,C], b) -> [1,C]
+            "cls_head" => {
+                let x = arg(args, 0, entry)?;
+                let l = x.shape()[1];
+                let mask = arg(args, 1, entry)?.f32s()?;
+                let w = arg(args, 4, entry)?;
+                let c = w.shape()[1];
+                let xn = layer_norm(
+                    x.f32s()?,
+                    l,
+                    d,
+                    arg(args, 2, entry)?.f32s()?,
+                    arg(args, 3, entry)?.f32s()?,
+                );
+                let mut denom = 0f32;
+                for t in 0..l {
+                    denom += mask[t];
+                }
+                let denom = denom.max(1.0);
+                let mut pooled = vec![0f32; d];
+                for t in 0..l {
+                    for j in 0..d {
+                        pooled[j] += xn[t * d + j] * mask[t];
+                    }
+                }
+                for p in pooled.iter_mut() {
+                    *p /= denom;
+                }
+                let mut out = matmul(&pooled, w.f32s()?, 1, d, c);
+                add_bias(&mut out, 1, c, arg(args, 5, entry)?.f32s()?);
+                Ok(vec![Literal::from_f32s(&[1, c], out)?])
+            }
+            // (lm_logits [1,L,V], ids [1,L], mask [1,L]) -> (nll [1], count [1])
+            "lm_nll" => {
+                let logits = arg(args, 0, entry)?;
+                let l = logits.shape()[1];
+                let v = logits.shape()[2];
+                let ls = logits.f32s()?;
+                let ids = arg(args, 1, entry)?.i32s()?;
+                let mask = arg(args, 2, entry)?.f32s()?;
+                let mut total = 0f32;
+                let mut count = 0f32;
+                for t in 0..l.saturating_sub(1) {
+                    let row = &ls[t * v..(t + 1) * v];
+                    let mut mx = f32::NEG_INFINITY;
+                    for &x in row {
+                        if x > mx {
+                            mx = x;
+                        }
+                    }
+                    let mut lse = 0f32;
+                    for &x in row {
+                        lse += (x - mx).exp();
+                    }
+                    let lse = lse.ln() + mx;
+                    let tgt = clip_id(ids[t + 1], v);
+                    let nll = lse - row[tgt];
+                    total += nll * mask[t + 1];
+                    count += mask[t + 1];
+                }
+                Ok(vec![
+                    Literal::from_f32s(&[1], vec![total])?,
+                    Literal::from_f32s(&[1], vec![count])?,
+                ])
+            }
+            // (ids, ...hash weights) -> (idx i32 [1,L,M,K], alpha [1,L,M,K])
+            "hash" => {
+                let ids = arg(args, 0, entry)?.i32s()?;
+                let l = ids.len();
+                let m = self.topo.num_moe_layers();
+                let k = self.topo.hash.top_k;
+                let (idx, alpha) = self.oracle_hash(ids)?;
+                Ok(vec![
+                    Literal::from_i32s(&[1, l, m, k], idx)?,
+                    Literal::from_f32s(&[1, l, m, k], alpha)?,
+                ])
+            }
+            other => bail!("reference backend: unknown entry '{other}' ({entry})"),
+        }
+    }
+}

@@ -1,0 +1,237 @@
+//! Synthetic weight fabrication: a deterministic, in-memory twin of the
+//! blob `python/compile/serialize.py` emits.
+//!
+//! Every tensor the serving stack addresses by name is generated here
+//! with the same naming scheme and layout conventions as the real
+//! artifacts (64-byte tensor alignment, f32 little-endian, per-expert
+//! parts as separate tensors).  Weights are seeded gaussians via
+//! `util::rng`, so every test run sees bit-identical models.
+
+use crate::runtime::tensor::{Dtype, TensorMeta};
+use crate::runtime::WeightStore;
+use crate::testkit::SynthSpec;
+use crate::util::rng::Rng;
+
+use anyhow::Result;
+
+/// Standard-normal sample (Box-Muller).
+pub fn gauss(rng: &mut Rng) -> f64 {
+    let u1 = 1.0 - rng.f64(); // (0, 1] so ln is finite
+    let u2 = rng.f64();
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+/// Blob builder mirroring serialize.py: tensors appended at 64-byte
+/// alignment, manifest metadata tracked alongside.
+pub struct BlobBuilder {
+    blob: Vec<u8>,
+    metas: Vec<TensorMeta>,
+}
+
+impl BlobBuilder {
+    pub fn new() -> Self {
+        BlobBuilder { blob: Vec::new(), metas: Vec::new() }
+    }
+
+    pub fn push_f32(&mut self, name: &str, shape: &[usize], values: &[f32]) {
+        let count: usize = shape.iter().product();
+        assert_eq!(values.len(), count, "tensor {name}: shape/value mismatch");
+        while self.blob.len() % 64 != 0 {
+            self.blob.push(0);
+        }
+        let offset = self.blob.len();
+        for v in values {
+            self.blob.extend_from_slice(&v.to_le_bytes());
+        }
+        self.metas.push(TensorMeta {
+            name: name.to_string(),
+            dtype: Dtype::F32,
+            shape: shape.to_vec(),
+            offset,
+            nbytes: count * 4,
+        });
+    }
+
+    /// Gaussian tensor with the given stddev.
+    pub fn push_normal(&mut self, name: &str, shape: &[usize], scale: f64, rng: &mut Rng) {
+        let count: usize = shape.iter().product();
+        let values: Vec<f32> = (0..count).map(|_| (gauss(rng) * scale) as f32).collect();
+        self.push_f32(name, shape, &values);
+    }
+
+    pub fn push_zeros(&mut self, name: &str, shape: &[usize]) {
+        let count: usize = shape.iter().product();
+        self.push_f32(name, shape, &vec![0.0; count]);
+    }
+
+    pub fn push_ones(&mut self, name: &str, shape: &[usize]) {
+        let count: usize = shape.iter().product();
+        self.push_f32(name, shape, &vec![1.0; count]);
+    }
+
+    pub fn finish(self) -> Result<WeightStore> {
+        WeightStore::from_parts(&self.blob, self.metas)
+    }
+
+    pub fn total_tensor_bytes(&self) -> usize {
+        self.metas.iter().map(|m| m.nbytes).sum()
+    }
+}
+
+impl Default for BlobBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Fabricate the full weight set for a spec.  Returns the store plus
+/// `(expert_param_bytes, moe_param_bytes, total_param_bytes)` for the
+/// topology descriptor.
+pub fn build_weights(spec: &SynthSpec) -> Result<(WeightStore, usize, usize, usize)> {
+    let mut rng = Rng::new(spec.seed);
+    let (d, f, v, e, h) =
+        (spec.d_model, spec.d_ff, spec.vocab, spec.num_experts, spec.hash_hidden);
+    let mut b = BlobBuilder::new();
+
+    // embeddings: healthy scale so tokens are clearly separable; layer
+    // norm renormalizes downstream either way
+    b.push_normal("embed.tok", &[v, d], 0.5, &mut rng);
+    b.push_normal("embed.pos", &[spec.max_seq_len, d], 0.1, &mut rng);
+
+    let inv_sqrt = |n: usize| 1.0 / (n as f64).sqrt();
+    for blk in 0..spec.n_blocks {
+        b.push_ones(&format!("blocks.{blk}.ln1_g"), &[d]);
+        b.push_zeros(&format!("blocks.{blk}.ln1_b"), &[d]);
+        for w in ["wq", "wk", "wv", "wo"] {
+            b.push_normal(&format!("blocks.{blk}.{w}"), &[d, d], inv_sqrt(d), &mut rng);
+        }
+        for bias in ["bq", "bk", "bv", "bo"] {
+            b.push_zeros(&format!("blocks.{blk}.{bias}"), &[d]);
+        }
+        b.push_ones(&format!("blocks.{blk}.ln2_g"), &[d]);
+        b.push_zeros(&format!("blocks.{blk}.ln2_b"), &[d]);
+        if spec.moe_blocks.contains(&blk) {
+            // router scaled up vs the python init so the synthetic model
+            // routes decisively across the expert pool
+            b.push_normal(&format!("blocks.{blk}.wr"), &[d, e], 0.3, &mut rng);
+            for ex in 0..e {
+                b.push_normal(
+                    &format!("blocks.{blk}.expert.{ex}.w1"),
+                    &[d, f],
+                    inv_sqrt(d),
+                    &mut rng,
+                );
+                b.push_zeros(&format!("blocks.{blk}.expert.{ex}.b1"), &[f]);
+                b.push_normal(
+                    &format!("blocks.{blk}.expert.{ex}.w2"),
+                    &[f, d],
+                    inv_sqrt(f),
+                    &mut rng,
+                );
+                b.push_zeros(&format!("blocks.{blk}.expert.{ex}.b2"), &[d]);
+            }
+        } else {
+            b.push_normal(&format!("blocks.{blk}.w1"), &[d, f], inv_sqrt(d), &mut rng);
+            b.push_zeros(&format!("blocks.{blk}.b1"), &[f]);
+            b.push_normal(&format!("blocks.{blk}.w2"), &[f, d], inv_sqrt(f), &mut rng);
+            b.push_zeros(&format!("blocks.{blk}.b2"), &[d]);
+        }
+    }
+
+    b.push_ones("final_ln_g", &[d]);
+    b.push_zeros("final_ln_b", &[d]);
+    b.push_normal("lm_head.w", &[d, v], inv_sqrt(d), &mut rng);
+    b.push_zeros("lm_head.b", &[v]);
+    b.push_normal("cls_head.w", &[d, spec.n_classes], inv_sqrt(d), &mut rng);
+    b.push_zeros("cls_head.b", &[spec.n_classes]);
+
+    // hash-function weights: never executed by the reference backend
+    // (the hash entry is an oracle over the true router — see
+    // testkit::ref_engine), but present with artifact-compatible names
+    // and shapes so HashBuilder and `sida-moe validate` are satisfied.
+    let m = spec.moe_blocks.len();
+    b.push_normal("hash.compress_w", &[d, h], inv_sqrt(d), &mut rng);
+    b.push_zeros("hash.compress_b", &[h]);
+    for layer in 0..2 {
+        b.push_normal(&format!("hash.lstm.{layer}.wx"), &[h, 4 * h], inv_sqrt(h), &mut rng);
+        b.push_normal(&format!("hash.lstm.{layer}.wh"), &[h, 4 * h], inv_sqrt(h), &mut rng);
+        b.push_zeros(&format!("hash.lstm.{layer}.b"), &[4 * h]);
+    }
+    b.push_normal("hash.out_w", &[h, m * spec.num_experts], inv_sqrt(h), &mut rng);
+    b.push_zeros("hash.out_b", &[m * spec.num_experts]);
+
+    let expert_param_bytes = 4 * (d * f + f + f * d + d);
+    let moe_param_bytes = m * e * expert_param_bytes;
+    let total_param_bytes = b.total_tensor_bytes();
+    let store = b.finish()?;
+    Ok((store, expert_param_bytes, moe_param_bytes, total_param_bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::SynthSpec;
+
+    #[test]
+    fn gauss_moments_plausible() {
+        let mut rng = Rng::new(1);
+        let n = 20_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = gauss(&mut rng);
+            sum += g;
+            sq += g * g;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn blob_builder_aligns_and_reads_back() {
+        let mut b = BlobBuilder::new();
+        b.push_f32("a", &[3], &[1.0, 2.0, 3.0]);
+        b.push_f32("b", &[2], &[5.0, 6.0]);
+        let ws = b.finish().unwrap();
+        assert_eq!(ws.f32_slice("a").unwrap(), &[1.0, 2.0, 3.0]);
+        assert_eq!(ws.f32_slice("b").unwrap(), &[5.0, 6.0]);
+        assert_eq!(ws.meta("b").unwrap().offset % 64, 0);
+    }
+
+    #[test]
+    fn weights_cover_every_serving_tensor() {
+        let spec = SynthSpec::default();
+        let (ws, expert_bytes, moe_bytes, _total) = build_weights(&spec).unwrap();
+        for &blk in &spec.moe_blocks {
+            for ex in 0..spec.num_experts {
+                assert_eq!(ws.expert_bytes(blk, ex).unwrap(), expert_bytes);
+            }
+        }
+        let from_prefix: usize = spec
+            .moe_blocks
+            .iter()
+            .map(|&blk| ws.bytes_with_prefix(&format!("blocks.{blk}.expert.")))
+            .sum();
+        assert_eq!(from_prefix, moe_bytes);
+        for name in ["embed.tok", "embed.pos", "final_ln_g", "lm_head.w", "cls_head.w",
+                     "hash.compress_w", "hash.lstm.0.wx", "hash.out_w"] {
+            assert!(ws.has(name), "missing {name}");
+        }
+        // dense block 0, moe block 1 under the default spec
+        assert!(ws.has("blocks.0.w1"));
+        assert!(ws.has("blocks.1.wr"));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let spec = SynthSpec::default();
+        let (a, ..) = build_weights(&spec).unwrap();
+        let (b, ..) = build_weights(&spec).unwrap();
+        assert_eq!(a.f32_slice("embed.tok").unwrap(), b.f32_slice("embed.tok").unwrap());
+        let mut spec2 = SynthSpec::default();
+        spec2.seed ^= 1;
+        let (c, ..) = build_weights(&spec2).unwrap();
+        assert_ne!(a.f32_slice("embed.tok").unwrap(), c.f32_slice("embed.tok").unwrap());
+    }
+}

@@ -1,0 +1,185 @@
+//! Concurrency tests: the shared expert cache under multi-threaded
+//! hammering, pipeline stability across repeated runs and queue depths,
+//! and parallel request serving through the shared server state — all on
+//! the synthetic testkit bundle.
+
+use std::sync::{Arc, Mutex};
+
+use sida_moe::coordinator::{Pipeline, PipelineConfig};
+use sida_moe::experts::{make_policy, ExpertCache, ExpertKey};
+use sida_moe::memory::CostModel;
+use sida_moe::runtime::stage_expert_parts;
+use sida_moe::server::ServerState;
+use sida_moe::testkit::{self, TINY_PROFILE};
+
+#[test]
+fn shared_cache_survives_concurrent_ensure_and_eviction() {
+    let b = testkit::tiny_bundle();
+    let block = b.topology.moe_blocks[0];
+    let e = b.topology.num_experts;
+    let real = b.weights.expert_bytes(block, 0).unwrap();
+    // room for 3 experts: constant eviction pressure from 4 threads
+    let cache = Arc::new(Mutex::new(ExpertCache::new(
+        3 * real + 64,
+        CostModel::physical(real),
+        make_policy("fifo").unwrap(),
+    )));
+
+    let mut handles = Vec::new();
+    for thread_id in 0..4u64 {
+        let cache = cache.clone();
+        let b = b.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = sida_moe::util::rng::Rng::new(thread_id);
+            for _ in 0..200 {
+                let expert = rng.usize_below(e);
+                let key = ExpertKey::new(block, expert);
+                let engine = b.engine.clone();
+                let weights = b.weights.clone();
+                let mut guard = cache.lock().unwrap();
+                let (_resident, _hit, _secs) = guard
+                    .ensure(key, real, thread_id % 2 == 0, || {
+                        stage_expert_parts(&engine, &weights, block, expert)
+                    })
+                    .expect("ensure under pressure");
+                guard.check_invariants().expect("invariants mid-flight");
+                assert!(guard.used() <= guard.budget());
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("worker panicked");
+    }
+    let guard = cache.lock().unwrap();
+    guard.check_invariants().unwrap();
+    // whatever survived the storm is a real subset of the expert pool
+    let keys = guard.resident_keys();
+    assert_eq!(keys.len(), guard.resident_count());
+    assert!(keys.iter().all(|k| k.block == block && k.expert < e));
+    let stats = guard.stats();
+    assert_eq!(stats.hits + stats.misses, 4 * 200);
+    assert!(stats.evictions > 0, "eviction pressure never materialized");
+}
+
+#[test]
+fn pinned_experts_survive_concurrent_eviction_pressure() {
+    let b = testkit::tiny_bundle();
+    let block = b.topology.moe_blocks[0];
+    let e = b.topology.num_experts;
+    let real = b.weights.expert_bytes(block, 0).unwrap();
+    let cache = Arc::new(Mutex::new(ExpertCache::new(
+        3 * real + 64,
+        CostModel::physical(real),
+        make_policy("lru").unwrap(),
+    )));
+
+    // resident + pinned expert 0
+    {
+        let engine = b.engine.clone();
+        let weights = b.weights.clone();
+        let mut guard = cache.lock().unwrap();
+        guard
+            .ensure(ExpertKey::new(block, 0), real, false, || {
+                stage_expert_parts(&engine, &weights, block, 0)
+            })
+            .unwrap();
+        guard.pin(ExpertKey::new(block, 0));
+    }
+
+    let mut handles = Vec::new();
+    for thread_id in 1..4u64 {
+        let cache = cache.clone();
+        let b = b.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = sida_moe::util::rng::Rng::new(thread_id * 97);
+            for _ in 0..100 {
+                let expert = 1 + rng.usize_below(e - 1);
+                let key = ExpertKey::new(block, expert);
+                let engine = b.engine.clone();
+                let weights = b.weights.clone();
+                let mut guard = cache.lock().unwrap();
+                guard
+                    .ensure(key, real, false, || {
+                        stage_expert_parts(&engine, &weights, block, expert)
+                    })
+                    .expect("ensure");
+                assert!(
+                    guard.contains(&ExpertKey::new(block, 0)),
+                    "pinned expert was evicted"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("worker panicked");
+    }
+    let mut guard = cache.lock().unwrap();
+    assert!(guard.contains(&ExpertKey::new(block, 0)));
+    guard.unpin(&ExpertKey::new(block, 0));
+    guard.check_invariants().unwrap();
+}
+
+#[test]
+fn pipeline_is_stable_across_seeds_and_queue_depths() {
+    // regression harness for pipeline deadlocks/races: several
+    // (seed, queue_depth, prefetch) combinations must all drain fully
+    let b = testkit::tiny_bundle();
+    for (seed, depth, prefetch) in
+        [(0u64, 1usize, true), (1, 1, false), (2, 2, true), (3, 8, false), (4, 4, true)]
+    {
+        let reqs = testkit::tiny_trace(&b, 6, seed);
+        let cfg = PipelineConfig { queue_depth: depth, prefetch, ..Default::default() };
+        let p = Pipeline::new(b.clone(), TINY_PROFILE, cfg).unwrap();
+        let out = p.serve(&reqs).unwrap();
+        assert_eq!(
+            out.stats.requests, 6,
+            "seed {seed} depth {depth} prefetch {prefetch} lost requests"
+        );
+    }
+}
+
+#[test]
+fn pipeline_reuse_serves_back_to_back_traces() {
+    // one Pipeline (warm cache) serving several traces — the
+    // bench_support warmup pattern — must keep stats coherent
+    let b = testkit::tiny_bundle();
+    let p = Pipeline::new(b.clone(), TINY_PROFILE, PipelineConfig::default()).unwrap();
+    let warm = testkit::tiny_trace(&b, 4, 100);
+    let _ = p.serve(&warm).unwrap();
+    p.cache.lock().unwrap().reset_stats();
+    let reqs = testkit::tiny_trace(&b, 8, 101);
+    let out = p.serve(&reqs).unwrap();
+    assert_eq!(out.stats.requests, 8);
+    // warm cache: most lookups are hits now
+    assert!(out.stats.cache_hits > 0);
+    p.cache.lock().unwrap().check_invariants().unwrap();
+}
+
+#[test]
+fn server_state_serves_concurrent_clients_deterministically() {
+    let b = testkit::tiny_bundle();
+    let state = Arc::new(ServerState::new(b, TINY_PROFILE, 8 << 30, 1).unwrap());
+    // reference answer, single-threaded
+    let (want_label, _) = state.serve_one(&[1, 40, 41, 42, 2]).unwrap();
+
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let state = state.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut labels = Vec::new();
+            for _ in 0..5 {
+                let (label, secs) = state.serve_one(&[1, 40, 41, 42, 2]).unwrap();
+                assert!(secs > 0.0);
+                labels.push(label);
+            }
+            labels
+        }));
+    }
+    for h in handles {
+        for label in h.join().expect("client thread panicked") {
+            assert_eq!(label, want_label, "same input must predict identically");
+        }
+    }
+    use std::sync::atomic::Ordering;
+    assert_eq!(state.served.load(Ordering::SeqCst), 21);
+}

@@ -1,0 +1,227 @@
+//! Artifact-backed golden tests (opt-in layer): load the real switch8
+//! bundle and check the Rust serving stack against the Python goldens
+//! emitted at build time (`artifacts/switch8/golden.json`).
+//!
+//! These tests are skipped (with a visible message) when either
+//! prerequisite is missing:
+//!   * the artifacts — build them with `make artifacts`
+//!   * the PJRT execution backend — build with `--features pjrt` after
+//!     vendoring the `xla` crate (see DESIGN.md)
+//!
+//! The always-on hermetic twin of this suite lives in
+//! `tests/integration.rs` / `tests/pipeline.rs` over the synthetic
+//! testkit bundle.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use sida_moe::coordinator::HashBuilder;
+use sida_moe::model::{ExpertProvider, ForwardOptions, ModelRunner};
+use sida_moe::runtime::ModelBundle;
+use sida_moe::util::json::Json;
+
+fn artifacts_root() -> Option<PathBuf> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!(
+            "SKIP: golden tests need the PJRT backend — vendor the xla crate, \
+             add it to rust/Cargo.toml, then `cargo test --features pjrt` \
+             (DESIGN.md §5)"
+        );
+        return None;
+    }
+    let root = sida_moe::default_artifacts_root();
+    if root.join("switch8").join("model.json").is_file() {
+        Some(root)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn bundle() -> Option<Arc<ModelBundle>> {
+    let root = artifacts_root()?;
+    Some(Arc::new(ModelBundle::load_named(&root, "switch8").expect("load bundle")))
+}
+
+fn golden(bundle: &ModelBundle) -> Json {
+    let text =
+        std::fs::read_to_string(bundle.engine.artifacts_dir().join("golden.json")).unwrap();
+    Json::parse(&text).unwrap()
+}
+
+fn ids_of(sentence: &Json) -> Vec<Vec<i32>> {
+    sentence
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|row| {
+            row.as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_i64().unwrap() as i32)
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn manifest_weights_and_topology_consistent() {
+    let Some(b) = bundle() else { return };
+    let topo = &b.topology;
+    // every expert of every MoE layer is individually addressable
+    for &blk in &topo.moe_blocks {
+        for e in 0..topo.num_experts {
+            let bytes = b.weights.expert_bytes(blk, e).unwrap();
+            assert_eq!(bytes, topo.expert_param_bytes, "expert ({blk},{e})");
+        }
+    }
+    let moe_from_manifest: usize = topo
+        .moe_blocks
+        .iter()
+        .map(|&blk| b.weights.bytes_with_prefix(&format!("blocks.{blk}.expert.")))
+        .sum();
+    assert_eq!(moe_from_manifest, topo.moe_param_bytes);
+}
+
+#[test]
+fn router_decisions_match_python_golden() {
+    let Some(b) = bundle() else { return };
+    let g = golden(&b);
+    let runner = ModelRunner::new(b.clone(), "sst2").unwrap();
+    let prof = g.get("profiles").unwrap().get("sst2").unwrap();
+    let ids = ids_of(prof.get("ids").unwrap());
+    let want_idx = prof.get("router_idx").unwrap(); // [B][M][L]
+    let staged = runner.stage_all_experts().unwrap();
+    for (s, sent_ids) in ids.iter().enumerate() {
+        let mut provider = ExpertProvider::AllResident(&staged);
+        let out = runner
+            .forward(sent_ids, None, &mut provider, ForwardOptions::default())
+            .unwrap();
+        let mask = ModelRunner::mask_of(sent_ids);
+        for (m, routing) in out.routing.iter().enumerate() {
+            let want: Vec<usize> = want_idx.as_arr().unwrap()[s].as_arr().unwrap()[m]
+                .usize_vec()
+                .unwrap();
+            for (t, (&got, &want)) in routing.top1.iter().zip(want.iter()).enumerate() {
+                if mask[t] > 0.0 {
+                    assert_eq!(got, want, "sentence {s} layer {m} token {t}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hash_tables_match_python_golden() {
+    let Some(b) = bundle() else { return };
+    let g = golden(&b);
+    for profile in ["sst2", "mrpc", "multirc"] {
+        let builder = HashBuilder::new(&b, profile).unwrap();
+        let prof = g.get("profiles").unwrap().get(profile).unwrap();
+        let ids = ids_of(prof.get("ids").unwrap());
+        let want = prof.get("hash_top_idx").unwrap(); // [B][L][M][K]
+        for (s, sent_ids) in ids.iter().enumerate() {
+            let table = builder.build(s as u64, sent_ids).unwrap();
+            let ws = &want.as_arr().unwrap()[s];
+            for t in 0..table.seq_len {
+                for m in 0..table.m {
+                    for r in 0..table.k {
+                        let w = ws.as_arr().unwrap()[t].as_arr().unwrap()[m]
+                            .as_arr()
+                            .unwrap()[r]
+                            .as_usize()
+                            .unwrap();
+                        assert_eq!(
+                            table.expert_at(t, m, r),
+                            w,
+                            "{profile} s{s} t{t} m{m} r{r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lm_logits_match_python_golden_slice() {
+    let Some(b) = bundle() else { return };
+    let g = golden(&b);
+    let runner = ModelRunner::new(b.clone(), "sst2").unwrap();
+    let prof = g.get("profiles").unwrap().get("sst2").unwrap();
+    let ids = ids_of(prof.get("ids").unwrap());
+    let want_slice = prof.get("lm_logits_slice").unwrap(); // [B][4][8]
+    let staged = runner.stage_all_experts().unwrap();
+    let v = b.topology.vocab;
+    for (s, sent_ids) in ids.iter().enumerate() {
+        let mut provider = ExpertProvider::AllResident(&staged);
+        let out = runner
+            .forward(
+                sent_ids,
+                None,
+                &mut provider,
+                ForwardOptions { want_lm: true, want_cls: true, ..Default::default() },
+            )
+            .unwrap();
+        let lm = out.lm_logits.unwrap();
+        for t in 0..4 {
+            for c in 0..8 {
+                let want = want_slice.as_arr().unwrap()[s].as_arr().unwrap()[t]
+                    .as_arr()
+                    .unwrap()[c]
+                    .as_f64()
+                    .unwrap() as f32;
+                let got = lm[t * v + c];
+                assert!(
+                    (got - want).abs() < 2e-2 + 0.01 * want.abs(),
+                    "sentence {s} tok {t} vocab {c}: {got} vs {want}"
+                );
+            }
+        }
+        // classifier agreement
+        let want_cls: Vec<f64> = prof.get("cls_logits").unwrap().as_arr().unwrap()[s]
+            .f64_vec()
+            .unwrap();
+        let got_cls = out.cls_logits.unwrap();
+        let got_arg = sida_moe::coordinator::argmax(&got_cls);
+        let want_arg = want_cls
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(got_arg, want_arg, "sentence {s} classifier argmax");
+    }
+}
+
+#[test]
+fn lm_nll_matches_golden_mean() {
+    let Some(b) = bundle() else { return };
+    let g = golden(&b);
+    let runner = ModelRunner::new(b.clone(), "sst2").unwrap();
+    let prof = g.get("profiles").unwrap().get("sst2").unwrap();
+    let ids = ids_of(prof.get("ids").unwrap());
+    let want_mean = prof.get_f64("lm_mean_nll").unwrap();
+    let staged = runner.stage_all_experts().unwrap();
+    let mut total_nll = 0.0;
+    let mut total_tok = 0.0;
+    for sent_ids in &ids {
+        let mut p = ExpertProvider::AllResident(&staged);
+        let out = runner
+            .forward(
+                sent_ids,
+                None,
+                &mut p,
+                ForwardOptions { want_lm: true, ..Default::default() },
+            )
+            .unwrap();
+        let (nll, cnt) = runner.lm_nll(&out.lm_logits.unwrap(), sent_ids).unwrap();
+        total_nll += nll;
+        total_tok += cnt;
+    }
+    let got_mean = total_nll / total_tok;
+    assert!(
+        (got_mean - want_mean).abs() < 0.02 * want_mean.abs() + 0.02,
+        "mean NLL {got_mean} vs golden {want_mean}"
+    );
+}

@@ -1,312 +1,187 @@
-//! Artifact-backed integration tests: load the real switch8 bundle and
-//! check the Rust serving stack against the Python goldens emitted at
-//! build time (`artifacts/switch8/golden.json`).
+//! Hermetic integration tests: the full forward/routing/caching contract
+//! exercised on the synthetic testkit bundle — no Python artifacts, no
+//! PJRT, runs everywhere `cargo test` runs.
 //!
-//! These tests are skipped (with a visible message) if artifacts are
-//! missing — run `make artifacts` first.
+//! The paper-fidelity core lives here: a hash artifact with 100% router
+//! agreement must yield logits *identical* to the dense baseline
+//! (SiDA-MoE's Tab 3/4 contract), and the expert-provider variants
+//! (all-resident buffers, the budgeted cache, host literals) must be
+//! numerically interchangeable.
 
-use std::path::PathBuf;
 use std::sync::Arc;
 
-use sida_moe::coordinator::HashBuilder;
+use sida_moe::coordinator::{HashBuilder, HashTable};
 use sida_moe::experts::{make_policy, ExpertCache};
 use sida_moe::memory::CostModel;
 use sida_moe::model::{ExpertProvider, ForwardOptions, ModelRunner};
 use sida_moe::runtime::ModelBundle;
-use sida_moe::util::json::Json;
+use sida_moe::testkit::{self, TINY_PROFILE};
 
-fn artifacts_root() -> Option<PathBuf> {
-    let root = sida_moe::default_artifacts_root();
-    if root.join("switch8").join("model.json").is_file() {
-        Some(root)
-    } else {
-        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
-        None
-    }
+fn runner(b: &Arc<ModelBundle>) -> ModelRunner {
+    ModelRunner::new(b.clone(), TINY_PROFILE).unwrap()
 }
 
-fn bundle() -> Option<Arc<ModelBundle>> {
-    let root = artifacts_root()?;
-    Some(Arc::new(ModelBundle::load_named(&root, "switch8").expect("load bundle")))
-}
-
-fn golden(bundle: &ModelBundle) -> Json {
-    let text =
-        std::fs::read_to_string(bundle.engine.artifacts_dir().join("golden.json")).unwrap();
-    Json::parse(&text).unwrap()
-}
-
-fn ids_of(sentence: &Json) -> Vec<Vec<i32>> {
-    sentence
-        .as_arr()
-        .unwrap()
-        .iter()
-        .map(|row| {
-            row.as_arr()
-                .unwrap()
-                .iter()
-                .map(|v| v.as_i64().unwrap() as i32)
-                .collect()
-        })
-        .collect()
+fn sentence(b: &ModelBundle, seed: u64) -> Vec<i32> {
+    testkit::tiny_trace(b, 1, seed).remove(0).ids
 }
 
 #[test]
-fn manifest_weights_and_topology_consistent() {
-    let Some(b) = bundle() else { return };
+fn synthetic_manifest_weights_and_topology_consistent() {
+    let b = testkit::tiny_bundle();
     let topo = &b.topology;
-    // every expert of every MoE layer is individually addressable
     for &blk in &topo.moe_blocks {
         for e in 0..topo.num_experts {
             let bytes = b.weights.expert_bytes(blk, e).unwrap();
             assert_eq!(bytes, topo.expert_param_bytes, "expert ({blk},{e})");
         }
     }
-    // Tab 2 shape: MoE bytes dominate as expert count grows; for switch8
-    // at tiny dims just check the bookkeeping matches the manifest
     let moe_from_manifest: usize = topo
         .moe_blocks
         .iter()
         .map(|&blk| b.weights.bytes_with_prefix(&format!("blocks.{blk}.expert.")))
         .sum();
     assert_eq!(moe_from_manifest, topo.moe_param_bytes);
+    assert!(topo.total_param_bytes > topo.moe_param_bytes);
 }
 
 #[test]
-fn router_decisions_match_python_golden() {
-    let Some(b) = bundle() else { return };
-    let g = golden(&b);
-    let runner = ModelRunner::new(b.clone(), "sst2").unwrap();
-    let prof = g.get("profiles").unwrap().get("sst2").unwrap();
-    let ids = ids_of(prof.get("ids").unwrap());
-    let want_idx = prof.get("router_idx").unwrap(); // [B][M][L]
-    let staged = runner.stage_all_experts().unwrap();
-    for (s, sent_ids) in ids.iter().enumerate() {
-        let mut provider = ExpertProvider::AllResident(&staged);
-        let out = runner
-            .forward(sent_ids, None, &mut provider, ForwardOptions::default())
-            .unwrap();
-        let mask = ModelRunner::mask_of(sent_ids);
-        for (m, routing) in out.routing.iter().enumerate() {
-            let want: Vec<usize> = want_idx.as_arr().unwrap()[s].as_arr().unwrap()[m]
-                .usize_vec()
-                .unwrap();
-            for (t, (&got, &want)) in routing.top1.iter().zip(want.iter()).enumerate() {
-                if mask[t] > 0.0 {
-                    assert_eq!(got, want, "sentence {s} layer {m} token {t}");
-                }
-            }
-        }
-    }
-}
+fn all_expert_providers_agree_exactly() {
+    let b = testkit::tiny_bundle();
+    let r = runner(&b);
+    let ids = sentence(&b, 11);
+    let staged = r.stage_all_experts().unwrap();
 
-#[test]
-fn hash_tables_match_python_golden() {
-    let Some(b) = bundle() else { return };
-    let g = golden(&b);
-    for profile in ["sst2", "mrpc", "multirc"] {
-        let builder = HashBuilder::new(&b, profile).unwrap();
-        let prof = g.get("profiles").unwrap().get(profile).unwrap();
-        let ids = ids_of(prof.get("ids").unwrap());
-        let want = prof.get("hash_top_idx").unwrap(); // [B][L][M][K]
-        for (s, sent_ids) in ids.iter().enumerate() {
-            let table = builder.build(s as u64, sent_ids).unwrap();
-            let ws = &want.as_arr().unwrap()[s];
-            for t in 0..table.seq_len {
-                for m in 0..table.m {
-                    for r in 0..table.k {
-                        let w = ws.as_arr().unwrap()[t].as_arr().unwrap()[m]
-                            .as_arr()
-                            .unwrap()[r]
-                            .as_usize()
-                            .unwrap();
-                        assert_eq!(
-                            table.expert_at(t, m, r),
-                            w,
-                            "{profile} s{s} t{t} m{m} r{r}"
-                        );
-                    }
-                }
-            }
-        }
-    }
-}
-
-#[test]
-fn lm_logits_match_python_golden_slice() {
-    let Some(b) = bundle() else { return };
-    let g = golden(&b);
-    let runner = ModelRunner::new(b.clone(), "sst2").unwrap();
-    let prof = g.get("profiles").unwrap().get("sst2").unwrap();
-    let ids = ids_of(prof.get("ids").unwrap());
-    let want_slice = prof.get("lm_logits_slice").unwrap(); // [B][4][8]
-    let staged = runner.stage_all_experts().unwrap();
-    let v = b.topology.vocab;
-    for (s, sent_ids) in ids.iter().enumerate() {
-        let mut provider = ExpertProvider::AllResident(&staged);
-        let out = runner
-            .forward(
-                sent_ids,
-                None,
-                &mut provider,
-                ForwardOptions { want_lm: true, want_cls: true, ..Default::default() },
-            )
-            .unwrap();
-        let lm = out.lm_logits.unwrap();
-        for t in 0..4 {
-            for c in 0..8 {
-                let want = want_slice.as_arr().unwrap()[s].as_arr().unwrap()[t]
-                    .as_arr()
-                    .unwrap()[c]
-                    .as_f64()
-                    .unwrap() as f32;
-                let got = lm[t * v + c];
-                assert!(
-                    (got - want).abs() < 2e-2 + 0.01 * want.abs(),
-                    "sentence {s} tok {t} vocab {c}: {got} vs {want}"
-                );
-            }
-        }
-        // classifier agreement
-        let want_cls: Vec<f64> = prof.get("cls_logits").unwrap().as_arr().unwrap()[s]
-            .f64_vec()
-            .unwrap();
-        let got_cls = out.cls_logits.unwrap();
-        let got_arg = sida_moe::coordinator::argmax(&got_cls);
-        let want_arg = want_cls
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
-        assert_eq!(got_arg, want_arg, "sentence {s} classifier argmax");
-    }
-}
-
-#[test]
-fn sida_forward_equals_router_forward_when_hash_is_perfect() {
-    // If we build a hash table FROM the router's decisions, the SiDA
-    // path must reproduce the router path bit-for-bit (same experts,
-    // same alphas).
-    let Some(b) = bundle() else { return };
-    let runner = ModelRunner::new(b.clone(), "sst2").unwrap();
-    let staged = runner.stage_all_experts().unwrap();
-    let mut gen = sida_moe::workload::TraceGenerator::new(
-        sida_moe::workload::Profile::named("sst2").unwrap(),
-        b.topology.vocab,
-        3,
-    );
-    let (ids, _, _) = gen.sentence();
-
-    let mut provider = ExpertProvider::AllResident(&staged);
-    let base = runner
-        .forward(&ids, None, &mut provider, ForwardOptions { want_lm: true, ..Default::default() })
-        .unwrap();
-
-    // fabricate a "perfect" hash table from the observed routing
-    let l = runner.seq_len;
-    let m = b.topology.num_moe_layers();
-    let k = b.topology.hash.top_k;
-    let mut idx = vec![0i32; l * m * k];
-    let mut alpha = vec![0f32; l * m * k];
-    for (mi, routing) in base.routing.iter().enumerate() {
-        for t in 0..l {
-            let (e, a) = routing.assignments[t][0];
-            idx[(t * m + mi) * k] = e as i32;
-            alpha[(t * m + mi) * k] = a;
-        }
-    }
-    let table = sida_moe::coordinator::HashTable::new(0, l, m, k, idx, alpha, 0.0).unwrap();
-
-    let mut provider = ExpertProvider::AllResident(&staged);
-    let sida = runner
-        .forward(
-            &ids,
-            Some((&table, 1)),
-            &mut provider,
-            ForwardOptions { want_lm: true, ..Default::default() },
-        )
-        .unwrap();
-
-    let base_lm = base.lm_logits.unwrap();
-    let sida_lm = sida.lm_logits.unwrap();
-    for (i, (a, c)) in base_lm.iter().zip(sida_lm.iter()).enumerate() {
-        assert!((a - c).abs() < 1e-3, "lm logit {i}: {a} vs {c}");
-    }
-}
-
-#[test]
-fn cached_provider_matches_all_resident_numerically() {
-    let Some(b) = bundle() else { return };
-    let runner = ModelRunner::new(b.clone(), "sst2").unwrap();
-    let staged = runner.stage_all_experts().unwrap();
-    let mut gen = sida_moe::workload::TraceGenerator::new(
-        sida_moe::workload::Profile::named("sst2").unwrap(),
-        b.topology.vocab,
-        11,
-    );
-    let (ids, _, _) = gen.sentence();
     let mut p1 = ExpertProvider::AllResident(&staged);
-    let o1 = runner.forward(&ids, None, &mut p1, ForwardOptions::default()).unwrap();
+    let o1 = r.forward(&ids, None, &mut p1, ForwardOptions::default()).unwrap();
+
+    let mut p2 = ExpertProvider::HostLiterals;
+    let o2 = r.forward(&ids, None, &mut p2, ForwardOptions::default()).unwrap();
+    assert_eq!(o1.hidden, o2.hidden, "host literals vs staged buffers");
 
     let real = b.weights.expert_bytes(b.topology.moe_blocks[0], 0).unwrap();
-    let mut cache = ExpertCache::new(
-        1 << 30,
-        CostModel::physical(real),
-        make_policy("fifo").unwrap(),
-    );
-    let mut p2 = ExpertProvider::Cached { cache: &mut cache, blocking: true };
-    let o2 = runner.forward(&ids, None, &mut p2, ForwardOptions::default()).unwrap();
-    for (a, c) in o1.hidden.iter().zip(o2.hidden.iter()) {
-        assert!((a - c).abs() < 1e-4);
-    }
+    let mut cache =
+        ExpertCache::new(1 << 30, CostModel::physical(real), make_policy("fifo").unwrap());
+    let mut p3 = ExpertProvider::Cached { cache: &mut cache, blocking: true };
+    let o3 = r.forward(&ids, None, &mut p3, ForwardOptions::default()).unwrap();
+    assert_eq!(o1.hidden, o3.hidden, "cached vs staged buffers");
     cache.check_invariants().unwrap();
     assert!(cache.stats().misses > 0);
 
     // a second pass over the same sentence must be all hits
     let miss_before = cache.stats().misses;
-    let mut p3 = ExpertProvider::Cached { cache: &mut cache, blocking: true };
-    let _ = runner.forward(&ids, None, &mut p3, ForwardOptions::default()).unwrap();
+    let mut p4 = ExpertProvider::Cached { cache: &mut cache, blocking: true };
+    let _ = r.forward(&ids, None, &mut p4, ForwardOptions::default()).unwrap();
     assert_eq!(cache.stats().misses, miss_before, "second pass should hit");
+    assert!(cache.stats().hit_rate().unwrap() > 0.0);
 }
 
 #[test]
-fn host_literal_provider_matches_buffers() {
-    let Some(b) = bundle() else { return };
-    let runner = ModelRunner::new(b.clone(), "sst2").unwrap();
-    let staged = runner.stage_all_experts().unwrap();
-    let mut gen = sida_moe::workload::TraceGenerator::new(
-        sida_moe::workload::Profile::named("sst2").unwrap(),
-        b.topology.vocab,
-        13,
-    );
-    let (ids, _, _) = gen.sentence();
-    let mut p1 = ExpertProvider::AllResident(&staged);
-    let o1 = runner.forward(&ids, None, &mut p1, ForwardOptions::default()).unwrap();
-    let mut p2 = ExpertProvider::HostLiterals;
-    let o2 = runner.forward(&ids, None, &mut p2, ForwardOptions::default()).unwrap();
-    for (a, c) in o1.hidden.iter().zip(o2.hidden.iter()) {
-        assert!((a - c).abs() < 1e-4);
+fn perfect_hash_routing_equals_dense_baseline_exactly() {
+    // Acceptance criterion: agreement = 1.0 -> the SiDA path (routers
+    // never execute; the hash table decides) reproduces the dense
+    // baseline's logits bit-for-bit.
+    let b = testkit::tiny_bundle(); // agreement = 1.0
+    let r = runner(&b);
+    let builder = HashBuilder::new(&b, TINY_PROFILE).unwrap();
+    let staged = r.stage_all_experts().unwrap();
+    for seed in 0..5 {
+        let ids = sentence(&b, seed);
+        let opts = ForwardOptions { want_lm: true, want_cls: true, ..Default::default() };
+
+        let mut pb = ExpertProvider::AllResident(&staged);
+        let base = r.forward(&ids, None, &mut pb, opts).unwrap();
+
+        let table = builder.build(seed, &ids).unwrap();
+        let mut ps = ExpertProvider::AllResident(&staged);
+        let sida = r.forward(&ids, Some((&table, 1)), &mut ps, opts).unwrap();
+
+        assert_eq!(base.hidden, sida.hidden, "seed {seed}: hidden states diverged");
+        assert_eq!(
+            base.lm_logits.unwrap(),
+            sida.lm_logits.unwrap(),
+            "seed {seed}: lm logits diverged"
+        );
+        assert_eq!(
+            base.cls_logits.unwrap(),
+            sida.cls_logits.unwrap(),
+            "seed {seed}: cls logits diverged"
+        );
+        // and the hash table's top-1 is exactly the router's decision
+        let mask = ModelRunner::mask_of(&ids);
+        for (m, routing) in base.routing.iter().enumerate() {
+            for t in 0..r.seq_len {
+                if mask[t] > 0.0 {
+                    assert_eq!(routing.top1[t], table.expert_at(t, m, 0));
+                }
+            }
+        }
     }
+}
+
+#[test]
+fn zero_agreement_hash_contradicts_router_everywhere() {
+    let b = testkit::bundle_with_agreement(0.0);
+    let r = runner(&b);
+    let builder = HashBuilder::new(&b, TINY_PROFILE).unwrap();
+    let staged = r.stage_all_experts().unwrap();
+    let ids = sentence(&b, 3);
+    let mask = ModelRunner::mask_of(&ids);
+
+    let mut p = ExpertProvider::AllResident(&staged);
+    let base = r
+        .forward(&ids, None, &mut p, ForwardOptions { want_lm: true, ..Default::default() })
+        .unwrap();
+    let table = builder.build(0, &ids).unwrap();
+    for (m, routing) in base.routing.iter().enumerate() {
+        for t in 0..r.seq_len {
+            if mask[t] > 0.0 {
+                assert_ne!(
+                    routing.top1[t],
+                    table.expert_at(t, m, 0),
+                    "layer {m} token {t}: corrupted hash still agrees"
+                );
+            }
+        }
+    }
+    // routing through wrong experts must actually change the output
+    let mut p2 = ExpertProvider::AllResident(&staged);
+    let sida = r
+        .forward(
+            &ids,
+            Some((&table, 1)),
+            &mut p2,
+            ForwardOptions { want_lm: true, ..Default::default() },
+        )
+        .unwrap();
+    assert_ne!(base.lm_logits.unwrap(), sida.lm_logits.unwrap());
+}
+
+#[test]
+fn hash_builder_is_deterministic_per_sentence() {
+    let b = testkit::bundle_with_agreement(0.6);
+    let builder = HashBuilder::new(&b, TINY_PROFILE).unwrap();
+    let ids = sentence(&b, 9);
+    let t1 = builder.build(0, &ids).unwrap();
+    let t2 = builder.build(1, &ids).unwrap();
+    assert_eq!(t1.idx, t2.idx, "same sentence must hash identically");
+    assert_eq!(t1.alpha, t2.alpha);
+    assert_eq!(t2.batch_id, 1);
+    assert_eq!(t1.m, b.topology.num_moe_layers());
+    assert_eq!(t1.k, b.topology.hash.top_k);
 }
 
 #[test]
 fn invoke_all_matches_selective_numerics() {
     // Standard's "invoke every expert" must not change outputs — idle
     // experts contribute zero (their token set is empty / zero alpha).
-    let Some(b) = bundle() else { return };
-    let runner = ModelRunner::new(b.clone(), "sst2").unwrap();
-    let staged = runner.stage_all_experts().unwrap();
-    let mut gen = sida_moe::workload::TraceGenerator::new(
-        sida_moe::workload::Profile::named("sst2").unwrap(),
-        b.topology.vocab,
-        17,
-    );
-    let (ids, _, _) = gen.sentence();
+    let b = testkit::tiny_bundle();
+    let r = runner(&b);
+    let staged = r.stage_all_experts().unwrap();
+    let ids = sentence(&b, 17);
     let mut p1 = ExpertProvider::AllResident(&staged);
-    let o1 = runner.forward(&ids, None, &mut p1, ForwardOptions::default()).unwrap();
+    let o1 = r.forward(&ids, None, &mut p1, ForwardOptions::default()).unwrap();
     let mut p2 = ExpertProvider::AllResident(&staged);
-    let o2 = runner
+    let o2 = r
         .forward(
             &ids,
             None,
@@ -318,36 +193,79 @@ fn invoke_all_matches_selective_numerics() {
         assert!((a - c).abs() < 1e-4);
     }
     assert!(o2.times.expert_invocations > o1.times.expert_invocations);
+    assert_eq!(
+        o2.times.expert_invocations,
+        (b.topology.num_experts * b.topology.num_moe_layers()) as u64
+    );
 }
 
 #[test]
-fn lm_nll_matches_golden_mean() {
-    let Some(b) = bundle() else { return };
-    let g = golden(&b);
-    let runner = ModelRunner::new(b.clone(), "sst2").unwrap();
-    let prof = g.get("profiles").unwrap().get("sst2").unwrap();
-    let ids = ids_of(prof.get("ids").unwrap());
-    let want_mean = prof.get_f64("lm_mean_nll").unwrap();
-    let staged = runner.stage_all_experts().unwrap();
-    let mut total_nll = 0.0;
-    let mut total_tok = 0.0;
-    for sent_ids in &ids {
-        let mut p = ExpertProvider::AllResident(&staged);
-        let out = runner
-            .forward(
-                sent_ids,
-                None,
-                &mut p,
-                ForwardOptions { want_lm: true, ..Default::default() },
-            )
-            .unwrap();
-        let (nll, cnt) = runner.lm_nll(&out.lm_logits.unwrap(), sent_ids).unwrap();
-        total_nll += nll;
-        total_tok += cnt;
+fn lm_nll_matches_manual_reference() {
+    let b = testkit::tiny_bundle();
+    let r = runner(&b);
+    let staged = r.stage_all_experts().unwrap();
+    let ids = sentence(&b, 23);
+    let mut p = ExpertProvider::AllResident(&staged);
+    let out = r
+        .forward(&ids, None, &mut p, ForwardOptions { want_lm: true, ..Default::default() })
+        .unwrap();
+    let lm = out.lm_logits.unwrap();
+    let (nll, cnt) = r.lm_nll(&lm, &ids).unwrap();
+
+    // naive reference: next-token NLL over real target positions
+    let v = b.topology.vocab;
+    let l = r.seq_len;
+    let mask = ModelRunner::mask_of(&ids);
+    let mut want_nll = 0.0f64;
+    let mut want_cnt = 0.0f64;
+    for t in 0..l - 1 {
+        let row = &lm[t * v..(t + 1) * v];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let lse = row.iter().map(|&x| ((x as f64) - mx).exp()).sum::<f64>().ln() + mx;
+        let logp = lm[t * v + ids[t + 1] as usize] as f64 - lse;
+        want_nll += -logp * mask[t + 1] as f64;
+        want_cnt += mask[t + 1] as f64;
     }
-    let got_mean = total_nll / total_tok;
-    assert!(
-        (got_mean - want_mean).abs() < 0.02 * want_mean.abs() + 0.02,
-        "mean NLL {got_mean} vs golden {want_mean}"
-    );
+    assert!((cnt - want_cnt).abs() < 1e-6, "token count {cnt} vs {want_cnt}");
+    assert!((nll - want_nll).abs() < 1e-3, "nll {nll} vs {want_nll}");
+}
+
+#[test]
+fn routing_from_hash_clamps_k_to_table() {
+    let b = testkit::tiny_bundle();
+    let r = runner(&b);
+    let builder = HashBuilder::new(&b, TINY_PROFILE).unwrap();
+    let ids = sentence(&b, 2);
+    let table = builder.build(0, &ids).unwrap();
+    // k_used far beyond table.k must not panic and uses at most k experts
+    let routing = r.routing_from_hash(&table, 0, 99);
+    for assign in &routing.assignments {
+        assert!(assign.len() <= table.k);
+        let total: f32 = assign.iter().map(|(_, a)| *a).sum();
+        assert!(total.is_finite());
+    }
+}
+
+#[test]
+fn fabricated_hash_table_drives_routing() {
+    // A hand-built table (every token -> expert 0) must route every
+    // masked token to expert 0 — the mechanism golden.rs uses to check
+    // perfect-hash equivalence on real artifacts.
+    let b = testkit::tiny_bundle();
+    let r = runner(&b);
+    let staged = r.stage_all_experts().unwrap();
+    let ids = sentence(&b, 5);
+    let l = r.seq_len;
+    let m = b.topology.num_moe_layers();
+    let k = b.topology.hash.top_k;
+    let idx = vec![0i32; l * m * k];
+    let alpha = vec![0.5f32; l * m * k];
+    let table = HashTable::new(0, l, m, k, idx, alpha, 0.0).unwrap();
+    let mut p = ExpertProvider::AllResident(&staged);
+    let out = r.forward(&ids, Some((&table, 1)), &mut p, ForwardOptions::default()).unwrap();
+    for routing in &out.routing {
+        assert!(routing.top1.iter().all(|&e| e == 0));
+    }
+    // exactly one expert invoked per MoE layer
+    assert_eq!(out.times.expert_invocations, m as u64);
 }

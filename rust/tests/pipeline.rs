@@ -1,40 +1,31 @@
-//! End-to-end pipeline tests: the two-thread SiDA coordinator over real
-//! artifacts, plus cross-method behavioural checks.
-
-use std::path::PathBuf;
-use std::sync::Arc;
+//! End-to-end pipeline tests over the synthetic testkit bundle: the
+//! two-thread SiDA coordinator, prefetch-vs-on-demand miss accounting,
+//! budget/eviction behavior, queue backpressure, and cross-method
+//! behavioural checks — all hermetic (no artifacts, no PJRT).
 
 use sida_moe::baselines::{run_baseline, BaselineConfig, Method};
 use sida_moe::coordinator::{Pipeline, PipelineConfig};
+use sida_moe::memory::CostModel;
 use sida_moe::runtime::ModelBundle;
-use sida_moe::workload::{ArrivalProcess, Profile, TraceGenerator};
+use sida_moe::testkit::{self, TINY_PROFILE};
+use sida_moe::workload::Request;
 
-fn artifacts_root() -> Option<PathBuf> {
-    let root = sida_moe::default_artifacts_root();
-    if root.join("switch8").join("model.json").is_file() {
-        Some(root)
-    } else {
-        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
-        None
-    }
+fn trace(b: &ModelBundle, n: usize, seed: u64) -> Vec<Request> {
+    testkit::tiny_trace(b, n, seed)
 }
 
-fn bundle() -> Option<Arc<ModelBundle>> {
-    let root = artifacts_root()?;
-    Some(Arc::new(ModelBundle::load_named(&root, "switch8").expect("load bundle")))
-}
-
-fn trace(b: &ModelBundle, n: usize, seed: u64) -> Vec<sida_moe::workload::Request> {
-    let mut gen =
-        TraceGenerator::new(Profile::named("sst2").unwrap(), b.topology.vocab, seed);
-    gen.trace(n, ArrivalProcess::ClosedLoop)
+fn expert_sim_bytes(b: &ModelBundle) -> usize {
+    CostModel::paper_scale(
+        b.weights.expert_bytes(b.topology.moe_blocks[0], 0).unwrap(),
+    )
+    .sim_expert_bytes
 }
 
 #[test]
 fn pipeline_serves_every_request_exactly_once() {
-    let Some(b) = bundle() else { return };
+    let b = testkit::tiny_bundle();
     let reqs = trace(&b, 10, 0);
-    let p = Pipeline::new(b, "sst2", PipelineConfig::default()).unwrap();
+    let p = Pipeline::new(b, TINY_PROFILE, PipelineConfig::default()).unwrap();
     let out = p.serve(&reqs).unwrap();
     assert_eq!(out.stats.requests, 10);
     let mut ids: Vec<u64> = out.per_request.iter().map(|r| r.id).collect();
@@ -47,38 +38,49 @@ fn pipeline_serves_every_request_exactly_once() {
 }
 
 #[test]
-fn pipeline_respects_memory_budget() {
-    let Some(b) = bundle() else { return };
+fn pipeline_preserves_arrival_order() {
+    // the bounded queues are FIFO end to end: the inference thread must
+    // complete requests in submission order
+    let b = testkit::tiny_bundle();
+    let reqs = trace(&b, 12, 7);
+    let p = Pipeline::new(b, TINY_PROFILE, PipelineConfig::default()).unwrap();
+    let out = p.serve(&reqs).unwrap();
+    let served: Vec<u64> = out.per_request.iter().map(|r| r.id).collect();
+    assert_eq!(served, (0..12).collect::<Vec<u64>>());
+}
+
+#[test]
+fn pipeline_respects_memory_budget_and_evicts() {
+    let b = testkit::tiny_bundle();
     let reqs = trace(&b, 8, 1);
-    // budget of exactly 3 paper-scale experts
-    let expert_sim = sida_moe::memory::CostModel::paper_scale(
-        b.weights.expert_bytes(b.topology.moe_blocks[0], 0).unwrap(),
-    )
-    .sim_expert_bytes;
-    let cfg = PipelineConfig {
-        budget_sim_bytes: 3 * expert_sim + 1024,
-        ..Default::default()
-    };
-    let p = Pipeline::new(b, "sst2", cfg).unwrap();
+    let expert_sim = expert_sim_bytes(&b);
+    // budget of exactly 2 paper-scale experts (pool holds 8)
+    let budget = 2 * expert_sim + 1024;
+    let cfg = PipelineConfig { budget_sim_bytes: budget, ..Default::default() };
+    let p = Pipeline::new(b, TINY_PROFILE, cfg).unwrap();
     let out = p.serve(&reqs).unwrap();
     assert_eq!(out.stats.requests, 8);
     assert!(
-        out.stats.peak_device_bytes <= 3 * expert_sim + 1024,
-        "peak {} exceeds budget",
+        out.stats.peak_device_bytes <= budget,
+        "peak {} exceeds budget {budget}",
         out.stats.peak_device_bytes
     );
     assert!(out.stats.evictions > 0, "tight budget must evict");
     let cache = p.cache.lock().unwrap();
     cache.check_invariants().unwrap();
+    assert!(cache.used() <= cache.budget());
 }
 
 #[test]
-fn prefetch_reduces_blocking_misses() {
-    let Some(b) = bundle() else { return };
+fn prefetch_strictly_reduces_blocking_misses() {
+    // The paper's core pipelining claim, on the synthetic bundle: with
+    // the look-ahead prefetch stage, no fetch ever stalls the inference
+    // thread; without it, every cold fetch is a blocking miss.
+    let b = testkit::tiny_bundle();
     let reqs = trace(&b, 12, 2);
     let with = Pipeline::new(
         b.clone(),
-        "sst2",
+        TINY_PROFILE,
         PipelineConfig { prefetch: true, ..Default::default() },
     )
     .unwrap()
@@ -86,32 +88,47 @@ fn prefetch_reduces_blocking_misses() {
     .unwrap();
     let without = Pipeline::new(
         b,
-        "sst2",
+        TINY_PROFILE,
         PipelineConfig { prefetch: false, ..Default::default() },
     )
     .unwrap()
     .serve(&reqs)
     .unwrap();
-    assert!(
-        with.stats.blocking_misses <= without.stats.blocking_misses,
-        "prefetch ({}) should not block more than no-prefetch ({})",
-        with.stats.blocking_misses,
-        without.stats.blocking_misses
+    assert!(without.stats.blocking_misses > 0, "cold cache must miss on demand");
+    assert_eq!(
+        with.stats.blocking_misses, 0,
+        "prefetch left {} fetches on the critical path",
+        with.stats.blocking_misses
     );
-    // with prefetch, (nearly) all misses come from the prefetch stage
-    assert!(with.stats.blocking_misses < with.stats.cache_misses.max(1));
+    assert!(with.stats.blocking_misses < without.stats.blocking_misses);
+    // both variants computed the same requests
+    assert_eq!(with.stats.requests, without.stats.requests);
+}
+
+#[test]
+fn queue_depth_one_applies_backpressure_and_still_serves_all() {
+    // hash-table queue bounded at depth 1: the hash-building thread can
+    // be at most one table ahead; everything still flows exactly once
+    let b = testkit::tiny_bundle();
+    let reqs = trace(&b, 16, 4);
+    let cfg = PipelineConfig { queue_depth: 1, ..Default::default() };
+    let p = Pipeline::new(b, TINY_PROFILE, cfg).unwrap();
+    let out = p.serve(&reqs).unwrap();
+    assert_eq!(out.stats.requests, 16);
+    let served: Vec<u64> = out.per_request.iter().map(|r| r.id).collect();
+    assert_eq!(served, (0..16).collect::<Vec<u64>>());
 }
 
 #[test]
 fn standard_invokes_every_expert_sida_does_not() {
-    let Some(b) = bundle() else { return };
+    let b = testkit::tiny_bundle();
     let reqs = trace(&b, 4, 3);
     let e = b.topology.num_experts as u64;
     let m = b.topology.num_moe_layers() as u64;
 
     let std_out = run_baseline(
         b.clone(),
-        "sst2",
+        TINY_PROFILE,
         Method::Standard,
         &reqs,
         &BaselineConfig::default(),
@@ -123,7 +140,7 @@ fn standard_invokes_every_expert_sida_does_not() {
         "Standard must invoke every expert every layer (paper §2.3)"
     );
 
-    let sida_out = Pipeline::new(b, "sst2", PipelineConfig::default())
+    let sida_out = Pipeline::new(b, TINY_PROFILE, PipelineConfig::default())
         .unwrap()
         .serve(&reqs)
         .unwrap();
@@ -134,44 +151,93 @@ fn standard_invokes_every_expert_sida_does_not() {
 }
 
 #[test]
-fn sida_and_baseline_agree_on_classifier_when_hash_is_accurate() {
-    // cls predictions from SiDA (hash routing) should mostly agree with
-    // the router-driven baseline — fidelity (Tab 4's mechanism)
-    let Some(b) = bundle() else { return };
+fn sida_classifier_matches_baseline_with_perfect_hash() {
+    // agreement = 1.0: not just "mostly agree" — every classifier
+    // prediction must match the router-driven baseline
+    let b = testkit::tiny_bundle();
     let reqs = trace(&b, 10, 4);
     let bcfg = BaselineConfig { want_cls: true, ..Default::default() };
-    let base = run_baseline(b.clone(), "sst2", Method::TutelLike, &reqs, &bcfg).unwrap();
+    let base = run_baseline(b.clone(), TINY_PROFILE, Method::TutelLike, &reqs, &bcfg).unwrap();
     let pcfg = PipelineConfig { want_cls: true, ..Default::default() };
-    let sida = Pipeline::new(b, "sst2", pcfg).unwrap().serve(&reqs).unwrap();
+    let sida = Pipeline::new(b, TINY_PROFILE, pcfg).unwrap().serve(&reqs).unwrap();
     let mut sida_sorted = sida.per_request.clone();
     sida_sorted.sort_by_key(|r| r.id);
     let mut base_sorted = base.per_request.clone();
     base_sorted.sort_by_key(|r| r.id);
-    let agree = sida_sorted
+    for (s, bl) in sida_sorted.iter().zip(base_sorted.iter()) {
+        assert_eq!(s.cls_pred, bl.cls_pred, "request {} diverged", s.id);
+    }
+}
+
+#[test]
+fn degraded_hash_lowers_classifier_fidelity_mechanism() {
+    // With a 0%-agreement hash the pipeline still serves everything;
+    // predictions go through the wrong experts (Tab 4's failure mode).
+    let b = testkit::bundle_with_agreement(0.0);
+    let reqs = trace(&b, 8, 6);
+    let bcfg = BaselineConfig { want_cls: true, ..Default::default() };
+    let base = run_baseline(b.clone(), TINY_PROFILE, Method::TutelLike, &reqs, &bcfg).unwrap();
+    let pcfg = PipelineConfig { want_cls: true, ..Default::default() };
+    let sida = Pipeline::new(b, TINY_PROFILE, pcfg).unwrap().serve(&reqs).unwrap();
+    assert_eq!(sida.stats.requests, 8);
+    // logits differ per request even if coarse argmax sometimes agrees;
+    // at tiny dims we just require the runs to be well-formed and the
+    // baseline unaffected
+    assert_eq!(base.stats.requests, 8);
+}
+
+#[test]
+fn all_resident_baselines_agree_with_different_memory_traffic() {
+    // same logits, different memory traffic: Standard (host literals),
+    // DeepSpeed-like (staged, fixed bucket) and Tutel-like (staged,
+    // adaptive bucket) must predict identically; the offloading methods
+    // move bytes while the all-resident ones do not.
+    let b = testkit::tiny_bundle();
+    let reqs = trace(&b, 6, 5);
+    let cfg = BaselineConfig { want_cls: true, ..Default::default() };
+    let std_out = run_baseline(b.clone(), TINY_PROFILE, Method::Standard, &reqs, &cfg).unwrap();
+    let ds_out =
+        run_baseline(b.clone(), TINY_PROFILE, Method::DeepspeedLike, &reqs, &cfg).unwrap();
+    let tut_out = run_baseline(b.clone(), TINY_PROFILE, Method::TutelLike, &reqs, &cfg).unwrap();
+    for ((a, c), d) in std_out
+        .per_request
         .iter()
-        .zip(base_sorted.iter())
-        .filter(|(a, b)| a.cls_pred == b.cls_pred)
-        .count();
-    assert!(
-        agree * 10 >= reqs.len() * 8,
-        "classifier agreement too low: {agree}/{}",
-        reqs.len()
-    );
+        .zip(ds_out.per_request.iter())
+        .zip(tut_out.per_request.iter())
+    {
+        assert_eq!(a.cls_pred, c.cls_pred);
+        assert_eq!(a.cls_pred, d.cls_pred);
+    }
+    // all-resident methods report the full MoE footprint, no transfers
+    assert_eq!(std_out.stats.transferred_bytes, 0);
+    assert_eq!(ds_out.stats.transferred_bytes, 0);
+    assert!(ds_out.stats.peak_device_bytes > 0);
+
+    // offloading under the same tight budget DOES move bytes
+    let expert_sim = expert_sim_bytes(&b);
+    let tight = BaselineConfig {
+        budget_sim_bytes: 3 * expert_sim + 1024,
+        want_cls: true,
+        ..Default::default()
+    };
+    let react =
+        run_baseline(b.clone(), TINY_PROFILE, Method::Reactive, &reqs, &tight).unwrap();
+    assert!(react.stats.transferred_bytes > 0);
+    for (a, r) in tut_out.per_request.iter().zip(react.per_request.iter()) {
+        assert_eq!(a.cls_pred, r.cls_pred, "offloading must not change predictions");
+    }
 }
 
 #[test]
 fn layerwise_transfers_more_than_sida_under_same_budget() {
-    let Some(b) = bundle() else { return };
+    let b = testkit::tiny_bundle();
     let reqs = trace(&b, 6, 5);
-    let expert_sim = sida_moe::memory::CostModel::paper_scale(
-        b.weights.expert_bytes(b.topology.moe_blocks[0], 0).unwrap(),
-    )
-    .sim_expert_bytes;
+    let expert_sim = expert_sim_bytes(&b);
     let budget = 6 * expert_sim; // below one full layer (8 experts)
 
     let lw = run_baseline(
         b.clone(),
-        "sst2",
+        TINY_PROFILE,
         Method::Layerwise,
         &reqs,
         &BaselineConfig { budget_sim_bytes: budget, ..Default::default() },
@@ -179,7 +245,7 @@ fn layerwise_transfers_more_than_sida_under_same_budget() {
     .unwrap();
     let sida = Pipeline::new(
         b,
-        "sst2",
+        TINY_PROFILE,
         PipelineConfig { budget_sim_bytes: budget, ..Default::default() },
     )
     .unwrap()
@@ -194,13 +260,12 @@ fn layerwise_transfers_more_than_sida_under_same_budget() {
 }
 
 #[test]
-fn server_state_serves_requests() {
-    let Some(b) = bundle() else { return };
-    let state =
-        sida_moe::server::ServerState::new(b, "sst2", 8 << 30, 1).unwrap();
-    let (label, secs) = state.serve_one(&[1, 40, 41, 42, 2]).unwrap();
-    assert!(label < 4);
-    assert!(secs > 0.0);
-    let (label2, _) = state.serve_one(&[1, 40, 41, 42, 2]).unwrap();
-    assert_eq!(label, label2, "same input, same prediction");
+fn two_moe_layer_pipeline_serves_and_prefetches() {
+    let b = testkit::bundle(&testkit::SynthSpec::default().two_moe_layers()).unwrap();
+    let reqs = trace(&b, 6, 8);
+    let p = Pipeline::new(b, TINY_PROFILE, PipelineConfig::default()).unwrap();
+    let out = p.serve(&reqs).unwrap();
+    assert_eq!(out.stats.requests, 6);
+    assert_eq!(out.stats.blocking_misses, 0, "prefetch covers both MoE layers");
+    assert!(out.stats.cache_misses > 0);
 }

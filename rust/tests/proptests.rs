@@ -8,9 +8,10 @@
 use std::collections::HashSet;
 
 use sida_moe::coordinator::{AdmitOutcome, Batcher, HashTable};
-use sida_moe::experts::{make_policy, ExpertKey};
+use sida_moe::experts::{make_policy, ExpertCache, ExpertKey};
 use sida_moe::memory::{CostModel, DevicePool, ReserveOutcome};
 use sida_moe::metrics::LatencyHistogram;
+use sida_moe::runtime::stage_expert_parts;
 use sida_moe::util::json::Json;
 use sida_moe::util::prop::{shrink_vec, Prop};
 use sida_moe::util::rng::Rng;
@@ -430,4 +431,158 @@ fn trace_requests_well_formed() {
             Ok(())
         },
     );
+}
+
+// ---------------------------------------------------------------------------
+// Full ExpertCache over the testkit bundle: budget invariant + pinned
+// experts never evicted, under arbitrary ensure/pin/unpin/invalidate
+// sequences, for every eviction policy
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum FullCacheOp {
+    /// ensure expert e resident (blocking flag varies)
+    Ensure(u8, bool),
+    /// pin expert e if resident (bounded so ensure can always evict)
+    Pin(u8),
+    Unpin(u8),
+    /// drop expert e if resident and not pinned
+    Invalidate(u8),
+}
+
+fn gen_full_cache_ops(r: &mut Rng) -> Vec<FullCacheOp> {
+    (0..r.usize_below(60))
+        .map(|_| match r.below(6) {
+            0 | 1 | 2 => FullCacheOp::Ensure(r.below(8) as u8, r.bool(0.5)),
+            3 => FullCacheOp::Pin(r.below(8) as u8),
+            4 => FullCacheOp::Unpin(r.below(8) as u8),
+            _ => FullCacheOp::Invalidate(r.below(8) as u8),
+        })
+        .collect()
+}
+
+#[test]
+fn expert_cache_budget_and_pinning_invariants_all_policies() {
+    let bundle = sida_moe::testkit::tiny_bundle();
+    let block = bundle.topology.moe_blocks[0];
+    let num_experts = bundle.topology.num_experts;
+    let real = bundle.weights.expert_bytes(block, 0).unwrap();
+    for policy_name in ["fifo", "lru", "lfu", "clock"] {
+        let bundle = bundle.clone();
+        Prop::new(48).check(
+            &format!("expert cache invariants ({policy_name})"),
+            gen_full_cache_ops,
+            |v| shrink_vec(v),
+            |ops| {
+                // room for exactly 3 experts; at most 2 ever pinned, so
+                // ensure always has an evictable victim available
+                let mut cache = ExpertCache::new(
+                    3 * real + 64,
+                    CostModel::physical(real),
+                    make_policy(policy_name).unwrap(),
+                );
+                let mut pinned: Vec<ExpertKey> = Vec::new();
+                for op in ops {
+                    match op {
+                        FullCacheOp::Ensure(e, blocking) => {
+                            let expert = *e as usize % num_experts;
+                            let key = ExpertKey::new(block, expert);
+                            let engine = bundle.engine.clone();
+                            let weights = bundle.weights.clone();
+                            cache
+                                .ensure(key, real, *blocking, || {
+                                    stage_expert_parts(&engine, &weights, block, expert)
+                                })
+                                .map_err(|err| format!("ensure {expert}: {err}"))?;
+                            if !cache.contains(&key) {
+                                return Err(format!("{expert} not resident after ensure"));
+                            }
+                        }
+                        FullCacheOp::Pin(e) => {
+                            let key = ExpertKey::new(block, *e as usize % num_experts);
+                            if cache.contains(&key) && pinned.len() < 2 && !pinned.contains(&key)
+                            {
+                                cache.pin(key);
+                                pinned.push(key);
+                            }
+                        }
+                        FullCacheOp::Unpin(e) => {
+                            let key = ExpertKey::new(block, *e as usize % num_experts);
+                            cache.unpin(&key);
+                            pinned.retain(|k| *k != key);
+                        }
+                        FullCacheOp::Invalidate(e) => {
+                            let key = ExpertKey::new(block, *e as usize % num_experts);
+                            if !pinned.contains(&key) {
+                                cache.invalidate(&key);
+                            }
+                        }
+                    }
+                    cache.check_invariants().map_err(|err| err.to_string())?;
+                    if cache.used() > cache.budget() {
+                        return Err(format!(
+                            "budget violated: {} > {}",
+                            cache.used(),
+                            cache.budget()
+                        ));
+                    }
+                    for key in &pinned {
+                        if !cache.contains(key) {
+                            return Err(format!("pinned {key:?} was evicted"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hash oracle agreement knob: measured top-1 agreement tracks the
+// configured rate, and corrupted predictions stay within the expert pool
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hash_agreement_rate_tracks_configuration() {
+    use sida_moe::coordinator::HashBuilder;
+    use sida_moe::model::{ExpertProvider, ForwardOptions, ModelRunner};
+
+    for (agreement, lo, hi) in [(1.0f64, 1.0f64, 1.0f64), (0.0, 0.0, 0.0), (0.5, 0.2, 0.8)] {
+        let b = sida_moe::testkit::bundle_with_agreement(agreement);
+        let runner = ModelRunner::new(b.clone(), sida_moe::testkit::TINY_PROFILE).unwrap();
+        let builder = HashBuilder::new(&b, sida_moe::testkit::TINY_PROFILE).unwrap();
+        let staged = runner.stage_all_experts().unwrap();
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for seed in 0..10 {
+            let req = sida_moe::testkit::tiny_trace(&b, 1, seed).remove(0);
+            let mut p = ExpertProvider::AllResident(&staged);
+            let out = runner
+                .forward(&req.ids, None, &mut p, ForwardOptions::default())
+                .unwrap();
+            let table = builder.build(seed, &req.ids).unwrap();
+            let mask = ModelRunner::mask_of(&req.ids);
+            for (m, routing) in out.routing.iter().enumerate() {
+                for t in 0..runner.seq_len {
+                    if mask[t] == 0.0 {
+                        continue;
+                    }
+                    let predicted = table.expert_at(t, m, 0);
+                    if predicted >= b.topology.num_experts {
+                        panic!("prediction {predicted} outside expert pool");
+                    }
+                    if predicted == routing.top1[t] {
+                        agree += 1;
+                    }
+                    total += 1;
+                }
+            }
+        }
+        let rate = agree as f64 / total as f64;
+        assert!(
+            (lo..=hi).contains(&rate),
+            "agreement {agreement}: measured {rate} outside [{lo}, {hi}] over {total} tokens"
+        );
+    }
 }

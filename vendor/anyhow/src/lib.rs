@@ -1,0 +1,223 @@
+//! Minimal in-repo stand-in for the `anyhow` crate.
+//!
+//! The build is fully hermetic (no crates.io access), so this shim
+//! provides the subset of anyhow the workspace actually uses:
+//!
+//! * [`Error`]: an opaque error value with a context chain.  `Display`
+//!   prints the outermost context; `{:#}` (alternate) prints the whole
+//!   chain `outer: ...: root`, matching anyhow's rendering that the CLI
+//!   relies on (`eprintln!("error: {e:#}")`).
+//! * [`Result<T>`] alias.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros (format-string forms).
+//! * [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//! * `From<E: std::error::Error + Send + Sync + 'static>` so `?`
+//!   converts io/parse/domain errors exactly like the real crate.
+//!
+//! Like the real anyhow, `Error` deliberately does NOT implement
+//! `std::error::Error` — that is what keeps the blanket `From` impl
+//! coherent.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+pub struct Error {
+    /// context strings, outermost first
+    chain: Vec<String>,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// Plain-message root error (what `anyhow!` produces).
+struct MessageError(String);
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(msg: M) -> Self {
+        Error { chain: Vec::new(), source: Box::new(MessageError(msg.to_string())) }
+    }
+
+    pub fn new<E: StdError + Send + Sync + 'static>(err: E) -> Self {
+        Error { chain: Vec::new(), source: Box::new(err) }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost (root) error.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut cur: &(dyn StdError + 'static) = self.source.as_ref();
+        while let Some(next) = cur.source() {
+            cur = next;
+        }
+        cur
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for c in &self.chain {
+                write!(f, "{c}: ")?;
+            }
+            write!(f, "{}", self.source)
+        } else if let Some(outer) = self.chain.first() {
+            f.write_str(outer)
+        } else {
+            write!(f, "{}", self.source)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in &self.chain {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.source)
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        Error::new(err)
+    }
+}
+
+/// Context extension for `Result` and `Option` (anyhow-compatible).
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<()> {
+            let r: std::result::Result<(), std::io::Error> = Err(io_err());
+            r?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e: Error = Error::new(io_err()).context("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out");
+        assert_eq!(f(11).unwrap_err().to_string(), "too big: 11");
+        let e = anyhow!("v={}", 7);
+        assert_eq!(e.to_string(), "v=7");
+    }
+
+    #[test]
+    fn root_cause_walks() {
+        let e = Error::new(io_err()).context("c");
+        assert_eq!(e.root_cause().to_string(), "gone");
+    }
+}

@@ -1,0 +1,233 @@
+//! Minimal in-repo stand-in for the `log` facade.
+//!
+//! Provides the subset used by this workspace: the five level macros,
+//! [`Level`]/[`LevelFilter`], [`Metadata`]/[`Record`], the [`Log`] trait
+//! and [`set_logger`]/[`set_max_level`].  Level ordering matches the real
+//! crate: `Error < Warn < Info < Debug < Trace`, so `level <= max`
+//! filtering code ports unchanged.
+
+use std::fmt;
+use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(usize)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        // honor width/alignment ({:5} in logger impls)
+        f.pad(s)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(usize)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+#[derive(Debug, Clone)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn new(level: Level, target: &'a str) -> Self {
+        Metadata { level, target }
+    }
+
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+#[derive(Clone)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn new(metadata: Metadata<'a>, args: fmt::Arguments<'a>) -> Self {
+        Record { metadata, args }
+    }
+
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+struct LoggerSlot(&'static dyn Log);
+
+static LOGGER: AtomicPtr<LoggerSlot> = AtomicPtr::new(std::ptr::null_mut());
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0);
+
+/// Install the global logger (first caller wins).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    let slot = Box::into_raw(Box::new(LoggerSlot(logger)));
+    match LOGGER.compare_exchange(
+        std::ptr::null_mut(),
+        slot,
+        Ordering::SeqCst,
+        Ordering::SeqCst,
+    ) {
+        Ok(_) => Ok(()),
+        Err(_) => {
+            // lost the race; free our slot and report
+            drop(unsafe { Box::from_raw(slot) });
+            Err(SetLoggerError(()))
+        }
+    }
+}
+
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::SeqCst);
+}
+
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::SeqCst) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// The installed logger, if any (used by the macros).
+pub fn logger() -> Option<&'static dyn Log> {
+    let p = LOGGER.load(Ordering::SeqCst);
+    if p.is_null() {
+        None
+    } else {
+        Some(unsafe { (*p).0 })
+    }
+}
+
+/// Macro backend: dispatch one record to the installed logger.
+pub fn __private_log(level: Level, target: &str, args: fmt::Arguments) {
+    if level as usize > MAX_LEVEL.load(Ordering::SeqCst) {
+        return;
+    }
+    if let Some(l) = logger() {
+        let metadata = Metadata::new(level, target);
+        if l.enabled(&metadata) {
+            l.log(&Record::new(metadata, args));
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__private_log($lvl, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_order_matches_log_crate() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Trace > Level::Debug);
+    }
+
+    #[test]
+    fn max_level_roundtrip() {
+        set_max_level(LevelFilter::Debug);
+        assert_eq!(max_level(), LevelFilter::Debug);
+        set_max_level(LevelFilter::Trace);
+        assert_eq!(max_level(), LevelFilter::Trace);
+    }
+
+    #[test]
+    fn macros_are_safe_without_logger() {
+        // no logger installed in this test binary: must be a no-op
+        crate::trace!("t {}", 1);
+        crate::debug!("d");
+        crate::info!("i");
+        crate::warn!("w");
+        crate::error!("e");
+    }
+}
