@@ -2,6 +2,7 @@
 #
 #   make test       hermetic build + test (no artifacts needed)
 #   make lint       clippy -D warnings + rustfmt check
+#   make doc        rustdoc with warnings denied (doc rot fails here)
 #   make artifacts  train the tiny models and export HLO + weights
 #                   (requires the python/ JAX environment)
 #   make bench      run every bench target (skips cleanly without
@@ -10,7 +11,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: test lint fmt bench artifacts artifacts-quick clean
+.PHONY: test lint fmt doc bench artifacts artifacts-quick clean
 
 test:
 	$(CARGO) build --release
@@ -19,6 +20,9 @@ test:
 lint:
 	$(CARGO) clippy --all-targets -- -D warnings -A clippy::style -A clippy::complexity
 	$(CARGO) fmt --check
+
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
 fmt:
 	$(CARGO) fmt

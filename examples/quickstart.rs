@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
     let (ids, n_tokens, topic) = gen.sentence();
     let builder = HashBuilder::new(&bundle, "sst2")?;
     let table = builder.build(0, &ids)?;
-    let mask: Vec<f32> = ids.iter().map(|&t| if t != 0 { 1.0 } else { 0.0 }).collect();
+    let mask = sida_moe::workload::pad_mask(&ids);
     println!("\nsentence: {n_tokens} tokens (topic {topic})");
     for layer in 0..table.m {
         println!(

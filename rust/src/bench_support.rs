@@ -63,6 +63,9 @@ pub struct RunSpec {
     pub want_cls: bool,
     pub policy: String,
     pub prefetch: bool,
+    /// requests per forward (sida only): 1 = the paper's batch-1 mode,
+    /// > 1 = cross-request batching
+    pub max_batch: usize,
     pub seed: u64,
 }
 
@@ -78,8 +81,14 @@ impl RunSpec {
             want_cls: false,
             policy: "fifo".into(),
             prefetch: true,
+            max_batch: 1,
             seed: 0,
         }
+    }
+
+    pub fn batch(mut self, b: usize) -> Self {
+        self.max_batch = b.max(1);
+        self
     }
 
     pub fn budget(mut self, bytes: usize) -> Self {
@@ -141,6 +150,7 @@ pub fn run_method(
                 real_sleep: spec.real_sleep,
                 prefetch: spec.prefetch,
                 queue_depth: 8,
+                max_batch: spec.max_batch,
                 want_lm: spec.want_lm,
                 want_cls: spec.want_cls,
             };
@@ -160,6 +170,13 @@ pub fn run_method(
             run_baseline(bundle, &spec.dataset, m, &requests, &cfg)
         }
     }
+}
+
+/// Paper-scale simulated bytes of one expert — for sizing device
+/// budgets in expert units (e.g. the tight-budget batching comparison).
+pub fn sim_expert_bytes(bundle: &ModelBundle) -> Result<usize> {
+    let real = bundle.weights.expert_bytes(bundle.topology.moe_blocks[0], 0)?;
+    Ok(crate::memory::CostModel::paper_scale(real).sim_expert_bytes)
 }
 
 /// Quick-mode request count from BENCH_QUICK env (CI) vs default.

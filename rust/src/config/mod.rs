@@ -28,6 +28,9 @@ pub struct ServeConfig {
     pub real_sleep: bool,
     /// run the prefetch stage of the SiDA pipeline
     pub prefetch: bool,
+    /// requests coalesced per forward pass (1 = the paper's batch-1
+    /// setting; > 1 enables cross-request batching for the sida method)
+    pub max_batch: usize,
     /// number of requests in the trace
     pub n_requests: usize,
     /// workload seed
@@ -51,6 +54,7 @@ impl Default for ServeConfig {
             k_used: 1,
             real_sleep: false,
             prefetch: true,
+            max_batch: 1,
             n_requests: 32,
             seed: 0,
             want_lm: false,
@@ -74,6 +78,7 @@ impl ServeConfig {
                 "k_used" => cfg.k_used = val.as_usize()?,
                 "real_sleep" => cfg.real_sleep = val.as_bool()?,
                 "prefetch" => cfg.prefetch = val.as_bool()?,
+                "max_batch" => cfg.max_batch = val.as_usize()?.max(1),
                 "n_requests" => cfg.n_requests = val.as_usize()?,
                 "seed" => cfg.seed = val.as_u64()?,
                 "want_lm" => cfg.want_lm = val.as_bool()?,
@@ -113,6 +118,11 @@ impl ServeConfig {
         if let Some(v) = args.get("k-used") {
             if let Ok(x) = v.parse() {
                 self.k_used = x;
+            }
+        }
+        if let Some(v) = args.get("batch") {
+            if let Ok(x) = v.parse::<usize>() {
+                self.max_batch = x.max(1);
             }
         }
         if let Some(v) = args.get("requests") {
@@ -162,16 +172,24 @@ mod tests {
         let j = Json::parse(
             r#"{"model":"switch128","dataset":"mrpc","method":"standard",
                 "budget_gb":24.5,"policy":"lru","k_used":3,"real_sleep":true,
-                "prefetch":false,"n_requests":64,"seed":7,"want_lm":true,
-                "want_cls":false,"artifacts":"a"}"#,
+                "prefetch":false,"max_batch":8,"n_requests":64,"seed":7,
+                "want_lm":true,"want_cls":false,"artifacts":"a"}"#,
         )
         .unwrap();
         let c = ServeConfig::from_json(&j).unwrap();
         assert_eq!(c.model, "switch128");
         assert_eq!(c.k_used, 3);
+        assert_eq!(c.max_batch, 8);
         assert!((c.budget_gb - 24.5).abs() < 1e-9);
         assert!(c.real_sleep);
         assert!(!c.prefetch);
+    }
+
+    #[test]
+    fn max_batch_clamped_to_one() {
+        let j = Json::parse(r#"{"max_batch":0}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.max_batch, 1);
     }
 
     #[test]

@@ -1,11 +1,36 @@
-//! Request admission + batching.
+//! Request admission + cross-request batch formation.
 //!
-//! The paper evaluates at batch size 1 (one sentence per forward), so a
-//! "batch" here is a single request; what the batcher contributes is
-//! arrival-time admission (open-loop traces), FIFO ordering, and
-//! bounded-queue backpressure between the front-end and the pipeline.
-//! It also exposes the length-bucketing hook a >1 batch-size deployment
-//! would use (group-by-profile), exercised by tests.
+//! Two admission structures live here:
+//!
+//! * [`Batcher`] — the bounded FIFO the paper's batch-1 evaluation uses
+//!   (one sentence per forward): arrival-time admission for open-loop
+//!   traces, FIFO ordering, and bounded-queue backpressure between the
+//!   front-end and the pipeline.
+//! * [`BatchFormer`] — the cross-request batch former behind the TCP
+//!   server and the batched pipeline: it coalesces requests *from all
+//!   connections* into multi-sentence batches, cutting a batch when it
+//!   reaches [`BatchPolicy::max_batch`] requests or when the oldest
+//!   pending request has waited [`BatchPolicy::max_delay_secs`]
+//!   (size/deadline-based forming).  Requests are grouped by profile —
+//!   only sentences padded to the same sequence length can share one
+//!   forward pass — and FIFO order is preserved within a batch.
+//!
+//! Time is passed in explicitly (monotonic seconds from any epoch), so
+//! deadline behavior is deterministic under test.
+//!
+//! ```
+//! use sida_moe::coordinator::{BatchFormer, BatchPolicy};
+//!
+//! let policy = BatchPolicy { max_batch: 4, max_delay_secs: 0.010, capacity: 64 };
+//! let mut former: BatchFormer<()> = BatchFormer::new(policy);
+//! let bundle = sida_moe::testkit::tiny_bundle();
+//! for (i, req) in sida_moe::testkit::tiny_trace(&bundle, 2, 0).into_iter().enumerate() {
+//!     former.admit(req, (), i as f64 * 0.001);
+//! }
+//! assert!(former.try_form(0.002).is_none()); // not full, deadline not hit
+//! let batch = former.try_form(0.020).unwrap(); // deadline fired: partial batch
+//! assert_eq!(batch.requests.len(), 2);
+//! ```
 
 use std::collections::VecDeque;
 
@@ -18,7 +43,7 @@ pub enum AdmitOutcome {
     Rejected,
 }
 
-/// Bounded FIFO admission queue.
+/// Bounded FIFO admission queue (batch size 1 per the paper's setting).
 pub struct Batcher {
     queue: VecDeque<Request>,
     capacity: usize,
@@ -70,6 +95,160 @@ impl Batcher {
             }
         }
         n
+    }
+}
+
+/// When the [`BatchFormer`] cuts a batch.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// cut as soon as this many requests are pending (>= 1)
+    pub max_batch: usize,
+    /// cut a partial batch once the oldest pending request has waited
+    /// this long — bounds the batching delay a lone request pays
+    pub max_delay_secs: f64,
+    /// admission-queue bound; requests beyond it are rejected
+    pub capacity: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_delay_secs: 0.005, capacity: 256 }
+    }
+}
+
+struct Pending<T> {
+    req: Request,
+    payload: T,
+    enqueued_at: f64,
+}
+
+/// A formed multi-request batch.
+pub struct FormedBatch<T> {
+    /// the coalesced requests with their payloads, FIFO order preserved
+    pub requests: Vec<(Request, T)>,
+    /// per-request seconds spent waiting for the batch to form, aligned
+    /// with `requests`
+    pub batching_delays: Vec<f64>,
+    /// the `now` at which the batch was cut
+    pub formed_at: f64,
+}
+
+impl<T> FormedBatch<T> {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// Size/deadline-based batch former over a bounded admission queue.
+///
+/// `T` is an opaque per-request payload carried through forming (the
+/// TCP server uses it for the reply channel; the pipeline uses the
+/// request's hash table).
+pub struct BatchFormer<T> {
+    queue: VecDeque<Pending<T>>,
+    policy: BatchPolicy,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub batches_formed: u64,
+    pub batched_requests: u64,
+}
+
+impl<T> BatchFormer<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        let policy = BatchPolicy { max_batch: policy.max_batch.max(1), ..policy };
+        BatchFormer {
+            queue: VecDeque::new(),
+            policy,
+            admitted: 0,
+            rejected: 0,
+            batches_formed: 0,
+            batched_requests: 0,
+        }
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Admit one request (`now` in monotonic seconds).  Rejected when
+    /// the queue holds `capacity` pending requests.
+    pub fn admit(&mut self, req: Request, payload: T, now: f64) -> AdmitOutcome {
+        if self.queue.len() >= self.policy.capacity {
+            self.rejected += 1;
+            return AdmitOutcome::Rejected;
+        }
+        self.admitted += 1;
+        self.queue.push_back(Pending { req, payload, enqueued_at: now });
+        AdmitOutcome::Admitted
+    }
+
+    /// Whether a batch would be cut at `now`: enough pending requests,
+    /// or the oldest has exceeded the deadline.
+    pub fn ready(&self, now: f64) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        self.queue
+            .front()
+            .is_some_and(|p| now - p.enqueued_at >= self.policy.max_delay_secs)
+    }
+
+    /// When the oldest pending request's deadline fires (absolute time
+    /// on the caller's clock), if anything is pending — what a worker
+    /// should sleep until.
+    pub fn next_deadline(&self) -> Option<f64> {
+        self.queue
+            .front()
+            .map(|p| p.enqueued_at + self.policy.max_delay_secs)
+    }
+
+    /// Cut a batch if the policy says so (size reached or deadline
+    /// fired), else `None`.
+    pub fn try_form(&mut self, now: f64) -> Option<FormedBatch<T>> {
+        if !self.ready(now) {
+            return None;
+        }
+        self.form(now)
+    }
+
+    /// Cut whatever is pending regardless of the policy (shutdown
+    /// drain); still bounded by `max_batch` and profile grouping, so a
+    /// long backlog drains as several batches.
+    pub fn form_now(&mut self, now: f64) -> Option<FormedBatch<T>> {
+        self.form(now)
+    }
+
+    fn form(&mut self, now: f64) -> Option<FormedBatch<T>> {
+        let first_len = self.queue.front()?.req.ids.len();
+        let mut requests = Vec::new();
+        let mut batching_delays = Vec::new();
+        while requests.len() < self.policy.max_batch {
+            // group-by-profile: only same-seq-len sentences can share a
+            // forward pass; a different profile starts the next batch
+            match self.queue.front() {
+                Some(p) if p.req.ids.len() == first_len => {
+                    let p = self.queue.pop_front().unwrap();
+                    batching_delays.push((now - p.enqueued_at).max(0.0));
+                    requests.push((p.req, p.payload));
+                }
+                _ => break,
+            }
+        }
+        self.batches_formed += 1;
+        self.batched_requests += requests.len() as u64;
+        Some(FormedBatch { requests, batching_delays, formed_at: now })
     }
 }
 
@@ -126,5 +305,79 @@ mod tests {
             assert!(seen.insert(r.id), "duplicate {}", r.id);
         }
         assert_eq!(seen.len(), 50);
+    }
+
+    fn policy(max_batch: usize, delay: f64, cap: usize) -> BatchPolicy {
+        BatchPolicy { max_batch, max_delay_secs: delay, capacity: cap }
+    }
+
+    #[test]
+    fn size_trigger_forms_full_batch() {
+        let mut f: BatchFormer<u32> = BatchFormer::new(policy(3, 10.0, 64));
+        for i in 0..5 {
+            assert_eq!(f.admit(req(i, 0.0), i as u32, 0.0), AdmitOutcome::Admitted);
+        }
+        let b = f.try_form(0.0).expect("size reached");
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.requests.iter().map(|(r, _)| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(b.requests.iter().map(|(_, p)| *p).collect::<Vec<_>>(), vec![0, 1, 2]);
+        // two left: below size, before deadline -> no batch yet
+        assert!(f.try_form(0.0).is_none());
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn deadline_fires_with_partial_batch() {
+        let mut f: BatchFormer<()> = BatchFormer::new(policy(8, 0.005, 64));
+        f.admit(req(0, 0.0), (), 1.000);
+        f.admit(req(1, 0.0), (), 1.002);
+        assert!(!f.ready(1.004));
+        assert!(f.try_form(1.004).is_none());
+        assert!((f.next_deadline().unwrap() - 1.005).abs() < 1e-9);
+        let b = f.try_form(1.006).expect("deadline fired");
+        assert_eq!(b.len(), 2);
+        // batching delay measured from each request's own admission
+        assert!((b.batching_delays[0] - 0.006).abs() < 1e-9);
+        assert!((b.batching_delays[1] - 0.004).abs() < 1e-9);
+        assert!(f.is_empty());
+        assert_eq!(f.batches_formed, 1);
+        assert_eq!(f.batched_requests, 2);
+    }
+
+    #[test]
+    fn rejection_accounting_under_overflow() {
+        let mut f: BatchFormer<()> = BatchFormer::new(policy(4, 1.0, 2));
+        assert_eq!(f.admit(req(0, 0.0), (), 0.0), AdmitOutcome::Admitted);
+        assert_eq!(f.admit(req(1, 0.0), (), 0.0), AdmitOutcome::Admitted);
+        assert_eq!(f.admit(req(2, 0.0), (), 0.0), AdmitOutcome::Rejected);
+        assert_eq!(f.admit(req(3, 0.0), (), 0.0), AdmitOutcome::Rejected);
+        assert_eq!((f.admitted, f.rejected), (2, 2));
+        // draining frees capacity again
+        let b = f.form_now(0.0).unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(f.admit(req(4, 0.0), (), 0.0), AdmitOutcome::Admitted);
+    }
+
+    #[test]
+    fn profile_grouping_splits_mixed_seq_lens() {
+        let mut f: BatchFormer<()> = BatchFormer::new(policy(8, 10.0, 64));
+        let short = |id| Request { id, ids: vec![1, 5, 2, 0], n_tokens: 3, label: 0, arrival: 0.0 };
+        let long = |id| Request { id, ids: vec![1, 5, 5, 5, 5, 5, 2, 0], n_tokens: 7, label: 0, arrival: 0.0 };
+        f.admit(short(0), (), 0.0);
+        f.admit(short(1), (), 0.0);
+        f.admit(long(2), (), 0.0);
+        f.admit(long(3), (), 0.0);
+        let b1 = f.form_now(0.0).unwrap();
+        assert_eq!(b1.requests.iter().map(|(r, _)| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        let b2 = f.form_now(0.0).unwrap();
+        assert_eq!(b2.requests.iter().map(|(r, _)| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        assert!(f.form_now(0.0).is_none());
+    }
+
+    #[test]
+    fn form_now_on_empty_is_none() {
+        let mut f: BatchFormer<()> = BatchFormer::new(BatchPolicy::default());
+        assert!(f.form_now(0.0).is_none());
+        assert_eq!(f.batches_formed, 0);
     }
 }

@@ -3,6 +3,22 @@
 //! ahead of time, a bounded hash-table queue, and an inference thread
 //! that serves with routers replaced by hash tables and experts moved
 //! between host RAM and a budgeted device tier.
+//!
+//! Serving modes:
+//!
+//! * **batch-1** ([`Pipeline::serve`] with the default
+//!   `max_batch = 1`) — the paper's evaluation setting, one sentence
+//!   per forward.
+//! * **cross-request batched** (`max_batch > 1`, or
+//!   [`Pipeline::serve_batched`] directly) — a [`BatchFormer`]
+//!   coalesces requests into multi-sentence batches, the prefetch
+//!   stage warms the **batch-union** expert set, and every MoE layer
+//!   issues one expert invocation per activated expert per batch.
+//!   Outputs are bit-identical to batch-1 serving; expert traffic is
+//!   amortized across the batch.
+//!
+//! The open-loop [`scheduler`](crate::coordinator::scheduler) replays
+//! timed arrival traces to measure queueing on top of service latency.
 
 pub mod batcher;
 pub mod hash_table;
@@ -10,7 +26,7 @@ pub mod hash_thread;
 pub mod pipeline;
 pub mod scheduler;
 
-pub use batcher::{AdmitOutcome, Batcher};
+pub use batcher::{AdmitOutcome, BatchFormer, BatchPolicy, Batcher, FormedBatch};
 pub use scheduler::{replay_open_loop, OpenLoopReport};
 pub use hash_table::HashTable;
 pub use hash_thread::HashBuilder;

@@ -1,23 +1,32 @@
-//! The SiDA two-thread serving pipeline (paper Fig 5 + Algorithm 1).
+//! The SiDA serving pipeline (paper Fig 5 + Algorithm 1).
 //!
 //! Three OS threads realize the paper's design:
 //!
-//!   hash-building thread   runs the hash artifact on batch X_j, pushes
-//!                          H_j onto the bounded hash-table queue
-//!   prefetch stage         pops (X_i, H_i), loads the predicted experts
-//!                          into the device cache ahead of compute — the
-//!                          paper folds this into the inference thread's
-//!                          "dynamical loading right after the finish of
-//!                          inference on the previous batch" (pipeline
-//!                          parallelism); a dedicated stage realizes the
-//!                          same overlap explicitly
-//!   inference thread       forwards X_i with the hash table replacing
-//!                          every router (routers never execute)
+//! ```text
+//! hash-building thread   runs the hash artifact on batch X_j, pushes
+//!                        H_j onto the bounded hash-table queue
+//! prefetch stage         pops (X_i, H_i), loads the predicted experts
+//!                        into the device cache ahead of compute — the
+//!                        paper folds this into the inference thread's
+//!                        "dynamical loading right after the finish of
+//!                        inference on the previous batch" (pipeline
+//!                        parallelism); a dedicated stage realizes the
+//!                        same overlap explicitly
+//! inference thread       forwards X_i with the hash table replacing
+//!                        every router (routers never execute)
+//! ```
 //!
 //! The inference thread "never idles except at the very beginning"
 //! (paper §3.1) because a hash build + prefetch is faster than a forward
 //! pass; the bounded queue provides the backpressure that keeps the
 //! pipeline stable.
+//!
+//! With `PipelineConfig::max_batch > 1` the middle stage becomes a
+//! batch former + batch-union prefetcher: consecutive requests are
+//! coalesced, the union of their predicted expert sets is warmed once
+//! per batch, and the inference thread serves each batch with a single
+//! cross-request `forward_batch` — one expert invocation per activated
+//! expert per batch, bit-identical outputs to batch-1 serving.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -27,10 +36,10 @@ use anyhow::Result;
 
 use crate::coordinator::hash_table::HashTable;
 use crate::coordinator::hash_thread::HashBuilder;
-use crate::experts::{make_policy, ExpertCache, ExpertKey};
+use crate::experts::{make_policy, plan_prefetch_union, ExpertCache, ExpertKey};
 use crate::memory::CostModel;
 use crate::metrics::ServeStats;
-use crate::model::{ExpertProvider, ForwardOptions, ModelRunner};
+use crate::model::{BatchItem, ExpertProvider, ForwardOptions, ModelRunner};
 use crate::runtime::ModelBundle;
 use crate::workload::Request;
 
@@ -50,6 +59,10 @@ pub struct PipelineConfig {
     pub prefetch: bool,
     /// hash-table queue depth
     pub queue_depth: usize,
+    /// requests coalesced per forward pass (1 = the paper's batch-1
+    /// setting; > 1 enables cross-request batching: one expert
+    /// invocation per activated expert per batch, batch-union prefetch)
+    pub max_batch: usize,
     pub want_lm: bool,
     pub want_cls: bool,
 }
@@ -63,6 +76,7 @@ impl Default for PipelineConfig {
             real_sleep: false,
             prefetch: true,
             queue_depth: 8,
+            max_batch: 1,
             want_lm: false,
             want_cls: false,
         }
@@ -86,6 +100,21 @@ pub struct RequestResult {
     pub n_tokens: usize,
 }
 
+/// The SiDA serving pipeline: hash-building thread, optional prefetch
+/// stage, inference thread — with batch-1 (`serve`, paper setting) and
+/// cross-request batched (`max_batch > 1`) modes.
+///
+/// ```
+/// use sida_moe::coordinator::{Pipeline, PipelineConfig};
+///
+/// let bundle = sida_moe::testkit::tiny_bundle();
+/// let requests = sida_moe::testkit::tiny_trace(&bundle, 3, 0);
+/// let pipeline =
+///     Pipeline::new(bundle, sida_moe::testkit::TINY_PROFILE, PipelineConfig::default()).unwrap();
+/// let outcome = pipeline.serve(&requests).unwrap();
+/// assert_eq!(outcome.stats.requests, 3);
+/// assert_eq!(outcome.stats.blocking_misses, 0); // prefetch kept the critical path clean
+/// ```
 pub struct Pipeline {
     pub bundle: Arc<ModelBundle>,
     pub runner: Arc<ModelRunner>,
@@ -114,7 +143,14 @@ impl Pipeline {
     }
 
     /// Serve a closed-loop trace; returns aggregate + per-request stats.
+    ///
+    /// With `cfg.max_batch > 1` this runs the cross-request batched
+    /// path ([`Pipeline::serve_batched`]); the default is the paper's
+    /// batch-1 pipeline.
     pub fn serve(&self, requests: &[Request]) -> Result<ServeOutcome> {
+        if self.cfg.max_batch > 1 {
+            return self.serve_batched(requests);
+        }
         let builder = HashBuilder::new(&self.bundle, &self.profile)?;
         let (tx, rx): (
             SyncSender<(Request, HashTable)>,
@@ -157,11 +193,7 @@ impl Pipeline {
                     .name("sida-prefetch".into())
                     .spawn(move || -> Result<()> {
                         while let Ok((req, table)) = rx.recv() {
-                            let mask: Vec<f32> = req
-                                .ids
-                                .iter()
-                                .map(|&t| if t != 0 { 1.0 } else { 0.0 })
-                                .collect();
+                            let mask = req.mask();
                             for (layer, &block) in moe_blocks.iter().enumerate() {
                                 for expert in table.predicted_experts(layer, k_used, &mask) {
                                     let key = ExpertKey::new(block, expert);
@@ -250,12 +282,157 @@ impl Pipeline {
             });
         }
         stats.wall_secs = t_start.elapsed().as_secs_f64();
+        stats.batches = stats.requests; // batch-1: one forward per request
 
         if let Some(h) = prefetch_handle {
             h.join().expect("prefetch thread panicked")?;
         }
         let _hash_secs = hash_handle.join().expect("hash thread panicked")?;
 
+        self.collect_cache_stats(&mut stats);
+        Ok(ServeOutcome { stats, per_request })
+    }
+
+    /// Serve a closed-loop trace with cross-request batching: the hash
+    /// thread builds tables per sentence as usual, a forming stage
+    /// coalesces up to `cfg.max_batch` consecutive requests and warms
+    /// the cache with the **batch-union** expert set (each expert
+    /// fetched at most once per batch), and the inference thread issues
+    /// one [`ModelRunner::forward_batch`] per formed batch — one expert
+    /// invocation per activated expert per batch.
+    ///
+    /// Per-request latency is the shared forward time of the batch the
+    /// request rode in (all requests of a batch complete together).
+    pub fn serve_batched(&self, requests: &[Request]) -> Result<ServeOutcome> {
+        let builder = HashBuilder::new(&self.bundle, &self.profile)?;
+        let (tx, rx): (
+            SyncSender<(Request, HashTable)>,
+            Receiver<(Request, HashTable)>,
+        ) = sync_channel(self.cfg.queue_depth);
+
+        let reqs = requests.to_vec();
+        let t_start = Instant::now();
+
+        // ---- hash-building thread (unchanged from batch-1) ------------
+        let hash_handle = std::thread::Builder::new()
+            .name("sida-hash".into())
+            .spawn(move || -> Result<f64> {
+                let mut total_build = 0.0;
+                for req in reqs {
+                    let table = builder.build(req.id, &req.ids)?;
+                    total_build += table.build_secs;
+                    if tx.send((req, table)).is_err() {
+                        break; // inference side hung up
+                    }
+                }
+                Ok(total_build)
+            })
+            .expect("spawn hash thread");
+
+        // ---- batch former + batch-union prefetch stage ----------------
+        let (ptx, prx): (
+            SyncSender<Vec<(Request, HashTable)>>,
+            Receiver<Vec<(Request, HashTable)>>,
+        ) = sync_channel(self.cfg.queue_depth);
+        let former_handle = {
+            let cache = self.cache.clone();
+            let bundle = self.bundle.clone();
+            let k_used = self.cfg.k_used;
+            let max_batch = self.cfg.max_batch.max(1);
+            let prefetch = self.cfg.prefetch;
+            let moe_blocks = self.bundle.topology.moe_blocks.clone();
+            std::thread::Builder::new()
+                .name("sida-batch-former".into())
+                .spawn(move || -> Result<()> {
+                    let mut pending: Vec<(Request, HashTable)> = Vec::new();
+                    loop {
+                        match rx.recv() {
+                            Ok(item) => {
+                                pending.push(item);
+                                if pending.len() >= max_batch {
+                                    let batch = std::mem::take(&mut pending);
+                                    if prefetch {
+                                        warm_batch_union(
+                                            &bundle, &cache, &batch, &moe_blocks, k_used,
+                                        )?;
+                                    }
+                                    if ptx.send(batch).is_err() {
+                                        return Ok(());
+                                    }
+                                }
+                            }
+                            Err(_) => break, // hash thread done
+                        }
+                    }
+                    if !pending.is_empty() {
+                        if prefetch {
+                            warm_batch_union(&bundle, &cache, &pending, &moe_blocks, k_used)?;
+                        }
+                        let _ = ptx.send(pending);
+                    }
+                    Ok(())
+                })
+                .expect("spawn batch-former thread")
+        };
+
+        // ---- inference thread (this thread) ----------------------------
+        let mut stats = ServeStats::default();
+        let mut per_request = Vec::new();
+        let opts = ForwardOptions {
+            invoke_all: false,
+            fixed_bucket: false,
+            want_lm: self.cfg.want_lm,
+            want_cls: self.cfg.want_cls,
+        };
+        while let Ok(batch) = prx.recv() {
+            let t0 = Instant::now();
+            let items: Vec<BatchItem<'_>> = batch
+                .iter()
+                .map(|(req, table)| BatchItem {
+                    ids: &req.ids[..],
+                    hash: Some((table, self.cfg.k_used)),
+                })
+                .collect();
+            let mut provider = ExpertProvider::Shared {
+                cache: &self.cache,
+                blocking: true,
+            };
+            let out = self.runner.forward_batch(&items, &mut provider, opts)?;
+            let secs = t0.elapsed().as_secs_f64();
+            stats.batches += 1;
+            stats.phases.add(&out.times);
+            for ((req, table), fo) in batch.iter().zip(out.outputs.iter()) {
+                stats.latency.record(secs);
+                stats.requests += 1;
+                stats.hash_build_secs += table.build_secs;
+                let cls_pred = fo.cls_logits.as_ref().map(|v| argmax(v));
+                let (lm_nll, lm_tokens) = match (&fo.lm_logits, self.cfg.want_lm) {
+                    (Some(logits), true) => {
+                        let (nll, cnt) = self.runner.lm_nll(logits, &req.ids)?;
+                        (Some(nll), Some(cnt))
+                    }
+                    _ => (None, None),
+                };
+                per_request.push(RequestResult {
+                    id: req.id,
+                    latency_secs: secs,
+                    cls_pred,
+                    lm_nll,
+                    lm_tokens,
+                    n_tokens: req.n_tokens,
+                });
+            }
+        }
+        stats.wall_secs = t_start.elapsed().as_secs_f64();
+
+        former_handle.join().expect("batch-former thread panicked")?;
+        let _hash_secs = hash_handle.join().expect("hash thread panicked")?;
+
+        self.collect_cache_stats(&mut stats);
+        Ok(ServeOutcome { stats, per_request })
+    }
+
+    fn collect_cache_stats(&self, stats: &mut ServeStats) {
         let cache = self.cache.lock().unwrap();
         let cs = cache.stats();
         stats.cache_hits = cs.hits;
@@ -265,8 +442,44 @@ impl Pipeline {
         stats.transferred_bytes = cs.transferred_sim_bytes;
         stats.peak_device_bytes = cache.peak();
         stats.budget_bytes = cache.budget();
-        Ok(ServeOutcome { stats, per_request })
     }
+}
+
+/// Warm the cache with the batch-union expert set: every expert any
+/// request of the batch is predicted to activate, planned via
+/// [`plan_prefetch_union`] and fetched (non-blocking) at most once.
+fn warm_batch_union(
+    bundle: &ModelBundle,
+    cache: &Mutex<ExpertCache>,
+    batch: &[(Request, HashTable)],
+    moe_blocks: &[usize],
+    k_used: usize,
+) -> Result<()> {
+    let masks: Vec<Vec<f32>> = batch.iter().map(|(req, _)| req.mask()).collect();
+    let pairs: Vec<(&HashTable, &[f32])> = batch
+        .iter()
+        .zip(masks.iter())
+        .map(|((_, table), mask)| (table, mask.as_slice()))
+        .collect();
+    let plan = {
+        let guard = cache.lock().unwrap();
+        plan_prefetch_union(&pairs, moe_blocks, k_used, &guard)
+    };
+    for fetch in plan {
+        let key = fetch.key;
+        let real = bundle.weights.expert_bytes(key.block, key.expert)?;
+        let mut guard = cache.lock().unwrap();
+        // non-blocking: prefetch misses do not stall the inference thread
+        let _ = guard.ensure(key, real, false, || {
+            crate::runtime::stage_expert_parts(
+                &bundle.engine,
+                &bundle.weights,
+                key.block,
+                key.expert,
+            )
+        })?;
+    }
+    Ok(())
 }
 
 pub fn argmax(v: &[f32]) -> usize {

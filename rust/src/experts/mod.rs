@@ -1,11 +1,20 @@
-//! Expert residency management: keys, eviction policies, device cache.
+//! Expert residency management: keys, eviction policies, the budgeted
+//! device cache, and prefetch planning.
+//!
+//! The unit of offloading is one expert ([`ExpertKey`]: block × expert
+//! index).  [`ExpertCache`] holds the staged weights of resident
+//! experts under a simulated byte budget with pluggable eviction
+//! ([`make_policy`]: fifo/lru/lfu/clock) and charges modeled H2D
+//! transfer cost per fetch; [`plan_prefetch`] /
+//! [`plan_prefetch_union`] turn hash-table predictions into ordered
+//! fetch plans (per request / per cross-request batch).
 
 pub mod cache;
 pub mod policy;
 pub mod prefetch;
 
 pub use cache::{CacheStats, ExpertCache, ResidentExpert};
-pub use prefetch::{plan_prefetch, PlannedFetch};
+pub use prefetch::{plan_prefetch, plan_prefetch_union, PlannedFetch};
 pub use policy::{make_policy, EvictionPolicy};
 
 /// Identity of one expert: (transformer block index, expert index).

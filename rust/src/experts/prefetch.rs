@@ -1,4 +1,4 @@
-//! Prefetch planning: from a hash table + cache state to an ordered
+//! Prefetch planning: from hash tables + cache state to an ordered
 //! fetch plan.
 //!
 //! The paper's inference thread does "dynamical loading ... right after
@@ -8,6 +8,25 @@
 //! (the layer the forward pass reaches first), and within a layer by
 //! descending token count (an expert serving more tokens hurts more if
 //! it misses).  Pure logic — unit-testable without PJRT.
+//!
+//! [`plan_prefetch`] plans for one request; [`plan_prefetch_union`]
+//! plans for a whole cross-request batch, taking the **union** of every
+//! request's predicted expert set so each expert appears (and is
+//! fetched, and has its transfer charged) at most once per batch —
+//! token counts are summed across requests, so the heat ordering
+//! reflects the batch, not any single sentence.
+//!
+//! ```
+//! use sida_moe::coordinator::HashTable;
+//! use sida_moe::experts::{make_policy, plan_prefetch, ExpertCache};
+//! use sida_moe::memory::CostModel;
+//!
+//! // two tokens, one MoE layer, k = 1: tokens predicted on experts 3 and 5
+//! let table = HashTable::new(0, 2, 1, 1, vec![3, 5], vec![1.0, 1.0], 0.0).unwrap();
+//! let cache = ExpertCache::new(1 << 30, CostModel::physical(1 << 20), make_policy("fifo").unwrap());
+//! let plan = plan_prefetch(&table, &[1], 1, &[1.0, 1.0], &cache);
+//! assert_eq!(plan.len(), 2); // both experts missing from the cold cache
+//! ```
 
 use std::collections::BTreeMap;
 
@@ -21,7 +40,7 @@ pub struct PlannedFetch {
     pub token_count: usize,
 }
 
-/// Compute the ordered fetch plan for one batch.
+/// Compute the ordered fetch plan for one request.
 pub fn plan_prefetch(
     table: &HashTable,
     moe_blocks: &[usize],
@@ -29,16 +48,31 @@ pub fn plan_prefetch(
     mask: &[f32],
     cache: &ExpertCache,
 ) -> Vec<PlannedFetch> {
+    plan_prefetch_union(&[(table, mask)], moe_blocks, k_used, cache)
+}
+
+/// Compute the ordered fetch plan for a cross-request batch: the union
+/// of every `(table, mask)` pair's predicted experts, each at most once,
+/// with token counts summed across requests.
+pub fn plan_prefetch_union(
+    requests: &[(&HashTable, &[f32])],
+    moe_blocks: &[usize],
+    k_used: usize,
+    cache: &ExpertCache,
+) -> Vec<PlannedFetch> {
     let mut plan = Vec::new();
     for (layer, &block) in moe_blocks.iter().enumerate() {
-        // token counts per predicted expert at this layer
+        // token counts per predicted expert at this layer, summed over
+        // every request of the batch
         let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
-        for t in 0..table.seq_len {
-            if mask.get(t).copied().unwrap_or(0.0) == 0.0 {
-                continue;
-            }
-            for r in 0..k_used.min(table.k) {
-                *counts.entry(table.expert_at(t, layer, r)).or_insert(0) += 1;
+        for &(table, mask) in requests {
+            for t in 0..table.seq_len {
+                if mask.get(t).copied().unwrap_or(0.0) == 0.0 {
+                    continue;
+                }
+                for r in 0..k_used.min(table.k) {
+                    *counts.entry(table.expert_at(t, layer, r)).or_insert(0) += 1;
+                }
             }
         }
         let mut layer_plan: Vec<PlannedFetch> = counts
@@ -122,5 +156,39 @@ mod tests {
         let cache = empty_cache();
         let plan = plan_prefetch(&table(), &[1, 3], 2, &[0.0; 4], &cache);
         assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn union_plans_each_expert_once_with_summed_heat() {
+        let cache = empty_cache();
+        let t = table();
+        let mask = vec![1.0; 4];
+        let single = plan_prefetch(&t, &[1, 3], 1, &mask, &cache);
+        // the same table twice: identical expert set (each once), but
+        // every token count doubled
+        let union =
+            plan_prefetch_union(&[(&t, &mask[..]), (&t, &mask[..])], &[1, 3], 1, &cache);
+        assert_eq!(union.len(), single.len(), "union must dedupe experts");
+        for (u, s) in union.iter().zip(single.iter()) {
+            assert_eq!(u.key, s.key);
+            assert_eq!(u.token_count, 2 * s.token_count);
+        }
+    }
+
+    #[test]
+    fn union_merges_disjoint_masks() {
+        let cache = empty_cache();
+        let t = table();
+        // split the sentence across two "requests": first two tokens /
+        // last two tokens — the union must equal the full-mask plan set
+        let m1 = vec![1.0, 1.0, 0.0, 0.0];
+        let m2 = vec![0.0, 0.0, 1.0, 1.0];
+        let full = plan_prefetch(&t, &[1, 3], 1, &[1.0; 4], &cache);
+        let union = plan_prefetch_union(&[(&t, &m1[..]), (&t, &m2[..])], &[1, 3], 1, &cache);
+        let mut fk: Vec<_> = full.iter().map(|p| p.key).collect();
+        let mut uk: Vec<_> = union.iter().map(|p| p.key).collect();
+        fk.sort();
+        uk.sort();
+        assert_eq!(fk, uk);
     }
 }

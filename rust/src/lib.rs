@@ -12,9 +12,50 @@
 //! * **L3** (this crate): the serving system — pluggable execution
 //!   backends (pure-Rust reference engine; PJRT behind the `pjrt`
 //!   feature), simulated GPU memory tier, expert cache with pluggable
-//!   eviction, the hash-building/inference thread pipeline, baselines,
-//!   workloads, metrics, config, a TCP front-end, and the hermetic
-//!   `testkit` that fabricates synthetic bundles for `cargo test`.
+//!   eviction, the hash-building/inference thread pipeline with batch-1
+//!   and cross-request batched modes, baselines, workloads, metrics,
+//!   config, a TCP front-end over one shared pipeline, and the hermetic
+//!   [`testkit`] that fabricates synthetic bundles for `cargo test`.
+//!
+//! ## Layout
+//!
+//! * [`runtime`] — `Literal` tensors, the [`runtime::Backend`] trait +
+//!   `Engine` dispatch, weight store, topology; together a `ModelBundle`.
+//! * [`model`] — `ModelRunner`: the forward pass over shape-specialized
+//!   entries, batch-1 (`forward`) and cross-request batched
+//!   (`forward_batch`); `ExpertProvider` abstracts who supplies expert
+//!   weights.
+//! * [`coordinator`] — the paper's Fig 5 system: hash-building thread,
+//!   bounded queue, prefetch stage, inference thread (`Pipeline`), the
+//!   open-loop scheduler, and the `BatchFormer` that coalesces requests
+//!   across connections.
+//! * [`experts`] — budgeted device-residency cache with pluggable
+//!   eviction and the (batch-union) prefetch planner.
+//! * [`server`] — TCP line-protocol front-end: connections feed one
+//!   shared admission queue; a worker serves formed batches.
+//! * [`testkit`] — synthetic bundles + the pure-Rust reference backend;
+//!   what makes `cargo test` hermetic.
+//!
+//! ## Quickstart
+//!
+//! Everything runs hermetically on the synthetic bundle:
+//!
+//! ```
+//! use sida_moe::model::{ExpertProvider, ForwardOptions, ModelRunner};
+//!
+//! let bundle = sida_moe::testkit::tiny_bundle();
+//! let runner = ModelRunner::new(bundle.clone(), sida_moe::testkit::TINY_PROFILE).unwrap();
+//! let staged = runner.stage_all_experts().unwrap();
+//! let ids = vec![1, 10, 20, 30, 2, 0, 0, 0]; // BOS, content, EOS, padding
+//! let mut provider = ExpertProvider::AllResident(&staged);
+//! let out = runner
+//!     .forward(&ids, None, &mut provider, ForwardOptions::default())
+//!     .unwrap();
+//! assert_eq!(out.hidden.len(), ids.len() * bundle.topology.d_model);
+//! ```
+//!
+//! From a shell: `sida-moe serve --model synthetic --dataset tiny`, or
+//! `sida-moe server` for the TCP front-end — see README.md.
 //!
 //! See DESIGN.md for the full system inventory and the experiment index
 //! mapping every table/figure of the paper to a bench target.

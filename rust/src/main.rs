@@ -22,7 +22,7 @@ use sida_moe::coordinator::{HashBuilder, Pipeline, PipelineConfig};
 use sida_moe::metrics::report::{fmt_bytes, fmt_secs};
 use sida_moe::metrics::Table;
 use sida_moe::runtime::ModelBundle;
-use sida_moe::server::{run_server, ServerState};
+use sida_moe::server::{run_server, ServerConfig, ServerState};
 use sida_moe::util::cli::Cli;
 use sida_moe::workload::{ArrivalProcess, Profile, TraceGenerator};
 
@@ -76,6 +76,7 @@ fn serve_cli() -> Cli {
         .opt("budget-gb", "simulated device budget (GB)", "8")
         .opt("policy", "eviction policy (fifo|lru|lfu|clock)", "fifo")
         .opt("k-used", "hash experts per token (0 = paper default)", "0")
+        .opt("batch", "requests per forward pass (1 = paper batch-1; >1 batches cross-request)", "1")
         .opt("requests", "number of requests", "32")
         .opt("seed", "workload seed", "0")
         .opt("artifacts", "artifacts root", "")
@@ -133,6 +134,7 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
                 real_sleep: cfg.real_sleep,
                 prefetch: cfg.prefetch,
                 queue_depth: 8,
+                max_batch: cfg.max_batch,
                 want_lm: cfg.want_lm,
                 want_cls: cfg.want_cls,
             };
@@ -155,6 +157,18 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
         &["metric", "value"],
     );
     t.row(vec!["requests".into(), stats.requests.to_string()]);
+    if stats.batches > 0 {
+        // only the sida pipeline tracks forward-pass batching; baselines
+        // would misleadingly report 0
+        t.row(vec![
+            "batches".into(),
+            format!(
+                "{} (mean size {:.1})",
+                stats.batches,
+                stats.mean_batch_size().unwrap_or(0.0)
+            ),
+        ]);
+    }
     t.row(vec!["wall".into(), fmt_secs(stats.wall_secs)]);
     t.row(vec![
         "throughput".into(),
@@ -188,6 +202,9 @@ fn cmd_server(tail: &[String]) -> Result<()> {
         .opt("model", "model config", "switch8")
         .opt("dataset", "dataset profile (fixes seq len)", "sst2")
         .opt("budget-gb", "simulated device budget (GB)", "8")
+        .opt("batch", "max requests coalesced per forward pass", "8")
+        .opt("batch-delay-ms", "max time a request waits for its batch to fill", "5")
+        .opt("queue-cap", "admission queue bound (overflow is rejected)", "256")
         .opt("addr", "listen address", "127.0.0.1:7700")
         .opt("artifacts", "artifacts root", "");
     let args = cli.parse_tail(tail);
@@ -197,11 +214,19 @@ fn cmd_server(tail: &[String]) -> Result<()> {
     };
     let bundle = load_bundle(&root, &args.get_or("model", "switch8"))?;
     let k = ServeConfig::paper_k_for(args.get("dataset").unwrap_or("sst2"));
+    let scfg = ServerConfig {
+        budget_sim_bytes: (args.get_f64("budget-gb", 8.0) * 1e9) as usize,
+        k_used: k,
+        batch: sida_moe::coordinator::BatchPolicy {
+            max_batch: args.get_usize("batch", 8).max(1),
+            max_delay_secs: args.get_f64("batch-delay-ms", 5.0) / 1e3,
+            capacity: args.get_usize("queue-cap", 256).max(1),
+        },
+    };
     let state = Arc::new(ServerState::new(
         bundle,
         args.get("dataset").unwrap_or("sst2"),
-        (args.get_f64("budget-gb", 8.0) * 1e9) as usize,
-        k,
+        scfg,
     )?);
     run_server(state, args.get("addr").unwrap_or("127.0.0.1:7700"))
 }
@@ -257,7 +282,7 @@ fn cmd_hash(tail: &[String]) -> Result<()> {
         "sentence: {n_tokens} tokens, topic {topic}; hash built in {:.3}ms",
         table.build_secs * 1e3
     );
-    let mask: Vec<f32> = ids.iter().map(|&t| if t != 0 { 1.0 } else { 0.0 }).collect();
+    let mask = sida_moe::workload::pad_mask(&ids);
     for layer in 0..table.m {
         let active = table.predicted_experts(layer, 1, &mask);
         println!(

@@ -13,6 +13,9 @@ use crate::model::PhaseTimes;
 #[derive(Debug, Default, Clone)]
 pub struct ServeStats {
     pub requests: u64,
+    /// forward passes issued; `requests` in batch-1 serving, fewer when
+    /// cross-request batching coalesces several requests per forward
+    pub batches: u64,
     pub wall_secs: f64,
     pub latency: LatencyHistogram,
     pub phases: PhaseTimes,
@@ -30,6 +33,26 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
+    /// Mean requests per formed batch, `None` before any batch ran.
+    pub fn mean_batch_size(&self) -> Option<f64> {
+        if self.batches == 0 {
+            None
+        } else {
+            Some(self.requests as f64 / self.batches as f64)
+        }
+    }
+
+    /// Simulated H2D bytes moved per request — the amortization metric
+    /// cross-request batching improves (each expert is charged once per
+    /// batch instead of once per request).
+    pub fn transferred_bytes_per_request(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.transferred_bytes as f64 / self.requests as f64
+        }
+    }
+
     /// Cache hit fraction, `None` when the run produced no cache traffic
     /// (all-resident baselines) — distinct from a true 0% hit rate.
     pub fn hit_rate(&self) -> Option<f64> {
@@ -54,6 +77,44 @@ impl ServeStats {
             tokens as f64 / self.wall_secs
         } else {
             0.0
+        }
+    }
+}
+
+/// Counters for the cross-request batch former behind the TCP server:
+/// how many batches formed, how large they were, and the per-request
+/// latency attribution (time waiting for the batch to form vs time in
+/// the shared forward pass).
+#[derive(Debug, Default, Clone)]
+pub struct BatchingStats {
+    /// batches the shared worker served
+    pub batches: u64,
+    /// requests carried by those batches
+    pub batched_requests: u64,
+    /// per-request seconds between admission and the batch being cut
+    pub batching_delay: LatencyHistogram,
+    /// per-batch forward-pass seconds (hash build + inference)
+    pub inference: LatencyHistogram,
+}
+
+impl BatchingStats {
+    /// Record one served batch: its per-request batching delays and the
+    /// shared inference time.
+    pub fn observe_batch(&mut self, batching_delays: &[f64], infer_secs: f64) {
+        self.batches += 1;
+        self.batched_requests += batching_delays.len() as u64;
+        for &d in batching_delays {
+            self.batching_delay.record(d);
+        }
+        self.inference.record(infer_secs);
+    }
+
+    /// Mean requests per batch, `None` before any batch was served.
+    pub fn mean_batch_size(&self) -> Option<f64> {
+        if self.batches == 0 {
+            None
+        } else {
+            Some(self.batched_requests as f64 / self.batches as f64)
         }
     }
 }
@@ -85,5 +146,31 @@ mod tests {
         assert_eq!(s.hit_rate(), Some(0.0));
         s.cache_hits = 12;
         assert!((s.hit_rate().unwrap() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_size_and_per_request_transfers() {
+        let mut s = ServeStats::default();
+        assert_eq!(s.mean_batch_size(), None);
+        assert_eq!(s.transferred_bytes_per_request(), 0.0);
+        s.requests = 12;
+        s.batches = 3;
+        s.transferred_bytes = 600;
+        assert!((s.mean_batch_size().unwrap() - 4.0).abs() < 1e-12);
+        assert!((s.transferred_bytes_per_request() - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batching_stats_observe() {
+        let mut b = BatchingStats::default();
+        assert_eq!(b.mean_batch_size(), None);
+        b.observe_batch(&[0.001, 0.002, 0.003], 0.010);
+        b.observe_batch(&[0.004], 0.005);
+        assert_eq!(b.batches, 2);
+        assert_eq!(b.batched_requests, 4);
+        assert!((b.mean_batch_size().unwrap() - 2.0).abs() < 1e-12);
+        assert_eq!(b.batching_delay.len(), 4);
+        assert_eq!(b.inference.len(), 2);
+        assert!((b.inference.mean() - 0.0075).abs() < 1e-12);
     }
 }

@@ -1,8 +1,13 @@
 //! Forward-pass orchestration: the Rust twin of `python/compile/model.py`.
 //!
-//! Batch size is 1 throughout (paper §2: "all experiments are conducted
-//! with a batch size of 1 to isolate the influence of batch size"), so a
-//! sequence of L tokens flows through artifacts specialized to `[1, L]`.
+//! The paper evaluates at batch size 1 (§2: "all experiments are
+//! conducted with a batch size of 1 to isolate the influence of batch
+//! size") — [`ModelRunner::forward`], where a sequence of L tokens
+//! flows through artifacts specialized to `[1, L]`.
+//! [`ModelRunner::forward_batch`] extends the same arithmetic to
+//! cross-request batches: dense stages per request (or stacked, when
+//! the backend supports batched entries), expert dispatch shared across
+//! the batch, outputs bit-identical to sequential forwards.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
@@ -55,7 +60,7 @@ impl PhaseTimes {
 /// compute it and their (renormalized) combine weights.
 #[derive(Debug, Clone)]
 pub struct RoutingDecision {
-    /// [L] primary expert per token (rank 0)
+    /// `[L]` primary expert per token (rank 0)
     pub top1: Vec<usize>,
     /// token -> [(expert, alpha)] for k_used experts
     pub assignments: Vec<Vec<(usize, f32)>>,
@@ -124,15 +129,71 @@ pub struct ForwardOptions {
     pub want_cls: bool,
 }
 
+/// One request in a cross-request batch handed to
+/// [`ModelRunner::forward_batch`].
+pub struct BatchItem<'a> {
+    /// padded token ids, length == the runner's `seq_len`
+    pub ids: &'a [i32],
+    /// SiDA hash routing for this request as `(table, k_used)`; `None`
+    /// runs the true router per MoE layer instead
+    pub hash: Option<(&'a HashTable, usize)>,
+}
+
+/// One gathered token row inside an expert invocation: which request
+/// of the batch it belongs to, its token position there, and the
+/// combine weight applied at scatter time.
+struct GatheredRow {
+    item: usize,
+    token: usize,
+    alpha: f32,
+}
+
 /// Output of one forward pass.
 pub struct ForwardOutput {
-    /// final hidden states [1, L, D] (host values)
+    /// final hidden states `[1, L, D]` (host values)
     pub hidden: Vec<f32>,
     pub lm_logits: Option<Vec<f32>>,
     pub cls_logits: Option<Vec<f32>>,
     /// per-MoE-layer routing actually used
     pub routing: Vec<RoutingDecision>,
     pub times: PhaseTimes,
+}
+
+/// Output of [`ModelRunner::forward_batch`].
+pub struct BatchForwardOutput {
+    /// per-request outputs, aligned with the input batch; their `times`
+    /// are zeroed (see [`ModelRunner::forward_batch`])
+    pub outputs: Vec<ForwardOutput>,
+    /// batch-aggregate phase breakdown: expert invocations and H2D
+    /// transfers are counted once per activated expert per batch
+    pub times: PhaseTimes,
+}
+
+/// Stack per-request `[1, ...tail]` f32 literals into one `[B, ...tail]`.
+fn stack_f32(parts: &[Literal]) -> Result<Literal> {
+    let tail = &parts[0].shape()[1..];
+    let per: usize = tail.iter().product();
+    let mut data = Vec::with_capacity(parts.len() * per);
+    for p in parts {
+        data.extend_from_slice(p.f32s()?);
+    }
+    let mut shape = vec![parts.len()];
+    shape.extend_from_slice(tail);
+    Literal::from_f32s(&shape, data)
+}
+
+/// Split one `[B, ...tail]` f32 literal back into `B` `[1, ...tail]`
+/// literals (exact value-preserving copies).
+fn split_f32(batch: &Literal) -> Result<Vec<Literal>> {
+    let b = batch.shape()[0];
+    let tail = &batch.shape()[1..];
+    let per: usize = tail.iter().product();
+    let data = batch.f32s()?;
+    let mut shape = vec![1usize];
+    shape.extend_from_slice(tail);
+    (0..b)
+        .map(|i| Literal::from_f32s(&shape, data[i * per..(i + 1) * per].to_vec()))
+        .collect()
 }
 
 /// Drives one model config at one profile seq-len.
@@ -236,8 +297,10 @@ impl ModelRunner {
             .with_context(|| format!("literal '{name}' not cached"))
     }
 
+    /// Attention mask for padded ids — delegates to the canonical
+    /// [`crate::workload::pad_mask`].
     pub fn mask_of(ids: &[i32]) -> Vec<f32> {
-        ids.iter().map(|&t| if t != 0 { 1.0 } else { 0.0 }).collect()
+        crate::workload::pad_mask(ids)
     }
 
     /// Embed a sentence: ids (padded to seq_len) -> [1, L, D] literal.
@@ -347,21 +410,27 @@ impl ModelRunner {
         RoutingDecision { top1, assignments }
     }
 
-    /// Invoke one expert on a packed token bucket.
+    /// Invoke one expert on a packed token bucket gathered from one or
+    /// more requests.  `xlns[i]` / `y_accs[i]` are request `i`'s LN'd
+    /// hidden states and output accumulator.  Each packed row is
+    /// computed independently by the expert FFN, so a (request, token)
+    /// row's result is bit-identical no matter which other rows share
+    /// the invocation — the property that lets the cross-request
+    /// batched path reproduce sequential batch-1 serving exactly.
     #[allow(clippy::too_many_arguments)]
-    fn invoke_expert(
+    fn invoke_expert_gathered(
         &self,
         block: usize,
         expert: usize,
-        xln_host: &[f32],
-        token_alphas: &[(usize, f32)],
-        y_acc: &mut [f32],
+        xlns: &[Vec<f32>],
+        rows: &[GatheredRow],
+        y_accs: &mut [Vec<f32>],
         provider: &mut ExpertProvider<'_>,
         fixed_bucket: bool,
         times: &mut PhaseTimes,
     ) -> Result<()> {
         let d = self.bundle.topology.d_model;
-        let count = token_alphas.len().max(1);
+        let count = rows.len().max(1);
         let bucket = if fixed_bucket {
             self.bundle.topology.bucket_for(self.seq_len)
         } else {
@@ -369,18 +438,19 @@ impl ModelRunner {
         };
         if count > bucket {
             // split across multiple calls (count > largest bucket)
-            let (head, tail) = token_alphas.split_at(bucket);
-            self.invoke_expert(
-                block, expert, xln_host, head, y_acc, provider, fixed_bucket, times,
+            let (head, tail) = rows.split_at(bucket);
+            self.invoke_expert_gathered(
+                block, expert, xlns, head, y_accs, provider, fixed_bucket, times,
             )?;
-            return self.invoke_expert(
-                block, expert, xln_host, tail, y_acc, provider, fixed_bucket, times,
+            return self.invoke_expert_gathered(
+                block, expert, xlns, tail, y_accs, provider, fixed_bucket, times,
             );
         }
         // pack tokens
         let mut packed = vec![0f32; bucket * d];
-        for (row, &(t, _)) in token_alphas.iter().enumerate() {
-            packed[row * d..(row + 1) * d].copy_from_slice(&xln_host[t * d..(t + 1) * d]);
+        for (r, row) in rows.iter().enumerate() {
+            let src = &xlns[row.item][row.token * d..(row.token + 1) * d];
+            packed[r * d..(r + 1) * d].copy_from_slice(src);
         }
         let exe = self
             .exe_expert
@@ -475,11 +545,11 @@ impl ModelRunner {
 
         // scatter weighted rows back
         let y = to_f32_vec(&out[0])?;
-        for (row, &(t, alpha)) in token_alphas.iter().enumerate() {
-            let dst = &mut y_acc[t * d..(t + 1) * d];
-            let src = &y[row * d..(row + 1) * d];
+        for (r, row) in rows.iter().enumerate() {
+            let dst = &mut y_accs[row.item][row.token * d..(row.token + 1) * d];
+            let src = &y[r * d..(r + 1) * d];
             for (o, v) in dst.iter_mut().zip(src.iter()) {
-                *o += alpha * v;
+                *o += row.alpha * v;
             }
         }
         Ok(())
@@ -508,6 +578,12 @@ impl ModelRunner {
         let mut y_acc = vec![0f32; l * d];
         let per_expert = routing.tokens_per_expert(mask_host);
 
+        let gather = |assignments: &[(usize, f32)]| -> Vec<GatheredRow> {
+            assignments
+                .iter()
+                .map(|&(t, a)| GatheredRow { item: 0, token: t, alpha: a })
+                .collect()
+        };
         if opts.invoke_all {
             // the paper's default implementation: every expert is invoked
             // whether or not tokens were assigned to it (§2.3)
@@ -516,16 +592,28 @@ impl ModelRunner {
                     .get(&expert)
                     .cloned()
                     .unwrap_or_else(|| vec![(0usize, 0.0f32)]);
-                self.invoke_expert(
-                    block, expert, &xln_host, &assignments, &mut y_acc, provider,
-                    opts.fixed_bucket, times,
+                self.invoke_expert_gathered(
+                    block,
+                    expert,
+                    std::slice::from_ref(&xln_host),
+                    &gather(&assignments),
+                    std::slice::from_mut(&mut y_acc),
+                    provider,
+                    opts.fixed_bucket,
+                    times,
                 )?;
             }
         } else {
             for (expert, assignments) in per_expert.iter() {
-                self.invoke_expert(
-                    block, *expert, &xln_host, assignments, &mut y_acc, provider,
-                    opts.fixed_bucket, times,
+                self.invoke_expert_gathered(
+                    block,
+                    *expert,
+                    std::slice::from_ref(&xln_host),
+                    &gather(assignments),
+                    std::slice::from_mut(&mut y_acc),
+                    provider,
+                    opts.fixed_bucket,
+                    times,
                 )?;
             }
         }
@@ -628,6 +716,279 @@ impl ModelRunner {
             routing: routing_used,
             times,
         })
+    }
+
+    /// Cross-request batched forward pass.
+    ///
+    /// The dense per-sequence stages (embed, attention, dense FFN,
+    /// heads) run for every request — as one stacked `[B, L, ...]`
+    /// dispatch per stage when the backend reports
+    /// [`batched_entries`](crate::runtime::Backend::batched_entries),
+    /// else as a per-request loop — while every MoE layer **gathers the
+    /// tokens routed to the same expert across the whole batch and
+    /// issues one expert invocation per activated expert**, not one per
+    /// request.  Each expert's residency is ensured (and its H2D
+    /// transfer charged) once per batch, which is where the paper's
+    /// batch-level amortization of expert traffic comes from.
+    ///
+    /// Outputs are bit-identical to running [`ModelRunner::forward`] on
+    /// each request sequentially: the expert FFN computes packed rows
+    /// independently, and per-token accumulation order is preserved
+    /// (experts ascending, tokens in sequence order).  Per-request
+    /// `times` in the returned outputs are zeroed — under shared
+    /// dispatch per-request phase attribution is not meaningful; use
+    /// the batch-level [`BatchForwardOutput::times`].
+    pub fn forward_batch(
+        &self,
+        items: &[BatchItem<'_>],
+        provider: &mut ExpertProvider<'_>,
+        opts: ForwardOptions,
+    ) -> Result<BatchForwardOutput> {
+        let topo = self.bundle.topology.clone();
+        let n = items.len();
+        anyhow::ensure!(n > 0, "forward_batch: empty batch");
+        for it in items {
+            if it.ids.len() != self.seq_len {
+                bail!("ids len {} != seq_len {}", it.ids.len(), self.seq_len);
+            }
+        }
+        let l = self.seq_len;
+        let batched = n > 1 && self.bundle.engine.batched_entries();
+        let mut times = PhaseTimes::default();
+
+        let masks: Vec<Vec<f32>> = items.iter().map(|it| Self::mask_of(it.ids)).collect();
+        let mask_lits: Vec<Literal> = masks
+            .iter()
+            .map(|m| literal_from_f32s(&[1, l], m))
+            .collect::<Result<_>>()?;
+        let mask_stack = if batched {
+            let mut flat = Vec::with_capacity(n * l);
+            for m in &masks {
+                flat.extend_from_slice(m);
+            }
+            Some(literal_from_f32s(&[n, l], &flat)?)
+        } else {
+            None
+        };
+
+        let t0 = Instant::now();
+        let mut xs = self.embed_many(items, batched)?;
+        times.dense_secs += t0.elapsed().as_secs_f64();
+
+        let mut routing_used: Vec<Vec<RoutingDecision>> = (0..n).map(|_| Vec::new()).collect();
+        for block in 0..topo.n_blocks {
+            let t_attn = Instant::now();
+            xs = self.attn_many(&xs, &mask_lits, mask_stack.as_ref(), block)?;
+            times.dense_secs += t_attn.elapsed().as_secs_f64();
+
+            match topo.moe_layer_index(block) {
+                None => {
+                    let t_ffn = Instant::now();
+                    xs = self.dense_ffn_many(&xs, batched, block)?;
+                    times.dense_secs += t_ffn.elapsed().as_secs_f64();
+                }
+                Some(moe_layer) => {
+                    // LN'd hidden states serve both the router (when no
+                    // hash table routes) and the expert gather — compute
+                    // them once per request per layer
+                    let xln_hosts = self.moe_ln_hosts(&xs, batched, block)?;
+                    let d = topo.d_model;
+
+                    // per-request expert selection (hash table or router)
+                    let t_sel = Instant::now();
+                    let mut routings = Vec::with_capacity(n);
+                    for (i, it) in items.iter().enumerate() {
+                        let routing = match it.hash {
+                            Some((table, k_used)) => {
+                                self.routing_from_hash(table, moe_layer, k_used)
+                            }
+                            None => {
+                                // rebuilt from the host copy: value-identical
+                                // to a fresh moe_ln dispatch
+                                let xln = literal_from_f32s(&[1, l, d], &xln_hosts[i])?;
+                                self.run_router(&xln, block)?
+                            }
+                        };
+                        routings.push(routing);
+                    }
+                    times.selection_secs += t_sel.elapsed().as_secs_f64();
+
+                    let mut y_accs: Vec<Vec<f32>> =
+                        (0..n).map(|_| vec![0f32; l * d]).collect();
+                    let mut union: BTreeMap<usize, Vec<GatheredRow>> = BTreeMap::new();
+                    for (i, routing) in routings.iter().enumerate() {
+                        for (expert, assigns) in routing.tokens_per_expert(&masks[i]) {
+                            union.entry(expert).or_default().extend(
+                                assigns
+                                    .iter()
+                                    .map(|&(t, a)| GatheredRow { item: i, token: t, alpha: a }),
+                            );
+                        }
+                    }
+                    if opts.invoke_all {
+                        for expert in 0..topo.num_experts {
+                            let rows = union.remove(&expert).unwrap_or_else(|| {
+                                vec![GatheredRow { item: 0, token: 0, alpha: 0.0 }]
+                            });
+                            self.invoke_expert_gathered(
+                                block, expert, &xln_hosts, &rows, &mut y_accs, provider,
+                                opts.fixed_bucket, &mut times,
+                            )?;
+                        }
+                    } else {
+                        for (expert, rows) in union.iter() {
+                            self.invoke_expert_gathered(
+                                block, *expert, &xln_hosts, rows, &mut y_accs, provider,
+                                opts.fixed_bucket, &mut times,
+                            )?;
+                        }
+                    }
+                    xs = self.combine_many(&xs, &y_accs, &mask_lits, mask_stack.as_ref())?;
+                    for (i, routing) in routings.into_iter().enumerate() {
+                        routing_used[i].push(routing);
+                    }
+                }
+            }
+        }
+
+        // heads per request
+        let t_head = Instant::now();
+        let mut outputs = Vec::with_capacity(n);
+        for i in 0..n {
+            let x = &xs[i];
+            let mut lm_logits = None;
+            let mut cls_logits = None;
+            if opts.want_lm {
+                let out = self.exe_lm_head.run(&[
+                    x,
+                    self.lit("final_ln_g")?,
+                    self.lit("final_ln_b")?,
+                    self.lit("lm_head.w")?,
+                    self.lit("lm_head.b")?,
+                ])?;
+                lm_logits = Some(to_f32_vec(&out[0])?);
+            }
+            if opts.want_cls {
+                let out = self.exe_cls_head.run(&[
+                    x,
+                    &mask_lits[i],
+                    self.lit("final_ln_g")?,
+                    self.lit("final_ln_b")?,
+                    self.lit("cls_head.w")?,
+                    self.lit("cls_head.b")?,
+                ])?;
+                cls_logits = Some(to_f32_vec(&out[0])?);
+            }
+            outputs.push(ForwardOutput {
+                hidden: to_f32_vec(x)?,
+                lm_logits,
+                cls_logits,
+                routing: std::mem::take(&mut routing_used[i]),
+                times: PhaseTimes::default(),
+            });
+        }
+        times.dense_secs += t_head.elapsed().as_secs_f64();
+        Ok(BatchForwardOutput { outputs, times })
+    }
+
+    /// Embed every request of a batch (one stacked dispatch when the
+    /// backend supports batched entries, else per request).
+    fn embed_many(&self, items: &[BatchItem<'_>], batched: bool) -> Result<Vec<Literal>> {
+        if batched {
+            let l = self.seq_len;
+            let mut ids = Vec::with_capacity(items.len() * l);
+            for it in items {
+                ids.extend_from_slice(it.ids);
+            }
+            let ids_lit = literal_i32(&[items.len(), l], &ids)?;
+            let out = self
+                .exe_embed
+                .run(&[&ids_lit, self.lit("embed.tok")?, &self.pos_lit])?;
+            split_f32(&out[0])
+        } else {
+            items.iter().map(|it| self.embed(it.ids)).collect()
+        }
+    }
+
+    fn attn_many(
+        &self,
+        xs: &[Literal],
+        mask_lits: &[Literal],
+        mask_stack: Option<&Literal>,
+        block: usize,
+    ) -> Result<Vec<Literal>> {
+        match mask_stack {
+            Some(mask) => {
+                let stacked = stack_f32(xs)?;
+                split_f32(&self.run_attn(&stacked, mask, block)?)
+            }
+            None => xs
+                .iter()
+                .zip(mask_lits.iter())
+                .map(|(x, m)| self.run_attn(x, m, block))
+                .collect(),
+        }
+    }
+
+    fn dense_ffn_many(&self, xs: &[Literal], batched: bool, block: usize) -> Result<Vec<Literal>> {
+        if batched {
+            let stacked = stack_f32(xs)?;
+            split_f32(&self.run_dense_ffn(&stacked, block)?)
+        } else {
+            xs.iter().map(|x| self.run_dense_ffn(x, block)).collect()
+        }
+    }
+
+    /// LN'd hidden states of every request as host buffers — the gather
+    /// source for the batch-wide expert dispatch.
+    fn moe_ln_hosts(&self, xs: &[Literal], batched: bool, block: usize) -> Result<Vec<Vec<f32>>> {
+        if batched {
+            let stacked = stack_f32(xs)?;
+            let host = to_f32_vec(&self.run_moe_ln(&stacked, block)?)?;
+            let per = host.len() / xs.len();
+            Ok(host.chunks(per).map(|c| c.to_vec()).collect())
+        } else {
+            xs.iter()
+                .map(|x| to_f32_vec(&self.run_moe_ln(x, block)?))
+                .collect()
+        }
+    }
+
+    fn combine_many(
+        &self,
+        xs: &[Literal],
+        y_accs: &[Vec<f32>],
+        mask_lits: &[Literal],
+        mask_stack: Option<&Literal>,
+    ) -> Result<Vec<Literal>> {
+        let l = self.seq_len;
+        let d = self.bundle.topology.d_model;
+        match mask_stack {
+            Some(mask) => {
+                let n = xs.len();
+                let stacked = stack_f32(xs)?;
+                let mut y = Vec::with_capacity(n * l * d);
+                for acc in y_accs {
+                    y.extend_from_slice(acc);
+                }
+                let y_lit = literal_from_f32s(&[n, l, d], &y)?;
+                let ones = literal_from_f32s(&[n, l], &vec![1.0f32; n * l])?;
+                let out = self.exe_combine.run(&[&stacked, &y_lit, &ones, mask])?;
+                split_f32(&out[0])
+            }
+            None => {
+                let ones = literal_from_f32s(&[1, l], &vec![1.0f32; l])?;
+                xs.iter()
+                    .zip(y_accs.iter())
+                    .zip(mask_lits.iter())
+                    .map(|((x, acc), m)| {
+                        let y_lit = literal_from_f32s(&[1, l, d], acc)?;
+                        let out = self.exe_combine.run(&[x, &y_lit, &ones, m])?;
+                        Ok(out.into_iter().next().unwrap())
+                    })
+                    .collect()
+            }
+        }
     }
 
     /// Per-sentence LM NLL + token count via the lm_nll artifact.

@@ -2,11 +2,22 @@
 //!
 //! `ModelRunner` drives one model config at one dataset profile
 //! (sequence length), calling the shape-specialized artifacts in order:
-//! embed -> [attn -> ffn]* -> heads.  MoE FFN layers are dispatched
-//! per expert; *who* provides the expert weights (all-resident buffers,
-//! the SiDA cache, or plain host literals) is abstracted by
-//! [`ExpertProvider`], which is what separates SiDA from the baselines.
+//! embed -> attn -> ffn (repeated per block) -> heads.  MoE FFN layers
+//! are dispatched per expert; *who* provides the expert weights
+//! (all-resident buffers, the SiDA cache, or plain host literals) is
+//! abstracted by [`ExpertProvider`], which is what separates SiDA from
+//! the baselines.
+//!
+//! Two forward entry points exist: [`ModelRunner::forward`] serves one
+//! sentence (the paper's batch-1 setting), and
+//! [`ModelRunner::forward_batch`] serves a cross-request batch in which
+//! every MoE layer issues **one expert invocation per activated expert
+//! across the whole batch** — bit-identical outputs, amortized expert
+//! traffic.
 
 pub mod forward;
 
-pub use forward::{ExpertProvider, ForwardOptions, ForwardOutput, ModelRunner, PhaseTimes, RoutingDecision};
+pub use forward::{
+    BatchForwardOutput, BatchItem, ExpertProvider, ForwardOptions, ForwardOutput, ModelRunner,
+    PhaseTimes, RoutingDecision,
+};

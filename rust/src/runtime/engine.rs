@@ -41,6 +41,20 @@ pub trait Backend: Send + Sync {
         Ok(())
     }
 
+    /// Whether the per-sequence dense entries (`embed_L*`, `attn_L*`,
+    /// `dense_ffn_L*`, `moe_ln_L*`, `moe_combine_L*`) accept a leading
+    /// batch dimension `B > 1` (inputs shaped `[B, L, ...]` instead of
+    /// `[1, L, ...]`).  The cross-request batched serving path uses this
+    /// to collapse `B` dispatches into one; backends whose artifacts are
+    /// specialized to batch 1 (the PJRT HLO path) keep the default and
+    /// the batched forward falls back to per-request dense dispatch —
+    /// expert invocations are still shared across the batch either way,
+    /// because the `expert_T*` entries are shaped by token count, not by
+    /// sequence.
+    fn batched_entries(&self) -> bool {
+        false
+    }
+
     /// Execute one entry point.
     fn dispatch(&self, entry: &str, args: &[&Literal]) -> Result<Vec<Literal>>;
 }
@@ -139,6 +153,11 @@ impl Engine {
 
     pub fn platform(&self) -> String {
         self.backend.platform()
+    }
+
+    /// See [`Backend::batched_entries`].
+    pub fn batched_entries(&self) -> bool {
+        self.backend.batched_entries()
     }
 
     pub fn artifacts_dir(&self) -> &Path {

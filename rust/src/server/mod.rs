@@ -1,53 +1,115 @@
-//! Serving front-end: a line-protocol TCP server over the SiDA pipeline.
+//! Serving front-end: a line-protocol TCP server over one shared SiDA
+//! serving pipeline.
+//!
+//! Connections no longer compute inline: every connection thread only
+//! parses requests and admits them into a single bounded admission
+//! queue; one shared worker pulls size/deadline-formed batches
+//! ([`BatchFormer`]) off that queue, builds the hash tables, and issues
+//! one [`ModelRunner::forward_batch`] per batch — so concurrent clients
+//! share expert invocations and H2D transfers, which is where the
+//! paper's throughput multiplier over batch-1 serving comes from.
+//! Per-request latency is attributed as queueing/batching delay
+//! (admission to batch cut) plus shared inference time, both reported
+//! to the client and recorded in [`BatchingStats`].
 //!
 //! Protocol (one JSON object per line):
-//!   -> {"ids": [1, 17, 42, ..., 2]}          token ids (unpadded ok)
-//!   <- {"id": 3, "label": 2, "latency_ms": 1.9}
-//!   -> {"cmd": "stats"}                       server counters
-//!   -> {"cmd": "shutdown"}
+//!
+//! ```text
+//! -> {"ids": [1, 17, 42, 2]}      token ids (unpadded ok)
+//! <- {"id": 3, "label": 2, "latency_ms": 1.9, "queue_ms": 0.4, "infer_ms": 1.5}
+//! -> {"cmd": "stats"}             server + batching counters
+//! -> {"cmd": "shutdown"}
+//! ```
+//!
+//! When the admission queue is full the request is rejected
+//! immediately (`{"error": "queue full ..."}`) and counted — bounded
+//! memory under overload, clients retry.
 //!
 //! No tokio in the vendored crate set, so this is a std::net +
-//! thread-per-connection server; the SiDA pipeline behind it is
-//! internally threaded (hash-building / prefetch / inference), matching
-//! the paper's architecture where the front-end only feeds batches.
+//! thread-per-connection front-end; batching happens behind the queue,
+//! not per connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::coordinator::batcher::{AdmitOutcome, BatchFormer, BatchPolicy, FormedBatch};
 use crate::coordinator::hash_thread::HashBuilder;
 use crate::coordinator::pipeline::argmax;
 use crate::experts::{make_policy, ExpertCache};
 use crate::memory::CostModel;
-use crate::model::{ExpertProvider, ForwardOptions, ModelRunner};
+use crate::metrics::BatchingStats;
+use crate::model::{BatchItem, ExpertProvider, ForwardOptions, ModelRunner};
 use crate::runtime::ModelBundle;
 use crate::util::json::{obj, Json};
+use crate::workload::Request;
+
+/// Front-end tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// simulated device budget for expert weights
+    pub budget_sim_bytes: usize,
+    /// hash experts consumed per token
+    pub k_used: usize,
+    /// batch-forming policy (size/deadline/queue bound)
+    pub batch: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            budget_sim_bytes: 8 << 30,
+            k_used: 1,
+            batch: BatchPolicy::default(),
+        }
+    }
+}
+
+/// A completed request, as handed back to the connection thread.
+struct Reply {
+    id: u64,
+    label: usize,
+    /// admission -> batch cut (queueing + batching delay)
+    queue_secs: f64,
+    /// shared hash-build + forward time of the batch
+    infer_secs: f64,
+}
+
+/// What the worker sends the connection thread: a reply or an error
+/// message (anyhow errors are not cloneable across a whole batch).
+type ReplyOutcome = std::result::Result<Reply, String>;
 
 pub struct ServerState {
     pub runner: ModelRunner,
     pub hash: HashBuilder,
     pub cache: Mutex<ExpertCache>,
     pub k_used: usize,
+    /// the single shared admission queue all connections feed
+    queue: Mutex<BatchFormer<Sender<ReplyOutcome>>>,
+    queue_cv: Condvar,
+    /// batching counters + latency attribution (see `cmd: stats`)
+    pub batching: Mutex<BatchingStats>,
+    /// requests completed by the shared worker
     pub served: AtomicU64,
+    /// requests rejected at admission (queue full / shutting down)
+    pub rejected: AtomicU64,
+    next_id: AtomicU64,
     pub shutdown: AtomicBool,
+    t0: Instant,
 }
 
 impl ServerState {
-    pub fn new(
-        bundle: Arc<ModelBundle>,
-        profile: &str,
-        budget_sim_bytes: usize,
-        k_used: usize,
-    ) -> Result<Self> {
+    pub fn new(bundle: Arc<ModelBundle>, profile: &str, cfg: ServerConfig) -> Result<Self> {
         let runner = ModelRunner::new(bundle.clone(), profile)?;
         let hash = HashBuilder::new(&bundle, profile)?;
         let real = bundle.weights.expert_bytes(bundle.topology.moe_blocks[0], 0)?;
         let cache = Mutex::new(ExpertCache::new(
-            budget_sim_bytes,
+            cfg.budget_sim_bytes,
             CostModel::paper_scale(real),
             make_policy("fifo")?,
         ));
@@ -55,20 +117,35 @@ impl ServerState {
             runner,
             hash,
             cache,
-            k_used,
+            k_used: cfg.k_used,
+            queue: Mutex::new(BatchFormer::new(cfg.batch)),
+            queue_cv: Condvar::new(),
+            batching: Mutex::new(BatchingStats::default()),
             served: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            next_id: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
+            t0: Instant::now(),
         })
     }
 
-    /// Serve one request synchronously (hash build + forward).
+    /// Monotonic seconds since server start — the clock the batch
+    /// former's deadlines run on.
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Serve one request synchronously (hash build + batch-1 forward),
+    /// bypassing the admission queue — the direct embedding API for
+    /// callers that hold a `ServerState` without running the TCP
+    /// front-end.  Counted in `served` like worker-served requests.
     pub fn serve_one(&self, ids_unpadded: &[i32]) -> Result<(usize, f64)> {
         let l = self.runner.seq_len;
         let mut ids = vec![0i32; l];
         let n = ids_unpadded.len().min(l);
         ids[..n].copy_from_slice(&ids_unpadded[..n]);
         let t0 = Instant::now();
-        let req_id = self.served.fetch_add(1, Ordering::SeqCst);
+        let req_id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let table = self.hash.build(req_id, &ids)?;
         let mut provider = ExpertProvider::Shared { cache: &self.cache, blocking: true };
         let out = self.runner.forward(
@@ -77,8 +154,152 @@ impl ServerState {
             &mut provider,
             ForwardOptions { want_cls: true, ..Default::default() },
         )?;
+        self.served.fetch_add(1, Ordering::SeqCst);
         let label = out.cls_logits.as_ref().map(|v| argmax(v)).unwrap_or(0);
         Ok((label, t0.elapsed().as_secs_f64()))
+    }
+
+    /// Pad and admit one request into the shared queue; `Ok` carries
+    /// the receiver the reply will arrive on, `Err` the rejection
+    /// reason.
+    fn submit(&self, ids_unpadded: &[i32]) -> std::result::Result<Receiver<ReplyOutcome>, String> {
+        let l = self.runner.seq_len;
+        let mut ids = vec![0i32; l];
+        let n = ids_unpadded.len().min(l);
+        ids[..n].copy_from_slice(&ids_unpadded[..n]);
+        let now = self.now();
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let req = Request { id, ids, n_tokens: n, label: 0, arrival: now };
+        let (tx, rx) = channel();
+        let outcome = {
+            // the shutdown check must happen under the queue lock: the
+            // worker reads the flag and performs its final drain under
+            // this lock, so an admit that observes shutdown == false is
+            // guaranteed to be seen by that drain (no stranded request)
+            let mut q = self.queue.lock().unwrap();
+            if self.shutdown.load(Ordering::SeqCst) {
+                self.rejected.fetch_add(1, Ordering::SeqCst);
+                return Err("server shutting down".into());
+            }
+            q.admit(req, tx, now)
+        };
+        match outcome {
+            AdmitOutcome::Admitted => {
+                self.queue_cv.notify_all();
+                Ok(rx)
+            }
+            AdmitOutcome::Rejected => {
+                self.rejected.fetch_add(1, Ordering::SeqCst);
+                Err(format!(
+                    "queue full (capacity {}) — retry later",
+                    self.queue.lock().unwrap().policy().capacity
+                ))
+            }
+        }
+    }
+}
+
+/// Wait for the next formed batch: cut on size, cut on deadline, or
+/// drain on shutdown.  Returns `None` when shut down with nothing
+/// pending — the worker's exit condition.
+fn next_batch(state: &ServerState) -> Option<FormedBatch<Sender<ReplyOutcome>>> {
+    let mut q = state.queue.lock().unwrap();
+    loop {
+        let now = state.now();
+        if state.shutdown.load(Ordering::SeqCst) {
+            return q.form_now(now);
+        }
+        if let Some(batch) = q.try_form(now) {
+            return Some(batch);
+        }
+        // sleep until the oldest pending request's deadline, capped so
+        // shutdown and missed notifies are always noticed promptly
+        let wait = q
+            .next_deadline()
+            .map(|d| (d - now).max(0.0))
+            .unwrap_or(0.05)
+            .clamp(0.001, 0.05);
+        let (guard, _timeout) = state
+            .queue_cv
+            .wait_timeout(q, Duration::from_secs_f64(wait))
+            .unwrap();
+        q = guard;
+    }
+}
+
+/// Hash-build + batched forward for one formed batch; returns the
+/// per-request labels in batch order.
+fn run_batch(
+    state: &ServerState,
+    batch: &FormedBatch<Sender<ReplyOutcome>>,
+) -> Result<Vec<usize>> {
+    let mut tables = Vec::with_capacity(batch.len());
+    for (req, _) in &batch.requests {
+        tables.push(state.hash.build(req.id, &req.ids)?);
+    }
+    let items: Vec<BatchItem<'_>> = batch
+        .requests
+        .iter()
+        .zip(tables.iter())
+        .map(|((req, _), table)| BatchItem {
+            ids: &req.ids[..],
+            hash: Some((table, state.k_used)),
+        })
+        .collect();
+    let mut provider = ExpertProvider::Shared { cache: &state.cache, blocking: true };
+    let out = state.runner.forward_batch(
+        &items,
+        &mut provider,
+        ForwardOptions { want_cls: true, ..Default::default() },
+    )?;
+    Ok(out
+        .outputs
+        .iter()
+        .map(|o| o.cls_logits.as_ref().map(|v| argmax(v)).unwrap_or(0))
+        .collect())
+}
+
+/// Serve one formed batch and deliver every reply (or the shared error).
+fn serve_batch(state: &ServerState, batch: FormedBatch<Sender<ReplyOutcome>>) {
+    let t0 = Instant::now();
+    let result = run_batch(state, &batch);
+    let infer_secs = t0.elapsed().as_secs_f64();
+    match result {
+        Ok(labels) => {
+            state
+                .batching
+                .lock()
+                .unwrap()
+                .observe_batch(&batch.batching_delays, infer_secs);
+            for (((req, tx), label), delay) in batch
+                .requests
+                .iter()
+                .zip(labels)
+                .zip(batch.batching_delays.iter())
+            {
+                state.served.fetch_add(1, Ordering::SeqCst);
+                // a client that hung up just drops its reply
+                let _ = tx.send(Ok(Reply {
+                    id: req.id,
+                    label,
+                    queue_secs: *delay,
+                    infer_secs,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for (_, tx) in &batch.requests {
+                let _ = tx.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+/// The shared worker: pull formed batches until shutdown + drained.
+fn worker_loop(state: &ServerState) {
+    while let Some(batch) = next_batch(state) {
+        serve_batch(state, batch);
     }
 }
 
@@ -103,6 +324,17 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
             match cmd.as_str().unwrap_or("") {
                 "stats" => {
                     let served = state.served.load(Ordering::SeqCst);
+                    let rejected = state.rejected.load(Ordering::SeqCst);
+                    let queued = state.queue.lock().unwrap().len();
+                    let (batches, mean_size, delay_ms, infer_ms) = {
+                        let b = state.batching.lock().unwrap();
+                        (
+                            b.batches,
+                            b.mean_batch_size().unwrap_or(0.0),
+                            b.batching_delay.mean() * 1e3,
+                            b.inference.mean() * 1e3,
+                        )
+                    };
                     let cache = state.cache.lock().unwrap();
                     let cs = cache.stats().clone();
                     writeln!(
@@ -110,6 +342,12 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
                         "{}",
                         obj(vec![
                             ("served", Json::Num(served as f64)),
+                            ("rejected", Json::Num(rejected as f64)),
+                            ("queued", Json::Num(queued as f64)),
+                            ("batches_formed", Json::Num(batches as f64)),
+                            ("mean_batch_size", Json::Num(mean_size)),
+                            ("batching_delay_ms_mean", Json::Num(delay_ms)),
+                            ("infer_ms_mean", Json::Num(infer_ms)),
                             ("cache_hits", Json::Num(cs.hits as f64)),
                             ("cache_misses", Json::Num(cs.misses as f64)),
                             ("device_used_bytes", Json::Num(cache.used() as f64)),
@@ -118,6 +356,7 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
                 }
                 "shutdown" => {
                     state.shutdown.store(true, Ordering::SeqCst);
+                    state.queue_cv.notify_all();
                     writeln!(writer, "{}", obj(vec![("ok", Json::Bool(true))]))?;
                     return Ok(());
                 }
@@ -138,21 +377,40 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
                 continue;
             }
         };
-        match state.serve_one(&ids) {
-            Ok((label, secs)) => {
-                let id = state.served.load(Ordering::SeqCst) - 1;
-                writeln!(
-                    writer,
-                    "{}",
-                    obj(vec![
-                        ("id", Json::Num(id as f64)),
-                        ("label", Json::Num(label as f64)),
-                        ("latency_ms", Json::Num(secs * 1e3)),
-                    ])
-                )?;
-            }
-            Err(e) => {
-                writeln!(writer, "{}", obj(vec![("error", Json::Str(e.to_string()))]))?;
+        match state.submit(&ids) {
+            Ok(rx) => match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(Ok(reply)) => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        obj(vec![
+                            ("id", Json::Num(reply.id as f64)),
+                            ("label", Json::Num(reply.label as f64)),
+                            (
+                                "latency_ms",
+                                Json::Num((reply.queue_secs + reply.infer_secs) * 1e3),
+                            ),
+                            ("queue_ms", Json::Num(reply.queue_secs * 1e3)),
+                            ("infer_ms", Json::Num(reply.infer_secs * 1e3)),
+                        ])
+                    )?;
+                }
+                Ok(Err(msg)) => {
+                    writeln!(writer, "{}", obj(vec![("error", Json::Str(msg))]))?;
+                }
+                Err(_) => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        obj(vec![(
+                            "error",
+                            Json::Str("timed out waiting for the serving worker".into()),
+                        )])
+                    )?;
+                }
+            },
+            Err(msg) => {
+                writeln!(writer, "{}", obj(vec![("error", Json::Str(msg))]))?;
             }
         }
     }
@@ -167,9 +425,18 @@ pub fn run_server(state: Arc<ServerState>, addr: &str) -> Result<()> {
 }
 
 /// Serve on an already-bound listener (lets tests bind port 0 and read
-/// the ephemeral address before starting the accept loop).
+/// the ephemeral address before starting the accept loop).  Spawns the
+/// shared batch worker, accepts connections until shutdown, then joins
+/// connection threads and the worker (which drains the queue first).
 pub fn run_server_on(state: Arc<ServerState>, listener: TcpListener) -> Result<()> {
     listener.set_nonblocking(true)?;
+    let worker = {
+        let st = state.clone();
+        std::thread::Builder::new()
+            .name("sida-batch-worker".into())
+            .spawn(move || worker_loop(&st))
+            .expect("spawn batch worker")
+    };
     let mut handles = Vec::new();
     loop {
         if state.shutdown.load(Ordering::SeqCst) {
@@ -194,5 +461,7 @@ pub fn run_server_on(state: Arc<ServerState>, listener: TcpListener) -> Result<(
     for h in handles {
         let _ = h.join();
     }
+    state.queue_cv.notify_all();
+    let _ = worker.join();
     Ok(())
 }

@@ -17,6 +17,12 @@
 //! the very same `layer_norm`/`matmul`/`ffn` functions the dispatched
 //! entries run, with the same accumulation order, so "hash routing ==
 //! router routing implies identical logits" holds bit-for-bit.
+//!
+//! The dense entries (`embed`, `attn`, `dense_ffn`, `moe_ln`,
+//! `moe_combine`) accept a leading batch dimension `B >= 1` (the
+//! backend reports `batched_entries`), computing each sequence/row with
+//! exactly the `B = 1` arithmetic — which extends the bit-for-bit
+//! contract to cross-request batched serving.
 
 // index-explicit loops deliberately mirror the python einsum shapes; the
 // entry signatures mirror the artifact argument lists
@@ -150,7 +156,7 @@ fn ffn(
 }
 
 /// Pre-LN causal multi-head attention with pad masking + residual
-/// (entry_attn semantics).  x: [L, D] (batch of 1), mask: [L].
+/// (entry_attn semantics).  x: `[L, D]` (one sequence), mask: `[L]`.
 #[allow(clippy::too_many_arguments)]
 fn attention(
     x: &[f32],
@@ -278,7 +284,7 @@ impl RefBackend {
         let e = topo.num_experts;
         let m = topo.num_moe_layers();
         let k = topo.hash.top_k;
-        let mask: Vec<f32> = ids.iter().map(|&t| if t != 0 { 1.0 } else { 0.0 }).collect();
+        let mask = crate::workload::pad_mask(ids);
 
         // embed
         let tok = self.w("embed.tok")?;
@@ -419,6 +425,16 @@ impl Backend for RefBackend {
         "reference-cpu".into()
     }
 
+    /// The dense entries below derive their dimensions from the argument
+    /// shapes, so a leading batch dimension `B > 1` is accepted: every
+    /// sequence (for `attn`) / row (for the token-wise entries) is
+    /// computed by exactly the arithmetic the `B = 1` dispatch runs,
+    /// which is what keeps the cross-request batched serving path
+    /// bit-identical to sequential batch-1 serving.
+    fn batched_entries(&self) -> bool {
+        true
+    }
+
     fn prepare(&self, entry: &str) -> Result<()> {
         let base = entry
             .rsplit_once('_')
@@ -438,63 +454,85 @@ impl Backend for RefBackend {
             .map(|(b, _)| b)
             .unwrap_or(entry);
         match base {
-            // (i32 [1,L], tok [V,D], pos [L,D]) -> [1,L,D]
+            // (i32 [B,L], tok [V,D], pos [L,D]) -> [B,L,D]
             "embed" => {
-                let ids = arg(args, 0, entry)?.i32s()?;
+                let ids_lit = arg(args, 0, entry)?;
+                anyhow::ensure!(
+                    ids_lit.shape().len() == 2,
+                    "{entry}: ids must be [B, L], got {:?}",
+                    ids_lit.shape()
+                );
+                let (b, l) = (ids_lit.shape()[0], ids_lit.shape()[1]);
+                let ids = ids_lit.i32s()?;
                 let tok = arg(args, 1, entry)?.f32s()?;
                 let pos = arg(args, 2, entry)?.f32s()?;
-                let l = ids.len();
                 let vocab = tok.len() / d;
-                let mut out = vec![0f32; l * d];
-                for t in 0..l {
-                    let id = clip_id(ids[t], vocab);
-                    for j in 0..d {
-                        out[t * d + j] = tok[id * d + j] + pos[t * d + j];
+                let mut out = vec![0f32; b * l * d];
+                for s in 0..b {
+                    for t in 0..l {
+                        let id = clip_id(ids[s * l + t], vocab);
+                        let row = (s * l + t) * d;
+                        for j in 0..d {
+                            out[row + j] = tok[id * d + j] + pos[t * d + j];
+                        }
                     }
                 }
-                Ok(vec![Literal::from_f32s(&[1, l, d], out)?])
+                Ok(vec![Literal::from_f32s(&[b, l, d], out)?])
             }
-            // (x, mask, ln_g, ln_b, wq, bq, wk, bk, wv, bv, wo, bo) -> x'
+            // (x [B,L,D], mask [B,L], ln_g, ln_b, wq, bq, wk, bk, wv, bv, wo, bo) -> x'
             "attn" => {
                 let x = arg(args, 0, entry)?;
-                let l = x.shape()[1];
+                let (b, l) = (x.shape()[0], x.shape()[1]);
                 let xs = x.f32s()?;
                 let mask = arg(args, 1, entry)?.f32s()?;
-                let out = attention(
-                    xs,
-                    mask,
-                    l,
-                    d,
-                    self.topo.n_heads,
-                    arg(args, 2, entry)?.f32s()?,
-                    arg(args, 3, entry)?.f32s()?,
-                    arg(args, 4, entry)?.f32s()?,
-                    arg(args, 5, entry)?.f32s()?,
-                    arg(args, 6, entry)?.f32s()?,
-                    arg(args, 7, entry)?.f32s()?,
-                    arg(args, 8, entry)?.f32s()?,
-                    arg(args, 9, entry)?.f32s()?,
-                    arg(args, 10, entry)?.f32s()?,
-                    arg(args, 11, entry)?.f32s()?,
-                );
-                Ok(vec![Literal::from_f32s(&[1, l, d], out)?])
+                let ln_g = arg(args, 2, entry)?.f32s()?;
+                let ln_b = arg(args, 3, entry)?.f32s()?;
+                let wq = arg(args, 4, entry)?.f32s()?;
+                let bq = arg(args, 5, entry)?.f32s()?;
+                let wk = arg(args, 6, entry)?.f32s()?;
+                let bk = arg(args, 7, entry)?.f32s()?;
+                let wv = arg(args, 8, entry)?.f32s()?;
+                let bv = arg(args, 9, entry)?.f32s()?;
+                let wo = arg(args, 10, entry)?.f32s()?;
+                let bo = arg(args, 11, entry)?.f32s()?;
+                let mut out = Vec::with_capacity(b * l * d);
+                for s in 0..b {
+                    out.extend(attention(
+                        &xs[s * l * d..(s + 1) * l * d],
+                        &mask[s * l..(s + 1) * l],
+                        l,
+                        d,
+                        self.topo.n_heads,
+                        ln_g,
+                        ln_b,
+                        wq,
+                        bq,
+                        wk,
+                        bk,
+                        wv,
+                        bv,
+                        wo,
+                        bo,
+                    ));
+                }
+                Ok(vec![Literal::from_f32s(&[b, l, d], out)?])
             }
-            // (x, ln_g, ln_b, w1, b1, w2, b2) -> x + ffn(LN(x))
+            // (x [B,L,D], ln_g, ln_b, w1, b1, w2, b2) -> x + ffn(LN(x))
             "dense_ffn" => {
                 let x = arg(args, 0, entry)?;
-                let l = x.shape()[1];
+                let rows = x.shape()[0] * x.shape()[1];
                 let xs = x.f32s()?;
                 let f = arg(args, 3, entry)?.shape()[1];
                 let xln = layer_norm(
                     xs,
-                    l,
+                    rows,
                     d,
                     arg(args, 1, entry)?.f32s()?,
                     arg(args, 2, entry)?.f32s()?,
                 );
                 let mut y = ffn(
                     &xln,
-                    l,
+                    rows,
                     d,
                     f,
                     arg(args, 3, entry)?.f32s()?,
@@ -502,23 +540,23 @@ impl Backend for RefBackend {
                     arg(args, 5, entry)?.f32s()?,
                     arg(args, 6, entry)?.f32s()?,
                 );
-                for i in 0..l * d {
+                for i in 0..rows * d {
                     y[i] += xs[i];
                 }
-                Ok(vec![Literal::from_f32s(&[1, l, d], y)?])
+                Ok(vec![Literal::from_f32s(x.shape(), y)?])
             }
-            // (x, ln_g, ln_b) -> LN(x)
+            // (x [B,L,D], ln_g, ln_b) -> LN(x)
             "moe_ln" => {
                 let x = arg(args, 0, entry)?;
-                let l = x.shape()[1];
+                let rows = x.shape()[0] * x.shape()[1];
                 let out = layer_norm(
                     x.f32s()?,
-                    l,
+                    rows,
                     d,
                     arg(args, 1, entry)?.f32s()?,
                     arg(args, 2, entry)?.f32s()?,
                 );
-                Ok(vec![Literal::from_f32s(&[1, l, d], out)?])
+                Ok(vec![Literal::from_f32s(x.shape(), out)?])
             }
             // (xln, wr) -> (logits [1,L,E], idx i32 [1,L], alpha [1,L])
             "router" => {
@@ -559,21 +597,21 @@ impl Backend for RefBackend {
                 );
                 Ok(vec![Literal::from_f32s(&[t, d], y)?])
             }
-            // (x, y, alpha [1,L], mask [1,L]) -> x + alpha*y*mask
+            // (x [B,L,D], y [B,L,D], alpha [B,L], mask [B,L]) -> x + alpha*y*mask
             "moe_combine" => {
                 let x = arg(args, 0, entry)?;
-                let l = x.shape()[1];
+                let rows = x.shape()[0] * x.shape()[1];
                 let xs = x.f32s()?;
                 let ys = arg(args, 1, entry)?.f32s()?;
                 let alpha = arg(args, 2, entry)?.f32s()?;
                 let mask = arg(args, 3, entry)?.f32s()?;
-                let mut out = vec![0f32; l * d];
-                for t in 0..l {
+                let mut out = vec![0f32; rows * d];
+                for t in 0..rows {
                     for j in 0..d {
                         out[t * d + j] = xs[t * d + j] + alpha[t] * ys[t * d + j] * mask[t];
                     }
                 }
-                Ok(vec![Literal::from_f32s(&[1, l, d], out)?])
+                Ok(vec![Literal::from_f32s(x.shape(), out)?])
             }
             // (x, ln_g, ln_b, w [D,V], b) -> [1,L,V]
             "lm_head" => {

@@ -47,7 +47,9 @@ impl Profile {
     }
 }
 
-/// One serving request (batch of 1, per the paper's B=1 evaluation).
+/// One serving request: a padded sentence plus arrival metadata.  The
+/// paper evaluates at batch 1 (one request per forward); the batched
+/// serving path coalesces several of these into one forward pass.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -59,6 +61,21 @@ pub struct Request {
     pub label: usize,
     /// seconds after trace start at which the request arrives
     pub arrival: f64,
+}
+
+/// Attention mask over padded ids: 1.0 for real tokens, 0.0 for
+/// padding — THE canonical pad convention; every other mask helper
+/// (e.g. `ModelRunner::mask_of`) delegates here so the rule lives in
+/// one place.
+pub fn pad_mask(ids: &[i32]) -> Vec<f32> {
+    ids.iter().map(|&t| if t != PAD { 1.0 } else { 0.0 }).collect()
+}
+
+impl Request {
+    /// Attention mask over this request's padded ids (see [`pad_mask`]).
+    pub fn mask(&self) -> Vec<f32> {
+        pad_mask(&self.ids)
+    }
 }
 
 #[derive(Debug, Clone, Copy)]

@@ -9,7 +9,7 @@ use sida_moe::coordinator::{Pipeline, PipelineConfig};
 use sida_moe::experts::{make_policy, ExpertCache, ExpertKey};
 use sida_moe::memory::CostModel;
 use sida_moe::runtime::stage_expert_parts;
-use sida_moe::server::ServerState;
+use sida_moe::server::{ServerConfig, ServerState};
 use sida_moe::testkit::{self, TINY_PROFILE};
 
 #[test]
@@ -158,7 +158,7 @@ fn pipeline_reuse_serves_back_to_back_traces() {
 #[test]
 fn server_state_serves_concurrent_clients_deterministically() {
     let b = testkit::tiny_bundle();
-    let state = Arc::new(ServerState::new(b, TINY_PROFILE, 8 << 30, 1).unwrap());
+    let state = Arc::new(ServerState::new(b, TINY_PROFILE, ServerConfig::default()).unwrap());
     // reference answer, single-threaded
     let (want_label, _) = state.serve_one(&[1, 40, 41, 42, 2]).unwrap();
 

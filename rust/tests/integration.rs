@@ -13,7 +13,7 @@ use std::sync::Arc;
 use sida_moe::coordinator::{HashBuilder, HashTable};
 use sida_moe::experts::{make_policy, ExpertCache};
 use sida_moe::memory::CostModel;
-use sida_moe::model::{ExpertProvider, ForwardOptions, ModelRunner};
+use sida_moe::model::{BatchItem, ExpertProvider, ForwardOptions, ModelRunner};
 use sida_moe::runtime::ModelBundle;
 use sida_moe::testkit::{self, TINY_PROFILE};
 
@@ -116,6 +116,95 @@ fn perfect_hash_routing_equals_dense_baseline_exactly() {
             }
         }
     }
+}
+
+#[test]
+fn batched_forward_matches_sequential_bit_for_bit() {
+    // Acceptance criterion: at agreement = 1.0 the cross-request
+    // batched path reproduces the sequential batch-1 logits bit-for-bit
+    // for every request — mixed true lengths (different padding) in one
+    // batch, under both hash routing and router routing.
+    let b = testkit::tiny_bundle(); // agreement = 1.0
+    let r = runner(&b);
+    let builder = HashBuilder::new(&b, TINY_PROFILE).unwrap();
+    let staged = r.stage_all_experts().unwrap();
+    let reqs = testkit::tiny_trace(&b, 6, 31);
+    let opts = ForwardOptions { want_lm: true, want_cls: true, ..Default::default() };
+    let tables: Vec<_> = reqs.iter().map(|q| builder.build(q.id, &q.ids).unwrap()).collect();
+
+    // hash-routed batch (the SiDA serving path)
+    let items: Vec<BatchItem<'_>> = reqs
+        .iter()
+        .zip(tables.iter())
+        .map(|(q, t)| BatchItem { ids: &q.ids[..], hash: Some((t, 1)) })
+        .collect();
+    let mut pb = ExpertProvider::AllResident(&staged);
+    let batch = r.forward_batch(&items, &mut pb, opts).unwrap();
+    assert_eq!(batch.outputs.len(), reqs.len());
+    let mut sequential_invocations = 0u64;
+    for ((q, t), out) in reqs.iter().zip(tables.iter()).zip(batch.outputs.iter()) {
+        let mut p = ExpertProvider::AllResident(&staged);
+        let seq = r.forward(&q.ids, Some((t, 1)), &mut p, opts).unwrap();
+        sequential_invocations += seq.times.expert_invocations;
+        assert_eq!(seq.hidden, out.hidden, "request {}: hidden diverged", q.id);
+        assert_eq!(seq.lm_logits, out.lm_logits, "request {}: lm logits diverged", q.id);
+        assert_eq!(seq.cls_logits, out.cls_logits, "request {}: cls logits diverged", q.id);
+        assert_eq!(seq.routing.len(), out.routing.len());
+        for (a, c) in seq.routing.iter().zip(out.routing.iter()) {
+            assert_eq!(a.top1, c.top1, "request {}: routing diverged", q.id);
+        }
+    }
+    // expert sharing: one invocation per activated expert per batch can
+    // never exceed the per-request sum, and is bounded by the pool size
+    assert!(batch.times.expert_invocations <= sequential_invocations);
+    assert!(
+        batch.times.expert_invocations
+            <= (b.topology.num_experts * b.topology.num_moe_layers()) as u64
+    );
+
+    // router-routed batch (no hash tables) must match too
+    let items: Vec<BatchItem<'_>> =
+        reqs.iter().map(|q| BatchItem { ids: &q.ids[..], hash: None }).collect();
+    let mut pb = ExpertProvider::AllResident(&staged);
+    let batch = r.forward_batch(&items, &mut pb, opts).unwrap();
+    for (q, out) in reqs.iter().zip(batch.outputs.iter()) {
+        let mut p = ExpertProvider::AllResident(&staged);
+        let seq = r.forward(&q.ids, None, &mut p, opts).unwrap();
+        assert_eq!(seq.hidden, out.hidden, "request {}: router-mode hidden diverged", q.id);
+        assert_eq!(seq.lm_logits, out.lm_logits);
+        assert_eq!(seq.cls_logits, out.cls_logits);
+    }
+}
+
+#[test]
+fn duplicated_sentence_batch_shares_expert_invocations_strictly() {
+    // The same sentence twice in one batch activates the same experts,
+    // so the batch must issue strictly fewer invocations than the two
+    // sequential forwards — while staying bit-identical.
+    let b = testkit::tiny_bundle();
+    let r = runner(&b);
+    let builder = HashBuilder::new(&b, TINY_PROFILE).unwrap();
+    let staged = r.stage_all_experts().unwrap();
+    let ids = sentence(&b, 13);
+    let table = builder.build(0, &ids).unwrap();
+    let opts = ForwardOptions::default();
+
+    let mut p = ExpertProvider::AllResident(&staged);
+    let seq = r.forward(&ids, Some((&table, 1)), &mut p, opts).unwrap();
+
+    let items = vec![
+        BatchItem { ids: &ids[..], hash: Some((&table, 1)) },
+        BatchItem { ids: &ids[..], hash: Some((&table, 1)) },
+    ];
+    let mut pb = ExpertProvider::AllResident(&staged);
+    let batch = r.forward_batch(&items, &mut pb, opts).unwrap();
+    assert_eq!(batch.outputs[0].hidden, seq.hidden);
+    assert_eq!(batch.outputs[1].hidden, seq.hidden);
+    assert_eq!(
+        batch.times.expert_invocations, seq.times.expert_invocations,
+        "the duplicate's experts must ride the same invocations"
+    );
+    assert!(batch.times.expert_invocations < 2 * seq.times.expert_invocations);
 }
 
 #[test]

@@ -1,13 +1,15 @@
 //! TCP front-end tests: real sockets against `run_server_on` with the
 //! synthetic bundle behind it — protocol round-trips, error paths,
-//! multi-client sessions, stats, and clean shutdown.
+//! multi-client sessions, the shared batch worker, stats, and clean
+//! shutdown.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::Duration;
 
-use sida_moe::server::{run_server_on, ServerState};
+use sida_moe::coordinator::BatchPolicy;
+use sida_moe::server::{run_server_on, ServerConfig, ServerState};
 use sida_moe::testkit::{self, TINY_PROFILE};
 use sida_moe::util::json::Json;
 
@@ -36,8 +38,14 @@ impl Client {
 
 /// Spawn the server on an ephemeral port; returns (addr, join handle).
 fn start_server() -> (std::net::SocketAddr, Arc<ServerState>, std::thread::JoinHandle<()>) {
+    start_server_with(ServerConfig::default())
+}
+
+fn start_server_with(
+    cfg: ServerConfig,
+) -> (std::net::SocketAddr, Arc<ServerState>, std::thread::JoinHandle<()>) {
     let bundle = testkit::tiny_bundle();
-    let state = Arc::new(ServerState::new(bundle, TINY_PROFILE, 8 << 30, 1).unwrap());
+    let state = Arc::new(ServerState::new(bundle, TINY_PROFILE, cfg).unwrap());
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
     let addr = listener.local_addr().unwrap();
     let st = state.clone();
@@ -76,6 +84,13 @@ fn serves_requests_and_reports_stats_over_tcp() {
 
         let stats = c.roundtrip(r#"{"cmd": "stats"}"#);
         assert_eq!(stats.get("served").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(stats.get("rejected").unwrap().as_u64().unwrap(), 0);
+        // the batching counters must be reported and coherent
+        let batches = stats.get("batches_formed").unwrap().as_u64().unwrap();
+        assert!(batches >= 1 && batches <= 2, "2 requests -> 1..=2 batches, got {batches}");
+        assert!(stats.get("mean_batch_size").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(stats.get("batching_delay_ms_mean").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(stats.get("infer_ms_mean").unwrap().as_f64().unwrap() > 0.0);
         assert!(
             stats.get("cache_hits").unwrap().as_u64().unwrap()
                 + stats.get("cache_misses").unwrap().as_u64().unwrap()
@@ -140,6 +155,50 @@ fn multiple_concurrent_client_sessions() {
     assert!(all.iter().all(|&l| l < 4));
     use std::sync::atomic::Ordering;
     assert_eq!(state.served.load(Ordering::SeqCst), 12);
+    shutdown(addr);
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn concurrent_requests_share_batches() {
+    // six clients fire one request each inside the forming window: the
+    // shared worker must coalesce them into fewer forward passes than
+    // requests (cross-request batching), and every client still gets a
+    // well-formed reply with latency attribution.
+    let cfg = ServerConfig {
+        batch: BatchPolicy { max_batch: 6, max_delay_secs: 0.5, capacity: 64 },
+        ..Default::default()
+    };
+    let (addr, state, handle) = start_server_with(cfg);
+    let mut clients = Vec::new();
+    for i in 0..6u64 {
+        clients.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            let tok = 20 + i;
+            let resp = c.roundtrip(&format!(r#"{{"ids": [1, {tok}, {tok}, 2]}}"#));
+            assert!(resp.get("label").is_ok(), "bad reply {resp:?}");
+            assert!(resp.get("queue_ms").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(resp.get("infer_ms").unwrap().as_f64().unwrap() > 0.0);
+            let total = resp.get("latency_ms").unwrap().as_f64().unwrap();
+            let parts = resp.get("queue_ms").unwrap().as_f64().unwrap()
+                + resp.get("infer_ms").unwrap().as_f64().unwrap();
+            assert!((total - parts).abs() < 1e-6, "latency must equal queue + infer");
+        }));
+    }
+    for c in clients {
+        c.join().expect("client");
+    }
+    use std::sync::atomic::Ordering;
+    assert_eq!(state.served.load(Ordering::SeqCst), 6);
+    {
+        let b = state.batching.lock().unwrap();
+        assert_eq!(b.batched_requests, 6);
+        assert!(
+            b.batches < 6,
+            "6 concurrent requests never shared a batch ({} batches)",
+            b.batches
+        );
+    }
     shutdown(addr);
     handle.join().expect("server thread");
 }
