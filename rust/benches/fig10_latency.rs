@@ -56,6 +56,10 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
     t.save_csv(&bs::csv_path("fig10_latency"))?;
+    let mut j = bs::BenchJson::new("fig10_latency");
+    j.push_table(&t);
+    let path = j.save()?;
+    println!("perf-trajectory JSON: {}", path.display());
     println!("paper shape check: SiDA/Standard ratio shrinks as E grows");
     println!("batched mode trades per-request latency for shared expert traffic (see fig9b)");
     Ok(())

@@ -2,10 +2,13 @@
 //! EXPERIMENTS.md §Perf (L3).
 //!
 //! Reports per-artifact dispatch statistics over a SiDA serving run
-//! (calls, total time, mean) plus the isolated costs of the three
-//! per-request stages: hash build, expert invocation (per bucket), and
-//! end-to-end forward.  Re-run after each optimization to record the
-//! before/after deltas.
+//! (calls, total time, mean), the isolated costs of the per-request
+//! stages (hash build, expert invocation, end-to-end forward), a
+//! per-stage breakdown of the expert path (gather / expert compute /
+//! scatter / transfer exposed-vs-overlapped), and a sequential-vs-
+//! pooled comparison under a tight budget.  Emits
+//! `BENCH_hotpath.json` (see `bench_support::BenchJson`) so the
+//! numbers form a diffable perf trajectory across PRs.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -13,9 +16,10 @@ use std::time::Instant;
 use sida_moe::baselines::Method;
 use sida_moe::bench_support as bs;
 use sida_moe::coordinator::HashBuilder;
-use sida_moe::metrics::Table;
+use sida_moe::metrics::{ServeStats, Table};
 use sida_moe::model::{ExpertProvider, ForwardOptions, ModelRunner};
 use sida_moe::runtime::stage_expert_parts;
+use sida_moe::util::json::{num, obj, s, Json};
 
 fn main() -> anyhow::Result<()> {
     bs::banner(
@@ -111,5 +115,83 @@ fn main() -> anyhow::Result<()> {
     }
     t2.print();
     t2.save_csv(&bs::csv_path("hotpath"))?;
+
+    // --- sequential vs pooled + layer-ahead overlap ----------------------
+    // Same trace, tight device budget (so the serial path pays real
+    // exposed transfer every request), virtual transfer cost:
+    //   serial = pool 1, no prefetch (blocking on-demand fetches)
+    //   pooled = auto pool, request-ahead + layer-ahead prefetch
+    let n = bs::n_requests(8);
+    let tight = 6 * bs::sim_expert_bytes(&b)?;
+    let serial = bs::run_method(
+        b.clone(),
+        Method::Sida,
+        &bs::RunSpec::new("sst2", n).sleep(false).budget(tight).pool(1).prefetch_on(false),
+    )?;
+    let pooled = bs::run_method(
+        b.clone(),
+        Method::Sida,
+        &bs::RunSpec::new("sst2", n).sleep(false).budget(tight).pool(0),
+    )?;
+    let mut t3 = Table::new(
+        "expert-path per-stage breakdown (ms/request)",
+        &[
+            "mode", "gather", "expert compute", "expert wall", "scatter", "gate stall",
+            "transfer exposed", "transfer overlapped", "modeled/req",
+        ],
+    );
+    let breakdown_row = |mode: &str, st: &ServeStats| -> Vec<String> {
+        let per = |secs: f64| format!("{:.3}", secs * 1e3 / st.requests.max(1) as f64);
+        vec![
+            mode.to_string(),
+            per(st.phases.gather_secs),
+            per(st.phases.expert_secs),
+            per(st.phases.expert_wall_secs),
+            per(st.phases.scatter_secs),
+            per(st.phases.stall_secs),
+            per(st.exposed_transfer_secs()),
+            per(st.overlapped_transfer_secs),
+            format!("{:.3}", bs::modeled_request_ms(st)),
+        ]
+    };
+    t3.row(breakdown_row("serial (pool 1, no prefetch)", &serial.stats));
+    t3.row(breakdown_row("pooled + layer-ahead", &pooled.stats));
+    t3.print();
+    let serial_ms = bs::modeled_request_ms(&serial.stats);
+    let pooled_ms = bs::modeled_request_ms(&pooled.stats);
+    let speedup = serial_ms / pooled_ms.max(1e-9);
+    println!(
+        "sequential-vs-pooled modeled latency: {serial_ms:.3}ms -> {pooled_ms:.3}ms \
+         ({speedup:.2}x) — strictly lower: {}",
+        if pooled_ms < serial_ms { "PASS" } else { "FAIL" }
+    );
+
+    let breakdown_json = |mode: &str, st: &ServeStats| -> Json {
+        let per = |secs: f64| num(secs * 1e3 / st.requests.max(1) as f64);
+        obj(vec![
+            ("mode", s(mode)),
+            ("requests", num(st.requests as f64)),
+            ("gather_ms_per_req", per(st.phases.gather_secs)),
+            ("expert_compute_ms_per_req", per(st.phases.expert_secs)),
+            ("expert_wall_ms_per_req", per(st.phases.expert_wall_secs)),
+            ("scatter_ms_per_req", per(st.phases.scatter_secs)),
+            ("gate_stall_ms_per_req", per(st.phases.stall_secs)),
+            ("transfer_exposed_ms_per_req", per(st.exposed_transfer_secs())),
+            ("transfer_overlapped_ms_per_req", per(st.overlapped_transfer_secs)),
+            ("modeled_request_ms", num(bs::modeled_request_ms(st))),
+            ("blocking_misses", num(st.blocking_misses as f64)),
+        ])
+    };
+    let mut j = bs::BenchJson::new("hotpath");
+    j.push(breakdown_json("serial", &serial.stats));
+    j.push(breakdown_json("pooled_layer_ahead", &pooled.stats));
+    j.push(obj(vec![
+        ("metric", s("sequential_vs_pooled_modeled_speedup")),
+        ("speedup", num(speedup)),
+        ("strictly_lower", Json::Bool(pooled_ms < serial_ms)),
+    ]));
+    j.push_table(&t2);
+    let path = j.save()?;
+    println!("perf-trajectory JSON: {}", path.display());
     Ok(())
 }

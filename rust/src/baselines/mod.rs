@@ -218,6 +218,8 @@ pub fn run_baseline(
             stats.blocking_misses = cs.blocking_misses;
             stats.evictions = cs.evictions;
             stats.transferred_bytes = cs.transferred_sim_bytes;
+            stats.modeled_transfer_secs = cs.modeled_transfer_secs;
+            stats.overlapped_transfer_secs = cs.overlapped_transfer_secs;
             stats.peak_device_bytes = c.peak();
             stats.budget_bytes = c.budget();
             // modeled transfer time is already inside phases.transfer_secs

@@ -2,8 +2,12 @@
 //!
 //! Each bench regenerates one of the paper's tables/figures (DESIGN.md
 //! §4); this module provides artifact loading with a skip-if-missing
-//! escape hatch, the method-dispatch wrapper, and CSV output beside the
-//! printed table (`target/bench_results/*.csv`).
+//! escape hatch, the method-dispatch wrapper, CSV output beside the
+//! printed table (`target/bench_results/*.csv`), and the
+//! machine-readable perf-trajectory emitter ([`BenchJson`]):
+//! `BENCH_<name>.json` files that future PRs diff to catch silent
+//! performance regressions.  Set `SIDA_BENCH_JSON=<dir>` to redirect
+//! where the JSON lands (default: `target/bench_results/`).
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -12,7 +16,9 @@ use anyhow::Result;
 
 use crate::baselines::{run_baseline, BaselineConfig, Method};
 use crate::coordinator::{Pipeline, PipelineConfig, ServeOutcome};
+use crate::metrics::{ServeStats, Table};
 use crate::runtime::ModelBundle;
+use crate::util::json::Json;
 use crate::workload::{ArrivalProcess, Profile, Request, TraceGenerator};
 
 pub const ALL_MODELS: [&str; 4] = ["switch8", "switch64", "switch128", "switch256"];
@@ -66,6 +72,9 @@ pub struct RunSpec {
     /// requests per forward (sida only): 1 = the paper's batch-1 mode,
     /// > 1 = cross-request batching
     pub max_batch: usize,
+    /// worker-pool width for expert execution (0 = auto, 1 = the fully
+    /// sequential reference path)
+    pub pool_threads: usize,
     pub seed: u64,
 }
 
@@ -82,12 +91,19 @@ impl RunSpec {
             policy: "fifo".into(),
             prefetch: true,
             max_batch: 1,
+            pool_threads: 0,
             seed: 0,
         }
     }
 
     pub fn batch(mut self, b: usize) -> Self {
         self.max_batch = b.max(1);
+        self
+    }
+
+    /// Worker-pool width (0 = auto, 1 = sequential reference).
+    pub fn pool(mut self, threads: usize) -> Self {
+        self.pool_threads = threads;
         self
     }
 
@@ -151,12 +167,13 @@ pub fn run_method(
                 prefetch: spec.prefetch,
                 queue_depth: 8,
                 max_batch: spec.max_batch,
+                pool_threads: spec.pool_threads,
                 want_lm: spec.want_lm,
                 want_cls: spec.want_cls,
             };
             let pipeline = Pipeline::new(bundle, &spec.dataset, cfg)?;
             let _ = pipeline.serve(&warmup)?;
-            pipeline.cache.lock().unwrap().reset_stats();
+            pipeline.cache.reset_stats();
             pipeline.serve(&requests)
         }
         m => {
@@ -190,6 +207,91 @@ pub fn n_requests(default: usize) -> usize {
 /// Where bench CSVs land.
 pub fn csv_path(name: &str) -> String {
     format!("target/bench_results/{name}.csv")
+}
+
+/// Directory the perf-trajectory JSON lands in: `SIDA_BENCH_JSON` when
+/// set, else beside the CSV tables.
+pub fn bench_json_dir() -> PathBuf {
+    match std::env::var("SIDA_BENCH_JSON") {
+        Ok(p) if !p.is_empty() => PathBuf::from(p),
+        _ => PathBuf::from("target/bench_results"),
+    }
+}
+
+/// Machine-readable bench output: collects rows (arbitrary JSON
+/// objects) and writes `BENCH_<name>.json` — one self-describing file
+/// per bench, diffable across PRs as a performance trajectory.
+///
+/// ```
+/// use sida_moe::bench_support::BenchJson;
+/// use sida_moe::util::json::{num, obj, s};
+///
+/// let mut j = BenchJson::new("demo");
+/// j.push(obj(vec![("mode", s("pooled")), ("modeled_ms", num(1.25))]));
+/// assert!(j.render().contains("\"bench\":\"demo\""));
+/// ```
+pub struct BenchJson {
+    name: String,
+    rows: Vec<Json>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> Self {
+        BenchJson { name: name.to_string(), rows: Vec::new() }
+    }
+
+    /// Append one row (any JSON value; conventionally an object).
+    pub fn push(&mut self, row: Json) {
+        self.rows.push(row);
+    }
+
+    /// Append a printed [`Table`] as header-keyed string rows, so every
+    /// figure's table is also machine-readable without re-deriving it.
+    pub fn push_table(&mut self, table: &Table) {
+        for row in &table.rows {
+            let cells = table
+                .headers
+                .iter()
+                .zip(row.iter())
+                .map(|(h, c)| (h.clone(), Json::Str(c.clone())))
+                .collect();
+            self.rows.push(Json::Obj(cells));
+        }
+    }
+
+    /// The document this emitter writes.
+    pub fn render(&self) -> String {
+        let unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        Json::Obj(
+            [
+                ("bench".to_string(), Json::Str(self.name.clone())),
+                ("generated_unix".to_string(), Json::Num(unix as f64)),
+                ("rows".to_string(), Json::Arr(self.rows.clone())),
+            ]
+            .into_iter()
+            .collect(),
+        )
+        .to_string()
+    }
+
+    /// Write `BENCH_<name>.json` into [`bench_json_dir`]; returns the
+    /// path written.
+    pub fn save(&self) -> std::io::Result<PathBuf> {
+        let dir = bench_json_dir();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+}
+
+/// Modeled per-request latency in milliseconds (exposed transfer +
+/// critical-path compute) — the perf-trajectory headline number.
+pub fn modeled_request_ms(stats: &ServeStats) -> f64 {
+    stats.modeled_request_secs().unwrap_or(0.0) * 1e3
 }
 
 /// Paper-reference banner printed by each bench.

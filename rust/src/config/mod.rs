@@ -31,6 +31,9 @@ pub struct ServeConfig {
     /// requests coalesced per forward pass (1 = the paper's batch-1
     /// setting; > 1 enables cross-request batching for the sida method)
     pub max_batch: usize,
+    /// worker-pool width for concurrent expert execution (0 = auto-size
+    /// from the machine / `SIDA_POOL_THREADS`; 1 = sequential)
+    pub pool_threads: usize,
     /// number of requests in the trace
     pub n_requests: usize,
     /// workload seed
@@ -55,6 +58,7 @@ impl Default for ServeConfig {
             real_sleep: false,
             prefetch: true,
             max_batch: 1,
+            pool_threads: 0,
             n_requests: 32,
             seed: 0,
             want_lm: false,
@@ -79,6 +83,7 @@ impl ServeConfig {
                 "real_sleep" => cfg.real_sleep = val.as_bool()?,
                 "prefetch" => cfg.prefetch = val.as_bool()?,
                 "max_batch" => cfg.max_batch = val.as_usize()?.max(1),
+                "pool_threads" => cfg.pool_threads = val.as_usize()?,
                 "n_requests" => cfg.n_requests = val.as_usize()?,
                 "seed" => cfg.seed = val.as_u64()?,
                 "want_lm" => cfg.want_lm = val.as_bool()?,
@@ -123,6 +128,11 @@ impl ServeConfig {
         if let Some(v) = args.get("batch") {
             if let Ok(x) = v.parse::<usize>() {
                 self.max_batch = x.max(1);
+            }
+        }
+        if let Some(v) = args.get("pool") {
+            if let Ok(x) = v.parse::<usize>() {
+                self.pool_threads = x;
             }
         }
         if let Some(v) = args.get("requests") {

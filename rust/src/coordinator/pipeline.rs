@@ -1,19 +1,28 @@
 //! The SiDA serving pipeline (paper Fig 5 + Algorithm 1).
 //!
-//! Three OS threads realize the paper's design:
+//! Three OS threads realize the paper's design, plus a per-forward
+//! layer-ahead warmer:
 //!
 //! ```text
 //! hash-building thread   runs the hash artifact on batch X_j, pushes
 //!                        H_j onto the bounded hash-table queue
-//! prefetch stage         pops (X_i, H_i), loads the predicted experts
-//!                        into the device cache ahead of compute — the
-//!                        paper folds this into the inference thread's
-//!                        "dynamical loading right after the finish of
-//!                        inference on the previous batch" (pipeline
-//!                        parallelism); a dedicated stage realizes the
-//!                        same overlap explicitly
+//! prefetch stage         pops (X_i, H_i) and warms the FIRST MoE
+//!                        layer's predicted experts while the previous
+//!                        request computes (request-ahead overlap)
+//! layer-ahead warmer     spawned per forward: while the inference
+//!                        thread computes MoE layer j, stages layer
+//!                        j+1's predicted union — the paper's
+//!                        "dynamical loading ... following the pipeline
+//!                        parallelism mechanism" (§3.1) at layer
+//!                        granularity.  The forward gates each MoE
+//!                        layer on its warm-up, so every fetch lands on
+//!                        the overlapped prefetch timeline and the
+//!                        critical path pays only exposed transfer.
 //! inference thread       forwards X_i with the hash table replacing
-//!                        every router (routers never execute)
+//!                        every router (routers never execute); the
+//!                        gathered per-expert invocations of each MoE
+//!                        layer run concurrently on the runner's
+//!                        worker pool
 //! ```
 //!
 //! The inference thread "never idles except at the very beginning"
@@ -22,25 +31,29 @@
 //! pipeline stable.
 //!
 //! With `PipelineConfig::max_batch > 1` the middle stage becomes a
-//! batch former + batch-union prefetcher: consecutive requests are
-//! coalesced, the union of their predicted expert sets is warmed once
-//! per batch, and the inference thread serves each batch with a single
-//! cross-request `forward_batch` — one expert invocation per activated
-//! expert per batch, bit-identical outputs to batch-1 serving.
+//! batch former: consecutive requests are coalesced, the layer-ahead
+//! warmer stages the **batch-union** expert set layer by layer, and the
+//! inference thread serves each batch with a single cross-request
+//! `forward_batch` — one expert invocation per activated expert per
+//! batch, bit-identical outputs to batch-1 serving.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::coordinator::hash_table::HashTable;
 use crate::coordinator::hash_thread::HashBuilder;
-use crate::experts::{make_policy, plan_prefetch_union, ExpertCache, ExpertKey};
+use crate::experts::{
+    make_policy, plan_prefetch_layer, ExpertCache, PlannedFetch, SharedExpertCache,
+};
 use crate::memory::CostModel;
 use crate::metrics::ServeStats;
-use crate::model::{BatchItem, ExpertProvider, ForwardOptions, ModelRunner};
+use crate::model::{BatchItem, ExpertProvider, ForwardHooks, ForwardOptions, ModelRunner};
 use crate::runtime::ModelBundle;
+use crate::util::pool::WorkerPool;
+use crate::util::sync::LayerGate;
 use crate::workload::Request;
 
 #[derive(Debug, Clone)]
@@ -54,8 +67,9 @@ pub struct PipelineConfig {
     pub policy: String,
     /// sleep modeled transfer time on the critical path
     pub real_sleep: bool,
-    /// run the prefetch stage (false = fetch on demand at compute time,
-    /// an ablation that shows what the look-ahead buys)
+    /// run the prefetch stages (request-ahead + layer-ahead warmer);
+    /// false = fetch on demand at compute time, an ablation that shows
+    /// what the look-ahead buys
     pub prefetch: bool,
     /// hash-table queue depth
     pub queue_depth: usize,
@@ -63,6 +77,9 @@ pub struct PipelineConfig {
     /// setting; > 1 enables cross-request batching: one expert
     /// invocation per activated expert per batch, batch-union prefetch)
     pub max_batch: usize,
+    /// worker-pool width for concurrent expert execution
+    /// (0 = auto-size from the machine / `SIDA_POOL_THREADS`)
+    pub pool_threads: usize,
     pub want_lm: bool,
     pub want_cls: bool,
 }
@@ -77,6 +94,7 @@ impl Default for PipelineConfig {
             prefetch: true,
             queue_depth: 8,
             max_batch: 1,
+            pool_threads: 0,
             want_lm: false,
             want_cls: false,
         }
@@ -101,7 +119,7 @@ pub struct RequestResult {
 }
 
 /// The SiDA serving pipeline: hash-building thread, optional prefetch
-/// stage, inference thread — with batch-1 (`serve`, paper setting) and
+/// stages, inference thread — with batch-1 (`serve`, paper setting) and
 /// cross-request batched (`max_batch > 1`) modes.
 ///
 /// ```
@@ -118,17 +136,18 @@ pub struct RequestResult {
 pub struct Pipeline {
     pub bundle: Arc<ModelBundle>,
     pub runner: Arc<ModelRunner>,
-    pub cache: Arc<Mutex<ExpertCache>>,
+    pub cache: Arc<SharedExpertCache>,
     pub cfg: PipelineConfig,
     pub profile: String,
 }
 
 impl Pipeline {
     pub fn new(bundle: Arc<ModelBundle>, profile: &str, cfg: PipelineConfig) -> Result<Self> {
-        let runner = Arc::new(ModelRunner::new(bundle.clone(), profile)?);
+        let pool = WorkerPool::from_config(cfg.pool_threads);
+        let runner = Arc::new(ModelRunner::with_pool(bundle.clone(), profile, pool)?);
         let real_expert_bytes = bundle.weights.expert_bytes(bundle.topology.moe_blocks[0], 0)?;
         let cost = CostModel::paper_scale(real_expert_bytes).with_real_sleep(cfg.real_sleep);
-        let cache = Arc::new(Mutex::new(ExpertCache::new(
+        let cache = Arc::new(SharedExpertCache::new(ExpertCache::new(
             cfg.budget_sim_bytes,
             cost,
             make_policy(&cfg.policy)?,
@@ -176,9 +195,14 @@ impl Pipeline {
             })
             .expect("spawn hash thread");
 
-        // ---- prefetch stage (optional) --------------------------------
-        // The prefetcher sits between the hash queue and the inference
-        // queue, warming the cache for batch i+1 while batch i computes.
+        // ---- request-ahead prefetch stage (optional) ------------------
+        // Warms the FIRST MoE layer before handing the request to
+        // inference (so a cold start pays one layer of transfer, not
+        // all of them), then keeps warming the deeper layers AFTER the
+        // hand-off — overlapped with the request's own early compute
+        // and with any previous request still in flight.  The
+        // per-forward layer-ahead warmer backstops whatever this stage
+        // has not finished (or what eviction took back).
         let (ptx, prx): (
             SyncSender<(Request, HashTable)>,
             Receiver<(Request, HashTable)>,
@@ -194,26 +218,16 @@ impl Pipeline {
                     .spawn(move || -> Result<()> {
                         while let Ok((req, table)) = rx.recv() {
                             let mask = req.mask();
-                            for (layer, &block) in moe_blocks.iter().enumerate() {
-                                for expert in table.predicted_experts(layer, k_used, &mask) {
-                                    let key = ExpertKey::new(block, expert);
-                                    let real =
-                                        bundle.weights.expert_bytes(block, expert)?;
-                                    let engine = bundle.engine.clone();
-                                    let weights = bundle.weights.clone();
-                                    let mut guard = cache.lock().unwrap();
-                                    // non-blocking: prefetch misses do not
-                                    // stall the inference thread
-                                    let _ = guard.ensure(key, real, false, || {
-                                        crate::runtime::stage_expert_parts(
-                                            &engine, &weights, block, expert,
-                                        )
-                                    })?;
-                                }
-                            }
+                            let deeper = {
+                                let pairs: Vec<(&HashTable, &[f32])> =
+                                    vec![(&table, &mask[..])];
+                                warm_layer(&bundle, &cache, &pairs, moe_blocks[0], 0, k_used)?;
+                                plan_deeper_layers(&cache, &pairs, &moe_blocks, k_used)
+                            };
                             if ptx.send((req, table)).is_err() {
                                 break;
                             }
+                            fetch_planned(&bundle, &cache, &deeper)?;
                         }
                         Ok(())
                     })
@@ -252,12 +266,26 @@ impl Pipeline {
                 cache: &self.cache,
                 blocking: true,
             };
-            let out = self.runner.forward(
-                &req.ids,
-                Some((&table, self.cfg.k_used)),
-                &mut provider,
-                opts,
-            )?;
+            let out = if self.cfg.prefetch {
+                let mask = req.mask();
+                let pairs: Vec<(&HashTable, &[f32])> = vec![(&table, &mask[..])];
+                self.forward_gated(&pairs, |hooks| {
+                    self.runner.forward_hooked(
+                        &req.ids,
+                        Some((&table, self.cfg.k_used)),
+                        &mut provider,
+                        opts,
+                        hooks,
+                    )
+                })?
+            } else {
+                self.runner.forward(
+                    &req.ids,
+                    Some((&table, self.cfg.k_used)),
+                    &mut provider,
+                    opts,
+                )?
+            };
             let latency = t0.elapsed().as_secs_f64();
             stats.latency.record(latency);
             stats.phases.add(&out.times);
@@ -296,10 +324,11 @@ impl Pipeline {
     /// Serve a closed-loop trace with cross-request batching: the hash
     /// thread builds tables per sentence as usual, a forming stage
     /// coalesces up to `cfg.max_batch` consecutive requests and warms
-    /// the cache with the **batch-union** expert set (each expert
-    /// fetched at most once per batch), and the inference thread issues
-    /// one [`ModelRunner::forward_batch`] per formed batch — one expert
-    /// invocation per activated expert per batch.
+    /// the first MoE layer's **batch-union** expert set, and the
+    /// inference thread issues one [`ModelRunner::forward_batch`] per
+    /// formed batch — one (pooled) expert invocation per activated
+    /// expert per batch, the deeper layers staged layer-ahead while the
+    /// batch computes.
     ///
     /// Per-request latency is the shared forward time of the batch the
     /// request rode in (all requests of a batch complete together).
@@ -329,7 +358,7 @@ impl Pipeline {
             })
             .expect("spawn hash thread");
 
-        // ---- batch former + batch-union prefetch stage ----------------
+        // ---- batch former + first-layer batch-union prefetch ----------
         let (ptx, prx): (
             SyncSender<Vec<(Request, HashTable)>>,
             Receiver<Vec<(Request, HashTable)>>,
@@ -351,24 +380,32 @@ impl Pipeline {
                                 pending.push(item);
                                 if pending.len() >= max_batch {
                                     let batch = std::mem::take(&mut pending);
-                                    if prefetch {
-                                        warm_batch_union(
+                                    let deeper = if prefetch {
+                                        stage_batch_prefetch(
                                             &bundle, &cache, &batch, &moe_blocks, k_used,
-                                        )?;
-                                    }
+                                        )?
+                                    } else {
+                                        Vec::new()
+                                    };
                                     if ptx.send(batch).is_err() {
                                         return Ok(());
                                     }
+                                    fetch_planned(&bundle, &cache, &deeper)?;
                                 }
                             }
                             Err(_) => break, // hash thread done
                         }
                     }
                     if !pending.is_empty() {
-                        if prefetch {
-                            warm_batch_union(&bundle, &cache, &pending, &moe_blocks, k_used)?;
+                        let deeper = if prefetch {
+                            stage_batch_prefetch(&bundle, &cache, &pending, &moe_blocks, k_used)?
+                        } else {
+                            Vec::new()
+                        };
+                        if ptx.send(pending).is_err() {
+                            return Ok(());
                         }
-                        let _ = ptx.send(pending);
+                        fetch_planned(&bundle, &cache, &deeper)?;
                     }
                     Ok(())
                 })
@@ -386,6 +423,7 @@ impl Pipeline {
         };
         while let Ok(batch) = prx.recv() {
             let t0 = Instant::now();
+            let masks: Vec<Vec<f32>> = batch.iter().map(|(req, _)| req.mask()).collect();
             let items: Vec<BatchItem<'_>> = batch
                 .iter()
                 .map(|(req, table)| BatchItem {
@@ -397,7 +435,18 @@ impl Pipeline {
                 cache: &self.cache,
                 blocking: true,
             };
-            let out = self.runner.forward_batch(&items, &mut provider, opts)?;
+            let out = if self.cfg.prefetch {
+                let pairs: Vec<(&HashTable, &[f32])> = batch
+                    .iter()
+                    .zip(masks.iter())
+                    .map(|((_, table), mask)| (table, mask.as_slice()))
+                    .collect();
+                self.forward_gated(&pairs, |hooks| {
+                    self.runner.forward_batch_hooked(&items, &mut provider, opts, hooks)
+                })?
+            } else {
+                self.runner.forward_batch(&items, &mut provider, opts)?
+            };
             let secs = t0.elapsed().as_secs_f64();
             stats.batches += 1;
             stats.phases.add(&out.times);
@@ -432,45 +481,92 @@ impl Pipeline {
         Ok(ServeOutcome { stats, per_request })
     }
 
+    /// See [`run_gated_forward`].
+    fn forward_gated<T>(
+        &self,
+        pairs: &[(&HashTable, &[f32])],
+        body: impl FnOnce(ForwardHooks<'_>) -> Result<T>,
+    ) -> Result<T> {
+        run_gated_forward(
+            &self.bundle,
+            &self.cache,
+            pairs,
+            &self.bundle.topology.moe_blocks,
+            self.cfg.k_used,
+            body,
+        )
+    }
+
     fn collect_cache_stats(&self, stats: &mut ServeStats) {
-        let cache = self.cache.lock().unwrap();
-        let cs = cache.stats();
+        let cs = self.cache.stats();
         stats.cache_hits = cs.hits;
         stats.cache_misses = cs.misses;
         stats.blocking_misses = cs.blocking_misses;
         stats.evictions = cs.evictions;
         stats.transferred_bytes = cs.transferred_sim_bytes;
-        stats.peak_device_bytes = cache.peak();
-        stats.budget_bytes = cache.budget();
+        stats.modeled_transfer_secs = cs.modeled_transfer_secs;
+        stats.overlapped_transfer_secs = cs.overlapped_transfer_secs;
+        stats.peak_device_bytes = self.cache.peak();
+        stats.budget_bytes = self.cache.budget();
     }
 }
 
-/// Warm the cache with the batch-union expert set: every expert any
-/// request of the batch is predicted to activate, planned via
-/// [`plan_prefetch_union`] and fetched (non-blocking) at most once.
-fn warm_batch_union(
+/// Run one forward (built by `body`) with a layer-ahead warmer on a
+/// scoped side thread: the warmer stages MoE layer j+1's union while
+/// `body` computes layer j, and the layer gate keeps compute from
+/// outrunning warm-up — so blocking-miss accounting stays deterministic
+/// and every fetch is overlapped.  Shared by `Pipeline` (batch-1 and
+/// batched serving) and the TCP server's batch worker.
+///
+/// Failure discipline: a panic inside `body` still releases the gate
+/// (drop guard), so the warmer exits and the scope join cannot hang;
+/// a warmer *error* is logged and otherwise ignored — the gate already
+/// released compute, which then fetched its experts blocking, so the
+/// forward output is complete and correct.
+pub(crate) fn run_gated_forward<T>(
     bundle: &ModelBundle,
-    cache: &Mutex<ExpertCache>,
-    batch: &[(Request, HashTable)],
+    cache: &SharedExpertCache,
+    pairs: &[(&HashTable, &[f32])],
     moe_blocks: &[usize],
     k_used: usize,
+    body: impl FnOnce(ForwardHooks<'_>) -> Result<T>,
+) -> Result<T> {
+    let gate = LayerGate::new();
+    std::thread::scope(|s| -> Result<T> {
+        let warmer = {
+            let gate = &gate;
+            s.spawn(move || layer_ahead_warmer(bundle, cache, gate, pairs, moe_blocks, k_used))
+        };
+        let result = {
+            // release the warmer on every exit path, unwinding included
+            struct FinishCompute<'a>(&'a LayerGate);
+            impl Drop for FinishCompute<'_> {
+                fn drop(&mut self) {
+                    self.0.finish_compute();
+                }
+            }
+            let _finish = FinishCompute(&gate);
+            body(ForwardHooks { layer_gate: Some(&gate) })
+        };
+        if let Err(e) = warmer.join().expect("layer-ahead warmer panicked") {
+            log::warn!("layer-ahead warmer failed (forward fell back to blocking fetches): {e:#}");
+        }
+        result
+    })
+}
+
+/// Execute a fetch plan (non-blocking fetches on the prefetch
+/// timeline); resident entries cost one read-path hit.
+fn fetch_planned(
+    bundle: &ModelBundle,
+    cache: &SharedExpertCache,
+    plan: &[PlannedFetch],
 ) -> Result<()> {
-    let masks: Vec<Vec<f32>> = batch.iter().map(|(req, _)| req.mask()).collect();
-    let pairs: Vec<(&HashTable, &[f32])> = batch
-        .iter()
-        .zip(masks.iter())
-        .map(|((_, table), mask)| (table, mask.as_slice()))
-        .collect();
-    let plan = {
-        let guard = cache.lock().unwrap();
-        plan_prefetch_union(&pairs, moe_blocks, k_used, &guard)
-    };
     for fetch in plan {
         let key = fetch.key;
         let real = bundle.weights.expert_bytes(key.block, key.expert)?;
-        let mut guard = cache.lock().unwrap();
         // non-blocking: prefetch misses do not stall the inference thread
-        let _ = guard.ensure(key, real, false, || {
+        let _ = cache.ensure(key, real, false, || {
             crate::runtime::stage_expert_parts(
                 &bundle.engine,
                 &bundle.weights,
@@ -478,6 +574,89 @@ fn warm_batch_union(
                 key.expert,
             )
         })?;
+    }
+    Ok(())
+}
+
+/// Warm one MoE layer's predicted expert union (non-blocking fetches on
+/// the prefetch timeline), hottest experts first.
+pub(crate) fn warm_layer(
+    bundle: &ModelBundle,
+    cache: &SharedExpertCache,
+    pairs: &[(&HashTable, &[f32])],
+    block: usize,
+    layer: usize,
+    k_used: usize,
+) -> Result<()> {
+    let plan = {
+        let guard = cache.read();
+        plan_prefetch_layer(pairs, block, layer, k_used, &guard)
+    };
+    fetch_planned(bundle, cache, &plan)
+}
+
+/// Fetch plan for every MoE layer after the first — what the prefetch
+/// stage warms *after* handing the request to inference, overlapped
+/// with the request's early compute.
+fn plan_deeper_layers(
+    cache: &SharedExpertCache,
+    pairs: &[(&HashTable, &[f32])],
+    moe_blocks: &[usize],
+    k_used: usize,
+) -> Vec<PlannedFetch> {
+    let guard = cache.read();
+    let mut plan = Vec::new();
+    for (layer, &block) in moe_blocks.iter().enumerate().skip(1) {
+        plan.extend(plan_prefetch_layer(pairs, block, layer, k_used, &guard));
+    }
+    plan
+}
+
+/// Batch-former prefetch: warm the first MoE layer's batch-union before
+/// the batch is handed to inference, and return the deeper layers' plan
+/// to fetch after the hand-off (request-ahead overlap).
+fn stage_batch_prefetch(
+    bundle: &ModelBundle,
+    cache: &SharedExpertCache,
+    batch: &[(Request, HashTable)],
+    moe_blocks: &[usize],
+    k_used: usize,
+) -> Result<Vec<PlannedFetch>> {
+    let masks: Vec<Vec<f32>> = batch.iter().map(|(req, _)| req.mask()).collect();
+    let pairs: Vec<(&HashTable, &[f32])> = batch
+        .iter()
+        .zip(masks.iter())
+        .map(|((_, table), mask)| (table, mask.as_slice()))
+        .collect();
+    warm_layer(bundle, cache, &pairs, moe_blocks[0], 0, k_used)?;
+    Ok(plan_deeper_layers(cache, &pairs, moe_blocks, k_used))
+}
+
+/// The layer-ahead warmer body: stage layer 0, then stage layer j+1 as
+/// soon as compute enters layer j.  Any exit path (success, error,
+/// compute finished early) releases the gate so the inference thread
+/// can never deadlock on a dead warmer.
+pub(crate) fn layer_ahead_warmer(
+    bundle: &ModelBundle,
+    cache: &SharedExpertCache,
+    gate: &LayerGate,
+    pairs: &[(&HashTable, &[f32])],
+    moe_blocks: &[usize],
+    k_used: usize,
+) -> Result<()> {
+    struct Release<'a>(&'a LayerGate);
+    impl Drop for Release<'_> {
+        fn drop(&mut self) {
+            self.0.finish_warm();
+        }
+    }
+    let _release = Release(gate);
+    for (layer, &block) in moe_blocks.iter().enumerate() {
+        if layer > 0 && !gate.wait_compute_at_least(layer - 1) {
+            break; // forward pass already over — nothing left to warm
+        }
+        warm_layer(bundle, cache, pairs, block, layer, k_used)?;
+        gate.mark_warmed(layer);
     }
     Ok(())
 }
@@ -509,5 +688,6 @@ mod tests {
         assert_eq!(c.k_used, 1);
         assert_eq!(c.policy, "fifo");
         assert!(c.prefetch);
+        assert_eq!(c.pool_threads, 0, "0 = auto-size");
     }
 }

@@ -93,15 +93,16 @@ pub fn replay_open_loop(
     }
     stats.wall_secs = t_start.elapsed().as_secs_f64();
     {
-        let cache = pipeline.cache.lock().unwrap();
-        let cs = cache.stats();
+        let cs = pipeline.cache.stats();
         stats.cache_hits = cs.hits;
         stats.cache_misses = cs.misses;
         stats.blocking_misses = cs.blocking_misses;
         stats.evictions = cs.evictions;
         stats.transferred_bytes = cs.transferred_sim_bytes;
-        stats.peak_device_bytes = cache.peak();
-        stats.budget_bytes = cache.budget();
+        stats.modeled_transfer_secs = cs.modeled_transfer_secs;
+        stats.overlapped_transfer_secs = cs.overlapped_transfer_secs;
+        stats.peak_device_bytes = pipeline.cache.peak();
+        stats.budget_bytes = pipeline.cache.budget();
     }
     let n = stats.requests.max(1) as f64;
     Ok(OpenLoopReport {

@@ -7,10 +7,22 @@
 //! memory budgets remain".  The cache stores the staged PJRT device
 //! buffers (4 parts per expert: w1, b1, w2, b2); the host copy always
 //! remains in the `WeightStore`, so eviction is free (drop the buffers).
+//!
+//! `ExpertCache` itself is the single-owner core (`&mut` mutators, as
+//! used by the baselines and unit tests).  The serving hot path shares
+//! one cache across the worker pool, the layer-ahead warmer and the
+//! hash/prefetch stages through [`super::SharedExpertCache`], which
+//! splits read-mostly lookups from mutation — see that module for the
+//! lock discipline.  Two pieces of this type are designed for that
+//! shared use: pins are **counted** and mutate through `&self` (several
+//! pool threads may pin the same expert concurrently), and
+//! [`ExpertCache::try_ensure`] reports budget-exhausted-while-pinned as
+//! an outcome instead of an error so concurrent callers can wait for an
+//! unpin and retry.
 
 use std::collections::{HashMap, HashSet};
 use std::fmt;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
@@ -32,8 +44,14 @@ pub struct CacheStats {
     pub evictions: u64,
     /// simulated bytes moved host->device
     pub transferred_sim_bytes: u64,
-    /// modeled seconds spent on transfers (== wall time in real_sleep mode)
+    /// modeled seconds spent on transfers (== wall time in real_sleep
+    /// mode), across BOTH timelines (critical path + prefetch)
     pub modeled_transfer_secs: f64,
+    /// the share of `modeled_transfer_secs` charged on the prefetch
+    /// timeline (non-blocking fetches overlapped with compute); the
+    /// critical path only pays the difference — see
+    /// [`crate::memory::exposed_transfer_secs`]
+    pub overlapped_transfer_secs: f64,
     /// transfers that happened on the critical path (inference thread
     /// blocked on them) as opposed to prefetched ahead of time
     pub blocking_misses: u64,
@@ -51,22 +69,47 @@ impl CacheStats {
             Some(self.hits as f64 / total as f64)
         }
     }
+
+    /// Modeled transfer seconds left exposed on the critical path after
+    /// overlap (never negative).
+    pub fn exposed_transfer_secs(&self) -> f64 {
+        crate::memory::exposed_transfer_secs(
+            self.modeled_transfer_secs,
+            self.overlapped_transfer_secs,
+        )
+    }
 }
 
 impl fmt::Display for CacheStats {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "hits={} misses={} (blocking {}) hit_rate={} evictions={} transfer={:.1}MB modeled={:.3}s",
+            "hits={} misses={} (blocking {}) hit_rate={} evictions={} transfer={:.1}MB \
+             modeled={:.3}s (overlapped {:.3}s)",
             self.hits,
             self.misses,
             self.blocking_misses,
             crate::metrics::report::fmt_rate(self.hit_rate()),
             self.evictions,
             self.transferred_sim_bytes as f64 / 1e6,
-            self.modeled_transfer_secs
+            self.modeled_transfer_secs,
+            self.overlapped_transfer_secs
         )
     }
+}
+
+/// Outcome of [`ExpertCache::try_ensure`].
+pub enum EnsureOutcome {
+    Resident {
+        expert: Arc<ResidentExpert>,
+        hit: bool,
+        /// modeled transfer seconds charged for this call (0.0 on hits)
+        transfer_secs: f64,
+    },
+    /// The expert would not fit and every resident expert is pinned by
+    /// an in-flight invocation.  Concurrent callers wait for an unpin
+    /// and retry; single-owner callers treat this as an error.
+    AllPinned,
 }
 
 pub struct ExpertCache {
@@ -74,7 +117,12 @@ pub struct ExpertCache {
     cost: CostModel,
     policy: Box<dyn EvictionPolicy>,
     resident: HashMap<ExpertKey, Arc<ResidentExpert>>,
-    pinned: HashSet<ExpertKey>,
+    /// pin **counts** per expert: under the worker pool several
+    /// invocations can pin the same expert concurrently, and the first
+    /// unpin must not strip protection from the rest.  Interior
+    /// mutability so pins work through `&self` (the shared cache pins
+    /// under a read lock, concurrent with other readers).
+    pinned: Mutex<HashMap<ExpertKey, u32>>,
     stats: CacheStats,
 }
 
@@ -86,13 +134,18 @@ impl ExpertCache {
             cost,
             policy,
             resident: HashMap::new(),
-            pinned: HashSet::new(),
+            pinned: Mutex::new(HashMap::new()),
             stats: CacheStats::default(),
         }
     }
 
     pub fn cost_model(&self) -> &CostModel {
         &self.cost
+    }
+
+    /// See [`EvictionPolicy::uses_access`].
+    pub fn policy_uses_access(&self) -> bool {
+        self.policy.uses_access()
     }
 
     pub fn stats(&self) -> &CacheStats {
@@ -128,40 +181,76 @@ impl ExpertCache {
         self.resident.get(key).cloned()
     }
 
-    /// Pin an expert against eviction (it is about to be used by the
-    /// current layer's compute).
-    pub fn pin(&mut self, key: ExpertKey) {
-        self.pinned.insert(key);
+    /// Pin an expert against eviction (it is about to be used by an
+    /// in-flight invocation).  Pins nest: each `pin` needs one `unpin`.
+    pub fn pin(&self, key: ExpertKey) {
+        *self.pinned.lock().unwrap().entry(key).or_insert(0) += 1;
     }
 
-    pub fn unpin(&mut self, key: &ExpertKey) {
-        self.pinned.remove(key);
+    pub fn unpin(&self, key: &ExpertKey) {
+        let mut pins = self.pinned.lock().unwrap();
+        if let Some(count) = pins.get_mut(key) {
+            *count -= 1;
+            if *count == 0 {
+                pins.remove(key);
+            }
+        }
     }
 
-    pub fn unpin_all(&mut self) {
-        self.pinned.clear();
+    pub fn unpin_all(&self) {
+        self.pinned.lock().unwrap().clear();
+    }
+
+    fn pinned_set(&self) -> HashSet<ExpertKey> {
+        self.pinned.lock().unwrap().keys().copied().collect()
+    }
+
+    /// Replay deferred read-path accesses into the eviction policy (the
+    /// shared cache batches policy touches for lock-free-path hits).
+    pub fn note_accesses(&mut self, keys: &[ExpertKey]) {
+        for key in keys {
+            if self.resident.contains_key(key) {
+                self.policy.on_access(*key);
+            }
+        }
     }
 
     /// Ensure `key` is resident; on a miss, evict per policy until the
     /// expert fits, call `fetch` to stage the buffers, and charge the
     /// modeled transfer cost.  `blocking` marks misses that stall the
-    /// inference thread (vs prefetch from the hash-building side).
+    /// inference thread (vs the prefetch timeline — the cost is charged
+    /// either way, but non-blocking transfers are accounted as
+    /// overlapped).
     ///
-    /// Returns (resident expert, hit?, modeled transfer seconds).
-    pub fn ensure<F>(
+    /// This method only *accounts* the modeled seconds — it never
+    /// sleeps, even in `real_sleep` mode, so a shared-cache caller can
+    /// hold its write lock across it without serializing concurrent
+    /// hits for the transfer duration.  The caller is responsible for
+    /// sleeping the returned `transfer_secs` on its own timeline when
+    /// `cost_model().real_sleep` is set ([`ExpertCache::ensure`] and
+    /// [`super::SharedExpertCache`] both do).
+    ///
+    /// Returns [`EnsureOutcome::AllPinned`] (without consuming budget or
+    /// fetching) when the expert cannot fit because every resident
+    /// expert is pinned.
+    pub fn try_ensure<F>(
         &mut self,
         key: ExpertKey,
         real_bytes: usize,
         blocking: bool,
         fetch: F,
-    ) -> Result<(Arc<ResidentExpert>, bool, f64)>
+    ) -> Result<EnsureOutcome>
     where
         F: FnOnce() -> Result<[DeviceBuffer; 4]>,
     {
         if let Some(r) = self.resident.get(&key) {
             self.stats.hits += 1;
             self.policy.on_access(key);
-            return Ok((r.clone(), true, 0.0));
+            return Ok(EnsureOutcome::Resident {
+                expert: r.clone(),
+                hit: true,
+                transfer_secs: 0.0,
+            });
         }
         let sim_bytes = self.cost.sim_bytes(real_bytes);
         if sim_bytes > self.pool.budget() {
@@ -170,20 +259,26 @@ impl ExpertCache {
                 self.pool.budget()
             );
         }
+        let pinned = self.pinned_set();
+        // feasibility first: if the expert cannot fit even after
+        // evicting every unpinned resident, report AllPinned WITHOUT
+        // evicting — otherwise a doomed attempt would flush warm
+        // experts that must then be re-fetched (extra misses and
+        // modeled transfers under exactly the contention the shared
+        // cache's wait-and-retry path is built for)
+        let pinned_bytes: usize =
+            pinned.iter().filter_map(|k| self.pool.bytes_of(k)).sum();
+        if sim_bytes > self.pool.budget().saturating_sub(pinned_bytes) {
+            return Ok(EnsureOutcome::AllPinned);
+        }
         while !self.pool.fits(sim_bytes) {
-            match self.policy.victim(&self.pinned) {
+            match self.policy.victim(&pinned) {
                 Some(victim) => {
                     self.pool.release(&victim);
                     self.resident.remove(&victim);
                     self.stats.evictions += 1;
                 }
-                None => bail!(
-                    "device budget exhausted and every resident expert is pinned \
-                     (budget {} used {} need {})",
-                    self.pool.budget(),
-                    self.pool.used(),
-                    sim_bytes
-                ),
+                None => return Ok(EnsureOutcome::AllPinned),
             }
         }
         let parts = fetch()?;
@@ -199,9 +294,43 @@ impl ExpertCache {
             self.stats.blocking_misses += 1;
         }
         self.stats.transferred_sim_bytes += sim_bytes as u64;
-        let secs = self.cost.charge_transfer(sim_bytes);
+        // accounting only — the caller sleeps (see method docs)
+        let secs = self.cost.transfer_secs(sim_bytes);
         self.stats.modeled_transfer_secs += secs;
-        Ok((arc, false, secs))
+        if !blocking {
+            self.stats.overlapped_transfer_secs += secs;
+        }
+        Ok(EnsureOutcome::Resident { expert: arc, hit: false, transfer_secs: secs })
+    }
+
+    /// [`ExpertCache::try_ensure`] for single-owner callers: a fully
+    /// pinned budget is an error (nothing can ever unpin concurrently).
+    ///
+    /// Returns (resident expert, hit?, modeled transfer seconds).
+    pub fn ensure<F>(
+        &mut self,
+        key: ExpertKey,
+        real_bytes: usize,
+        blocking: bool,
+        fetch: F,
+    ) -> Result<(Arc<ResidentExpert>, bool, f64)>
+    where
+        F: FnOnce() -> Result<[DeviceBuffer; 4]>,
+    {
+        match self.try_ensure(key, real_bytes, blocking, fetch)? {
+            EnsureOutcome::Resident { expert, hit, transfer_secs } => {
+                if !hit && self.cost.real_sleep && transfer_secs > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(transfer_secs));
+                }
+                Ok((expert, hit, transfer_secs))
+            }
+            EnsureOutcome::AllPinned => bail!(
+                "device budget exhausted and every resident expert is pinned \
+                 (budget {} used {})",
+                self.pool.budget(),
+                self.pool.used()
+            ),
+        }
     }
 
     /// Drop an expert from the device tier explicitly.
@@ -218,7 +347,7 @@ impl ExpertCache {
         for k in keys {
             self.invalidate(&k);
         }
-        self.pinned.clear();
+        self.unpin_all();
     }
 
     /// Keys currently resident (test/diagnostic use).
@@ -251,6 +380,7 @@ impl ExpertCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::experts::make_policy;
 
     #[test]
     fn hit_rate_none_without_traffic() {
@@ -266,5 +396,40 @@ mod tests {
         assert!(s.to_string().contains("hit_rate=75.0%"));
         let all_miss = CacheStats { hits: 0, misses: 5, ..Default::default() };
         assert_eq!(all_miss.hit_rate(), Some(0.0));
+    }
+
+    #[test]
+    fn exposed_transfer_never_negative() {
+        let s = CacheStats {
+            modeled_transfer_secs: 1.0,
+            overlapped_transfer_secs: 1.5,
+            ..Default::default()
+        };
+        assert_eq!(s.exposed_transfer_secs(), 0.0);
+        let s = CacheStats {
+            modeled_transfer_secs: 1.0,
+            overlapped_transfer_secs: 0.25,
+            ..Default::default()
+        };
+        assert!((s.exposed_transfer_secs() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pins_are_counted_not_boolean() {
+        let cache = ExpertCache::new(
+            1 << 20,
+            CostModel::physical(1000),
+            make_policy("fifo").unwrap(),
+        );
+        let key = ExpertKey::new(0, 0);
+        cache.pin(key);
+        cache.pin(key);
+        cache.unpin(&key);
+        // one pin remains: the key must still be in the pinned set
+        assert!(cache.pinned_set().contains(&key));
+        cache.unpin(&key);
+        assert!(!cache.pinned_set().contains(&key));
+        // unpinning beyond zero is a no-op, not a panic
+        cache.unpin(&key);
     }
 }

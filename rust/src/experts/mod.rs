@@ -5,17 +5,22 @@
 //! index).  [`ExpertCache`] holds the staged weights of resident
 //! experts under a simulated byte budget with pluggable eviction
 //! ([`make_policy`]: fifo/lru/lfu/clock) and charges modeled H2D
-//! transfer cost per fetch; [`plan_prefetch`] /
-//! [`plan_prefetch_union`] turn hash-table predictions into ordered
-//! fetch plans (per request / per cross-request batch).
+//! transfer cost per fetch; [`SharedExpertCache`] wraps it for the
+//! concurrent serving path (read-lock hits, write-lock misses, counted
+//! pins — see that module for the lock discipline); [`plan_prefetch`] /
+//! [`plan_prefetch_union`] / [`plan_prefetch_layer`] turn hash-table
+//! predictions into ordered fetch plans (per request / per
+//! cross-request batch / per MoE layer for the layer-ahead warmer).
 
 pub mod cache;
 pub mod policy;
 pub mod prefetch;
+pub mod shared;
 
-pub use cache::{CacheStats, ExpertCache, ResidentExpert};
-pub use prefetch::{plan_prefetch, plan_prefetch_union, PlannedFetch};
+pub use cache::{CacheStats, EnsureOutcome, ExpertCache, ResidentExpert};
+pub use prefetch::{plan_prefetch, plan_prefetch_layer, plan_prefetch_union, PlannedFetch};
 pub use policy::{make_policy, EvictionPolicy};
+pub use shared::SharedExpertCache;
 
 /// Identity of one expert: (transformer block index, expert index).
 /// The unit of offloading in SiDA.

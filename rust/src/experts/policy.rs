@@ -9,8 +9,17 @@ use std::collections::{HashMap, HashSet, VecDeque};
 
 use crate::experts::ExpertKey;
 
-pub trait EvictionPolicy: Send {
+// `Sync` because the serving path shares `ExpertCache` behind an
+// `RwLock` (see `experts::shared`); all in-tree policies are plain data
+// mutated through `&mut self`, so the bound costs nothing.
+pub trait EvictionPolicy: Send + Sync {
     fn name(&self) -> &'static str;
+    /// Whether `on_access` affects this policy's decisions.  FIFO (the
+    /// paper default) returns `false`, which lets the shared cache skip
+    /// queueing read-path touches entirely.
+    fn uses_access(&self) -> bool {
+        true
+    }
     /// A new key became resident.
     fn on_insert(&mut self, key: ExpertKey);
     /// A resident key was accessed (cache hit).
@@ -42,6 +51,10 @@ pub struct FifoPolicy {
 impl EvictionPolicy for FifoPolicy {
     fn name(&self) -> &'static str {
         "fifo"
+    }
+
+    fn uses_access(&self) -> bool {
+        false // insertion order only
     }
 
     fn on_insert(&mut self, key: ExpertKey) {

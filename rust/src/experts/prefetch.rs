@@ -62,32 +62,46 @@ pub fn plan_prefetch_union(
 ) -> Vec<PlannedFetch> {
     let mut plan = Vec::new();
     for (layer, &block) in moe_blocks.iter().enumerate() {
-        // token counts per predicted expert at this layer, summed over
-        // every request of the batch
-        let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
-        for &(table, mask) in requests {
-            for t in 0..table.seq_len {
-                if mask.get(t).copied().unwrap_or(0.0) == 0.0 {
-                    continue;
-                }
-                for r in 0..k_used.min(table.k) {
-                    *counts.entry(table.expert_at(t, layer, r)).or_insert(0) += 1;
-                }
-            }
-        }
-        let mut layer_plan: Vec<PlannedFetch> = counts
-            .into_iter()
-            .filter(|(expert, _)| !cache.contains(&ExpertKey::new(block, *expert)))
-            .map(|(expert, token_count)| PlannedFetch {
-                key: ExpertKey::new(block, expert),
-                token_count,
-            })
-            .collect();
-        // within a layer: hottest experts first
-        layer_plan.sort_by(|a, b| b.token_count.cmp(&a.token_count));
-        plan.extend(layer_plan);
+        plan.extend(plan_prefetch_layer(requests, block, layer, k_used, cache));
     }
     plan
+}
+
+/// Fetch plan for **one MoE layer** of a (batch of) request(s) — the
+/// planning unit of the layer-ahead warmer, which stages layer `j+1`'s
+/// union while the inference thread computes layer `j`.  Missing
+/// experts only, hottest (most routed tokens across the batch) first.
+pub fn plan_prefetch_layer(
+    requests: &[(&HashTable, &[f32])],
+    block: usize,
+    layer: usize,
+    k_used: usize,
+    cache: &ExpertCache,
+) -> Vec<PlannedFetch> {
+    // token counts per predicted expert at this layer, summed over
+    // every request of the batch
+    let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
+    for &(table, mask) in requests {
+        for t in 0..table.seq_len {
+            if mask.get(t).copied().unwrap_or(0.0) == 0.0 {
+                continue;
+            }
+            for r in 0..k_used.min(table.k) {
+                *counts.entry(table.expert_at(t, layer, r)).or_insert(0) += 1;
+            }
+        }
+    }
+    let mut layer_plan: Vec<PlannedFetch> = counts
+        .into_iter()
+        .filter(|(expert, _)| !cache.contains(&ExpertKey::new(block, *expert)))
+        .map(|(expert, token_count)| PlannedFetch {
+            key: ExpertKey::new(block, expert),
+            token_count,
+        })
+        .collect();
+    // within a layer: hottest experts first
+    layer_plan.sort_by(|a, b| b.token_count.cmp(&a.token_count));
+    layer_plan
 }
 
 #[cfg(test)]

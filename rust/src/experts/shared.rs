@@ -1,0 +1,349 @@
+//! The concurrently shared expert cache: read-mostly lookups split from
+//! mutation so pool threads don't convoy on one lock.
+//!
+//! The serving hot path touches the cache from many threads at once —
+//! the worker pool's per-expert invocations, the layer-ahead warmer,
+//! the request-ahead prefetch stage — and a single coarse
+//! `Mutex<ExpertCache>` serialized all of them, hits included.
+//! [`SharedExpertCache`] restores concurrency with a small, explicit
+//! lock discipline:
+//!
+//! * **hits** take the `RwLock` **read** lock: any number of threads
+//!   resolve warm experts (and pin them) simultaneously;
+//! * **misses** (fetch + eviction) take the **write** lock — the only
+//!   serialized part, and the part that is genuinely exclusive;
+//! * **stats for read-path hits** accumulate in a separate atomic so a
+//!   hit never needs `&mut` cache; eviction-policy touches for those
+//!   hits are queued in a side buffer and replayed under the next write
+//!   lock (FIFO — the paper default — ignores touches entirely; LRU/LFU
+//!   see them batched, which can defer a recency update by at most one
+//!   miss);
+//! * **pins** mutate a dedicated mutex inside [`ExpertCache`] through
+//!   `&self`, so pinning a just-resolved expert happens under the same
+//!   read lock that resolved it — writers (evictors) are excluded until
+//!   the pin is registered.
+//!
+//! When the budget is completely pinned by in-flight invocations,
+//! [`SharedExpertCache::ensure`] waits for an unpin and retries instead
+//! of failing — with a worker pool, "every expert pinned" is a
+//! transient state that resolves as soon as one invocation completes.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::experts::cache::{CacheStats, EnsureOutcome, ExpertCache, ResidentExpert};
+use crate::experts::ExpertKey;
+use crate::runtime::DeviceBuffer;
+
+/// Bound on the deferred-touch queue: on an all-hits steady state no
+/// writer ever drains it, so it must not grow with traffic.  When the
+/// queue is full new touches are dropped (O(1), no shifting under the
+/// mutex) — acceptable staleness for an eviction heuristic (FIFO, the
+/// paper default, ignores touches entirely).
+const TOUCH_QUEUE_LIMIT: usize = 1024;
+
+use std::sync::Condvar;
+
+pub struct SharedExpertCache {
+    inner: RwLock<ExpertCache>,
+    /// hits resolved on the read path (not yet in `inner`'s stats)
+    read_hits: AtomicU64,
+    /// read-path accesses awaiting policy replay under a write lock,
+    /// bounded by [`TOUCH_QUEUE_LIMIT`]; skipped entirely when the
+    /// eviction policy ignores accesses (`track_touches == false`)
+    touched: Mutex<Vec<ExpertKey>>,
+    /// whether the eviction policy consumes access notifications
+    /// (false for FIFO, the paper default — read-path hits then touch
+    /// no shared mutable state beyond one atomic)
+    track_touches: bool,
+    /// unpin notification for `ensure` callers stalled on a fully
+    /// pinned budget: generation counter + condvar, so waiters block
+    /// instead of spinning on the write lock
+    unpin_gen: Mutex<u64>,
+    unpin_cv: Condvar,
+}
+
+impl SharedExpertCache {
+    pub fn new(cache: ExpertCache) -> Self {
+        let track_touches = cache.policy_uses_access();
+        SharedExpertCache {
+            inner: RwLock::new(cache),
+            read_hits: AtomicU64::new(0),
+            touched: Mutex::new(Vec::new()),
+            track_touches,
+            unpin_gen: Mutex::new(0),
+            unpin_cv: Condvar::new(),
+        }
+    }
+
+    /// Read access to the underlying cache (planning, diagnostics).
+    pub fn read(&self) -> RwLockReadGuard<'_, ExpertCache> {
+        self.inner.read().unwrap()
+    }
+
+    /// Ensure residency without pinning — the prefetch/warmer entry
+    /// point.  `fetch` is `Fn` (not `FnOnce`) because a fully pinned
+    /// budget makes the call retry.
+    pub fn ensure<F>(
+        &self,
+        key: ExpertKey,
+        real_bytes: usize,
+        blocking: bool,
+        fetch: F,
+    ) -> Result<(Arc<ResidentExpert>, bool, f64)>
+    where
+        F: Fn() -> Result<[DeviceBuffer; 4]>,
+    {
+        self.ensure_impl(key, real_bytes, blocking, false, fetch)
+    }
+
+    /// Ensure residency and pin in one atomic step (pin registered
+    /// before the lock protecting residency is released) — the compute
+    /// entry point.  The caller must [`SharedExpertCache::unpin`] after
+    /// the invocation completes.
+    pub fn ensure_pinned<F>(
+        &self,
+        key: ExpertKey,
+        real_bytes: usize,
+        blocking: bool,
+        fetch: F,
+    ) -> Result<(Arc<ResidentExpert>, bool, f64)>
+    where
+        F: Fn() -> Result<[DeviceBuffer; 4]>,
+    {
+        self.ensure_impl(key, real_bytes, blocking, true, fetch)
+    }
+
+    fn ensure_impl<F>(
+        &self,
+        key: ExpertKey,
+        real_bytes: usize,
+        blocking: bool,
+        pin: bool,
+        fetch: F,
+    ) -> Result<(Arc<ResidentExpert>, bool, f64)>
+    where
+        F: Fn() -> Result<[DeviceBuffer; 4]>,
+    {
+        // fast path: warm expert under the read lock
+        {
+            let guard = self.inner.read().unwrap();
+            if let Some(resident) = guard.get(&key) {
+                if pin {
+                    // still holding the read lock: no evictor can run
+                    // until the pin is registered
+                    guard.pin(key);
+                }
+                self.read_hits.fetch_add(1, Ordering::Relaxed);
+                if self.track_touches {
+                    let mut touched = self.touched.lock().unwrap();
+                    if touched.len() < TOUCH_QUEUE_LIMIT {
+                        touched.push(key);
+                    }
+                }
+                return Ok((resident, true, 0.0));
+            }
+        }
+        // slow path: exclusive fetch/eviction; retry while the budget is
+        // fully pinned by concurrent invocations
+        loop {
+            // snapshot the unpin generation BEFORE trying, so an unpin
+            // that lands between the failed attempt and the wait below
+            // is never missed
+            let gen_before = *self.unpin_gen.lock().unwrap();
+            {
+                let mut guard = self.inner.write().unwrap();
+                let deferred = std::mem::take(&mut *self.touched.lock().unwrap());
+                guard.note_accesses(&deferred);
+                match guard.try_ensure(key, real_bytes, blocking, || fetch())? {
+                    EnsureOutcome::Resident { expert, hit, transfer_secs } => {
+                        if pin {
+                            guard.pin(key);
+                        }
+                        let sleep = !hit && guard.cost_model().real_sleep && transfer_secs > 0.0;
+                        drop(guard);
+                        if sleep {
+                            // the fetching thread pays the modeled wall
+                            // time on ITS timeline, outside the lock —
+                            // concurrent hits keep flowing while the
+                            // "transfer" is in flight
+                            std::thread::sleep(Duration::from_secs_f64(transfer_secs));
+                        }
+                        return Ok((expert, hit, transfer_secs));
+                    }
+                    EnsureOutcome::AllPinned => {}
+                }
+            }
+            // every resident expert is pinned by an in-flight
+            // invocation; block until one unpins (timeout-bounded as a
+            // belt-and-braces backstop)
+            let mut gen = self.unpin_gen.lock().unwrap();
+            while *gen == gen_before {
+                let (g, timeout) = self
+                    .unpin_cv
+                    .wait_timeout(gen, Duration::from_millis(1))
+                    .unwrap();
+                gen = g;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+        }
+    }
+
+    pub fn pin(&self, key: ExpertKey) {
+        self.inner.read().unwrap().pin(key);
+    }
+
+    pub fn unpin(&self, key: &ExpertKey) {
+        self.inner.read().unwrap().unpin(key);
+        // wake any `ensure` stalled on a fully pinned budget
+        *self.unpin_gen.lock().unwrap() += 1;
+        self.unpin_cv.notify_all();
+    }
+
+    pub fn contains(&self, key: &ExpertKey) -> bool {
+        self.inner.read().unwrap().contains(key)
+    }
+
+    /// Merged statistics snapshot: the inner cache's counters plus the
+    /// hits resolved on the lock-free read path.
+    pub fn stats(&self) -> CacheStats {
+        let mut stats = self.inner.read().unwrap().stats().clone();
+        stats.hits += self.read_hits.load(Ordering::Relaxed);
+        stats
+    }
+
+    pub fn reset_stats(&self) {
+        let mut guard = self.inner.write().unwrap();
+        guard.reset_stats();
+        self.read_hits.store(0, Ordering::Relaxed);
+        self.touched.lock().unwrap().clear();
+    }
+
+    pub fn check_invariants(&self) -> Result<()> {
+        self.inner.read().unwrap().check_invariants()
+    }
+
+    pub fn used(&self) -> usize {
+        self.inner.read().unwrap().used()
+    }
+
+    pub fn budget(&self) -> usize {
+        self.inner.read().unwrap().budget()
+    }
+
+    pub fn peak(&self) -> usize {
+        self.inner.read().unwrap().peak()
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.inner.read().unwrap().resident_count()
+    }
+
+    pub fn clear(&self) {
+        self.inner.write().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experts::make_policy;
+    use crate::memory::CostModel;
+    use crate::runtime::stage_expert_parts;
+    use crate::testkit;
+
+    fn shared_cache(budget_experts: usize) -> (Arc<crate::runtime::ModelBundle>, SharedExpertCache, usize) {
+        let b = testkit::tiny_bundle();
+        let block = b.topology.moe_blocks[0];
+        let real = b.weights.expert_bytes(block, 0).unwrap();
+        let cache = SharedExpertCache::new(ExpertCache::new(
+            budget_experts * real + 64,
+            CostModel::physical(real),
+            make_policy("fifo").unwrap(),
+        ));
+        (b, cache, real)
+    }
+
+    #[test]
+    fn read_path_hits_are_counted_and_merged() {
+        let (b, cache, real) = shared_cache(4);
+        let block = b.topology.moe_blocks[0];
+        let key = ExpertKey::new(block, 0);
+        let fetch = || stage_expert_parts(&b.engine, &b.weights, block, 0);
+        let (_, hit, _) = cache.ensure(key, real, false, fetch).unwrap();
+        assert!(!hit, "cold cache must miss");
+        let (_, hit, secs) = cache.ensure(key, real, false, fetch).unwrap();
+        assert!(hit, "second lookup must hit on the read path");
+        assert_eq!(secs, 0.0);
+        let stats = cache.stats();
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.misses, 1);
+        assert!(stats.overlapped_transfer_secs > 0.0, "non-blocking charge is overlapped");
+        assert_eq!(stats.exposed_transfer_secs(), 0.0);
+    }
+
+    #[test]
+    fn fully_pinned_budget_waits_for_unpin_instead_of_failing() {
+        let (b, cache, real) = shared_cache(1);
+        let block = b.topology.moe_blocks[0];
+        let k0 = ExpertKey::new(block, 0);
+        let k1 = ExpertKey::new(block, 1);
+        cache
+            .ensure_pinned(k0, real, true, || stage_expert_parts(&b.engine, &b.weights, block, 0))
+            .unwrap();
+        std::thread::scope(|s| {
+            let unpinner = s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(5));
+                cache.unpin(&k0);
+            });
+            // blocks until the concurrent unpin frees the single slot
+            let (_, hit, _) = cache
+                .ensure_pinned(k1, real, true, || {
+                    stage_expert_parts(&b.engine, &b.weights, block, 1)
+                })
+                .unwrap();
+            assert!(!hit);
+            unpinner.join().unwrap();
+        });
+        cache.unpin(&k1);
+        cache.check_invariants().unwrap();
+        assert!(cache.contains(&k1));
+    }
+
+    #[test]
+    fn concurrent_ensure_storm_preserves_invariants() {
+        let (b, cache, real) = shared_cache(3);
+        let block = b.topology.moe_blocks[0];
+        let e = b.topology.num_experts;
+        std::thread::scope(|s| {
+            for thread_id in 0..4u64 {
+                let cache = &cache;
+                let b = &b;
+                s.spawn(move || {
+                    let mut rng = crate::util::rng::Rng::new(thread_id);
+                    for _ in 0..200 {
+                        let expert = rng.usize_below(e);
+                        let key = ExpertKey::new(block, expert);
+                        let (resident, _hit, _secs) = cache
+                            .ensure_pinned(key, real, thread_id % 2 == 0, || {
+                                stage_expert_parts(&b.engine, &b.weights, block, expert)
+                            })
+                            .unwrap();
+                        // touch the buffers while pinned, then release
+                        assert_eq!(resident.parts.len(), 4);
+                        cache.unpin(&key);
+                    }
+                });
+            }
+        });
+        cache.check_invariants().unwrap();
+        let stats = cache.stats();
+        assert_eq!(stats.hits + stats.misses, 4 * 200);
+        assert!(stats.evictions > 0, "eviction pressure never materialized");
+    }
+}

@@ -77,6 +77,7 @@ fn serve_cli() -> Cli {
         .opt("policy", "eviction policy (fifo|lru|lfu|clock)", "fifo")
         .opt("k-used", "hash experts per token (0 = paper default)", "0")
         .opt("batch", "requests per forward pass (1 = paper batch-1; >1 batches cross-request)", "1")
+        .opt("pool", "worker threads for expert execution (0 = auto, 1 = sequential)", "0")
         .opt("requests", "number of requests", "32")
         .opt("seed", "workload seed", "0")
         .opt("artifacts", "artifacts root", "")
@@ -135,6 +136,7 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
                 prefetch: cfg.prefetch,
                 queue_depth: 8,
                 max_batch: cfg.max_batch,
+                pool_threads: cfg.pool_threads,
                 want_lm: cfg.want_lm,
                 want_cls: cfg.want_cls,
             };
@@ -203,6 +205,7 @@ fn cmd_server(tail: &[String]) -> Result<()> {
         .opt("dataset", "dataset profile (fixes seq len)", "sst2")
         .opt("budget-gb", "simulated device budget (GB)", "8")
         .opt("batch", "max requests coalesced per forward pass", "8")
+        .opt("pool", "worker threads for expert execution (0 = auto)", "0")
         .opt("batch-delay-ms", "max time a request waits for its batch to fill", "5")
         .opt("queue-cap", "admission queue bound (overflow is rejected)", "256")
         .opt("addr", "listen address", "127.0.0.1:7700")
@@ -222,6 +225,7 @@ fn cmd_server(tail: &[String]) -> Result<()> {
             max_delay_secs: args.get_f64("batch-delay-ms", 5.0) / 1e3,
             capacity: args.get_usize("queue-cap", 256).max(1),
         },
+        pool_threads: args.get_usize("pool", 0),
     };
     let state = Arc::new(ServerState::new(
         bundle,

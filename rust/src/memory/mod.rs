@@ -11,6 +11,6 @@ pub mod cost;
 pub mod hierarchy;
 pub mod pool;
 
-pub use cost::CostModel;
+pub use cost::{exposed_transfer_secs, CostModel};
 pub use hierarchy::{HierarchyStats, Tier, TierCosts, TieredStore};
 pub use pool::{DevicePool, ReserveOutcome};

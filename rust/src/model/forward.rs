@@ -8,6 +8,18 @@
 //! cross-request batches: dense stages per request (or stacked, when
 //! the backend supports batched entries), expert dispatch shared across
 //! the batch, outputs bit-identical to sequential forwards.
+//!
+//! ## Parallel expert execution
+//!
+//! The gathered per-expert invocations of each MoE layer run
+//! concurrently on the runner's [`WorkerPool`] (experts are
+//! independent: each consumes its own token rows).  Determinism is
+//! preserved by construction: workers only *compute* — each invocation
+//! produces a private output buffer — and the weighted scatter back
+//! into the accumulators happens on the calling thread afterwards, in
+//! ascending expert order, exactly the order the sequential path uses.
+//! Same accumulation order ⇒ bit-identical f32 outputs at every pool
+//! width (asserted in `tests/integration.rs`).
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
@@ -16,13 +28,17 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::hash_table::HashTable;
-use crate::experts::{ExpertCache, ExpertKey};
+use crate::experts::{ExpertCache, ExpertKey, SharedExpertCache};
 use crate::runtime::{
     literal_from_f32s, literal_i32, to_f32_vec, to_i32_vec, DeviceBuffer, Executable, Literal,
     ModelBundle,
 };
+use crate::util::pool::WorkerPool;
+use crate::util::sync::LayerGate;
 
-/// Wall-time breakdown of one forward pass (Fig 3's phases).
+/// Wall-time breakdown of one forward pass (Fig 3's phases, refined
+/// with the host-side gather/scatter stages and the pooled-execution
+/// wall clock).
 #[derive(Debug, Default, Clone)]
 pub struct PhaseTimes {
     /// embed + attention + dense FFN + heads — the paper's "ideal
@@ -30,27 +46,74 @@ pub struct PhaseTimes {
     pub dense_secs: f64,
     /// router execution (baselines) or hash-table wait (SiDA)
     pub selection_secs: f64,
-    /// per-expert dispatch + compute
+    /// host-side gather: routing decisions -> per-expert token row sets
+    pub gather_secs: f64,
+    /// per-invocation dispatch compute, summed over invocations (the
+    /// serial cost of the expert work, independent of pooling)
     pub expert_secs: f64,
-    /// modeled H2D transfer time charged on the critical path
+    /// wall clock of the (possibly pooled) expert-execution section —
+    /// with N workers this is what the critical path actually pays,
+    /// `<= expert_secs` when the pool overlaps invocations
+    pub expert_wall_secs: f64,
+    /// weighted scatter of expert outputs back into the accumulators
+    pub scatter_secs: f64,
+    /// wall seconds the inference thread spent blocked at the layer
+    /// gate waiting for the warmer — the *measured* cost of imperfect
+    /// overlap (0 when warm-up fully hides behind compute), charged to
+    /// the critical path
+    pub stall_secs: f64,
+    /// modeled H2D transfer time charged on the critical path (blocking
+    /// fetches); overlapped prefetch transfers are accounted
+    /// cache-side, not here
     pub transfer_secs: f64,
     /// number of expert invocations issued
     pub expert_invocations: u64,
 }
 
 impl PhaseTimes {
+    /// Serial-cost total: every phase as if executed back to back
+    /// (`expert_secs`, not the pooled wall).  The Fig 3 axis.
     pub fn total(&self) -> f64 {
-        self.dense_secs + self.selection_secs + self.expert_secs + self.transfer_secs
+        self.dense_secs
+            + self.selection_secs
+            + self.gather_secs
+            + self.expert_secs
+            + self.scatter_secs
+            + self.transfer_secs
     }
 
     pub fn moe_overhead(&self) -> f64 {
-        self.selection_secs + self.expert_secs + self.transfer_secs
+        self.selection_secs
+            + self.gather_secs
+            + self.expert_secs
+            + self.scatter_secs
+            + self.transfer_secs
+    }
+
+    /// Critical-path seconds actually elapsed on the inference thread:
+    /// dense + selection + gather + the pooled expert wall + scatter +
+    /// layer-gate stalls.  Including `stall_secs` keeps the metric
+    /// honest: if the warmer cannot keep ahead of compute, the wait
+    /// shows up here instead of disappearing into "overlapped".
+    /// Exposed (non-overlapped) modeled transfer is tracked cache-side
+    /// and added by [`crate::metrics::ServeStats::modeled_request_secs`].
+    pub fn critical_path_secs(&self) -> f64 {
+        self.dense_secs
+            + self.selection_secs
+            + self.gather_secs
+            + self.expert_wall_secs
+            + self.scatter_secs
+            + self.stall_secs
     }
 
     pub fn add(&mut self, other: &PhaseTimes) {
         self.dense_secs += other.dense_secs;
         self.selection_secs += other.selection_secs;
+        self.gather_secs += other.gather_secs;
         self.expert_secs += other.expert_secs;
+        self.expert_wall_secs += other.expert_wall_secs;
+        self.scatter_secs += other.scatter_secs;
+        self.stall_secs += other.stall_secs;
         self.transfer_secs += other.transfer_secs;
         self.expert_invocations += other.expert_invocations;
     }
@@ -108,9 +171,10 @@ pub enum ExpertProvider<'a> {
     /// The SiDA cache: budget + eviction + modeled transfer cost.
     /// `blocking` marks fetches that stall the critical path.
     Cached { cache: &'a mut ExpertCache, blocking: bool },
-    /// Same cache shared with a concurrent prefetcher (the two-thread
-    /// SiDA pipeline).
-    Shared { cache: &'a std::sync::Mutex<ExpertCache>, blocking: bool },
+    /// The same cache shared with the concurrent prefetch/warmer stages
+    /// and the worker pool (lookups under a read lock, mutation under a
+    /// write lock — see [`SharedExpertCache`]).
+    Shared { cache: &'a SharedExpertCache, blocking: bool },
     /// Feed host literals every call (naive full offload; no device
     /// residency at all).
     HostLiterals,
@@ -127,6 +191,17 @@ pub struct ForwardOptions {
     pub fixed_bucket: bool,
     pub want_lm: bool,
     pub want_cls: bool,
+}
+
+/// Out-of-band hooks into a forward pass.  [`ForwardHooks::layer_gate`]
+/// couples the pass to a layer-ahead warmer: before dispatching MoE
+/// layer *j* the runner waits until the warmer has staged layer *j*'s
+/// experts (and publishes its progress so the warmer can start on
+/// *j+1*), which keeps every expert fetch on the overlapped prefetch
+/// timeline.
+#[derive(Clone, Copy, Default)]
+pub struct ForwardHooks<'a> {
+    pub layer_gate: Option<&'a LayerGate>,
 }
 
 /// One request in a cross-request batch handed to
@@ -146,6 +221,33 @@ struct GatheredRow {
     item: usize,
     token: usize,
     alpha: f32,
+}
+
+/// One expert's work for an MoE layer: the token rows routed to it
+/// (in deterministic gather order).
+struct ExpertJob {
+    expert: usize,
+    rows: Vec<GatheredRow>,
+}
+
+/// A worker's view of the expert provider: the parallel-capable
+/// variants only (the `Cached { &mut .. }` provider is inherently
+/// single-owner and keeps the sequential path).
+enum ParProvider<'a> {
+    AllResident(&'a HashMap<ExpertKey, [DeviceBuffer; 4]>),
+    Shared { cache: &'a SharedExpertCache, blocking: bool },
+    HostLiterals,
+}
+
+/// Private result of one expert's compute: output rows (gather order)
+/// plus its contribution to the phase accounting, merged by the caller
+/// in deterministic job order.
+struct ExpertComputeOut {
+    /// `rows.len() * d_model` output values, one row per gathered row
+    y: Vec<f32>,
+    transfer_secs: f64,
+    dispatch_secs: f64,
+    invocations: u64,
 }
 
 /// Output of one forward pass.
@@ -196,11 +298,47 @@ fn split_f32(batch: &Literal) -> Result<Vec<Literal>> {
         .collect()
 }
 
+/// Runner-lifetime cache of one transformer block's non-expert weight
+/// literals — fetched from the `WeightStore` once at construction, so
+/// the per-forward path never formats a tensor name or re-copies a
+/// dense weight again.
+struct BlockLits {
+    ln1_g: Literal,
+    ln1_b: Literal,
+    wq: Literal,
+    bq: Literal,
+    wk: Literal,
+    bk: Literal,
+    wv: Literal,
+    bv: Literal,
+    wo: Literal,
+    bo: Literal,
+    ln2_g: Literal,
+    ln2_b: Literal,
+    /// dense-FFN weights (w1, b1, w2, b2) — `None` on MoE blocks
+    ffn: Option<[Literal; 4]>,
+    /// router weights — `None` on dense blocks
+    wr: Option<Literal>,
+}
+
+/// Runner-lifetime cache of the embedding/head weights.
+struct HeadLits {
+    embed_tok: Literal,
+    final_ln_g: Literal,
+    final_ln_b: Literal,
+    lm_w: Literal,
+    lm_b: Literal,
+    cls_w: Literal,
+    cls_b: Literal,
+}
+
 /// Drives one model config at one profile seq-len.
 pub struct ModelRunner {
     pub bundle: Arc<ModelBundle>,
     pub profile: String,
     pub seq_len: usize,
+    /// worker pool for the per-expert fan-out of each MoE layer
+    pool: WorkerPool,
     exe_embed: Arc<Executable>,
     exe_attn: Arc<Executable>,
     exe_dense_ffn: Arc<Executable>,
@@ -211,14 +349,21 @@ pub struct ModelRunner {
     exe_cls_head: Arc<Executable>,
     exe_lm_nll: Arc<Executable>,
     exe_expert: BTreeMap<usize, Arc<Executable>>,
-    /// cached host literals for all non-expert weights, keyed by name
-    lits: HashMap<String, Literal>,
+    /// per-block weight literals, indexed by block
+    blocks: Vec<BlockLits>,
+    head: HeadLits,
     /// positional table sliced to seq_len
     pos_lit: Literal,
 }
 
 impl ModelRunner {
     pub fn new(bundle: Arc<ModelBundle>, profile: &str) -> Result<Self> {
+        Self::with_pool(bundle, profile, WorkerPool::auto())
+    }
+
+    /// Construct with an explicit worker-pool width (`WorkerPool::new(1)`
+    /// is the fully sequential reference execution).
+    pub fn with_pool(bundle: Arc<ModelBundle>, profile: &str, pool: WorkerPool) -> Result<Self> {
         let topo = &bundle.topology;
         let seq_len = topo.seq_len(profile)?;
         let eng = &bundle.engine;
@@ -237,35 +382,44 @@ impl ModelRunner {
             exe_expert.insert(b, eng.load(&format!("expert_T{b}"))?);
         }
 
-        // cache host literals for every non-expert tensor we feed
-        let mut lits = HashMap::new();
-        let mut names: Vec<String> = vec![
-            "embed.tok".into(),
-            "final_ln_g".into(),
-            "final_ln_b".into(),
-            "lm_head.w".into(),
-            "lm_head.b".into(),
-            "cls_head.w".into(),
-            "cls_head.b".into(),
-        ];
+        // hoist every non-expert weight literal into runner-lifetime
+        // caches: the per-forward hot path indexes structs instead of
+        // formatting names and re-fetching from the weight store
+        let w = |name: String| bundle.weights.literal(&name);
+        let mut blocks = Vec::with_capacity(topo.n_blocks);
         for b in 0..topo.n_blocks {
-            for part in [
-                "ln1_g", "ln1_b", "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo", "ln2_g",
-                "ln2_b",
-            ] {
-                names.push(format!("blocks.{b}.{part}"));
-            }
-            if topo.moe_layer_index(b).is_some() {
-                names.push(format!("blocks.{b}.wr"));
-            } else {
-                for part in ["w1", "b1", "w2", "b2"] {
-                    names.push(format!("blocks.{b}.{part}"));
-                }
-            }
+            let part = |p: &str| w(format!("blocks.{b}.{p}"));
+            let is_moe = topo.moe_layer_index(b).is_some();
+            blocks.push(BlockLits {
+                ln1_g: part("ln1_g")?,
+                ln1_b: part("ln1_b")?,
+                wq: part("wq")?,
+                bq: part("bq")?,
+                wk: part("wk")?,
+                bk: part("bk")?,
+                wv: part("wv")?,
+                bv: part("bv")?,
+                wo: part("wo")?,
+                bo: part("bo")?,
+                ln2_g: part("ln2_g")?,
+                ln2_b: part("ln2_b")?,
+                ffn: if is_moe {
+                    None
+                } else {
+                    Some([part("w1")?, part("b1")?, part("w2")?, part("b2")?])
+                },
+                wr: if is_moe { Some(part("wr")?) } else { None },
+            });
         }
-        for name in names {
-            lits.insert(name.clone(), bundle.weights.literal(&name)?);
-        }
+        let head = HeadLits {
+            embed_tok: w("embed.tok".into())?,
+            final_ln_g: w("final_ln_g".into())?,
+            final_ln_b: w("final_ln_b".into())?,
+            lm_w: w("lm_head.w".into())?,
+            lm_b: w("lm_head.b".into())?,
+            cls_w: w("cls_head.w".into())?,
+            cls_b: w("cls_head.b".into())?,
+        };
 
         // positional slice [L, D]
         let pos_full = bundle.weights.f32_slice("embed.pos")?;
@@ -276,6 +430,7 @@ impl ModelRunner {
             bundle,
             profile: profile.to_string(),
             seq_len,
+            pool,
             exe_embed,
             exe_attn,
             exe_dense_ffn,
@@ -286,15 +441,15 @@ impl ModelRunner {
             exe_cls_head,
             exe_lm_nll,
             exe_expert,
-            lits,
+            blocks,
+            head,
             pos_lit,
         })
     }
 
-    fn lit(&self, name: &str) -> Result<&Literal> {
-        self.lits
-            .get(name)
-            .with_context(|| format!("literal '{name}' not cached"))
+    /// Worker-pool width this runner fans expert invocations out to.
+    pub fn pool_threads(&self) -> usize {
+        self.pool.threads()
     }
 
     /// Attention mask for padded ids — delegates to the canonical
@@ -309,57 +464,43 @@ impl ModelRunner {
         let ids_lit = literal_i32(&[1, self.seq_len], ids)?;
         let out = self
             .exe_embed
-            .run(&[&ids_lit, self.lit("embed.tok")?, &self.pos_lit])?;
+            .run(&[&ids_lit, &self.head.embed_tok, &self.pos_lit])?;
         Ok(out.into_iter().next().unwrap())
     }
 
     fn run_attn(&self, x: &Literal, mask: &Literal, block: usize) -> Result<Literal> {
-        let b = block;
+        let bl = &self.blocks[block];
         let args: Vec<&Literal> = vec![
-            x,
-            mask,
-            self.lit(&format!("blocks.{b}.ln1_g"))?,
-            self.lit(&format!("blocks.{b}.ln1_b"))?,
-            self.lit(&format!("blocks.{b}.wq"))?,
-            self.lit(&format!("blocks.{b}.bq"))?,
-            self.lit(&format!("blocks.{b}.wk"))?,
-            self.lit(&format!("blocks.{b}.bk"))?,
-            self.lit(&format!("blocks.{b}.wv"))?,
-            self.lit(&format!("blocks.{b}.bv"))?,
-            self.lit(&format!("blocks.{b}.wo"))?,
-            self.lit(&format!("blocks.{b}.bo"))?,
+            x, mask, &bl.ln1_g, &bl.ln1_b, &bl.wq, &bl.bq, &bl.wk, &bl.bk, &bl.wv, &bl.bv,
+            &bl.wo, &bl.bo,
         ];
         Ok(self.exe_attn.run(&args)?.into_iter().next().unwrap())
     }
 
     fn run_dense_ffn(&self, x: &Literal, block: usize) -> Result<Literal> {
-        let b = block;
-        let args: Vec<&Literal> = vec![
-            x,
-            self.lit(&format!("blocks.{b}.ln2_g"))?,
-            self.lit(&format!("blocks.{b}.ln2_b"))?,
-            self.lit(&format!("blocks.{b}.w1"))?,
-            self.lit(&format!("blocks.{b}.b1"))?,
-            self.lit(&format!("blocks.{b}.w2"))?,
-            self.lit(&format!("blocks.{b}.b2"))?,
-        ];
+        let bl = &self.blocks[block];
+        let ffn = bl
+            .ffn
+            .as_ref()
+            .with_context(|| format!("block {block} has no dense FFN weights"))?;
+        let args: Vec<&Literal> =
+            vec![x, &bl.ln2_g, &bl.ln2_b, &ffn[0], &ffn[1], &ffn[2], &ffn[3]];
         Ok(self.exe_dense_ffn.run(&args)?.into_iter().next().unwrap())
     }
 
     fn run_moe_ln(&self, x: &Literal, block: usize) -> Result<Literal> {
-        let b = block;
-        let args: Vec<&Literal> = vec![
-            x,
-            self.lit(&format!("blocks.{b}.ln2_g"))?,
-            self.lit(&format!("blocks.{b}.ln2_b"))?,
-        ];
+        let bl = &self.blocks[block];
+        let args: Vec<&Literal> = vec![x, &bl.ln2_g, &bl.ln2_b];
         Ok(self.exe_moe_ln.run(&args)?.into_iter().next().unwrap())
     }
 
     /// Run the true router on LN'd hidden states -> per-token top-1.
     pub fn run_router(&self, xln: &Literal, block: usize) -> Result<RoutingDecision> {
-        let args: Vec<&Literal> =
-            vec![xln, self.lit(&format!("blocks.{block}.wr"))?];
+        let wr = self.blocks[block]
+            .wr
+            .as_ref()
+            .with_context(|| format!("block {block} has no router weights"))?;
+        let args: Vec<&Literal> = vec![xln, wr];
         let out = self.exe_router.run(&args)?;
         // outputs: logits [1,L,E], idx i32 [1,L], alpha [1,L]
         let idx = to_i32_vec(&out[1])?;
@@ -410,149 +551,290 @@ impl ModelRunner {
         RoutingDecision { top1, assignments }
     }
 
-    /// Invoke one expert on a packed token bucket gathered from one or
-    /// more requests.  `xlns[i]` / `y_accs[i]` are request `i`'s LN'd
-    /// hidden states and output accumulator.  Each packed row is
-    /// computed independently by the expert FFN, so a (request, token)
-    /// row's result is bit-identical no matter which other rows share
-    /// the invocation — the property that lets the cross-request
-    /// batched path reproduce sequential batch-1 serving exactly.
-    #[allow(clippy::too_many_arguments)]
-    fn invoke_expert_gathered(
+    /// Execute one packed chunk given its staged weight parts.
+    fn dispatch_chunk(
+        &self,
+        exe: &Executable,
+        bucket: usize,
+        packed: &[f32],
+        parts: &[DeviceBuffer; 4],
+    ) -> Result<Vec<Literal>> {
+        let d = self.bundle.topology.d_model;
+        let x_buf = self.bundle.engine.stage_f32(&[bucket, d], packed)?;
+        let bufs: Vec<&DeviceBuffer> = vec![&x_buf, &parts[0], &parts[1], &parts[2], &parts[3]];
+        exe.run_buffers(&bufs)
+    }
+
+    /// Compute one expert's gathered rows: pack token rows into
+    /// bucket-sized chunks (splitting exactly like the historical
+    /// recursive dispatcher when rows exceed the largest bucket),
+    /// resolve residency through the parallel-capable provider view,
+    /// and return the per-row outputs in gather order.  Pure compute —
+    /// no shared accumulator is touched, which is what makes this safe
+    /// to run on pool threads while preserving bit-identical scatter.
+    fn compute_expert_rows(
         &self,
         block: usize,
         expert: usize,
         xlns: &[Vec<f32>],
         rows: &[GatheredRow],
+        par: &ParProvider<'_>,
+        fixed_bucket: bool,
+    ) -> Result<ExpertComputeOut> {
+        let topo = &self.bundle.topology;
+        let d = topo.d_model;
+        let key = ExpertKey::new(block, expert);
+        let mut out = ExpertComputeOut {
+            y: Vec::with_capacity(rows.len() * d),
+            transfer_secs: 0.0,
+            dispatch_secs: 0.0,
+            invocations: 0,
+        };
+        let mut packed: Vec<f32> = Vec::new();
+        let mut start = 0usize;
+        while start < rows.len() {
+            let remaining = rows.len() - start;
+            let bucket = if fixed_bucket {
+                topo.bucket_for(self.seq_len)
+            } else {
+                topo.bucket_for(remaining)
+            };
+            let take = remaining.min(bucket);
+            let chunk = &rows[start..start + take];
+            packed.clear();
+            packed.resize(bucket * d, 0.0);
+            for (r, row) in chunk.iter().enumerate() {
+                let src = &xlns[row.item][row.token * d..(row.token + 1) * d];
+                packed[r * d..(r + 1) * d].copy_from_slice(src);
+            }
+            let exe = self
+                .exe_expert
+                .get(&bucket)
+                .with_context(|| format!("no expert artifact for bucket {bucket}"))?;
+
+            let result = match par {
+                ParProvider::AllResident(map) => {
+                    let parts = map
+                        .get(&key)
+                        .with_context(|| format!("expert {key:?} not staged"))?;
+                    let t0 = Instant::now();
+                    let r = self.dispatch_chunk(exe, bucket, &packed, parts)?;
+                    out.dispatch_secs += t0.elapsed().as_secs_f64();
+                    r
+                }
+                ParProvider::Shared { cache, blocking } => {
+                    // unpin on every exit path — a panic that leaks a
+                    // pin would wedge concurrent AllPinned waiters
+                    struct Unpin<'a>(&'a SharedExpertCache, ExpertKey);
+                    impl Drop for Unpin<'_> {
+                        fn drop(&mut self) {
+                            self.0.unpin(&self.1);
+                        }
+                    }
+                    let real_bytes = self.bundle.weights.expert_bytes(block, expert)?;
+                    let (resident, _hit, secs) =
+                        cache.ensure_pinned(key, real_bytes, *blocking, || {
+                            crate::runtime::stage_expert_parts(
+                                &self.bundle.engine,
+                                &self.bundle.weights,
+                                block,
+                                expert,
+                            )
+                        })?;
+                    let _unpin = Unpin(*cache, key);
+                    out.transfer_secs += secs;
+                    let t0 = Instant::now();
+                    let r = self.dispatch_chunk(exe, bucket, &packed, &resident.parts)?;
+                    out.dispatch_secs += t0.elapsed().as_secs_f64();
+                    r
+                }
+                ParProvider::HostLiterals => {
+                    let names = crate::runtime::WeightStore::expert_part_names(block, expert);
+                    let x_lit = literal_from_f32s(&[bucket, d], &packed)?;
+                    let owned = [
+                        x_lit,
+                        self.bundle.weights.literal(&names[0])?,
+                        self.bundle.weights.literal(&names[1])?,
+                        self.bundle.weights.literal(&names[2])?,
+                        self.bundle.weights.literal(&names[3])?,
+                    ];
+                    let args: Vec<&Literal> = owned.iter().collect();
+                    let t0 = Instant::now();
+                    let r = exe.run(&args)?;
+                    out.dispatch_secs += t0.elapsed().as_secs_f64();
+                    r
+                }
+            };
+            out.invocations += 1;
+            let y = to_f32_vec(&result[0])?;
+            out.y.extend_from_slice(&y[..take * d]);
+            start += take;
+        }
+        Ok(out)
+    }
+
+    /// Sequential twin of [`ModelRunner::compute_expert_rows`] for the
+    /// single-owner `Cached { &mut ExpertCache }` provider.
+    fn compute_expert_rows_cached(
+        &self,
+        block: usize,
+        expert: usize,
+        xlns: &[Vec<f32>],
+        rows: &[GatheredRow],
+        cache: &mut ExpertCache,
+        blocking: bool,
+        fixed_bucket: bool,
+    ) -> Result<ExpertComputeOut> {
+        let topo = &self.bundle.topology;
+        let d = topo.d_model;
+        let key = ExpertKey::new(block, expert);
+        let mut out = ExpertComputeOut {
+            y: Vec::with_capacity(rows.len() * d),
+            transfer_secs: 0.0,
+            dispatch_secs: 0.0,
+            invocations: 0,
+        };
+        let mut packed: Vec<f32> = Vec::new();
+        let mut start = 0usize;
+        while start < rows.len() {
+            let remaining = rows.len() - start;
+            let bucket = if fixed_bucket {
+                topo.bucket_for(self.seq_len)
+            } else {
+                topo.bucket_for(remaining)
+            };
+            let take = remaining.min(bucket);
+            let chunk = &rows[start..start + take];
+            packed.clear();
+            packed.resize(bucket * d, 0.0);
+            for (r, row) in chunk.iter().enumerate() {
+                let src = &xlns[row.item][row.token * d..(row.token + 1) * d];
+                packed[r * d..(r + 1) * d].copy_from_slice(src);
+            }
+            let exe = self
+                .exe_expert
+                .get(&bucket)
+                .with_context(|| format!("no expert artifact for bucket {bucket}"))?;
+
+            let real_bytes = self.bundle.weights.expert_bytes(block, expert)?;
+            let (resident, _hit, secs) = cache.ensure(key, real_bytes, blocking, || {
+                crate::runtime::stage_expert_parts(
+                    &self.bundle.engine,
+                    &self.bundle.weights,
+                    block,
+                    expert,
+                )
+            })?;
+            out.transfer_secs += secs;
+            cache.pin(key);
+            let t0 = Instant::now();
+            let result = self.dispatch_chunk(exe, bucket, &packed, &resident.parts);
+            out.dispatch_secs += t0.elapsed().as_secs_f64();
+            cache.unpin(&key);
+            let result = result?;
+
+            out.invocations += 1;
+            let y = to_f32_vec(&result[0])?;
+            out.y.extend_from_slice(&y[..take * d]);
+            start += take;
+        }
+        Ok(out)
+    }
+
+    /// Run every job of one MoE layer — concurrently on the worker pool
+    /// for the parallel-capable providers, inline for `Cached` — then
+    /// merge the outputs into the accumulators **sequentially in
+    /// ascending job order**: per-token accumulation order is identical
+    /// to the fully sequential path, so outputs are bit-identical at
+    /// every pool width.
+    #[allow(clippy::too_many_arguments)]
+    fn run_expert_set(
+        &self,
+        block: usize,
+        jobs: &[ExpertJob],
+        xlns: &[Vec<f32>],
         y_accs: &mut [Vec<f32>],
         provider: &mut ExpertProvider<'_>,
         fixed_bucket: bool,
         times: &mut PhaseTimes,
     ) -> Result<()> {
+        if jobs.is_empty() {
+            return Ok(());
+        }
         let d = self.bundle.topology.d_model;
-        let count = rows.len().max(1);
-        let bucket = if fixed_bucket {
-            self.bundle.topology.bucket_for(self.seq_len)
-        } else {
-            self.bundle.topology.bucket_for(count)
-        };
-        if count > bucket {
-            // split across multiple calls (count > largest bucket)
-            let (head, tail) = rows.split_at(bucket);
-            self.invoke_expert_gathered(
-                block, expert, xlns, head, y_accs, provider, fixed_bucket, times,
-            )?;
-            return self.invoke_expert_gathered(
-                block, expert, xlns, tail, y_accs, provider, fixed_bucket, times,
-            );
-        }
-        // pack tokens
-        let mut packed = vec![0f32; bucket * d];
-        for (r, row) in rows.iter().enumerate() {
-            let src = &xlns[row.item][row.token * d..(row.token + 1) * d];
-            packed[r * d..(r + 1) * d].copy_from_slice(src);
-        }
-        let exe = self
-            .exe_expert
-            .get(&bucket)
-            .with_context(|| format!("no expert artifact for bucket {bucket}"))?;
-
-        let key = ExpertKey::new(block, expert);
-        // Residency first (transfer time accounted separately from
-        // dispatch/compute time so Fig 3's breakdown stays honest).
-        let fetch = || -> Result<[DeviceBuffer; 4]> {
-            crate::runtime::stage_expert_parts(
-                &self.bundle.engine,
-                &self.bundle.weights,
-                block,
-                expert,
-            )
-        };
-        let resident_for_cache = match provider {
+        let t_wall = Instant::now();
+        let outs: Vec<Result<ExpertComputeOut>> = match provider {
             ExpertProvider::Cached { cache, blocking } => {
-                let real_bytes = self.bundle.weights.expert_bytes(block, expert)?;
-                let (resident, _hit, secs) = cache.ensure(key, real_bytes, *blocking, fetch)?;
-                times.transfer_secs += secs;
-                cache.pin(key);
-                Some(resident)
+                let blocking = *blocking;
+                jobs.iter()
+                    .map(|job| {
+                        self.compute_expert_rows_cached(
+                            block, job.expert, xlns, &job.rows, cache, blocking, fixed_bucket,
+                        )
+                    })
+                    .collect()
             }
-            ExpertProvider::Shared { cache, blocking } => {
-                let real_bytes = self.bundle.weights.expert_bytes(block, expert)?;
-                let mut guard = cache.lock().unwrap();
-                let (resident, _hit, secs) = guard.ensure(key, real_bytes, *blocking, fetch)?;
-                times.transfer_secs += secs;
-                guard.pin(key);
-                Some(resident)
-            }
-            _ => None,
-        };
-
-        let t0 = Instant::now();
-        let out = match provider {
-            ExpertProvider::AllResident(map) => {
-                let parts = map
-                    .get(&key)
-                    .with_context(|| format!("expert {key:?} not staged"))?;
-                let x_buf = self.bundle.engine.stage_f32(&[bucket, d], &packed)?;
-                let bufs: Vec<&DeviceBuffer> =
-                    vec![&x_buf, &parts[0], &parts[1], &parts[2], &parts[3]];
-                exe.run_buffers(&bufs)?
-            }
-            ExpertProvider::Cached { cache, .. } => {
-                let resident = resident_for_cache.as_ref().unwrap();
-                let x_buf = self.bundle.engine.stage_f32(&[bucket, d], &packed)?;
-                let bufs: Vec<&DeviceBuffer> = vec![
-                    &x_buf,
-                    &resident.parts[0],
-                    &resident.parts[1],
-                    &resident.parts[2],
-                    &resident.parts[3],
-                ];
-                let out = exe.run_buffers(&bufs)?;
-                cache.unpin(&key);
-                out
-            }
-            ExpertProvider::Shared { cache, .. } => {
-                let resident = resident_for_cache.as_ref().unwrap();
-                let x_buf = self.bundle.engine.stage_f32(&[bucket, d], &packed)?;
-                let bufs: Vec<&DeviceBuffer> = vec![
-                    &x_buf,
-                    &resident.parts[0],
-                    &resident.parts[1],
-                    &resident.parts[2],
-                    &resident.parts[3],
-                ];
-                let out = exe.run_buffers(&bufs)?;
-                cache.lock().unwrap().unpin(&key);
-                out
-            }
-            ExpertProvider::HostLiterals => {
-                let names = crate::runtime::WeightStore::expert_part_names(block, expert);
-                let x_lit = literal_from_f32s(&[bucket, d], &packed)?;
-                let owned = [
-                    x_lit,
-                    self.bundle.weights.literal(&names[0])?,
-                    self.bundle.weights.literal(&names[1])?,
-                    self.bundle.weights.literal(&names[2])?,
-                    self.bundle.weights.literal(&names[3])?,
-                ];
-                let args: Vec<&Literal> = owned.iter().collect();
-                exe.run(&args)?
+            other => {
+                let par = match &*other {
+                    ExpertProvider::AllResident(map) => ParProvider::AllResident(*map),
+                    ExpertProvider::Shared { cache, blocking } => {
+                        ParProvider::Shared { cache: *cache, blocking: *blocking }
+                    }
+                    ExpertProvider::HostLiterals => ParProvider::HostLiterals,
+                    ExpertProvider::Cached { .. } => unreachable!("handled above"),
+                };
+                let indices: Vec<usize> = (0..jobs.len()).collect();
+                self.pool.run(indices, |_slot, i| {
+                    let job = &jobs[i];
+                    self.compute_expert_rows(
+                        block, job.expert, xlns, &job.rows, &par, fixed_bucket,
+                    )
+                })
             }
         };
-        times.expert_secs += t0.elapsed().as_secs_f64();
-        times.expert_invocations += 1;
+        times.expert_wall_secs += t_wall.elapsed().as_secs_f64();
 
-        // scatter weighted rows back
-        let y = to_f32_vec(&out[0])?;
-        for (r, row) in rows.iter().enumerate() {
-            let dst = &mut y_accs[row.item][row.token * d..(row.token + 1) * d];
-            let src = &y[r * d..(r + 1) * d];
-            for (o, v) in dst.iter_mut().zip(src.iter()) {
-                *o += row.alpha * v;
+        let t_scatter = Instant::now();
+        for (job, out) in jobs.iter().zip(outs) {
+            let out = out?;
+            times.transfer_secs += out.transfer_secs;
+            times.expert_secs += out.dispatch_secs;
+            times.expert_invocations += out.invocations;
+            for (r, row) in job.rows.iter().enumerate() {
+                let dst = &mut y_accs[row.item][row.token * d..(row.token + 1) * d];
+                let src = &out.y[r * d..(r + 1) * d];
+                for (o, v) in dst.iter_mut().zip(src.iter()) {
+                    *o += row.alpha * v;
+                }
             }
         }
+        times.scatter_secs += t_scatter.elapsed().as_secs_f64();
         Ok(())
+    }
+
+    /// Build the deterministic job list for one layer from the
+    /// expert -> rows map (ascending expert order; with `invoke_all`
+    /// every expert gets a job, idle experts a zero-alpha placeholder).
+    fn jobs_from_union(
+        &self,
+        mut union: BTreeMap<usize, Vec<GatheredRow>>,
+        invoke_all: bool,
+    ) -> Vec<ExpertJob> {
+        if invoke_all {
+            (0..self.bundle.topology.num_experts)
+                .map(|expert| ExpertJob {
+                    expert,
+                    rows: union.remove(&expert).unwrap_or_else(|| {
+                        vec![GatheredRow { item: 0, token: 0, alpha: 0.0 }]
+                    }),
+                })
+                .collect()
+        } else {
+            union
+                .into_iter()
+                .map(|(expert, rows)| ExpertJob { expert, rows })
+                .collect()
+        }
     }
 
     /// Run one MoE layer given a routing decision.  The decision's
@@ -574,59 +856,40 @@ impl ModelRunner {
         let d = topo.d_model;
         let l = self.seq_len;
         let xln = self.run_moe_ln(x, block)?;
+
+        let t_gather = Instant::now();
         let xln_host = to_f32_vec(&xln)?;
         let mut y_acc = vec![0f32; l * d];
-        let per_expert = routing.tokens_per_expert(mask_host);
-
-        let gather = |assignments: &[(usize, f32)]| -> Vec<GatheredRow> {
-            assignments
-                .iter()
-                .map(|&(t, a)| GatheredRow { item: 0, token: t, alpha: a })
-                .collect()
-        };
-        if opts.invoke_all {
-            // the paper's default implementation: every expert is invoked
-            // whether or not tokens were assigned to it (§2.3)
-            for expert in 0..topo.num_experts {
-                let assignments = per_expert
-                    .get(&expert)
-                    .cloned()
-                    .unwrap_or_else(|| vec![(0usize, 0.0f32)]);
-                self.invoke_expert_gathered(
-                    block,
-                    expert,
-                    std::slice::from_ref(&xln_host),
-                    &gather(&assignments),
-                    std::slice::from_mut(&mut y_acc),
-                    provider,
-                    opts.fixed_bucket,
-                    times,
-                )?;
-            }
-        } else {
-            for (expert, assignments) in per_expert.iter() {
-                self.invoke_expert_gathered(
-                    block,
-                    *expert,
-                    std::slice::from_ref(&xln_host),
-                    &gather(assignments),
-                    std::slice::from_mut(&mut y_acc),
-                    provider,
-                    opts.fixed_bucket,
-                    times,
-                )?;
-            }
+        let mut union: BTreeMap<usize, Vec<GatheredRow>> = BTreeMap::new();
+        for (expert, assigns) in routing.tokens_per_expert(mask_host) {
+            union.insert(
+                expert,
+                assigns
+                    .iter()
+                    .map(|&(t, a)| GatheredRow { item: 0, token: t, alpha: a })
+                    .collect(),
+            );
         }
+        let jobs = self.jobs_from_union(union, opts.invoke_all);
+        times.gather_secs += t_gather.elapsed().as_secs_f64();
+
+        self.run_expert_set(
+            block,
+            &jobs,
+            std::slice::from_ref(&xln_host),
+            std::slice::from_mut(&mut y_acc),
+            provider,
+            opts.fixed_bucket,
+            times,
+        )?;
 
         let y_lit = literal_from_f32s(&[1, l, d], &y_acc)?;
         let ones = literal_from_f32s(&[1, l], &vec![1.0f32; l])?;
-        let out = self
-            .exe_combine
-            .run(&[x, &y_lit, &ones, mask_lit])?;
+        let out = self.exe_combine.run(&[x, &y_lit, &ones, mask_lit])?;
         Ok(out.into_iter().next().unwrap())
     }
 
-    /// Full forward pass.  `routing_for` supplies the per-MoE-layer
+    /// Full forward pass.  `hash_routing` supplies the per-MoE-layer
     /// decision: SiDA reads the hash table; baselines run the router
     /// (passing `None` here runs the router on the fly).
     pub fn forward(
@@ -636,7 +899,20 @@ impl ModelRunner {
         provider: &mut ExpertProvider<'_>,
         opts: ForwardOptions,
     ) -> Result<ForwardOutput> {
-        let topo = self.bundle.topology.clone();
+        self.forward_hooked(ids, hash_routing, provider, opts, ForwardHooks::default())
+    }
+
+    /// [`ModelRunner::forward`] with out-of-band hooks (layer-gate
+    /// coupling to a layer-ahead warmer — see [`ForwardHooks`]).
+    pub fn forward_hooked(
+        &self,
+        ids: &[i32],
+        hash_routing: Option<(&HashTable, usize)>,
+        provider: &mut ExpertProvider<'_>,
+        opts: ForwardOptions,
+        hooks: ForwardHooks<'_>,
+    ) -> Result<ForwardOutput> {
+        let topo = &self.bundle.topology;
         if ids.len() != self.seq_len {
             bail!("ids len {} != seq_len {}", ids.len(), self.seq_len);
         }
@@ -674,6 +950,13 @@ impl ModelRunner {
                     };
                     times.selection_secs += t_sel.elapsed().as_secs_f64();
 
+                    // layer gate: wait until the layer-ahead warmer has
+                    // staged this layer (measured warm-up stall on the
+                    // critical path)
+                    if let Some(gate) = hooks.layer_gate {
+                        times.stall_secs += gate.begin_layer(moe_layer);
+                    }
+
                     x = self.run_moe_layer(
                         &x, &mask_host, &mask_lit, block, &routing, provider, opts, &mut times,
                     )?;
@@ -688,10 +971,10 @@ impl ModelRunner {
         if opts.want_lm {
             let out = self.exe_lm_head.run(&[
                 &x,
-                self.lit("final_ln_g")?,
-                self.lit("final_ln_b")?,
-                self.lit("lm_head.w")?,
-                self.lit("lm_head.b")?,
+                &self.head.final_ln_g,
+                &self.head.final_ln_b,
+                &self.head.lm_w,
+                &self.head.lm_b,
             ])?;
             lm_logits = Some(to_f32_vec(&out[0])?);
         }
@@ -699,10 +982,10 @@ impl ModelRunner {
             let out = self.exe_cls_head.run(&[
                 &x,
                 &mask_lit,
-                self.lit("final_ln_g")?,
-                self.lit("final_ln_b")?,
-                self.lit("cls_head.w")?,
-                self.lit("cls_head.b")?,
+                &self.head.final_ln_g,
+                &self.head.final_ln_b,
+                &self.head.cls_w,
+                &self.head.cls_b,
             ])?;
             cls_logits = Some(to_f32_vec(&out[0])?);
         }
@@ -727,24 +1010,37 @@ impl ModelRunner {
     /// else as a per-request loop — while every MoE layer **gathers the
     /// tokens routed to the same expert across the whole batch and
     /// issues one expert invocation per activated expert**, not one per
-    /// request.  Each expert's residency is ensured (and its H2D
+    /// request.  The activated experts run concurrently on the runner's
+    /// worker pool.  Each expert's residency is ensured (and its H2D
     /// transfer charged) once per batch, which is where the paper's
     /// batch-level amortization of expert traffic comes from.
     ///
     /// Outputs are bit-identical to running [`ModelRunner::forward`] on
     /// each request sequentially: the expert FFN computes packed rows
     /// independently, and per-token accumulation order is preserved
-    /// (experts ascending, tokens in sequence order).  Per-request
-    /// `times` in the returned outputs are zeroed — under shared
-    /// dispatch per-request phase attribution is not meaningful; use
-    /// the batch-level [`BatchForwardOutput::times`].
+    /// (experts ascending, tokens in sequence order, scattered on the
+    /// calling thread after the pool joins).  Per-request `times` in
+    /// the returned outputs are zeroed — under shared dispatch
+    /// per-request phase attribution is not meaningful; use the
+    /// batch-level [`BatchForwardOutput::times`].
     pub fn forward_batch(
         &self,
         items: &[BatchItem<'_>],
         provider: &mut ExpertProvider<'_>,
         opts: ForwardOptions,
     ) -> Result<BatchForwardOutput> {
-        let topo = self.bundle.topology.clone();
+        self.forward_batch_hooked(items, provider, opts, ForwardHooks::default())
+    }
+
+    /// [`ModelRunner::forward_batch`] with out-of-band hooks.
+    pub fn forward_batch_hooked(
+        &self,
+        items: &[BatchItem<'_>],
+        provider: &mut ExpertProvider<'_>,
+        opts: ForwardOptions,
+        hooks: ForwardHooks<'_>,
+    ) -> Result<BatchForwardOutput> {
+        let topo = &self.bundle.topology;
         let n = items.len();
         anyhow::ensure!(n > 0, "forward_batch: empty batch");
         for it in items {
@@ -813,6 +1109,11 @@ impl ModelRunner {
                     }
                     times.selection_secs += t_sel.elapsed().as_secs_f64();
 
+                    if let Some(gate) = hooks.layer_gate {
+                        times.stall_secs += gate.begin_layer(moe_layer);
+                    }
+
+                    let t_gather = Instant::now();
                     let mut y_accs: Vec<Vec<f32>> =
                         (0..n).map(|_| vec![0f32; l * d]).collect();
                     let mut union: BTreeMap<usize, Vec<GatheredRow>> = BTreeMap::new();
@@ -825,24 +1126,19 @@ impl ModelRunner {
                             );
                         }
                     }
-                    if opts.invoke_all {
-                        for expert in 0..topo.num_experts {
-                            let rows = union.remove(&expert).unwrap_or_else(|| {
-                                vec![GatheredRow { item: 0, token: 0, alpha: 0.0 }]
-                            });
-                            self.invoke_expert_gathered(
-                                block, expert, &xln_hosts, &rows, &mut y_accs, provider,
-                                opts.fixed_bucket, &mut times,
-                            )?;
-                        }
-                    } else {
-                        for (expert, rows) in union.iter() {
-                            self.invoke_expert_gathered(
-                                block, *expert, &xln_hosts, rows, &mut y_accs, provider,
-                                opts.fixed_bucket, &mut times,
-                            )?;
-                        }
-                    }
+                    let jobs = self.jobs_from_union(union, opts.invoke_all);
+                    times.gather_secs += t_gather.elapsed().as_secs_f64();
+
+                    self.run_expert_set(
+                        block,
+                        &jobs,
+                        &xln_hosts,
+                        &mut y_accs,
+                        provider,
+                        opts.fixed_bucket,
+                        &mut times,
+                    )?;
+
                     xs = self.combine_many(&xs, &y_accs, &mask_lits, mask_stack.as_ref())?;
                     for (i, routing) in routings.into_iter().enumerate() {
                         routing_used[i].push(routing);
@@ -861,10 +1157,10 @@ impl ModelRunner {
             if opts.want_lm {
                 let out = self.exe_lm_head.run(&[
                     x,
-                    self.lit("final_ln_g")?,
-                    self.lit("final_ln_b")?,
-                    self.lit("lm_head.w")?,
-                    self.lit("lm_head.b")?,
+                    &self.head.final_ln_g,
+                    &self.head.final_ln_b,
+                    &self.head.lm_w,
+                    &self.head.lm_b,
                 ])?;
                 lm_logits = Some(to_f32_vec(&out[0])?);
             }
@@ -872,10 +1168,10 @@ impl ModelRunner {
                 let out = self.exe_cls_head.run(&[
                     x,
                     &mask_lits[i],
-                    self.lit("final_ln_g")?,
-                    self.lit("final_ln_b")?,
-                    self.lit("cls_head.w")?,
-                    self.lit("cls_head.b")?,
+                    &self.head.final_ln_g,
+                    &self.head.final_ln_b,
+                    &self.head.cls_w,
+                    &self.head.cls_b,
                 ])?;
                 cls_logits = Some(to_f32_vec(&out[0])?);
             }
@@ -903,7 +1199,7 @@ impl ModelRunner {
             let ids_lit = literal_i32(&[items.len(), l], &ids)?;
             let out = self
                 .exe_embed
-                .run(&[&ids_lit, self.lit("embed.tok")?, &self.pos_lit])?;
+                .run(&[&ids_lit, &self.head.embed_tok, &self.pos_lit])?;
             split_f32(&out[0])
         } else {
             items.iter().map(|it| self.embed(it.ids)).collect()

@@ -39,14 +39,16 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::batcher::{AdmitOutcome, BatchFormer, BatchPolicy, FormedBatch};
+use crate::coordinator::hash_table::HashTable;
 use crate::coordinator::hash_thread::HashBuilder;
-use crate::coordinator::pipeline::argmax;
-use crate::experts::{make_policy, ExpertCache};
+use crate::coordinator::pipeline::{argmax, run_gated_forward};
+use crate::experts::{make_policy, ExpertCache, SharedExpertCache};
 use crate::memory::CostModel;
 use crate::metrics::BatchingStats;
 use crate::model::{BatchItem, ExpertProvider, ForwardOptions, ModelRunner};
 use crate::runtime::ModelBundle;
 use crate::util::json::{obj, Json};
+use crate::util::pool::WorkerPool;
 use crate::workload::Request;
 
 /// Front-end tuning knobs.
@@ -58,6 +60,8 @@ pub struct ServerConfig {
     pub k_used: usize,
     /// batch-forming policy (size/deadline/queue bound)
     pub batch: BatchPolicy,
+    /// worker-pool width for concurrent expert execution (0 = auto)
+    pub pool_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -66,6 +70,7 @@ impl Default for ServerConfig {
             budget_sim_bytes: 8 << 30,
             k_used: 1,
             batch: BatchPolicy::default(),
+            pool_threads: 0,
         }
     }
 }
@@ -87,7 +92,7 @@ type ReplyOutcome = std::result::Result<Reply, String>;
 pub struct ServerState {
     pub runner: ModelRunner,
     pub hash: HashBuilder,
-    pub cache: Mutex<ExpertCache>,
+    pub cache: SharedExpertCache,
     pub k_used: usize,
     /// the single shared admission queue all connections feed
     queue: Mutex<BatchFormer<Sender<ReplyOutcome>>>,
@@ -105,10 +110,11 @@ pub struct ServerState {
 
 impl ServerState {
     pub fn new(bundle: Arc<ModelBundle>, profile: &str, cfg: ServerConfig) -> Result<Self> {
-        let runner = ModelRunner::new(bundle.clone(), profile)?;
+        let pool = WorkerPool::from_config(cfg.pool_threads);
+        let runner = ModelRunner::with_pool(bundle.clone(), profile, pool)?;
         let hash = HashBuilder::new(&bundle, profile)?;
         let real = bundle.weights.expert_bytes(bundle.topology.moe_blocks[0], 0)?;
-        let cache = Mutex::new(ExpertCache::new(
+        let cache = SharedExpertCache::new(ExpertCache::new(
             cfg.budget_sim_bytes,
             CostModel::paper_scale(real),
             make_policy("fifo")?,
@@ -229,6 +235,12 @@ fn next_batch(state: &ServerState) -> Option<FormedBatch<Sender<ReplyOutcome>>> 
 
 /// Hash-build + batched forward for one formed batch; returns the
 /// per-request labels in batch order.
+///
+/// The forward runs gated against a layer-ahead warmer (same machinery
+/// as `Pipeline::serve_batched`): while the batch computes MoE layer
+/// *j*, the warmer stages layer *j+1*'s batch-union expert set, so
+/// expert fetches ride the overlapped prefetch timeline instead of
+/// stalling the shared worker.
 fn run_batch(
     state: &ServerState,
     batch: &FormedBatch<Sender<ReplyOutcome>>,
@@ -237,6 +249,7 @@ fn run_batch(
     for (req, _) in &batch.requests {
         tables.push(state.hash.build(req.id, &req.ids)?);
     }
+    let masks: Vec<Vec<f32>> = batch.requests.iter().map(|(req, _)| req.mask()).collect();
     let items: Vec<BatchItem<'_>> = batch
         .requests
         .iter()
@@ -246,11 +259,20 @@ fn run_batch(
             hash: Some((table, state.k_used)),
         })
         .collect();
+    let pairs: Vec<(&HashTable, &[f32])> = tables
+        .iter()
+        .zip(masks.iter())
+        .map(|(table, mask)| (table, mask.as_slice()))
+        .collect();
     let mut provider = ExpertProvider::Shared { cache: &state.cache, blocking: true };
-    let out = state.runner.forward_batch(
-        &items,
-        &mut provider,
-        ForwardOptions { want_cls: true, ..Default::default() },
+    let opts = ForwardOptions { want_cls: true, ..Default::default() };
+    let out = run_gated_forward(
+        &state.runner.bundle,
+        &state.cache,
+        &pairs,
+        &state.runner.bundle.topology.moe_blocks,
+        state.k_used,
+        |hooks| state.runner.forward_batch_hooked(&items, &mut provider, opts, hooks),
     )?;
     Ok(out
         .outputs
@@ -335,8 +357,7 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
                             b.inference.mean() * 1e3,
                         )
                     };
-                    let cache = state.cache.lock().unwrap();
-                    let cs = cache.stats().clone();
+                    let cs = state.cache.stats();
                     writeln!(
                         writer,
                         "{}",
@@ -350,7 +371,11 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
                             ("infer_ms_mean", Json::Num(infer_ms)),
                             ("cache_hits", Json::Num(cs.hits as f64)),
                             ("cache_misses", Json::Num(cs.misses as f64)),
-                            ("device_used_bytes", Json::Num(cache.used() as f64)),
+                            (
+                                "transfer_overlapped_secs",
+                                Json::Num(cs.overlapped_transfer_secs),
+                            ),
+                            ("device_used_bytes", Json::Num(state.cache.used() as f64)),
                         ])
                     )?;
                 }

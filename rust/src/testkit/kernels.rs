@@ -1,0 +1,516 @@
+//! Allocation-free compute kernels for the reference backend.
+//!
+//! The historical `RefBackend` kernels allocated every intermediate
+//! (`Vec<f32>` per matmul/layernorm/FFN stage) on every dispatch — a
+//! malloc/free storm on the serving hot loop.  This module provides:
+//!
+//! * [`ScratchArena`] — a per-thread free-list of reusable `f32`
+//!   buffers.  Intermediates (`xln`, Q/K/V, FFN hidden, transposed
+//!   weights) are taken from and returned to the arena, so a steady-
+//!   state dispatch performs **zero heap allocations for
+//!   intermediates**; only the entry's output buffer (which must be
+//!   moved into a `Literal`) is freshly allocated.  The zero-alloc
+//!   steady state holds per **long-lived thread** (the inference
+//!   thread, the hash thread, pool width 1); scoped pool workers are
+//!   fresh OS threads per layer, so their arenas start cold — a
+//!   persistent worker pool would extend the reuse there (tracked in
+//!   ROADMAP.md).
+//! * `*_into` kernels (`matmul_into`, `layer_norm_into`, `ffn_into`,
+//!   `attention_into`) that write into caller-provided buffers, plus a
+//!   **blocked, transposed-weight matmul microkernel**.
+//!
+//! ## Bit-identity contract
+//!
+//! Every kernel here produces **bit-identical** f32 results to the
+//! historical naive kernels.  For the matmul this is by construction:
+//! for each output element `(r, c)` the accumulator starts at `+0.0`
+//! and receives exactly the terms `x[r,k] * w[k,c]` for `k` ascending,
+//! skipping `x[r,k] == 0.0` terms (the same skip the naive kernel
+//! performed) — a single well-defined f32 addition chain.  The
+//! transposed layout and the row/column blocking only change *memory
+//! access order*, never the per-element accumulation order, so the
+//! result is the same bits.  `tests` below compare the microkernel
+//! against an unblocked reference with exact equality.
+
+use std::cell::RefCell;
+
+pub(crate) const LN_EPS: f32 = 1e-6;
+
+/// Per-thread free-list of reusable `f32` buffers.
+pub struct ScratchArena {
+    free: Vec<Vec<f32>>,
+}
+
+impl ScratchArena {
+    pub fn new() -> Self {
+        ScratchArena { free: Vec::new() }
+    }
+
+    /// A zero-filled buffer of `len` values, reusing a previously
+    /// returned allocation when one exists.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Return a buffer for reuse.
+    pub fn put(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 {
+            self.free.push(v);
+        }
+    }
+}
+
+impl Default for ScratchArena {
+    fn default() -> Self {
+        ScratchArena::new()
+    }
+}
+
+thread_local! {
+    static ARENA: RefCell<ScratchArena> = RefCell::new(ScratchArena::new());
+}
+
+/// Run `f` with this thread's arena.  MUST NOT be nested (the arena is
+/// a `RefCell`); kernels therefore take `&mut ScratchArena` parameters
+/// instead of re-entering.
+pub fn with_arena<R>(f: impl FnOnce(&mut ScratchArena) -> R) -> R {
+    ARENA.with(|a| f(&mut a.borrow_mut()))
+}
+
+// ---------------------------------------------------------------------------
+// kernels
+// ---------------------------------------------------------------------------
+
+/// Row-count threshold at which transposing the weight into scratch
+/// (one `O(inner*cols)` pass) pays for the contiguous dot-product
+/// access it buys; below it the naive row-major kernel wins.
+const TRANSPOSE_MIN_ROWS: usize = 4;
+/// Output-row tile: each transposed weight column is streamed once per
+/// tile instead of once per row.
+const ROW_TILE: usize = 4;
+
+/// `x [rows, inner] @ w [inner, cols] -> out [rows, cols]`.
+///
+/// Dispatches between the blocked transposed-weight microkernel (large
+/// row counts) and the naive reference kernel (small ones); both are
+/// bit-identical (see module docs).  `out` is fully overwritten.
+pub fn matmul_into(
+    out: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+    arena: &mut ScratchArena,
+) {
+    debug_assert_eq!(out.len(), rows * cols);
+    if rows >= TRANSPOSE_MIN_ROWS {
+        // blocked, transposed-weight microkernel: wt[c][k] = w[k][c]
+        let mut wt = arena.take(inner * cols);
+        for k in 0..inner {
+            let wrow = &w[k * cols..(k + 1) * cols];
+            for (c, &v) in wrow.iter().enumerate() {
+                wt[c * inner + k] = v;
+            }
+        }
+        let mut r0 = 0;
+        while r0 < rows {
+            let r1 = (r0 + ROW_TILE).min(rows);
+            for c in 0..cols {
+                let wcol = &wt[c * inner..(c + 1) * inner];
+                for r in r0..r1 {
+                    let xrow = &x[r * inner..(r + 1) * inner];
+                    // single accumulator, k ascending, zero-x skip:
+                    // exactly the naive kernel's addition chain
+                    let mut acc = 0f32;
+                    for k in 0..inner {
+                        let xv = xrow[k];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        acc += xv * wcol[k];
+                    }
+                    out[r * cols + c] = acc;
+                }
+            }
+            r0 = r1;
+        }
+        arena.put(wt);
+    } else {
+        for v in out.iter_mut() {
+            *v = 0.0;
+        }
+        for r in 0..rows {
+            let xrow = &x[r * inner..(r + 1) * inner];
+            let orow = &mut out[r * cols..(r + 1) * cols];
+            for (kk, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[kk * cols..(kk + 1) * cols];
+                for c in 0..cols {
+                    orow[c] += xv * wrow[c];
+                }
+            }
+            // zero x-values skipped above contribute exactly 0.0 in f32,
+            // so the skip is a pure speedup with identical results
+        }
+    }
+}
+
+/// Allocating wrapper (oracle / cold paths).
+pub fn matmul(x: &[f32], w: &[f32], rows: usize, inner: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0f32; rows * cols];
+    let mut arena = ScratchArena::new();
+    matmul_into(&mut out, x, w, rows, inner, cols, &mut arena);
+    out
+}
+
+pub fn add_bias(y: &mut [f32], rows: usize, cols: usize, b: &[f32]) {
+    for r in 0..rows {
+        let row = &mut y[r * cols..(r + 1) * cols];
+        for c in 0..cols {
+            row[c] += b[c];
+        }
+    }
+}
+
+pub fn layer_norm_into(out: &mut [f32], x: &[f32], rows: usize, d: usize, g: &[f32], b: &[f32]) {
+    debug_assert_eq!(out.len(), rows * d);
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        let mut mu = 0f32;
+        for &v in row {
+            mu += v;
+        }
+        mu /= d as f32;
+        let mut var = 0f32;
+        for &v in row {
+            let c = v - mu;
+            var += c * c;
+        }
+        var /= d as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        let dst = &mut out[r * d..(r + 1) * d];
+        for j in 0..d {
+            dst[j] = (row[j] - mu) * inv * g[j] + b[j];
+        }
+    }
+}
+
+/// Allocating wrapper (oracle / cold paths).
+pub fn layer_norm(x: &[f32], rows: usize, d: usize, g: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; rows * d];
+    layer_norm_into(&mut out, x, rows, d, g, b);
+    out
+}
+
+pub fn softmax_inplace(v: &mut [f32]) {
+    let mut mx = f32::NEG_INFINITY;
+    for &x in v.iter() {
+        if x > mx {
+            mx = x;
+        }
+    }
+    let mut sum = 0f32;
+    for x in v.iter_mut() {
+        *x = (*x - mx).exp();
+        sum += *x;
+    }
+    for x in v.iter_mut() {
+        *x /= sum;
+    }
+}
+
+pub fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// relu((x @ w1) + b1) @ w2 + b2 on [rows, d] tokens — the expert /
+/// dense-FFN body (no residual).  `out` is `[rows, d]`, fully written.
+#[allow(clippy::too_many_arguments)]
+pub fn ffn_into(
+    out: &mut [f32],
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    f: usize,
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    b2: &[f32],
+    arena: &mut ScratchArena,
+) {
+    let mut h = arena.take(rows * f);
+    matmul_into(&mut h, x, w1, rows, d, f, arena);
+    add_bias(&mut h, rows, f, b1);
+    for v in h.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+    matmul_into(out, &h, w2, rows, f, d, arena);
+    add_bias(out, rows, d, b2);
+    arena.put(h);
+}
+
+/// Allocating wrapper (oracle / cold paths).
+#[allow(clippy::too_many_arguments)]
+pub fn ffn(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    f: usize,
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    b2: &[f32],
+) -> Vec<f32> {
+    let mut out = vec![0f32; rows * d];
+    let mut arena = ScratchArena::new();
+    ffn_into(&mut out, x, rows, d, f, w1, b1, w2, b2, &mut arena);
+    out
+}
+
+/// Pre-LN causal multi-head attention with pad masking + residual
+/// (entry_attn semantics).  x: `[L, D]` (one sequence), mask: `[L]`,
+/// out: `[L, D]` fully written.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_into(
+    out: &mut [f32],
+    x: &[f32],
+    mask: &[f32],
+    l: usize,
+    d: usize,
+    n_heads: usize,
+    ln_g: &[f32],
+    ln_b: &[f32],
+    wq: &[f32],
+    bq: &[f32],
+    wk: &[f32],
+    bk: &[f32],
+    wv: &[f32],
+    bv: &[f32],
+    wo: &[f32],
+    bo: &[f32],
+    arena: &mut ScratchArena,
+) {
+    let hd = d / n_heads;
+    let mut xln = arena.take(l * d);
+    layer_norm_into(&mut xln, x, l, d, ln_g, ln_b);
+    let mut q = arena.take(l * d);
+    matmul_into(&mut q, &xln, wq, l, d, d, arena);
+    add_bias(&mut q, l, d, bq);
+    let mut k = arena.take(l * d);
+    matmul_into(&mut k, &xln, wk, l, d, d, arena);
+    add_bias(&mut k, l, d, bk);
+    let mut v = arena.take(l * d);
+    matmul_into(&mut v, &xln, wv, l, d, d, arena);
+    add_bias(&mut v, l, d, bv);
+
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut o = arena.take(l * d);
+    let mut scores = arena.take(l);
+    for head in 0..n_heads {
+        let off = head * hd;
+        for lq in 0..l {
+            for lk in 0..l {
+                let mut dot = 0f32;
+                for e in 0..hd {
+                    dot += q[lq * d + off + e] * k[lk * d + off + e];
+                }
+                let causal = if lk <= lq { 1.0f32 } else { 0.0 };
+                scores[lk] = dot * scale + (causal * mask[lk] - 1.0) * 1e9;
+            }
+            softmax_inplace(&mut scores);
+            for e in 0..hd {
+                let mut acc = 0f32;
+                for lk in 0..l {
+                    acc += scores[lk] * v[lk * d + off + e];
+                }
+                o[lq * d + off + e] = acc;
+            }
+        }
+    }
+    let mut proj = arena.take(l * d);
+    matmul_into(&mut proj, &o, wo, l, d, d, arena);
+    add_bias(&mut proj, l, d, bo);
+    for i in 0..l * d {
+        out[i] = proj[i] + x[i];
+    }
+    arena.put(proj);
+    arena.put(scores);
+    arena.put(o);
+    arena.put(v);
+    arena.put(k);
+    arena.put(q);
+    arena.put(xln);
+}
+
+/// Allocating wrapper (oracle / cold paths).
+#[allow(clippy::too_many_arguments)]
+pub fn attention(
+    x: &[f32],
+    mask: &[f32],
+    l: usize,
+    d: usize,
+    n_heads: usize,
+    ln_g: &[f32],
+    ln_b: &[f32],
+    wq: &[f32],
+    bq: &[f32],
+    wk: &[f32],
+    bk: &[f32],
+    wv: &[f32],
+    bv: &[f32],
+    wo: &[f32],
+    bo: &[f32],
+) -> Vec<f32> {
+    let mut out = vec![0f32; l * d];
+    let mut arena = ScratchArena::new();
+    attention_into(
+        &mut out, x, mask, l, d, n_heads, ln_g, ln_b, wq, bq, wk, bk, wv, bv, wo, bo,
+        &mut arena,
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The historical naive kernel, kept verbatim as the bit-identity
+    /// reference for the microkernel.
+    fn matmul_reference(x: &[f32], w: &[f32], rows: usize, inner: usize, cols: usize) -> Vec<f32> {
+        let mut out = vec![0f32; rows * cols];
+        for r in 0..rows {
+            let xrow = &x[r * inner..(r + 1) * inner];
+            let orow = &mut out[r * cols..(r + 1) * cols];
+            for (kk, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[kk * cols..(kk + 1) * cols];
+                for c in 0..cols {
+                    orow[c] += xv * wrow[c];
+                }
+            }
+        }
+        out
+    }
+
+    fn random_vec(rng: &mut Rng, n: usize, zero_rate: f64) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if rng.bool(zero_rate) {
+                    0.0
+                } else {
+                    (rng.f64() as f32 - 0.5) * 2.0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn transposed_microkernel_is_bit_identical_to_reference() {
+        let mut rng = Rng::new(7);
+        // shapes straddling the blocking/transpose thresholds, with and
+        // without zero inputs (the skip path)
+        for &(rows, inner, cols) in
+            &[(1, 5, 3), (3, 8, 8), (4, 16, 4), (8, 32, 16), (17, 9, 13), (32, 16, 64)]
+        {
+            for &zero_rate in &[0.0, 0.4] {
+                let x = random_vec(&mut rng, rows * inner, zero_rate);
+                let w = random_vec(&mut rng, inner * cols, 0.0);
+                let want = matmul_reference(&x, &w, rows, inner, cols);
+                let got = matmul(&x, &w, rows, inner, cols);
+                assert_eq!(want, got, "rows={rows} inner={inner} cols={cols} zr={zero_rate}");
+                // dirty output buffer must be fully overwritten too
+                let mut dirty = vec![9.5f32; rows * cols];
+                let mut arena = ScratchArena::new();
+                matmul_into(&mut dirty, &x, &w, rows, inner, cols, &mut arena);
+                assert_eq!(want, dirty);
+            }
+        }
+    }
+
+    #[test]
+    fn arena_reuses_capacity() {
+        let mut arena = ScratchArena::new();
+        let mut v = arena.take(1024);
+        v[0] = 3.0;
+        let ptr = v.as_ptr();
+        arena.put(v);
+        let v2 = arena.take(512);
+        assert_eq!(v2.as_ptr(), ptr, "arena must hand back the same allocation");
+        assert!(v2.iter().all(|&x| x == 0.0), "reused buffers are zeroed");
+        assert_eq!(v2.len(), 512);
+    }
+
+    #[test]
+    fn ffn_into_matches_wrapper_and_is_relu_correct() {
+        let mut rng = Rng::new(11);
+        let (rows, d, f) = (6, 8, 16);
+        let x = random_vec(&mut rng, rows * d, 0.2);
+        let w1 = random_vec(&mut rng, d * f, 0.0);
+        let b1 = random_vec(&mut rng, f, 0.0);
+        let w2 = random_vec(&mut rng, f * d, 0.0);
+        let b2 = random_vec(&mut rng, d, 0.0);
+        let want = ffn(&x, rows, d, f, &w1, &b1, &w2, &b2);
+        let mut got = vec![7.0f32; rows * d];
+        let mut arena = ScratchArena::new();
+        ffn_into(&mut got, &x, rows, d, f, &w1, &b1, &w2, &b2, &mut arena);
+        assert_eq!(want, got);
+        // manual reference
+        let mut h = matmul_reference(&x, &w1, rows, d, f);
+        add_bias(&mut h, rows, f, &b1);
+        for v in h.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let mut y = matmul_reference(&h, &w2, rows, f, d);
+        add_bias(&mut y, rows, d, &b2);
+        assert_eq!(want, y);
+    }
+
+    #[test]
+    fn layer_norm_into_overwrites_dirty_buffers() {
+        let mut rng = Rng::new(3);
+        let (rows, d) = (4, 8);
+        let x = random_vec(&mut rng, rows * d, 0.0);
+        let g = random_vec(&mut rng, d, 0.0);
+        let b = random_vec(&mut rng, d, 0.0);
+        let want = layer_norm(&x, rows, d, &g, &b);
+        let mut dirty = vec![-2.0f32; rows * d];
+        layer_norm_into(&mut dirty, &x, rows, d, &g, &b);
+        assert_eq!(want, dirty);
+    }
+
+    #[test]
+    fn with_arena_provides_thread_local_scratch() {
+        let a = with_arena(|arena| {
+            let v = arena.take(64);
+            let p = v.as_ptr() as usize;
+            arena.put(v);
+            p
+        });
+        let b = with_arena(|arena| {
+            let v = arena.take(64);
+            let p = v.as_ptr() as usize;
+            arena.put(v);
+            p
+        });
+        assert_eq!(a, b, "same thread reuses the same scratch buffer");
+    }
+}

@@ -15,6 +15,7 @@
 //!     sida_moe::model::ModelRunner::new(bundle, sida_moe::testkit::TINY_PROFILE).unwrap();
 //! ```
 
+pub mod kernels;
 pub mod ref_engine;
 pub mod synth;
 

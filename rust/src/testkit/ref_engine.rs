@@ -45,176 +45,15 @@ pub struct RefBackend {
 }
 
 // ---------------------------------------------------------------------------
-// shared math (f32, row-major) — used by both dispatch and the oracle
+// shared math — lives in `super::kernels` (allocation-free `_into`
+// variants over a per-thread scratch arena + allocating wrappers for
+// the oracle); re-imported here so both dispatch and the oracle use the
+// exact same, bit-identical arithmetic
 // ---------------------------------------------------------------------------
 
-const LN_EPS: f32 = 1e-6;
-
-fn layer_norm(x: &[f32], rows: usize, d: usize, g: &[f32], b: &[f32]) -> Vec<f32> {
-    let mut out = vec![0f32; rows * d];
-    for r in 0..rows {
-        let row = &x[r * d..(r + 1) * d];
-        let mut mu = 0f32;
-        for &v in row {
-            mu += v;
-        }
-        mu /= d as f32;
-        let mut var = 0f32;
-        for &v in row {
-            let c = v - mu;
-            var += c * c;
-        }
-        var /= d as f32;
-        let inv = 1.0 / (var + LN_EPS).sqrt();
-        let dst = &mut out[r * d..(r + 1) * d];
-        for j in 0..d {
-            dst[j] = (row[j] - mu) * inv * g[j] + b[j];
-        }
-    }
-    out
-}
-
-/// x [rows, inner] @ w [inner, cols] -> [rows, cols]
-fn matmul(x: &[f32], w: &[f32], rows: usize, inner: usize, cols: usize) -> Vec<f32> {
-    let mut out = vec![0f32; rows * cols];
-    for r in 0..rows {
-        let xrow = &x[r * inner..(r + 1) * inner];
-        let orow = &mut out[r * cols..(r + 1) * cols];
-        for (kk, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[kk * cols..(kk + 1) * cols];
-            for c in 0..cols {
-                orow[c] += xv * wrow[c];
-            }
-        }
-        // zero x-values skipped above contribute exactly 0.0 in f32, so
-        // the skip is a pure speedup with identical results
-    }
-    out
-}
-
-fn add_bias(y: &mut [f32], rows: usize, cols: usize, b: &[f32]) {
-    for r in 0..rows {
-        let row = &mut y[r * cols..(r + 1) * cols];
-        for c in 0..cols {
-            row[c] += b[c];
-        }
-    }
-}
-
-fn softmax_inplace(v: &mut [f32]) {
-    let mut mx = f32::NEG_INFINITY;
-    for &x in v.iter() {
-        if x > mx {
-            mx = x;
-        }
-    }
-    let mut sum = 0f32;
-    for x in v.iter_mut() {
-        *x = (*x - mx).exp();
-        sum += *x;
-    }
-    for x in v.iter_mut() {
-        *x /= sum;
-    }
-}
-
-fn argmax(v: &[f32]) -> usize {
-    let mut best = 0;
-    for (i, &x) in v.iter().enumerate() {
-        if x > v[best] {
-            best = i;
-        }
-    }
-    best
-}
-
-/// relu((x @ w1) + b1) @ w2 + b2 on [rows, d] tokens — the expert /
-/// dense-FFN body (no residual).
-fn ffn(
-    x: &[f32],
-    rows: usize,
-    d: usize,
-    f: usize,
-    w1: &[f32],
-    b1: &[f32],
-    w2: &[f32],
-    b2: &[f32],
-) -> Vec<f32> {
-    let mut h = matmul(x, w1, rows, d, f);
-    add_bias(&mut h, rows, f, b1);
-    for v in h.iter_mut() {
-        if *v < 0.0 {
-            *v = 0.0;
-        }
-    }
-    let mut y = matmul(&h, w2, rows, f, d);
-    add_bias(&mut y, rows, d, b2);
-    y
-}
-
-/// Pre-LN causal multi-head attention with pad masking + residual
-/// (entry_attn semantics).  x: `[L, D]` (one sequence), mask: `[L]`.
-#[allow(clippy::too_many_arguments)]
-fn attention(
-    x: &[f32],
-    mask: &[f32],
-    l: usize,
-    d: usize,
-    n_heads: usize,
-    ln_g: &[f32],
-    ln_b: &[f32],
-    wq: &[f32],
-    bq: &[f32],
-    wk: &[f32],
-    bk: &[f32],
-    wv: &[f32],
-    bv: &[f32],
-    wo: &[f32],
-    bo: &[f32],
-) -> Vec<f32> {
-    let hd = d / n_heads;
-    let xln = layer_norm(x, l, d, ln_g, ln_b);
-    let mut q = matmul(&xln, wq, l, d, d);
-    add_bias(&mut q, l, d, bq);
-    let mut k = matmul(&xln, wk, l, d, d);
-    add_bias(&mut k, l, d, bk);
-    let mut v = matmul(&xln, wv, l, d, d);
-    add_bias(&mut v, l, d, bv);
-
-    let scale = 1.0 / (hd as f32).sqrt();
-    let mut o = vec![0f32; l * d];
-    let mut scores = vec![0f32; l];
-    for head in 0..n_heads {
-        let off = head * hd;
-        for lq in 0..l {
-            for lk in 0..l {
-                let mut dot = 0f32;
-                for e in 0..hd {
-                    dot += q[lq * d + off + e] * k[lk * d + off + e];
-                }
-                let causal = if lk <= lq { 1.0f32 } else { 0.0 };
-                scores[lk] = dot * scale + (causal * mask[lk] - 1.0) * 1e9;
-            }
-            softmax_inplace(&mut scores);
-            for e in 0..hd {
-                let mut acc = 0f32;
-                for lk in 0..l {
-                    acc += scores[lk] * v[lk * d + off + e];
-                }
-                o[lq * d + off + e] = acc;
-            }
-        }
-    }
-    let mut proj = matmul(&o, wo, l, d, d);
-    add_bias(&mut proj, l, d, bo);
-    for i in 0..l * d {
-        proj[i] += x[i];
-    }
-    proj
-}
+use super::kernels::{
+    self, add_bias, argmax, attention, ffn, layer_norm, matmul, softmax_inplace, with_arena,
+};
 
 /// Clamp a token id into the embedding table like `jnp.take` (clip
 /// mode) does in the artifact path: negatives to 0, overflow to V-1.
@@ -495,26 +334,32 @@ impl Backend for RefBackend {
                 let bv = arg(args, 9, entry)?.f32s()?;
                 let wo = arg(args, 10, entry)?.f32s()?;
                 let bo = arg(args, 11, entry)?.f32s()?;
-                let mut out = Vec::with_capacity(b * l * d);
-                for s in 0..b {
-                    out.extend(attention(
-                        &xs[s * l * d..(s + 1) * l * d],
-                        &mask[s * l..(s + 1) * l],
-                        l,
-                        d,
-                        self.topo.n_heads,
-                        ln_g,
-                        ln_b,
-                        wq,
-                        bq,
-                        wk,
-                        bk,
-                        wv,
-                        bv,
-                        wo,
-                        bo,
-                    ));
-                }
+                // one output allocation; every intermediate (LN, Q/K/V,
+                // scores, transposed weights) comes from the arena
+                let mut out = vec![0f32; b * l * d];
+                with_arena(|arena| {
+                    for s in 0..b {
+                        kernels::attention_into(
+                            &mut out[s * l * d..(s + 1) * l * d],
+                            &xs[s * l * d..(s + 1) * l * d],
+                            &mask[s * l..(s + 1) * l],
+                            l,
+                            d,
+                            self.topo.n_heads,
+                            ln_g,
+                            ln_b,
+                            wq,
+                            bq,
+                            wk,
+                            bk,
+                            wv,
+                            bv,
+                            wo,
+                            bo,
+                            arena,
+                        );
+                    }
+                });
                 Ok(vec![Literal::from_f32s(&[b, l, d], out)?])
             }
             // (x [B,L,D], ln_g, ln_b, w1, b1, w2, b2) -> x + ffn(LN(x))
@@ -523,23 +368,19 @@ impl Backend for RefBackend {
                 let rows = x.shape()[0] * x.shape()[1];
                 let xs = x.f32s()?;
                 let f = arg(args, 3, entry)?.shape()[1];
-                let xln = layer_norm(
-                    xs,
-                    rows,
-                    d,
-                    arg(args, 1, entry)?.f32s()?,
-                    arg(args, 2, entry)?.f32s()?,
-                );
-                let mut y = ffn(
-                    &xln,
-                    rows,
-                    d,
-                    f,
-                    arg(args, 3, entry)?.f32s()?,
-                    arg(args, 4, entry)?.f32s()?,
-                    arg(args, 5, entry)?.f32s()?,
-                    arg(args, 6, entry)?.f32s()?,
-                );
+                let ln_g = arg(args, 1, entry)?.f32s()?;
+                let ln_b = arg(args, 2, entry)?.f32s()?;
+                let w1 = arg(args, 3, entry)?.f32s()?;
+                let b1 = arg(args, 4, entry)?.f32s()?;
+                let w2 = arg(args, 5, entry)?.f32s()?;
+                let b2 = arg(args, 6, entry)?.f32s()?;
+                let mut y = vec![0f32; rows * d];
+                with_arena(|arena| {
+                    let mut xln = arena.take(rows * d);
+                    kernels::layer_norm_into(&mut xln, xs, rows, d, ln_g, ln_b);
+                    kernels::ffn_into(&mut y, &xln, rows, d, f, w1, b1, w2, b2, arena);
+                    arena.put(xln);
+                });
                 for i in 0..rows * d {
                     y[i] += xs[i];
                 }
@@ -549,7 +390,9 @@ impl Backend for RefBackend {
             "moe_ln" => {
                 let x = arg(args, 0, entry)?;
                 let rows = x.shape()[0] * x.shape()[1];
-                let out = layer_norm(
+                let mut out = vec![0f32; rows * d];
+                kernels::layer_norm_into(
+                    &mut out,
                     x.f32s()?,
                     rows,
                     d,
@@ -564,7 +407,12 @@ impl Backend for RefBackend {
                 let l = xln.shape()[1];
                 let wr = arg(args, 1, entry)?;
                 let e = wr.shape()[1];
-                let logits = matmul(xln.f32s()?, wr.f32s()?, l, d, e);
+                let xs = xln.f32s()?;
+                let ws = wr.f32s()?;
+                let mut logits = vec![0f32; l * e];
+                with_arena(|arena| {
+                    kernels::matmul_into(&mut logits, xs, ws, l, d, e, arena);
+                });
                 let mut idx = vec![0i32; l];
                 let mut alpha = vec![0f32; l];
                 for t in 0..l {
@@ -585,16 +433,15 @@ impl Backend for RefBackend {
                 let x = arg(args, 0, entry)?;
                 let t = x.shape()[0];
                 let f = arg(args, 1, entry)?.shape()[1];
-                let y = ffn(
-                    x.f32s()?,
-                    t,
-                    d,
-                    f,
-                    arg(args, 1, entry)?.f32s()?,
-                    arg(args, 2, entry)?.f32s()?,
-                    arg(args, 3, entry)?.f32s()?,
-                    arg(args, 4, entry)?.f32s()?,
-                );
+                let xs = x.f32s()?;
+                let w1 = arg(args, 1, entry)?.f32s()?;
+                let b1 = arg(args, 2, entry)?.f32s()?;
+                let w2 = arg(args, 3, entry)?.f32s()?;
+                let b2 = arg(args, 4, entry)?.f32s()?;
+                let mut y = vec![0f32; t * d];
+                with_arena(|arena| {
+                    kernels::ffn_into(&mut y, xs, t, d, f, w1, b1, w2, b2, arena);
+                });
                 Ok(vec![Literal::from_f32s(&[t, d], y)?])
             }
             // (x [B,L,D], y [B,L,D], alpha [B,L], mask [B,L]) -> x + alpha*y*mask
@@ -619,15 +466,19 @@ impl Backend for RefBackend {
                 let l = x.shape()[1];
                 let w = arg(args, 3, entry)?;
                 let v = w.shape()[1];
-                let xn = layer_norm(
-                    x.f32s()?,
-                    l,
-                    d,
-                    arg(args, 1, entry)?.f32s()?,
-                    arg(args, 2, entry)?.f32s()?,
-                );
-                let mut logits = matmul(&xn, w.f32s()?, l, d, v);
-                add_bias(&mut logits, l, v, arg(args, 4, entry)?.f32s()?);
+                let xs = x.f32s()?;
+                let ln_g = arg(args, 1, entry)?.f32s()?;
+                let ln_b = arg(args, 2, entry)?.f32s()?;
+                let ws = w.f32s()?;
+                let bias = arg(args, 4, entry)?.f32s()?;
+                let mut logits = vec![0f32; l * v];
+                with_arena(|arena| {
+                    let mut xn = arena.take(l * d);
+                    kernels::layer_norm_into(&mut xn, xs, l, d, ln_g, ln_b);
+                    kernels::matmul_into(&mut logits, &xn, ws, l, d, v, arena);
+                    arena.put(xn);
+                });
+                kernels::add_bias(&mut logits, l, v, bias);
                 Ok(vec![Literal::from_f32s(&[1, l, v], logits)?])
             }
             // (x, mask, ln_g, ln_b, w [D,C], b) -> [1,C]

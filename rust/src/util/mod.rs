@@ -1,10 +1,13 @@
 //! Hand-rolled substrates: JSON, CLI parsing, PRNG, property testing,
-//! logging.  The vendored crate set contains only the `xla` dependency
-//! closure (no serde/clap/rand/proptest/criterion/tokio), so everything
+//! logging, the scoped worker pool, and the layer-gate sync primitive.
+//! The vendored crate set contains only the `xla` dependency closure
+//! (no serde/clap/rand/proptest/criterion/tokio/rayon), so everything
 //! the system needs beyond that is implemented here (DESIGN.md §3).
 
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod sync;

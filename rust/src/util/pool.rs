@@ -1,0 +1,161 @@
+//! Hand-rolled scoped worker pool (the vendored crate set has no rayon
+//! or crossbeam — DESIGN.md §5).
+//!
+//! [`WorkerPool::run`] executes one closure per item on up to
+//! `threads` OS threads and returns the results **in item order**:
+//! compute finishes in whatever order the scheduler produces, but the
+//! caller always observes a deterministic, index-ordered result vector.
+//! That order guarantee is what lets `model::forward` fan the
+//! per-expert invocations of an MoE layer out across threads while
+//! keeping its scatter-accumulation order — and therefore its f32
+//! outputs — bit-identical to the sequential path.
+//!
+//! Built on [`std::thread::scope`], so job closures may borrow from the
+//! caller's stack (weight maps, activation buffers) without cloning or
+//! `Arc`-wrapping; a pool of size 1 (or a single item) degenerates to
+//! an inline sequential loop with zero spawn overhead, which doubles as
+//! the reference execution order in tests.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A fixed-width scoped worker pool.  Cheap to clone (it holds only its
+/// width); threads are spawned per [`WorkerPool::run`] call and joined
+/// before it returns, so no state leaks between calls.
+#[derive(Debug, Clone)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Pool of exactly `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> Self {
+        WorkerPool { threads: threads.max(1) }
+    }
+
+    /// Width from the environment: `SIDA_POOL_THREADS` if set to a
+    /// positive width, else the machine's available parallelism (capped
+    /// at 16 — expert fan-out per layer rarely benefits beyond that).
+    /// `SIDA_POOL_THREADS=0` means auto, matching every other pool knob.
+    pub fn auto() -> Self {
+        if let Ok(v) = std::env::var("SIDA_POOL_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n > 0 {
+                    return WorkerPool::new(n);
+                }
+            }
+        }
+        let n = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        WorkerPool::new(n.min(16))
+    }
+
+    /// `0` means auto-size — the convention config knobs use.
+    pub fn from_config(threads: usize) -> Self {
+        if threads == 0 {
+            WorkerPool::auto()
+        } else {
+            WorkerPool::new(threads)
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f` once per item, up to `threads` at a time, and return the
+    /// results **in item order**.  `f` receives `(index, item)`.
+    ///
+    /// With one worker (or one item) this runs inline on the calling
+    /// thread — no spawn, identical to a plain sequential loop.
+    pub fn run<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+    {
+        let n = items.len();
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return items.into_iter().enumerate().map(|(i, it)| f(i, it)).collect();
+        }
+        // Claimable work items and index-addressed result slots: workers
+        // race on `cursor`, but every result lands in its item's slot,
+        // so completion order never leaks into the returned Vec.
+        let work: Vec<Mutex<Option<T>>> =
+            items.into_iter().map(|it| Mutex::new(Some(it))).collect();
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let cursor = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let item = work[i].lock().unwrap().take().expect("item claimed twice");
+                    let out = f(i, item);
+                    *slots[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("worker left an empty result slot"))
+            .collect()
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        WorkerPool::auto()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_input_yields_empty_output() {
+        let pool = WorkerPool::new(4);
+        let out: Vec<u32> = pool.run(Vec::<u32>::new(), |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn results_are_in_item_order_regardless_of_completion_order() {
+        // later items finish first (larger sleep on early indices); the
+        // output must still be index-ordered
+        let pool = WorkerPool::new(4);
+        let items: Vec<usize> = (0..16).collect();
+        let out = pool.run(items, |i, x| {
+            assert_eq!(i, x);
+            std::thread::sleep(std::time::Duration::from_micros(((16 - i) * 200) as u64));
+            x * 10
+        });
+        assert_eq!(out, (0..16).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_pool_matches_parallel_pool() {
+        let items: Vec<u64> = (0..32).collect();
+        let seq = WorkerPool::new(1).run(items.clone(), |i, x| x.wrapping_mul(31) ^ i as u64);
+        let par = WorkerPool::new(8).run(items, |i, x| x.wrapping_mul(31) ^ i as u64);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn closures_may_borrow_caller_stack() {
+        let weights: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let pool = WorkerPool::new(3);
+        let out = pool.run((0..8).collect::<Vec<usize>>(), |_, i| weights[i] * 2.0);
+        assert_eq!(out[7], 14.0);
+    }
+
+    #[test]
+    fn from_config_zero_is_auto() {
+        assert!(WorkerPool::from_config(0).threads() >= 1);
+        assert_eq!(WorkerPool::from_config(3).threads(), 3);
+        assert_eq!(WorkerPool::new(0).threads(), 1);
+    }
+}

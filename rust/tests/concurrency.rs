@@ -113,7 +113,7 @@ fn pinned_experts_survive_concurrent_eviction_pressure() {
     for h in handles {
         h.join().expect("worker panicked");
     }
-    let mut guard = cache.lock().unwrap();
+    let guard = cache.lock().unwrap();
     assert!(guard.contains(&ExpertKey::new(block, 0)));
     guard.unpin(&ExpertKey::new(block, 0));
     guard.check_invariants().unwrap();
@@ -146,13 +146,13 @@ fn pipeline_reuse_serves_back_to_back_traces() {
     let p = Pipeline::new(b.clone(), TINY_PROFILE, PipelineConfig::default()).unwrap();
     let warm = testkit::tiny_trace(&b, 4, 100);
     let _ = p.serve(&warm).unwrap();
-    p.cache.lock().unwrap().reset_stats();
+    p.cache.reset_stats();
     let reqs = testkit::tiny_trace(&b, 8, 101);
     let out = p.serve(&reqs).unwrap();
     assert_eq!(out.stats.requests, 8);
     // warm cache: most lookups are hits now
     assert!(out.stats.cache_hits > 0);
-    p.cache.lock().unwrap().check_invariants().unwrap();
+    p.cache.check_invariants().unwrap();
 }
 
 #[test]

@@ -11,11 +11,12 @@
 use std::sync::Arc;
 
 use sida_moe::coordinator::{HashBuilder, HashTable};
-use sida_moe::experts::{make_policy, ExpertCache};
+use sida_moe::experts::{make_policy, ExpertCache, SharedExpertCache};
 use sida_moe::memory::CostModel;
 use sida_moe::model::{BatchItem, ExpertProvider, ForwardOptions, ModelRunner};
 use sida_moe::runtime::ModelBundle;
 use sida_moe::testkit::{self, TINY_PROFILE};
+use sida_moe::util::pool::WorkerPool;
 
 fn runner(b: &Arc<ModelBundle>) -> ModelRunner {
     ModelRunner::new(b.clone(), TINY_PROFILE).unwrap()
@@ -205,6 +206,97 @@ fn duplicated_sentence_batch_shares_expert_invocations_strictly() {
         "the duplicate's experts must ride the same invocations"
     );
     assert!(batch.times.expert_invocations < 2 * seq.times.expert_invocations);
+}
+
+#[test]
+fn pooled_forward_is_bit_identical_across_pool_sizes() {
+    // Acceptance criterion: the parallel expert path must reproduce the
+    // sequential path bit-for-bit at every pool width — compute order
+    // varies with the pool, but scatter order (and therefore every f32
+    // accumulation chain) does not.
+    let b = testkit::tiny_bundle();
+    let builder = HashBuilder::new(&b, TINY_PROFILE).unwrap();
+    let reqs = testkit::tiny_trace(&b, 5, 77);
+    let tables: Vec<_> =
+        reqs.iter().map(|q| builder.build(q.id, &q.ids).unwrap()).collect();
+    let opts = ForwardOptions { want_lm: true, want_cls: true, ..Default::default() };
+
+    // reference: fully sequential (pool width 1)
+    let mut reference: Option<Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>> = None;
+    for threads in [1usize, 2, 8] {
+        let r = ModelRunner::with_pool(b.clone(), TINY_PROFILE, WorkerPool::new(threads))
+            .unwrap();
+        assert_eq!(r.pool_threads(), threads);
+        let staged = r.stage_all_experts().unwrap();
+
+        // per-request forwards
+        let mut outs = Vec::new();
+        for (q, t) in reqs.iter().zip(tables.iter()) {
+            let mut p = ExpertProvider::AllResident(&staged);
+            let o = r.forward(&q.ids, Some((t, 1)), &mut p, opts).unwrap();
+            outs.push((o.hidden, o.lm_logits.unwrap(), o.cls_logits.unwrap()));
+        }
+        // the batched forward at this pool width must agree with the
+        // per-request forwards at the same width
+        let items: Vec<BatchItem<'_>> = reqs
+            .iter()
+            .zip(tables.iter())
+            .map(|(q, t)| BatchItem { ids: &q.ids[..], hash: Some((t, 1)) })
+            .collect();
+        let mut pb = ExpertProvider::AllResident(&staged);
+        let batch = r.forward_batch(&items, &mut pb, opts).unwrap();
+        for (seq, out) in outs.iter().zip(batch.outputs.iter()) {
+            assert_eq!(seq.0, out.hidden, "pool {threads}: batch hidden diverged");
+            assert_eq!(&seq.1, out.lm_logits.as_ref().unwrap());
+            assert_eq!(&seq.2, out.cls_logits.as_ref().unwrap());
+        }
+        match &reference {
+            None => reference = Some(outs),
+            Some(want) => {
+                for (i, (w, g)) in want.iter().zip(outs.iter()).enumerate() {
+                    assert_eq!(w.0, g.0, "pool {threads}: request {i} hidden diverged");
+                    assert_eq!(w.1, g.1, "pool {threads}: request {i} lm logits diverged");
+                    assert_eq!(w.2, g.2, "pool {threads}: request {i} cls logits diverged");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_forward_through_shared_cache_matches_all_resident() {
+    // The worker pool resolving residency through the RwLock'd shared
+    // cache (pins, concurrent ensure) must agree exactly with the
+    // all-resident provider at pool width 1.
+    let b = testkit::tiny_bundle();
+    let real = b.weights.expert_bytes(b.topology.moe_blocks[0], 0).unwrap();
+    let reqs = testkit::tiny_trace(&b, 4, 41);
+    let opts = ForwardOptions { want_lm: true, ..Default::default() };
+
+    let seq_runner =
+        ModelRunner::with_pool(b.clone(), TINY_PROFILE, WorkerPool::new(1)).unwrap();
+    let staged = seq_runner.stage_all_experts().unwrap();
+
+    let par_runner =
+        ModelRunner::with_pool(b.clone(), TINY_PROFILE, WorkerPool::new(8)).unwrap();
+    let shared = SharedExpertCache::new(ExpertCache::new(
+        1 << 30,
+        CostModel::physical(real),
+        make_policy("fifo").unwrap(),
+    ));
+
+    for q in &reqs {
+        let mut p_ref = ExpertProvider::AllResident(&staged);
+        let want = seq_runner.forward(&q.ids, None, &mut p_ref, opts).unwrap();
+        let mut p_shared = ExpertProvider::Shared { cache: &shared, blocking: true };
+        let got = par_runner.forward(&q.ids, None, &mut p_shared, opts).unwrap();
+        assert_eq!(want.hidden, got.hidden, "request {}: hidden diverged", q.id);
+        assert_eq!(want.lm_logits, got.lm_logits, "request {}: lm diverged", q.id);
+    }
+    shared.check_invariants().unwrap();
+    let stats = shared.stats();
+    assert!(stats.misses > 0, "cold shared cache must fetch");
+    assert!(stats.hits > 0, "repeated experts must hit the read path");
 }
 
 #[test]

@@ -66,9 +66,8 @@ fn pipeline_respects_memory_budget_and_evicts() {
         out.stats.peak_device_bytes
     );
     assert!(out.stats.evictions > 0, "tight budget must evict");
-    let cache = p.cache.lock().unwrap();
-    cache.check_invariants().unwrap();
-    assert!(cache.used() <= cache.budget());
+    p.cache.check_invariants().unwrap();
+    assert!(p.cache.used() <= p.cache.budget());
 }
 
 #[test]

@@ -586,3 +586,88 @@ fn hash_agreement_rate_tracks_configuration() {
         );
     }
 }
+
+// ---------------------------------------------------------------------------
+// Worker pool: scatter order is independent of expert completion order
+// ---------------------------------------------------------------------------
+
+/// Random per-"expert" jobs with random completion delays, run through
+/// the pool at several widths; the merged (scattered) accumulator must
+/// be bit-identical to the sequential merge, no matter which job
+/// finishes first.  This is the order contract `model::forward` relies
+/// on for bit-identical parallel expert execution.
+#[test]
+fn prop_pool_scatter_is_completion_order_independent() {
+    use sida_moe::util::pool::WorkerPool;
+
+    #[derive(Debug, Clone)]
+    struct Job {
+        /// token slots this job scatters into
+        tokens: Vec<usize>,
+        /// per-token contribution
+        values: Vec<f32>,
+        /// artificial completion skew in microseconds
+        delay_us: u64,
+    }
+
+    const SLOTS: usize = 16;
+
+    fn gen_jobs(r: &mut Rng) -> Vec<Job> {
+        (0..r.usize_below(12))
+            .map(|_| {
+                let n = 1 + r.usize_below(6);
+                Job {
+                    tokens: (0..n).map(|_| r.usize_below(SLOTS)).collect(),
+                    values: (0..n).map(|_| (r.f64() as f32 - 0.5) * 2.0).collect(),
+                    // later jobs get shorter delays -> reversed completion
+                    delay_us: r.below(300),
+                }
+            })
+            .collect()
+    }
+
+    fn scatter(acc: &mut [f32], outs: &[Vec<(usize, f32)>]) {
+        for rows in outs {
+            for &(t, v) in rows {
+                acc[t] += v;
+            }
+        }
+    }
+
+    Prop::new(48).check(
+        "pool merge == sequential merge",
+        gen_jobs,
+        |v| shrink_vec(v),
+        |jobs| {
+            // sequential reference (pool width 1)
+            let compute = |job: &Job| -> Vec<(usize, f32)> {
+                job.tokens
+                    .iter()
+                    .zip(job.values.iter())
+                    .map(|(&t, &v)| (t, v * 3.0 + 1.0))
+                    .collect()
+            };
+            let seq: Vec<Vec<(usize, f32)>> = jobs.iter().map(compute).collect();
+            let mut want = vec![0f32; SLOTS];
+            scatter(&mut want, &seq);
+
+            for threads in [2usize, 5] {
+                let pool = WorkerPool::new(threads);
+                let outs = pool.run(jobs.clone(), |i, job| {
+                    // skew completion order away from submission order
+                    std::thread::sleep(std::time::Duration::from_micros(job.delay_us));
+                    assert_eq!(jobs[i].tokens, job.tokens, "index/job mismatch");
+                    compute(&job)
+                });
+                let mut got = vec![0f32; SLOTS];
+                scatter(&mut got, &outs);
+                if got != want {
+                    return Err(format!(
+                        "pool width {threads}: merged accumulator diverged: {got:?} vs {want:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
