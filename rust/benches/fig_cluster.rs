@@ -1,0 +1,122 @@
+//! fig_cluster — multi-device expert-parallel serving: throughput and
+//! per-device GPU-memory saving vs device count.
+//!
+//! Serves the same trace across 1, 2 and 4 modeled devices at a fixed
+//! replication factor and reports, per device count: throughput, the
+//! worst single device's placement footprint (`per_device_expert_bytes`
+//! — the expert memory one accelerator must provision) and runtime peak
+//! residency, load imbalance, and the modeled cross-device activation
+//! traffic.  The shape under test: partitioning the expert pool shrinks
+//! per-device expert memory as the fleet grows (homes ≈ ⌈E/N⌉ per layer
+//! + R replicas), which is what makes big-E MoE models servable on
+//! small devices at all.
+//!
+//! Unlike the artifact-backed figures this bench is **hermetic**: it
+//! runs on the synthetic testkit bundle (two MoE layers), so CI's
+//! bench-smoke job exercises the full cluster path instead of
+//! SKIP-ing.  Emits `BENCH_cluster.json`.
+
+use sida_moe::bench_support as bs;
+use sida_moe::coordinator::{Pipeline, PipelineConfig};
+use sida_moe::metrics::Table;
+use sida_moe::testkit::{self, SynthSpec, TINY_PROFILE};
+use sida_moe::util::json::{num, obj, s, Json};
+
+fn main() -> anyhow::Result<()> {
+    bs::banner(
+        "fig_cluster: multi-device expert parallelism",
+        "per-device expert memory shrinks as devices grow; outputs bit-identical",
+    );
+    let bundle = testkit::bundle(&SynthSpec::default().two_moe_layers())?;
+    let topo = &bundle.topology;
+    let n = bs::n_requests(24);
+    let warmup = testkit::tiny_trace(&bundle, 4, 0xA5A5);
+    let requests = testkit::tiny_trace(&bundle, n, 7);
+
+    let real_expert = bundle.weights.expert_bytes(topo.moe_blocks[0], 0)?;
+    let sim_expert =
+        sida_moe::memory::CostModel::paper_scale(real_expert).sim_bytes(real_expert);
+    let replicate_top = 1usize;
+
+    let mut t = Table::new(
+        "fig_cluster — throughput and per-device memory vs device count",
+        &[
+            "devices", "tput (req/s)", "per-dev experts", "per-dev sim MB",
+            "peak sim MB", "imbalance", "x-dev MB",
+        ],
+    );
+    let mut j = bs::BenchJson::new("cluster");
+    let mut assigned_bytes_by_n: Vec<(usize, usize)> = Vec::new();
+    for devices in [1usize, 2, 4] {
+        let cfg = PipelineConfig {
+            budget_sim_bytes: 64 * sim_expert, // generous: placement, not thrash
+            devices,
+            replicate_top,
+            want_cls: true,
+            ..Default::default()
+        };
+        let pipeline = Pipeline::new(bundle.clone(), TINY_PROFILE, cfg)?;
+        let _ = pipeline.serve(&warmup)?;
+        pipeline.reset_serving_stats();
+        let out = pipeline.serve(&requests)?;
+        let stats = &out.stats;
+
+        // the worst device's placement footprint: ⌈E/N⌉ homes per layer
+        // plus replicas for N > 1; the whole pool on the one device
+        // otherwise
+        let (assigned, imbalance, cross_mb, interconnect_secs) = match &stats.cluster {
+            Some(cl) => (
+                cl.max_device_assigned(),
+                cl.load_imbalance().unwrap_or(1.0),
+                cl.cross_device_bytes as f64 / 1e6,
+                cl.interconnect_secs,
+            ),
+            None => (topo.moe_blocks.len() * topo.num_experts, 1.0, 0.0, 0.0),
+        };
+        let assigned_bytes = assigned * sim_expert;
+        assigned_bytes_by_n.push((devices, assigned_bytes));
+        t.row(vec![
+            devices.to_string(),
+            format!("{:.2}", stats.throughput()),
+            assigned.to_string(),
+            format!("{:.1}", assigned_bytes as f64 / 1e6),
+            format!("{:.1}", stats.peak_device_bytes as f64 / 1e6),
+            format!("{imbalance:.2}x"),
+            format!("{cross_mb:.2}"),
+        ]);
+        j.push(obj(vec![
+            ("devices", num(devices as f64)),
+            ("throughput_rps", num(stats.throughput())),
+            ("replicate_top", num(replicate_top as f64)),
+            ("per_device_expert_bytes", num(assigned_bytes as f64)),
+            ("per_device_assigned_experts", num(assigned as f64)),
+            ("max_device_peak_bytes", num(stats.peak_device_bytes as f64)),
+            ("load_imbalance", num(imbalance)),
+            ("cross_device_bytes", num(cross_mb * 1e6)),
+            ("interconnect_secs", num(interconnect_secs)),
+            ("requests", num(stats.requests as f64)),
+            ("cache_hit_rate", num(stats.hit_rate().unwrap_or(0.0))),
+            ("dataset", s(TINY_PROFILE)),
+        ]));
+    }
+    t.print();
+    t.save_csv(&bs::csv_path("fig_cluster"))?;
+
+    let strictly_decreasing = assigned_bytes_by_n
+        .windows(2)
+        .all(|w| w[1].1 < w[0].1);
+    println!(
+        "cluster check: per-device resident expert bytes strictly decreasing \
+         with device count at fixed replication (R={replicate_top}): {}",
+        if strictly_decreasing { "PASS" } else { "FAIL" }
+    );
+    j.push(obj(vec![
+        ("per_device_bytes_strictly_decreasing", Json::Bool(strictly_decreasing)),
+    ]));
+    let path = j.save()?;
+    println!("perf-trajectory JSON: {}", path.display());
+    if !strictly_decreasing {
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -75,6 +75,11 @@ pub struct RunSpec {
     /// worker-pool width for expert execution (0 = auto, 1 = the fully
     /// sequential reference path)
     pub pool_threads: usize,
+    /// modeled devices for expert parallelism (sida only; 1 = the
+    /// single-device path, budget is per device)
+    pub devices: usize,
+    /// hottest experts per MoE layer replicated across the fleet
+    pub replicate_top: usize,
     pub seed: u64,
 }
 
@@ -92,6 +97,8 @@ impl RunSpec {
             prefetch: true,
             max_batch: 1,
             pool_threads: 0,
+            devices: 1,
+            replicate_top: 1,
             seed: 0,
         }
     }
@@ -104,6 +111,18 @@ impl RunSpec {
     /// Worker-pool width (0 = auto, 1 = sequential reference).
     pub fn pool(mut self, threads: usize) -> Self {
         self.pool_threads = threads;
+        self
+    }
+
+    /// Modeled device count (1 = single device).
+    pub fn devices(mut self, n: usize) -> Self {
+        self.devices = n.max(1);
+        self
+    }
+
+    /// Hot-expert replication factor (cluster mode).
+    pub fn replicate(mut self, r: usize) -> Self {
+        self.replicate_top = r;
         self
     }
 
@@ -168,12 +187,14 @@ pub fn run_method(
                 queue_depth: 8,
                 max_batch: spec.max_batch,
                 pool_threads: spec.pool_threads,
+                devices: spec.devices,
+                replicate_top: spec.replicate_top,
                 want_lm: spec.want_lm,
                 want_cls: spec.want_cls,
             };
             let pipeline = Pipeline::new(bundle, &spec.dataset, cfg)?;
             let _ = pipeline.serve(&warmup)?;
-            pipeline.cache.reset_stats();
+            pipeline.reset_serving_stats();
             pipeline.serve(&requests)
         }
         m => {

@@ -1,0 +1,171 @@
+//! The modeled device fleet: per-device expert caches, per-device
+//! three-tier residency ledgers, and the cross-device interconnect cost
+//! model.
+//!
+//! Each [`Device`] owns a full [`SharedExpertCache`] (its budgeted
+//! "GPU" tier — the runtime source of truth for what is resident and
+//! what must be fetched) plus a [`TieredStore`] ledger that models the
+//! same device's position in the device ↔ host-RAM ↔ SSD ladder of
+//! paper §6 (promotions are recorded when the cluster routes work to
+//! the device; FIFO demotions model budget pressure down the ladder).
+//! The ledger is modeled *accounting* — the cache enforces the budget;
+//! the ledger reports where the bytes came from.
+//!
+//! Device-to-device activation movement is charged through the same
+//! [`TierCosts`] vocabulary the tier ladder uses: one
+//! [`Tier::Ram`]-to-device hop over the modeled PCIe/NVLink fabric per
+//! direction (see [`DeviceSet::link_secs`]).
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::experts::{make_policy, ExpertCache, ExpertKey, SharedExpertCache};
+use crate::memory::{CostModel, HierarchyStats, Tier, TierCosts, TieredStore};
+
+/// One modeled accelerator: a budgeted expert cache plus the modeled
+/// three-tier residency ledger for the experts routed to it.
+pub struct Device {
+    pub id: usize,
+    /// runtime expert residency (budget, eviction, transfer accounting)
+    pub cache: Arc<SharedExpertCache>,
+    /// modeled device/RAM/SSD ladder for this device's expert traffic
+    tiers: Mutex<TieredStore<ExpertKey>>,
+}
+
+impl Device {
+    /// Record that `key` was brought to (or used on) this device:
+    /// promotes it in the tier ledger and returns the modeled promote
+    /// seconds (0 when already device-resident in the ledger).
+    pub fn note_promote(&self, key: ExpertKey, sim_bytes: usize) -> f64 {
+        self.tiers.lock().unwrap().promote(key, sim_bytes)
+    }
+
+    /// Snapshot of this device's tier-ladder statistics.
+    pub fn hierarchy_stats(&self) -> HierarchyStats {
+        self.tiers.lock().unwrap().stats.clone()
+    }
+}
+
+/// The set of modeled devices one model is served across, plus the
+/// interconnect cost model for moving activations between them.
+pub struct DeviceSet {
+    devices: Vec<Device>,
+    /// modeled device<->device fabric; a cross-device activation hop is
+    /// one `Tier::Ram` promote over this cost table per direction
+    pub link: TierCosts,
+    /// simulated device budget, per device
+    pub budget_per_device: usize,
+}
+
+impl DeviceSet {
+    /// Build `n` devices, each with its own `budget_per_device` expert
+    /// cache (paper-scale cost model) and a fresh tier ledger.
+    /// `host_ram_budget` bounds the modeled per-device RAM tier the
+    /// ladder demotes into (experts pushed further fall to SSD).
+    pub fn new(
+        n: usize,
+        budget_per_device: usize,
+        real_expert_bytes: usize,
+        policy: &str,
+        real_sleep: bool,
+        link: TierCosts,
+        host_ram_budget: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(n >= 1, "a cluster needs at least one device");
+        let mut devices = Vec::with_capacity(n);
+        for id in 0..n {
+            let cost = CostModel::paper_scale(real_expert_bytes).with_real_sleep(real_sleep);
+            devices.push(Device {
+                id,
+                cache: Arc::new(SharedExpertCache::new(ExpertCache::new(
+                    budget_per_device,
+                    cost,
+                    make_policy(policy)?,
+                ))),
+                tiers: Mutex::new(TieredStore::new(
+                    budget_per_device,
+                    host_ram_budget,
+                    link.clone(),
+                )),
+            });
+        }
+        Ok(DeviceSet { devices, link, budget_per_device })
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn device(&self, id: usize) -> &Device {
+        &self.devices[id]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Device> {
+        self.devices.iter()
+    }
+
+    /// Modeled seconds to move `bytes` across the device fabric (one
+    /// hop: the data is already in a device/host-visible buffer, so the
+    /// cost is a single RAM-to-device promote over the link table).
+    pub fn link_secs(&self, bytes: usize) -> f64 {
+        self.link.promote_secs(Tier::Ram, bytes)
+    }
+
+    /// Reset every device cache's counters and peak (between bench
+    /// phases); tier ledgers keep their residency but a fresh stats
+    /// epoch is what the caches report from here on.
+    pub fn reset_stats(&self) {
+        for d in &self.devices {
+            d.cache.reset_stats();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_n_isolated_devices() {
+        let set =
+            DeviceSet::new(3, 1 << 20, 1000, "fifo", false, TierCosts::default(), 1 << 24)
+                .unwrap();
+        assert_eq!(set.len(), 3);
+        for (i, d) in set.iter().enumerate() {
+            assert_eq!(d.id, i);
+            assert_eq!(d.cache.budget(), 1 << 20);
+            assert_eq!(d.cache.used(), 0);
+        }
+    }
+
+    #[test]
+    fn link_cost_is_one_ram_hop() {
+        let set =
+            DeviceSet::new(2, 1 << 20, 1000, "fifo", false, TierCosts::default(), 1 << 24)
+                .unwrap();
+        let b = 1 << 20;
+        assert_eq!(set.link_secs(b), set.link.promote_secs(Tier::Ram, b));
+        assert!(set.link_secs(b) > 0.0);
+    }
+
+    #[test]
+    fn ledger_promotes_and_reports() {
+        let set =
+            DeviceSet::new(2, 10_000, 1000, "fifo", false, TierCosts::default(), 1 << 24)
+                .unwrap();
+        let key = ExpertKey::new(0, 0);
+        let first = set.device(0).note_promote(key, 4_000);
+        assert!(first > 0.0, "cold promote must cost modeled time");
+        let again = set.device(0).note_promote(key, 4_000);
+        assert_eq!(again, 0.0, "device-resident promote is free");
+        let h = set.device(0).hierarchy_stats();
+        assert_eq!(h.device_hits, 1);
+        // device 1's ledger is untouched
+        assert_eq!(set.device(1).hierarchy_stats().device_hits, 0);
+    }
+}

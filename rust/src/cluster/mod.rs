@@ -1,0 +1,87 @@
+//! Multi-device expert-parallel serving: one MoE model served across N
+//! modeled devices with data-aware placement, hot-expert replication,
+//! and a cluster router (DESIGN.md §2.3).
+//!
+//! SiDA's hash tables make expert activation *predictable per sentence*;
+//! this subsystem exploits the same signal one level up: summed over
+//! traffic, the predictions say which experts are hot, and hot experts
+//! decide both **where** every expert should live
+//! ([`PlacementPlanner`]: one home device per (layer, expert), hottest
+//! experts replicated — the composition of eMoE-style workload-aware
+//! placement with the hot-expert replication of "Fast MoE Inference via
+//! Predictive Prefetching and Expert Replication", PAPERS.md) and
+//! **who** computes each batch's expert jobs ([`ClusterRouter`]: every
+//! job to the least-loaded holder of its expert, per-device expert sets
+//! disjoint by construction, cross-device activation transfers charged
+//! on the modeled timeline).
+//!
+//! The fleet itself is [`DeviceSet`]: per-device [`SharedExpertCache`]
+//! budgets (the modeled GPU tier), per-device [`TieredStore`] ledgers
+//! (the §6 device/RAM/SSD ladder), and a [`TierCosts`]-based
+//! interconnect.  Outputs are **bit-identical** to single-device
+//! serving at every device count: the cluster decides only where an
+//! invocation computes; the scatter into the accumulators stays on the
+//! primary, in ascending expert order, exactly like the sequential
+//! path (asserted in `tests/cluster.rs` for devices ∈ {1, 2, 4}).
+//!
+//! ```
+//! use sida_moe::cluster::{ClusterConfig, ClusterRouter};
+//!
+//! let bundle = sida_moe::testkit::tiny_bundle();
+//! let router =
+//!     ClusterRouter::new(&bundle, &ClusterConfig { devices: 2, ..Default::default() }).unwrap();
+//! assert_eq!(router.devices(), 2);
+//! // every (layer, expert) is homed exactly once even before traffic
+//! router.placement().check_invariants(&bundle.topology).unwrap();
+//! ```
+//!
+//! [`SharedExpertCache`]: crate::experts::SharedExpertCache
+//! [`TieredStore`]: crate::memory::TieredStore
+//! [`TierCosts`]: crate::memory::TierCosts
+
+pub mod device;
+pub mod placement;
+pub mod router;
+pub mod stats;
+
+pub use device::{Device, DeviceSet};
+pub use placement::{ActivationProfile, Placement, PlacementPlanner};
+pub use router::{ClusterFetch, ClusterRouter};
+pub use stats::{ClusterStats, DeviceStats};
+
+use crate::memory::TierCosts;
+
+/// How to build a device fleet for one model.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// modeled devices serving the model (1 = the single-device path)
+    pub devices: usize,
+    /// hottest experts per MoE layer replicated across the fleet
+    pub replicate_top: usize,
+    /// simulated expert budget **per device** (each modeled accelerator
+    /// has its own memory, like real GPUs do)
+    pub budget_per_device: usize,
+    /// eviction policy for every device cache
+    pub policy: String,
+    /// sleep modeled transfer time on the fetching thread's timeline
+    pub real_sleep: bool,
+    /// cost table of the device fabric (one RAM-hop per activation
+    /// transfer direction) and of the per-device tier ladder
+    pub link: TierCosts,
+    /// modeled per-device host-RAM budget the tier ladder demotes into
+    pub host_ram_budget: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            devices: 1,
+            replicate_top: 1,
+            budget_per_device: 8 << 30,
+            policy: "fifo".into(),
+            real_sleep: false,
+            link: TierCosts::default(),
+            host_ram_budget: 64 << 30,
+        }
+    }
+}

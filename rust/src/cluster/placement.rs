@@ -1,0 +1,339 @@
+//! Data-aware expert placement: from observed/predicted activation
+//! frequencies to a home device per (layer, expert) plus replicas of
+//! the hottest experts.
+//!
+//! SiDA's hash tables predict which experts each sentence activates;
+//! summing those predictions over traffic gives a per-expert heat
+//! profile ([`ActivationProfile`]).  The [`PlacementPlanner`] turns the
+//! profile into a [`Placement`]:
+//!
+//! * every (MoE block, expert) gets exactly **one home device**, chosen
+//!   greedily hottest-expert-first onto the least-loaded device — the
+//!   classic longest-processing-time partition, which keeps predicted
+//!   per-device load balanced and is fully deterministic (ties break on
+//!   the device with fewer homes, then the lower device id).  A
+//!   per-layer ⌈E/N⌉ home cap keeps per-device expert *memory* balanced
+//!   even when most experts are cold;
+//! * the **R hottest experts of each MoE layer** (`replicate_top`) are
+//!   additionally replicated onto every other device with spare
+//!   placement capacity, so the cluster router can steer their traffic
+//!   to whichever device is lightest that layer — the hot-expert
+//!   replication idea of "Fast MoE Inference via Predictive Prefetching
+//!   and Expert Replication" (PAPERS.md);
+//! * replicas never push a device past its capacity in experts
+//!   (`budget / sim-expert-bytes`); homes are always assigned even on a
+//!   tight budget (the runtime cache evicts under pressure — placement
+//!   plans residency, the cache enforces it).
+//!
+//! Pure logic — unit-testable with no backend, no threads.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::hash_table::HashTable;
+use crate::experts::ExpertKey;
+use crate::runtime::Topology;
+
+/// Per-(block, expert) activation counts accumulated from hash-table
+/// predictions (or any other routing observation source).
+#[derive(Debug, Default, Clone)]
+pub struct ActivationProfile {
+    counts: BTreeMap<ExpertKey, u64>,
+    /// tables observed (the planner's staleness signal)
+    observed_tables: u64,
+}
+
+impl ActivationProfile {
+    /// Fold one request's hash predictions into the profile: for every
+    /// masked token and every used rank, the predicted expert of each
+    /// MoE layer gains one count.
+    pub fn observe_table(
+        &mut self,
+        table: &HashTable,
+        moe_blocks: &[usize],
+        k_used: usize,
+        mask: &[f32],
+    ) {
+        for (layer, &block) in moe_blocks.iter().enumerate() {
+            for t in 0..table.seq_len {
+                if mask.get(t).copied().unwrap_or(0.0) == 0.0 {
+                    continue;
+                }
+                for r in 0..k_used.min(table.k) {
+                    let key = ExpertKey::new(block, table.expert_at(t, layer, r));
+                    *self.counts.entry(key).or_insert(0) += 1;
+                }
+            }
+        }
+        self.observed_tables += 1;
+    }
+
+    pub fn count(&self, key: &ExpertKey) -> u64 {
+        self.counts.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn observed_tables(&self) -> u64 {
+        self.observed_tables
+    }
+}
+
+/// Where every expert lives: its home device plus any replicas.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    devices: usize,
+    home: BTreeMap<ExpertKey, usize>,
+    /// every device holding the expert (home included), ascending ids
+    holders: BTreeMap<ExpertKey, Vec<usize>>,
+}
+
+impl Placement {
+    pub fn devices(&self) -> usize {
+        self.devices
+    }
+
+    /// The expert's home device (0 if the expert is unknown — belt and
+    /// braces for keys outside the planned topology).
+    pub fn home_of(&self, key: &ExpertKey) -> usize {
+        self.home.get(key).copied().unwrap_or(0)
+    }
+
+    /// All devices holding the expert, home included, ascending.
+    pub fn holders(&self, key: &ExpertKey) -> &[usize] {
+        static HOME0: [usize; 1] = [0];
+        self.holders.get(key).map(|v| &v[..]).unwrap_or(&HOME0)
+    }
+
+    /// Placement entries (home + replica) assigned to `device`.
+    pub fn assigned_to(&self, device: usize) -> usize {
+        self.holders.values().filter(|hs| hs.contains(&device)).count()
+    }
+
+    /// Total replica entries beyond the homes.
+    pub fn replicated_entries(&self) -> usize {
+        self.holders.values().map(|hs| hs.len() - 1).sum()
+    }
+
+    /// Every (block, expert) key with a home, ascending.
+    pub fn keys(&self) -> impl Iterator<Item = &ExpertKey> {
+        self.home.keys()
+    }
+
+    /// Structural invariants: exactly one home per planned expert, the
+    /// home among the holders, holders sorted/deduped and in range.
+    pub fn check_invariants(&self, topo: &Topology) -> Result<()> {
+        for &block in &topo.moe_blocks {
+            for expert in 0..topo.num_experts {
+                let key = ExpertKey::new(block, expert);
+                let Some(&home) = self.home.get(&key) else {
+                    bail!("expert {key:?} has no home device");
+                };
+                if home >= self.devices {
+                    bail!("expert {key:?} homed on out-of-range device {home}");
+                }
+                let holders = self.holders(&key);
+                if !holders.contains(&home) {
+                    bail!("expert {key:?}: home {home} missing from holders {holders:?}");
+                }
+                if holders.windows(2).any(|w| w[0] >= w[1]) {
+                    bail!("expert {key:?}: holders {holders:?} not strictly ascending");
+                }
+                if holders.iter().any(|&d| d >= self.devices) {
+                    bail!("expert {key:?}: holder out of range in {holders:?}");
+                }
+            }
+        }
+        let planned: usize =
+            topo.moe_blocks.len() * topo.num_experts;
+        if self.home.len() != planned {
+            bail!("placement holds {} homes, topology needs {planned}", self.home.len());
+        }
+        Ok(())
+    }
+}
+
+/// Greedy data-aware placement with hot-expert replication (module docs
+/// describe the algorithm and its determinism guarantees).
+#[derive(Debug, Clone)]
+pub struct PlacementPlanner {
+    pub devices: usize,
+    /// hottest experts per MoE layer replicated across the fleet
+    pub replicate_top: usize,
+    /// max placement entries per device (simulated budget / simulated
+    /// expert bytes); caps replicas only — homes are always assigned
+    pub capacity_per_device: usize,
+}
+
+impl PlacementPlanner {
+    pub fn new(devices: usize, replicate_top: usize, capacity_per_device: usize) -> Self {
+        PlacementPlanner {
+            devices: devices.max(1),
+            replicate_top,
+            capacity_per_device: capacity_per_device.max(1),
+        }
+    }
+
+    /// Plan homes + replicas for every (MoE block, expert) of `topo`
+    /// from the observed heat in `profile`.  With an empty profile
+    /// (cold start) every count is zero and the plan degenerates to a
+    /// deterministic round-robin with the lowest-indexed experts
+    /// replicated — replaced as soon as traffic is observed.
+    pub fn plan(&self, topo: &Topology, profile: &ActivationProfile) -> Placement {
+        let mut home = BTreeMap::new();
+        let mut holders: BTreeMap<ExpertKey, Vec<usize>> = BTreeMap::new();
+        let mut entries = vec![0usize; self.devices];
+
+        // per-layer home cap: each device homes at most ⌈E/N⌉ experts
+        // of one layer, so cold experts cannot all pile onto whichever
+        // device happens to carry the least predicted load — per-device
+        // expert *memory* stays balanced along with the load
+        let home_cap = topo.num_experts.div_ceil(self.devices);
+        let mut ranked_by_block: Vec<(usize, Vec<(u64, usize)>)> = Vec::new();
+        for &block in &topo.moe_blocks {
+            // hottest first; ties by ascending expert id (deterministic)
+            let mut ranked: Vec<(u64, usize)> = (0..topo.num_experts)
+                .map(|e| (profile.count(&ExpertKey::new(block, e)), e))
+                .collect();
+            ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+
+            // greedy homes: least predicted load among devices under
+            // the home cap; ties on fewer homes, then device id
+            let mut load = vec![0u64; self.devices];
+            let mut homes_in_layer = vec![0usize; self.devices];
+            for &(count, expert) in &ranked {
+                let dev = (0..self.devices)
+                    .filter(|&d| homes_in_layer[d] < home_cap)
+                    .min_by_key(|&d| (load[d], homes_in_layer[d], d))
+                    .expect("home cap admits all experts");
+                let key = ExpertKey::new(block, expert);
+                home.insert(key, dev);
+                holders.insert(key, vec![dev]);
+                load[dev] += count;
+                homes_in_layer[dev] += 1;
+                entries[dev] += 1;
+            }
+            ranked_by_block.push((block, ranked));
+        }
+
+        // Replication runs AFTER every layer's homes are placed: homes
+        // are unconditional, so checking replica room against a
+        // partially-homed device would let later layers push it past
+        // capacity.  Against the final home totals, "replication never
+        // exceeds the budget" holds whenever the homes themselves fit.
+        for (block, ranked) in &ranked_by_block {
+            for &(_, expert) in ranked.iter().take(self.replicate_top) {
+                let key = ExpertKey::new(*block, expert);
+                let hs = holders.get_mut(&key).expect("homed above");
+                for dev in 0..self.devices {
+                    if hs.contains(&dev) {
+                        continue;
+                    }
+                    if entries[dev] >= self.capacity_per_device {
+                        continue; // replication never exceeds the budget
+                    }
+                    hs.push(dev);
+                    entries[dev] += 1;
+                }
+                hs.sort_unstable();
+            }
+        }
+        Placement { devices: self.devices, home, holders }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    fn profile_with(counts: &[(usize, usize, u64)]) -> ActivationProfile {
+        let mut p = ActivationProfile::default();
+        for &(block, expert, n) in counts {
+            *p.counts.entry(ExpertKey::new(block, expert)).or_insert(0) += n;
+        }
+        p
+    }
+
+    #[test]
+    fn every_expert_gets_exactly_one_home() {
+        let b = testkit::tiny_bundle();
+        let planner = PlacementPlanner::new(3, 1, 64);
+        let placement = planner.plan(&b.topology, &ActivationProfile::default());
+        placement.check_invariants(&b.topology).unwrap();
+        assert_eq!(
+            placement.keys().count(),
+            b.topology.moe_blocks.len() * b.topology.num_experts
+        );
+    }
+
+    #[test]
+    fn hot_experts_are_replicated_everywhere_with_capacity() {
+        let b = testkit::tiny_bundle();
+        let block = b.topology.moe_blocks[0];
+        let profile = profile_with(&[(block, 5, 100), (block, 2, 50), (block, 0, 1)]);
+        let planner = PlacementPlanner::new(4, 1, 64);
+        let placement = planner.plan(&b.topology, &profile);
+        placement.check_invariants(&b.topology).unwrap();
+        // the single hottest expert (5) is on every device
+        assert_eq!(placement.holders(&ExpertKey::new(block, 5)).len(), 4);
+        // a cold expert is not replicated
+        assert_eq!(placement.holders(&ExpertKey::new(block, 7)).len(), 1);
+        assert_eq!(placement.replicated_entries(), 3);
+    }
+
+    #[test]
+    fn replication_respects_capacity() {
+        let b = testkit::tiny_bundle();
+        let block = b.topology.moe_blocks[0];
+        let profile = profile_with(&[(block, 1, 10), (block, 2, 9)]);
+        // 8 experts over 2 devices = 4 homes each; capacity 4 leaves no
+        // replica room at all
+        let planner = PlacementPlanner::new(2, 2, 4);
+        let placement = planner.plan(&b.topology, &profile);
+        placement.check_invariants(&b.topology).unwrap();
+        assert_eq!(placement.replicated_entries(), 0);
+        for dev in 0..2 {
+            assert!(placement.assigned_to(dev) <= 4);
+        }
+        // with room for one extra entry per device, replicas return
+        let placement = PlacementPlanner::new(2, 2, 5).plan(&b.topology, &profile);
+        assert!(placement.replicated_entries() > 0);
+        for dev in 0..2 {
+            assert!(placement.assigned_to(dev) <= 5);
+        }
+    }
+
+    #[test]
+    fn hotter_experts_spread_across_devices() {
+        let b = testkit::tiny_bundle();
+        let block = b.topology.moe_blocks[0];
+        // two heavy experts must land on different devices
+        let profile = profile_with(&[(block, 3, 1000), (block, 6, 900)]);
+        let placement = PlacementPlanner::new(2, 0, 64).plan(&b.topology, &profile);
+        assert_ne!(
+            placement.home_of(&ExpertKey::new(block, 3)),
+            placement.home_of(&ExpertKey::new(block, 6)),
+        );
+    }
+
+    #[test]
+    fn observe_table_counts_masked_tokens_only() {
+        let b = testkit::tiny_bundle();
+        let builder = crate::coordinator::HashBuilder::new(&b, testkit::TINY_PROFILE).unwrap();
+        let req = testkit::tiny_trace(&b, 1, 3).remove(0);
+        let table = builder.build(req.id, &req.ids).unwrap();
+        let mut p = ActivationProfile::default();
+        p.observe_table(&table, &b.topology.moe_blocks, 1, &req.mask());
+        assert_eq!(p.observed_tables(), 1);
+        let total: u64 = b
+            .topology
+            .moe_blocks
+            .iter()
+            .flat_map(|&blk| {
+                (0..b.topology.num_experts).map(move |e| p.count(&ExpertKey::new(blk, e)))
+            })
+            .sum();
+        let real_tokens = req.mask().iter().filter(|&&m| m > 0.0).count() as u64;
+        assert_eq!(total, real_tokens * b.topology.moe_blocks.len() as u64);
+    }
+}

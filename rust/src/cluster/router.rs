@@ -1,0 +1,405 @@
+//! The cluster router: per-layer partitioning of expert work across the
+//! device fleet, replica steering, cross-device transfer accounting,
+//! and placement lifecycle (observe traffic → replan).
+//!
+//! Device 0 is the **primary**: the dense per-sequence stages and the
+//! scatter accumulators live there (exactly like the single-device
+//! path), so expert jobs routed to any other device are charged the
+//! modeled interconnect cost of shipping their gathered rows out and
+//! their outputs back.  Each job goes to exactly **one** device — the
+//! least-loaded holder of its expert — so the per-device expert sets of
+//! a layer are disjoint by construction, and replicated experts drift
+//! to whichever device is lightest in that layer.  Determinism: jobs
+//! arrive in ascending expert order and the tie-breaks are total, so
+//! the same routing yields the same assignment every time.  Outputs are
+//! bit-identical to single-device serving regardless of assignment
+//! because assignment only decides *where* an invocation computes,
+//! never how results are merged.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+
+use anyhow::Result;
+
+use crate::cluster::device::DeviceSet;
+use crate::cluster::placement::{ActivationProfile, Placement, PlacementPlanner};
+use crate::cluster::stats::{ClusterStats, DeviceStats};
+use crate::cluster::ClusterConfig;
+use crate::coordinator::hash_table::HashTable;
+use crate::experts::ExpertKey;
+use crate::memory::CostModel;
+use crate::runtime::ModelBundle;
+
+/// One planned cluster prefetch: which expert to warm on which device.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterFetch {
+    pub key: ExpertKey,
+    pub device: usize,
+    /// predicted token heat (fetch-ordering priority)
+    pub token_count: usize,
+}
+
+/// See the module docs.  Shared concurrently by the worker-pool lanes,
+/// the layer-ahead warmer, and the serving front-end.
+pub struct ClusterRouter {
+    set: DeviceSet,
+    planner: PlacementPlanner,
+    placement: RwLock<Placement>,
+    profile: Mutex<ActivationProfile>,
+    /// tables observed when the current placement was planned
+    observed_at_plan: AtomicU64,
+    /// per-device token rows dispatched (load-imbalance numerator)
+    rows: Vec<AtomicU64>,
+    cross_device_bytes: AtomicU64,
+    interconnect_secs: Mutex<f64>,
+    replans: AtomicU64,
+    d_model: usize,
+    moe_blocks: Vec<usize>,
+    /// simulated bytes of one expert (tier-ledger unit)
+    expert_sim_bytes: usize,
+}
+
+impl ClusterRouter {
+    /// Build the fleet and a cold-start placement (deterministic
+    /// round-robin; replaced by data-aware plans as traffic arrives —
+    /// or immediately via [`ClusterRouter::observe`] + `replan_now`).
+    pub fn new(bundle: &ModelBundle, cfg: &ClusterConfig) -> Result<Self> {
+        let topo = &bundle.topology;
+        let real_expert_bytes = bundle.weights.expert_bytes(topo.moe_blocks[0], 0)?;
+        let expert_sim_bytes =
+            CostModel::paper_scale(real_expert_bytes).sim_bytes(real_expert_bytes);
+        let set = DeviceSet::new(
+            cfg.devices,
+            cfg.budget_per_device,
+            real_expert_bytes,
+            &cfg.policy,
+            cfg.real_sleep,
+            cfg.link.clone(),
+            cfg.host_ram_budget,
+        )?;
+        let capacity = (cfg.budget_per_device / expert_sim_bytes.max(1)).max(1);
+        let planner = PlacementPlanner::new(cfg.devices, cfg.replicate_top, capacity);
+        let placement = planner.plan(topo, &ActivationProfile::default());
+        let rows = (0..cfg.devices).map(|_| AtomicU64::new(0)).collect();
+        Ok(ClusterRouter {
+            set,
+            planner,
+            placement: RwLock::new(placement),
+            profile: Mutex::new(ActivationProfile::default()),
+            observed_at_plan: AtomicU64::new(0),
+            rows,
+            cross_device_bytes: AtomicU64::new(0),
+            interconnect_secs: Mutex::new(0.0),
+            replans: AtomicU64::new(0),
+            d_model: topo.d_model,
+            moe_blocks: topo.moe_blocks.clone(),
+            expert_sim_bytes,
+        })
+    }
+
+    pub fn devices(&self) -> usize {
+        self.set.len()
+    }
+
+    pub fn device_cache(&self, id: usize) -> &crate::experts::SharedExpertCache {
+        &self.set.device(id).cache
+    }
+
+    pub fn device_set(&self) -> &DeviceSet {
+        &self.set
+    }
+
+    /// Snapshot of the current placement (tests, diagnostics).
+    pub fn placement(&self) -> Placement {
+        self.placement.read().unwrap().clone()
+    }
+
+    /// Fold a batch's hash predictions into the activation profile.
+    pub fn observe(&self, pairs: &[(&HashTable, &[f32])], k_used: usize) {
+        let mut profile = self.profile.lock().unwrap();
+        for &(table, mask) in pairs {
+            profile.observe_table(table, &self.moe_blocks, k_used, mask);
+        }
+    }
+
+    /// Re-plan placement from everything observed so far.  Takes the
+    /// write lock briefly; in-flight assignments finish on the old plan
+    /// (correctness does not depend on which plan routed a job).
+    pub fn replan_now(&self, bundle: &ModelBundle) {
+        let profile = self.profile.lock().unwrap().clone();
+        let new_plan = self.planner.plan(&bundle.topology, &profile);
+        *self.placement.write().unwrap() = new_plan;
+        self.observed_at_plan.store(profile.observed_tables(), Ordering::Relaxed);
+        self.replans.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Re-plan when the profile has grown meaningfully since the last
+    /// plan (first traffic, then every doubling) — the serving
+    /// front-end's steady-state entry point.
+    pub fn replan_if_due(&self, bundle: &ModelBundle) {
+        let observed = self.profile.lock().unwrap().observed_tables();
+        let at_plan = self.observed_at_plan.load(Ordering::Relaxed);
+        if observed > 0 && (at_plan == 0 || observed >= 2 * at_plan) {
+            self.replan_now(bundle);
+        }
+    }
+
+    /// Assign each job `(expert, row_count)` of one MoE layer (ascending
+    /// expert order) to a device: the least-loaded holder of that
+    /// expert, ties on the lower device id.  Also records per-device row
+    /// loads and promotes each assigned expert in its device's tier
+    /// ledger.
+    pub fn assign(&self, block: usize, jobs: &[(usize, usize)]) -> Vec<usize> {
+        let placement = self.placement.read().unwrap();
+        let mut loads = vec![0usize; self.set.len()];
+        let mut out = Vec::with_capacity(jobs.len());
+        for &(expert, rows) in jobs {
+            let key = ExpertKey::new(block, expert);
+            let dev = placement
+                .holders(&key)
+                .iter()
+                .copied()
+                .min_by_key(|&d| (loads[d], d))
+                .unwrap_or(0);
+            loads[dev] += rows;
+            out.push(dev);
+        }
+        drop(placement);
+        for (&(expert, rows), &dev) in jobs.iter().zip(out.iter()) {
+            self.rows[dev].fetch_add(rows as u64, Ordering::Relaxed);
+            self.set
+                .device(dev)
+                .note_promote(ExpertKey::new(block, expert), self.expert_sim_bytes);
+        }
+        out
+    }
+
+    /// Charge the modeled interconnect cost of running `n_rows` gathered
+    /// rows on `device`: rows ship out and outputs ship back (2x), one
+    /// fabric hop each way.  The primary computes in place and pays
+    /// nothing.  Returns the modeled seconds (also accumulated in the
+    /// cluster stats).
+    pub fn charge_activation_transfer(&self, device: usize, n_rows: usize) -> f64 {
+        if device == 0 || n_rows == 0 {
+            return 0.0;
+        }
+        let bytes = 2 * n_rows * self.d_model * std::mem::size_of::<f32>();
+        let secs = self.set.link_secs(bytes);
+        self.cross_device_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        *self.interconnect_secs.lock().unwrap() += secs;
+        secs
+    }
+
+    /// Plan one MoE layer's cluster prefetch: every predicted expert
+    /// missing from **any** of its holder devices, hottest first.
+    /// Replicas are warmed on every holder — replication means the
+    /// weights live on several devices, so the router can steer traffic
+    /// freely without a cold-start penalty.
+    pub fn plan_layer(
+        &self,
+        pairs: &[(&HashTable, &[f32])],
+        block: usize,
+        layer: usize,
+        k_used: usize,
+    ) -> Vec<ClusterFetch> {
+        let counts = crate::experts::predicted_expert_counts(pairs, layer, k_used);
+        let placement = self.placement.read().unwrap();
+        let mut plan = Vec::new();
+        for (expert, token_count) in counts {
+            let key = ExpertKey::new(block, expert);
+            for &device in placement.holders(&key) {
+                if !self.set.device(device).cache.contains(&key) {
+                    plan.push(ClusterFetch { key, device, token_count });
+                }
+            }
+        }
+        plan.sort_by(|a, b| b.token_count.cmp(&a.token_count).then(a.key.cmp(&b.key)));
+        plan
+    }
+
+    /// Execute a cluster fetch plan on the prefetch timeline
+    /// (non-blocking; resident entries cost one read-path hit).
+    pub fn fetch_planned(&self, bundle: &ModelBundle, plan: &[ClusterFetch]) -> Result<()> {
+        for fetch in plan {
+            let key = fetch.key;
+            let real = bundle.weights.expert_bytes(key.block, key.expert)?;
+            let _ = self.set.device(fetch.device).cache.ensure(key, real, false, || {
+                crate::runtime::stage_expert_parts(
+                    &bundle.engine,
+                    &bundle.weights,
+                    key.block,
+                    key.expert,
+                )
+            })?;
+            self.set.device(fetch.device).note_promote(key, self.expert_sim_bytes);
+        }
+        Ok(())
+    }
+
+    /// Warm one MoE layer's predicted experts on their holder devices
+    /// (the cluster twin of the single-device `warm_layer`).
+    pub fn warm_layer(
+        &self,
+        bundle: &ModelBundle,
+        pairs: &[(&HashTable, &[f32])],
+        block: usize,
+        layer: usize,
+        k_used: usize,
+    ) -> Result<()> {
+        let plan = self.plan_layer(pairs, block, layer, k_used);
+        self.fetch_planned(bundle, &plan)
+    }
+
+    /// Cluster-wide statistics snapshot.
+    pub fn stats(&self) -> ClusterStats {
+        let placement = self.placement.read().unwrap();
+        let devices = self
+            .set
+            .iter()
+            .map(|d| DeviceStats {
+                device: d.id,
+                budget_bytes: d.cache.budget(),
+                used_bytes: d.cache.used(),
+                peak_bytes: d.cache.peak(),
+                resident_experts: d.cache.resident_count(),
+                assigned_experts: placement.assigned_to(d.id),
+                rows: self.rows[d.id].load(Ordering::Relaxed),
+                cache: d.cache.stats(),
+                hierarchy: d.hierarchy_stats(),
+            })
+            .collect();
+        ClusterStats {
+            devices,
+            replicated_entries: placement.replicated_entries(),
+            cross_device_bytes: self.cross_device_bytes.load(Ordering::Relaxed),
+            interconnect_secs: *self.interconnect_secs.lock().unwrap(),
+            replans: self.replans.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Reset the serving counters (between bench phases): device cache
+    /// stats, row loads, interconnect totals.  Placement and residency
+    /// stay — a reset separates measurement epochs, it does not cool
+    /// the fleet.
+    pub fn reset_stats(&self) {
+        self.set.reset_stats();
+        for r in &self.rows {
+            r.store(0, Ordering::Relaxed);
+        }
+        self.cross_device_bytes.store(0, Ordering::Relaxed);
+        *self.interconnect_secs.lock().unwrap() = 0.0;
+    }
+
+    /// Every device cache's internal consistency (tests).
+    pub fn check_invariants(&self) -> Result<()> {
+        for d in self.set.iter() {
+            d.cache.check_invariants()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    fn router(devices: usize, replicate_top: usize) -> (std::sync::Arc<ModelBundle>, ClusterRouter) {
+        let b = testkit::tiny_bundle();
+        let cfg = ClusterConfig {
+            devices,
+            replicate_top,
+            ..ClusterConfig::default()
+        };
+        let r = ClusterRouter::new(&b, &cfg).unwrap();
+        (b, r)
+    }
+
+    #[test]
+    fn assign_covers_every_job_exactly_once() {
+        let (b, r) = router(3, 1);
+        let block = b.topology.moe_blocks[0];
+        let jobs: Vec<(usize, usize)> = (0..8).map(|e| (e, 2 + e)).collect();
+        let assign = r.assign(block, &jobs);
+        assert_eq!(assign.len(), jobs.len());
+        assert!(assign.iter().all(|&d| d < 3));
+        // disjoint per-device expert sets: one device per job
+        let stats = r.stats();
+        let total_rows: u64 = stats.devices.iter().map(|d| d.rows).sum();
+        assert_eq!(total_rows, jobs.iter().map(|&(_, n)| n as u64).sum::<u64>());
+    }
+
+    #[test]
+    fn assignment_is_deterministic() {
+        let (b, r) = router(4, 2);
+        let block = b.topology.moe_blocks[0];
+        let jobs: Vec<(usize, usize)> = (0..8).map(|e| (e, 1 + (e * 7) % 5)).collect();
+        assert_eq!(r.assign(block, &jobs), r.assign(block, &jobs));
+    }
+
+    #[test]
+    fn replicated_expert_goes_to_lightest_holder() {
+        let (b, r) = router(2, 1);
+        // data-aware plan: replicate_top=1 replicates the hottest
+        // expert of the layer onto both devices
+        let builder = crate::coordinator::HashBuilder::new(&b, testkit::TINY_PROFILE).unwrap();
+        let reqs = testkit::tiny_trace(&b, 6, 21);
+        let masks: Vec<Vec<f32>> = reqs.iter().map(|q| q.mask()).collect();
+        let tables: Vec<_> =
+            reqs.iter().map(|q| builder.build(q.id, &q.ids).unwrap()).collect();
+        let pairs: Vec<(&HashTable, &[f32])> =
+            tables.iter().zip(masks.iter()).map(|(t, m)| (t, m.as_slice())).collect();
+        r.observe(&pairs, 1);
+        r.replan_now(&b);
+        let placement = r.placement();
+        let hot = placement
+            .keys()
+            .copied()
+            .find(|k| placement.holders(k).len() == 2)
+            .expect("replicate_top=1 must produce a replica");
+        let home = placement.home_of(&hot);
+        // another expert homed on the same device as the replica's home
+        let pinned = placement
+            .keys()
+            .copied()
+            .find(|k| k.block == hot.block && *k != hot && placement.home_of(k) == home)
+            .expect("4 homes per device: a co-homed expert exists");
+        // a heavy job lands on `home` first; the replicated expert must
+        // steer to the other, lighter holder
+        let assign = r.assign(hot.block, &[(pinned.expert, 100), (hot.expert, 1)]);
+        assert_eq!(assign[0], home, "single-holder expert must run at home");
+        assert_ne!(assign[1], home, "replica steering failed: {assign:?}");
+    }
+
+    #[test]
+    fn interconnect_charged_only_off_primary() {
+        let (_, r) = router(2, 0);
+        assert_eq!(r.charge_activation_transfer(0, 100), 0.0);
+        let secs = r.charge_activation_transfer(1, 100);
+        assert!(secs > 0.0);
+        let stats = r.stats();
+        assert!(stats.cross_device_bytes > 0);
+        assert!((stats.interconnect_secs - secs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replan_if_due_fires_on_first_and_doubled_traffic() {
+        let (b, r) = router(2, 1);
+        assert_eq!(r.stats().replans, 0);
+        let builder = crate::coordinator::HashBuilder::new(&b, testkit::TINY_PROFILE).unwrap();
+        let reqs = testkit::tiny_trace(&b, 4, 9);
+        let masks: Vec<Vec<f32>> = reqs.iter().map(|q| q.mask()).collect();
+        let tables: Vec<_> =
+            reqs.iter().map(|q| builder.build(q.id, &q.ids).unwrap()).collect();
+        let pairs: Vec<(&HashTable, &[f32])> =
+            tables.iter().zip(masks.iter()).map(|(t, m)| (t, m.as_slice())).collect();
+        r.observe(&pairs[..1], 1);
+        r.replan_if_due(&b);
+        assert_eq!(r.stats().replans, 1, "first observation must trigger a plan");
+        r.replan_if_due(&b);
+        assert_eq!(r.stats().replans, 1, "no growth, no replan");
+        r.observe(&pairs[1..], 1);
+        r.replan_if_due(&b);
+        assert_eq!(r.stats().replans, 2, "doubled traffic must replan");
+    }
+}

@@ -1,0 +1,134 @@
+//! Per-device and cluster-wide serving statistics: memory, cache
+//! traffic, load balance, and modeled interconnect cost.
+
+use crate::experts::CacheStats;
+use crate::memory::HierarchyStats;
+
+/// One device's snapshot.
+#[derive(Debug, Default, Clone)]
+pub struct DeviceStats {
+    pub device: usize,
+    /// simulated device budget in effect
+    pub budget_bytes: usize,
+    /// simulated bytes resident right now
+    pub used_bytes: usize,
+    /// simulated peak residency over the run
+    pub peak_bytes: usize,
+    /// experts resident right now
+    pub resident_experts: usize,
+    /// placement entries (home + replica) assigned to this device
+    pub assigned_experts: usize,
+    /// token rows dispatched to this device
+    pub rows: u64,
+    /// the device cache's full counter set (hits, misses, transfers,
+    /// overlap split)
+    pub cache: CacheStats,
+    /// modeled device/RAM/SSD ladder traffic for this device
+    pub hierarchy: HierarchyStats,
+}
+
+/// Cluster-wide snapshot: every device plus the cross-device totals.
+#[derive(Debug, Default, Clone)]
+pub struct ClusterStats {
+    pub devices: Vec<DeviceStats>,
+    /// placement entries beyond the one home per expert
+    pub replicated_entries: usize,
+    /// activation bytes moved across the device fabric (both directions)
+    pub cross_device_bytes: u64,
+    /// modeled seconds those activation transfers cost
+    pub interconnect_secs: f64,
+    /// placement (re)computations performed
+    pub replans: u64,
+}
+
+impl ClusterStats {
+    /// Max-over-mean row load across devices (1.0 = perfectly balanced;
+    /// `None` before any expert work was dispatched).  The denominator
+    /// is the mean over **all** devices, idle ones included — an idle
+    /// device is imbalance, not a smaller cluster.
+    pub fn load_imbalance(&self) -> Option<f64> {
+        if self.devices.is_empty() {
+            return None;
+        }
+        let total: u64 = self.devices.iter().map(|d| d.rows).sum();
+        if total == 0 {
+            return None;
+        }
+        let mean = total as f64 / self.devices.len() as f64;
+        let max = self.devices.iter().map(|d| d.rows).max().unwrap_or(0) as f64;
+        Some(max / mean)
+    }
+
+    /// The worst single device's peak residency — the per-device GPU
+    /// memory the fleet must provision (the fig_cluster bench axis).
+    pub fn max_device_peak_bytes(&self) -> usize {
+        self.devices.iter().map(|d| d.peak_bytes).max().unwrap_or(0)
+    }
+
+    /// The worst single device's placement footprint in experts.
+    pub fn max_device_assigned(&self) -> usize {
+        self.devices.iter().map(|d| d.assigned_experts).max().unwrap_or(0)
+    }
+
+    /// Aggregate hit rate across every device cache (`None` with no
+    /// traffic anywhere).
+    pub fn hit_rate(&self) -> Option<f64> {
+        let hits: u64 = self.devices.iter().map(|d| d.cache.hits).sum();
+        let misses: u64 = self.devices.iter().map(|d| d.cache.misses).sum();
+        if hits + misses == 0 {
+            None
+        } else {
+            Some(hits as f64 / (hits + misses) as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev(device: usize, rows: u64, peak: usize) -> DeviceStats {
+        DeviceStats { device, rows, peak_bytes: peak, ..Default::default() }
+    }
+
+    #[test]
+    fn imbalance_is_max_over_mean() {
+        let s = ClusterStats {
+            devices: vec![dev(0, 30, 10), dev(1, 10, 20)],
+            ..Default::default()
+        };
+        // mean 20, max 30 -> 1.5
+        assert!((s.load_imbalance().unwrap() - 1.5).abs() < 1e-12);
+        assert_eq!(s.max_device_peak_bytes(), 20);
+    }
+
+    #[test]
+    fn idle_cluster_has_no_imbalance() {
+        let s = ClusterStats { devices: vec![dev(0, 0, 0), dev(1, 0, 0)], ..Default::default() };
+        assert_eq!(s.load_imbalance(), None);
+        assert_eq!(ClusterStats::default().load_imbalance(), None);
+    }
+
+    #[test]
+    fn idle_device_counts_toward_imbalance() {
+        let s = ClusterStats {
+            devices: vec![dev(0, 40, 0), dev(1, 0, 0)],
+            ..Default::default()
+        };
+        // mean 20, max 40 -> 2.0: one idle device of two
+        assert!((s.load_imbalance().unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hit_rate_aggregates_across_devices() {
+        let mut a = dev(0, 1, 0);
+        a.cache.hits = 3;
+        a.cache.misses = 1;
+        let mut b = dev(1, 1, 0);
+        b.cache.hits = 1;
+        b.cache.misses = 3;
+        let s = ClusterStats { devices: vec![a, b], ..Default::default() };
+        assert!((s.hit_rate().unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(ClusterStats::default().hit_rate(), None);
+    }
+}

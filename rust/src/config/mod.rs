@@ -34,6 +34,13 @@ pub struct ServeConfig {
     /// worker-pool width for concurrent expert execution (0 = auto-size
     /// from the machine / `SIDA_POOL_THREADS`; 1 = sequential)
     pub pool_threads: usize,
+    /// modeled devices to serve across (1 = single device; > 1 enables
+    /// expert parallelism for the sida method — the budget is then per
+    /// device)
+    pub devices: usize,
+    /// hottest experts per MoE layer replicated across the fleet
+    /// (cluster mode only)
+    pub replicate_top: usize,
     /// number of requests in the trace
     pub n_requests: usize,
     /// workload seed
@@ -59,6 +66,8 @@ impl Default for ServeConfig {
             prefetch: true,
             max_batch: 1,
             pool_threads: 0,
+            devices: 1,
+            replicate_top: 1,
             n_requests: 32,
             seed: 0,
             want_lm: false,
@@ -84,6 +93,8 @@ impl ServeConfig {
                 "prefetch" => cfg.prefetch = val.as_bool()?,
                 "max_batch" => cfg.max_batch = val.as_usize()?.max(1),
                 "pool_threads" => cfg.pool_threads = val.as_usize()?,
+                "devices" => cfg.devices = val.as_usize()?.max(1),
+                "replicate_top" => cfg.replicate_top = val.as_usize()?,
                 "n_requests" => cfg.n_requests = val.as_usize()?,
                 "seed" => cfg.seed = val.as_u64()?,
                 "want_lm" => cfg.want_lm = val.as_bool()?,
@@ -133,6 +144,16 @@ impl ServeConfig {
         if let Some(v) = args.get("pool") {
             if let Ok(x) = v.parse::<usize>() {
                 self.pool_threads = x;
+            }
+        }
+        if let Some(v) = args.get("devices") {
+            if let Ok(x) = v.parse::<usize>() {
+                self.devices = x.max(1);
+            }
+        }
+        if let Some(v) = args.get("replicate-top") {
+            if let Ok(x) = v.parse::<usize>() {
+                self.replicate_top = x;
             }
         }
         if let Some(v) = args.get("requests") {
@@ -193,6 +214,20 @@ mod tests {
         assert!((c.budget_gb - 24.5).abs() < 1e-9);
         assert!(c.real_sleep);
         assert!(!c.prefetch);
+    }
+
+    #[test]
+    fn cluster_keys_parse_and_clamp() {
+        let j = Json::parse(r#"{"devices":4,"replicate_top":2}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.devices, 4);
+        assert_eq!(c.replicate_top, 2);
+        let j = Json::parse(r#"{"devices":0}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().devices, 1);
+        // defaults: single device, one replica slot
+        let d = ServeConfig::default();
+        assert_eq!(d.devices, 1);
+        assert_eq!(d.replicate_top, 1);
     }
 
     #[test]

@@ -43,6 +43,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::cluster::{ClusterConfig, ClusterFetch, ClusterRouter};
 use crate::coordinator::hash_table::HashTable;
 use crate::coordinator::hash_thread::HashBuilder;
 use crate::experts::{
@@ -80,6 +81,14 @@ pub struct PipelineConfig {
     /// worker-pool width for concurrent expert execution
     /// (0 = auto-size from the machine / `SIDA_POOL_THREADS`)
     pub pool_threads: usize,
+    /// modeled devices to serve across (1 = the paper's single-device
+    /// setting; > 1 enables expert parallelism: data-aware placement,
+    /// hot-expert replication, per-device caches — see
+    /// [`crate::cluster`]).  `budget_sim_bytes` is then **per device**.
+    pub devices: usize,
+    /// hottest experts per MoE layer replicated across the fleet
+    /// (cluster mode only)
+    pub replicate_top: usize,
     pub want_lm: bool,
     pub want_cls: bool,
 }
@@ -95,6 +104,8 @@ impl Default for PipelineConfig {
             queue_depth: 8,
             max_batch: 1,
             pool_threads: 0,
+            devices: 1,
+            replicate_top: 1,
             want_lm: false,
             want_cls: false,
         }
@@ -136,7 +147,11 @@ pub struct RequestResult {
 pub struct Pipeline {
     pub bundle: Arc<ModelBundle>,
     pub runner: Arc<ModelRunner>,
+    /// single-device expert cache (the serving residency tier when
+    /// `cfg.devices == 1`; cluster mode uses per-device caches instead)
     pub cache: Arc<SharedExpertCache>,
+    /// the device fleet + router when `cfg.devices > 1`
+    pub cluster: Option<Arc<ClusterRouter>>,
     pub cfg: PipelineConfig,
     pub profile: String,
 }
@@ -152,13 +167,78 @@ impl Pipeline {
             cost,
             make_policy(&cfg.policy)?,
         )));
+        let cluster = if cfg.devices > 1 {
+            Some(Arc::new(ClusterRouter::new(
+                &bundle,
+                &ClusterConfig {
+                    devices: cfg.devices,
+                    replicate_top: cfg.replicate_top,
+                    budget_per_device: cfg.budget_sim_bytes,
+                    policy: cfg.policy.clone(),
+                    real_sleep: cfg.real_sleep,
+                    ..ClusterConfig::default()
+                },
+            )?))
+        } else {
+            None
+        };
         Ok(Pipeline {
             bundle,
             runner,
             cache,
+            cluster,
             cfg,
             profile: profile.to_string(),
         })
+    }
+
+    /// The expert provider serving this pipeline: the shared
+    /// single-device cache, or the cluster router in multi-device mode.
+    pub(crate) fn provider(&self) -> ExpertProvider<'_> {
+        match &self.cluster {
+            Some(router) => ExpertProvider::Cluster { router, blocking: true },
+            None => ExpertProvider::Shared { cache: &self.cache, blocking: true },
+        }
+    }
+
+    /// Who the prefetch stages warm (see [`WarmTarget`]).
+    fn warm_target(&self) -> WarmTarget {
+        match &self.cluster {
+            Some(router) => WarmTarget::Cluster { router: router.clone() },
+            None => WarmTarget::Single { cache: self.cache.clone() },
+        }
+    }
+
+    /// Data-aware placement from a sample of the trace's own hash
+    /// predictions: build tables for the first few requests, fold them
+    /// into the activation profile, and (re)plan homes + replicas.  The
+    /// sampled tables are rebuilt by the hash thread during serving —
+    /// a deliberate, cheap double build (profiling pass), not a cache.
+    /// No-op on a single-device pipeline; the open-loop scheduler calls
+    /// this too before replaying a trace.
+    pub(crate) fn plan_cluster_placement(&self, requests: &[Request]) -> Result<()> {
+        let Some(router) = &self.cluster else {
+            return Ok(());
+        };
+        const SAMPLE: usize = 8;
+        let builder = HashBuilder::new(&self.bundle, &self.profile)?;
+        for req in requests.iter().take(SAMPLE) {
+            let table = builder.build(req.id, &req.ids)?;
+            let mask = req.mask();
+            router.observe(&[(&table, &mask[..])], self.cfg.k_used);
+        }
+        router.replan_now(&self.bundle);
+        Ok(())
+    }
+
+    /// Reset every serving counter (single-device cache and, in cluster
+    /// mode, every device cache + the router's totals) — between bench
+    /// warmup and measurement.
+    pub fn reset_serving_stats(&self) {
+        self.cache.reset_stats();
+        if let Some(router) = &self.cluster {
+            router.reset_stats();
+        }
     }
 
     /// Serve a closed-loop trace; returns aggregate + per-request stats.
@@ -170,6 +250,7 @@ impl Pipeline {
         if self.cfg.max_batch > 1 {
             return self.serve_batched(requests);
         }
+        self.plan_cluster_placement(requests)?;
         let builder = HashBuilder::new(&self.bundle, &self.profile)?;
         let (tx, rx): (
             SyncSender<(Request, HashTable)>,
@@ -208,7 +289,7 @@ impl Pipeline {
             Receiver<(Request, HashTable)>,
         ) = sync_channel(self.cfg.queue_depth);
         let prefetch_handle = if self.cfg.prefetch {
-            let cache = self.cache.clone();
+            let target = self.warm_target();
             let bundle = self.bundle.clone();
             let k_used = self.cfg.k_used;
             let moe_blocks = self.bundle.topology.moe_blocks.clone();
@@ -221,13 +302,13 @@ impl Pipeline {
                             let deeper = {
                                 let pairs: Vec<(&HashTable, &[f32])> =
                                     vec![(&table, &mask[..])];
-                                warm_layer(&bundle, &cache, &pairs, moe_blocks[0], 0, k_used)?;
-                                plan_deeper_layers(&cache, &pairs, &moe_blocks, k_used)
+                                target.warm_layer(&bundle, &pairs, moe_blocks[0], 0, k_used)?;
+                                target.plan_deeper(&pairs, &moe_blocks, k_used)
                             };
                             if ptx.send((req, table)).is_err() {
                                 break;
                             }
-                            fetch_planned(&bundle, &cache, &deeper)?;
+                            target.fetch_deeper(&bundle, &deeper)?;
                         }
                         Ok(())
                     })
@@ -262,10 +343,7 @@ impl Pipeline {
         };
         while let Ok((req, table)) = prx.recv() {
             let t0 = Instant::now();
-            let mut provider = ExpertProvider::Shared {
-                cache: &self.cache,
-                blocking: true,
-            };
+            let mut provider = self.provider();
             let out = if self.cfg.prefetch {
                 let mask = req.mask();
                 let pairs: Vec<(&HashTable, &[f32])> = vec![(&table, &mask[..])];
@@ -317,7 +395,7 @@ impl Pipeline {
         }
         let _hash_secs = hash_handle.join().expect("hash thread panicked")?;
 
-        self.collect_cache_stats(&mut stats);
+        self.collect_serving_stats(&mut stats);
         Ok(ServeOutcome { stats, per_request })
     }
 
@@ -333,6 +411,7 @@ impl Pipeline {
     /// Per-request latency is the shared forward time of the batch the
     /// request rode in (all requests of a batch complete together).
     pub fn serve_batched(&self, requests: &[Request]) -> Result<ServeOutcome> {
+        self.plan_cluster_placement(requests)?;
         let builder = HashBuilder::new(&self.bundle, &self.profile)?;
         let (tx, rx): (
             SyncSender<(Request, HashTable)>,
@@ -364,7 +443,7 @@ impl Pipeline {
             Receiver<Vec<(Request, HashTable)>>,
         ) = sync_channel(self.cfg.queue_depth);
         let former_handle = {
-            let cache = self.cache.clone();
+            let target = self.warm_target();
             let bundle = self.bundle.clone();
             let k_used = self.cfg.k_used;
             let max_batch = self.cfg.max_batch.max(1);
@@ -381,16 +460,18 @@ impl Pipeline {
                                 if pending.len() >= max_batch {
                                     let batch = std::mem::take(&mut pending);
                                     let deeper = if prefetch {
-                                        stage_batch_prefetch(
-                                            &bundle, &cache, &batch, &moe_blocks, k_used,
-                                        )?
+                                        Some(stage_batch_prefetch(
+                                            &bundle, &target, &batch, &moe_blocks, k_used,
+                                        )?)
                                     } else {
-                                        Vec::new()
+                                        None
                                     };
                                     if ptx.send(batch).is_err() {
                                         return Ok(());
                                     }
-                                    fetch_planned(&bundle, &cache, &deeper)?;
+                                    if let Some(plan) = deeper {
+                                        target.fetch_deeper(&bundle, &plan)?;
+                                    }
                                 }
                             }
                             Err(_) => break, // hash thread done
@@ -398,14 +479,18 @@ impl Pipeline {
                     }
                     if !pending.is_empty() {
                         let deeper = if prefetch {
-                            stage_batch_prefetch(&bundle, &cache, &pending, &moe_blocks, k_used)?
+                            Some(stage_batch_prefetch(
+                                &bundle, &target, &pending, &moe_blocks, k_used,
+                            )?)
                         } else {
-                            Vec::new()
+                            None
                         };
                         if ptx.send(pending).is_err() {
                             return Ok(());
                         }
-                        fetch_planned(&bundle, &cache, &deeper)?;
+                        if let Some(plan) = deeper {
+                            target.fetch_deeper(&bundle, &plan)?;
+                        }
                     }
                     Ok(())
                 })
@@ -431,10 +516,7 @@ impl Pipeline {
                     hash: Some((table, self.cfg.k_used)),
                 })
                 .collect();
-            let mut provider = ExpertProvider::Shared {
-                cache: &self.cache,
-                blocking: true,
-            };
+            let mut provider = self.provider();
             let out = if self.cfg.prefetch {
                 let pairs: Vec<(&HashTable, &[f32])> = batch
                     .iter()
@@ -477,7 +559,7 @@ impl Pipeline {
         former_handle.join().expect("batch-former thread panicked")?;
         let _hash_secs = hash_handle.join().expect("hash thread panicked")?;
 
-        self.collect_cache_stats(&mut stats);
+        self.collect_serving_stats(&mut stats);
         Ok(ServeOutcome { stats, per_request })
     }
 
@@ -489,7 +571,7 @@ impl Pipeline {
     ) -> Result<T> {
         run_gated_forward(
             &self.bundle,
-            &self.cache,
+            &self.warm_target(),
             pairs,
             &self.bundle.topology.moe_blocks,
             self.cfg.k_used,
@@ -497,17 +579,114 @@ impl Pipeline {
         )
     }
 
-    fn collect_cache_stats(&self, stats: &mut ServeStats) {
-        let cs = self.cache.stats();
-        stats.cache_hits = cs.hits;
-        stats.cache_misses = cs.misses;
-        stats.blocking_misses = cs.blocking_misses;
-        stats.evictions = cs.evictions;
-        stats.transferred_bytes = cs.transferred_sim_bytes;
-        stats.modeled_transfer_secs = cs.modeled_transfer_secs;
-        stats.overlapped_transfer_secs = cs.overlapped_transfer_secs;
-        stats.peak_device_bytes = self.cache.peak();
-        stats.budget_bytes = self.cache.budget();
+    /// Fold the serving-tier counters into `stats`: the single shared
+    /// cache, or — in cluster mode — the aggregate over every device
+    /// cache plus the full per-device [`crate::cluster::ClusterStats`].
+    pub(crate) fn collect_serving_stats(&self, stats: &mut ServeStats) {
+        match &self.cluster {
+            None => {
+                let cs = self.cache.stats();
+                stats.cache_hits = cs.hits;
+                stats.cache_misses = cs.misses;
+                stats.blocking_misses = cs.blocking_misses;
+                stats.evictions = cs.evictions;
+                stats.transferred_bytes = cs.transferred_sim_bytes;
+                stats.modeled_transfer_secs = cs.modeled_transfer_secs;
+                stats.overlapped_transfer_secs = cs.overlapped_transfer_secs;
+                stats.peak_device_bytes = self.cache.peak();
+                stats.budget_bytes = self.cache.budget();
+            }
+            Some(router) => {
+                let cs = router.stats();
+                for d in &cs.devices {
+                    stats.cache_hits += d.cache.hits;
+                    stats.cache_misses += d.cache.misses;
+                    stats.blocking_misses += d.cache.blocking_misses;
+                    stats.evictions += d.cache.evictions;
+                    stats.transferred_bytes += d.cache.transferred_sim_bytes;
+                    stats.modeled_transfer_secs += d.cache.modeled_transfer_secs;
+                    stats.overlapped_transfer_secs += d.cache.overlapped_transfer_secs;
+                }
+                // the per-device view: the worst device's peak is what
+                // each modeled accelerator must provision
+                stats.peak_device_bytes = cs.max_device_peak_bytes();
+                stats.budget_bytes = router.device_set().budget_per_device;
+                stats.cluster = Some(cs);
+            }
+        }
+    }
+}
+
+/// Who the prefetch stages and the layer-ahead warmer stage experts
+/// into: the single shared cache, or the cluster fleet (each expert on
+/// its holder devices).  Owns `Arc`s so prefetch threads can move it.
+#[derive(Clone)]
+pub(crate) enum WarmTarget {
+    Single { cache: Arc<SharedExpertCache> },
+    Cluster { router: Arc<ClusterRouter> },
+}
+
+/// A deferred fetch plan for the MoE layers after the first —
+/// planned before the request is handed to inference, fetched after.
+pub(crate) enum DeeperPlan {
+    Single(Vec<PlannedFetch>),
+    Cluster(Vec<ClusterFetch>),
+}
+
+impl WarmTarget {
+    /// Warm one MoE layer's predicted union (non-blocking, prefetch
+    /// timeline) wherever this target stages experts.
+    pub(crate) fn warm_layer(
+        &self,
+        bundle: &ModelBundle,
+        pairs: &[(&HashTable, &[f32])],
+        block: usize,
+        layer: usize,
+        k_used: usize,
+    ) -> Result<()> {
+        match self {
+            WarmTarget::Single { cache } => {
+                warm_layer(bundle, cache, pairs, block, layer, k_used)
+            }
+            WarmTarget::Cluster { router } => {
+                router.warm_layer(bundle, pairs, block, layer, k_used)
+            }
+        }
+    }
+
+    /// Fetch plan for every MoE layer after the first.
+    pub(crate) fn plan_deeper(
+        &self,
+        pairs: &[(&HashTable, &[f32])],
+        moe_blocks: &[usize],
+        k_used: usize,
+    ) -> DeeperPlan {
+        match self {
+            WarmTarget::Single { cache } => {
+                DeeperPlan::Single(plan_deeper_layers(cache, pairs, moe_blocks, k_used))
+            }
+            WarmTarget::Cluster { router } => {
+                let mut plan = Vec::new();
+                for (layer, &block) in moe_blocks.iter().enumerate().skip(1) {
+                    plan.extend(router.plan_layer(pairs, block, layer, k_used));
+                }
+                DeeperPlan::Cluster(plan)
+            }
+        }
+    }
+
+    /// Execute a deferred plan on the prefetch timeline.
+    pub(crate) fn fetch_deeper(&self, bundle: &ModelBundle, plan: &DeeperPlan) -> Result<()> {
+        match (self, plan) {
+            (WarmTarget::Single { cache }, DeeperPlan::Single(p)) => {
+                fetch_planned(bundle, cache, p)
+            }
+            (WarmTarget::Cluster { router }, DeeperPlan::Cluster(p)) => {
+                router.fetch_planned(bundle, p)
+            }
+            // a plan always comes from the same target that executes it
+            _ => Ok(()),
+        }
     }
 }
 
@@ -525,7 +704,7 @@ impl Pipeline {
 /// forward output is complete and correct.
 pub(crate) fn run_gated_forward<T>(
     bundle: &ModelBundle,
-    cache: &SharedExpertCache,
+    target: &WarmTarget,
     pairs: &[(&HashTable, &[f32])],
     moe_blocks: &[usize],
     k_used: usize,
@@ -535,7 +714,7 @@ pub(crate) fn run_gated_forward<T>(
     std::thread::scope(|s| -> Result<T> {
         let warmer = {
             let gate = &gate;
-            s.spawn(move || layer_ahead_warmer(bundle, cache, gate, pairs, moe_blocks, k_used))
+            s.spawn(move || layer_ahead_warmer(bundle, target, gate, pairs, moe_blocks, k_used))
         };
         let result = {
             // release the warmer on every exit path, unwinding included
@@ -617,19 +796,19 @@ fn plan_deeper_layers(
 /// to fetch after the hand-off (request-ahead overlap).
 fn stage_batch_prefetch(
     bundle: &ModelBundle,
-    cache: &SharedExpertCache,
+    target: &WarmTarget,
     batch: &[(Request, HashTable)],
     moe_blocks: &[usize],
     k_used: usize,
-) -> Result<Vec<PlannedFetch>> {
+) -> Result<DeeperPlan> {
     let masks: Vec<Vec<f32>> = batch.iter().map(|(req, _)| req.mask()).collect();
     let pairs: Vec<(&HashTable, &[f32])> = batch
         .iter()
         .zip(masks.iter())
         .map(|((_, table), mask)| (table, mask.as_slice()))
         .collect();
-    warm_layer(bundle, cache, &pairs, moe_blocks[0], 0, k_used)?;
-    Ok(plan_deeper_layers(cache, &pairs, moe_blocks, k_used))
+    target.warm_layer(bundle, &pairs, moe_blocks[0], 0, k_used)?;
+    Ok(target.plan_deeper(&pairs, moe_blocks, k_used))
 }
 
 /// The layer-ahead warmer body: stage layer 0, then stage layer j+1 as
@@ -638,7 +817,7 @@ fn stage_batch_prefetch(
 /// can never deadlock on a dead warmer.
 pub(crate) fn layer_ahead_warmer(
     bundle: &ModelBundle,
-    cache: &SharedExpertCache,
+    target: &WarmTarget,
     gate: &LayerGate,
     pairs: &[(&HashTable, &[f32])],
     moe_blocks: &[usize],
@@ -655,7 +834,7 @@ pub(crate) fn layer_ahead_warmer(
         if layer > 0 && !gate.wait_compute_at_least(layer - 1) {
             break; // forward pass already over — nothing left to warm
         }
-        warm_layer(bundle, cache, pairs, block, layer, k_used)?;
+        target.warm_layer(bundle, pairs, block, layer, k_used)?;
         gate.mark_warmed(layer);
     }
     Ok(())

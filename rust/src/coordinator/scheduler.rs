@@ -15,7 +15,7 @@ use anyhow::Result;
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::pipeline::{Pipeline, RequestResult, ServeOutcome};
 use crate::metrics::ServeStats;
-use crate::model::{ExpertProvider, ForwardOptions};
+use crate::model::ForwardOptions;
 use crate::workload::Request;
 
 pub struct OpenLoopReport {
@@ -40,6 +40,9 @@ pub fn replay_open_loop(
     let mut batcher = Batcher::new(queue_cap);
     let mut pending: Vec<Request> = trace.to_vec();
     pending.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    // cluster mode: data-aware placement from the trace's own
+    // predictions before replay starts (no-op on a single device)
+    pipeline.plan_cluster_placement(&pending)?;
 
     let opts = ForwardOptions {
         want_cls: pipeline.cfg.want_cls,
@@ -66,10 +69,12 @@ pub fn replay_open_loop(
         queueing_total += (dequeue_at - req.arrival).max(0.0);
 
         // synchronous hash build + forward (the pipelined variant is
-        // Pipeline::serve; open-loop measures client-visible latency)
+        // Pipeline::serve; open-loop measures client-visible latency).
+        // `provider()` keeps this path cluster-aware: with
+        // `cfg.devices > 1` the forward fans out across the fleet.
         let table = builder.build(req.id, &req.ids)?;
         let t0 = Instant::now();
-        let mut provider = ExpertProvider::Shared { cache: &pipeline.cache, blocking: true };
+        let mut provider = pipeline.provider();
         let out = pipeline.runner.forward(
             &req.ids,
             Some((&table, pipeline.cfg.k_used)),
@@ -92,18 +97,7 @@ pub fn replay_open_loop(
         });
     }
     stats.wall_secs = t_start.elapsed().as_secs_f64();
-    {
-        let cs = pipeline.cache.stats();
-        stats.cache_hits = cs.hits;
-        stats.cache_misses = cs.misses;
-        stats.blocking_misses = cs.blocking_misses;
-        stats.evictions = cs.evictions;
-        stats.transferred_bytes = cs.transferred_sim_bytes;
-        stats.modeled_transfer_secs = cs.modeled_transfer_secs;
-        stats.overlapped_transfer_secs = cs.overlapped_transfer_secs;
-        stats.peak_device_bytes = pipeline.cache.peak();
-        stats.budget_bytes = pipeline.cache.budget();
-    }
+    pipeline.collect_serving_stats(&mut stats);
     let n = stats.requests.max(1) as f64;
     Ok(OpenLoopReport {
         outcome: ServeOutcome { stats, per_request },

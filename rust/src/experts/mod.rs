@@ -18,7 +18,10 @@ pub mod prefetch;
 pub mod shared;
 
 pub use cache::{CacheStats, EnsureOutcome, ExpertCache, ResidentExpert};
-pub use prefetch::{plan_prefetch, plan_prefetch_layer, plan_prefetch_union, PlannedFetch};
+pub use prefetch::{
+    plan_prefetch, plan_prefetch_layer, plan_prefetch_union, predicted_expert_counts,
+    PlannedFetch,
+};
 pub use policy::{make_policy, EvictionPolicy};
 pub use shared::SharedExpertCache;
 

@@ -67,19 +67,16 @@ pub fn plan_prefetch_union(
     plan
 }
 
-/// Fetch plan for **one MoE layer** of a (batch of) request(s) — the
-/// planning unit of the layer-ahead warmer, which stages layer `j+1`'s
-/// union while the inference thread computes layer `j`.  Missing
-/// experts only, hottest (most routed tokens across the batch) first.
-pub fn plan_prefetch_layer(
+/// Token counts per predicted expert at one MoE layer, summed over
+/// every `(table, mask)` request of a batch — THE counting rule every
+/// prefetch planner shares (single-device plans here, the cluster
+/// router's per-holder plans, activation profiling).  Masked-out
+/// tokens never count; ranks beyond the table's `k` are clamped.
+pub fn predicted_expert_counts(
     requests: &[(&HashTable, &[f32])],
-    block: usize,
     layer: usize,
     k_used: usize,
-    cache: &ExpertCache,
-) -> Vec<PlannedFetch> {
-    // token counts per predicted expert at this layer, summed over
-    // every request of the batch
+) -> BTreeMap<usize, usize> {
     let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
     for &(table, mask) in requests {
         for t in 0..table.seq_len {
@@ -91,6 +88,21 @@ pub fn plan_prefetch_layer(
             }
         }
     }
+    counts
+}
+
+/// Fetch plan for **one MoE layer** of a (batch of) request(s) — the
+/// planning unit of the layer-ahead warmer, which stages layer `j+1`'s
+/// union while the inference thread computes layer `j`.  Missing
+/// experts only, hottest (most routed tokens across the batch) first.
+pub fn plan_prefetch_layer(
+    requests: &[(&HashTable, &[f32])],
+    block: usize,
+    layer: usize,
+    k_used: usize,
+    cache: &ExpertCache,
+) -> Vec<PlannedFetch> {
+    let counts = predicted_expert_counts(requests, layer, k_used);
     let mut layer_plan: Vec<PlannedFetch> = counts
         .into_iter()
         .filter(|(expert, _)| !cache.contains(&ExpertKey::new(block, *expert)))

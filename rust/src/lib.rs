@@ -31,6 +31,9 @@
 //!   across connections.
 //! * [`experts`] — budgeted device-residency cache with pluggable
 //!   eviction and the (batch-union) prefetch planner.
+//! * [`cluster`] — multi-device expert parallelism: data-aware
+//!   placement, hot-expert replication, per-device caches/ledgers, and
+//!   the cluster router (`--devices N --replicate-top R`).
 //! * [`server`] — TCP line-protocol front-end: connections feed one
 //!   shared admission queue; a worker serves formed batches.
 //! * [`testkit`] — synthetic bundles + the pure-Rust reference backend;
@@ -62,6 +65,7 @@
 
 pub mod baselines;
 pub mod bench_support;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod experts;

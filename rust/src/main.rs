@@ -78,6 +78,8 @@ fn serve_cli() -> Cli {
         .opt("k-used", "hash experts per token (0 = paper default)", "0")
         .opt("batch", "requests per forward pass (1 = paper batch-1; >1 batches cross-request)", "1")
         .opt("pool", "worker threads for expert execution (0 = auto, 1 = sequential)", "0")
+        .opt("devices", "modeled devices for expert parallelism (budget is per device)", "1")
+        .opt("replicate-top", "hottest experts per MoE layer replicated across devices", "1")
         .opt("requests", "number of requests", "32")
         .opt("seed", "workload seed", "0")
         .opt("artifacts", "artifacts root", "")
@@ -137,6 +139,8 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
                 queue_depth: 8,
                 max_batch: cfg.max_batch,
                 pool_threads: cfg.pool_threads,
+                devices: cfg.devices,
+                replicate_top: cfg.replicate_top,
                 want_lm: cfg.want_lm,
                 want_cls: cfg.want_cls,
             };
@@ -196,6 +200,30 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
         sida_moe::metrics::report::fmt_rate(stats.hit_rate()),
     ]);
     t.print();
+
+    if let Some(cluster) = &stats.cluster {
+        let mut ct = Table::new(
+            "cluster report (per device)",
+            &["device", "assigned experts", "peak mem", "rows", "hit rate"],
+        );
+        for d in &cluster.devices {
+            ct.row(vec![
+                d.device.to_string(),
+                d.assigned_experts.to_string(),
+                fmt_bytes(d.peak_bytes),
+                d.rows.to_string(),
+                sida_moe::metrics::report::fmt_rate(d.cache.hit_rate()),
+            ]);
+        }
+        ct.row(vec![
+            "imbalance".into(),
+            format!("{:.2}x", cluster.load_imbalance().unwrap_or(1.0)),
+            format!("x-dev {}", fmt_bytes(cluster.cross_device_bytes as usize)),
+            format!("{:.3}s link", cluster.interconnect_secs),
+            format!("{} replicas", cluster.replicated_entries),
+        ]);
+        ct.print();
+    }
     Ok(())
 }
 
@@ -208,6 +236,8 @@ fn cmd_server(tail: &[String]) -> Result<()> {
         .opt("pool", "worker threads for expert execution (0 = auto)", "0")
         .opt("batch-delay-ms", "max time a request waits for its batch to fill", "5")
         .opt("queue-cap", "admission queue bound (overflow is rejected)", "256")
+        .opt("devices", "modeled devices for expert parallelism (budget is per device)", "1")
+        .opt("replicate-top", "hottest experts per MoE layer replicated across devices", "1")
         .opt("addr", "listen address", "127.0.0.1:7700")
         .opt("artifacts", "artifacts root", "");
     let args = cli.parse_tail(tail);
@@ -226,6 +256,8 @@ fn cmd_server(tail: &[String]) -> Result<()> {
             capacity: args.get_usize("queue-cap", 256).max(1),
         },
         pool_threads: args.get_usize("pool", 0),
+        devices: args.get_usize("devices", 1).max(1),
+        replicate_top: args.get_usize("replicate-top", 1),
     };
     let state = Arc::new(ServerState::new(
         bundle,

@@ -37,6 +37,10 @@ pub struct ServeStats {
     /// layer-ahead warmer); the critical path pays only
     /// [`ServeStats::exposed_transfer_secs`]
     pub overlapped_transfer_secs: f64,
+    /// per-device breakdown when the run served across a modeled device
+    /// fleet (`--devices N`): memory, cache traffic, row loads,
+    /// cross-device transfer totals.  `None` for single-device runs.
+    pub cluster: Option<crate::cluster::ClusterStats>,
 }
 
 impl ServeStats {
@@ -90,19 +94,18 @@ impl ServeStats {
     /// `real_sleep = false` (virtual transfer cost): with real sleeps
     /// the stalls are already inside the measured walls.
     ///
-    /// Known model limits: (a) a fetch charged on the prefetch
-    /// timeline is credited as fully overlapped regardless of how much
-    /// compute was actually available to hide it — in virtual mode the
-    /// warmer runs at host speed, so `stall_secs` cannot surface a
-    /// modeled-bandwidth shortfall (it does under `real_sleep = true`,
-    /// where the warmer really sleeps the modeled time); (b) a
-    /// *blocking* fetch's physical staging wall (microseconds at repro
-    /// scale) lands inside `expert_wall_secs` while its *modeled*
-    /// seconds (milliseconds at paper scale) are billed as exposed
-    /// transfer — a small double count on paths that fetch on the
-    /// critical path, which slightly flatters prefetching.  Within one
-    /// mode both biases are constant, so trajectory *comparisons*
-    /// remain valid.
+    /// Known model limits: (a) prefetch-timeline fetches queue on a
+    /// virtual busy-until clock, so a burst of prefetches is credited
+    /// only up to the modeled bandwidth window that actually existed
+    /// (the uncredited share surfaces as exposed transfer) — but the
+    /// window is measured in host wall time, which in virtual mode runs
+    /// faster than paper-scale compute would; (b) a *blocking* fetch's
+    /// physical staging wall (microseconds at repro scale) lands inside
+    /// `expert_wall_secs` while its *modeled* seconds (milliseconds at
+    /// paper scale) are billed as exposed transfer — a small double
+    /// count on paths that fetch on the critical path, which slightly
+    /// flatters prefetching.  Within one mode both biases are constant,
+    /// so trajectory *comparisons* remain valid.
     pub fn modeled_request_secs(&self) -> Option<f64> {
         if self.requests == 0 {
             None

@@ -21,12 +21,14 @@
 //! Same accumulation order ⇒ bit-identical f32 outputs at every pool
 //! width (asserted in `tests/integration.rs`).
 
+use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::cluster::ClusterRouter;
 use crate::coordinator::hash_table::HashTable;
 use crate::experts::{ExpertCache, ExpertKey, SharedExpertCache};
 use crate::runtime::{
@@ -175,6 +177,14 @@ pub enum ExpertProvider<'a> {
     /// and the worker pool (lookups under a read lock, mutation under a
     /// write lock — see [`SharedExpertCache`]).
     Shared { cache: &'a SharedExpertCache, blocking: bool },
+    /// Multi-device expert parallelism: each MoE layer's gathered
+    /// expert jobs are partitioned across the cluster's modeled devices
+    /// (home/replica placement decides who computes what), one worker
+    /// lane per device, residency resolved through each device's own
+    /// shared cache — see [`crate::cluster`].  Outputs stay
+    /// bit-identical to the single-device path: lanes only compute, and
+    /// the caller scatters in ascending expert order as always.
+    Cluster { router: &'a ClusterRouter, blocking: bool },
     /// Feed host literals every call (naive full offload; no device
     /// residency at all).
     HostLiterals,
@@ -232,11 +242,146 @@ struct ExpertJob {
 
 /// A worker's view of the expert provider: the parallel-capable
 /// variants only (the `Cached { &mut .. }` provider is inherently
-/// single-owner and keeps the sequential path).
+/// single-owner and runs inline through [`CachedDispatch`]).
 enum ParProvider<'a> {
     AllResident(&'a HashMap<ExpertKey, [DeviceBuffer; 4]>),
     Shared { cache: &'a SharedExpertCache, blocking: bool },
     HostLiterals,
+}
+
+/// Result of dispatching one packed chunk through a residency resolver.
+struct ChunkOut {
+    result: Vec<Literal>,
+    transfer_secs: f64,
+    dispatch_secs: f64,
+}
+
+/// The residency-resolver axis of an expert invocation: how one packed
+/// chunk finds its staged weights.  The chunk/pack loop itself is shared
+/// ([`ModelRunner::compute_expert_rows`]); only this resolution step
+/// differs between provider variants, so the historical duplicated twin
+/// of the loop for the single-owner `&mut ExpertCache` provider is gone.
+trait ExpertDispatch {
+    fn dispatch_chunk(
+        &self,
+        runner: &ModelRunner,
+        key: ExpertKey,
+        exe: &Executable,
+        bucket: usize,
+        packed: &[f32],
+    ) -> Result<ChunkOut>;
+}
+
+impl ExpertDispatch for ParProvider<'_> {
+    fn dispatch_chunk(
+        &self,
+        runner: &ModelRunner,
+        key: ExpertKey,
+        exe: &Executable,
+        bucket: usize,
+        packed: &[f32],
+    ) -> Result<ChunkOut> {
+        match self {
+            ParProvider::AllResident(map) => {
+                let parts = map
+                    .get(&key)
+                    .with_context(|| format!("expert {key:?} not staged"))?;
+                let t0 = Instant::now();
+                let result = runner.dispatch_chunk(exe, bucket, packed, parts)?;
+                Ok(ChunkOut {
+                    result,
+                    transfer_secs: 0.0,
+                    dispatch_secs: t0.elapsed().as_secs_f64(),
+                })
+            }
+            ParProvider::Shared { cache, blocking } => {
+                // unpin on every exit path — a panic that leaks a
+                // pin would wedge concurrent AllPinned waiters
+                struct Unpin<'a>(&'a SharedExpertCache, ExpertKey);
+                impl Drop for Unpin<'_> {
+                    fn drop(&mut self) {
+                        self.0.unpin(&self.1);
+                    }
+                }
+                let real_bytes = runner.bundle.weights.expert_bytes(key.block, key.expert)?;
+                let (resident, _hit, secs) =
+                    cache.ensure_pinned(key, real_bytes, *blocking, || {
+                        crate::runtime::stage_expert_parts(
+                            &runner.bundle.engine,
+                            &runner.bundle.weights,
+                            key.block,
+                            key.expert,
+                        )
+                    })?;
+                let _unpin = Unpin(*cache, key);
+                let t0 = Instant::now();
+                let result = runner.dispatch_chunk(exe, bucket, packed, &resident.parts)?;
+                Ok(ChunkOut {
+                    result,
+                    transfer_secs: secs,
+                    dispatch_secs: t0.elapsed().as_secs_f64(),
+                })
+            }
+            ParProvider::HostLiterals => {
+                let d = runner.bundle.topology.d_model;
+                let names =
+                    crate::runtime::WeightStore::expert_part_names(key.block, key.expert);
+                let x_lit = literal_from_f32s(&[bucket, d], packed)?;
+                let owned = [
+                    x_lit,
+                    runner.bundle.weights.literal(&names[0])?,
+                    runner.bundle.weights.literal(&names[1])?,
+                    runner.bundle.weights.literal(&names[2])?,
+                    runner.bundle.weights.literal(&names[3])?,
+                ];
+                let args: Vec<&Literal> = owned.iter().collect();
+                let t0 = Instant::now();
+                let result = exe.run(&args)?;
+                Ok(ChunkOut {
+                    result,
+                    transfer_secs: 0.0,
+                    dispatch_secs: t0.elapsed().as_secs_f64(),
+                })
+            }
+        }
+    }
+}
+
+/// Residency resolver for the single-owner `Cached { &mut ExpertCache }`
+/// provider.  Runs inline on the calling thread only (a `RefCell` is
+/// not `Sync`, which is exactly the point: this variant never crosses
+/// the pool), sharing the chunk loop with every parallel variant.
+struct CachedDispatch<'a> {
+    cache: RefCell<&'a mut ExpertCache>,
+    blocking: bool,
+}
+
+impl ExpertDispatch for CachedDispatch<'_> {
+    fn dispatch_chunk(
+        &self,
+        runner: &ModelRunner,
+        key: ExpertKey,
+        exe: &Executable,
+        bucket: usize,
+        packed: &[f32],
+    ) -> Result<ChunkOut> {
+        let mut cache = self.cache.borrow_mut();
+        let real_bytes = runner.bundle.weights.expert_bytes(key.block, key.expert)?;
+        let (resident, _hit, secs) = cache.ensure(key, real_bytes, self.blocking, || {
+            crate::runtime::stage_expert_parts(
+                &runner.bundle.engine,
+                &runner.bundle.weights,
+                key.block,
+                key.expert,
+            )
+        })?;
+        cache.pin(key);
+        let t0 = Instant::now();
+        let result = runner.dispatch_chunk(exe, bucket, packed, &resident.parts);
+        let dispatch_secs = t0.elapsed().as_secs_f64();
+        cache.unpin(&key);
+        Ok(ChunkOut { result: result?, transfer_secs: secs, dispatch_secs })
+    }
 }
 
 /// Private result of one expert's compute: output rows (gather order)
@@ -568,17 +713,19 @@ impl ModelRunner {
     /// Compute one expert's gathered rows: pack token rows into
     /// bucket-sized chunks (splitting exactly like the historical
     /// recursive dispatcher when rows exceed the largest bucket),
-    /// resolve residency through the parallel-capable provider view,
-    /// and return the per-row outputs in gather order.  Pure compute —
-    /// no shared accumulator is touched, which is what makes this safe
-    /// to run on pool threads while preserving bit-identical scatter.
-    fn compute_expert_rows(
+    /// resolve residency through the [`ExpertDispatch`] resolver, and
+    /// return the per-row outputs in gather order.  Pure compute — no
+    /// shared accumulator is touched, which is what makes this safe to
+    /// run on pool threads while preserving bit-identical scatter.
+    /// One loop serves every provider variant; only residency
+    /// resolution differs (the resolver).
+    fn compute_expert_rows<D: ExpertDispatch + ?Sized>(
         &self,
         block: usize,
         expert: usize,
         xlns: &[Vec<f32>],
         rows: &[GatheredRow],
-        par: &ParProvider<'_>,
+        disp: &D,
         fixed_bucket: bool,
     ) -> Result<ExpertComputeOut> {
         let topo = &self.bundle.topology;
@@ -612,141 +759,85 @@ impl ModelRunner {
                 .get(&bucket)
                 .with_context(|| format!("no expert artifact for bucket {bucket}"))?;
 
-            let result = match par {
-                ParProvider::AllResident(map) => {
-                    let parts = map
-                        .get(&key)
-                        .with_context(|| format!("expert {key:?} not staged"))?;
-                    let t0 = Instant::now();
-                    let r = self.dispatch_chunk(exe, bucket, &packed, parts)?;
-                    out.dispatch_secs += t0.elapsed().as_secs_f64();
-                    r
-                }
-                ParProvider::Shared { cache, blocking } => {
-                    // unpin on every exit path — a panic that leaks a
-                    // pin would wedge concurrent AllPinned waiters
-                    struct Unpin<'a>(&'a SharedExpertCache, ExpertKey);
-                    impl Drop for Unpin<'_> {
-                        fn drop(&mut self) {
-                            self.0.unpin(&self.1);
-                        }
-                    }
-                    let real_bytes = self.bundle.weights.expert_bytes(block, expert)?;
-                    let (resident, _hit, secs) =
-                        cache.ensure_pinned(key, real_bytes, *blocking, || {
-                            crate::runtime::stage_expert_parts(
-                                &self.bundle.engine,
-                                &self.bundle.weights,
-                                block,
-                                expert,
-                            )
-                        })?;
-                    let _unpin = Unpin(*cache, key);
-                    out.transfer_secs += secs;
-                    let t0 = Instant::now();
-                    let r = self.dispatch_chunk(exe, bucket, &packed, &resident.parts)?;
-                    out.dispatch_secs += t0.elapsed().as_secs_f64();
-                    r
-                }
-                ParProvider::HostLiterals => {
-                    let names = crate::runtime::WeightStore::expert_part_names(block, expert);
-                    let x_lit = literal_from_f32s(&[bucket, d], &packed)?;
-                    let owned = [
-                        x_lit,
-                        self.bundle.weights.literal(&names[0])?,
-                        self.bundle.weights.literal(&names[1])?,
-                        self.bundle.weights.literal(&names[2])?,
-                        self.bundle.weights.literal(&names[3])?,
-                    ];
-                    let args: Vec<&Literal> = owned.iter().collect();
-                    let t0 = Instant::now();
-                    let r = exe.run(&args)?;
-                    out.dispatch_secs += t0.elapsed().as_secs_f64();
-                    r
-                }
-            };
+            let chunk_out = disp.dispatch_chunk(self, key, exe, bucket, &packed)?;
+            out.transfer_secs += chunk_out.transfer_secs;
+            out.dispatch_secs += chunk_out.dispatch_secs;
             out.invocations += 1;
-            let y = to_f32_vec(&result[0])?;
+            let y = to_f32_vec(&chunk_out.result[0])?;
             out.y.extend_from_slice(&y[..take * d]);
             start += take;
         }
         Ok(out)
     }
 
-    /// Sequential twin of [`ModelRunner::compute_expert_rows`] for the
-    /// single-owner `Cached { &mut ExpertCache }` provider.
-    fn compute_expert_rows_cached(
+    /// Cluster dispatch of one MoE layer's jobs: the [`ClusterRouter`]
+    /// assigns every job (ascending expert order, so the assignment is
+    /// deterministic) to a device holding that expert, the jobs run as
+    /// **one worker lane per device** on the pool — each lane resolving
+    /// residency through its own device's shared cache — and jobs
+    /// computed off the primary device are charged the modeled
+    /// cross-device activation transfer.  Returns per-job results in
+    /// the original job order, so the caller's scatter (and therefore
+    /// the f32 bits) is identical to the single-device path.
+    fn run_cluster_lanes(
         &self,
         block: usize,
-        expert: usize,
+        jobs: &[ExpertJob],
         xlns: &[Vec<f32>],
-        rows: &[GatheredRow],
-        cache: &mut ExpertCache,
+        router: &ClusterRouter,
         blocking: bool,
         fixed_bucket: bool,
-    ) -> Result<ExpertComputeOut> {
-        let topo = &self.bundle.topology;
-        let d = topo.d_model;
-        let key = ExpertKey::new(block, expert);
-        let mut out = ExpertComputeOut {
-            y: Vec::with_capacity(rows.len() * d),
-            transfer_secs: 0.0,
-            dispatch_secs: 0.0,
-            invocations: 0,
-        };
-        let mut packed: Vec<f32> = Vec::new();
-        let mut start = 0usize;
-        while start < rows.len() {
-            let remaining = rows.len() - start;
-            let bucket = if fixed_bucket {
-                topo.bucket_for(self.seq_len)
-            } else {
-                topo.bucket_for(remaining)
-            };
-            let take = remaining.min(bucket);
-            let chunk = &rows[start..start + take];
-            packed.clear();
-            packed.resize(bucket * d, 0.0);
-            for (r, row) in chunk.iter().enumerate() {
-                let src = &xlns[row.item][row.token * d..(row.token + 1) * d];
-                packed[r * d..(r + 1) * d].copy_from_slice(src);
-            }
-            let exe = self
-                .exe_expert
-                .get(&bucket)
-                .with_context(|| format!("no expert artifact for bucket {bucket}"))?;
-
-            let real_bytes = self.bundle.weights.expert_bytes(block, expert)?;
-            let (resident, _hit, secs) = cache.ensure(key, real_bytes, blocking, || {
-                crate::runtime::stage_expert_parts(
-                    &self.bundle.engine,
-                    &self.bundle.weights,
-                    block,
-                    expert,
-                )
-            })?;
-            out.transfer_secs += secs;
-            cache.pin(key);
-            let t0 = Instant::now();
-            let result = self.dispatch_chunk(exe, bucket, &packed, &resident.parts);
-            out.dispatch_secs += t0.elapsed().as_secs_f64();
-            cache.unpin(&key);
-            let result = result?;
-
-            out.invocations += 1;
-            let y = to_f32_vec(&result[0])?;
-            out.y.extend_from_slice(&y[..take * d]);
-            start += take;
+    ) -> Vec<Result<ExpertComputeOut>> {
+        let meta: Vec<(usize, usize)> =
+            jobs.iter().map(|j| (j.expert, j.rows.len())).collect();
+        let assign = router.assign(block, &meta);
+        let mut per_device: Vec<Vec<usize>> = vec![Vec::new(); router.devices()];
+        for (i, &dev) in assign.iter().enumerate() {
+            per_device[dev].push(i);
         }
-        Ok(out)
+        let lanes: Vec<(usize, Vec<usize>)> = per_device
+            .into_iter()
+            .enumerate()
+            .filter(|(_, idxs)| !idxs.is_empty())
+            .collect();
+        let lane_outs: Vec<Vec<(usize, Result<ExpertComputeOut>)>> =
+            self.pool.run(lanes, |_slot, (device, idxs)| {
+                let par = ParProvider::Shared { cache: router.device_cache(device), blocking };
+                idxs.into_iter()
+                    .map(|i| {
+                        let job = &jobs[i];
+                        let res = self
+                            .compute_expert_rows(
+                                block, job.expert, xlns, &job.rows, &par, fixed_bucket,
+                            )
+                            .map(|mut out| {
+                                out.transfer_secs += router
+                                    .charge_activation_transfer(device, job.rows.len());
+                                out
+                            });
+                        (i, res)
+                    })
+                    .collect()
+            });
+        let mut outs: Vec<Option<Result<ExpertComputeOut>>> =
+            (0..jobs.len()).map(|_| None).collect();
+        for lane in lane_outs {
+            for (i, res) in lane {
+                outs[i] = Some(res);
+            }
+        }
+        outs.into_iter()
+            .map(|o| o.expect("cluster lane left a job without a result"))
+            .collect()
     }
 
     /// Run every job of one MoE layer — concurrently on the worker pool
-    /// for the parallel-capable providers, inline for `Cached` — then
-    /// merge the outputs into the accumulators **sequentially in
-    /// ascending job order**: per-token accumulation order is identical
-    /// to the fully sequential path, so outputs are bit-identical at
-    /// every pool width.
+    /// for the parallel-capable providers, as one lane per modeled
+    /// device for `Cluster`, inline for `Cached` — then merge the
+    /// outputs into the accumulators **sequentially in ascending job
+    /// order**: per-token accumulation order is identical to the fully
+    /// sequential path, so outputs are bit-identical at every pool
+    /// width and every device count.
     #[allow(clippy::too_many_arguments)]
     fn run_expert_set(
         &self,
@@ -765,14 +856,19 @@ impl ModelRunner {
         let t_wall = Instant::now();
         let outs: Vec<Result<ExpertComputeOut>> = match provider {
             ExpertProvider::Cached { cache, blocking } => {
-                let blocking = *blocking;
+                // single-owner cache: inline, through the same shared
+                // chunk loop as every other variant
+                let disp = CachedDispatch { cache: RefCell::new(&mut **cache), blocking: *blocking };
                 jobs.iter()
                     .map(|job| {
-                        self.compute_expert_rows_cached(
-                            block, job.expert, xlns, &job.rows, cache, blocking, fixed_bucket,
+                        self.compute_expert_rows(
+                            block, job.expert, xlns, &job.rows, &disp, fixed_bucket,
                         )
                     })
                     .collect()
+            }
+            ExpertProvider::Cluster { router, blocking } => {
+                self.run_cluster_lanes(block, jobs, xlns, *router, *blocking, fixed_bucket)
             }
             other => {
                 let par = match &*other {
@@ -781,7 +877,9 @@ impl ModelRunner {
                         ParProvider::Shared { cache: *cache, blocking: *blocking }
                     }
                     ExpertProvider::HostLiterals => ParProvider::HostLiterals,
-                    ExpertProvider::Cached { .. } => unreachable!("handled above"),
+                    ExpertProvider::Cached { .. } | ExpertProvider::Cluster { .. } => {
+                        unreachable!("handled above")
+                    }
                 };
                 let indices: Vec<usize> = (0..jobs.len()).collect();
                 self.pool.run(indices, |_slot, i| {

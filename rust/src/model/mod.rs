@@ -18,6 +18,6 @@
 pub mod forward;
 
 pub use forward::{
-    BatchForwardOutput, BatchItem, ExpertProvider, ForwardOptions, ForwardOutput, ModelRunner,
-    PhaseTimes, RoutingDecision,
+    BatchForwardOutput, BatchItem, ExpertProvider, ForwardHooks, ForwardOptions, ForwardOutput,
+    ModelRunner, PhaseTimes, RoutingDecision,
 };

@@ -38,10 +38,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::cluster::{ClusterConfig, ClusterRouter};
 use crate::coordinator::batcher::{AdmitOutcome, BatchFormer, BatchPolicy, FormedBatch};
 use crate::coordinator::hash_table::HashTable;
 use crate::coordinator::hash_thread::HashBuilder;
-use crate::coordinator::pipeline::{argmax, run_gated_forward};
+use crate::coordinator::pipeline::{argmax, run_gated_forward, WarmTarget};
 use crate::experts::{make_policy, ExpertCache, SharedExpertCache};
 use crate::memory::CostModel;
 use crate::metrics::BatchingStats;
@@ -62,6 +63,13 @@ pub struct ServerConfig {
     pub batch: BatchPolicy,
     /// worker-pool width for concurrent expert execution (0 = auto)
     pub pool_threads: usize,
+    /// modeled devices to serve across (1 = single device; > 1 enables
+    /// expert parallelism with data-aware placement — `--devices`).
+    /// `budget_sim_bytes` is then per device.
+    pub devices: usize,
+    /// hottest experts per MoE layer replicated across the fleet
+    /// (`--replicate-top`; cluster mode only)
+    pub replicate_top: usize,
 }
 
 impl Default for ServerConfig {
@@ -71,6 +79,8 @@ impl Default for ServerConfig {
             k_used: 1,
             batch: BatchPolicy::default(),
             pool_threads: 0,
+            devices: 1,
+            replicate_top: 1,
         }
     }
 }
@@ -92,7 +102,9 @@ type ReplyOutcome = std::result::Result<Reply, String>;
 pub struct ServerState {
     pub runner: ModelRunner,
     pub hash: HashBuilder,
-    pub cache: SharedExpertCache,
+    pub cache: Arc<SharedExpertCache>,
+    /// the device fleet + router when `ServerConfig::devices > 1`
+    pub cluster: Option<Arc<ClusterRouter>>,
     pub k_used: usize,
     /// the single shared admission queue all connections feed
     queue: Mutex<BatchFormer<Sender<ReplyOutcome>>>,
@@ -114,15 +126,29 @@ impl ServerState {
         let runner = ModelRunner::with_pool(bundle.clone(), profile, pool)?;
         let hash = HashBuilder::new(&bundle, profile)?;
         let real = bundle.weights.expert_bytes(bundle.topology.moe_blocks[0], 0)?;
-        let cache = SharedExpertCache::new(ExpertCache::new(
+        let cache = Arc::new(SharedExpertCache::new(ExpertCache::new(
             cfg.budget_sim_bytes,
             CostModel::paper_scale(real),
             make_policy("fifo")?,
-        ));
+        )));
+        let cluster = if cfg.devices > 1 {
+            Some(Arc::new(ClusterRouter::new(
+                &bundle,
+                &ClusterConfig {
+                    devices: cfg.devices,
+                    replicate_top: cfg.replicate_top,
+                    budget_per_device: cfg.budget_sim_bytes,
+                    ..ClusterConfig::default()
+                },
+            )?))
+        } else {
+            None
+        };
         Ok(ServerState {
             runner,
             hash,
             cache,
+            cluster,
             k_used: cfg.k_used,
             queue: Mutex::new(BatchFormer::new(cfg.batch)),
             queue_cv: Condvar::new(),
@@ -141,6 +167,23 @@ impl ServerState {
         self.t0.elapsed().as_secs_f64()
     }
 
+    /// The expert provider serving this front-end: the shared cache, or
+    /// the cluster router in multi-device mode.
+    fn provider(&self) -> ExpertProvider<'_> {
+        match &self.cluster {
+            Some(router) => ExpertProvider::Cluster { router, blocking: true },
+            None => ExpertProvider::Shared { cache: &self.cache, blocking: true },
+        }
+    }
+
+    /// Who the layer-ahead warmer stages experts into.
+    fn warm_target(&self) -> WarmTarget {
+        match &self.cluster {
+            Some(router) => WarmTarget::Cluster { router: router.clone() },
+            None => WarmTarget::Single { cache: self.cache.clone() },
+        }
+    }
+
     /// Serve one request synchronously (hash build + batch-1 forward),
     /// bypassing the admission queue — the direct embedding API for
     /// callers that hold a `ServerState` without running the TCP
@@ -153,7 +196,7 @@ impl ServerState {
         let t0 = Instant::now();
         let req_id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let table = self.hash.build(req_id, &ids)?;
-        let mut provider = ExpertProvider::Shared { cache: &self.cache, blocking: true };
+        let mut provider = self.provider();
         let out = self.runner.forward(
             &ids,
             Some((&table, self.k_used)),
@@ -264,11 +307,18 @@ fn run_batch(
         .zip(masks.iter())
         .map(|(table, mask)| (table, mask.as_slice()))
         .collect();
-    let mut provider = ExpertProvider::Shared { cache: &state.cache, blocking: true };
+    // cluster mode learns placement from live traffic: fold this
+    // batch's predictions into the activation profile and re-plan when
+    // the profile has grown enough (first batch, then every doubling)
+    if let Some(router) = &state.cluster {
+        router.observe(&pairs, state.k_used);
+        router.replan_if_due(&state.runner.bundle);
+    }
+    let mut provider = state.provider();
     let opts = ForwardOptions { want_cls: true, ..Default::default() };
     let out = run_gated_forward(
         &state.runner.bundle,
-        &state.cache,
+        &state.warm_target(),
         &pairs,
         &state.runner.bundle.topology.moe_blocks,
         state.k_used,
@@ -357,27 +407,79 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
                             b.inference.mean() * 1e3,
                         )
                     };
-                    let cs = state.cache.stats();
-                    writeln!(
-                        writer,
-                        "{}",
-                        obj(vec![
-                            ("served", Json::Num(served as f64)),
-                            ("rejected", Json::Num(rejected as f64)),
-                            ("queued", Json::Num(queued as f64)),
-                            ("batches_formed", Json::Num(batches as f64)),
-                            ("mean_batch_size", Json::Num(mean_size)),
-                            ("batching_delay_ms_mean", Json::Num(delay_ms)),
-                            ("infer_ms_mean", Json::Num(infer_ms)),
-                            ("cache_hits", Json::Num(cs.hits as f64)),
-                            ("cache_misses", Json::Num(cs.misses as f64)),
-                            (
-                                "transfer_overlapped_secs",
-                                Json::Num(cs.overlapped_transfer_secs),
-                            ),
-                            ("device_used_bytes", Json::Num(state.cache.used() as f64)),
-                        ])
-                    )?;
+                    // ONE cluster snapshot per reply, so the top-level
+                    // aggregates and the per-device array below can
+                    // never disagree.  Top-level cache fields reflect
+                    // wherever serving actually resolves residency:
+                    // the aggregate over every device cache in cluster
+                    // mode, the single shared cache otherwise.
+                    let cluster = state.cluster.as_ref().map(|r| r.stats());
+                    let (hits, misses, overlapped, used) = match &cluster {
+                        Some(cl) => (
+                            cl.devices.iter().map(|d| d.cache.hits).sum::<u64>(),
+                            cl.devices.iter().map(|d| d.cache.misses).sum::<u64>(),
+                            cl.devices
+                                .iter()
+                                .map(|d| d.cache.overlapped_transfer_secs)
+                                .sum::<f64>(),
+                            cl.devices.iter().map(|d| d.used_bytes).sum::<usize>(),
+                        ),
+                        None => {
+                            let cs = state.cache.stats();
+                            (cs.hits, cs.misses, cs.overlapped_transfer_secs, state.cache.used())
+                        }
+                    };
+                    let mut fields = vec![
+                        ("served", Json::Num(served as f64)),
+                        ("rejected", Json::Num(rejected as f64)),
+                        ("queued", Json::Num(queued as f64)),
+                        ("batches_formed", Json::Num(batches as f64)),
+                        ("mean_batch_size", Json::Num(mean_size)),
+                        ("batching_delay_ms_mean", Json::Num(delay_ms)),
+                        ("infer_ms_mean", Json::Num(infer_ms)),
+                        ("cache_hits", Json::Num(hits as f64)),
+                        ("cache_misses", Json::Num(misses as f64)),
+                        ("transfer_overlapped_secs", Json::Num(overlapped)),
+                        ("device_used_bytes", Json::Num(used as f64)),
+                    ];
+                    if let Some(cl) = &cluster {
+                        let devices: Vec<Json> = cl
+                            .devices
+                            .iter()
+                            .map(|d| {
+                                obj(vec![
+                                    ("device", Json::Num(d.device as f64)),
+                                    ("used_bytes", Json::Num(d.used_bytes as f64)),
+                                    ("peak_bytes", Json::Num(d.peak_bytes as f64)),
+                                    (
+                                        "assigned_experts",
+                                        Json::Num(d.assigned_experts as f64),
+                                    ),
+                                    ("rows", Json::Num(d.rows as f64)),
+                                    ("hits", Json::Num(d.cache.hits as f64)),
+                                    ("misses", Json::Num(d.cache.misses as f64)),
+                                ])
+                            })
+                            .collect();
+                        fields.push(("devices", Json::Arr(devices)));
+                        fields.push((
+                            "load_imbalance",
+                            Json::Num(cl.load_imbalance().unwrap_or(0.0)),
+                        ));
+                        fields.push((
+                            "cross_device_bytes",
+                            Json::Num(cl.cross_device_bytes as f64),
+                        ));
+                        fields.push((
+                            "interconnect_secs",
+                            Json::Num(cl.interconnect_secs),
+                        ));
+                        fields.push((
+                            "replicated_entries",
+                            Json::Num(cl.replicated_entries as f64),
+                        ));
+                    }
+                    writeln!(writer, "{}", obj(fields))?;
                 }
                 "shutdown" => {
                     state.shutdown.store(true, Ordering::SeqCst);

@@ -1,5 +1,6 @@
 //! Hand-rolled substrates: JSON, CLI parsing, PRNG, property testing,
-//! logging, the scoped worker pool, and the layer-gate sync primitive.
+//! logging, the persistent worker pool, and the layer-gate sync
+//! primitive.
 //! The vendored crate set contains only the `xla` dependency closure
 //! (no serde/clap/rand/proptest/criterion/tokio/rayon), so everything
 //! the system needs beyond that is implemented here (DESIGN.md §3).

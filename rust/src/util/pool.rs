@@ -1,5 +1,5 @@
-//! Hand-rolled scoped worker pool (the vendored crate set has no rayon
-//! or crossbeam — DESIGN.md §5).
+//! Hand-rolled persistent worker pool (the vendored crate set has no
+//! rayon or crossbeam — DESIGN.md §5).
 //!
 //! [`WorkerPool::run`] executes one closure per item on up to
 //! `threads` OS threads and returns the results **in item order**:
@@ -10,27 +10,159 @@
 //! keeping its scatter-accumulation order — and therefore its f32
 //! outputs — bit-identical to the sequential path.
 //!
-//! Built on [`std::thread::scope`], so job closures may borrow from the
-//! caller's stack (weight maps, activation buffers) without cloning or
-//! `Arc`-wrapping; a pool of size 1 (or a single item) degenerates to
-//! an inline sequential loop with zero spawn overhead, which doubles as
-//! the reference execution order in tests.
+//! Workers are spawned **once** (lazily, on the first parallel `run`)
+//! and live as long as the pool: per-layer jobs stop paying the
+//! ~10-30us-per-thread spawn/join cost the previous scoped
+//! implementation charged on every call, and thread-local state (the
+//! `testkit::kernels` scratch arenas) stays warm across forwards, so
+//! the allocation-free steady state holds on pool threads too.
+//!
+//! Job closures may still borrow from the caller's stack (weight maps,
+//! activation buffers) without cloning or `Arc`-wrapping: `run` blocks
+//! until every item completed before returning, so the borrow never
+//! outlives the frame that owns the data — the same guarantee
+//! `std::thread::scope` gives, enforced here by a completion count the
+//! caller waits on (see the safety notes on the internal `TaskRef`).
+//! A pool of
+//! size 1 (or a single item) degenerates to an inline sequential loop
+//! with zero handoff overhead, which doubles as the reference execution
+//! order in tests.  Concurrent `run` calls on one pool (e.g. the TCP
+//! server's direct `serve_one` API racing the batch worker) do not
+//! queue: the loser of the handoff lock simply runs its items inline,
+//! preserving liveness and determinism.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 
-/// A fixed-width scoped worker pool.  Cheap to clone (it holds only its
-/// width); threads are spawned per [`WorkerPool::run`] call and joined
-/// before it returns, so no state leaks between calls.
-#[derive(Debug, Clone)]
-pub struct WorkerPool {
+/// Type-erased reference to the per-call task body, shipped to the
+/// persistent workers as a raw fat pointer.
+///
+/// # Safety
+///
+/// The pointee lives on the stack of the `run` call that published it.
+/// Workers may dereference it only while claiming item indices below
+/// the job's `n`; `run` does not return (and the frame does not die)
+/// until `done == n`, and every claim of an index `< n` strictly
+/// precedes that index's `done` increment — so no dereference can
+/// outlive the frame.  Workers that wake late observe `cursor >= n`
+/// and never touch the pointer.
+#[derive(Clone, Copy)]
+struct TaskRef(*const (dyn Fn(usize) + Sync));
+
+unsafe impl Send for TaskRef {}
+unsafe impl Sync for TaskRef {}
+
+/// One published batch of work: workers claim indices off `cursor`,
+/// run the type-erased task on each, and count completions in `done`.
+struct Job {
+    task: TaskRef,
+    n: usize,
+    cursor: AtomicUsize,
+    done: AtomicUsize,
+    /// monotone id so a worker never re-enters a job it already drained
+    epoch: u64,
+}
+
+#[derive(Default)]
+struct PoolState {
+    job: Option<Arc<Job>>,
+    epoch: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// workers sleep here between jobs
+    work_cv: Condvar,
+    /// the `run` caller sleeps here until `done == n`
+    done_cv: Condvar,
+}
+
+/// The pool's long-lived half: shared state plus the worker handles,
+/// joined when the last [`WorkerPool`] clone drops.
+struct Inner {
     threads: usize,
+    shared: Arc<Shared>,
+    /// spawned lazily on the first parallel `run`
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// serializes job publication; a caller that loses the race runs
+    /// its items inline instead of queueing
+    handoff: Mutex<()>,
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work_cv.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                match &st.job {
+                    Some(job) if job.epoch > last_epoch => break job.clone(),
+                    _ => st = shared.work_cv.wait(st).unwrap(),
+                }
+            }
+        };
+        last_epoch = job.epoch;
+        loop {
+            let i = job.cursor.fetch_add(1, Ordering::AcqRel);
+            if i >= job.n {
+                break;
+            }
+            // SAFETY: i < n, so the publishing `run` frame is still
+            // blocked on `done` reaching n — the pointee is alive.
+            unsafe { (*job.task.0)(i) };
+            if job.done.fetch_add(1, Ordering::AcqRel) + 1 == job.n {
+                // notify under the state lock so the caller's
+                // check-then-wait cannot miss the wakeup
+                let _guard = shared.state.lock().unwrap();
+                shared.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// A fixed-width persistent worker pool.  Cheap to clone (clones share
+/// the same worker threads); the threads are spawned on the first
+/// parallel [`WorkerPool::run`] and joined when the last clone drops.
+#[derive(Clone)]
+pub struct WorkerPool {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("threads", &self.inner.threads).finish()
+    }
 }
 
 impl WorkerPool {
     /// Pool of exactly `threads` workers (clamped to at least 1).
     pub fn new(threads: usize) -> Self {
-        WorkerPool { threads: threads.max(1) }
+        WorkerPool {
+            inner: Arc::new(Inner {
+                threads: threads.max(1),
+                shared: Arc::new(Shared {
+                    state: Mutex::new(PoolState::default()),
+                    work_cv: Condvar::new(),
+                    done_cv: Condvar::new(),
+                }),
+                handles: Mutex::new(Vec::new()),
+                handoff: Mutex::new(()),
+            }),
+        }
     }
 
     /// Width from the environment: `SIDA_POOL_THREADS` if set to a
@@ -59,14 +191,33 @@ impl WorkerPool {
     }
 
     pub fn threads(&self) -> usize {
-        self.threads
+        self.inner.threads
+    }
+
+    /// Spawn the persistent workers if they are not up yet.
+    fn ensure_workers(&self) {
+        let mut handles = self.inner.handles.lock().unwrap();
+        if !handles.is_empty() {
+            return;
+        }
+        for slot in 0..self.inner.threads {
+            let shared = self.inner.shared.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("sida-pool-{slot}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker"),
+            );
+        }
     }
 
     /// Run `f` once per item, up to `threads` at a time, and return the
     /// results **in item order**.  `f` receives `(index, item)`.
     ///
     /// With one worker (or one item) this runs inline on the calling
-    /// thread — no spawn, identical to a plain sequential loop.
+    /// thread — no handoff, identical to a plain sequential loop.  A
+    /// panic inside `f` on a worker is re-raised here after the batch
+    /// drains, so no work is silently lost and the workers stay usable.
     pub fn run<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send,
@@ -74,30 +225,75 @@ impl WorkerPool {
         F: Fn(usize, T) -> R + Sync,
     {
         let n = items.len();
-        let workers = self.threads.min(n);
-        if workers <= 1 {
+        if self.inner.threads <= 1 || n <= 1 {
             return items.into_iter().enumerate().map(|(i, it)| f(i, it)).collect();
         }
+        // the pool is a shared resource: if another `run` is in flight
+        // (server `serve_one` racing the batch worker), fall back to
+        // inline execution instead of queueing behind it
+        let Ok(_handoff) = self.inner.handoff.try_lock() else {
+            return items.into_iter().enumerate().map(|(i, it)| f(i, it)).collect();
+        };
+        self.ensure_workers();
+
         // Claimable work items and index-addressed result slots: workers
-        // race on `cursor`, but every result lands in its item's slot,
-        // so completion order never leaks into the returned Vec.
+        // race on the job cursor, but every result lands in its item's
+        // slot, so completion order never leaks into the returned Vec.
         let work: Vec<Mutex<Option<T>>> =
             items.into_iter().map(|it| Mutex::new(Some(it))).collect();
         let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
-        let cursor = AtomicUsize::new(0);
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let item = work[i].lock().unwrap().take().expect("item claimed twice");
-                    let out = f(i, item);
-                    *slots[i].lock().unwrap() = Some(out);
-                });
+        let panicked: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+        let task = |i: usize| {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let item = work[i].lock().unwrap().take().expect("item claimed twice");
+                let out = f(i, item);
+                *slots[i].lock().unwrap() = Some(out);
+            }));
+            if let Err(payload) = result {
+                let mut p = panicked.lock().unwrap();
+                if p.is_none() {
+                    *p = Some(payload);
+                }
             }
-        });
+        };
+
+        let shared = &self.inner.shared;
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            st.epoch += 1;
+            let job = Arc::new(Job {
+                // SAFETY: lifetime-erased borrow of `task`; see TaskRef.
+                // `run` blocks below until done == n, so the borrow is
+                // live for every dereference a worker can make.
+                task: {
+                    let short: *const (dyn Fn(usize) + Sync) = &task;
+                    TaskRef(unsafe {
+                        std::mem::transmute::<
+                            *const (dyn Fn(usize) + Sync),
+                            *const (dyn Fn(usize) + Sync + 'static),
+                        >(short)
+                    })
+                },
+                n,
+                cursor: AtomicUsize::new(0),
+                done: AtomicUsize::new(0),
+                epoch: st.epoch,
+            });
+            st.job = Some(job.clone());
+            shared.work_cv.notify_all();
+            job
+        };
+        // wait for the batch to drain, then retire the job
+        {
+            let mut st = shared.state.lock().unwrap();
+            while job.done.load(Ordering::Acquire) < n {
+                st = shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+        }
+        if let Some(payload) = panicked.into_inner().unwrap() {
+            std::panic::resume_unwind(payload);
+        }
         slots
             .into_iter()
             .map(|m| m.into_inner().unwrap().expect("worker left an empty result slot"))
@@ -157,5 +353,68 @@ mod tests {
         assert!(WorkerPool::from_config(0).threads() >= 1);
         assert_eq!(WorkerPool::from_config(3).threads(), 3);
         assert_eq!(WorkerPool::new(0).threads(), 1);
+    }
+
+    #[test]
+    fn workers_persist_across_runs() {
+        // the same OS threads must serve consecutive run() calls — the
+        // whole point of the persistent pool (warm thread-locals, no
+        // per-call spawn).  Observed via thread ids.
+        use std::collections::BTreeSet;
+        let pool = WorkerPool::new(2);
+        let ids_of = |pool: &WorkerPool| -> BTreeSet<String> {
+            pool.run((0..8).collect::<Vec<usize>>(), |_, _| {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                format!("{:?}", std::thread::current().id())
+            })
+            .into_iter()
+            .collect()
+        };
+        let first = ids_of(&pool);
+        let second = ids_of(&pool);
+        assert!(
+            first.intersection(&second).next().is_some(),
+            "no worker thread survived across runs: {first:?} vs {second:?}"
+        );
+    }
+
+    #[test]
+    fn clones_share_the_same_workers() {
+        let pool = WorkerPool::new(2);
+        let clone = pool.clone();
+        let a: Vec<usize> = pool.run((0..4).collect(), |_, x| x);
+        let b: Vec<usize> = clone.run((0..4).collect(), |_, x| x);
+        assert_eq!(a, b);
+        assert_eq!(pool.threads(), clone.threads());
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let pool = WorkerPool::new(4);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run((0..8).collect::<Vec<usize>>(), |_, x| {
+                if x == 5 {
+                    panic!("boom on item {x}");
+                }
+                x
+            })
+        }));
+        assert!(result.is_err(), "worker panic must reach the caller");
+        // the pool must remain usable after a panicked batch
+        let out: Vec<usize> = pool.run((0..4).collect(), |_, x| x + 1);
+        assert_eq!(out, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn reentrant_run_falls_back_inline_without_deadlock() {
+        // a second run() while one is in flight must not deadlock —
+        // the loser of the handoff executes inline
+        let pool = WorkerPool::new(2);
+        let pool2 = pool.clone();
+        let out = pool.run((0..4).collect::<Vec<usize>>(), move |_, x| {
+            let inner: Vec<usize> = pool2.run((0..2).collect(), |_, y| y * 10);
+            x + inner[1]
+        });
+        assert_eq!(out, vec![10, 11, 12, 13]);
     }
 }

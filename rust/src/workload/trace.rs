@@ -26,7 +26,7 @@ impl Profile {
             "sst2" => (32, 5, 30),
             "mrpc" => (96, 40, 90),
             "multirc" => (256, 150, 250),
-            other => anyhow::bail!("unknown profile '{other}' (sst2|mrpc|mrpc|multirc)"),
+            other => anyhow::bail!("unknown profile '{other}' (sst2|mrpc|multirc)"),
         };
         Ok(Profile {
             name: name.to_string(),

@@ -1,0 +1,304 @@
+//! Multi-device expert-parallel serving: hermetic cluster invariants.
+//!
+//! The contract under test (ISSUE 4 acceptance criteria):
+//! * N-device forwards are **bit-identical** to the single-device path
+//!   for devices ∈ {1, 2, 4} — placement and replica steering decide
+//!   only *where* an invocation computes, never what it returns;
+//! * placement covers every (layer, expert) exactly once (plus
+//!   replicas), and replication never exceeds per-device budgets;
+//! * per-device expert memory shrinks as the fleet grows at a fixed
+//!   replication factor;
+//! * the load-imbalance statistic is sane (>= 1.0, finite, rows
+//!   conserved).
+
+use std::sync::Arc;
+
+use sida_moe::cluster::{ActivationProfile, ClusterConfig, ClusterRouter, PlacementPlanner};
+use sida_moe::coordinator::{HashBuilder, Pipeline, PipelineConfig};
+use sida_moe::experts::ExpertKey;
+use sida_moe::model::{ExpertProvider, ForwardOptions, ModelRunner};
+use sida_moe::runtime::ModelBundle;
+use sida_moe::testkit::{self, SynthSpec, TINY_PROFILE};
+use sida_moe::util::prop::Prop;
+
+fn deep_bundle() -> Arc<ModelBundle> {
+    testkit::bundle(&SynthSpec::default().two_moe_layers()).unwrap()
+}
+
+fn sim_expert_bytes(b: &ModelBundle) -> usize {
+    let real = b.weights.expert_bytes(b.topology.moe_blocks[0], 0).unwrap();
+    sida_moe::memory::CostModel::paper_scale(real).sim_bytes(real)
+}
+
+#[test]
+fn cluster_forward_bit_identical_across_device_counts() {
+    // Acceptance criterion: the cluster provider must reproduce the
+    // all-resident single-device forward bit-for-bit at 1, 2 and 4
+    // devices, for several sentences, including hash routing.
+    let b = deep_bundle();
+    let r = ModelRunner::new(b.clone(), TINY_PROFILE).unwrap();
+    let builder = HashBuilder::new(&b, TINY_PROFILE).unwrap();
+    let staged = r.stage_all_experts().unwrap();
+    let opts = ForwardOptions { want_lm: true, want_cls: true, ..Default::default() };
+    let reqs = testkit::tiny_trace(&b, 4, 51);
+
+    for devices in [1usize, 2, 4] {
+        let router = ClusterRouter::new(
+            &b,
+            &ClusterConfig { devices, replicate_top: 1, ..ClusterConfig::default() },
+        )
+        .unwrap();
+        for q in &reqs {
+            let table = builder.build(q.id, &q.ids).unwrap();
+            let mut p_ref = ExpertProvider::AllResident(&staged);
+            let want = r.forward(&q.ids, Some((&table, 1)), &mut p_ref, opts).unwrap();
+            let mut p_cluster = ExpertProvider::Cluster { router: &router, blocking: true };
+            let got = r.forward(&q.ids, Some((&table, 1)), &mut p_cluster, opts).unwrap();
+            assert_eq!(
+                want.hidden, got.hidden,
+                "devices={devices} req={}: hidden diverged",
+                q.id
+            );
+            assert_eq!(want.lm_logits, got.lm_logits, "devices={devices}: lm diverged");
+            assert_eq!(want.cls_logits, got.cls_logits, "devices={devices}: cls diverged");
+        }
+        router.check_invariants().unwrap();
+    }
+}
+
+#[test]
+fn pipeline_cluster_serving_matches_single_device_exactly() {
+    // End-to-end: the full pipeline (hash thread, prefetch stages,
+    // layer-ahead warmer, batched forward) must produce identical
+    // predictions and LM NLLs at every device count.
+    let b = deep_bundle();
+    let reqs = testkit::tiny_trace(&b, 10, 33);
+    let mut reference: Option<Vec<(Option<usize>, Option<f64>)>> = None;
+    for devices in [1usize, 2, 4] {
+        let cfg = PipelineConfig {
+            k_used: 2,
+            devices,
+            replicate_top: 1,
+            want_lm: true,
+            want_cls: true,
+            ..Default::default()
+        };
+        let p = Pipeline::new(b.clone(), TINY_PROFILE, cfg).unwrap();
+        let out = p.serve(&reqs).unwrap();
+        assert_eq!(out.stats.requests, reqs.len() as u64);
+        let got: Vec<(Option<usize>, Option<f64>)> = out
+            .per_request
+            .iter()
+            .map(|r| (r.cls_pred, r.lm_nll))
+            .collect();
+        match &reference {
+            None => reference = Some(got),
+            Some(want) => {
+                // bit-identical logits imply exactly equal argmax + NLL
+                assert_eq!(want, &got, "devices={devices}: outputs diverged");
+            }
+        }
+        if devices > 1 {
+            let cluster = out.stats.cluster.expect("cluster stats must be reported");
+            assert_eq!(cluster.devices.len(), devices);
+            if let Some(router) = &p.cluster {
+                router.placement().check_invariants(&b.topology).unwrap();
+                router.check_invariants().unwrap();
+            }
+        } else {
+            assert!(out.stats.cluster.is_none(), "single device reports no cluster");
+        }
+    }
+}
+
+#[test]
+fn per_device_memory_shrinks_as_devices_grow() {
+    // Acceptance criterion: at a fixed replication factor, the worst
+    // device's expert footprint strictly decreases with device count.
+    let b = deep_bundle();
+    let reqs = testkit::tiny_trace(&b, 16, 5);
+    let sim = sim_expert_bytes(&b);
+    let mut assigned = Vec::new();
+    let mut peaks = Vec::new();
+    for devices in [1usize, 2, 4] {
+        let cfg = PipelineConfig {
+            k_used: 2,
+            budget_sim_bytes: 64 * sim,
+            devices,
+            replicate_top: 1,
+            ..Default::default()
+        };
+        let p = Pipeline::new(b.clone(), TINY_PROFILE, cfg).unwrap();
+        let out = p.serve(&reqs).unwrap();
+        let per_device_assigned = match &out.stats.cluster {
+            Some(cl) => cl.max_device_assigned(),
+            None => b.topology.moe_blocks.len() * b.topology.num_experts,
+        };
+        assigned.push(per_device_assigned * sim);
+        peaks.push(out.stats.peak_device_bytes);
+    }
+    assert!(
+        assigned.windows(2).all(|w| w[1] < w[0]),
+        "per-device assigned bytes must strictly decrease: {assigned:?}"
+    );
+    assert!(
+        peaks[2] < peaks[0],
+        "4-device worst peak {} must be below the single-device peak {}",
+        peaks[2],
+        peaks[0]
+    );
+}
+
+#[test]
+fn replication_and_residency_respect_per_device_budgets() {
+    // A budget with room for ⌈E/N⌉ homes + 1 leaves exactly one replica
+    // slot per device; placement must not exceed it and the runtime
+    // caches must never exceed the byte budget.
+    let b = deep_bundle();
+    let e = b.topology.num_experts;
+    let sim = sim_expert_bytes(&b);
+    let devices = 2usize;
+    let capacity = e.div_ceil(devices) + 1;
+    let cfg = PipelineConfig {
+        k_used: 2,
+        budget_sim_bytes: capacity * sim + sim / 2, // room for `capacity` experts
+        devices,
+        replicate_top: e, // ask for far more replication than fits
+        ..Default::default()
+    };
+    let p = Pipeline::new(b.clone(), TINY_PROFILE, cfg).unwrap();
+    let out = p.serve(&testkit::tiny_trace(&b, 8, 11)).unwrap();
+    let router = p.cluster.as_ref().expect("cluster mode");
+    let placement = router.placement();
+    placement.check_invariants(&b.topology).unwrap();
+    for dev in 0..devices {
+        // per layer the device homes at most ⌈E/N⌉; across both layers
+        // plus replicas it must stay within the modeled capacity
+        assert!(
+            placement.assigned_to(dev) <= capacity * b.topology.moe_blocks.len(),
+            "device {dev} over-assigned: {} entries for capacity {capacity}/layer",
+            placement.assigned_to(dev)
+        );
+        let cache = router.device_cache(dev);
+        assert!(
+            cache.used() <= cache.budget(),
+            "device {dev} cache over budget: {} > {}",
+            cache.used(),
+            cache.budget()
+        );
+    }
+    let cluster = out.stats.cluster.expect("cluster stats");
+    for d in &cluster.devices {
+        assert!(d.peak_bytes <= d.budget_bytes, "device {} peak over budget", d.device);
+    }
+}
+
+#[test]
+fn load_imbalance_stat_is_sane() {
+    let b = deep_bundle();
+    let cfg = PipelineConfig { k_used: 2, devices: 4, replicate_top: 1, ..Default::default() };
+    let p = Pipeline::new(b.clone(), TINY_PROFILE, cfg).unwrap();
+    let out = p.serve(&testkit::tiny_trace(&b, 12, 2)).unwrap();
+    let cluster = out.stats.cluster.expect("cluster stats");
+    let imb = cluster.load_imbalance().expect("work was dispatched");
+    assert!(imb >= 1.0, "imbalance {imb} below the max/mean floor");
+    assert!(imb <= cluster.devices.len() as f64 + 1e-9, "imbalance {imb} above N");
+    assert!(imb.is_finite());
+    // rows are conserved: the per-device loads sum to the total rows
+    let total: u64 = cluster.devices.iter().map(|d| d.rows).sum();
+    assert!(total > 0);
+    // interconnect charged only when work left the primary
+    let off_primary: u64 =
+        cluster.devices.iter().filter(|d| d.device != 0).map(|d| d.rows).sum();
+    if off_primary > 0 {
+        assert!(cluster.cross_device_bytes > 0);
+        assert!(cluster.interconnect_secs > 0.0);
+    }
+}
+
+#[test]
+fn placement_invariants_hold_for_random_profiles() {
+    // Property: whatever the observed activation profile, every
+    // (layer, expert) keeps exactly one home, replicas stay within
+    // capacity, and holders are well-formed.
+    let b = deep_bundle();
+    let topo = b.topology.clone();
+    let moe_blocks = topo.moe_blocks.clone();
+    let e = topo.num_experts;
+    Prop::new(48).check(
+        "cluster placement invariants",
+        |rng| {
+            let devices = 1 + rng.usize_below(5);
+            let replicate = rng.usize_below(4);
+            let capacity = 1 + rng.usize_below(2 * e);
+            let counts: Vec<(usize, usize, u64)> = (0..rng.usize_below(24))
+                .map(|_| {
+                    (
+                        moe_blocks[rng.usize_below(moe_blocks.len())],
+                        rng.usize_below(e),
+                        rng.below(1000),
+                    )
+                })
+                .collect();
+            (devices, replicate, capacity, counts)
+        },
+        |_| Vec::new(),
+        |(devices, replicate, capacity, counts)| {
+            let mut profile = ActivationProfile::default();
+            // feed the counts through the public observation API by
+            // fabricating single-token tables
+            for &(block, expert, n) in counts {
+                let layer = moe_blocks.iter().position(|&bl| bl == block).unwrap();
+                for _ in 0..(n % 7) + 1 {
+                    let mut idx = vec![0i32; moe_blocks.len()];
+                    idx[layer] = expert as i32;
+                    let table = sida_moe::coordinator::HashTable::new(
+                        0,
+                        1,
+                        moe_blocks.len(),
+                        1,
+                        idx,
+                        vec![1.0; moe_blocks.len()],
+                        0.0,
+                    )
+                    .map_err(|err| err.to_string())?;
+                    profile.observe_table(&table, &moe_blocks, 1, &[1.0]);
+                }
+            }
+            let placement =
+                PlacementPlanner::new(*devices, *replicate, *capacity).plan(&topo, &profile);
+            placement.check_invariants(&topo).map_err(|err| format!("{err:#}"))?;
+            // exactly one home per expert, and replica capacity holds
+            // whenever homes alone fit the capacity
+            let home_cap = e.div_ceil(*devices);
+            for dev in 0..*devices {
+                let assigned = placement.assigned_to(dev);
+                let max_homes = home_cap * moe_blocks.len();
+                if max_homes <= *capacity {
+                    if assigned > *capacity {
+                        return Err(format!(
+                            "device {dev}: {assigned} entries exceed capacity {capacity}"
+                        ));
+                    }
+                }
+            }
+            let mut total_holders = 0usize;
+            for &block in &moe_blocks {
+                for expert in 0..e {
+                    let key = ExpertKey::new(block, expert);
+                    let holders = placement.holders(&key);
+                    if holders.is_empty() {
+                        return Err(format!("{key:?} has no holders"));
+                    }
+                    total_holders += holders.len();
+                }
+            }
+            if total_holders
+                != moe_blocks.len() * e + placement.replicated_entries()
+            {
+                return Err("holder count != homes + replicas".into());
+            }
+            Ok(())
+        },
+    );
+}
