@@ -19,8 +19,8 @@ fn main() -> anyhow::Result<()> {
     let mut t = Table::new(
         "eviction ablation — SiDA on switch128/sst2",
         &[
-            "budget (layer frac)", "policy", "hit rate %", "evictions",
-            "transfer (GB)", "throughput (req/s)",
+            "budget (layer frac)", "policy", "ram policy", "hit rate %", "evictions",
+            "transfer (GB)", "ssd promote (s)", "throughput (req/s)",
         ],
     );
     let b = bs::load("switch128")?;
@@ -29,19 +29,30 @@ fn main() -> anyhow::Result<()> {
     for frac in [0.125, 0.25, 0.5] {
         let budget = ((layer_bytes as f64) * frac) as usize;
         for policy in ["fifo", "lru", "lfu", "clock"] {
-            let spec = bs::RunSpec::new("sst2", n)
-                .budget(budget)
-                .policy_name(policy);
-            let out = bs::run_method(b.clone(), Method::Sida, &spec)?;
-            let s = &out.stats;
-            t.row(vec![
-                format!("{frac}"),
-                policy.to_string(),
-                sida_moe::metrics::report::fmt_rate(s.hit_rate()),
-                s.evictions.to_string(),
-                format!("{:.2}", s.transferred_bytes as f64 / 1e9),
-                format!("{:.2}", s.throughput()),
-            ]);
+            // the RAM window of the §6 ladder is policy-pluggable too
+            // (--ram-policy; fifo vs lfu — in a victim tier recency is
+            // insertion order, so lru would duplicate fifo); sized at
+            // one device budget so the eviction choice decides what
+            // stays a cheap PCIe hop away
+            for ram_policy in ["fifo", "lfu"] {
+                let spec = bs::RunSpec::new("sst2", n)
+                    .budget(budget)
+                    .policy_name(policy)
+                    .ram_budget(budget)
+                    .ram_policy_name(ram_policy);
+                let out = bs::run_method(b.clone(), Method::Sida, &spec)?;
+                let s = &out.stats;
+                t.row(vec![
+                    format!("{frac}"),
+                    policy.to_string(),
+                    ram_policy.to_string(),
+                    sida_moe::metrics::report::fmt_rate(s.hit_rate()),
+                    s.evictions.to_string(),
+                    format!("{:.2}", s.transferred_bytes as f64 / 1e9),
+                    format!("{:.3}", s.hierarchy.ssd_promote_secs),
+                    format!("{:.2}", s.throughput()),
+                ]);
+            }
         }
     }
     t.print();

@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
         "Fig 11 — throughput (req/s) vs budget",
         &[
             "model", "dataset", "budget (sim GB)", "layerwise", "reactive", "sida",
-            "sida/layerwise",
+            "sida/layerwise", "sida ladder s",
         ],
     );
     for name in ["switch128", "switch256"] {
@@ -33,13 +33,14 @@ fn main() -> anyhow::Result<()> {
         for frac in [0.25, 0.5, 1.0, 2.0] {
             let budget = ((layer_bytes as f64) * frac) as usize;
             for dataset in ["sst2", "multirc"] {
-                let run = |m: Method| -> anyhow::Result<f64> {
+                let run = |m: Method| -> anyhow::Result<sida_moe::coordinator::ServeOutcome> {
                     let spec = bs::RunSpec::new(dataset, n).budget(budget);
-                    Ok(bs::run_method(b.clone(), m, &spec)?.stats.throughput())
+                    bs::run_method(b.clone(), m, &spec)
                 };
-                let lw = run(Method::Layerwise)?;
-                let re = run(Method::Reactive)?;
-                let sida = run(Method::Sida)?;
+                let lw = run(Method::Layerwise)?.stats.throughput();
+                let re = run(Method::Reactive)?.stats.throughput();
+                let sida_out = run(Method::Sida)?;
+                let sida = sida_out.stats.throughput();
                 t.row(vec![
                     name.to_string(),
                     dataset.to_string(),
@@ -48,6 +49,9 @@ fn main() -> anyhow::Result<()> {
                     format!("{re:.2}"),
                     format!("{sida:.2}"),
                     format!("{:.2}x", sida / lw.max(1e-9)),
+                    // tier-aware miss cost: the §6 ladder seconds the
+                    // constrained budget exposed (cache-driven ledger)
+                    format!("{:.3}", sida_out.stats.ladder_secs()),
                 ]);
             }
         }

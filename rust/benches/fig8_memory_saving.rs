@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
         "Fig 8 — SiDA memory reduction",
         &[
             "model", "dataset", "standard sim GB", "sida peak sim GB",
-            "saved sim GB", "reduction %",
+            "saved sim GB", "reduction %", "ram tier GB", "ssd tier GB",
         ],
     );
     for name in bs::ALL_MODELS {
@@ -38,6 +38,9 @@ fn main() -> anyhow::Result<()> {
             // peak expert residency
             let sida = dense + out.stats.peak_device_bytes as f64;
             let saved = (full - sida).max(0.0);
+            // where the saved bytes actually sit: the §6 ladder's RAM
+            // window and SSD backing (cache-driven residency ledger)
+            let h = &out.stats.hierarchy;
             t.row(vec![
                 name.to_string(),
                 dataset.to_string(),
@@ -45,6 +48,8 @@ fn main() -> anyhow::Result<()> {
                 format!("{:.2}", sida / 1e9),
                 format!("{:.2}", saved / 1e9),
                 format!("{:.1}", 100.0 * saved / full),
+                format!("{:.2}", h.ram_bytes as f64 / 1e9),
+                format!("{:.2}", h.ssd_bytes as f64 / 1e9),
             ]);
         }
     }

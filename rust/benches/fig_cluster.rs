@@ -88,6 +88,10 @@ fn main() -> anyhow::Result<()> {
             ("devices", num(devices as f64)),
             ("throughput_rps", num(stats.throughput())),
             ("replicate_top", num(replicate_top as f64)),
+            // the fleet-aggregate §6 ladder (cache-driven, per device)
+            ("ladder_secs", num(stats.hierarchy.ladder_secs())),
+            ("ssd_promote_secs", num(stats.hierarchy.ssd_promote_secs)),
+            ("ram_tier_bytes", num(stats.hierarchy.ram_bytes as f64)),
             ("per_device_expert_bytes", num(assigned_bytes as f64)),
             ("per_device_assigned_experts", num(assigned as f64)),
             ("max_device_peak_bytes", num(stats.peak_device_bytes as f64)),

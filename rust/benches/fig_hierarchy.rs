@@ -1,0 +1,126 @@
+//! fig_hierarchy — the §6 GPU→RAM→SSD ladder under a shrinking host-RAM
+//! window.
+//!
+//! Serves the same trace at a fixed (tight) device budget while the
+//! modeled `--ram-budget` sweeps from "holds every expert" down to
+//! zero.  Device-tier evictions demote their policy-chosen victims into
+//! the RAM window; what the window cannot hold falls to SSD, and every
+//! re-fetch of an SSD-deep expert pays the NVMe+PCIe ladder (~9x a
+//! RAM-resident promote).  The shape under test — and the CI gate this
+//! bench enforces — is the ladder's defining monotonicity: **SSD-tier
+//! promotion seconds must not decrease as the RAM budget shrinks**, and
+//! must be strictly larger with no RAM window than with a full one.
+//!
+//! Determinism discipline: prefetch off + a single worker lane, so the
+//! fetch/eviction history is identical across cells and the inclusion
+//! property of the FIFO RAM window makes the gate exact, not
+//! statistical.  Hermetic (synthetic testkit bundle) — CI's bench-smoke
+//! job RUNS this instead of SKIP-ing.  Emits `BENCH_hierarchy.json`.
+
+use sida_moe::bench_support as bs;
+use sida_moe::coordinator::{Pipeline, PipelineConfig};
+use sida_moe::metrics::Table;
+use sida_moe::testkit::{self, SynthSpec, TINY_PROFILE};
+use sida_moe::util::json::{num, obj, s, Json};
+
+fn main() -> anyhow::Result<()> {
+    bs::banner(
+        "fig_hierarchy: tiered memory (GPU -> RAM -> SSD) vs --ram-budget",
+        "SSD exposure grows monotonically as the host-RAM window shrinks (paper §6)",
+    );
+    let bundle = testkit::bundle(&SynthSpec::default().two_moe_layers())?;
+    let topo = &bundle.topology;
+    let n = bs::n_requests(16);
+    let requests = testkit::tiny_trace(&bundle, n, 7);
+
+    let sim_expert = bs::sim_expert_bytes(&bundle)?;
+    let total_experts = topo.moe_blocks.len() * topo.num_experts;
+    // tight device tier: room for 4 experts out of the full pool, so the
+    // ladder below actually carries traffic
+    let device_budget = 4 * sim_expert + 1024;
+
+    let mut t = Table::new(
+        "fig_hierarchy — ladder exposure vs RAM budget (device budget fixed)",
+        &[
+            "ram budget (experts)", "ssd promote s", "ram promote s",
+            "demote ram/ssd", "ram used MB", "ssd used MB", "hit rate",
+        ],
+    );
+    let mut j = bs::BenchJson::new("hierarchy");
+    // experts the RAM window holds: everything -> nothing
+    let ram_experts = [total_experts, 4, 2, 1, 0];
+    let mut ssd_secs_by_cell: Vec<(usize, f64)> = Vec::new();
+    for &re in &ram_experts {
+        let cfg = PipelineConfig {
+            k_used: 2,
+            budget_sim_bytes: device_budget,
+            ram_budget_bytes: re * sim_expert + if re > 0 { 1024 } else { 0 },
+            want_cls: true,
+            // determinism: every fetch on the inference thread, one lane
+            prefetch: false,
+            pool_threads: 1,
+            ..Default::default()
+        };
+        let pipeline = Pipeline::new(bundle.clone(), TINY_PROFILE, cfg)?;
+        let out = pipeline.serve(&requests)?;
+        let st = &out.stats;
+        let h = &st.hierarchy;
+        // one merged timeline: the ladder attribution IS the modeled
+        // transfer total (no parallel promote clock)
+        let drift = (h.ladder_secs() - st.modeled_transfer_secs).abs();
+        anyhow::ensure!(
+            drift <= 1e-9 * st.modeled_transfer_secs.max(1.0),
+            "ladder seconds {} drifted from modeled transfer {}",
+            h.ladder_secs(),
+            st.modeled_transfer_secs
+        );
+        ssd_secs_by_cell.push((re, h.ssd_promote_secs));
+        t.row(vec![
+            re.to_string(),
+            format!("{:.4}", h.ssd_promote_secs),
+            format!("{:.4}", h.ram_promote_secs),
+            format!("{}/{}", h.demotions_to_ram, h.demotions_to_ssd),
+            format!("{:.1}", h.ram_bytes as f64 / 1e6),
+            format!("{:.1}", h.ssd_bytes as f64 / 1e6),
+            sida_moe::metrics::report::fmt_rate(st.hit_rate()),
+        ]);
+        j.push(obj(vec![
+            ("ram_budget_experts", num(re as f64)),
+            ("ram_budget_bytes", num((re * sim_expert) as f64)),
+            ("device_budget_bytes", num(device_budget as f64)),
+            ("ssd_promote_secs", num(h.ssd_promote_secs)),
+            ("ram_promote_secs", num(h.ram_promote_secs)),
+            ("ladder_secs", num(h.ladder_secs())),
+            ("promotions_from_ssd", num(h.promotions_from_ssd as f64)),
+            ("promotions_from_ram", num(h.promotions_from_ram as f64)),
+            ("demotions_to_ram", num(h.demotions_to_ram as f64)),
+            ("demotions_to_ssd", num(h.demotions_to_ssd as f64)),
+            ("requests", num(st.requests as f64)),
+            ("dataset", s(TINY_PROFILE)),
+        ]));
+    }
+    t.print();
+    t.save_csv(&bs::csv_path("fig_hierarchy"))?;
+
+    // the gate: SSD promote seconds never decrease as RAM shrinks, and
+    // strictly grow from the full window to none
+    let monotone = ssd_secs_by_cell.windows(2).all(|w| w[1].1 >= w[0].1 - 1e-12);
+    let strict = ssd_secs_by_cell.last().unwrap().1
+        > ssd_secs_by_cell.first().unwrap().1 + 1e-12;
+    println!(
+        "hierarchy check: SSD promote seconds monotone non-decreasing as \
+         --ram-budget shrinks: {}; strictly larger at ram=0 than full RAM: {}",
+        if monotone { "PASS" } else { "FAIL" },
+        if strict { "PASS" } else { "FAIL" }
+    );
+    j.push(obj(vec![
+        ("ssd_secs_monotone_in_shrinking_ram", Json::Bool(monotone)),
+        ("ssd_secs_strictly_grow_without_ram", Json::Bool(strict)),
+    ]));
+    let path = j.save()?;
+    println!("perf-trajectory JSON: {}", path.display());
+    if !(monotone && strict) {
+        std::process::exit(1);
+    }
+    Ok(())
+}

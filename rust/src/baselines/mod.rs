@@ -84,6 +84,13 @@ pub struct BaselineConfig {
     /// simulated device budget (Layerwise / Reactive); all-resident
     /// methods ignore it and account the full MoE footprint
     pub budget_sim_bytes: usize,
+    /// modeled host-RAM tier window below the device budget
+    /// (`--ram-budget`; cached methods only) — same ladder semantics as
+    /// the SiDA pipeline, so cross-method ladder comparisons share one
+    /// memory model
+    pub ram_budget_sim_bytes: usize,
+    /// the RAM window's own eviction policy (`--ram-policy`)
+    pub ram_policy: String,
     pub real_sleep: bool,
     pub want_lm: bool,
     pub want_cls: bool,
@@ -93,6 +100,8 @@ impl Default for BaselineConfig {
     fn default() -> Self {
         BaselineConfig {
             budget_sim_bytes: 8 << 30,
+            ram_budget_sim_bytes: crate::memory::DEFAULT_RAM_BUDGET,
+            ram_policy: "fifo".into(),
             real_sleep: false,
             want_lm: false,
             want_cls: false,
@@ -143,10 +152,12 @@ pub fn run_baseline(
         Method::Layerwise | Method::Reactive => {
             provider_kind = 1;
             all_resident = None;
-            cache = Some(ExpertCache::new(
+            cache = Some(ExpertCache::with_hierarchy(
                 cfg.budget_sim_bytes,
                 cost.clone(),
                 make_policy("fifo")?,
+                cfg.ram_budget_sim_bytes,
+                make_policy(&cfg.ram_policy)?,
             ));
         }
         Method::Sida => unreachable!(),
@@ -222,6 +233,7 @@ pub fn run_baseline(
             stats.overlapped_transfer_secs = cs.overlapped_transfer_secs;
             stats.peak_device_bytes = c.peak();
             stats.budget_bytes = c.budget();
+            stats.hierarchy = c.hierarchy_stats();
             // modeled transfer time is already inside phases.transfer_secs
         }
         None => {

@@ -68,6 +68,11 @@ pub struct RunSpec {
     pub want_lm: bool,
     pub want_cls: bool,
     pub policy: String,
+    /// modeled host-RAM tier budget (sim bytes; device evictions demote
+    /// here, overflow falls to SSD)
+    pub ram_budget_sim_bytes: usize,
+    /// the RAM window's own eviction policy
+    pub ram_policy: String,
     pub prefetch: bool,
     /// requests per forward (sida only): 1 = the paper's batch-1 mode,
     /// > 1 = cross-request batching
@@ -94,6 +99,8 @@ impl RunSpec {
             want_lm: false,
             want_cls: false,
             policy: "fifo".into(),
+            ram_budget_sim_bytes: crate::memory::DEFAULT_RAM_BUDGET,
+            ram_policy: "fifo".into(),
             prefetch: true,
             max_batch: 1,
             pool_threads: 0,
@@ -156,6 +163,18 @@ impl RunSpec {
         self
     }
 
+    /// Modeled host-RAM tier budget in simulated bytes (`--ram-budget`).
+    pub fn ram_budget(mut self, bytes: usize) -> Self {
+        self.ram_budget_sim_bytes = bytes;
+        self
+    }
+
+    /// RAM-tier eviction policy (`--ram-policy`).
+    pub fn ram_policy_name(mut self, p: &str) -> Self {
+        self.ram_policy = p.to_string();
+        self
+    }
+
     pub fn prefetch_on(mut self, v: bool) -> Self {
         self.prefetch = v;
         self
@@ -182,6 +201,8 @@ pub fn run_method(
                 k_used: spec.k_used,
                 budget_sim_bytes: spec.budget_sim_bytes,
                 policy: spec.policy.clone(),
+                ram_budget_bytes: spec.ram_budget_sim_bytes,
+                ram_policy: spec.ram_policy.clone(),
                 real_sleep: spec.real_sleep,
                 prefetch: spec.prefetch,
                 queue_depth: 8,
@@ -200,6 +221,8 @@ pub fn run_method(
         m => {
             let cfg = BaselineConfig {
                 budget_sim_bytes: spec.budget_sim_bytes,
+                ram_budget_sim_bytes: spec.ram_budget_sim_bytes,
+                ram_policy: spec.ram_policy.clone(),
                 real_sleep: spec.real_sleep,
                 want_lm: spec.want_lm,
                 want_cls: spec.want_cls,

@@ -1,49 +1,49 @@
-//! The modeled device fleet: per-device expert caches, per-device
-//! three-tier residency ledgers, and the cross-device interconnect cost
+//! The modeled device fleet: per-device expert caches (each driving its
+//! own §6 residency ladder) and the cross-device interconnect cost
 //! model.
 //!
-//! Each [`Device`] owns a full [`SharedExpertCache`] (its budgeted
-//! "GPU" tier — the runtime source of truth for what is resident and
-//! what must be fetched) plus a [`TieredStore`] ledger that models the
-//! same device's position in the device ↔ host-RAM ↔ SSD ladder of
-//! paper §6 (promotions are recorded when the cluster routes work to
-//! the device; FIFO demotions model budget pressure down the ladder).
-//! The ledger is modeled *accounting* — the cache enforces the budget;
-//! the ledger reports where the bytes came from.
+//! Each [`Device`] owns a full [`SharedExpertCache`] — its budgeted
+//! "GPU" tier, the runtime source of truth for what is resident and
+//! what must be fetched.  The cache itself drives the device's
+//! GPU ↔ host-RAM ↔ SSD ladder (paper §6) through its embedded
+//! [`crate::memory::ResidencyLedger`]: evictions demote the *actual*
+//! policy-chosen victim, misses are charged tier-aware promotion cost.
+//! The modeled `TieredStore` side-car that used to sit beside the cache
+//! (and could drift from its eviction order) is gone — single-device
+//! and cluster serving now share one residency mechanism.
 //!
 //! Device-to-device activation movement is charged through the same
 //! [`TierCosts`] vocabulary the tier ladder uses: one
 //! [`Tier::Ram`]-to-device hop over the modeled PCIe/NVLink fabric per
 //! direction (see [`DeviceSet::link_secs`]).
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::experts::{make_policy, ExpertCache, ExpertKey, SharedExpertCache};
-use crate::memory::{CostModel, HierarchyStats, Tier, TierCosts, TieredStore};
+use crate::memory::{CostModel, HierarchyStats, Tier, TierCosts};
 
-/// One modeled accelerator: a budgeted expert cache plus the modeled
-/// three-tier residency ledger for the experts routed to it.
+/// One modeled accelerator: a budgeted expert cache whose embedded
+/// residency ledger tracks this device's position in the §6 ladder.
 pub struct Device {
     pub id: usize,
-    /// runtime expert residency (budget, eviction, transfer accounting)
+    /// runtime expert residency (budget, eviction, tier ladder,
+    /// transfer accounting)
     pub cache: Arc<SharedExpertCache>,
-    /// modeled device/RAM/SSD ladder for this device's expert traffic
-    tiers: Mutex<TieredStore<ExpertKey>>,
 }
 
 impl Device {
-    /// Record that `key` was brought to (or used on) this device:
-    /// promotes it in the tier ledger and returns the modeled promote
-    /// seconds (0 when already device-resident in the ledger).
-    pub fn note_promote(&self, key: ExpertKey, sim_bytes: usize) -> f64 {
-        self.tiers.lock().unwrap().promote(key, sim_bytes)
+    /// Snapshot of this device's tier-ladder statistics — read straight
+    /// from the cache-driven ledger, so it can never drift from the
+    /// eviction order the cache actually produced.
+    pub fn hierarchy_stats(&self) -> HierarchyStats {
+        self.cache.hierarchy_stats()
     }
 
-    /// Snapshot of this device's tier-ladder statistics.
-    pub fn hierarchy_stats(&self) -> HierarchyStats {
-        self.tiers.lock().unwrap().stats.clone()
+    /// Which ladder tier `key` sits in on this device.
+    pub fn tier_of(&self, key: &ExpertKey) -> Tier {
+        self.cache.tier_of(key)
     }
 }
 
@@ -60,9 +60,11 @@ pub struct DeviceSet {
 
 impl DeviceSet {
     /// Build `n` devices, each with its own `budget_per_device` expert
-    /// cache (paper-scale cost model) and a fresh tier ledger.
-    /// `host_ram_budget` bounds the modeled per-device RAM tier the
-    /// ladder demotes into (experts pushed further fall to SSD).
+    /// cache (paper-scale cost model).  `ram_budget` bounds the modeled
+    /// per-device host-RAM window device evictions demote into
+    /// (`ram_policy` is that window's own eviction policy; overflow
+    /// falls to unbounded SSD).
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         n: usize,
         budget_per_device: usize,
@@ -70,7 +72,8 @@ impl DeviceSet {
         policy: &str,
         real_sleep: bool,
         link: TierCosts,
-        host_ram_budget: usize,
+        ram_budget: usize,
+        ram_policy: &str,
     ) -> Result<Self> {
         anyhow::ensure!(n >= 1, "a cluster needs at least one device");
         let mut devices = Vec::with_capacity(n);
@@ -78,16 +81,13 @@ impl DeviceSet {
             let cost = CostModel::paper_scale(real_expert_bytes).with_real_sleep(real_sleep);
             devices.push(Device {
                 id,
-                cache: Arc::new(SharedExpertCache::new(ExpertCache::new(
+                cache: Arc::new(SharedExpertCache::new(ExpertCache::with_hierarchy(
                     budget_per_device,
                     cost,
                     make_policy(policy)?,
+                    ram_budget,
+                    make_policy(ram_policy)?,
                 ))),
-                tiers: Mutex::new(TieredStore::new(
-                    budget_per_device,
-                    host_ram_budget,
-                    link.clone(),
-                )),
             });
         }
         Ok(DeviceSet { devices, link, budget_per_device })
@@ -117,8 +117,8 @@ impl DeviceSet {
     }
 
     /// Reset every device cache's counters and peak (between bench
-    /// phases); tier ledgers keep their residency but a fresh stats
-    /// epoch is what the caches report from here on.
+    /// phases); residency — cache contents and ladder tiers — is state,
+    /// not statistics, and carries across the epoch boundary.
     pub fn reset_stats(&self) {
         for d in &self.devices {
             d.cache.reset_stats();
@@ -130,13 +130,16 @@ impl DeviceSet {
 mod tests {
     use super::*;
 
+    fn set(n: usize, budget: usize) -> DeviceSet {
+        DeviceSet::new(n, budget, 1000, "fifo", false, TierCosts::default(), 1 << 24, "fifo")
+            .unwrap()
+    }
+
     #[test]
     fn builds_n_isolated_devices() {
-        let set =
-            DeviceSet::new(3, 1 << 20, 1000, "fifo", false, TierCosts::default(), 1 << 24)
-                .unwrap();
-        assert_eq!(set.len(), 3);
-        for (i, d) in set.iter().enumerate() {
+        let s = set(3, 1 << 20);
+        assert_eq!(s.len(), 3);
+        for (i, d) in s.iter().enumerate() {
             assert_eq!(d.id, i);
             assert_eq!(d.cache.budget(), 1 << 20);
             assert_eq!(d.cache.used(), 0);
@@ -145,27 +148,31 @@ mod tests {
 
     #[test]
     fn link_cost_is_one_ram_hop() {
-        let set =
-            DeviceSet::new(2, 1 << 20, 1000, "fifo", false, TierCosts::default(), 1 << 24)
-                .unwrap();
+        let s = set(2, 1 << 20);
         let b = 1 << 20;
-        assert_eq!(set.link_secs(b), set.link.promote_secs(Tier::Ram, b));
-        assert!(set.link_secs(b) > 0.0);
+        assert_eq!(s.link_secs(b), s.link.promote_secs(Tier::Ram, b));
+        assert!(s.link_secs(b) > 0.0);
     }
 
     #[test]
-    fn ledger_promotes_and_reports() {
-        let set =
-            DeviceSet::new(2, 10_000, 1000, "fifo", false, TierCosts::default(), 1 << 24)
-                .unwrap();
+    fn ladder_is_cache_driven_and_per_device() {
+        // fetching through device 0's cache promotes in ITS ledger only;
+        // device 1's ladder stays untouched
+        let s = set(2, 1 << 20);
         let key = ExpertKey::new(0, 0);
-        let first = set.device(0).note_promote(key, 4_000);
-        assert!(first > 0.0, "cold promote must cost modeled time");
-        let again = set.device(0).note_promote(key, 4_000);
-        assert_eq!(again, 0.0, "device-resident promote is free");
-        let h = set.device(0).hierarchy_stats();
-        assert_eq!(h.device_hits, 1);
-        // device 1's ledger is untouched
-        assert_eq!(set.device(1).hierarchy_stats().device_hits, 0);
+        let buf = || {
+            crate::runtime::DeviceBuffer(
+                crate::runtime::Literal::from_f32s(&[1], vec![0.0]).unwrap(),
+            )
+        };
+        s.device(0)
+            .cache
+            .ensure(key, 1000, false, || Ok([buf(), buf(), buf(), buf()]))
+            .unwrap();
+        assert_eq!(s.device(0).tier_of(&key), Tier::Device);
+        assert_eq!(s.device(0).hierarchy_stats().promotions_from_ssd, 1);
+        assert_eq!(s.device(1).tier_of(&key), Tier::Ssd, "other ledgers untouched");
+        assert_eq!(s.device(1).hierarchy_stats().promotions_from_ssd, 0);
+        s.device(0).cache.check_invariants().unwrap();
     }
 }

@@ -16,10 +16,12 @@
 //! on the modeled timeline).
 //!
 //! The fleet itself is [`DeviceSet`]: per-device [`SharedExpertCache`]
-//! budgets (the modeled GPU tier), per-device [`TieredStore`] ledgers
-//! (the §6 device/RAM/SSD ladder), and a [`TierCosts`]-based
-//! interconnect.  Outputs are **bit-identical** to single-device
-//! serving at every device count: the cluster decides only where an
+//! budgets (the modeled GPU tier) whose embedded
+//! [`crate::memory::ResidencyLedger`]s track each device's §6
+//! device/RAM/SSD ladder — driven by the caches' real evictions, the
+//! same mechanism single-device serving uses — plus a
+//! [`TierCosts`]-based interconnect.  Outputs are **bit-identical** to
+//! single-device serving at every device count: the cluster decides only where an
 //! invocation computes; the scatter into the accumulators stays on the
 //! primary, in ascending expert order, exactly like the sequential
 //! path (asserted in `tests/cluster.rs` for devices ∈ {1, 2, 4}).
@@ -36,7 +38,6 @@
 //! ```
 //!
 //! [`SharedExpertCache`]: crate::experts::SharedExpertCache
-//! [`TieredStore`]: crate::memory::TieredStore
 //! [`TierCosts`]: crate::memory::TierCosts
 
 pub mod device;
@@ -66,10 +67,13 @@ pub struct ClusterConfig {
     /// sleep modeled transfer time on the fetching thread's timeline
     pub real_sleep: bool,
     /// cost table of the device fabric (one RAM-hop per activation
-    /// transfer direction) and of the per-device tier ladder
+    /// transfer direction)
     pub link: TierCosts,
     /// modeled per-device host-RAM budget the tier ladder demotes into
+    /// (`--ram-budget`; overflow falls to unbounded SSD)
     pub host_ram_budget: usize,
+    /// the RAM window's own eviction policy (`--ram-policy`)
+    pub ram_policy: String,
 }
 
 impl Default for ClusterConfig {
@@ -81,7 +85,8 @@ impl Default for ClusterConfig {
             policy: "fifo".into(),
             real_sleep: false,
             link: TierCosts::default(),
-            host_ram_budget: 64 << 30,
+            host_ram_budget: crate::memory::DEFAULT_RAM_BUDGET,
+            ram_policy: "fifo".into(),
         }
     }
 }

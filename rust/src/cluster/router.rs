@@ -27,7 +27,7 @@ use crate::cluster::stats::{ClusterStats, DeviceStats};
 use crate::cluster::ClusterConfig;
 use crate::coordinator::hash_table::HashTable;
 use crate::experts::ExpertKey;
-use crate::memory::CostModel;
+use crate::memory::{CostModel, Tier};
 use crate::runtime::ModelBundle;
 
 /// One planned cluster prefetch: which expert to warm on which device.
@@ -37,6 +37,10 @@ pub struct ClusterFetch {
     pub device: usize,
     /// predicted token heat (fetch-ordering priority)
     pub token_count: usize,
+    /// the expert's ladder tier on that device at planning time —
+    /// SSD-deep promotions are issued first (they take ~9x as long, so
+    /// they must start earliest to hide behind compute)
+    pub tier: Tier,
 }
 
 /// See the module docs.  Shared concurrently by the worker-pool lanes,
@@ -50,13 +54,17 @@ pub struct ClusterRouter {
     observed_at_plan: AtomicU64,
     /// per-device token rows dispatched (load-imbalance numerator)
     rows: Vec<AtomicU64>,
+    /// per-device dispatch-bucket units dispatched: each job's rows
+    /// rounded up to the bucket chunks the expert kernel actually pads
+    /// to — the *compute* the lane balancer weighs
+    bucket_units: Vec<AtomicU64>,
     cross_device_bytes: AtomicU64,
     interconnect_secs: Mutex<f64>,
     replans: AtomicU64,
     d_model: usize,
     moe_blocks: Vec<usize>,
-    /// simulated bytes of one expert (tier-ledger unit)
-    expert_sim_bytes: usize,
+    /// the served model's topology — bucket geometry for lane weighting
+    topo: std::sync::Arc<crate::runtime::Topology>,
 }
 
 impl ClusterRouter {
@@ -76,11 +84,13 @@ impl ClusterRouter {
             cfg.real_sleep,
             cfg.link.clone(),
             cfg.host_ram_budget,
+            &cfg.ram_policy,
         )?;
         let capacity = (cfg.budget_per_device / expert_sim_bytes.max(1)).max(1);
         let planner = PlacementPlanner::new(cfg.devices, cfg.replicate_top, capacity);
         let placement = planner.plan(topo, &ActivationProfile::default());
         let rows = (0..cfg.devices).map(|_| AtomicU64::new(0)).collect();
+        let bucket_units = (0..cfg.devices).map(|_| AtomicU64::new(0)).collect();
         Ok(ClusterRouter {
             set,
             planner,
@@ -88,12 +98,13 @@ impl ClusterRouter {
             profile: Mutex::new(ActivationProfile::default()),
             observed_at_plan: AtomicU64::new(0),
             rows,
+            bucket_units,
             cross_device_bytes: AtomicU64::new(0),
             interconnect_secs: Mutex::new(0.0),
             replans: AtomicU64::new(0),
             d_model: topo.d_model,
             moe_blocks: topo.moe_blocks.clone(),
-            expert_sim_bytes,
+            topo: bundle.topology.clone(),
         })
     }
 
@@ -144,15 +155,40 @@ impl ClusterRouter {
         }
     }
 
+    /// Dispatch-bucket compute weight of one job with `rows` gathered
+    /// rows: the expert kernel pads every chunk up to a bucket
+    /// (`expert_T{bucket}` artifacts), so a 5-row job on buckets
+    /// {2, 4, 8} costs 8 bucket units, not 5 — rows round UP.  This is
+    /// the unit the lane balancer weighs, because it is what each
+    /// device actually computes.  Buckets resolve through the
+    /// topology's own [`crate::runtime::Topology::bucket_for`] (the rule
+    /// the chunk loop in `model::forward` uses), assuming the adaptive
+    /// bucket path — the SiDA pipeline never dispatches cluster lanes
+    /// with `fixed_bucket`, which belongs to the all-resident baselines.
+    fn job_bucket_units(&self, rows: usize) -> usize {
+        let mut units = 0usize;
+        let mut remaining = rows;
+        while remaining > 0 {
+            let bucket = self.topo.bucket_for(remaining);
+            units += bucket;
+            remaining -= remaining.min(bucket);
+        }
+        units
+    }
+
     /// Assign each job `(expert, row_count)` of one MoE layer (ascending
-    /// expert order) to a device: the least-loaded holder of that
-    /// expert, ties on the lower device id.  Also records per-device row
-    /// loads and promotes each assigned expert in its device's tier
-    /// ledger.
+    /// expert order) to a device: the **least-loaded** holder of that
+    /// expert — load measured in dispatch-bucket units (rows round up to
+    /// the bucket the kernel pads to), so lanes balance actual compute
+    /// rather than raw row counts — ties on the lower device id.  Also
+    /// records per-device row/bucket-unit loads.  (Tier-ladder traffic
+    /// needs no recording here: each device's cache drives its own
+    /// ledger when the lane actually resolves residency.)
     pub fn assign(&self, block: usize, jobs: &[(usize, usize)]) -> Vec<usize> {
         let placement = self.placement.read().unwrap();
         let mut loads = vec![0usize; self.set.len()];
         let mut out = Vec::with_capacity(jobs.len());
+        let mut units = Vec::with_capacity(jobs.len());
         for &(expert, rows) in jobs {
             let key = ExpertKey::new(block, expert);
             let dev = placement
@@ -161,15 +197,15 @@ impl ClusterRouter {
                 .copied()
                 .min_by_key(|&d| (loads[d], d))
                 .unwrap_or(0);
-            loads[dev] += rows;
+            let w = self.job_bucket_units(rows);
+            loads[dev] += w;
+            units.push(w);
             out.push(dev);
         }
         drop(placement);
-        for (&(expert, rows), &dev) in jobs.iter().zip(out.iter()) {
+        for ((&(_, rows), &dev), &w) in jobs.iter().zip(out.iter()).zip(units.iter()) {
             self.rows[dev].fetch_add(rows as u64, Ordering::Relaxed);
-            self.set
-                .device(dev)
-                .note_promote(ExpertKey::new(block, expert), self.expert_sim_bytes);
+            self.bucket_units[dev].fetch_add(w as u64, Ordering::Relaxed);
         }
         out
     }
@@ -191,7 +227,9 @@ impl ClusterRouter {
     }
 
     /// Plan one MoE layer's cluster prefetch: every predicted expert
-    /// missing from **any** of its holder devices, hottest first.
+    /// missing from **any** of its holder devices — deepest ladder tier
+    /// first (an SSD-deep promotion costs ~9x a RAM-resident one on
+    /// that device's ladder, so it must start earliest), then hottest.
     /// Replicas are warmed on every holder — replication means the
     /// weights live on several devices, so the router can steer traffic
     /// freely without a cold-start penalty.
@@ -208,17 +246,26 @@ impl ClusterRouter {
         for (expert, token_count) in counts {
             let key = ExpertKey::new(block, expert);
             for &device in placement.holders(&key) {
-                if !self.set.device(device).cache.contains(&key) {
-                    plan.push(ClusterFetch { key, device, token_count });
+                let tier = self.set.device(device).tier_of(&key);
+                if tier != Tier::Device {
+                    plan.push(ClusterFetch { key, device, token_count, tier });
                 }
             }
         }
-        plan.sort_by(|a, b| b.token_count.cmp(&a.token_count).then(a.key.cmp(&b.key)));
+        plan.sort_by(|a, b| {
+            b.tier
+                .cmp(&a.tier)
+                .then(b.token_count.cmp(&a.token_count))
+                .then(a.key.cmp(&b.key))
+                .then(a.device.cmp(&b.device))
+        });
         plan
     }
 
     /// Execute a cluster fetch plan on the prefetch timeline
-    /// (non-blocking; resident entries cost one read-path hit).
+    /// (non-blocking; resident entries cost one read-path hit).  Each
+    /// device's cache drives its own residency ledger as it fetches —
+    /// there is no separate promote bookkeeping to drift.
     pub fn fetch_planned(&self, bundle: &ModelBundle, plan: &[ClusterFetch]) -> Result<()> {
         for fetch in plan {
             let key = fetch.key;
@@ -231,7 +278,6 @@ impl ClusterRouter {
                     key.expert,
                 )
             })?;
-            self.set.device(fetch.device).note_promote(key, self.expert_sim_bytes);
         }
         Ok(())
     }
@@ -264,6 +310,7 @@ impl ClusterRouter {
                 resident_experts: d.cache.resident_count(),
                 assigned_experts: placement.assigned_to(d.id),
                 rows: self.rows[d.id].load(Ordering::Relaxed),
+                bucket_units: self.bucket_units[d.id].load(Ordering::Relaxed),
                 cache: d.cache.stats(),
                 hierarchy: d.hierarchy_stats(),
             })
@@ -285,6 +332,9 @@ impl ClusterRouter {
         self.set.reset_stats();
         for r in &self.rows {
             r.store(0, Ordering::Relaxed);
+        }
+        for u in &self.bucket_units {
+            u.store(0, Ordering::Relaxed);
         }
         self.cross_device_bytes.store(0, Ordering::Relaxed);
         *self.interconnect_secs.lock().unwrap() = 0.0;
@@ -369,6 +419,74 @@ mod tests {
         let assign = r.assign(hot.block, &[(pinned.expert, 100), (hot.expert, 1)]);
         assert_eq!(assign[0], home, "single-holder expert must run at home");
         assert_ne!(assign[1], home, "replica steering failed: {assign:?}");
+    }
+
+    #[test]
+    fn lanes_balance_bucket_units_not_raw_rows() {
+        // tiny-bundle buckets are {2, 4, 8, 32}: a 5-row job costs 8
+        // bucket units (rows round UP to the kernel's padded chunk), the
+        // same as a 6-row job.  Construct a replica-steering decision
+        // where the two rules disagree: device 0 carries a 6-row job
+        // (8 units), device 1 a 5-row job (8 units).  Bucket units say
+        // the lanes tie (the replica breaks the tie to device 0); raw
+        // rows say device 1 is lighter (5 < 6) and would steer there —
+        // so a regression to raw-row balancing fails this assert.
+        let (b, r) = router(2, 1);
+        let builder = crate::coordinator::HashBuilder::new(&b, testkit::TINY_PROFILE).unwrap();
+        let reqs = testkit::tiny_trace(&b, 6, 21);
+        let masks: Vec<Vec<f32>> = reqs.iter().map(|q| q.mask()).collect();
+        let tables: Vec<_> =
+            reqs.iter().map(|q| builder.build(q.id, &q.ids).unwrap()).collect();
+        let pairs: Vec<(&HashTable, &[f32])> =
+            tables.iter().zip(masks.iter()).map(|(t, m)| (t, m.as_slice())).collect();
+        r.observe(&pairs, 1);
+        r.replan_now(&b);
+        let placement = r.placement();
+        let hot = placement
+            .keys()
+            .copied()
+            .find(|k| placement.holders(k).len() == 2)
+            .expect("replicate_top=1 must produce a replica");
+        // single-holder experts homed on device 0 and on device 1
+        let homed_on = |dev: usize| {
+            placement
+                .keys()
+                .copied()
+                .find(|k| {
+                    let h = placement.holders(k);
+                    k.block == hot.block && *k != hot && h.len() == 1 && h[0] == dev
+                })
+                .unwrap_or_else(|| panic!("no single-holder expert homed on {dev}"))
+        };
+        let e0 = homed_on(0);
+        let e1 = homed_on(1);
+        let assign =
+            r.assign(hot.block, &[(e0.expert, 6), (e1.expert, 5), (hot.expert, 1)]);
+        assert_eq!(assign[0], 0, "single-holder expert must run at home");
+        assert_eq!(assign[1], 1, "single-holder expert must run at home");
+        assert_eq!(
+            assign[2], 0,
+            "8-vs-8 bucket units tie -> lower id; raw rows (6 vs 5) would pick 1"
+        );
+        let stats = r.stats();
+        // 6 -> 8, 5 -> 8, 1 -> 2 bucket units; rows stay raw
+        let total_units: u64 = stats.devices.iter().map(|d| d.bucket_units).sum();
+        assert_eq!(total_units, 18);
+        let total_rows: u64 = stats.devices.iter().map(|d| d.rows).sum();
+        assert_eq!(total_rows, 12);
+    }
+
+    #[test]
+    fn bucket_weighting_rounds_rows_up_to_chunks() {
+        let (b, r) = router(2, 0);
+        let block = b.topology.moe_blocks[0];
+        // 9 rows on buckets {2,4,8,32}: the smallest bucket that fits 9
+        // is 32 (the kernel pads the whole chunk) -> 32 units; 3 rows
+        // -> 4 units
+        let _ = r.assign(block, &[(0, 9), (1, 3)]);
+        let stats = r.stats();
+        let total_units: u64 = stats.devices.iter().map(|d| d.bucket_units).sum();
+        assert_eq!(total_units, 36);
     }
 
     #[test]

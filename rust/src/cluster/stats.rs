@@ -20,10 +20,16 @@ pub struct DeviceStats {
     pub assigned_experts: usize,
     /// token rows dispatched to this device
     pub rows: u64,
+    /// dispatch-bucket units dispatched to this device (rows rounded up
+    /// to the kernel's padded chunks — the compute the lane balancer
+    /// actually weighs)
+    pub bucket_units: u64,
     /// the device cache's full counter set (hits, misses, transfers,
     /// overlap split)
     pub cache: CacheStats,
-    /// modeled device/RAM/SSD ladder traffic for this device
+    /// this device's GPU/RAM/SSD ladder — read from the cache-driven
+    /// residency ledger (per-tier occupancy, promotions per hop, ladder
+    /// seconds), never modeled beside it
     pub hierarchy: HierarchyStats,
 }
 
@@ -42,21 +48,35 @@ pub struct ClusterStats {
 }
 
 impl ClusterStats {
-    /// Max-over-mean row load across devices (1.0 = perfectly balanced;
-    /// `None` before any expert work was dispatched).  The denominator
-    /// is the mean over **all** devices, idle ones included — an idle
-    /// device is imbalance, not a smaller cluster.
-    pub fn load_imbalance(&self) -> Option<f64> {
+    /// The one max-over-mean rule both imbalance views share (1.0 =
+    /// perfectly balanced; `None` for an empty fleet or no load).  The
+    /// denominator is the mean over **all** devices, idle ones included
+    /// — an idle device is imbalance, not a smaller cluster.
+    fn imbalance_of(&self, load: impl Fn(&DeviceStats) -> u64) -> Option<f64> {
         if self.devices.is_empty() {
             return None;
         }
-        let total: u64 = self.devices.iter().map(|d| d.rows).sum();
+        let total: u64 = self.devices.iter().map(&load).sum();
         if total == 0 {
             return None;
         }
         let mean = total as f64 / self.devices.len() as f64;
-        let max = self.devices.iter().map(|d| d.rows).max().unwrap_or(0) as f64;
+        let max = self.devices.iter().map(&load).max().unwrap_or(0) as f64;
         Some(max / mean)
+    }
+
+    /// Max-over-mean row load across devices.
+    pub fn load_imbalance(&self) -> Option<f64> {
+        self.imbalance_of(|d| d.rows)
+    }
+
+    /// Max-over-mean **bucket-unit** load across devices — the compute
+    /// imbalance the bucket-weighted lane balancer minimizes (rows
+    /// round up to dispatch buckets, so this tracks what the devices
+    /// actually execute; [`ClusterStats::load_imbalance`] keeps the raw
+    /// row view).
+    pub fn compute_imbalance(&self) -> Option<f64> {
+        self.imbalance_of(|d| d.bucket_units)
     }
 
     /// The worst single device's peak residency — the per-device GPU
@@ -68,6 +88,19 @@ impl ClusterStats {
     /// The worst single device's placement footprint in experts.
     pub fn max_device_assigned(&self) -> usize {
         self.devices.iter().map(|d| d.assigned_experts).max().unwrap_or(0)
+    }
+
+    /// The fleet-aggregate §6 ladder: every device's cache-driven
+    /// ledger folded into one snapshot (occupancy sums, per-hop
+    /// promotions/demotions, ladder seconds).  The ONE aggregation rule
+    /// — the serve pipeline and the server `cmd:stats` reply both read
+    /// this, so they can never disagree.
+    pub fn hierarchy_total(&self) -> HierarchyStats {
+        let mut total = HierarchyStats::default();
+        for d in &self.devices {
+            total.add(&d.hierarchy);
+        }
+        total
     }
 
     /// Aggregate hit rate across every device cache (`None` with no
@@ -100,6 +133,19 @@ mod tests {
         // mean 20, max 30 -> 1.5
         assert!((s.load_imbalance().unwrap() - 1.5).abs() < 1e-12);
         assert_eq!(s.max_device_peak_bytes(), 20);
+    }
+
+    #[test]
+    fn compute_imbalance_weighs_bucket_units() {
+        let mut a = dev(0, 10, 0);
+        a.bucket_units = 30;
+        let mut b = dev(1, 30, 0);
+        b.bucket_units = 10;
+        let s = ClusterStats { devices: vec![a, b], ..Default::default() };
+        // rows say device 1 is hot; bucket units say device 0 is
+        assert!((s.load_imbalance().unwrap() - 1.5).abs() < 1e-12);
+        assert!((s.compute_imbalance().unwrap() - 1.5).abs() < 1e-12);
+        assert_eq!(ClusterStats::default().compute_imbalance(), None);
     }
 
     #[test]

@@ -22,6 +22,12 @@ pub struct ServeConfig {
     pub budget_gb: f64,
     /// eviction policy for cached methods
     pub policy: String,
+    /// modeled host-RAM tier budget in GB (`--ram-budget`): device
+    /// evictions demote into this §6 ladder window; overflow falls to
+    /// SSD.  Per device in cluster mode.
+    pub ram_budget_gb: f64,
+    /// the RAM window's own eviction policy (`--ram-policy`)
+    pub ram_policy: String,
     /// hash experts consumed per token (paper: 1 for sst2, 3 otherwise)
     pub k_used: usize,
     /// sleep modeled transfer cost on the critical path
@@ -61,6 +67,8 @@ impl Default for ServeConfig {
             method: "sida".into(),
             budget_gb: 8.0,
             policy: "fifo".into(),
+            ram_budget_gb: 64.0,
+            ram_policy: "fifo".into(),
             k_used: 1,
             real_sleep: false,
             prefetch: true,
@@ -88,6 +96,8 @@ impl ServeConfig {
                 "method" => cfg.method = val.as_str()?.to_string(),
                 "budget_gb" => cfg.budget_gb = val.as_f64()?,
                 "policy" => cfg.policy = val.as_str()?.to_string(),
+                "ram_budget_gb" => cfg.ram_budget_gb = val.as_f64()?,
+                "ram_policy" => cfg.ram_policy = val.as_str()?.to_string(),
                 "k_used" => cfg.k_used = val.as_usize()?,
                 "real_sleep" => cfg.real_sleep = val.as_bool()?,
                 "prefetch" => cfg.prefetch = val.as_bool()?,
@@ -130,6 +140,14 @@ impl ServeConfig {
         }
         if let Some(v) = args.get("policy") {
             self.policy = v.to_string();
+        }
+        if let Some(v) = args.get("ram-budget") {
+            if let Ok(x) = v.parse() {
+                self.ram_budget_gb = x;
+            }
+        }
+        if let Some(v) = args.get("ram-policy") {
+            self.ram_policy = v.to_string();
         }
         if let Some(v) = args.get("k-used") {
             if let Ok(x) = v.parse() {
@@ -184,6 +202,10 @@ impl ServeConfig {
         (self.budget_gb * 1e9) as usize
     }
 
+    pub fn ram_budget_bytes(&self) -> usize {
+        (self.ram_budget_gb * 1e9) as usize
+    }
+
     /// The paper's per-dataset k: top-1 for SST2, top-3 for MRPC/MultiRC.
     pub fn paper_k_for(dataset: &str) -> usize {
         if dataset == "sst2" {
@@ -228,6 +250,18 @@ mod tests {
         let d = ServeConfig::default();
         assert_eq!(d.devices, 1);
         assert_eq!(d.replicate_top, 1);
+    }
+
+    #[test]
+    fn ram_tier_keys_parse_with_defaults() {
+        let j = Json::parse(r#"{"ram_budget_gb":2.5,"ram_policy":"lru"}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert!((c.ram_budget_gb - 2.5).abs() < 1e-9);
+        assert_eq!(c.ram_policy, "lru");
+        assert_eq!(c.ram_budget_bytes(), 2_500_000_000);
+        let d = ServeConfig::default();
+        assert!((d.ram_budget_gb - 64.0).abs() < 1e-9);
+        assert_eq!(d.ram_policy, "fifo");
     }
 
     #[test]

@@ -66,6 +66,14 @@ pub struct PipelineConfig {
     pub budget_sim_bytes: usize,
     /// eviction policy name (paper default: fifo)
     pub policy: String,
+    /// modeled host-RAM tier budget in bytes (`--ram-budget`): device
+    /// evictions demote into this window of the §6 ladder; overflow
+    /// falls to unbounded SSD, and a later miss on an SSD-deep expert
+    /// pays the NVMe+PCIe ladder (~9x a RAM-resident one).  Per device
+    /// in cluster mode, like `budget_sim_bytes`.
+    pub ram_budget_bytes: usize,
+    /// the RAM window's own eviction policy (`--ram-policy`)
+    pub ram_policy: String,
     /// sleep modeled transfer time on the critical path
     pub real_sleep: bool,
     /// run the prefetch stages (request-ahead + layer-ahead warmer);
@@ -99,6 +107,8 @@ impl Default for PipelineConfig {
             k_used: 1,
             budget_sim_bytes: 8 << 30,
             policy: "fifo".into(),
+            ram_budget_bytes: crate::memory::DEFAULT_RAM_BUDGET,
+            ram_policy: "fifo".into(),
             real_sleep: false,
             prefetch: true,
             queue_depth: 8,
@@ -162,10 +172,12 @@ impl Pipeline {
         let runner = Arc::new(ModelRunner::with_pool(bundle.clone(), profile, pool)?);
         let real_expert_bytes = bundle.weights.expert_bytes(bundle.topology.moe_blocks[0], 0)?;
         let cost = CostModel::paper_scale(real_expert_bytes).with_real_sleep(cfg.real_sleep);
-        let cache = Arc::new(SharedExpertCache::new(ExpertCache::new(
+        let cache = Arc::new(SharedExpertCache::new(ExpertCache::with_hierarchy(
             cfg.budget_sim_bytes,
             cost,
             make_policy(&cfg.policy)?,
+            cfg.ram_budget_bytes,
+            make_policy(&cfg.ram_policy)?,
         )));
         let cluster = if cfg.devices > 1 {
             Some(Arc::new(ClusterRouter::new(
@@ -176,6 +188,8 @@ impl Pipeline {
                     budget_per_device: cfg.budget_sim_bytes,
                     policy: cfg.policy.clone(),
                     real_sleep: cfg.real_sleep,
+                    host_ram_budget: cfg.ram_budget_bytes,
+                    ram_policy: cfg.ram_policy.clone(),
                     ..ClusterConfig::default()
                 },
             )?))
@@ -595,6 +609,7 @@ impl Pipeline {
                 stats.overlapped_transfer_secs = cs.overlapped_transfer_secs;
                 stats.peak_device_bytes = self.cache.peak();
                 stats.budget_bytes = self.cache.budget();
+                stats.hierarchy = self.cache.hierarchy_stats();
             }
             Some(router) => {
                 let cs = router.stats();
@@ -607,6 +622,7 @@ impl Pipeline {
                     stats.modeled_transfer_secs += d.cache.modeled_transfer_secs;
                     stats.overlapped_transfer_secs += d.cache.overlapped_transfer_secs;
                 }
+                stats.hierarchy = cs.hierarchy_total();
                 // the per-device view: the worst device's peak is what
                 // each modeled accelerator must provision
                 stats.peak_device_bytes = cs.max_device_peak_bytes();

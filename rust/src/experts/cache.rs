@@ -8,6 +8,14 @@
 //! buffers (4 parts per expert: w1, b1, w2, b2); the host copy always
 //! remains in the `WeightStore`, so eviction is free (drop the buffers).
 //!
+//! Below the device tier the cache drives the §6 GPU -> RAM -> SSD
+//! [`ResidencyLedger`]: every eviction demotes its policy-chosen victim
+//! into the budgeted RAM window (overflow falls to SSD), and every miss
+//! is charged the tier-aware promotion cost of where the expert really
+//! sat — the quantity the fig8/fig11 memory arguments and the
+//! `fig_hierarchy` bench depend on being exact, not modeled beside the
+//! cache.
+//!
 //! `ExpertCache` itself is the single-owner core (`&mut` mutators, as
 //! used by the baselines and unit tests).  The serving hot path shares
 //! one cache across the worker pool, the layer-ahead warmer and the
@@ -28,7 +36,10 @@ use anyhow::{bail, Result};
 
 use crate::experts::policy::EvictionPolicy;
 use crate::experts::ExpertKey;
-use crate::memory::{CostModel, DevicePool, ReserveOutcome};
+use crate::memory::{
+    CostModel, DevicePool, HierarchyStats, ReserveOutcome, ResidencyLedger, Tier,
+    DEFAULT_RAM_BUDGET,
+};
 use crate::runtime::DeviceBuffer;
 
 /// The four staged parts of one resident expert (w1, b1, w2, b2) in
@@ -45,7 +56,12 @@ pub struct CacheStats {
     /// simulated bytes moved host->device
     pub transferred_sim_bytes: u64,
     /// modeled seconds spent on transfers (== wall time in real_sleep
-    /// mode), across BOTH timelines (critical path + prefetch)
+    /// mode), across BOTH timelines (critical path + prefetch).  Each
+    /// miss is charged the **tier-aware** ladder cost of where the
+    /// expert actually sat ([`crate::memory::ResidencyLedger`]): one
+    /// PCIe hop for a RAM-resident expert, NVMe + PCIe (~9x) for an
+    /// SSD-deep one — and equals the ledger's
+    /// [`crate::memory::HierarchyStats::ladder_secs`] attribution
     pub modeled_transfer_secs: f64,
     /// the share of `modeled_transfer_secs` credited as hidden on the
     /// prefetch timeline.  Non-blocking fetches queue on one modeled
@@ -121,6 +137,12 @@ pub struct ExpertCache {
     cost: CostModel,
     policy: Box<dyn EvictionPolicy>,
     resident: HashMap<ExpertKey, Arc<ResidentExpert>>,
+    /// the §6 GPU -> RAM -> SSD residency ledger this cache DRIVES:
+    /// every policy-chosen eviction demotes its actual victim, every
+    /// miss promotes from (and is charged for) the tier the expert
+    /// really sat in.  The ledger's Device tier mirrors `resident`
+    /// exactly — `check_invariants` proves it
+    ledger: ResidencyLedger,
     /// anchor of the virtual prefetch timeline: wall seconds since this
     /// instant are the compute window prefetch transfers can hide in
     created: std::time::Instant,
@@ -143,12 +165,33 @@ pub struct ExpertCache {
 
 impl ExpertCache {
     /// `budget_sim_bytes` is the simulated device budget (paper scale).
+    /// The tier ladder below the device gets the default RAM window
+    /// ([`DEFAULT_RAM_BUDGET`], FIFO) — see
+    /// [`ExpertCache::with_hierarchy`] for explicit control.
     pub fn new(budget_sim_bytes: usize, cost: CostModel, policy: Box<dyn EvictionPolicy>) -> Self {
+        let ram_policy = crate::experts::make_policy("fifo").expect("fifo policy always exists");
+        Self::with_hierarchy(budget_sim_bytes, cost, policy, DEFAULT_RAM_BUDGET, ram_policy)
+    }
+
+    /// Build a cache with an explicit §6 ladder below the device tier:
+    /// `ram_budget_sim_bytes` bounds the modeled host-RAM window device
+    /// evictions demote into (overflow falls to unbounded SSD), and
+    /// `ram_policy` is that window's own eviction policy
+    /// (`--ram-budget` / `--ram-policy`).
+    pub fn with_hierarchy(
+        budget_sim_bytes: usize,
+        cost: CostModel,
+        policy: Box<dyn EvictionPolicy>,
+        ram_budget_sim_bytes: usize,
+        ram_policy: Box<dyn EvictionPolicy>,
+    ) -> Self {
+        let ledger = ResidencyLedger::new(ram_budget_sim_bytes, ram_policy, cost.tier_costs());
         ExpertCache {
             pool: DevicePool::new(budget_sim_bytes),
             cost,
             policy,
             resident: HashMap::new(),
+            ledger,
             created: std::time::Instant::now(),
             prefetch_busy_until: 0.0,
             pinned: Mutex::new(HashMap::new()),
@@ -158,6 +201,26 @@ impl ExpertCache {
 
     pub fn cost_model(&self) -> &CostModel {
         &self.cost
+    }
+
+    /// Which tier of the §6 ladder `key` currently sits in (Device for
+    /// resident experts; the ledger answers for RAM/SSD).  Drives the
+    /// tier-aware prefetch ordering: SSD-deep predicted experts are
+    /// promoted earliest because their misses would cost ~9x.
+    pub fn tier_of(&self, key: &ExpertKey) -> Tier {
+        self.ledger.tier_of(key)
+    }
+
+    /// Snapshot of the tier ladder: per-tier occupancy, promotions per
+    /// hop, and the ladder seconds attribution of
+    /// [`CacheStats::modeled_transfer_secs`].
+    pub fn hierarchy_stats(&self) -> HierarchyStats {
+        self.ledger.stats()
+    }
+
+    /// The modeled host-RAM window below this cache's device tier.
+    pub fn ram_budget(&self) -> usize {
+        self.ledger.ram_budget()
     }
 
     /// See [`EvictionPolicy::uses_access`].
@@ -171,6 +234,7 @@ impl ExpertCache {
 
     pub fn reset_stats(&mut self) {
         self.stats = CacheStats::default();
+        self.ledger.reset_stats();
         self.pool.reset_peak();
         // restart the virtual prefetch link: a measured run must not
         // inherit backlog (or spare window) from warmup traffic
@@ -296,6 +360,10 @@ impl ExpertCache {
                 Some(victim) => {
                     self.pool.release(&victim);
                     self.resident.remove(&victim);
+                    // the eviction hook: the *actual* policy-chosen
+                    // victim demotes down the §6 ladder, so the ledger
+                    // can never drift from the cache's eviction order
+                    self.ledger.demote(victim);
                     self.stats.evictions += 1;
                 }
                 None => return Ok(EnsureOutcome::AllPinned),
@@ -314,8 +382,13 @@ impl ExpertCache {
             self.stats.blocking_misses += 1;
         }
         self.stats.transferred_sim_bytes += sim_bytes as u64;
-        // accounting only — the caller sleeps (see method docs)
-        let secs = self.cost.transfer_secs(sim_bytes);
+        // accounting only — the caller sleeps (see method docs).  The
+        // charge is tier-aware: the ledger knows whether this expert was
+        // one PCIe hop away (RAM) or SSD-deep (NVMe + PCIe, ~9x), and
+        // those ladder seconds land on the SAME modeled timeline the
+        // busy-until prefetch clock absorbs below — one timeline, no
+        // parallel promote accounting
+        let secs = self.ledger.promote(key, sim_bytes);
         self.stats.modeled_transfer_secs += secs;
         if !blocking {
             // virtual prefetch timeline: the transfer starts when the
@@ -364,11 +437,13 @@ impl ExpertCache {
         }
     }
 
-    /// Drop an expert from the device tier explicitly.
+    /// Drop an expert from the device tier explicitly (it demotes down
+    /// the ladder like any eviction — offload, not deletion).
     pub fn invalidate(&mut self, key: &ExpertKey) {
         if self.resident.remove(key).is_some() {
             self.pool.release(key);
             self.policy.on_evict(*key);
+            self.ledger.demote(*key);
         }
     }
 
@@ -387,7 +462,11 @@ impl ExpertCache {
     }
 
     /// Internal-consistency check used by the property tests: pool and
-    /// resident map must agree exactly, and usage must be within budget.
+    /// resident map must agree exactly, usage must be within budget, and
+    /// — the drift-kill invariant — the residency ledger's Device tier
+    /// must be *exactly* this cache's resident set (the guarantee the
+    /// eviction hook exists for; a modeled side-car ledger could not
+    /// hold it).
     pub fn check_invariants(&self) -> Result<()> {
         if self.pool.used() > self.pool.budget() {
             bail!("used {} exceeds budget {}", self.pool.used(), self.pool.budget());
@@ -403,6 +482,16 @@ impl ExpertCache {
             if self.pool.bytes_of(key).is_none() {
                 bail!("resident {key:?} missing from pool");
             }
+        }
+        self.ledger.check_invariants().map_err(anyhow::Error::msg)?;
+        let mut resident: Vec<ExpertKey> = self.resident.keys().copied().collect();
+        resident.sort_unstable();
+        let ledger_device = self.ledger.device_keys();
+        if resident != ledger_device {
+            bail!(
+                "cache/ledger drift: resident {resident:?} != ledger Device tier \
+                 {ledger_device:?}"
+            );
         }
         Ok(())
     }
@@ -458,7 +547,9 @@ mod tests {
             CostModel::paper_scale(real),
             make_policy("fifo").unwrap(),
         );
-        let secs_one = cache.cost_model().transfer_secs(cache.cost_model().sim_bytes(real));
+        // cold experts are SSD-deep: the miss charge is the full ladder
+        let sim = cache.cost_model().sim_bytes(real);
+        let secs_one = cache.cost_model().tier_costs().promote_secs(Tier::Ssd, sim);
         assert!(secs_one > 1e-4, "paper-scale transfer must be ms-class");
         let buf = || {
             crate::runtime::DeviceBuffer(
@@ -481,6 +572,48 @@ mod tests {
             stats.exposed_transfer_secs() > 0.4 * secs_one,
             "the queued share must surface as exposed transfer"
         );
+    }
+
+    #[test]
+    fn miss_cost_is_tier_aware_and_evictions_demote_the_real_victim() {
+        // LRU cache, room for two experts.  The policy's victim (not a
+        // FIFO guess) must be the expert that lands in the ledger's RAM
+        // tier, and re-fetching it must be charged the cheap RAM hop
+        // while cold fetches pay the SSD ladder.
+        let real = 1000usize;
+        let mut cache = ExpertCache::new(
+            2 * real + 8,
+            CostModel::physical(real),
+            make_policy("lru").unwrap(),
+        );
+        let buf = || {
+            crate::runtime::DeviceBuffer(
+                crate::runtime::Literal::from_f32s(&[1], vec![0.0]).unwrap(),
+            )
+        };
+        let fetch = || Ok([buf(), buf(), buf(), buf()]);
+        let k0 = ExpertKey::new(0, 0);
+        let k1 = ExpertKey::new(0, 1);
+        let k2 = ExpertKey::new(0, 2);
+        let costs = cache.cost_model().tier_costs();
+        let (_, _, cold) = cache.ensure(k0, real, true, fetch).unwrap();
+        assert!((cold - costs.promote_secs(Tier::Ssd, real)).abs() < 1e-15);
+        cache.ensure(k1, real, true, fetch).unwrap();
+        cache.ensure(k0, real, true, fetch).unwrap(); // hit: k1 is now LRU
+        cache.ensure(k2, real, true, fetch).unwrap(); // evicts k1 (NOT k0)
+        assert_eq!(cache.tier_of(&k1), Tier::Ram, "policy victim must demote");
+        assert_eq!(cache.tier_of(&k0), Tier::Device);
+        let (_, hit, from_ram) = cache.ensure(k1, real, true, fetch).unwrap();
+        assert!(!hit);
+        assert!((from_ram - costs.promote_secs(Tier::Ram, real)).abs() < 1e-15);
+        assert!(from_ram < cold, "RAM-resident miss must undercut the SSD ladder");
+        // the ladder attribution IS the cache's modeled transfer total
+        let h = cache.hierarchy_stats();
+        let modeled = cache.stats().modeled_transfer_secs;
+        assert!((h.ladder_secs() - modeled).abs() < 1e-12 * modeled.max(1.0));
+        assert_eq!(h.promotions_from_ram, 1);
+        assert_eq!(h.promotions_from_ssd, 3);
+        cache.check_invariants().unwrap();
     }
 
     #[test]

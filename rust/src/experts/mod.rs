@@ -4,13 +4,17 @@
 //! The unit of offloading is one expert ([`ExpertKey`]: block × expert
 //! index).  [`ExpertCache`] holds the staged weights of resident
 //! experts under a simulated byte budget with pluggable eviction
-//! ([`make_policy`]: fifo/lru/lfu/clock) and charges modeled H2D
-//! transfer cost per fetch; [`SharedExpertCache`] wraps it for the
-//! concurrent serving path (read-lock hits, write-lock misses, counted
-//! pins — see that module for the lock discipline); [`plan_prefetch`] /
+//! ([`make_policy`]: fifo/lru/lfu/clock) and drives the §6 GPU → RAM →
+//! SSD [`crate::memory::ResidencyLedger`] — evictions demote their
+//! policy-chosen victim down the ladder and each miss is charged the
+//! tier-aware promotion cost of where the expert really sat;
+//! [`SharedExpertCache`] wraps it for the concurrent serving path
+//! (read-lock hits, write-lock misses, counted pins — see that module
+//! for the lock discipline); [`plan_prefetch`] /
 //! [`plan_prefetch_union`] / [`plan_prefetch_layer`] turn hash-table
 //! predictions into ordered fetch plans (per request / per
-//! cross-request batch / per MoE layer for the layer-ahead warmer).
+//! cross-request batch / per MoE layer for the layer-ahead warmer,
+//! deepest-tier-first so SSD promotions start earliest).
 
 pub mod cache;
 pub mod policy;

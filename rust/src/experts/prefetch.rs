@@ -6,8 +6,11 @@
 //! parallelism mechanism" (§3.1).  The planner decides *what* to load
 //! and in *which order*: missing experts only, earliest MoE layer first
 //! (the layer the forward pass reaches first), and within a layer by
-//! descending token count (an expert serving more tokens hurts more if
-//! it misses).  Pure logic — unit-testable without PJRT.
+//! **ladder depth** then heat — an SSD-deep expert's promotion costs
+//! the NVMe+PCIe ladder (~9x a RAM-resident one), so it starts
+//! earliest; among equals, descending token count (an expert serving
+//! more tokens hurts more if it misses).  Pure logic — unit-testable
+//! without PJRT.
 //!
 //! [`plan_prefetch`] plans for one request; [`plan_prefetch_union`]
 //! plans for a whole cross-request batch, taking the **union** of every
@@ -32,12 +35,18 @@ use std::collections::BTreeMap;
 
 use crate::coordinator::hash_table::HashTable;
 use crate::experts::{ExpertCache, ExpertKey};
+use crate::memory::Tier;
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PlannedFetch {
     pub key: ExpertKey,
     /// tokens routed to this expert (priority weight)
     pub token_count: usize,
+    /// where the expert sits in the §6 ladder at planning time —
+    /// SSD-deep experts are fetched first (their promotion is ~9x a
+    /// RAM-resident one, so starting them earliest maximizes what the
+    /// prefetch timeline can hide)
+    pub tier: Tier,
 }
 
 /// Compute the ordered fetch plan for one request.
@@ -94,7 +103,10 @@ pub fn predicted_expert_counts(
 /// Fetch plan for **one MoE layer** of a (batch of) request(s) — the
 /// planning unit of the layer-ahead warmer, which stages layer `j+1`'s
 /// union while the inference thread computes layer `j`.  Missing
-/// experts only, hottest (most routed tokens across the batch) first.
+/// experts only, ordered **deepest tier first** (an SSD-resident
+/// expert's promotion costs the NVMe + PCIe ladder, so it must start
+/// earliest to hide), then hottest (most routed tokens across the
+/// batch) first — hash-prediction value is tier-dependent.
 pub fn plan_prefetch_layer(
     requests: &[(&HashTable, &[f32])],
     block: usize,
@@ -106,13 +118,18 @@ pub fn plan_prefetch_layer(
     let mut layer_plan: Vec<PlannedFetch> = counts
         .into_iter()
         .filter(|(expert, _)| !cache.contains(&ExpertKey::new(block, *expert)))
-        .map(|(expert, token_count)| PlannedFetch {
-            key: ExpertKey::new(block, expert),
-            token_count,
+        .map(|(expert, token_count)| {
+            let key = ExpertKey::new(block, expert);
+            PlannedFetch { key, token_count, tier: cache.tier_of(&key) }
         })
         .collect();
-    // within a layer: hottest experts first
-    layer_plan.sort_by(|a, b| b.token_count.cmp(&a.token_count));
+    // within a layer: deepest tier first, then hottest experts first
+    layer_plan.sort_by(|a, b| {
+        b.tier
+            .cmp(&a.tier)
+            .then(b.token_count.cmp(&a.token_count))
+            .then(a.key.cmp(&b.key))
+    });
     layer_plan
 }
 
@@ -182,6 +199,31 @@ mod tests {
         let cache = empty_cache();
         let plan = plan_prefetch(&table(), &[1, 3], 2, &[0.0; 4], &cache);
         assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn ssd_deep_experts_are_planned_before_hotter_ram_residents() {
+        // expert 0 is the layer's hottest (2 tokens) but sits one cheap
+        // PCIe hop away in RAM; experts 1 and 2 are SSD-deep.  The plan
+        // must start the expensive SSD promotions first.
+        let mut cache = empty_cache();
+        let buf = || {
+            crate::runtime::DeviceBuffer(
+                crate::runtime::Literal::from_f32s(&[1], vec![0.0]).unwrap(),
+            )
+        };
+        let hot = ExpertKey::new(1, 0);
+        cache.ensure(hot, 1000, true, || Ok([buf(), buf(), buf(), buf()])).unwrap();
+        cache.invalidate(&hot); // demote: hot is now RAM-resident
+        assert_eq!(cache.tier_of(&hot), crate::memory::Tier::Ram);
+        let mask = vec![1.0; 4];
+        let plan = plan_prefetch_layer(&[(&table(), &mask[..])], 1, 0, 1, &cache);
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan[0].key, ExpertKey::new(1, 1), "SSD-deep first");
+        assert_eq!(plan[1].key, ExpertKey::new(1, 2));
+        assert_eq!(plan[2].key, hot, "hot but RAM-resident goes last");
+        assert_eq!(plan[2].tier, crate::memory::Tier::Ram);
+        assert_eq!(plan[2].token_count, 2);
     }
 
     #[test]

@@ -209,6 +209,18 @@ impl SharedExpertCache {
         self.inner.read().unwrap().contains(key)
     }
 
+    /// Which tier of the §6 ladder `key` sits in right now (tier-aware
+    /// prefetch planning reads this under the read lock).
+    pub fn tier_of(&self, key: &ExpertKey) -> crate::memory::Tier {
+        self.inner.read().unwrap().tier_of(key)
+    }
+
+    /// Snapshot of the underlying residency ledger (per-tier occupancy,
+    /// promotions per hop, ladder seconds).
+    pub fn hierarchy_stats(&self) -> crate::memory::HierarchyStats {
+        self.inner.read().unwrap().hierarchy_stats()
+    }
+
     /// Merged statistics snapshot: the inner cache's counters plus the
     /// hits resolved on the lock-free read path.
     pub fn stats(&self) -> CacheStats {

@@ -75,6 +75,8 @@ fn serve_cli() -> Cli {
         .opt("method", "sida|standard|deepspeed|tutel|layerwise|reactive", "sida")
         .opt("budget-gb", "simulated device budget (GB)", "8")
         .opt("policy", "eviction policy (fifo|lru|lfu|clock)", "fifo")
+        .opt("ram-budget", "host-RAM tier budget (GB); evictions demote here", "64")
+        .opt("ram-policy", "RAM-tier eviction policy (fifo|lru|lfu|clock)", "fifo")
         .opt("k-used", "hash experts per token (0 = paper default)", "0")
         .opt("batch", "requests per forward pass (1 = paper batch-1; >1 batches cross-request)", "1")
         .opt("pool", "worker threads for expert execution (0 = auto, 1 = sequential)", "0")
@@ -134,6 +136,8 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
                 k_used: cfg.k_used,
                 budget_sim_bytes: cfg.budget_bytes(),
                 policy: cfg.policy.clone(),
+                ram_budget_bytes: cfg.ram_budget_bytes(),
+                ram_policy: cfg.ram_policy.clone(),
                 real_sleep: cfg.real_sleep,
                 prefetch: cfg.prefetch,
                 queue_depth: 8,
@@ -149,6 +153,8 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
         m => {
             let bcfg = BaselineConfig {
                 budget_sim_bytes: cfg.budget_bytes(),
+                ram_budget_sim_bytes: cfg.ram_budget_bytes(),
+                ram_policy: cfg.ram_policy.clone(),
                 real_sleep: cfg.real_sleep,
                 want_lm: cfg.want_lm,
                 want_cls: cfg.want_cls,
@@ -199,6 +205,26 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
         "cache hit rate".into(),
         sida_moe::metrics::report::fmt_rate(stats.hit_rate()),
     ]);
+    let h = &stats.hierarchy;
+    t.row(vec![
+        "tier ladder".into(),
+        format!(
+            "ram {} | ssd {} | demote {}/{}",
+            fmt_bytes(h.ram_bytes),
+            fmt_bytes(h.ssd_bytes),
+            h.demotions_to_ram,
+            h.demotions_to_ssd
+        ),
+    ]);
+    t.row(vec![
+        "ladder secs".into(),
+        format!(
+            "{} (ram {} + ssd {})",
+            fmt_secs(h.ladder_secs()),
+            fmt_secs(h.ram_promote_secs),
+            fmt_secs(h.ssd_promote_secs)
+        ),
+    ]);
     t.print();
 
     if let Some(cluster) = &stats.cluster {
@@ -232,6 +258,8 @@ fn cmd_server(tail: &[String]) -> Result<()> {
         .opt("model", "model config", "switch8")
         .opt("dataset", "dataset profile (fixes seq len)", "sst2")
         .opt("budget-gb", "simulated device budget (GB)", "8")
+        .opt("ram-budget", "modeled host-RAM tier budget (GB)", "64")
+        .opt("ram-policy", "RAM-tier eviction policy (fifo|lru|lfu|clock)", "fifo")
         .opt("batch", "max requests coalesced per forward pass", "8")
         .opt("pool", "worker threads for expert execution (0 = auto)", "0")
         .opt("batch-delay-ms", "max time a request waits for its batch to fill", "5")
@@ -249,6 +277,8 @@ fn cmd_server(tail: &[String]) -> Result<()> {
     let k = ServeConfig::paper_k_for(args.get("dataset").unwrap_or("sst2"));
     let scfg = ServerConfig {
         budget_sim_bytes: (args.get_f64("budget-gb", 8.0) * 1e9) as usize,
+        ram_budget_sim_bytes: (args.get_f64("ram-budget", 64.0) * 1e9) as usize,
+        ram_policy: args.get_or("ram-policy", "fifo"),
         k_used: k,
         batch: sida_moe::coordinator::BatchPolicy {
             max_batch: args.get_usize("batch", 8).max(1),

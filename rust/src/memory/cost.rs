@@ -58,13 +58,33 @@ impl CostModel {
         self
     }
 
+    /// The §6 tier-ladder cost table this model's PCIe parameters imply:
+    /// the RAM -> device hop is exactly this cost model's H2D link (so a
+    /// RAM-resident miss costs what misses historically cost), plus the
+    /// default NVMe numbers for the SSD -> RAM hop.  This is what makes
+    /// the ladder and the cache share ONE modeled-transfer vocabulary.
+    pub fn tier_costs(&self) -> crate::memory::TierCosts {
+        crate::memory::TierCosts {
+            pcie_bw: self.h2d_bandwidth,
+            pcie_latency: self.h2d_latency,
+            ..crate::memory::TierCosts::default()
+        }
+    }
+
     /// Simulated bytes corresponding to `real_bytes` of weights.
     pub fn sim_bytes(&self, real_bytes: usize) -> usize {
         ((real_bytes as u128 * self.sim_expert_bytes as u128)
             / self.real_expert_bytes as u128) as usize
     }
 
-    /// Modeled seconds to move `sim_bytes` host->device.
+    /// Modeled seconds to move `sim_bytes` over the PCIe host->device
+    /// link — the RAM->device hop of the §6 ladder
+    /// ([`CostModel::tier_costs`] mirrors these parameters, so
+    /// `transfer_secs(b) == promote_secs(Tier::Ram, b)` by
+    /// construction).  The serving path charges misses through the
+    /// ladder ([`crate::memory::ResidencyLedger::promote`]): an expert
+    /// one hop away pays exactly this; an SSD-deep one pays NVMe +
+    /// PCIe.
     ///
     /// Transfers are accounted on one of **two timelines**: fetches
     /// that stall the inference thread (`blocking` in the cache API)
@@ -121,6 +141,17 @@ mod tests {
     fn latency_floor() {
         let cm = CostModel::paper_scale(66_048);
         assert!(cm.transfer_secs(0) >= 30.0e-6);
+    }
+
+    #[test]
+    fn tier_costs_mirror_the_h2d_link() {
+        // the ladder's RAM->device hop IS the cost model's PCIe link:
+        // a RAM-resident miss costs exactly what misses always cost
+        let cm = CostModel::paper_scale(66_048);
+        let tc = cm.tier_costs();
+        let b = 1 << 20;
+        assert_eq!(cm.transfer_secs(b), tc.promote_secs(crate::memory::Tier::Ram, b));
+        assert!(tc.promote_secs(crate::memory::Tier::Ssd, b) > cm.transfer_secs(b));
     }
 
     #[test]

@@ -3,23 +3,43 @@
 //!
 //! The paper's discussion section proposes a third tier so models larger
 //! than main memory (Switch-c-2048, ~5 TB) still serve: experts flow
-//! device -> RAM -> SSD under per-tier byte budgets.  This module
-//! implements the tier ladder as accounting + cost model (the physical
-//! weights always live in the WeightStore blob; what moves is the
-//! *residency level*, exactly like the device tier in `pool.rs`):
+//! device -> RAM -> SSD under per-tier byte budgets.  This module is the
+//! **single residency ledger** behind that ladder — one source of truth
+//! for where every expert sits, *driven by* the expert cache rather than
+//! modeled beside it:
 //!
-//!   Device   budgeted; evictions demote to Ram
-//!   Ram      budgeted; evictions demote to Ssd
-//!   Ssd      unbounded backing store
+//!   Device   the cache's resident set, mirrored exactly (the cache owns
+//!            the budget and the eviction policy; every eviction calls
+//!            [`ResidencyLedger::demote`] with the policy-chosen victim)
+//!   Ram      budgeted, with its **own** eviction policy
+//!            (`--ram-policy`); overflow demotes to Ssd
+//!   Ssd      unbounded backing store (the checkpoint); keys never seen
+//!            by the ledger are Ssd-resident by definition
 //!
-//! Fetch cost is the sum of the hops climbed (SSD->RAM ~2 GB/s NVMe,
-//! RAM->device ~16 GB/s PCIe), so a hash-prefetched expert that was
-//! demoted all the way to SSD costs ~9x a RAM-resident one — the
-//! quantity the `ablation_hierarchy` comparison in `memory_budget`
-//! exposes.
+//! A cache miss promotes the expert back to Device and is charged the
+//! **tier-aware** ladder cost ([`TierCosts::promote_secs`]): a
+//! RAM-resident expert pays one PCIe hop (numerically the cache's
+//! historical H2D cost), an SSD-deep expert pays NVMe + PCIe (~9x).
+//! Those seconds feed the cache's one modeled-transfer timeline (the
+//! busy-until prefetch clock absorbs them); the ledger only *attributes*
+//! the same seconds per source hop ([`HierarchyStats`]) — there is no
+//! parallel promote clock to drift.
+//!
+//! The drift-proof invariant (property-tested for every eviction
+//! policy): the ledger's Device tier is *exactly* the cache's resident
+//! set, and tier byte sums are conserved across demote/promote.
 
-use std::collections::{HashMap, VecDeque};
-use std::hash::Hash;
+use std::collections::{HashMap, HashSet};
+
+use crate::experts::policy::EvictionPolicy;
+use crate::experts::ExpertKey;
+
+/// Default modeled host-RAM tier budget (simulated bytes, per cache):
+/// roomy enough that single-device runs without `--ram-budget` keep the
+/// historical "everything evicted stays one PCIe hop away" behavior.
+/// Decimal 64 GB, matching the `--ram-budget 64` / `budget_gb * 1e9`
+/// CLI convention exactly — every entry path builds the same window.
+pub const DEFAULT_RAM_BUDGET: usize = 64_000_000_000;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Tier {
@@ -65,140 +85,269 @@ impl TierCosts {
     }
 }
 
+/// Tier-ladder statistics: per-tier byte occupancy (snapshot), the
+/// promotion/demotion traffic per hop, and the ladder seconds each
+/// source tier charged onto the modeled-transfer timeline.
+///
+/// `ram_promote_secs + ssd_promote_secs` ([`HierarchyStats::ladder_secs`])
+/// is the same quantity as the owning cache's miss-charged modeled
+/// transfer seconds — attributed by source hop, not accounted twice.
 #[derive(Debug, Default, Clone)]
 pub struct HierarchyStats {
-    pub device_hits: u64,
-    pub ram_hits: u64,
-    pub ssd_hits: u64,
+    /// simulated bytes resident per tier right now
+    pub device_bytes: usize,
+    pub ram_bytes: usize,
+    pub ssd_bytes: usize,
+    /// misses served one PCIe hop away (RAM-resident expert)
+    pub promotions_from_ram: u64,
+    /// misses that paid the full NVMe + PCIe ladder
+    pub promotions_from_ssd: u64,
+    /// device-tier evictions that landed in the RAM window
     pub demotions_to_ram: u64,
+    /// demotions that fell through to SSD (RAM overflow, or the RAM
+    /// window too small to ever hold the expert)
     pub demotions_to_ssd: u64,
-    pub modeled_promote_secs: f64,
+    /// modeled seconds charged for RAM -> device promotions
+    pub ram_promote_secs: f64,
+    /// modeled seconds charged for SSD -> device promotions
+    pub ssd_promote_secs: f64,
 }
 
-/// FIFO-demoting three-tier residency ledger.
-pub struct TieredStore<K: Eq + Hash + Clone + Copy> {
-    device_budget: usize,
+impl HierarchyStats {
+    /// Total ladder seconds charged onto the modeled-transfer timeline.
+    pub fn ladder_secs(&self) -> f64 {
+        self.ram_promote_secs + self.ssd_promote_secs
+    }
+
+    /// Fold another snapshot in (cluster aggregation over devices).
+    pub fn add(&mut self, other: &HierarchyStats) {
+        self.device_bytes += other.device_bytes;
+        self.ram_bytes += other.ram_bytes;
+        self.ssd_bytes += other.ssd_bytes;
+        self.promotions_from_ram += other.promotions_from_ram;
+        self.promotions_from_ssd += other.promotions_from_ssd;
+        self.demotions_to_ram += other.demotions_to_ram;
+        self.demotions_to_ssd += other.demotions_to_ssd;
+        self.ram_promote_secs += other.ram_promote_secs;
+        self.ssd_promote_secs += other.ssd_promote_secs;
+    }
+}
+
+/// The three-tier residency ledger one [`crate::experts::ExpertCache`]
+/// owns (single-device serving and every cluster device share this one
+/// mechanism).  The Device tier mirrors the cache exactly; the RAM tier
+/// is budgeted with its own eviction policy; SSD is the unbounded
+/// backing store.  See the module docs for the drive discipline.
+pub struct ResidencyLedger {
     ram_budget: usize,
-    device_used: usize,
     ram_used: usize,
-    tier_of: HashMap<K, (Tier, usize)>,
-    device_fifo: VecDeque<K>,
-    ram_fifo: VecDeque<K>,
+    ram_policy: Box<dyn EvictionPolicy>,
+    ram: HashMap<ExpertKey, usize>,
+    ssd: HashMap<ExpertKey, usize>,
+    ssd_used: usize,
+    device: HashMap<ExpertKey, usize>,
+    device_used: usize,
     costs: TierCosts,
-    pub stats: HierarchyStats,
+    /// ladder transits per key (lifetime demotions seen).  A victim
+    /// tier has no hit stream of its own — entries are *inserted* on
+    /// demote and *removed* on promote — so recency policies degenerate
+    /// to insertion order (LRU == FIFO here, inherently).  What does
+    /// carry signal is how often an expert transits the ladder: prior
+    /// transits are replayed (capped) into the RAM policy as accesses on
+    /// re-insert, so frequency/second-chance policies (lfu, clock)
+    /// genuinely keep hot-transit experts one PCIe hop away.
+    transits: HashMap<ExpertKey, u64>,
+    /// counters only; occupancy is filled from live state at snapshot
+    counters: HierarchyStats,
 }
 
-impl<K: Eq + Hash + Clone + Copy> TieredStore<K> {
-    pub fn new(device_budget: usize, ram_budget: usize, costs: TierCosts) -> Self {
-        TieredStore {
-            device_budget,
+/// Cap on the transit-history replay per re-insert (bounds the per-
+/// demote policy work while still separating hot from cold transits).
+const TRANSIT_REPLAY_CAP: u64 = 7;
+
+impl ResidencyLedger {
+    pub fn new(ram_budget: usize, ram_policy: Box<dyn EvictionPolicy>, costs: TierCosts) -> Self {
+        ResidencyLedger {
             ram_budget,
-            device_used: 0,
             ram_used: 0,
-            tier_of: HashMap::new(),
-            device_fifo: VecDeque::new(),
-            ram_fifo: VecDeque::new(),
+            ram_policy,
+            ram: HashMap::new(),
+            ssd: HashMap::new(),
+            ssd_used: 0,
+            device: HashMap::new(),
+            device_used: 0,
             costs,
-            stats: HierarchyStats::default(),
+            transits: HashMap::new(),
+            counters: HierarchyStats::default(),
         }
     }
 
-    pub fn tier(&self, key: &K) -> Tier {
-        self.tier_of.get(key).map(|(t, _)| *t).unwrap_or(Tier::Ssd)
+    pub fn ram_budget(&self) -> usize {
+        self.ram_budget
     }
 
-    pub fn device_used(&self) -> usize {
-        self.device_used
+    pub fn costs(&self) -> &TierCosts {
+        &self.costs
     }
 
-    pub fn ram_used(&self) -> usize {
-        self.ram_used
+    /// Where `key` currently sits.  Keys the ledger has never seen live
+    /// on SSD by definition (the checkpoint is the backing store).
+    pub fn tier_of(&self, key: &ExpertKey) -> Tier {
+        if self.device.contains_key(key) {
+            Tier::Device
+        } else if self.ram.contains_key(key) {
+            Tier::Ram
+        } else {
+            Tier::Ssd
+        }
     }
 
-    /// Bring `key` to the device tier, demoting FIFO victims down the
-    /// ladder as needed.  Returns the modeled promote time.
-    pub fn promote(&mut self, key: K, bytes: usize) -> f64 {
-        let from = self.tier(&key);
+    /// Bring `key` to the Device tier (the cache just fetched it on a
+    /// miss) and return the tier-aware modeled promote seconds — the
+    /// cost the cache charges on its one modeled-transfer timeline.
+    pub fn promote(&mut self, key: ExpertKey, bytes: usize) -> f64 {
+        let from = self.tier_of(&key);
         match from {
-            Tier::Device => {
-                self.stats.device_hits += 1;
-                return 0.0;
-            }
+            Tier::Device => return 0.0, // already mirrored; nothing to charge
             Tier::Ram => {
-                self.stats.ram_hits += 1;
-                self.ram_used -= self.byte_of(&key);
-                self.ram_fifo.retain(|k| k != &key);
+                let b = self.ram.remove(&key).unwrap_or(0);
+                self.ram_used -= b;
+                self.ram_policy.on_evict(key);
+                self.counters.promotions_from_ram += 1;
             }
             Tier::Ssd => {
-                self.stats.ssd_hits += 1;
+                if let Some(b) = self.ssd.remove(&key) {
+                    self.ssd_used -= b;
+                }
+                self.counters.promotions_from_ssd += 1;
             }
         }
-        self.tier_of.remove(&key);
-        // make room on device
-        while self.device_used + bytes > self.device_budget {
-            let Some(victim) = self.device_fifo.pop_front() else { break };
-            let vb = self.byte_of_entry(&victim);
-            self.device_used -= vb;
-            self.tier_of.remove(&victim);
-            self.demote_to_ram(victim, vb);
-        }
-        self.device_used += bytes;
-        self.device_fifo.push_back(key);
-        self.tier_of.insert(key, (Tier::Device, bytes));
         let secs = self.costs.promote_secs(from, bytes);
-        self.stats.modeled_promote_secs += secs;
+        match from {
+            Tier::Ram => self.counters.ram_promote_secs += secs,
+            Tier::Ssd => self.counters.ssd_promote_secs += secs,
+            Tier::Device => {}
+        }
+        self.device.insert(key, bytes);
+        self.device_used += bytes;
         secs
     }
 
-    fn byte_of(&self, key: &K) -> usize {
-        self.tier_of.get(key).map(|(_, b)| *b).unwrap_or(0)
-    }
-
-    fn byte_of_entry(&self, key: &K) -> usize {
-        self.byte_of(key)
-    }
-
-    fn demote_to_ram(&mut self, key: K, bytes: usize) {
-        self.stats.demotions_to_ram += 1;
+    /// Record a device-tier eviction of `key` (the cache's policy chose
+    /// it as the victim, or it was explicitly invalidated): the expert
+    /// demotes into the budgeted RAM window, cascading RAM victims —
+    /// chosen by the RAM tier's own policy — down to SSD as needed.
+    pub fn demote(&mut self, key: ExpertKey) {
+        let Some(bytes) = self.device.remove(&key) else {
+            return; // never promoted through this ledger — nothing to move
+        };
+        self.device_used -= bytes;
+        let prior_transits = {
+            let t = self.transits.entry(key).or_insert(0);
+            let prior = *t;
+            *t += 1;
+            prior
+        };
+        if bytes > self.ram_budget {
+            // can never fit the RAM window: straight to SSD
+            self.to_ssd(key, bytes);
+            return;
+        }
+        let no_pins = HashSet::new();
         while self.ram_used + bytes > self.ram_budget {
-            let Some(victim) = self.ram_fifo.pop_front() else { break };
-            let vb = self.byte_of(&victim);
-            self.ram_used -= vb;
-            self.tier_of.remove(&victim);
-            // falls to SSD (unbounded): just forget the residency record
-            self.stats.demotions_to_ssd += 1;
-        }
-        if self.ram_used + bytes <= self.ram_budget {
-            self.ram_used += bytes;
-            self.ram_fifo.push_back(key);
-            self.tier_of.insert(key, (Tier::Ram, bytes));
-        } else {
-            self.stats.demotions_to_ssd += 1;
-        }
-    }
-
-    /// Consistency: tier accounting matches per-key records.
-    pub fn check_invariants(&self) -> Result<(), String> {
-        let mut dev = 0;
-        let mut ram = 0;
-        for (t, b) in self.tier_of.values() {
-            match t {
-                Tier::Device => dev += b,
-                Tier::Ram => ram += b,
-                Tier::Ssd => {}
+            match self.ram_policy.victim(&no_pins) {
+                Some(victim) => {
+                    let vb = self.ram.remove(&victim).unwrap_or(0);
+                    self.ram_used -= vb;
+                    self.to_ssd(victim, vb);
+                }
+                None => break, // RAM empty; the budget guard above ensures a fit
             }
         }
+        if self.ram_used + bytes > self.ram_budget {
+            // belt-and-braces: a policy that yielded no victim while the
+            // window is over budget must not breach it
+            self.to_ssd(key, bytes);
+            return;
+        }
+        self.ram.insert(key, bytes);
+        self.ram_used += bytes;
+        self.ram_policy.on_insert(key);
+        // replay the key's transit history as access standing (see the
+        // `transits` field docs): hot-transit experts are worth keeping
+        // in RAM under frequency/second-chance policies
+        for _ in 0..prior_transits.min(TRANSIT_REPLAY_CAP) {
+            self.ram_policy.on_access(key);
+        }
+        self.counters.demotions_to_ram += 1;
+    }
+
+    fn to_ssd(&mut self, key: ExpertKey, bytes: usize) {
+        self.ssd.insert(key, bytes);
+        self.ssd_used += bytes;
+        self.counters.demotions_to_ssd += 1;
+    }
+
+    /// Snapshot: counters plus the live per-tier occupancy.
+    pub fn stats(&self) -> HierarchyStats {
+        HierarchyStats {
+            device_bytes: self.device_used,
+            ram_bytes: self.ram_used,
+            ssd_bytes: self.ssd_used,
+            ..self.counters.clone()
+        }
+    }
+
+    /// Zero the traffic counters (a new measurement epoch); residency —
+    /// which tier every expert sits in — is state, not statistics, and
+    /// carries over.
+    pub fn reset_stats(&mut self) {
+        self.counters = HierarchyStats::default();
+    }
+
+    /// Keys in the Device tier, sorted (the drift-check comparand).
+    pub fn device_keys(&self) -> Vec<ExpertKey> {
+        let mut keys: Vec<ExpertKey> = self.device.keys().copied().collect();
+        keys.sort_unstable();
+        keys
+    }
+
+    /// Total bytes the ledger tracks across all three tiers — constant
+    /// across demote/promote once a key is known (conservation).
+    pub fn tracked_bytes(&self) -> usize {
+        self.device_used + self.ram_used + self.ssd_used
+    }
+
+    /// Internal consistency: per-tier accounting matches the per-key
+    /// records, the tiers are disjoint, and RAM respects its budget.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let dev: usize = self.device.values().sum();
         if dev != self.device_used {
             return Err(format!("device used {} != records {dev}", self.device_used));
         }
+        let ram: usize = self.ram.values().sum();
         if ram != self.ram_used {
             return Err(format!("ram used {} != records {ram}", self.ram_used));
         }
-        if self.device_used > self.device_budget {
-            return Err("device over budget".into());
+        let ssd: usize = self.ssd.values().sum();
+        if ssd != self.ssd_used {
+            return Err(format!("ssd used {} != records {ssd}", self.ssd_used));
         }
         if self.ram_used > self.ram_budget {
-            return Err("ram over budget".into());
+            return Err(format!(
+                "ram over budget: {} > {}",
+                self.ram_used, self.ram_budget
+            ));
+        }
+        for key in self.device.keys() {
+            if self.ram.contains_key(key) || self.ssd.contains_key(key) {
+                return Err(format!("{key:?} resident in more than one tier"));
+            }
+        }
+        for key in self.ram.keys() {
+            if self.ssd.contains_key(key) {
+                return Err(format!("{key:?} in both RAM and SSD"));
+            }
         }
         Ok(())
     }
@@ -207,60 +356,181 @@ impl<K: Eq + Hash + Clone + Copy> TieredStore<K> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::experts::make_policy;
 
-    #[test]
-    fn promote_hits_tiers_in_order() {
-        let mut s: TieredStore<u32> = TieredStore::new(100, 100, TierCosts::default());
-        let t1 = s.promote(1, 60);
-        assert!(t1 > 0.0); // came from SSD
-        assert_eq!(s.tier(&1), Tier::Device);
-        assert_eq!(s.promote(1, 60), 0.0); // device hit
-        assert_eq!(s.stats.device_hits, 1);
+    fn k(e: usize) -> ExpertKey {
+        ExpertKey::new(0, e)
+    }
+
+    fn ledger(ram_budget: usize) -> ResidencyLedger {
+        ResidencyLedger::new(ram_budget, make_policy("fifo").unwrap(), TierCosts::default())
     }
 
     #[test]
-    fn eviction_cascades_down() {
-        let mut s: TieredStore<u32> = TieredStore::new(100, 100, TierCosts::default());
-        s.promote(1, 60);
-        s.promote(2, 60); // evicts 1 -> RAM
-        assert_eq!(s.tier(&1), Tier::Ram);
-        assert_eq!(s.tier(&2), Tier::Device);
-        s.promote(3, 60); // evicts 2 -> RAM, evicts 1 -> SSD
-        assert_eq!(s.tier(&1), Tier::Ssd);
-        assert_eq!(s.tier(&2), Tier::Ram);
-        s.check_invariants().unwrap();
-    }
-
-    #[test]
-    fn ram_hit_cheaper_than_ssd_hit() {
+    fn promote_costs_follow_the_ladder() {
         let c = TierCosts::default();
-        assert!(c.promote_secs(Tier::Ram, 1 << 20) < c.promote_secs(Tier::Ssd, 1 << 20));
-        assert_eq!(c.promote_secs(Tier::Device, 1 << 20), 0.0);
+        let b = 1 << 20;
+        assert_eq!(c.promote_secs(Tier::Device, b), 0.0);
+        assert!(c.promote_secs(Tier::Ram, b) < c.promote_secs(Tier::Ssd, b));
+        // the paper-scale expert: SSD-deep ≈ 9x a RAM-resident fetch
+        let expert = 2 * 768 * 3072 * 4;
+        let ratio = c.promote_secs(Tier::Ssd, expert) / c.promote_secs(Tier::Ram, expert);
+        assert!(ratio > 7.0 && ratio < 11.0, "ladder ratio {ratio}");
     }
 
     #[test]
-    fn promote_from_ram_counts_ram_hit() {
-        let mut s: TieredStore<u32> = TieredStore::new(100, 100, TierCosts::default());
-        s.promote(1, 60);
-        s.promote(2, 60); // 1 demoted to RAM
-        s.promote(1, 60); // RAM hit, 2 demoted
-        assert_eq!(s.stats.ram_hits, 1);
-        assert_eq!(s.tier(&1), Tier::Device);
-        s.check_invariants().unwrap();
+    fn unseen_keys_are_ssd_and_first_promote_pays_the_full_ladder() {
+        let mut l = ledger(1000);
+        assert_eq!(l.tier_of(&k(0)), Tier::Ssd);
+        let secs = l.promote(k(0), 100);
+        assert!((secs - l.costs().promote_secs(Tier::Ssd, 100)).abs() < 1e-15);
+        assert_eq!(l.tier_of(&k(0)), Tier::Device);
+        assert_eq!(l.stats().promotions_from_ssd, 1);
+        l.check_invariants().unwrap();
     }
 
     #[test]
-    fn invariants_under_random_ops() {
-        use crate::util::rng::Rng;
-        let mut rng = Rng::new(9);
-        let mut s: TieredStore<u32> = TieredStore::new(200, 150, TierCosts::default());
-        for _ in 0..2000 {
-            let key = rng.below(20) as u32;
-            let bytes = 20 + rng.usize_below(60);
-            s.promote(key, bytes);
-            s.check_invariants().unwrap();
+    fn demote_lands_in_ram_and_cascades_to_ssd() {
+        let mut l = ledger(150);
+        for e in 0..3 {
+            l.promote(k(e), 100);
         }
-        assert!(s.stats.demotions_to_ram > 0);
-        assert!(s.stats.demotions_to_ssd > 0);
+        l.demote(k(0)); // -> RAM
+        assert_eq!(l.tier_of(&k(0)), Tier::Ram);
+        l.demote(k(1)); // RAM full -> 0 falls to SSD, 1 takes the window
+        assert_eq!(l.tier_of(&k(0)), Tier::Ssd);
+        assert_eq!(l.tier_of(&k(1)), Tier::Ram);
+        let s = l.stats();
+        assert_eq!(s.demotions_to_ram, 2);
+        assert_eq!(s.demotions_to_ssd, 1);
+        l.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn ram_promote_is_cheaper_than_ssd_promote() {
+        let mut l = ledger(1000);
+        l.promote(k(0), 100);
+        l.demote(k(0));
+        let from_ram = l.promote(k(0), 100);
+        assert!((from_ram - l.costs().promote_secs(Tier::Ram, 100)).abs() < 1e-15);
+        let from_ssd_cost = l.costs().promote_secs(Tier::Ssd, 100);
+        assert!(from_ram < from_ssd_cost);
+        let s = l.stats();
+        assert_eq!(s.promotions_from_ram, 1);
+        assert!((s.ladder_secs() - (s.ram_promote_secs + s.ssd_promote_secs)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn zero_ram_budget_sends_every_demotion_to_ssd() {
+        let mut l = ledger(0);
+        l.promote(k(0), 100);
+        l.demote(k(0));
+        assert_eq!(l.tier_of(&k(0)), Tier::Ssd);
+        assert_eq!(l.stats().demotions_to_ram, 0);
+        assert_eq!(l.stats().demotions_to_ssd, 1);
+        l.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn ram_policy_knob_is_live_frequency_beats_insertion_order() {
+        // The RAM window is a victim tier: entries insert on demote and
+        // leave on promote, so pure recency degenerates to insertion
+        // order (lru == fifo here, inherently).  The live signal is
+        // ladder-transit frequency, replayed into the policy: under lfu
+        // the twice-transited expert survives the overflow that costs
+        // it the window under fifo — same trace, different victim.
+        let run = |policy: &str| {
+            let mut l =
+                ResidencyLedger::new(250, make_policy(policy).unwrap(), TierCosts::default());
+            for e in 0..3 {
+                l.promote(k(e), 100);
+            }
+            l.demote(k(0)); // expert 0: transit 1
+            l.promote(k(0), 100); // recalled from RAM (cheap PCIe hop)
+            l.demote(k(0)); // expert 0: transit 2 -> access standing 2
+            l.demote(k(1)); // expert 1: transit 1 -> access standing 1
+            l.demote(k(2)); // overflow: the policy picks the victim
+            l.check_invariants().unwrap();
+            (l.tier_of(&k(0)), l.tier_of(&k(1)))
+        };
+        // lfu: the cold-transit expert 1 falls to SSD; hot 0 stays
+        assert_eq!(run("lfu"), (Tier::Ram, Tier::Ssd));
+        // fifo: insertion order alone — oldest insert (0) falls instead
+        assert_eq!(run("fifo"), (Tier::Ssd, Tier::Ram));
+    }
+
+    #[test]
+    fn tier_sums_are_conserved_across_demote_promote() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(11);
+        let mut l = ledger(250);
+        // make all 6 keys known (equal bytes)
+        for e in 0..6 {
+            l.promote(k(e), 100);
+        }
+        assert_eq!(l.tracked_bytes(), 600);
+        for _ in 0..500 {
+            let e = rng.usize_below(6);
+            if rng.bool(0.5) {
+                l.demote(k(e));
+            } else if l.tier_of(&k(e)) != Tier::Device {
+                l.promote(k(e), 100);
+            }
+            assert_eq!(l.tracked_bytes(), 600, "bytes leaked from the ladder");
+            l.check_invariants().unwrap();
+        }
+        let s = l.stats();
+        assert_eq!(s.device_bytes + s.ram_bytes + s.ssd_bytes, 600);
+        assert!(s.demotions_to_ssd > 0, "250-byte RAM window must overflow");
+    }
+
+    #[test]
+    fn ssd_exposure_is_monotone_in_ram_budget_for_fifo() {
+        // the fig_hierarchy gate in miniature: replay one demote/promote
+        // history against shrinking RAM windows; SSD promotions must not
+        // decrease as the window shrinks (FIFO-with-deletion keeps the
+        // smaller window's content a subset of the larger's)
+        use crate::util::rng::Rng;
+        let mut history: Vec<(bool, usize)> = Vec::new();
+        let mut rng = Rng::new(3);
+        for _ in 0..400 {
+            history.push((rng.bool(0.5), rng.usize_below(8)));
+        }
+        let mut last_ssd = None;
+        for ram_budget in [800usize, 400, 200, 100, 0] {
+            let mut l = ledger(ram_budget);
+            let mut on_device: HashSet<usize> = HashSet::new();
+            for &(demote, e) in &history {
+                if demote {
+                    if on_device.remove(&e) {
+                        l.demote(k(e));
+                    }
+                } else if on_device.insert(e) {
+                    l.promote(k(e), 100);
+                }
+            }
+            let ssd = l.stats().promotions_from_ssd;
+            if let Some(prev) = last_ssd {
+                assert!(
+                    ssd >= prev,
+                    "ram {ram_budget}: SSD promotions {ssd} fell below {prev}"
+                );
+            }
+            last_ssd = Some(ssd);
+        }
+    }
+
+    #[test]
+    fn reset_stats_keeps_residency() {
+        let mut l = ledger(1000);
+        l.promote(k(0), 100);
+        l.demote(k(0));
+        l.reset_stats();
+        let s = l.stats();
+        assert_eq!(s.demotions_to_ram, 0);
+        assert_eq!(s.ladder_secs(), 0.0);
+        // residency survived the epoch boundary
+        assert_eq!(l.tier_of(&k(0)), Tier::Ram);
+        assert_eq!(s.ram_bytes, 100);
     }
 }

@@ -12,5 +12,5 @@ pub mod hierarchy;
 pub mod pool;
 
 pub use cost::{exposed_transfer_secs, CostModel};
-pub use hierarchy::{HierarchyStats, Tier, TierCosts, TieredStore};
+pub use hierarchy::{HierarchyStats, ResidencyLedger, Tier, TierCosts, DEFAULT_RAM_BUDGET};
 pub use pool::{DevicePool, ReserveOutcome};

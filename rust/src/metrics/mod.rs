@@ -37,6 +37,11 @@ pub struct ServeStats {
     /// layer-ahead warmer); the critical path pays only
     /// [`ServeStats::exposed_transfer_secs`]
     pub overlapped_transfer_secs: f64,
+    /// the §6 GPU→RAM→SSD ladder, read from the cache-driven residency
+    /// ledger: per-tier byte occupancy, promotions per hop, and the
+    /// ladder-seconds attribution of `modeled_transfer_secs` (aggregated
+    /// over every device cache in cluster mode)
+    pub hierarchy: crate::memory::HierarchyStats,
     /// per-device breakdown when the run served across a modeled device
     /// fleet (`--devices N`): memory, cache traffic, row loads,
     /// cross-device transfer totals.  `None` for single-device runs.
@@ -73,6 +78,13 @@ impl ServeStats {
         } else {
             Some(self.cache_hits as f64 / total as f64)
         }
+    }
+
+    /// Total tier-ladder seconds charged onto the modeled-transfer
+    /// timeline (RAM-hop + SSD-ladder promotions) — the same seconds as
+    /// `modeled_transfer_secs`, attributed by source tier.
+    pub fn ladder_secs(&self) -> f64 {
+        self.hierarchy.ladder_secs()
     }
 
     /// Modeled transfer seconds left on the critical path after overlap.
@@ -218,6 +230,14 @@ mod tests {
         // imperfect overlap shows up as a measured gate stall
         s.phases.stall_secs = 0.2;
         assert!((s.modeled_request_secs().unwrap() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ladder_secs_reports_hierarchy_attribution() {
+        let mut s = ServeStats::default();
+        s.hierarchy.ram_promote_secs = 0.25;
+        s.hierarchy.ssd_promote_secs = 0.5;
+        assert!((s.ladder_secs() - 0.75).abs() < 1e-12);
     }
 
     #[test]

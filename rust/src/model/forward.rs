@@ -772,9 +772,12 @@ impl ModelRunner {
 
     /// Cluster dispatch of one MoE layer's jobs: the [`ClusterRouter`]
     /// assigns every job (ascending expert order, so the assignment is
-    /// deterministic) to a device holding that expert, the jobs run as
-    /// **one worker lane per device** on the pool — each lane resolving
-    /// residency through its own device's shared cache — and jobs
+    /// deterministic) to a device holding that expert — weighing lanes
+    /// by **dispatch-bucket units** (rows round up to the padded chunks
+    /// this method actually executes, so lanes balance real compute) —
+    /// the jobs run as **one worker lane per device** on the pool, each
+    /// lane resolving residency through its own device's shared cache
+    /// (which drives that device's §6 residency ledger), and jobs
     /// computed off the primary device are charged the modeled
     /// cross-device activation transfer.  Returns per-job results in
     /// the original job order, so the caller's scatter (and therefore

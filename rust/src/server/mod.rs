@@ -57,6 +57,13 @@ use crate::workload::Request;
 pub struct ServerConfig {
     /// simulated device budget for expert weights
     pub budget_sim_bytes: usize,
+    /// modeled host-RAM tier budget (`--ram-budget`): device evictions
+    /// demote into this §6 ladder window; overflow falls to SSD, and
+    /// SSD-deep misses pay the NVMe+PCIe ladder.  Per device in cluster
+    /// mode.
+    pub ram_budget_sim_bytes: usize,
+    /// the RAM window's own eviction policy (`--ram-policy`)
+    pub ram_policy: String,
     /// hash experts consumed per token
     pub k_used: usize,
     /// batch-forming policy (size/deadline/queue bound)
@@ -76,6 +83,8 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             budget_sim_bytes: 8 << 30,
+            ram_budget_sim_bytes: crate::memory::DEFAULT_RAM_BUDGET,
+            ram_policy: "fifo".into(),
             k_used: 1,
             batch: BatchPolicy::default(),
             pool_threads: 0,
@@ -126,10 +135,12 @@ impl ServerState {
         let runner = ModelRunner::with_pool(bundle.clone(), profile, pool)?;
         let hash = HashBuilder::new(&bundle, profile)?;
         let real = bundle.weights.expert_bytes(bundle.topology.moe_blocks[0], 0)?;
-        let cache = Arc::new(SharedExpertCache::new(ExpertCache::new(
+        let cache = Arc::new(SharedExpertCache::new(ExpertCache::with_hierarchy(
             cfg.budget_sim_bytes,
             CostModel::paper_scale(real),
             make_policy("fifo")?,
+            cfg.ram_budget_sim_bytes,
+            make_policy(&cfg.ram_policy)?,
         )));
         let cluster = if cfg.devices > 1 {
             Some(Arc::new(ClusterRouter::new(
@@ -138,6 +149,8 @@ impl ServerState {
                     devices: cfg.devices,
                     replicate_top: cfg.replicate_top,
                     budget_per_device: cfg.budget_sim_bytes,
+                    host_ram_budget: cfg.ram_budget_sim_bytes,
+                    ram_policy: cfg.ram_policy.clone(),
                     ..ClusterConfig::default()
                 },
             )?))
@@ -429,6 +442,13 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
                             (cs.hits, cs.misses, cs.overlapped_transfer_secs, state.cache.used())
                         }
                     };
+                    // the §6 ladder, from the same snapshot: aggregate
+                    // over every device's cache-driven ledger in
+                    // cluster mode, the single cache's ledger otherwise
+                    let hier = match &cluster {
+                        Some(cl) => cl.hierarchy_total(),
+                        None => state.cache.hierarchy_stats(),
+                    };
                     let mut fields = vec![
                         ("served", Json::Num(served as f64)),
                         ("rejected", Json::Num(rejected as f64)),
@@ -441,6 +461,12 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
                         ("cache_misses", Json::Num(misses as f64)),
                         ("transfer_overlapped_secs", Json::Num(overlapped)),
                         ("device_used_bytes", Json::Num(used as f64)),
+                        ("ram_used_bytes", Json::Num(hier.ram_bytes as f64)),
+                        ("ssd_used_bytes", Json::Num(hier.ssd_bytes as f64)),
+                        ("demotions_to_ram", Json::Num(hier.demotions_to_ram as f64)),
+                        ("demotions_to_ssd", Json::Num(hier.demotions_to_ssd as f64)),
+                        ("ssd_promote_secs", Json::Num(hier.ssd_promote_secs)),
+                        ("ladder_secs", Json::Num(hier.ladder_secs())),
                     ];
                     if let Some(cl) = &cluster {
                         let devices: Vec<Json> = cl

@@ -101,6 +101,22 @@ fn pipeline_cluster_serving_matches_single_device_exactly() {
         if devices > 1 {
             let cluster = out.stats.cluster.expect("cluster stats must be reported");
             assert_eq!(cluster.devices.len(), devices);
+            // every device's ladder is driven by its own cache: the
+            // Device-tier occupancy IS the cache residency, and the
+            // aggregate ladder lands in the top-level ServeStats
+            let mut agg_ssd = 0.0;
+            for d in &cluster.devices {
+                assert_eq!(
+                    d.hierarchy.device_bytes, d.used_bytes,
+                    "device {}: ledger Device tier drifted from the cache",
+                    d.device
+                );
+                agg_ssd += d.hierarchy.ssd_promote_secs;
+            }
+            assert!(
+                (out.stats.hierarchy.ssd_promote_secs - agg_ssd).abs() < 1e-12,
+                "ServeStats hierarchy must aggregate the per-device ledgers"
+            );
             if let Some(router) = &p.cluster {
                 router.placement().check_invariants(&b.topology).unwrap();
                 router.check_invariants().unwrap();
@@ -207,6 +223,20 @@ fn load_imbalance_stat_is_sane() {
     // rows are conserved: the per-device loads sum to the total rows
     let total: u64 = cluster.devices.iter().map(|d| d.rows).sum();
     assert!(total > 0);
+    // bucket-weighted lane balancing: each device's dispatched compute
+    // (rows rounded up to the kernel's padded chunks) is at least its
+    // raw rows, and the compute-imbalance stat is well-formed
+    for d in &cluster.devices {
+        assert!(
+            d.bucket_units >= d.rows,
+            "device {}: bucket units {} below raw rows {}",
+            d.device,
+            d.bucket_units,
+            d.rows
+        );
+    }
+    let cimb = cluster.compute_imbalance().expect("compute was dispatched");
+    assert!(cimb >= 1.0 && cimb.is_finite());
     // interconnect charged only when work left the primary
     let off_primary: u64 =
         cluster.devices.iter().filter(|d| d.device != 0).map(|d| d.rows).sum();

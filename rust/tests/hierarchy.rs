@@ -1,0 +1,191 @@
+//! Unified tier-aware residency: end-to-end hierarchy reporting over
+//! the serving pipeline (hermetic, synthetic bundle).
+//!
+//! The contract under test (ISSUE 5):
+//! * per-tier byte occupancy respects the device and RAM budgets, and
+//!   tier sums are conserved across demote/promote (no bytes leak from
+//!   the ladder);
+//! * the ladder-seconds attribution equals the cache's modeled transfer
+//!   total — ONE timeline, no parallel promote accounting;
+//! * `ServeStats` ladder seconds are reproduced bit-for-bit across
+//!   `--pool` widths for every `--devices` in {1, 2, 4};
+//! * shrinking `--ram-budget` strictly increases SSD-ladder exposure at
+//!   a fixed device budget (the `fig_hierarchy` gate, in-test).
+
+use std::sync::Arc;
+
+use sida_moe::coordinator::{Pipeline, PipelineConfig};
+use sida_moe::runtime::ModelBundle;
+use sida_moe::testkit::{self, SynthSpec, TINY_PROFILE};
+
+fn deep_bundle() -> Arc<ModelBundle> {
+    testkit::bundle(&SynthSpec::default().two_moe_layers()).unwrap()
+}
+
+/// Paper-scale simulated bytes of one expert — the canonical rule from
+/// `bench_support` (what `fig_hierarchy` sizes its budgets with).
+fn sim_expert_bytes(b: &ModelBundle) -> usize {
+    sida_moe::bench_support::sim_expert_bytes(b).unwrap()
+}
+
+#[test]
+fn tier_occupancy_respects_budgets_and_conserves_bytes() {
+    let b = deep_bundle();
+    let sim = sim_expert_bytes(&b);
+    let device_budget = 3 * sim + 1024;
+    let ram_budget = 2 * sim + 1024;
+    let cfg = PipelineConfig {
+        k_used: 2,
+        budget_sim_bytes: device_budget,
+        ram_budget_bytes: ram_budget,
+        prefetch: false,
+        pool_threads: 1,
+        want_cls: true,
+        ..Default::default()
+    };
+    let p = Pipeline::new(b.clone(), TINY_PROFILE, cfg).unwrap();
+    let out = p.serve(&testkit::tiny_trace(&b, 12, 3)).unwrap();
+    let h = &out.stats.hierarchy;
+    assert!(h.device_bytes <= device_budget, "device tier over budget");
+    assert!(h.ram_bytes <= ram_budget, "RAM tier over budget");
+    assert!(out.stats.evictions > 0, "tight budget must evict");
+    assert!(h.demotions_to_ram > 0, "evictions must demote into RAM");
+    assert!(
+        h.demotions_to_ssd > 0,
+        "a 2-expert RAM window must overflow to SSD"
+    );
+    // conservation: every expert the ladder has seen sits in exactly one
+    // tier, in whole (equal-sized) expert units
+    let tracked = h.device_bytes + h.ram_bytes + h.ssd_bytes;
+    let total = b.topology.moe_blocks.len() * b.topology.num_experts;
+    // budgets carry +1024 slack, so allow the per-tier remainders
+    assert!(tracked >= sim, "ladder tracked nothing");
+    assert!(
+        tracked <= total * sim,
+        "ladder tracks more bytes than the expert pool holds"
+    );
+    assert_eq!(
+        tracked % sim,
+        0,
+        "tier sums must be whole experts (tracked {tracked}, expert {sim})"
+    );
+    // the cache's own invariants include the exact-device-set drift check
+    p.cache.check_invariants().unwrap();
+}
+
+#[test]
+fn ladder_seconds_equal_modeled_transfer_on_one_timeline() {
+    let b = deep_bundle();
+    let sim = sim_expert_bytes(&b);
+    let cfg = PipelineConfig {
+        k_used: 2,
+        budget_sim_bytes: 3 * sim + 1024,
+        ram_budget_bytes: sim + 1024,
+        prefetch: false,
+        pool_threads: 1,
+        want_cls: true,
+        ..Default::default()
+    };
+    let p = Pipeline::new(b.clone(), TINY_PROFILE, cfg).unwrap();
+    let out = p.serve(&testkit::tiny_trace(&b, 10, 5)).unwrap();
+    let st = &out.stats;
+    let h = &st.hierarchy;
+    assert!(st.modeled_transfer_secs > 0.0);
+    let drift = (h.ladder_secs() - st.modeled_transfer_secs).abs();
+    assert!(
+        drift <= 1e-9 * st.modeled_transfer_secs,
+        "ladder attribution {} != modeled transfer {} (parallel timelines?)",
+        h.ladder_secs(),
+        st.modeled_transfer_secs
+    );
+    // and the tiers are priced differently: with RAM + SSD traffic both
+    // present, SSD promotions must dominate per event
+    if h.promotions_from_ram > 0 && h.promotions_from_ssd > 0 {
+        let per_ram = h.ram_promote_secs / h.promotions_from_ram as f64;
+        let per_ssd = h.ssd_promote_secs / h.promotions_from_ssd as f64;
+        assert!(
+            per_ssd > 5.0 * per_ram,
+            "SSD promote ({per_ssd}) must cost several x a RAM promote ({per_ram})"
+        );
+    }
+}
+
+#[test]
+fn ladder_seconds_bit_identical_across_pool_widths_and_device_counts() {
+    // Generous budgets: no evictions, so every predicted expert is
+    // fetched exactly once (from SSD) per holder.  The ladder seconds
+    // must then be byte-for-byte reproducible across worker-pool widths
+    // for every device count — concurrency must not change what the
+    // ladder charges.
+    let b = deep_bundle();
+    let sim = sim_expert_bytes(&b);
+    let reqs = testkit::tiny_trace(&b, 8, 21);
+    for devices in [1usize, 2, 4] {
+        let mut reference: Option<(u64, u64)> = None;
+        for pool in [1usize, 4] {
+            let cfg = PipelineConfig {
+                k_used: 2,
+                budget_sim_bytes: 64 * sim,
+                devices,
+                replicate_top: 1,
+                pool_threads: pool,
+                want_cls: true,
+                ..Default::default()
+            };
+            let p = Pipeline::new(b.clone(), TINY_PROFILE, cfg).unwrap();
+            let out = p.serve(&reqs).unwrap();
+            let h = &out.stats.hierarchy;
+            assert_eq!(
+                out.stats.evictions, 0,
+                "devices={devices} pool={pool}: generous budget must not evict"
+            );
+            let bits = (h.ram_promote_secs.to_bits(), h.ssd_promote_secs.to_bits());
+            match &reference {
+                None => reference = Some(bits),
+                Some(want) => assert_eq!(
+                    *want, bits,
+                    "devices={devices}: ladder seconds differ across pool widths \
+                     (pool={pool})"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn shrinking_ram_budget_strictly_increases_ssd_exposure() {
+    // the fig_hierarchy CI gate, as a test: fixed tight device budget,
+    // RAM window from "holds everything" to zero
+    let b = deep_bundle();
+    let sim = sim_expert_bytes(&b);
+    let total = b.topology.moe_blocks.len() * b.topology.num_experts;
+    let reqs = testkit::tiny_trace(&b, 12, 9);
+    let mut last: Option<f64> = None;
+    let mut first: Option<f64> = None;
+    for ram_experts in [total, 2, 0] {
+        let cfg = PipelineConfig {
+            k_used: 2,
+            budget_sim_bytes: 4 * sim + 1024,
+            ram_budget_bytes: ram_experts * sim + if ram_experts > 0 { 1024 } else { 0 },
+            prefetch: false,
+            pool_threads: 1,
+            want_cls: true,
+            ..Default::default()
+        };
+        let p = Pipeline::new(b.clone(), TINY_PROFILE, cfg).unwrap();
+        let out = p.serve(&reqs).unwrap();
+        let ssd = out.stats.hierarchy.ssd_promote_secs;
+        if let Some(prev) = last {
+            assert!(
+                ssd >= prev - 1e-12,
+                "ram={ram_experts} experts: SSD exposure {ssd} fell below {prev}"
+            );
+        }
+        first.get_or_insert(ssd);
+        last = Some(ssd);
+    }
+    assert!(
+        last.unwrap() > first.unwrap() + 1e-12,
+        "no RAM window must cost strictly more SSD ladder than a full one"
+    );
+}

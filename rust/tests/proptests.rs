@@ -539,6 +539,125 @@ fn expert_cache_budget_and_pinning_invariants_all_policies() {
 }
 
 // ---------------------------------------------------------------------------
+// Drift-kill: after arbitrary interleavings of ensure / prefetch /
+// evict(invalidate) the residency ledger's Device tier is EXACTLY the
+// cache's resident set, for EVERY (cache policy x RAM policy) pair —
+// the invariant the PR-4 modeled FIFO side-car could not hold.  Tier
+// byte sums are conserved and RAM respects its budget throughout.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum LadderOp {
+    /// blocking ensure (the compute path's fetch)
+    Ensure(u8),
+    /// non-blocking ensure (the prefetch/warmer path's fetch)
+    Prefetch(u8),
+    /// explicit device-tier eviction
+    Invalidate(u8),
+}
+
+fn gen_ladder_ops(r: &mut Rng) -> Vec<LadderOp> {
+    (0..r.usize_below(70))
+        .map(|_| match r.below(5) {
+            0 | 1 => LadderOp::Ensure(r.below(8) as u8),
+            2 | 3 => LadderOp::Prefetch(r.below(8) as u8),
+            _ => LadderOp::Invalidate(r.below(8) as u8),
+        })
+        .collect()
+}
+
+#[test]
+fn cache_resident_set_is_exactly_the_ledger_device_tier_for_all_policies() {
+    use sida_moe::memory::Tier;
+
+    let bundle = sida_moe::testkit::tiny_bundle();
+    let block = bundle.topology.moe_blocks[0];
+    let num_experts = bundle.topology.num_experts;
+    let real = bundle.weights.expert_bytes(block, 0).unwrap();
+    for policy_name in ["fifo", "lru", "lfu", "clock"] {
+        for ram_policy_name in ["fifo", "lfu"] {
+            let bundle = bundle.clone();
+            Prop::new(32).check(
+                &format!("ledger drift ({policy_name} device / {ram_policy_name} ram)"),
+                gen_ladder_ops,
+                |v| shrink_vec(v),
+                |ops| {
+                    // device: 3 experts; RAM window: 2 — demotions must
+                    // overflow to SSD regularly
+                    let mut cache = ExpertCache::with_hierarchy(
+                        3 * real + 64,
+                        CostModel::physical(real),
+                        make_policy(policy_name).unwrap(),
+                        2 * real + 32,
+                        make_policy(ram_policy_name).unwrap(),
+                    );
+                    let mut seen: HashSet<usize> = HashSet::new();
+                    for op in ops {
+                        match op {
+                            LadderOp::Ensure(e) | LadderOp::Prefetch(e) => {
+                                let expert = *e as usize % num_experts;
+                                let key = ExpertKey::new(block, expert);
+                                let blocking = matches!(op, LadderOp::Ensure(_));
+                                let engine = bundle.engine.clone();
+                                let weights = bundle.weights.clone();
+                                cache
+                                    .ensure(key, real, blocking, || {
+                                        stage_expert_parts(&engine, &weights, block, expert)
+                                    })
+                                    .map_err(|err| format!("ensure {expert}: {err}"))?;
+                                seen.insert(expert);
+                                if cache.tier_of(&key) != Tier::Device {
+                                    return Err(format!(
+                                        "{expert} resident but ledger says {:?}",
+                                        cache.tier_of(&key)
+                                    ));
+                                }
+                            }
+                            LadderOp::Invalidate(e) => {
+                                let expert = *e as usize % num_experts;
+                                let key = ExpertKey::new(block, expert);
+                                let was_resident = cache.contains(&key);
+                                cache.invalidate(&key);
+                                if was_resident && cache.tier_of(&key) == Tier::Device {
+                                    return Err(format!(
+                                        "{expert} evicted but ledger kept it on Device"
+                                    ));
+                                }
+                            }
+                        }
+                        // the drift check proper lives in
+                        // check_invariants: ledger Device tier == the
+                        // resident set, exactly, plus per-tier sums
+                        cache
+                            .check_invariants()
+                            .map_err(|err| format!("{err:#}"))?;
+                        let h = cache.hierarchy_stats();
+                        if h.device_bytes != cache.used() {
+                            return Err(format!(
+                                "ledger device bytes {} != cache used {}",
+                                h.device_bytes,
+                                cache.used()
+                            ));
+                        }
+                        // conservation: every key ever fetched sits in
+                        // exactly one tier (physical cost model: sim ==
+                        // real bytes)
+                        let tracked = h.device_bytes + h.ram_bytes + h.ssd_bytes;
+                        if tracked != seen.len() * real {
+                            return Err(format!(
+                                "tier sums {tracked} != {} known experts x {real}",
+                                seen.len()
+                            ));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Hash oracle agreement knob: measured top-1 agreement tracks the
 // configured rate, and corrupted predictions stay within the expert pool
 // ---------------------------------------------------------------------------
