@@ -1,11 +1,14 @@
-//! Open-loop load test: Poisson arrivals against the SiDA coordinator.
+//! Open-loop load test: timed arrivals against the SiDA coordinator.
 //!
 //! Where `serve_trace` measures capacity (closed loop), this example
 //! measures client-visible latency under a target offered load —
 //! queueing + hash build + inference — sweeping the arrival rate up to
-//! saturation.
+//! saturation.  Arrivals can be Poisson, bursty (Markov-modulated
+//! on/off), or diurnal (sinusoidal rate), and a fraction of requests
+//! can be marked interactive with an SLO deadline to exercise
+//! admission control and deadline shedding.
 //!
-//! Run: `cargo run --release --example open_loop -- --model switch64 --rates 20,50,100`
+//! Run: `cargo run --release --example open_loop -- --model switch64 --rates 20,50,100 --arrivals bursty --interactive-frac 0.5`
 
 use std::sync::Arc;
 
@@ -15,20 +18,27 @@ use sida_moe::metrics::report::fmt_secs;
 use sida_moe::metrics::Table;
 use sida_moe::runtime::ModelBundle;
 use sida_moe::util::cli::Cli;
-use sida_moe::workload::{ArrivalProcess, Profile, TraceGenerator};
+use sida_moe::workload::{ArrivalProcess, ClassMix, Profile, TraceGenerator};
 
 fn main() -> anyhow::Result<()> {
     sida_moe::util::logging::init();
-    let cli = Cli::new("open_loop", "Poisson load test against the SiDA coordinator")
+    let cli = Cli::new("open_loop", "open-loop load test against the SiDA coordinator")
         .opt("model", "model config", "switch64")
         .opt("dataset", "dataset profile", "sst2")
         .opt("requests", "requests per rate", "20")
         .opt("rates", "comma-separated arrival rates (req/s)", "20,50,100")
+        .opt("arrivals", "arrival process (poisson|bursty|diurnal)", "poisson")
+        .opt("interactive-frac", "fraction of requests with an SLO deadline", "0")
+        .opt("slo-deadline", "interactive completion deadline (ms)", "100")
         .opt("queue-cap", "admission queue bound", "32");
     let args = cli.parse();
     let model = args.get_or("model", "switch64");
     let dataset = args.get_or("dataset", "sst2");
     let n = args.get_usize("requests", 20);
+    let mix = ClassMix {
+        interactive_frac: args.get_f64("interactive-frac", 0.0).clamp(0.0, 1.0),
+        deadline_secs: args.get_f64("slo-deadline", 100.0) / 1e3,
+    };
 
     let root = sida_moe::default_artifacts_root();
     if !root.join(&model).join("model.json").is_file() {
@@ -50,23 +60,32 @@ fn main() -> anyhow::Result<()> {
 
     let mut t = Table::new(
         "open-loop latency under offered load",
-        &["rate (req/s)", "served", "rejected", "mean queueing", "p50", "p95", "p99"],
+        &[
+            "rate (req/s)", "served", "rejected", "slo-rej", "shed",
+            "mean queueing", "p50", "p99", "p99.9", "slo",
+        ],
     );
     for rate_str in args.get_or("rates", "20,50,100").split(',') {
         let rate: f64 = rate_str.trim().parse().unwrap_or(20.0);
+        let arrivals =
+            ArrivalProcess::parse(&args.get_or("arrivals", "poisson"), rate)?;
         let mut gen =
             TraceGenerator::new(Profile::named(&dataset)?, bundle.topology.vocab, 11);
-        let trace = gen.trace(n, ArrivalProcess::Poisson { rate });
+        let trace = gen.trace_classed(n, arrivals, mix);
         let report = replay_open_loop(&pipeline, &trace, args.get_usize("queue-cap", 32))?;
-        let s = report.outcome.stats;
+        let mut s = report.outcome.stats;
         t.row(vec![
             format!("{rate:.0}"),
             s.requests.to_string(),
             report.rejected.to_string(),
+            report.rejected_slo.to_string(),
+            report.shed.to_string(),
             fmt_secs(report.mean_queueing_secs),
             fmt_secs(s.latency.p50()),
-            fmt_secs(s.latency.p95()),
             fmt_secs(s.latency.p99()),
+            fmt_secs(s.latency.p999()),
+            s.slo_attainment()
+                .map_or_else(|| "-".into(), |a| format!("{:.0}%", 100.0 * a)),
         ]);
     }
     t.print();

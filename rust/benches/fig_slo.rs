@@ -1,0 +1,168 @@
+//! fig_slo — SLO-aware open-loop serving: tail latency vs offered load.
+//!
+//! Sweeps a Poisson offered rate from well below to 2x the measured
+//! saturation rate of the pipeline, with half the requests marked
+//! interactive under a deadline, and replays each trace open-loop
+//! through admission control + deadline shedding.  The shape under
+//! test: without SLO machinery an open-loop queue past saturation grows
+//! without bound and so does p99; with admission control and shedding,
+//! the latency of *admitted* interactive requests stays bounded near
+//! the deadline no matter how far past saturation the offered load
+//! goes — overload shows up in the shed/reject counters instead of the
+//! tail.
+//!
+//! Like `fig_cluster` this bench is **hermetic**: it runs on the
+//! synthetic testkit bundle, so CI's bench-smoke job exercises the SLO
+//! path instead of SKIP-ing.  Emits `BENCH_slo.json` and exits
+//! non-zero when the bound fails:
+//!
+//! * at 2x saturation the admitted-interactive p99 must stay within
+//!   5x the unloaded baseline (with shedding/admission active), and
+//! * at 0.25x saturation nothing may be shed or SLO-rejected.
+
+use sida_moe::bench_support as bs;
+use sida_moe::coordinator::{replay_open_loop, Pipeline, PipelineConfig};
+use sida_moe::metrics::report::fmt_secs;
+use sida_moe::metrics::Table;
+use sida_moe::testkit::{self, TINY_PROFILE};
+use sida_moe::util::json::{num, obj, s, Json};
+use sida_moe::workload::{ArrivalProcess, ClassMix};
+
+fn main() -> anyhow::Result<()> {
+    bs::banner(
+        "fig_slo: SLO-bounded tail latency under overload",
+        "admission control + shedding keep admitted p99 bounded past saturation",
+    );
+    let bundle = testkit::tiny_bundle();
+    let n = bs::n_requests(64);
+    // generous queue bound: overload must be absorbed by the SLO
+    // machinery (admission control + shedding), not by capacity drops
+    let queue_cap = 4096;
+
+    let cfg = PipelineConfig { want_cls: true, ..Default::default() };
+    let pipeline = Pipeline::new(bundle.clone(), TINY_PROFILE, cfg)?;
+    let warmup = testkit::tiny_trace(&bundle, 4, 0xA5A5);
+    let _ = pipeline.serve(&warmup)?;
+    pipeline.reset_serving_stats();
+
+    // unloaded baseline: closed-loop batch-1 service latency (no
+    // queueing).  The 10 ms floor absorbs CI scheduling noise — on the
+    // tiny bundle raw service can be well under a millisecond, and the
+    // deadline/bound arithmetic below must not hinge on sub-ms jitter.
+    let mut unloaded = pipeline.serve(&testkit::tiny_trace(&bundle, n.min(32), 7))?;
+    let base_secs = unloaded.stats.latency.p99().max(0.010);
+    let mean_service = unloaded.stats.latency.mean().max(1e-6);
+    let saturation_rate = 1.0 / mean_service;
+    let deadline_secs = 3.0 * base_secs;
+    let bound_secs = 5.0 * base_secs;
+    println!(
+        "baseline: p99 {} (floored base {}) | saturation ~{:.0} req/s | deadline {} | bound {}",
+        fmt_secs(unloaded.stats.latency.p99()),
+        fmt_secs(base_secs),
+        saturation_rate,
+        fmt_secs(deadline_secs),
+        fmt_secs(bound_secs),
+    );
+
+    let mix = ClassMix { interactive_frac: 0.5, deadline_secs };
+    let mut t = Table::new(
+        "fig_slo — open-loop tail latency vs offered load",
+        &[
+            "load (x sat)", "offered", "served", "rej", "slo-rej", "shed",
+            "int p99", "int p99.9", "slo att",
+        ],
+    );
+    let mut j = bs::BenchJson::new("slo");
+    let mut low_load_clean = true;
+    let mut overload_bounded = true;
+    let mut overload_shedding_active = false;
+    for (i, mult) in [0.25f64, 0.5, 1.0, 2.0].into_iter().enumerate() {
+        let rate = mult * saturation_rate;
+        // the overload row must run long enough for the backlog to push
+        // queue delay past the deadline (backlog grows ~1 per service
+        // time at 2x saturation), otherwise a short trace never trips
+        // the SLO machinery it is supposed to demonstrate
+        let n_row = if mult >= 2.0 {
+            n.max(((5.0 * deadline_secs / mean_service).ceil() as usize).min(20_000))
+        } else {
+            n
+        };
+        let trace = testkit::tiny_trace_classed(
+            &bundle,
+            n_row,
+            11 + i as u64,
+            ArrivalProcess::Poisson { rate },
+            mix,
+        );
+        pipeline.reset_serving_stats();
+        let report = replay_open_loop(&pipeline, &trace, queue_cap)?;
+        let mut stats = report.outcome.stats;
+        let int_p99 = stats.latency_interactive.p99();
+        let int_p999 = stats.latency_interactive.p999();
+        let attainment = stats.slo_attainment().unwrap_or(1.0);
+        let dropped = report.shed + report.rejected + report.rejected_slo;
+        if mult <= 0.25 && dropped > 0 {
+            low_load_clean = false;
+        }
+        if mult >= 2.0 {
+            overload_shedding_active = dropped > 0;
+            if !stats.latency_interactive.is_empty() && int_p99 > bound_secs {
+                overload_bounded = false;
+            }
+        }
+        t.row(vec![
+            format!("{mult:.2}"),
+            trace.len().to_string(),
+            stats.requests.to_string(),
+            report.rejected.to_string(),
+            report.rejected_slo.to_string(),
+            report.shed.to_string(),
+            fmt_secs(int_p99),
+            fmt_secs(int_p999),
+            format!("{:.0}%", 100.0 * attainment),
+        ]);
+        j.push(obj(vec![
+            ("load_multiplier", num(mult)),
+            ("offered_rate_rps", num(rate)),
+            ("offered", num(trace.len() as f64)),
+            ("served", num(stats.requests as f64)),
+            ("rejected_capacity", num(report.rejected as f64)),
+            ("rejected_slo", num(report.rejected_slo as f64)),
+            ("shed", num(report.shed as f64)),
+            ("interactive_p99_secs", num(int_p99)),
+            ("interactive_p999_secs", num(int_p999)),
+            ("batch_p99_secs", num(stats.latency_batch.p99())),
+            ("mean_queueing_secs", num(report.mean_queueing_secs)),
+            ("slo_attainment", num(attainment)),
+            ("dataset", s(TINY_PROFILE)),
+        ]));
+    }
+    t.print();
+    t.save_csv(&bs::csv_path("fig_slo"))?;
+
+    let bounded = overload_bounded && overload_shedding_active;
+    println!(
+        "slo check: no shedding at 0.25x load: {}",
+        if low_load_clean { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "slo check: admitted-interactive p99 within {} at 2x saturation with \
+         shedding/admission active: {}",
+        fmt_secs(bound_secs),
+        if bounded { "PASS" } else { "FAIL" }
+    );
+    j.push(obj(vec![
+        ("deadline_secs", num(deadline_secs)),
+        ("bound_secs", num(bound_secs)),
+        ("saturation_rate_rps", num(saturation_rate)),
+        ("low_load_clean", Json::Bool(low_load_clean)),
+        ("overload_bounded", Json::Bool(overload_bounded)),
+        ("overload_shedding_active", Json::Bool(overload_shedding_active)),
+    ]));
+    let path = j.save()?;
+    println!("perf-trajectory JSON: {}", path.display());
+    if !(low_load_clean && bounded) {
+        std::process::exit(1);
+    }
+    Ok(())
+}

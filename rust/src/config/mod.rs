@@ -47,6 +47,18 @@ pub struct ServeConfig {
     /// hottest experts per MoE layer replicated across the fleet
     /// (cluster mode only)
     pub replicate_top: usize,
+    /// arrival process for the trace (`closed` replays the whole trace
+    /// back-to-back; `poisson`/`bursty`/`diurnal` run the open-loop
+    /// scheduler at `arrival_rate` — sida method only)
+    pub arrivals: String,
+    /// mean offered rate in requests/sec for open-loop arrivals
+    pub arrival_rate: f64,
+    /// fraction of trace requests on the interactive SLO lane
+    pub interactive_frac: f64,
+    /// interactive completion deadline in milliseconds
+    pub slo_deadline_ms: f64,
+    /// open-loop admission-queue bound
+    pub queue_cap: usize,
     /// number of requests in the trace
     pub n_requests: usize,
     /// workload seed
@@ -76,6 +88,11 @@ impl Default for ServeConfig {
             pool_threads: 0,
             devices: 1,
             replicate_top: 1,
+            arrivals: "closed".into(),
+            arrival_rate: 50.0,
+            interactive_frac: 0.0,
+            slo_deadline_ms: 100.0,
+            queue_cap: 256,
             n_requests: 32,
             seed: 0,
             want_lm: false,
@@ -105,6 +122,11 @@ impl ServeConfig {
                 "pool_threads" => cfg.pool_threads = val.as_usize()?,
                 "devices" => cfg.devices = val.as_usize()?.max(1),
                 "replicate_top" => cfg.replicate_top = val.as_usize()?,
+                "arrivals" => cfg.arrivals = val.as_str()?.to_string(),
+                "arrival_rate" => cfg.arrival_rate = val.as_f64()?,
+                "interactive_frac" => cfg.interactive_frac = val.as_f64()?.clamp(0.0, 1.0),
+                "slo_deadline_ms" => cfg.slo_deadline_ms = val.as_f64()?,
+                "queue_cap" => cfg.queue_cap = val.as_usize()?.max(1),
                 "n_requests" => cfg.n_requests = val.as_usize()?,
                 "seed" => cfg.seed = val.as_u64()?,
                 "want_lm" => cfg.want_lm = val.as_bool()?,
@@ -172,6 +194,29 @@ impl ServeConfig {
         if let Some(v) = args.get("replicate-top") {
             if let Ok(x) = v.parse::<usize>() {
                 self.replicate_top = x;
+            }
+        }
+        if let Some(v) = args.get("arrivals") {
+            self.arrivals = v.to_string();
+        }
+        if let Some(v) = args.get("rate") {
+            if let Ok(x) = v.parse() {
+                self.arrival_rate = x;
+            }
+        }
+        if let Some(v) = args.get("interactive-frac") {
+            if let Ok(x) = v.parse::<f64>() {
+                self.interactive_frac = x.clamp(0.0, 1.0);
+            }
+        }
+        if let Some(v) = args.get("slo-deadline") {
+            if let Ok(x) = v.parse() {
+                self.slo_deadline_ms = x;
+            }
+        }
+        if let Some(v) = args.get("queue-cap") {
+            if let Ok(x) = v.parse::<usize>() {
+                self.queue_cap = x.max(1);
             }
         }
         if let Some(v) = args.get("requests") {
@@ -269,6 +314,25 @@ mod tests {
         let j = Json::parse(r#"{"max_batch":0}"#).unwrap();
         let c = ServeConfig::from_json(&j).unwrap();
         assert_eq!(c.max_batch, 1);
+    }
+
+    #[test]
+    fn slo_keys_parse_with_defaults() {
+        let j = Json::parse(
+            r#"{"arrivals":"bursty","arrival_rate":120.0,"interactive_frac":1.5,
+                "slo_deadline_ms":40.0,"queue_cap":0}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.arrivals, "bursty");
+        assert!((c.arrival_rate - 120.0).abs() < 1e-9);
+        assert_eq!(c.interactive_frac, 1.0, "fraction clamps to [0,1]");
+        assert!((c.slo_deadline_ms - 40.0).abs() < 1e-9);
+        assert_eq!(c.queue_cap, 1, "queue cap clamps to >= 1");
+        let d = ServeConfig::default();
+        assert_eq!(d.arrivals, "closed");
+        assert_eq!(d.interactive_frac, 0.0);
+        assert_eq!(d.queue_cap, 256);
     }
 
     #[test]

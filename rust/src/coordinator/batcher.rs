@@ -13,7 +13,21 @@
 //!   pending request has waited [`BatchPolicy::max_delay_secs`]
 //!   (size/deadline-based forming).  Requests are grouped by profile —
 //!   only sentences padded to the same sequence length can share one
-//!   forward pass — and FIFO order is preserved within a batch.
+//!   forward pass — and FIFO order is preserved within a lane.
+//!
+//! The former keeps two lanes keyed on [`SloClass`]: interactive
+//! requests cut batches first (they are latency-bound), and any whose
+//! deadline is already blown at cut time are shed into
+//! [`FormedBatch::shed`] instead of wasting a batch slot.  Batch-lane
+//! requests cannot starve: after [`BatchPolicy::batch_aging_cuts`]
+//! consecutive cuts that served no batch-lane request while some were
+//! pending, the batch lane leads the next cut (aging credit).
+//!
+//! [`QueueDelayEstimator`] closes the admission loop: an EWMA of recent
+//! per-request service seconds times the current queue depth predicts
+//! the queue delay a new arrival would see, and interactive requests
+//! whose deadline that prediction already exceeds are rejected at
+//! submit time rather than shed later.
 //!
 //! Time is passed in explicitly (monotonic seconds from any epoch), so
 //! deadline behavior is deterministic under test.
@@ -21,7 +35,12 @@
 //! ```
 //! use sida_moe::coordinator::{BatchFormer, BatchPolicy};
 //!
-//! let policy = BatchPolicy { max_batch: 4, max_delay_secs: 0.010, capacity: 64 };
+//! let policy = BatchPolicy {
+//!     max_batch: 4,
+//!     max_delay_secs: 0.010,
+//!     capacity: 64,
+//!     ..Default::default()
+//! };
 //! let mut former: BatchFormer<()> = BatchFormer::new(policy);
 //! let bundle = sida_moe::testkit::tiny_bundle();
 //! for (i, req) in sida_moe::testkit::tiny_trace(&bundle, 2, 0).into_iter().enumerate() {
@@ -34,7 +53,7 @@
 
 use std::collections::VecDeque;
 
-use crate::workload::Request;
+use crate::workload::{Request, SloClass};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AdmitOutcome {
@@ -80,21 +99,97 @@ impl Batcher {
     }
 
     /// Requests whose arrival time has passed, in arrival order —
-    /// open-loop trace replay.
+    /// open-loop trace replay.  Every due request is either admitted or
+    /// shed (counted in `rejected`): an open-loop client does not
+    /// politely retry, so a full queue drops the arrival rather than
+    /// silently deferring it — and earlier versions of this loop leaked
+    /// the popped head on rejection.  Returns the number admitted.
     pub fn admit_due(&mut self, trace: &mut Vec<Request>, now: f64) -> usize {
+        let due = trace.iter().take_while(|r| r.arrival <= now).count();
         let mut n = 0;
-        while let Some(first) = trace.first() {
-            if first.arrival <= now {
-                let req = trace.remove(0);
-                if self.admit(req) == AdmitOutcome::Rejected {
-                    break;
-                }
+        for req in trace.drain(..due) {
+            if self.admit(req) == AdmitOutcome::Admitted {
                 n += 1;
-            } else {
-                break;
             }
         }
         n
+    }
+
+    /// [`admit_due`](Self::admit_due) with SLO admission control: an
+    /// interactive request whose predicted queue delay already exceeds
+    /// its deadline is rejected up front (cheaper than serving it past
+    /// its SLO or shedding it at cut time).  Returns
+    /// `(admitted, slo_rejected)`; capacity rejects still land in
+    /// `self.rejected`.
+    pub fn admit_due_controlled(
+        &mut self,
+        trace: &mut Vec<Request>,
+        now: f64,
+        estimator: &QueueDelayEstimator,
+    ) -> (usize, u64) {
+        let due = trace.iter().take_while(|r| r.arrival <= now).count();
+        let mut admitted = 0;
+        let mut slo_rejected = 0u64;
+        for req in trace.drain(..due) {
+            if !estimator.admits(&req.class, self.queue.len()) {
+                slo_rejected += 1;
+                continue;
+            }
+            if self.admit(req) == AdmitOutcome::Admitted {
+                admitted += 1;
+            }
+        }
+        (admitted, slo_rejected)
+    }
+}
+
+/// Predicts the queue delay a newly-arrived request would experience,
+/// from an EWMA of recent per-request service seconds multiplied by the
+/// current queue depth.  Before the first observation it predicts zero
+/// delay, i.e. admits everything — the estimator must learn from served
+/// traffic before it can reject any.
+#[derive(Debug, Clone, Default)]
+pub struct QueueDelayEstimator {
+    ewma_service_secs: f64,
+    observations: u64,
+}
+
+impl QueueDelayEstimator {
+    const ALPHA: f64 = 0.2;
+
+    /// Feed one per-request service-time observation (for a batch of
+    /// `n`, feed `infer_secs / n`).
+    pub fn observe(&mut self, service_secs: f64) {
+        if !service_secs.is_finite() || service_secs < 0.0 {
+            return;
+        }
+        if self.observations == 0 {
+            self.ewma_service_secs = service_secs;
+        } else {
+            self.ewma_service_secs =
+                Self::ALPHA * service_secs + (1.0 - Self::ALPHA) * self.ewma_service_secs;
+        }
+        self.observations += 1;
+    }
+
+    /// Current EWMA of per-request service seconds (0 before any
+    /// observation).
+    pub fn service_secs(&self) -> f64 {
+        self.ewma_service_secs
+    }
+
+    /// Predicted queueing delay at the given queue depth.
+    pub fn estimated_delay_secs(&self, queue_depth: usize) -> f64 {
+        self.ewma_service_secs * queue_depth as f64
+    }
+
+    /// Admission decision: batch-lane requests always pass; interactive
+    /// requests pass while the predicted queue delay fits the deadline.
+    pub fn admits(&self, class: &SloClass, queue_depth: usize) -> bool {
+        match class.deadline_secs() {
+            Some(deadline) => self.estimated_delay_secs(queue_depth) <= deadline,
+            None => true,
+        }
     }
 }
 
@@ -108,11 +203,15 @@ pub struct BatchPolicy {
     pub max_delay_secs: f64,
     /// admission-queue bound; requests beyond it are rejected
     pub capacity: usize,
+    /// aging credit: after this many consecutive cuts that served no
+    /// batch-lane request while some were pending, the batch lane leads
+    /// the next cut (prevents starvation under interactive load)
+    pub batch_aging_cuts: u32,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, max_delay_secs: 0.005, capacity: 256 }
+        BatchPolicy { max_batch: 8, max_delay_secs: 0.005, capacity: 256, batch_aging_cuts: 4 }
     }
 }
 
@@ -129,6 +228,10 @@ pub struct FormedBatch<T> {
     /// per-request seconds spent waiting for the batch to form, aligned
     /// with `requests`
     pub batching_delays: Vec<f64>,
+    /// interactive requests whose deadline was already blown at cut
+    /// time: removed from the queue without serving — the caller owes
+    /// each a `{"error":"deadline"}` reply
+    pub shed: Vec<(Request, T)>,
     /// the `now` at which the batch was cut
     pub formed_at: f64,
 }
@@ -143,16 +246,28 @@ impl<T> FormedBatch<T> {
     }
 }
 
-/// Size/deadline-based batch former over a bounded admission queue.
+/// Size/deadline-based batch former over a bounded admission queue,
+/// with one lane per [`SloClass`] (see module docs for the lane and
+/// shedding rules).
 ///
 /// `T` is an opaque per-request payload carried through forming (the
 /// TCP server uses it for the reply channel; the pipeline uses the
 /// request's hash table).
 pub struct BatchFormer<T> {
-    queue: VecDeque<Pending<T>>,
+    /// latency-bound lane: leads every cut (unless the aging credit
+    /// hands the lead to the batch lane)
+    interactive: VecDeque<Pending<T>>,
+    /// throughput lane: fills leftover batch slots, protected from
+    /// starvation by the aging credit
+    batch_lane: VecDeque<Pending<T>>,
     policy: BatchPolicy,
+    /// consecutive cuts that served no batch-lane request while some
+    /// were pending
+    starved_cuts: u32,
     pub admitted: u64,
     pub rejected: u64,
+    /// interactive requests dropped at cut time with a blown deadline
+    pub shed: u64,
     pub batches_formed: u64,
     pub batched_requests: u64,
 }
@@ -161,10 +276,13 @@ impl<T> BatchFormer<T> {
     pub fn new(policy: BatchPolicy) -> Self {
         let policy = BatchPolicy { max_batch: policy.max_batch.max(1), ..policy };
         BatchFormer {
-            queue: VecDeque::new(),
+            interactive: VecDeque::new(),
+            batch_lane: VecDeque::new(),
             policy,
+            starved_cuts: 0,
             admitted: 0,
             rejected: 0,
+            shed: 0,
             batches_formed: 0,
             batched_requests: 0,
         }
@@ -175,43 +293,54 @@ impl<T> BatchFormer<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.queue.len()
+        self.interactive.len() + self.batch_lane.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
+        self.interactive.is_empty() && self.batch_lane.is_empty()
+    }
+
+    fn oldest_enqueued(&self) -> Option<f64> {
+        let a = self.interactive.front().map(|p| p.enqueued_at);
+        let b = self.batch_lane.front().map(|p| p.enqueued_at);
+        match (a, b) {
+            (Some(x), Some(y)) => Some(x.min(y)),
+            (x, y) => x.or(y),
+        }
     }
 
     /// Admit one request (`now` in monotonic seconds).  Rejected when
-    /// the queue holds `capacity` pending requests.
+    /// the two lanes together hold `capacity` pending requests.
     pub fn admit(&mut self, req: Request, payload: T, now: f64) -> AdmitOutcome {
-        if self.queue.len() >= self.policy.capacity {
+        if self.len() >= self.policy.capacity {
             self.rejected += 1;
             return AdmitOutcome::Rejected;
         }
         self.admitted += 1;
-        self.queue.push_back(Pending { req, payload, enqueued_at: now });
+        let pending = Pending { req, payload, enqueued_at: now };
+        if pending.req.class.is_interactive() {
+            self.interactive.push_back(pending);
+        } else {
+            self.batch_lane.push_back(pending);
+        }
         AdmitOutcome::Admitted
     }
 
     /// Whether a batch would be cut at `now`: enough pending requests,
-    /// or the oldest has exceeded the deadline.
+    /// or the oldest (across both lanes) has exceeded the deadline.
     pub fn ready(&self, now: f64) -> bool {
-        if self.queue.len() >= self.policy.max_batch {
+        if self.len() >= self.policy.max_batch {
             return true;
         }
-        self.queue
-            .front()
-            .is_some_and(|p| now - p.enqueued_at >= self.policy.max_delay_secs)
+        self.oldest_enqueued()
+            .is_some_and(|t| now - t >= self.policy.max_delay_secs)
     }
 
     /// When the oldest pending request's deadline fires (absolute time
     /// on the caller's clock), if anything is pending — what a worker
     /// should sleep until.
     pub fn next_deadline(&self) -> Option<f64> {
-        self.queue
-            .front()
-            .map(|p| p.enqueued_at + self.policy.max_delay_secs)
+        self.oldest_enqueued().map(|t| t + self.policy.max_delay_secs)
     }
 
     /// Cut a batch if the policy says so (size reached or deadline
@@ -231,24 +360,82 @@ impl<T> BatchFormer<T> {
     }
 
     fn form(&mut self, now: f64) -> Option<FormedBatch<T>> {
-        let first_len = self.queue.front()?.req.ids.len();
-        let mut requests = Vec::new();
-        let mut batching_delays = Vec::new();
-        while requests.len() < self.policy.max_batch {
-            // group-by-profile: only same-seq-len sentences can share a
-            // forward pass; a different profile starts the next batch
-            match self.queue.front() {
-                Some(p) if p.req.ids.len() == first_len => {
-                    let p = self.queue.pop_front().unwrap();
-                    batching_delays.push((now - p.enqueued_at).max(0.0));
-                    requests.push((p.req, p.payload));
-                }
-                _ => break,
+        if self.is_empty() {
+            return None;
+        }
+        // shed interactive requests whose deadline is already blown:
+        // serving them cannot meet the SLO and only displaces requests
+        // that can still make theirs (scan the whole lane — protocol
+        // clients may carry per-request deadlines)
+        let mut shed = Vec::new();
+        let mut keep = VecDeque::with_capacity(self.interactive.len());
+        while let Some(p) = self.interactive.pop_front() {
+            let deadline = p.req.class.deadline_secs().unwrap_or(f64::INFINITY);
+            if now - p.req.arrival > deadline {
+                shed.push((p.req, p.payload));
+            } else {
+                keep.push_back(p);
             }
         }
-        self.batches_formed += 1;
-        self.batched_requests += requests.len() as u64;
-        Some(FormedBatch { requests, batching_delays, formed_at: now })
+        self.interactive = keep;
+        self.shed += shed.len() as u64;
+
+        // aging credit: the batch lane leads this cut if it has been
+        // passed over too many times in a row
+        let batch_leads = self.starved_cuts >= self.policy.batch_aging_cuts
+            && !self.batch_lane.is_empty();
+        let max_batch = self.policy.max_batch;
+        let (lead, tail) = if batch_leads {
+            (&mut self.batch_lane, &mut self.interactive)
+        } else {
+            (&mut self.interactive, &mut self.batch_lane)
+        };
+        let first_len = match lead.front().or(tail.front()).map(|p| p.req.ids.len()) {
+            Some(l) => l,
+            None => {
+                // everything pending was shed: no batch to run, but the
+                // caller still owes the shed requests their replies
+                if shed.is_empty() {
+                    return None;
+                }
+                return Some(FormedBatch {
+                    requests: Vec::new(),
+                    batching_delays: Vec::new(),
+                    shed,
+                    formed_at: now,
+                });
+            }
+        };
+        let mut requests = Vec::new();
+        let mut batching_delays = Vec::new();
+        let mut taken = [0usize; 2];
+        for (i, lane) in [lead, tail].into_iter().enumerate() {
+            while requests.len() < max_batch {
+                // group-by-profile: only same-seq-len sentences can
+                // share a forward pass; a different profile starts the
+                // next batch
+                match lane.front() {
+                    Some(p) if p.req.ids.len() == first_len => {
+                        let p = lane.pop_front().unwrap();
+                        batching_delays.push((now - p.enqueued_at).max(0.0));
+                        requests.push((p.req, p.payload));
+                        taken[i] += 1;
+                    }
+                    _ => break,
+                }
+            }
+        }
+        let batch_taken = if batch_leads { taken[0] } else { taken[1] };
+        if batch_taken == 0 && !self.batch_lane.is_empty() {
+            self.starved_cuts += 1;
+        } else {
+            self.starved_cuts = 0;
+        }
+        if !requests.is_empty() {
+            self.batches_formed += 1;
+            self.batched_requests += requests.len() as u64;
+        }
+        Some(FormedBatch { requests, batching_delays, shed, formed_at: now })
     }
 }
 
@@ -257,7 +444,21 @@ mod tests {
     use super::*;
 
     fn req(id: u64, arrival: f64) -> Request {
-        Request { id, ids: vec![1, 5, 2, 0], n_tokens: 3, label: 0, arrival }
+        Request {
+            id,
+            ids: vec![1, 5, 2, 0],
+            n_tokens: 3,
+            label: 0,
+            arrival,
+            class: SloClass::Batch,
+        }
+    }
+
+    fn ireq(id: u64, arrival: f64, deadline_secs: f64) -> Request {
+        Request {
+            class: SloClass::Interactive { deadline_secs },
+            ..req(id, arrival)
+        }
     }
 
     #[test]
@@ -308,7 +509,20 @@ mod tests {
     }
 
     fn policy(max_batch: usize, delay: f64, cap: usize) -> BatchPolicy {
-        BatchPolicy { max_batch, max_delay_secs: delay, capacity: cap }
+        BatchPolicy { max_batch, max_delay_secs: delay, capacity: cap, ..Default::default() }
+    }
+
+    #[test]
+    fn admit_due_sheds_overflow_instead_of_retrying() {
+        // 3 due requests into a queue with 1 free slot: one admitted,
+        // two counted rejected, none left behind for an implicit retry
+        let mut b = Batcher::new(1);
+        let mut trace = vec![req(0, 0.0), req(1, 0.1), req(2, 0.2), req(3, 9.0)];
+        assert_eq!(b.admit_due(&mut trace, 1.0), 1);
+        assert_eq!(b.rejected, 2, "every due overflow request must be counted");
+        assert_eq!(trace.len(), 1, "only the not-yet-due request may remain");
+        assert_eq!(trace[0].id, 3);
+        assert_eq!(b.len(), 1);
     }
 
     #[test]
@@ -361,8 +575,8 @@ mod tests {
     #[test]
     fn profile_grouping_splits_mixed_seq_lens() {
         let mut f: BatchFormer<()> = BatchFormer::new(policy(8, 10.0, 64));
-        let short = |id| Request { id, ids: vec![1, 5, 2, 0], n_tokens: 3, label: 0, arrival: 0.0 };
-        let long = |id| Request { id, ids: vec![1, 5, 5, 5, 5, 5, 2, 0], n_tokens: 7, label: 0, arrival: 0.0 };
+        let short = |id| req(id, 0.0);
+        let long = |id| Request { ids: vec![1, 5, 5, 5, 5, 5, 2, 0], n_tokens: 7, ..req(id, 0.0) };
         f.admit(short(0), (), 0.0);
         f.admit(short(1), (), 0.0);
         f.admit(long(2), (), 0.0);
@@ -379,5 +593,125 @@ mod tests {
         let mut f: BatchFormer<()> = BatchFormer::new(BatchPolicy::default());
         assert!(f.form_now(0.0).is_none());
         assert_eq!(f.batches_formed, 0);
+    }
+
+    #[test]
+    fn interactive_lane_cuts_first() {
+        // batch-lane requests arrived earlier, but the interactive lane
+        // leads the cut; leftover slots fill from the batch lane FIFO
+        let mut f: BatchFormer<u32> = BatchFormer::new(policy(3, 10.0, 64));
+        f.admit(req(0, 0.0), 0, 0.000);
+        f.admit(req(1, 0.0), 1, 0.001);
+        f.admit(ireq(2, 0.002, 5.0), 2, 0.002);
+        f.admit(ireq(3, 0.003, 5.0), 3, 0.003);
+        let b = f.form_now(0.004).unwrap();
+        assert_eq!(
+            b.requests.iter().map(|(r, _)| r.id).collect::<Vec<_>>(),
+            vec![2, 3, 0],
+            "interactive first, then oldest batch-lane"
+        );
+        assert!(b.shed.is_empty());
+        let b2 = f.form_now(0.005).unwrap();
+        assert_eq!(b2.requests.len(), 1);
+        assert_eq!(b2.requests[0].0.id, 1);
+    }
+
+    #[test]
+    fn batch_lane_never_starves_via_aging_credit() {
+        // keep the interactive lane saturated: after `batch_aging_cuts`
+        // cuts that skip the batch lane, it must lead a cut
+        let mut f: BatchFormer<()> = BatchFormer::new(BatchPolicy {
+            max_batch: 1,
+            max_delay_secs: 10.0,
+            capacity: 64,
+            batch_aging_cuts: 2,
+        });
+        f.admit(req(0, 0.0), (), 0.0);
+        let mut served_batch_lane = None;
+        for cut in 0..10u64 {
+            f.admit(ireq(100 + cut, 0.0, 100.0), (), 0.0);
+            let b = f.form_now(0.01).unwrap();
+            assert_eq!(b.requests.len(), 1);
+            if b.requests[0].0.id == 0 {
+                served_batch_lane = Some(cut);
+                break;
+            }
+        }
+        let cut = served_batch_lane.expect("batch-lane request starved across 10 cuts");
+        assert_eq!(cut, 2, "aging credit of 2 must hand over the 3rd cut, not cut {cut}");
+    }
+
+    #[test]
+    fn blown_interactive_requests_are_shed_at_cut() {
+        let mut f: BatchFormer<u32> = BatchFormer::new(policy(4, 10.0, 64));
+        f.admit(ireq(0, 0.0, 0.010), 0, 0.0); // deadline 10 ms: blown at cut
+        f.admit(ireq(1, 0.0, 10.0), 1, 0.0); // generous deadline: served
+        f.admit(req(2, 0.0), 2, 0.0);
+        let b = f.form_now(0.100).unwrap();
+        assert_eq!(b.shed.len(), 1);
+        assert_eq!(b.shed[0].0.id, 0);
+        assert_eq!(
+            b.requests.iter().map(|(r, _)| r.id).collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+        assert_eq!(f.shed, 1);
+        assert_eq!(f.batched_requests, 2);
+    }
+
+    #[test]
+    fn all_blown_cut_returns_shed_only_batch() {
+        let mut f: BatchFormer<()> = BatchFormer::new(policy(4, 10.0, 64));
+        f.admit(ireq(0, 0.0, 0.001), (), 0.0);
+        f.admit(ireq(1, 0.0, 0.001), (), 0.0);
+        let b = f.form_now(1.0).expect("shed-only cut must still surface the shed");
+        assert!(b.requests.is_empty());
+        assert_eq!(b.shed.len(), 2);
+        assert_eq!(f.batches_formed, 0, "a shed-only cut is not a formed batch");
+        assert!(f.is_empty());
+        assert!(f.form_now(2.0).is_none());
+    }
+
+    #[test]
+    fn estimator_learns_and_gates_interactive_only() {
+        let mut est = QueueDelayEstimator::default();
+        let interactive = SloClass::Interactive { deadline_secs: 0.05 };
+        // before any observation: everything admitted at any depth
+        assert!(est.admits(&interactive, 10_000));
+        est.observe(0.010);
+        assert!((est.service_secs() - 0.010).abs() < 1e-12);
+        // 10 ms per request x depth 10 = 100 ms > 50 ms deadline
+        assert!(!est.admits(&interactive, 10));
+        assert!(est.admits(&interactive, 4));
+        // the batch lane is never gated
+        assert!(est.admits(&SloClass::Batch, 10_000));
+        // EWMA tracks, garbage observations are ignored
+        est.observe(f64::NAN);
+        est.observe(-1.0);
+        assert!((est.service_secs() - 0.010).abs() < 1e-12);
+        for _ in 0..200 {
+            est.observe(0.001);
+        }
+        assert!(est.service_secs() < 0.002, "EWMA must converge toward recent service");
+        assert!(est.admits(&interactive, 10));
+    }
+
+    #[test]
+    fn admit_due_controlled_rejects_doomed_interactive() {
+        let mut b = Batcher::new(64);
+        let mut est = QueueDelayEstimator::default();
+        est.observe(0.010);
+        // preload queue depth 10 -> predicted delay 100 ms
+        for i in 0..10 {
+            b.admit(req(i, 0.0));
+        }
+        let mut trace = vec![
+            ireq(100, 0.0, 0.050), // doomed: 100 ms predicted > 50 ms deadline
+            req(101, 0.0),         // batch lane: always admitted
+            ireq(102, 0.0, 1.0),   // generous deadline: admitted
+        ];
+        let (admitted, slo_rejected) = b.admit_due_controlled(&mut trace, 1.0, &est);
+        assert_eq!((admitted, slo_rejected), (2, 1));
+        assert!(trace.is_empty());
+        assert_eq!(b.rejected, 0, "SLO rejects must not count as capacity rejects");
     }
 }

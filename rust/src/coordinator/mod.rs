@@ -26,7 +26,9 @@ pub mod hash_thread;
 pub mod pipeline;
 pub mod scheduler;
 
-pub use batcher::{AdmitOutcome, BatchFormer, BatchPolicy, Batcher, FormedBatch};
+pub use batcher::{
+    AdmitOutcome, BatchFormer, BatchPolicy, Batcher, FormedBatch, QueueDelayEstimator,
+};
 pub use scheduler::{replay_open_loop, OpenLoopReport};
 pub use hash_table::HashTable;
 pub use hash_thread::HashBuilder;

@@ -380,6 +380,7 @@ impl Pipeline {
             };
             let latency = t0.elapsed().as_secs_f64();
             stats.latency.record(latency);
+            stats.record_class(&req.class, latency);
             stats.phases.add(&out.times);
             stats.requests += 1;
             stats.hash_build_secs += table.build_secs;
@@ -548,6 +549,7 @@ impl Pipeline {
             stats.phases.add(&out.times);
             for ((req, table), fo) in batch.iter().zip(out.outputs.iter()) {
                 stats.latency.record(secs);
+                stats.record_class(&req.class, secs);
                 stats.requests += 1;
                 stats.hash_build_secs += table.build_secs;
                 let cls_pred = fo.cls_logits.as_ref().map(|v| argmax(v));

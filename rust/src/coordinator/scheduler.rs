@@ -3,16 +3,30 @@
 //!
 //! The closed-loop path (`Pipeline::serve`) measures capacity; this
 //! scheduler measures the latency a *load* produces: requests arrive by
-//! wall clock (Poisson or recorded timestamps), wait in the bounded
-//! admission queue (`Batcher`), and are served in arrival order.  The
-//! reported per-request latency = queueing + hash wait + inference —
-//! what a client of the TCP front-end would observe.
+//! wall clock (Poisson, bursty, diurnal, or recorded timestamps), wait
+//! in the bounded admission queue (`Batcher`), and are served in
+//! arrival order.  The reported per-request latency = queueing + hash
+//! wait + inference — what a client of the TCP front-end would observe.
+//!
+//! SLO handling (see `coordinator::batcher` for the mechanisms):
+//!
+//! * admission control — a [`QueueDelayEstimator`] fed by served
+//!   requests predicts the queue delay each arrival would see; an
+//!   interactive request whose prediction already exceeds its deadline
+//!   is rejected at arrival (`rejected_slo`), a full queue rejects
+//!   anything (`rejected`);
+//! * shedding — an admitted interactive request whose deadline is
+//!   already blown when it reaches the head of the queue is dropped
+//!   (`shed`) instead of served late;
+//! * accounting — every trace request ends in exactly one bucket:
+//!   `served + shed + rejected + rejected_slo == trace.len()`, and
+//!   served requests land in per-class latency histograms.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::batcher::Batcher;
+use crate::coordinator::batcher::{Batcher, QueueDelayEstimator};
 use crate::coordinator::pipeline::{Pipeline, RequestResult, ServeOutcome};
 use crate::metrics::ServeStats;
 use crate::model::ForwardOptions;
@@ -20,14 +34,23 @@ use crate::workload::Request;
 
 pub struct OpenLoopReport {
     pub outcome: ServeOutcome,
-    /// time spent waiting in the admission queue, per request quantiles
+    /// mean time served requests spent waiting in the admission queue
     pub mean_queueing_secs: f64,
+    /// arrivals dropped because the queue was physically full
     pub rejected: u64,
+    /// arrivals rejected by admission control (predicted queue delay
+    /// already past the class deadline)
+    pub rejected_slo: u64,
+    /// admitted interactive requests dropped at dequeue with a blown
+    /// deadline
+    pub shed: u64,
 }
 
 /// Replay an arrival-stamped trace.  Requests whose `arrival` has not
 /// come yet are waited for; the admission queue is bounded at
-/// `queue_cap` and overflowing requests are rejected (counted).
+/// `queue_cap`, overflowing or SLO-doomed arrivals are rejected, and
+/// interactive requests whose deadline is blown before service starts
+/// are shed — all counted in the report.
 pub fn replay_open_loop(
     pipeline: &Pipeline,
     trace: &[Request],
@@ -38,8 +61,11 @@ pub fn replay_open_loop(
         &pipeline.profile,
     )?;
     let mut batcher = Batcher::new(queue_cap);
+    let mut estimator = QueueDelayEstimator::default();
     let mut pending: Vec<Request> = trace.to_vec();
-    pending.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    pending.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    let interactive_offered =
+        pending.iter().filter(|r| r.class.is_interactive()).count() as u64;
     // cluster mode: data-aware placement from the trace's own
     // predictions before replay starts (no-op on a single device)
     pipeline.plan_cluster_placement(&pending)?;
@@ -53,10 +79,13 @@ pub fn replay_open_loop(
     let mut stats = ServeStats::default();
     let mut per_request = Vec::new();
     let mut queueing_total = 0.0;
+    let mut rejected_slo = 0u64;
+    let mut shed = 0u64;
 
     while !pending.is_empty() || !batcher.is_empty() {
         let now = t_start.elapsed().as_secs_f64();
-        batcher.admit_due(&mut pending, now);
+        let (_, slo_rej) = batcher.admit_due_controlled(&mut pending, now, &estimator);
+        rejected_slo += slo_rej;
         let Some(req) = batcher.next() else {
             // idle until the next arrival
             if let Some(next) = pending.first() {
@@ -66,7 +95,14 @@ pub fn replay_open_loop(
             continue;
         };
         let dequeue_at = t_start.elapsed().as_secs_f64();
-        queueing_total += (dequeue_at - req.arrival).max(0.0);
+        let wait = (dequeue_at - req.arrival).max(0.0);
+        if req.class.deadline_secs().is_some_and(|d| wait > d) {
+            // already past deadline: serving it cannot meet the SLO and
+            // only delays the requests queued behind it
+            shed += 1;
+            continue;
+        }
+        queueing_total += wait;
 
         // synchronous hash build + forward (the pipelined variant is
         // Pipeline::serve; open-loop measures client-visible latency).
@@ -82,8 +118,10 @@ pub fn replay_open_loop(
             opts,
         )?;
         let service = t0.elapsed().as_secs_f64();
-        let latency = (dequeue_at - req.arrival).max(0.0) + table.build_secs + service;
+        estimator.observe(table.build_secs + service);
+        let latency = wait + table.build_secs + service;
         stats.latency.record(latency);
+        stats.record_class(&req.class, latency);
         stats.phases.add(&out.times);
         stats.requests += 1;
         stats.hash_build_secs += table.build_secs;
@@ -98,10 +136,19 @@ pub fn replay_open_loop(
     }
     stats.wall_secs = t_start.elapsed().as_secs_f64();
     pipeline.collect_serving_stats(&mut stats);
+    stats.shed = shed;
+    stats.rejected = batcher.rejected;
+    stats.rejected_slo = rejected_slo;
+    // denominator over *offered* interactive traffic: shed and rejected
+    // interactive requests count against attainment, not just served
+    // ones (record_class counted the served subset; override exactly)
+    stats.interactive_offered = interactive_offered;
     let n = stats.requests.max(1) as f64;
     Ok(OpenLoopReport {
         outcome: ServeOutcome { stats, per_request },
         mean_queueing_secs: queueing_total / n,
         rejected: batcher.rejected,
+        rejected_slo,
+        shed,
     })
 }

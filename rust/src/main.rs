@@ -18,13 +18,13 @@ use anyhow::Result;
 
 use sida_moe::baselines::{run_baseline, BaselineConfig, Method};
 use sida_moe::config::ServeConfig;
-use sida_moe::coordinator::{HashBuilder, Pipeline, PipelineConfig};
+use sida_moe::coordinator::{replay_open_loop, HashBuilder, Pipeline, PipelineConfig};
 use sida_moe::metrics::report::{fmt_bytes, fmt_secs};
 use sida_moe::metrics::Table;
 use sida_moe::runtime::ModelBundle;
 use sida_moe::server::{run_server, ServerConfig, ServerState};
 use sida_moe::util::cli::Cli;
-use sida_moe::workload::{ArrivalProcess, Profile, TraceGenerator};
+use sida_moe::workload::{ArrivalProcess, ClassMix, Profile, TraceGenerator};
 
 fn main() {
     sida_moe::util::logging::init();
@@ -82,6 +82,11 @@ fn serve_cli() -> Cli {
         .opt("pool", "worker threads for expert execution (0 = auto, 1 = sequential)", "0")
         .opt("devices", "modeled devices for expert parallelism (budget is per device)", "1")
         .opt("replicate-top", "hottest experts per MoE layer replicated across devices", "1")
+        .opt("arrivals", "arrival process (closed|poisson|bursty|diurnal)", "closed")
+        .opt("rate", "mean offered rate for open-loop arrivals (req/s)", "50")
+        .opt("interactive-frac", "fraction of requests on the interactive SLO lane", "0")
+        .opt("slo-deadline", "interactive completion deadline (ms)", "100")
+        .opt("queue-cap", "open-loop admission queue bound", "256")
         .opt("requests", "number of requests", "32")
         .opt("seed", "workload seed", "0")
         .opt("artifacts", "artifacts root", "")
@@ -119,16 +124,23 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
     let bundle = load_bundle(std::path::Path::new(&cfg.artifacts), &cfg.model)?;
     let profile = profile_named(&cfg.dataset)?;
     let mut gen = TraceGenerator::new(profile, bundle.topology.vocab, cfg.seed);
-    let requests = gen.trace(cfg.n_requests, ArrivalProcess::ClosedLoop);
+    let arrivals = ArrivalProcess::parse(&cfg.arrivals, cfg.arrival_rate)?;
+    let open_loop = !matches!(arrivals, ArrivalProcess::ClosedLoop);
+    let mix = ClassMix {
+        interactive_frac: cfg.interactive_frac,
+        deadline_secs: cfg.slo_deadline_ms / 1e3,
+    };
+    let requests = gen.trace_classed(cfg.n_requests, arrivals, mix);
     let method = Method::parse(&cfg.method)?;
 
     println!(
-        "serving {} x {} with {} ({} requests, budget {})",
+        "serving {} x {} with {} ({} requests, budget {}, arrivals {})",
         cfg.model,
         cfg.dataset,
         cfg.method,
         cfg.n_requests,
-        fmt_bytes(cfg.budget_bytes())
+        fmt_bytes(cfg.budget_bytes()),
+        cfg.arrivals,
     );
     let outcome = match method {
         Method::Sida => {
@@ -148,9 +160,27 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
                 want_lm: cfg.want_lm,
                 want_cls: cfg.want_cls,
             };
-            Pipeline::new(bundle, &cfg.dataset, pcfg)?.serve(&requests)?
+            let pipeline = Pipeline::new(bundle, &cfg.dataset, pcfg)?;
+            if open_loop {
+                let report = replay_open_loop(&pipeline, &requests, cfg.queue_cap)?;
+                println!(
+                    "open-loop: mean queueing {:.2} ms | rejected {} (capacity) + {} (slo) | shed {}",
+                    report.mean_queueing_secs * 1e3,
+                    report.rejected,
+                    report.rejected_slo,
+                    report.shed,
+                );
+                report.outcome
+            } else {
+                pipeline.serve(&requests)?
+            }
         }
         m => {
+            anyhow::ensure!(
+                !open_loop,
+                "open-loop arrivals ('{}') are only supported with --method sida",
+                cfg.arrivals
+            );
             let bcfg = BaselineConfig {
                 budget_sim_bytes: cfg.budget_bytes(),
                 ram_budget_sim_bytes: cfg.ram_budget_bytes(),
@@ -163,7 +193,7 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
         }
     };
 
-    let stats = outcome.stats;
+    let mut stats = outcome.stats;
     let mut t = Table::new(
         "serve report",
         &["metric", "value"],
@@ -189,6 +219,41 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
     t.row(vec!["latency p50".into(), fmt_secs(stats.latency.p50())]);
     t.row(vec!["latency p95".into(), fmt_secs(stats.latency.p95())]);
     t.row(vec!["latency p99".into(), fmt_secs(stats.latency.p99())]);
+    t.row(vec!["latency p99.9".into(), fmt_secs(stats.latency.p999())]);
+    if !stats.latency_interactive.is_empty() {
+        t.row(vec![
+            "interactive p50/p99/p99.9".into(),
+            format!(
+                "{} / {} / {}",
+                fmt_secs(stats.latency_interactive.p50()),
+                fmt_secs(stats.latency_interactive.p99()),
+                fmt_secs(stats.latency_interactive.p999())
+            ),
+        ]);
+    }
+    if !stats.latency_batch.is_empty() && !stats.latency_interactive.is_empty() {
+        t.row(vec![
+            "batch-lane p50/p99/p99.9".into(),
+            format!(
+                "{} / {} / {}",
+                fmt_secs(stats.latency_batch.p50()),
+                fmt_secs(stats.latency_batch.p99()),
+                fmt_secs(stats.latency_batch.p999())
+            ),
+        ]);
+    }
+    if stats.shed + stats.rejected + stats.rejected_slo > 0 {
+        t.row(vec![
+            "shed / rejected".into(),
+            format!(
+                "{} shed | {} capacity | {} slo",
+                stats.shed, stats.rejected, stats.rejected_slo
+            ),
+        ]);
+    }
+    if let Some(att) = stats.slo_attainment() {
+        t.row(vec!["slo attainment".into(), format!("{:.1}%", 100.0 * att)]);
+    }
     t.row(vec![
         "expert invocations".into(),
         stats.phases.expert_invocations.to_string(),
@@ -266,6 +331,7 @@ fn cmd_server(tail: &[String]) -> Result<()> {
         .opt("queue-cap", "admission queue bound (overflow is rejected)", "256")
         .opt("devices", "modeled devices for expert parallelism (budget is per device)", "1")
         .opt("replicate-top", "hottest experts per MoE layer replicated across devices", "1")
+        .opt("slo-deadline", "default interactive completion deadline (ms)", "100")
         .opt("addr", "listen address", "127.0.0.1:7700")
         .opt("artifacts", "artifacts root", "");
     let args = cli.parse_tail(tail);
@@ -284,10 +350,12 @@ fn cmd_server(tail: &[String]) -> Result<()> {
             max_batch: args.get_usize("batch", 8).max(1),
             max_delay_secs: args.get_f64("batch-delay-ms", 5.0) / 1e3,
             capacity: args.get_usize("queue-cap", 256).max(1),
+            ..Default::default()
         },
         pool_threads: args.get_usize("pool", 0),
         devices: args.get_usize("devices", 1).max(1),
         replicate_top: args.get_usize("replicate-top", 1),
+        default_deadline_secs: args.get_f64("slo-deadline", 100.0) / 1e3,
     };
     let state = Arc::new(ServerState::new(
         bundle,

@@ -23,17 +23,20 @@ impl LatencyHistogram {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: a stray NaN sample sorts to the end instead of
+            // aborting every stats report via partial_cmp().unwrap()
+            self.samples.sort_by(|a, b| a.total_cmp(b));
             self.sorted = true;
         }
     }
 
-    /// Quantile by nearest-rank (q in [0,1]).
+    /// Quantile by nearest-rank; `q` is clamped to [0,1] (NaN -> 0).
     pub fn quantile(&mut self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
         self.ensure_sorted();
+        let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 1.0) };
         let rank = ((q * self.samples.len() as f64).ceil() as usize).max(1) - 1;
         self.samples[rank.min(self.samples.len() - 1)]
     }
@@ -48,6 +51,10 @@ impl LatencyHistogram {
 
     pub fn p99(&mut self) -> f64 {
         self.quantile(0.99)
+    }
+
+    pub fn p999(&mut self) -> f64 {
+        self.quantile(0.999)
     }
 
     pub fn mean(&self) -> f64 {
@@ -121,6 +128,39 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.len(), 2);
         assert!((a.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_and_sorts_last() {
+        let mut h = LatencyHistogram::default();
+        h.record(2.0);
+        h.record(f64::NAN);
+        h.record(1.0);
+        // must not panic; finite samples still order correctly
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.p50(), 2.0);
+        assert!(h.quantile(1.0).is_nan(), "NaN sorts to the end under total_cmp");
+    }
+
+    #[test]
+    fn quantile_input_clamped() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=10 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.quantile(-0.5), 1.0);
+        assert_eq!(h.quantile(1.5), 10.0);
+        assert_eq!(h.quantile(f64::NAN), 1.0);
+    }
+
+    #[test]
+    fn p999_tracks_extreme_tail() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.p99(), 990.0);
+        assert_eq!(h.p999(), 999.0);
     }
 
     #[test]

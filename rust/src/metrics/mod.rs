@@ -46,6 +46,23 @@ pub struct ServeStats {
     /// fleet (`--devices N`): memory, cache traffic, row loads,
     /// cross-device transfer totals.  `None` for single-device runs.
     pub cluster: Option<crate::cluster::ClusterStats>,
+    /// end-to-end latency of served interactive-class requests only
+    pub latency_interactive: LatencyHistogram,
+    /// end-to-end latency of served batch-class requests only
+    pub latency_batch: LatencyHistogram,
+    /// interactive requests dropped at batch-cut time with a blown
+    /// deadline (open-loop serving only)
+    pub shed: u64,
+    /// requests rejected at admission: queue full
+    pub rejected: u64,
+    /// requests rejected at admission: predicted queue delay already
+    /// exceeded the class deadline
+    pub rejected_slo: u64,
+    /// interactive requests offered (served + shed + rejected), the
+    /// SLO-attainment denominator
+    pub interactive_offered: u64,
+    /// served interactive requests that completed within their deadline
+    pub slo_attained: u64,
 }
 
 impl ServeStats {
@@ -129,6 +146,35 @@ impl ServeStats {
         }
     }
 
+    /// Record one served request's end-to-end latency under its SLO
+    /// class: the per-class histogram, and — for interactive requests —
+    /// the attainment counters.  The all-requests `latency` histogram
+    /// is recorded separately by the serving loop (it predates classes
+    /// and keeps its exact semantics).
+    pub fn record_class(&mut self, class: &crate::workload::SloClass, latency_secs: f64) {
+        match class.deadline_secs() {
+            Some(deadline) => {
+                self.latency_interactive.record(latency_secs);
+                self.interactive_offered += 1;
+                if latency_secs <= deadline {
+                    self.slo_attained += 1;
+                }
+            }
+            None => self.latency_batch.record(latency_secs),
+        }
+    }
+
+    /// Fraction of offered interactive requests that completed within
+    /// their deadline (shed and rejected ones count against it).
+    /// `None` when the run offered no interactive traffic.
+    pub fn slo_attainment(&self) -> Option<f64> {
+        if self.interactive_offered == 0 {
+            None
+        } else {
+            Some(self.slo_attained as f64 / self.interactive_offered as f64)
+        }
+    }
+
     pub fn throughput(&self) -> f64 {
         if self.wall_secs > 0.0 {
             self.requests as f64 / self.wall_secs
@@ -160,6 +206,17 @@ pub struct BatchingStats {
     pub batching_delay: LatencyHistogram,
     /// per-batch forward-pass seconds (hash build + inference)
     pub inference: LatencyHistogram,
+    /// interactive requests shed at batch-cut time (deadline blown)
+    pub shed: u64,
+    /// end-to-end latency (queue + infer) of served interactive requests
+    pub latency_interactive: LatencyHistogram,
+    /// end-to-end latency (queue + infer) of served batch-lane requests
+    pub latency_batch: LatencyHistogram,
+    /// served interactive requests that made their deadline
+    pub slo_attained: u64,
+    /// served interactive requests that missed their deadline (shed
+    /// requests are counted via `shed`, not here)
+    pub slo_missed: u64,
 }
 
 impl BatchingStats {
@@ -174,12 +231,42 @@ impl BatchingStats {
         self.inference.record(infer_secs);
     }
 
+    /// Record one served request's end-to-end latency under its class.
+    pub fn observe_request(&mut self, class: &crate::workload::SloClass, total_secs: f64) {
+        match class.deadline_secs() {
+            Some(deadline) => {
+                self.latency_interactive.record(total_secs);
+                if total_secs <= deadline {
+                    self.slo_attained += 1;
+                } else {
+                    self.slo_missed += 1;
+                }
+            }
+            None => self.latency_batch.record(total_secs),
+        }
+    }
+
+    /// Count requests shed at cut time with a blown deadline.
+    pub fn observe_shed(&mut self, n: usize) {
+        self.shed += n as u64;
+    }
+
     /// Mean requests per batch, `None` before any batch was served.
     pub fn mean_batch_size(&self) -> Option<f64> {
         if self.batches == 0 {
             None
         } else {
             Some(self.batched_requests as f64 / self.batches as f64)
+        }
+    }
+
+    /// SLO attainment over served + shed interactive traffic.
+    pub fn slo_attainment(&self) -> Option<f64> {
+        let offered = self.slo_attained + self.slo_missed + self.shed;
+        if offered == 0 {
+            None
+        } else {
+            Some(self.slo_attained as f64 / offered as f64)
         }
     }
 }
@@ -250,6 +337,40 @@ mod tests {
         s.transferred_bytes = 600;
         assert!((s.mean_batch_size().unwrap() - 4.0).abs() < 1e-12);
         assert!((s.transferred_bytes_per_request() - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_class_recording_and_attainment() {
+        use crate::workload::SloClass;
+        let mut s = ServeStats::default();
+        assert_eq!(s.slo_attainment(), None);
+        let fast = SloClass::Interactive { deadline_secs: 0.1 };
+        s.record_class(&fast, 0.05); // attained
+        s.record_class(&fast, 0.50); // missed
+        s.record_class(&SloClass::Batch, 9.0);
+        // a shed interactive request counts against attainment
+        s.shed += 1;
+        s.interactive_offered += 1;
+        assert_eq!(s.latency_interactive.len(), 2);
+        assert_eq!(s.latency_batch.len(), 1);
+        assert_eq!(s.interactive_offered, 3);
+        assert!((s.slo_attainment().unwrap() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batching_stats_per_class() {
+        use crate::workload::SloClass;
+        let mut b = BatchingStats::default();
+        assert_eq!(b.slo_attainment(), None);
+        let fast = SloClass::Interactive { deadline_secs: 0.1 };
+        b.observe_request(&fast, 0.05);
+        b.observe_request(&fast, 0.20);
+        b.observe_request(&SloClass::Batch, 1.0);
+        b.observe_shed(2);
+        assert_eq!(b.latency_interactive.len(), 2);
+        assert_eq!(b.latency_batch.len(), 1);
+        assert_eq!((b.slo_attained, b.slo_missed, b.shed), (1, 1, 2));
+        assert!((b.slo_attainment().unwrap() - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -16,14 +16,28 @@
 //!
 //! ```text
 //! -> {"ids": [1, 17, 42, 2]}      token ids (unpadded ok)
+//! -> {"ids": [...], "class": "interactive", "deadline_ms": 50}
 //! <- {"id": 3, "label": 2, "latency_ms": 1.9, "queue_ms": 0.4, "infer_ms": 1.5}
 //! -> {"cmd": "stats"}             server + batching counters
 //! -> {"cmd": "shutdown"}
 //! ```
 //!
+//! `"class": "interactive"` requests carry an SLO deadline
+//! (`deadline_ms`, defaulting to `ServerConfig::default_deadline_secs`)
+//! and ride the batch former's interactive lane: they are rejected at
+//! admission when the EWMA queue-delay prediction already exceeds the
+//! deadline (`{"error": "deadline ..."}`), and shed at batch-cut time
+//! when the deadline is blown while queued.  Everything else rides the
+//! batch lane, protected from starvation by the former's aging credit.
+//!
 //! When the admission queue is full the request is rejected
 //! immediately (`{"error": "queue full ..."}`) and counted — bounded
 //! memory under overload, clients retry.
+//!
+//! If the shared batch worker panics, every pending and in-flight
+//! request receives an error reply (no 30 s client timeouts), the
+//! server flips `shutdown`, and the failure is surfaced as
+//! `worker_panics` in `cmd: stats`.
 //!
 //! No tokio in the vendored crate set, so this is a std::net +
 //! thread-per-connection front-end; batching happens behind the queue,
@@ -39,7 +53,9 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::cluster::{ClusterConfig, ClusterRouter};
-use crate::coordinator::batcher::{AdmitOutcome, BatchFormer, BatchPolicy, FormedBatch};
+use crate::coordinator::batcher::{
+    AdmitOutcome, BatchFormer, BatchPolicy, FormedBatch, QueueDelayEstimator,
+};
 use crate::coordinator::hash_table::HashTable;
 use crate::coordinator::hash_thread::HashBuilder;
 use crate::coordinator::pipeline::{argmax, run_gated_forward, WarmTarget};
@@ -50,7 +66,7 @@ use crate::model::{BatchItem, ExpertProvider, ForwardOptions, ModelRunner};
 use crate::runtime::ModelBundle;
 use crate::util::json::{obj, Json};
 use crate::util::pool::WorkerPool;
-use crate::workload::Request;
+use crate::workload::{Request, SloClass};
 
 /// Front-end tuning knobs.
 #[derive(Debug, Clone)]
@@ -77,6 +93,9 @@ pub struct ServerConfig {
     /// hottest experts per MoE layer replicated across the fleet
     /// (`--replicate-top`; cluster mode only)
     pub replicate_top: usize,
+    /// SLO deadline applied to `"class": "interactive"` requests that
+    /// carry no `deadline_ms` of their own (`--slo-deadline`)
+    pub default_deadline_secs: f64,
 }
 
 impl Default for ServerConfig {
@@ -90,6 +109,7 @@ impl Default for ServerConfig {
             pool_threads: 0,
             devices: 1,
             replicate_top: 1,
+            default_deadline_secs: 0.100,
         }
     }
 }
@@ -120,10 +140,22 @@ pub struct ServerState {
     queue_cv: Condvar,
     /// batching counters + latency attribution (see `cmd: stats`)
     pub batching: Mutex<BatchingStats>,
+    /// EWMA of per-request service seconds, driving SLO admission
+    estimator: Mutex<QueueDelayEstimator>,
     /// requests completed by the shared worker
     pub served: AtomicU64,
     /// requests rejected at admission (queue full / shutting down)
     pub rejected: AtomicU64,
+    /// requests rejected at admission because the predicted queue delay
+    /// already exceeded their deadline
+    pub rejected_slo: AtomicU64,
+    /// batch-worker panics caught (the server shuts down after one)
+    pub worker_panics: AtomicU64,
+    /// test hook: the next batch the worker runs panics
+    #[doc(hidden)]
+    pub inject_panic: AtomicBool,
+    /// default deadline for interactive requests without their own
+    default_deadline_secs: f64,
     next_id: AtomicU64,
     pub shutdown: AtomicBool,
     t0: Instant,
@@ -166,8 +198,13 @@ impl ServerState {
             queue: Mutex::new(BatchFormer::new(cfg.batch)),
             queue_cv: Condvar::new(),
             batching: Mutex::new(BatchingStats::default()),
+            estimator: Mutex::new(QueueDelayEstimator::default()),
             served: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            rejected_slo: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
+            inject_panic: AtomicBool::new(false),
+            default_deadline_secs: cfg.default_deadline_secs,
             next_id: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
             t0: Instant::now(),
@@ -224,48 +261,73 @@ impl ServerState {
     /// Pad and admit one request into the shared queue; `Ok` carries
     /// the receiver the reply will arrive on, `Err` the rejection
     /// reason.
-    fn submit(&self, ids_unpadded: &[i32]) -> std::result::Result<Receiver<ReplyOutcome>, String> {
+    fn submit(
+        &self,
+        ids_unpadded: &[i32],
+        class: SloClass,
+    ) -> std::result::Result<Receiver<ReplyOutcome>, String> {
         let l = self.runner.seq_len;
         let mut ids = vec![0i32; l];
         let n = ids_unpadded.len().min(l);
         ids[..n].copy_from_slice(&ids_unpadded[..n]);
         let now = self.now();
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let req = Request { id, ids, n_tokens: n, label: 0, arrival: now };
+        let req = Request { id, ids, n_tokens: n, label: 0, arrival: now, class };
         let (tx, rx) = channel();
+        // snapshot the service-time EWMA outside the queue lock (lock
+        // order: never hold both)
+        let estimator = lock_tolerant(&self.estimator).clone();
         let outcome = {
             // the shutdown check must happen under the queue lock: the
             // worker reads the flag and performs its final drain under
             // this lock, so an admit that observes shutdown == false is
             // guaranteed to be seen by that drain (no stranded request)
-            let mut q = self.queue.lock().unwrap();
+            let mut q = lock_tolerant(&self.queue);
             if self.shutdown.load(Ordering::SeqCst) {
                 self.rejected.fetch_add(1, Ordering::SeqCst);
                 return Err("server shutting down".into());
             }
-            q.admit(req, tx, now)
+            if !estimator.admits(&req.class, q.len()) {
+                self.rejected_slo.fetch_add(1, Ordering::SeqCst);
+                return Err(format!(
+                    "deadline: predicted queue delay {:.1} ms exceeds the {:.1} ms SLO — rejected at admission",
+                    estimator.estimated_delay_secs(q.len()) * 1e3,
+                    req.class.deadline_secs().unwrap_or(0.0) * 1e3,
+                ));
+            }
+            // capture the bound under this same lock — no second
+            // acquisition just to render the error string
+            let capacity = q.policy().capacity;
+            match q.admit(req, tx, now) {
+                AdmitOutcome::Admitted => Ok(()),
+                AdmitOutcome::Rejected => Err(capacity),
+            }
         };
         match outcome {
-            AdmitOutcome::Admitted => {
+            Ok(()) => {
                 self.queue_cv.notify_all();
                 Ok(rx)
             }
-            AdmitOutcome::Rejected => {
+            Err(capacity) => {
                 self.rejected.fetch_add(1, Ordering::SeqCst);
-                Err(format!(
-                    "queue full (capacity {}) — retry later",
-                    self.queue.lock().unwrap().policy().capacity
-                ))
+                Err(format!("queue full (capacity {capacity}) — retry later"))
             }
         }
     }
+}
+
+/// Lock a mutex, recovering the data from a poisoned lock: the batch
+/// worker wraps its fallible work in `catch_unwind`, and a panic that
+/// slipped through must not cascade into every connection thread.
+fn lock_tolerant<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Wait for the next formed batch: cut on size, cut on deadline, or
 /// drain on shutdown.  Returns `None` when shut down with nothing
 /// pending — the worker's exit condition.
 fn next_batch(state: &ServerState) -> Option<FormedBatch<Sender<ReplyOutcome>>> {
-    let mut q = state.queue.lock().unwrap();
+    let mut q = lock_tolerant(&state.queue);
     loop {
         let now = state.now();
         if state.shutdown.load(Ordering::SeqCst) {
@@ -284,7 +346,7 @@ fn next_batch(state: &ServerState) -> Option<FormedBatch<Sender<ReplyOutcome>>> 
         let (guard, _timeout) = state
             .queue_cv
             .wait_timeout(q, Duration::from_secs_f64(wait))
-            .unwrap();
+            .unwrap_or_else(|e| e.into_inner());
         q = guard;
     }
 }
@@ -301,6 +363,9 @@ fn run_batch(
     state: &ServerState,
     batch: &FormedBatch<Sender<ReplyOutcome>>,
 ) -> Result<Vec<usize>> {
+    if state.inject_panic.swap(false, Ordering::SeqCst) {
+        panic!("injected batch panic (test hook)");
+    }
     let mut tables = Vec::with_capacity(batch.len());
     for (req, _) in &batch.requests {
         tables.push(state.hash.build(req.id, &req.ids)?);
@@ -344,18 +409,50 @@ fn run_batch(
         .collect())
 }
 
-/// Serve one formed batch and deliver every reply (or the shared error).
-fn serve_batch(state: &ServerState, batch: FormedBatch<Sender<ReplyOutcome>>) {
+/// Best-effort human-readable panic payload.
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Serve one formed batch and deliver every reply (or the shared
+/// error).  Returns `false` when the batch panicked — the worker must
+/// shut the server down rather than limp on with unknown state.
+fn serve_batch(state: &ServerState, batch: FormedBatch<Sender<ReplyOutcome>>) -> bool {
+    // deliver shed replies first: these requests blew their deadline in
+    // the queue and were cut out of the batch by the former
+    if !batch.shed.is_empty() {
+        lock_tolerant(&state.batching).observe_shed(batch.shed.len());
+        for (req, tx) in &batch.shed {
+            let _ = tx.send(Err(format!(
+                "deadline: request {} shed — SLO expired while queued",
+                req.id
+            )));
+        }
+    }
+    if batch.requests.is_empty() {
+        return true;
+    }
     let t0 = Instant::now();
-    let result = run_batch(state, &batch);
+    let result =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_batch(state, &batch)));
     let infer_secs = t0.elapsed().as_secs_f64();
     match result {
-        Ok(labels) => {
-            state
-                .batching
-                .lock()
-                .unwrap()
-                .observe_batch(&batch.batching_delays, infer_secs);
+        Ok(Ok(labels)) => {
+            {
+                let mut b = lock_tolerant(&state.batching);
+                b.observe_batch(&batch.batching_delays, infer_secs);
+                for ((req, _), delay) in batch.requests.iter().zip(batch.batching_delays.iter())
+                {
+                    b.observe_request(&req.class, *delay + infer_secs);
+                }
+            }
+            lock_tolerant(&state.estimator).observe(infer_secs / batch.requests.len() as f64);
             for (((req, tx), label), delay) in batch
                 .requests
                 .iter()
@@ -371,21 +468,55 @@ fn serve_batch(state: &ServerState, batch: FormedBatch<Sender<ReplyOutcome>>) {
                     infer_secs,
                 }));
             }
+            true
         }
-        Err(e) => {
+        Ok(Err(e)) => {
             let msg = format!("{e:#}");
             for (_, tx) in &batch.requests {
                 let _ = tx.send(Err(msg.clone()));
             }
+            true
+        }
+        Err(payload) => {
+            let msg = format!("serving worker panicked: {}", panic_msg(payload.as_ref()));
+            log::error!("{msg}");
+            for (_, tx) in &batch.requests {
+                let _ = tx.send(Err(msg.clone()));
+            }
+            false
         }
     }
 }
 
 /// The shared worker: pull formed batches until shutdown + drained.
+/// A panicking batch kills the worker — but not silently: the panic is
+/// counted, `shutdown` flips, and every request still queued gets an
+/// error reply instead of a 30 s client timeout.
 fn worker_loop(state: &ServerState) {
     while let Some(batch) = next_batch(state) {
-        serve_batch(state, batch);
+        if !serve_batch(state, batch) {
+            worker_died(state);
+            return;
+        }
     }
+}
+
+/// Post-panic teardown: surface the failure, stop admissions, and fail
+/// every pending request promptly.
+fn worker_died(state: &ServerState) {
+    state.worker_panics.fetch_add(1, Ordering::SeqCst);
+    // the store is ordered before the queue drain below: a submit that
+    // admitted under the lock before us is drained here; one that locks
+    // after us observes shutdown and rejects — no stranded request
+    state.shutdown.store(true, Ordering::SeqCst);
+    let mut q = lock_tolerant(&state.queue);
+    while let Some(batch) = q.form_now(state.now()) {
+        for (_, tx) in batch.requests.iter().chain(batch.shed.iter()) {
+            let _ = tx.send(Err("serving worker died; server shutting down".into()));
+        }
+    }
+    drop(q);
+    state.queue_cv.notify_all();
 }
 
 fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
@@ -410,16 +541,28 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
                 "stats" => {
                     let served = state.served.load(Ordering::SeqCst);
                     let rejected = state.rejected.load(Ordering::SeqCst);
-                    let queued = state.queue.lock().unwrap().len();
-                    let (batches, mean_size, delay_ms, infer_ms) = {
-                        let b = state.batching.lock().unwrap();
+                    let rejected_slo = state.rejected_slo.load(Ordering::SeqCst);
+                    let worker_panics = state.worker_panics.load(Ordering::SeqCst);
+                    let queued = lock_tolerant(&state.queue).len();
+                    let (batches, mean_size, delay_ms, infer_ms, slo) = {
+                        let mut b = lock_tolerant(&state.batching);
+                        let slo = (
+                            b.shed,
+                            b.slo_attainment(),
+                            b.latency_interactive.p99() * 1e3,
+                            b.latency_interactive.p999() * 1e3,
+                            b.latency_batch.p99() * 1e3,
+                            b.latency_batch.p999() * 1e3,
+                        );
                         (
                             b.batches,
                             b.mean_batch_size().unwrap_or(0.0),
                             b.batching_delay.mean() * 1e3,
                             b.inference.mean() * 1e3,
+                            slo,
                         )
                     };
+                    let (shed, attainment, int_p99, int_p999, bat_p99, bat_p999) = slo;
                     // ONE cluster snapshot per reply, so the top-level
                     // aggregates and the per-device array below can
                     // never disagree.  Top-level cache fields reflect
@@ -452,6 +595,14 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
                     let mut fields = vec![
                         ("served", Json::Num(served as f64)),
                         ("rejected", Json::Num(rejected as f64)),
+                        ("rejected_slo", Json::Num(rejected_slo as f64)),
+                        ("shed", Json::Num(shed as f64)),
+                        ("worker_panics", Json::Num(worker_panics as f64)),
+                        ("slo_attainment", Json::Num(attainment.unwrap_or(1.0))),
+                        ("latency_p99_ms_interactive", Json::Num(int_p99)),
+                        ("latency_p999_ms_interactive", Json::Num(int_p999)),
+                        ("latency_p99_ms_batch", Json::Num(bat_p99)),
+                        ("latency_p999_ms_batch", Json::Num(bat_p999)),
                         ("queued", Json::Num(queued as f64)),
                         ("batches_formed", Json::Num(batches as f64)),
                         ("mean_batch_size", Json::Num(mean_size)),
@@ -530,7 +681,30 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
                 continue;
             }
         };
-        match state.submit(&ids) {
+        let class = match req.opt("class").map(|c| c.as_str().unwrap_or("")) {
+            None => SloClass::Batch,
+            Some("batch") => SloClass::Batch,
+            Some("interactive") => {
+                let deadline_secs = req
+                    .opt("deadline_ms")
+                    .and_then(|v| v.as_f64().ok())
+                    .map(|ms| ms / 1e3)
+                    .unwrap_or(state.default_deadline_secs);
+                SloClass::Interactive { deadline_secs }
+            }
+            Some(other) => {
+                writeln!(
+                    writer,
+                    "{}",
+                    obj(vec![(
+                        "error",
+                        Json::Str(format!("unknown class '{other}' (interactive|batch)")),
+                    )])
+                )?;
+                continue;
+            }
+        };
+        match state.submit(&ids, class) {
             Ok(rx) => match rx.recv_timeout(Duration::from_secs(30)) {
                 Ok(Ok(reply)) => {
                     writeln!(
@@ -590,11 +764,14 @@ pub fn run_server_on(state: Arc<ServerState>, listener: TcpListener) -> Result<(
             .spawn(move || worker_loop(&st))
             .expect("spawn batch worker")
     };
-    let mut handles = Vec::new();
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
     loop {
         if state.shutdown.load(Ordering::SeqCst) {
             break;
         }
+        // reap finished connection threads so a long-lived server does
+        // not accumulate one dead JoinHandle per connection ever served
+        handles.retain(|h| !h.is_finished());
         match listener.accept() {
             Ok((stream, _)) => {
                 stream.set_nonblocking(false)?;

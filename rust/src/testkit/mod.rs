@@ -213,6 +213,23 @@ pub fn tiny_trace(bundle: &ModelBundle, n: usize, seed: u64) -> Vec<crate::workl
     gen.trace(n, crate::workload::ArrivalProcess::ClosedLoop)
 }
 
+/// [`tiny_trace`] with timed arrivals and an SLO class mix — open-loop
+/// and admission-control tests.
+pub fn tiny_trace_classed(
+    bundle: &ModelBundle,
+    n: usize,
+    seed: u64,
+    arrivals: crate::workload::ArrivalProcess,
+    mix: crate::workload::ClassMix,
+) -> Vec<crate::workload::Request> {
+    let mut gen = crate::workload::TraceGenerator::new(
+        tiny_profile(),
+        bundle.topology.vocab,
+        seed,
+    );
+    gen.trace_classed(n, arrivals, mix)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

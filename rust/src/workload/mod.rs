@@ -10,4 +10,4 @@
 
 pub mod trace;
 
-pub use trace::{pad_mask, ArrivalProcess, Profile, Request, TraceGenerator};
+pub use trace::{pad_mask, ArrivalProcess, ClassMix, Profile, Request, SloClass, TraceGenerator};

@@ -47,6 +47,45 @@ impl Profile {
     }
 }
 
+/// The service-level class a request is admitted under.
+///
+/// `Interactive` requests carry a completion deadline measured from
+/// their arrival: the admission controller rejects them early when the
+/// predicted queue delay already blows the deadline, and the batch
+/// former sheds them (counted, replied `{"error":"deadline"}`) when the
+/// deadline is blown at batch-cut time — serving a request that has
+/// already missed its SLO only delays requests that can still make
+/// theirs.  `Batch` requests have no deadline and ride the throughput
+/// lane; an aging credit in the former keeps them from starving under
+/// sustained interactive load.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SloClass {
+    /// latency-sensitive: must complete within `deadline_secs` of arrival
+    Interactive { deadline_secs: f64 },
+    /// throughput lane: no deadline, never shed
+    Batch,
+}
+
+impl Default for SloClass {
+    fn default() -> Self {
+        SloClass::Batch
+    }
+}
+
+impl SloClass {
+    pub fn is_interactive(&self) -> bool {
+        matches!(self, SloClass::Interactive { .. })
+    }
+
+    /// The class deadline, `None` for the batch lane.
+    pub fn deadline_secs(&self) -> Option<f64> {
+        match self {
+            SloClass::Interactive { deadline_secs } => Some(*deadline_secs),
+            SloClass::Batch => None,
+        }
+    }
+}
+
 /// One serving request: a padded sentence plus arrival metadata.  The
 /// paper evaluates at batch 1 (one request per forward); the batched
 /// serving path coalesces several of these into one forward pass.
@@ -61,6 +100,8 @@ pub struct Request {
     pub label: usize,
     /// seconds after trace start at which the request arrives
     pub arrival: f64,
+    /// SLO class this request is served under (default: batch lane)
+    pub class: SloClass,
 }
 
 /// Attention mask over padded ids: 1.0 for real tokens, 0.0 for
@@ -84,6 +125,55 @@ pub enum ArrivalProcess {
     ClosedLoop,
     /// Poisson arrivals at `rate` requests/sec
     Poisson { rate: f64 },
+    /// Markov-modulated on/off process: Poisson at `rate_on` during ON
+    /// phases, silent during OFF phases; phase lengths are exponential
+    /// with the given means.  Mean rate is
+    /// `rate_on * mean_on / (mean_on + mean_off)`.
+    Bursty { rate_on: f64, mean_on_secs: f64, mean_off_secs: f64 },
+    /// Sinusoidally-modulated Poisson process (diurnal load shape):
+    /// instantaneous rate `mean_rate * (1 + amplitude * sin(2π t / period))`,
+    /// sampled by Lewis–Shedler thinning.  `amplitude` in [0, 1].
+    Diurnal { mean_rate: f64, amplitude: f64, period_secs: f64 },
+}
+
+impl ArrivalProcess {
+    /// Parse a CLI arrival-process name at the given headline rate.
+    /// `bursty` concentrates the same mean rate into ON phases at 3x
+    /// intensity (duty cycle 1/3); `diurnal` swings +-80% over a 1 s
+    /// period (a compressed day for hermetic runs).
+    pub fn parse(name: &str, rate: f64) -> anyhow::Result<ArrivalProcess> {
+        match name {
+            "closed" => Ok(ArrivalProcess::ClosedLoop),
+            "poisson" => Ok(ArrivalProcess::Poisson { rate }),
+            "bursty" => Ok(ArrivalProcess::Bursty {
+                rate_on: 3.0 * rate,
+                mean_on_secs: 0.05,
+                mean_off_secs: 0.10,
+            }),
+            "diurnal" => Ok(ArrivalProcess::Diurnal {
+                mean_rate: rate,
+                amplitude: 0.8,
+                period_secs: 1.0,
+            }),
+            other => anyhow::bail!("unknown arrival process '{other}' (closed|poisson|bursty|diurnal)"),
+        }
+    }
+}
+
+/// How a generated trace is split into SLO classes: each request is
+/// interactive with probability `interactive_frac`, carrying
+/// `deadline_secs`; the rest ride the batch lane.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassMix {
+    pub interactive_frac: f64,
+    pub deadline_secs: f64,
+}
+
+impl ClassMix {
+    /// Everything on the batch lane (the pre-SLO default).
+    pub fn batch_only() -> ClassMix {
+        ClassMix { interactive_frac: 0.0, deadline_secs: f64::INFINITY }
+    }
 }
 
 pub struct TraceGenerator {
@@ -124,10 +214,25 @@ impl TraceGenerator {
         (ids, length + 2, topic)
     }
 
-    /// Generate a trace of `n` requests under an arrival process.
+    /// Generate a trace of `n` requests under an arrival process
+    /// (every request on the batch lane — the pre-SLO behaviour).
     pub fn trace(&mut self, n: usize, arrivals: ArrivalProcess) -> Vec<Request> {
+        self.trace_classed(n, arrivals, ClassMix::batch_only())
+    }
+
+    /// Generate a trace of `n` requests under an arrival process, each
+    /// assigned an SLO class per `mix`.
+    pub fn trace_classed(
+        &mut self,
+        n: usize,
+        arrivals: ArrivalProcess,
+        mix: ClassMix,
+    ) -> Vec<Request> {
         let mut out = Vec::with_capacity(n);
         let mut t = 0.0f64;
+        // ON/OFF phase state for Bursty: start at the beginning of an
+        // ON phase so short traces are not all-silence.
+        let mut on_until = f64::NEG_INFINITY;
         for id in 0..n {
             let (ids, n_tokens, label) = self.sentence();
             let arrival = match arrivals {
@@ -136,8 +241,48 @@ impl TraceGenerator {
                     t += self.rng.exp(rate);
                     t
                 }
+                ArrivalProcess::Bursty { rate_on, mean_on_secs, mean_off_secs } => {
+                    if on_until == f64::NEG_INFINITY {
+                        on_until = self.rng.exp(1.0 / mean_on_secs);
+                    }
+                    loop {
+                        let dt = self.rng.exp(rate_on);
+                        if t + dt <= on_until {
+                            t += dt;
+                            break;
+                        }
+                        // the rest of this ON phase produced no arrival:
+                        // jump over the OFF gap into the next ON phase
+                        // (exponential phases are memoryless, so
+                        // restarting the inter-arrival draw is exact)
+                        t = on_until + self.rng.exp(1.0 / mean_off_secs);
+                        on_until = t + self.rng.exp(1.0 / mean_on_secs);
+                    }
+                    t
+                }
+                ArrivalProcess::Diurnal { mean_rate, amplitude, period_secs } => {
+                    // Lewis–Shedler thinning against the peak rate
+                    let amp = amplitude.clamp(0.0, 1.0);
+                    let rate_max = mean_rate * (1.0 + amp);
+                    loop {
+                        t += self.rng.exp(rate_max);
+                        let rate_t = mean_rate
+                            * (1.0 + amp * (std::f64::consts::TAU * t / period_secs).sin());
+                        if self.rng.f64() * rate_max <= rate_t {
+                            break;
+                        }
+                    }
+                    t
+                }
             };
-            out.push(Request { id: id as u64, ids, n_tokens, label, arrival });
+            // short-circuit keeps the rng stream identical to pre-SLO
+            // traces when the mix is batch-only (deterministic twins)
+            let class = if mix.interactive_frac > 0.0 && self.rng.bool(mix.interactive_frac) {
+                SloClass::Interactive { deadline_secs: mix.deadline_secs }
+            } else {
+                SloClass::Batch
+            };
+            out.push(Request { id: id as u64, ids, n_tokens, label, arrival, class });
         }
         out
     }
@@ -210,6 +355,106 @@ mod tests {
         let mut g = TraceGenerator::new(Profile::named("sst2").unwrap(), 256, 7);
         let tr = g.trace(5, ArrivalProcess::ClosedLoop);
         assert!(tr.iter().all(|r| r.arrival == 0.0));
+    }
+
+    #[test]
+    fn bursty_arrivals_increase_and_cluster() {
+        let mut g = TraceGenerator::new(Profile::named("sst2").unwrap(), 256, 11);
+        let arr = ArrivalProcess::Bursty {
+            rate_on: 300.0,
+            mean_on_secs: 0.05,
+            mean_off_secs: 0.10,
+        };
+        let tr = g.trace(200, arr);
+        for w in tr.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        assert!(tr.last().unwrap().arrival > 0.0);
+        // burstiness: the gap distribution must be far more dispersed
+        // than Poisson at the same mean rate (CV^2 >> 1)
+        let gaps: Vec<f64> = tr.windows(2).map(|w| w[1].arrival - w[0].arrival).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        let cv2 = var / (mean * mean);
+        assert!(cv2 > 1.5, "on/off arrivals should be overdispersed, cv^2 = {cv2}");
+    }
+
+    #[test]
+    fn diurnal_arrivals_modulate_rate() {
+        let mut g = TraceGenerator::new(Profile::named("sst2").unwrap(), 256, 13);
+        let arr = ArrivalProcess::Diurnal {
+            mean_rate: 200.0,
+            amplitude: 0.9,
+            period_secs: 1.0,
+        };
+        let tr = g.trace(400, arr);
+        for w in tr.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        // count arrivals in the rate peak (sin > 0) vs trough (sin < 0)
+        // over whole periods: the peak half must see clearly more
+        let span = tr.last().unwrap().arrival.floor().max(1.0);
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for r in &tr {
+            if r.arrival >= span {
+                break;
+            }
+            let phase = r.arrival.fract();
+            if phase < 0.5 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > 1.3 * trough as f64,
+            "diurnal modulation invisible: peak {peak} vs trough {trough}"
+        );
+    }
+
+    #[test]
+    fn class_mix_splits_and_default_is_batch() {
+        let mut g = TraceGenerator::new(Profile::named("sst2").unwrap(), 256, 17);
+        let mix = ClassMix { interactive_frac: 0.5, deadline_secs: 0.2 };
+        let tr = g.trace_classed(200, ArrivalProcess::Poisson { rate: 50.0 }, mix);
+        let n_int = tr.iter().filter(|r| r.class.is_interactive()).count();
+        assert!((40..=160).contains(&n_int), "mix 0.5 gave {n_int}/200 interactive");
+        for r in &tr {
+            match r.class {
+                SloClass::Interactive { deadline_secs } => {
+                    assert_eq!(deadline_secs, 0.2);
+                    assert_eq!(r.class.deadline_secs(), Some(0.2));
+                }
+                SloClass::Batch => assert_eq!(r.class.deadline_secs(), None),
+            }
+        }
+
+        // plain trace(): everything on the batch lane
+        let mut g2 = TraceGenerator::new(Profile::named("sst2").unwrap(), 256, 17);
+        let tr2 = g2.trace(20, ArrivalProcess::ClosedLoop);
+        assert!(tr2.iter().all(|r| r.class == SloClass::Batch));
+        assert_eq!(SloClass::default(), SloClass::Batch);
+    }
+
+    #[test]
+    fn parse_arrival_names() {
+        assert!(matches!(
+            ArrivalProcess::parse("closed", 10.0).unwrap(),
+            ArrivalProcess::ClosedLoop
+        ));
+        assert!(matches!(
+            ArrivalProcess::parse("poisson", 10.0).unwrap(),
+            ArrivalProcess::Poisson { rate } if rate == 10.0
+        ));
+        assert!(matches!(
+            ArrivalProcess::parse("bursty", 10.0).unwrap(),
+            ArrivalProcess::Bursty { rate_on, .. } if rate_on == 30.0
+        ));
+        assert!(matches!(
+            ArrivalProcess::parse("diurnal", 10.0).unwrap(),
+            ArrivalProcess::Diurnal { mean_rate, .. } if mean_rate == 10.0
+        ));
+        assert!(ArrivalProcess::parse("nope", 10.0).is_err());
     }
 
     #[test]

@@ -11,7 +11,7 @@ use sida_moe::coordinator::{HashBuilder, Pipeline, PipelineConfig};
 use sida_moe::memory::CostModel;
 use sida_moe::runtime::ModelBundle;
 use sida_moe::testkit::{self, TINY_PROFILE};
-use sida_moe::workload::Request;
+use sida_moe::workload::{Request, SloClass};
 
 fn expert_sim_bytes(b: &ModelBundle) -> usize {
     CostModel::paper_scale(
@@ -121,6 +121,7 @@ fn batched_mode_moves_strictly_fewer_bytes_per_request() {
                 n_tokens: ids.iter().filter(|&&t| t != 0).count(),
                 label: 0,
                 arrival: 0.0,
+                class: SloClass::Batch,
             });
         }
     }

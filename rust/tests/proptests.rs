@@ -309,6 +309,7 @@ fn batcher_exactly_once_in_order() {
                         n_tokens: 2,
                         label: 0,
                         arrival: 0.0,
+                        class: Default::default(),
                     };
                     if b.admit(req) == AdmitOutcome::Rejected {
                         break;

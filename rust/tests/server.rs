@@ -166,7 +166,7 @@ fn concurrent_requests_share_batches() {
     // requests (cross-request batching), and every client still gets a
     // well-formed reply with latency attribution.
     let cfg = ServerConfig {
-        batch: BatchPolicy { max_batch: 6, max_delay_secs: 0.5, capacity: 64 },
+        batch: BatchPolicy { max_batch: 6, max_delay_secs: 0.5, capacity: 64, ..Default::default() },
         ..Default::default()
     };
     let (addr, state, handle) = start_server_with(cfg);
@@ -201,6 +201,62 @@ fn concurrent_requests_share_batches() {
     }
     shutdown(addr);
     handle.join().expect("server thread");
+}
+
+#[test]
+fn interactive_class_round_trips_and_stats_report_slo_counters() {
+    let (addr, _state, handle) = start_server();
+    {
+        let mut c = Client::connect(addr);
+        // a generous deadline: served normally, counted as interactive
+        let resp =
+            c.roundtrip(r#"{"ids": [1, 30, 31, 2], "class": "interactive", "deadline_ms": 5000}"#);
+        assert!(resp.get("label").is_ok(), "interactive request must serve: {resp:?}");
+
+        // unknown class names are a protocol error, not a silent default
+        let err = c.roundtrip(r#"{"ids": [1, 30, 2], "class": "premium"}"#);
+        assert!(
+            err.get("error").unwrap().as_str().unwrap().contains("unknown class"),
+            "bad class must be reported: {err:?}"
+        );
+
+        let stats = c.roundtrip(r#"{"cmd": "stats"}"#);
+        assert_eq!(stats.get("served").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(stats.get("rejected_slo").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(stats.get("shed").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(stats.get("worker_panics").unwrap().as_u64().unwrap(), 0);
+        let att = stats.get("slo_attainment").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&att), "attainment {att} out of range");
+        assert!(stats.get("latency_p99_ms_interactive").unwrap().as_f64().unwrap() > 0.0);
+        assert!(stats.get("latency_p999_ms_interactive").unwrap().as_f64().unwrap() > 0.0);
+    }
+    shutdown(addr);
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn worker_panic_fails_requests_and_shuts_down_instead_of_hanging() {
+    // regression: a panicking batch used to kill the worker thread
+    // silently — every later client hit the 30 s reply timeout while
+    // the accept loop kept admitting.  The worker must now error out
+    // the in-flight requests, flip shutdown, and surface the panic in
+    // stats.
+    use std::sync::atomic::Ordering;
+    let (addr, state, handle) = start_server();
+    state.inject_panic.store(true, Ordering::SeqCst);
+    {
+        let mut c = Client::connect(addr);
+        let resp = c.roundtrip(r#"{"ids": [1, 50, 51, 2]}"#);
+        let err = resp.get("error").unwrap().as_str().unwrap().to_string();
+        assert!(
+            err.contains("panicked"),
+            "client must see the worker panic, got: {err}"
+        );
+    }
+    handle.join().expect("server thread must exit after a worker panic");
+    assert!(state.shutdown.load(Ordering::SeqCst), "panic must flip shutdown");
+    assert_eq!(state.worker_panics.load(Ordering::SeqCst), 1);
+    assert_eq!(state.served.load(Ordering::SeqCst), 0);
 }
 
 #[test]

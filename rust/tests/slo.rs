@@ -1,0 +1,227 @@
+//! SLO-aware open-loop serving tests: replay accounting invariants
+//! under load and overload, per-class latency bookkeeping, and
+//! exactly-once delivery through the two-lane batch former — all
+//! hermetic (synthetic bundle, no artifacts).
+//!
+//! These tests are invariant-based, not absolute-timing-based: they
+//! assert that every trace request lands in exactly one outcome bucket
+//! and that the per-class histograms partition the served set, never
+//! that a particular request met a wall-clock deadline (CI machines
+//! are too noisy for that — the timing shape is the `fig_slo` bench's
+//! job).
+
+use sida_moe::coordinator::{replay_open_loop, BatchFormer, BatchPolicy, Pipeline, PipelineConfig};
+use sida_moe::testkit::{self, TINY_PROFILE};
+use sida_moe::util::rng::Rng;
+use sida_moe::workload::{ArrivalProcess, ClassMix, Request, SloClass};
+
+fn pipeline() -> Pipeline {
+    let bundle = testkit::tiny_bundle();
+    let cfg = PipelineConfig { want_cls: true, ..Default::default() };
+    Pipeline::new(bundle, TINY_PROFILE, cfg).unwrap()
+}
+
+/// Every trace request ends in exactly one bucket, whatever the load:
+/// `served + shed + rejected + rejected_slo == trace.len()`.
+#[test]
+fn open_loop_accounting_is_exact_under_overload() {
+    let p = pipeline();
+    let bundle = testkit::tiny_bundle();
+    // a burst storm into a tiny queue with a sub-millisecond deadline:
+    // capacity rejects, SLO rejects and sheds all plausible at once
+    let mix = ClassMix { interactive_frac: 0.5, deadline_secs: 0.0005 };
+    let trace = testkit::tiny_trace_classed(
+        &bundle,
+        24,
+        3,
+        ArrivalProcess::Bursty { rate_on: 5_000.0, mean_on_secs: 0.01, mean_off_secs: 0.01 },
+        mix,
+    );
+    let interactive_offered =
+        trace.iter().filter(|r| r.class.is_interactive()).count() as u64;
+    let report = replay_open_loop(&p, &trace, 4).unwrap();
+    let stats = report.outcome.stats;
+
+    let total =
+        stats.requests as u64 + report.shed + report.rejected + report.rejected_slo;
+    assert_eq!(
+        total,
+        trace.len() as u64,
+        "every request must land in exactly one bucket \
+         (served {} + shed {} + rejected {} + rejected_slo {})",
+        stats.requests, report.shed, report.rejected, report.rejected_slo
+    );
+    // report and stats must tell the same story
+    assert_eq!(stats.shed, report.shed);
+    assert_eq!(stats.rejected, report.rejected);
+    assert_eq!(stats.rejected_slo, report.rejected_slo);
+    assert_eq!(stats.requests as usize, report.outcome.per_request.len());
+
+    // the per-class histograms partition the served set
+    assert_eq!(
+        stats.latency_interactive.len() + stats.latency_batch.len(),
+        stats.requests as usize,
+        "per-class histograms must partition served requests"
+    );
+    // attainment denominates over OFFERED interactive traffic: shed and
+    // rejected interactive requests count against it
+    assert_eq!(stats.interactive_offered, interactive_offered);
+    assert!(stats.slo_attained <= interactive_offered);
+    if let Some(att) = stats.slo_attainment() {
+        assert!((0.0..=1.0).contains(&att), "attainment {att} out of range");
+    }
+    // only interactive requests can be shed or SLO-rejected
+    assert!(report.shed + report.rejected_slo <= interactive_offered);
+}
+
+#[test]
+fn open_loop_low_load_serves_everything_within_slo() {
+    let p = pipeline();
+    let bundle = testkit::tiny_bundle();
+    // arrivals far apart, a deadline of 10 s: nothing can drop
+    let mix = ClassMix { interactive_frac: 0.5, deadline_secs: 10.0 };
+    let trace = testkit::tiny_trace_classed(
+        &bundle,
+        6,
+        5,
+        ArrivalProcess::Poisson { rate: 200.0 },
+        mix,
+    );
+    let report = replay_open_loop(&p, &trace, 64).unwrap();
+    let mut stats = report.outcome.stats;
+    assert_eq!(stats.requests as usize, trace.len());
+    assert_eq!(report.shed + report.rejected + report.rejected_slo, 0);
+    assert_eq!(
+        stats.slo_attainment(),
+        (stats.interactive_offered > 0).then_some(1.0),
+        "a 10 s deadline at idle load must attain fully"
+    );
+    assert!(stats.latency.p999() >= stats.latency.p50());
+}
+
+#[test]
+fn classed_trace_respects_the_mix() {
+    let bundle = testkit::tiny_bundle();
+    let all_int = testkit::tiny_trace_classed(
+        &bundle, 16, 9, ArrivalProcess::ClosedLoop,
+        ClassMix { interactive_frac: 1.0, deadline_secs: 0.1 },
+    );
+    assert!(all_int.iter().all(|r| r.class.is_interactive()));
+    assert!(all_int
+        .iter()
+        .all(|r| r.class.deadline_secs() == Some(0.1)));
+    let all_batch = testkit::tiny_trace_classed(
+        &bundle, 16, 9, ArrivalProcess::ClosedLoop, ClassMix::batch_only(),
+    );
+    assert!(all_batch.iter().all(|r| r.class == SloClass::Batch));
+    let mixed = testkit::tiny_trace_classed(
+        &bundle, 64, 9, ArrivalProcess::ClosedLoop,
+        ClassMix { interactive_frac: 0.5, deadline_secs: 0.1 },
+    );
+    let n_int = mixed.iter().filter(|r| r.class.is_interactive()).count();
+    assert!(
+        (8..=56).contains(&n_int),
+        "a 50/50 mix over 64 requests produced {n_int} interactive"
+    );
+}
+
+/// Randomized two-lane former property: under arbitrary interleavings
+/// of admits and cuts, every admitted request is delivered exactly once
+/// (served or shed), FIFO order holds within each lane, and only
+/// interactive requests are ever shed.
+#[test]
+fn two_lane_former_delivers_exactly_once_under_random_interleaving() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(0x5EED ^ seed);
+        let mut f: BatchFormer<()> = BatchFormer::new(BatchPolicy {
+            max_batch: 1 + rng.usize_below(4),
+            max_delay_secs: 0.001,
+            capacity: 64,
+            batch_aging_cuts: 1 + rng.usize_below(3) as u32,
+        });
+        let mut admitted_ids = Vec::new();
+        let mut served = Vec::new();
+        let mut served_interactive = Vec::new();
+        let mut served_batch = Vec::new();
+        let mut shed = Vec::new();
+        let mut next_id = 0u64;
+        let mut now = 0.0f64;
+        for _ in 0..120 {
+            now += 0.0003;
+            if rng.bool(0.6) {
+                // admit: half interactive with a deadline that may or
+                // may not blow before the next cut
+                let class = if rng.bool(0.5) {
+                    SloClass::Interactive { deadline_secs: rng.f64() * 0.002 }
+                } else {
+                    SloClass::Batch
+                };
+                let req = Request {
+                    id: next_id,
+                    ids: vec![1, 5, 2, 0],
+                    n_tokens: 3,
+                    label: 0,
+                    arrival: now,
+                    class,
+                };
+                next_id += 1;
+                if f.admit(req, (), now) == sida_moe::coordinator::AdmitOutcome::Admitted {
+                    admitted_ids.push(next_id - 1);
+                }
+            }
+            if rng.bool(0.4) {
+                if let Some(b) = f.form_now(now) {
+                    for (r, _) in &b.requests {
+                        served.push(r.id);
+                        if r.class.is_interactive() {
+                            served_interactive.push(r.id);
+                        } else {
+                            served_batch.push(r.id);
+                        }
+                    }
+                    for (r, _) in &b.shed {
+                        assert!(
+                            r.class.is_interactive(),
+                            "only interactive requests may be shed"
+                        );
+                        shed.push(r.id);
+                    }
+                }
+            }
+        }
+        // drain
+        now += 1.0;
+        while let Some(b) = f.form_now(now) {
+            for (r, _) in &b.requests {
+                served.push(r.id);
+                if r.class.is_interactive() {
+                    served_interactive.push(r.id);
+                } else {
+                    served_batch.push(r.id);
+                }
+            }
+            for (r, _) in &b.shed {
+                shed.push(r.id);
+            }
+        }
+        let mut delivered = served.clone();
+        delivered.extend(&shed);
+        delivered.sort_unstable();
+        let mut expected = admitted_ids.clone();
+        expected.sort_unstable();
+        assert_eq!(
+            delivered, expected,
+            "seed {seed}: every admitted request exactly once (served or shed)"
+        );
+        assert_eq!(f.shed, shed.len() as u64);
+        // FIFO holds within each lane: ids are assigned in admission
+        // order, so the served sequence restricted to one class must be
+        // increasing (the lanes may interleave, each lane may not)
+        for class_ids in [&served_interactive, &served_batch] {
+            assert!(
+                class_ids.windows(2).all(|w| w[0] < w[1]),
+                "seed {seed}: a lane served out of admission order: {class_ids:?}"
+            );
+        }
+    }
+}
