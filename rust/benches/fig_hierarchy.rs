@@ -95,6 +95,12 @@ fn main() -> anyhow::Result<()> {
             ("promotions_from_ram", num(h.promotions_from_ram as f64)),
             ("demotions_to_ram", num(h.demotions_to_ram as f64)),
             ("demotions_to_ssd", num(h.demotions_to_ssd as f64)),
+            // measured wall-clock timeline of the on-disk store (zero
+            // here: this bench runs store-less; fig_store exercises it)
+            ("measured_ssd_read_secs", num(h.measured_ssd_read_secs)),
+            ("measured_ssd_write_secs", num(h.measured_ssd_write_secs)),
+            ("store_bytes_on_disk", num(h.store_bytes_on_disk as f64)),
+            ("integrity_failures", num(h.integrity_failures as f64)),
             ("requests", num(st.requests as f64)),
             ("dataset", s(TINY_PROFILE)),
         ]));

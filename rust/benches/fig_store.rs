@@ -1,0 +1,137 @@
+//! fig_store — the on-disk expert store: restart-warm serving with
+//! integrity checking (DESIGN.md §2.6).
+//!
+//! Two phases over the same trace at a tight device budget with no
+//! host-RAM window (every eviction falls to SSD, so the store carries
+//! real traffic):
+//!
+//!  * **cold** — a fresh store directory.  Every expert is fabricated
+//!    from the bundle once and written through to disk; SSD promotions
+//!    miss the store (nothing is on disk yet) and count as
+//!    refabrications.
+//!  * **warm** — a second pipeline reopens the same directory.  The
+//!    manifest pre-seeds the ledger's SSD tier, so promotions do real
+//!    file reads with hash verification instead of refabricating.
+//!
+//! The CI gates: the warm phase must hit the store (`store_hits > 0`)
+//! with **zero** refabrications and **zero** integrity failures, and its
+//! classification outputs must be bit-identical to the cold phase (a
+//! verified blob stages the same bytes the bundle would).  Emits
+//! `BENCH_store.json` with both the modeled SSD timeline
+//! (`ssd_promote_secs`) and the measured one
+//! (`measured_ssd_read_secs` / `measured_ssd_write_secs`).  Hermetic:
+//! synthetic testkit bundle + a TempDir store, removed on exit.
+
+use sida_moe::bench_support as bs;
+use sida_moe::coordinator::{Pipeline, PipelineConfig, ServeOutcome};
+use sida_moe::metrics::Table;
+use sida_moe::testkit::{self, SynthSpec, TINY_PROFILE};
+use sida_moe::util::json::{num, obj, s, Json};
+
+fn preds(out: &ServeOutcome) -> Vec<(u64, Option<usize>)> {
+    let mut v: Vec<_> = out.per_request.iter().map(|r| (r.id, r.cls_pred)).collect();
+    v.sort_by_key(|(id, _)| *id);
+    v
+}
+
+fn main() -> anyhow::Result<()> {
+    bs::banner(
+        "fig_store: on-disk expert store — restart-warm serving",
+        "SSD-tier experts are real files; a reopened store serves warm with \
+         verified reads and no refabrication (paper §6)",
+    );
+    let bundle = testkit::bundle(&SynthSpec::default().two_moe_layers())?;
+    let n = bs::n_requests(16);
+    let requests = testkit::tiny_trace(&bundle, n, 7);
+    let sim_expert = bs::sim_expert_bytes(&bundle)?;
+
+    let dir = std::env::temp_dir().join(format!("sida_fig_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = || PipelineConfig {
+        k_used: 2,
+        // tight device tier + no RAM window: evictions fall straight to
+        // SSD, so the store sees both writes and promotion reads
+        budget_sim_bytes: 4 * sim_expert + 1024,
+        ram_budget_bytes: 0,
+        want_cls: true,
+        // determinism: every fetch on the inference thread, one lane
+        prefetch: false,
+        pool_threads: 1,
+        store_dir: dir.display().to_string(),
+        ..Default::default()
+    };
+
+    let mut t = Table::new(
+        "fig_store — cold populate vs restart-warm reopen (same trace)",
+        &[
+            "phase", "store hits", "refab", "bad blobs", "bytes on disk",
+            "ssd promote s (modeled)", "ssd read/write s (measured)",
+        ],
+    );
+    let mut j = bs::BenchJson::new("store");
+    let mut phase_stats = Vec::new();
+    for phase in ["cold", "warm"] {
+        // each phase builds its pipeline from scratch: the warm one only
+        // knows about the cold phase through the reopened directory
+        let pipeline = Pipeline::new(bundle.clone(), TINY_PROFILE, cfg())?;
+        let out = pipeline.serve(&requests)?;
+        let h = out.stats.hierarchy.clone();
+        t.row(vec![
+            phase.into(),
+            h.store_hits.to_string(),
+            h.refabrications.to_string(),
+            h.integrity_failures.to_string(),
+            h.store_bytes_on_disk.to_string(),
+            format!("{:.4}", h.ssd_promote_secs),
+            format!("{:.6}/{:.6}", h.measured_ssd_read_secs, h.measured_ssd_write_secs),
+        ]);
+        j.push(obj(vec![
+            ("phase", s(phase)),
+            ("store_hits", num(h.store_hits as f64)),
+            ("store_misses", num(h.store_misses as f64)),
+            ("store_writes", num(h.store_writes as f64)),
+            ("refabrications", num(h.refabrications as f64)),
+            ("integrity_failures", num(h.integrity_failures as f64)),
+            ("store_bytes_on_disk", num(h.store_bytes_on_disk as f64)),
+            ("ssd_promote_secs", num(h.ssd_promote_secs)),
+            ("measured_ssd_read_secs", num(h.measured_ssd_read_secs)),
+            ("measured_ssd_write_secs", num(h.measured_ssd_write_secs)),
+            ("promotions_from_ssd", num(h.promotions_from_ssd as f64)),
+            ("requests", num(out.stats.requests as f64)),
+            ("dataset", s(TINY_PROFILE)),
+        ]));
+        phase_stats.push((h, preds(&out)));
+    }
+    t.print();
+    t.save_csv(&bs::csv_path("fig_store"))?;
+
+    let (cold, cold_preds) = &phase_stats[0];
+    let (warm, warm_preds) = &phase_stats[1];
+    // the gates: a reopened store serves warm (real verified reads, no
+    // refabrication) and changes nothing about what the model computes
+    let warm_hits = warm.store_hits > 0 && warm.promotions_from_ssd > 0;
+    let no_refab = warm.refabrications == 0;
+    let intact = cold.integrity_failures == 0 && warm.integrity_failures == 0;
+    let identical = cold_preds == warm_preds && !cold_preds.is_empty();
+    println!(
+        "store check: reopened store warm-hits: {}; warm refabrications == 0: {}; \
+         integrity failures == 0: {}; cold/warm outputs bit-identical: {}",
+        if warm_hits { "PASS" } else { "FAIL" },
+        if no_refab { "PASS" } else { "FAIL" },
+        if intact { "PASS" } else { "FAIL" },
+        if identical { "PASS" } else { "FAIL" }
+    );
+    j.push(obj(vec![
+        ("warm_store_hits_nonzero", Json::Bool(warm_hits)),
+        ("warm_zero_refabrications", Json::Bool(no_refab)),
+        ("zero_integrity_failures", Json::Bool(intact)),
+        ("cold_warm_outputs_identical", Json::Bool(identical)),
+    ]));
+    let path = j.save()?;
+    println!("perf-trajectory JSON: {}", path.display());
+    let _ = std::fs::remove_dir_all(&dir);
+    if !(warm_hits && no_refab && intact && identical) {
+        std::process::exit(1);
+    }
+    Ok(())
+}

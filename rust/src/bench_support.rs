@@ -85,6 +85,11 @@ pub struct RunSpec {
     pub devices: usize,
     /// hottest experts per MoE layer replicated across the fleet
     pub replicate_top: usize,
+    /// on-disk expert store directory ("" = store-less, modeled SSD
+    /// only); reopening the same dir serves restart-warm
+    pub store_dir: String,
+    /// on-disk store budget in real bytes (0 = unbounded)
+    pub ssd_budget_bytes: usize,
     pub seed: u64,
 }
 
@@ -106,6 +111,8 @@ impl RunSpec {
             pool_threads: 0,
             devices: 1,
             replicate_top: 1,
+            store_dir: String::new(),
+            ssd_budget_bytes: 0,
             seed: 0,
         }
     }
@@ -179,6 +186,18 @@ impl RunSpec {
         self.prefetch = v;
         self
     }
+
+    /// On-disk expert store directory (`--store-dir`).
+    pub fn store(mut self, dir: &str) -> Self {
+        self.store_dir = dir.to_string();
+        self
+    }
+
+    /// On-disk store budget in real bytes (`--ssd-budget`).
+    pub fn ssd_budget(mut self, bytes: usize) -> Self {
+        self.ssd_budget_bytes = bytes;
+        self
+    }
 }
 
 /// Run one (method, model, dataset) cell and return the outcome.
@@ -203,6 +222,8 @@ pub fn run_method(
                 policy: spec.policy.clone(),
                 ram_budget_bytes: spec.ram_budget_sim_bytes,
                 ram_policy: spec.ram_policy.clone(),
+                store_dir: spec.store_dir.clone(),
+                ssd_budget_bytes: spec.ssd_budget_bytes,
                 real_sleep: spec.real_sleep,
                 prefetch: spec.prefetch,
                 queue_depth: 8,

@@ -28,6 +28,14 @@ pub struct ServeConfig {
     pub ram_budget_gb: f64,
     /// the RAM window's own eviction policy (`--ram-policy`)
     pub ram_policy: String,
+    /// on-disk expert store directory (`--store-dir`): SSD-tier
+    /// promotions do real, hash-verified blob reads and demotions write
+    /// blobs; reopening an existing directory pre-seeds the SSD tier so
+    /// a restarted process serves warm.  Empty = modeled-only SSD tier.
+    pub store_dir: String,
+    /// byte budget of the on-disk store in GB (`--ssd-budget`, 0 =
+    /// unbounded): overflow reclaims oldest-written blobs first
+    pub ssd_budget_gb: f64,
     /// hash experts consumed per token (paper: 1 for sst2, 3 otherwise)
     pub k_used: usize,
     /// sleep modeled transfer cost on the critical path
@@ -81,6 +89,8 @@ impl Default for ServeConfig {
             policy: "fifo".into(),
             ram_budget_gb: 64.0,
             ram_policy: "fifo".into(),
+            store_dir: String::new(),
+            ssd_budget_gb: 0.0,
             k_used: 1,
             real_sleep: false,
             prefetch: true,
@@ -115,6 +125,8 @@ impl ServeConfig {
                 "policy" => cfg.policy = val.as_str()?.to_string(),
                 "ram_budget_gb" => cfg.ram_budget_gb = val.as_f64()?,
                 "ram_policy" => cfg.ram_policy = val.as_str()?.to_string(),
+                "store_dir" => cfg.store_dir = val.as_str()?.to_string(),
+                "ssd_budget_gb" => cfg.ssd_budget_gb = val.as_f64()?,
                 "k_used" => cfg.k_used = val.as_usize()?,
                 "real_sleep" => cfg.real_sleep = val.as_bool()?,
                 "prefetch" => cfg.prefetch = val.as_bool()?,
@@ -170,6 +182,14 @@ impl ServeConfig {
         }
         if let Some(v) = args.get("ram-policy") {
             self.ram_policy = v.to_string();
+        }
+        if let Some(v) = args.get("store-dir") {
+            self.store_dir = v.to_string();
+        }
+        if let Some(v) = args.get("ssd-budget") {
+            if let Ok(x) = v.parse() {
+                self.ssd_budget_gb = x;
+            }
         }
         if let Some(v) = args.get("k-used") {
             if let Ok(x) = v.parse() {
@@ -251,6 +271,11 @@ impl ServeConfig {
         (self.ram_budget_gb * 1e9) as usize
     }
 
+    /// On-disk store budget in bytes (0 = unbounded).
+    pub fn ssd_budget_bytes(&self) -> usize {
+        (self.ssd_budget_gb * 1e9) as usize
+    }
+
     /// The paper's per-dataset k: top-1 for SST2, top-3 for MRPC/MultiRC.
     pub fn paper_k_for(dataset: &str) -> usize {
         if dataset == "sst2" {
@@ -307,6 +332,17 @@ mod tests {
         let d = ServeConfig::default();
         assert!((d.ram_budget_gb - 64.0).abs() < 1e-9);
         assert_eq!(d.ram_policy, "fifo");
+    }
+
+    #[test]
+    fn store_keys_parse_with_defaults() {
+        let j = Json::parse(r#"{"store_dir":"/tmp/sida-store","ssd_budget_gb":0.5}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.store_dir, "/tmp/sida-store");
+        assert_eq!(c.ssd_budget_bytes(), 500_000_000);
+        let d = ServeConfig::default();
+        assert!(d.store_dir.is_empty(), "modeled-only SSD tier by default");
+        assert_eq!(d.ssd_budget_bytes(), 0, "0 = unbounded");
     }
 
     #[test]

@@ -74,6 +74,17 @@ pub struct PipelineConfig {
     pub ram_budget_bytes: usize,
     /// the RAM window's own eviction policy (`--ram-policy`)
     pub ram_policy: String,
+    /// on-disk expert store directory (`--store-dir`): the SSD tier
+    /// becomes a real, content-addressed blob store — demotions write
+    /// hash-named blobs, SSD promotions read + verify them on a
+    /// measured timeline beside the modeled one, and reopening an
+    /// existing directory pre-seeds the ledger so a restarted process
+    /// serves warm.  Empty = modeled-only SSD tier.  Single-device
+    /// serving only (cluster devices run store-less).
+    pub store_dir: String,
+    /// on-disk store byte budget (`--ssd-budget`, 0 = unbounded):
+    /// overflow reclaims oldest-written blobs first
+    pub ssd_budget_bytes: usize,
     /// sleep modeled transfer time on the critical path
     pub real_sleep: bool,
     /// run the prefetch stages (request-ahead + layer-ahead warmer);
@@ -109,6 +120,8 @@ impl Default for PipelineConfig {
             policy: "fifo".into(),
             ram_budget_bytes: crate::memory::DEFAULT_RAM_BUDGET,
             ram_policy: "fifo".into(),
+            store_dir: String::new(),
+            ssd_budget_bytes: 0,
             real_sleep: false,
             prefetch: true,
             queue_depth: 8,
@@ -172,13 +185,27 @@ impl Pipeline {
         let runner = Arc::new(ModelRunner::with_pool(bundle.clone(), profile, pool)?);
         let real_expert_bytes = bundle.weights.expert_bytes(bundle.topology.moe_blocks[0], 0)?;
         let cost = CostModel::paper_scale(real_expert_bytes).with_real_sleep(cfg.real_sleep);
-        let cache = Arc::new(SharedExpertCache::new(ExpertCache::with_hierarchy(
+        let mut core = ExpertCache::with_hierarchy(
             cfg.budget_sim_bytes,
             cost,
             make_policy(&cfg.policy)?,
             cfg.ram_budget_bytes,
             make_policy(&cfg.ram_policy)?,
-        )));
+        );
+        if !cfg.store_dir.is_empty() {
+            if cfg.devices > 1 {
+                anyhow::bail!(
+                    "--store-dir applies to single-device serving \
+                     (cluster devices run store-less)"
+                );
+            }
+            let store = crate::memory::ExpertStore::open(
+                std::path::Path::new(&cfg.store_dir),
+                cfg.ssd_budget_bytes as u64,
+            )?;
+            core.attach_store(crate::experts::bind_store(&bundle, store));
+        }
+        let cache = Arc::new(SharedExpertCache::new(core));
         let cluster = if cfg.devices > 1 {
             Some(Arc::new(ClusterRouter::new(
                 &bundle,

@@ -37,8 +37,8 @@ use anyhow::{bail, Result};
 use crate::experts::policy::EvictionPolicy;
 use crate::experts::ExpertKey;
 use crate::memory::{
-    CostModel, DevicePool, HierarchyStats, ReserveOutcome, ResidencyLedger, Tier,
-    DEFAULT_RAM_BUDGET,
+    CostModel, DevicePool, ExpertStore, HierarchyStats, ReadOutcome, ReserveOutcome,
+    ResidencyLedger, Tier, DEFAULT_RAM_BUDGET, PAYLOAD_HEADER_BYTES,
 };
 use crate::runtime::DeviceBuffer;
 
@@ -118,6 +118,20 @@ impl fmt::Display for CacheStats {
     }
 }
 
+/// The cache's handle on the on-disk SSD tier: the store itself plus
+/// the two bundle-capturing closures that cross the experts/runtime
+/// boundary — `spill` serializes an expert's canonical payload from the
+/// host weights (demotion writes, fabrication write-through) and
+/// `stage` turns a *verified* payload back into device buffers
+/// (promotion reads).  Build one with [`super::bind_store`]; `Clone` is
+/// cheap (three `Arc`s).
+#[derive(Clone)]
+pub struct StoreBinding {
+    pub store: Arc<ExpertStore>,
+    pub spill: Arc<dyn Fn(ExpertKey) -> Result<Vec<u8>> + Send + Sync>,
+    pub stage: Arc<dyn Fn(ExpertKey, &[u8]) -> Result<[DeviceBuffer; 4]> + Send + Sync>,
+}
+
 /// Outcome of [`ExpertCache::try_ensure`].
 pub enum EnsureOutcome {
     Resident {
@@ -160,6 +174,11 @@ pub struct ExpertCache {
     /// mutability so pins work through `&self` (the shared cache pins
     /// under a read lock, concurrent with other readers).
     pinned: Mutex<HashMap<ExpertKey, u32>>,
+    /// the on-disk SSD tier, when attached (`--store-dir`): SSD
+    /// promotions read (and verify) real blobs, demote spills and
+    /// fabrications write them — all on a measured timeline beside the
+    /// ledger's modeled one
+    store: Option<StoreBinding>,
     stats: CacheStats,
 }
 
@@ -195,8 +214,27 @@ impl ExpertCache {
             created: std::time::Instant::now(),
             prefetch_busy_until: 0.0,
             pinned: Mutex::new(HashMap::new()),
+            store: None,
             stats: CacheStats::default(),
         }
+    }
+
+    /// Attach the on-disk SSD tier.  Every key already in the store
+    /// (a reopened `--store-dir`) pre-seeds the ledger's SSD tier, so a
+    /// restarted process promotes warm from disk instead of
+    /// re-fabricating — blob payload bytes convert to simulated scale
+    /// minus the fixed header, matching what a live demotion records.
+    pub fn attach_store(&mut self, binding: StoreBinding) {
+        for (key, payload_bytes) in binding.store.keys_with_bytes() {
+            let real = (payload_bytes as usize).saturating_sub(PAYLOAD_HEADER_BYTES);
+            self.ledger.seed_ssd(key, self.cost.sim_bytes(real));
+        }
+        self.store = Some(binding);
+    }
+
+    /// The attached on-disk store, if any (diagnostics/tests).
+    pub fn store(&self) -> Option<&StoreBinding> {
+        self.store.as_ref()
     }
 
     pub fn cost_model(&self) -> &CostModel {
@@ -213,9 +251,24 @@ impl ExpertCache {
 
     /// Snapshot of the tier ladder: per-tier occupancy, promotions per
     /// hop, and the ladder seconds attribution of
-    /// [`CacheStats::modeled_transfer_secs`].
+    /// [`CacheStats::modeled_transfer_secs`] — with the on-disk store's
+    /// measured timeline (real read/write seconds, bytes on disk,
+    /// integrity counters) folded in when a store is attached.
     pub fn hierarchy_stats(&self) -> HierarchyStats {
-        self.ledger.stats()
+        let mut h = self.ledger.stats();
+        if let Some(binding) = &self.store {
+            let s = binding.store.stats();
+            h.measured_ssd_read_secs = s.read_secs;
+            h.measured_ssd_write_secs = s.write_secs;
+            h.store_bytes_on_disk = s.bytes_on_disk as usize;
+            h.integrity_failures = s.integrity_failures;
+            h.store_hits = s.reads;
+            h.store_misses = s.misses;
+            h.refabrications = s.refabrications;
+            h.store_writes = s.writes;
+            h.store_reclaimed = s.reclaimed;
+        }
+        h
     }
 
     /// The modeled host-RAM window below this cache's device tier.
@@ -235,6 +288,9 @@ impl ExpertCache {
     pub fn reset_stats(&mut self) {
         self.stats = CacheStats::default();
         self.ledger.reset_stats();
+        if let Some(binding) = &self.store {
+            binding.store.reset_stats();
+        }
         self.pool.reset_peak();
         // restart the virtual prefetch link: a measured run must not
         // inherit backlog (or spare window) from warmup traffic
@@ -355,6 +411,10 @@ impl ExpertCache {
         if sim_bytes > self.pool.budget().saturating_sub(pinned_bytes) {
             return Ok(EnsureOutcome::AllPinned);
         }
+        // where the expert sits BEFORE this promotion churns the tiers:
+        // an SSD-deep key with a store attached is served by a real,
+        // verified blob read below
+        let from_tier = self.ledger.tier_of(&key);
         while !self.pool.fits(sim_bytes) {
             match self.policy.victim(&pinned) {
                 Some(victim) => {
@@ -362,14 +422,17 @@ impl ExpertCache {
                     self.resident.remove(&victim);
                     // the eviction hook: the *actual* policy-chosen
                     // victim demotes down the §6 ladder, so the ledger
-                    // can never drift from the cache's eviction order
-                    self.ledger.demote(victim);
+                    // can never drift from the cache's eviction order —
+                    // and every key that lands on SSD spills its blob
+                    // to the on-disk store
+                    let spilled = self.ledger.demote(victim);
+                    self.spill_to_store(&spilled);
                     self.stats.evictions += 1;
                 }
                 None => return Ok(EnsureOutcome::AllPinned),
             }
         }
-        let parts = fetch()?;
+        let parts = self.fetch_parts(key, from_tier, fetch)?;
         match self.pool.reserve(key, sim_bytes) {
             ReserveOutcome::Ok => {}
             other => bail!("pool reserve failed unexpectedly: {other:?}"),
@@ -405,6 +468,68 @@ impl ExpertCache {
             self.stats.overlapped_transfer_secs += credit;
         }
         Ok(EnsureOutcome::Resident { expert: arc, hit: false, transfer_secs: secs })
+    }
+
+    /// Produce the staged parts for a miss.  Without a store this is the
+    /// caller's `fetch` (host bundle staging).  With a store attached,
+    /// an SSD-tier promotion first tries a real on-disk read: a blob
+    /// that verifies (length + content hash) stages straight from its
+    /// payload; `Corrupt`/`Miss`/an unstageable payload fall back to
+    /// bundle re-fabrication (counted).  Every fabrication writes its
+    /// blob through to the store so a restarted process — and end-of-run
+    /// residents that never demoted to SSD — can promote warm.
+    fn fetch_parts<F>(&self, key: ExpertKey, from_tier: Tier, fetch: F) -> Result<[DeviceBuffer; 4]>
+    where
+        F: FnOnce() -> Result<[DeviceBuffer; 4]>,
+    {
+        let Some(binding) = self.store.clone() else {
+            return fetch();
+        };
+        if from_tier == Tier::Ssd {
+            match binding.store.get(&key) {
+                ReadOutcome::Hit(payload) => match (binding.stage)(key, &payload) {
+                    Ok(parts) => return Ok(parts),
+                    Err(err) => {
+                        log::warn!(
+                            "expert store: staging verified blob for {key:?} failed \
+                             ({err:#}); re-fabricating from the bundle"
+                        );
+                        binding.store.reject(&key);
+                    }
+                },
+                ReadOutcome::Corrupt | ReadOutcome::Miss => {}
+            }
+            binding.store.note_refabrication();
+        }
+        let parts = fetch()?;
+        // write-through: content addressing makes re-puts of unchanged
+        // experts no-ops, and a failed write degrades the store (a
+        // future cold miss), never the answer
+        match (binding.spill)(key) {
+            Ok(payload) => {
+                if let Err(err) = binding.store.put(key, &payload) {
+                    log::warn!("expert store: write-through for {key:?} failed: {err:#}");
+                }
+            }
+            Err(err) => log::warn!("expert store: serializing {key:?} failed: {err:#}"),
+        }
+        Ok(parts)
+    }
+
+    /// Write the blobs of keys that just landed on the ledger's SSD tier
+    /// (the spill hook of [`crate::memory::ResidencyLedger::demote`]).
+    fn spill_to_store(&self, keys: &[ExpertKey]) {
+        let Some(binding) = &self.store else { return };
+        for key in keys {
+            match (binding.spill)(*key) {
+                Ok(payload) => {
+                    if let Err(err) = binding.store.put(*key, &payload) {
+                        log::warn!("expert store: spill of {key:?} failed: {err:#}");
+                    }
+                }
+                Err(err) => log::warn!("expert store: serializing {key:?} failed: {err:#}"),
+            }
+        }
     }
 
     /// [`ExpertCache::try_ensure`] for single-owner callers: a fully
@@ -443,7 +568,8 @@ impl ExpertCache {
         if self.resident.remove(key).is_some() {
             self.pool.release(key);
             self.policy.on_evict(*key);
-            self.ledger.demote(*key);
+            let spilled = self.ledger.demote(*key);
+            self.spill_to_store(&spilled);
         }
     }
 

@@ -21,7 +21,7 @@ pub mod policy;
 pub mod prefetch;
 pub mod shared;
 
-pub use cache::{CacheStats, EnsureOutcome, ExpertCache, ResidentExpert};
+pub use cache::{CacheStats, EnsureOutcome, ExpertCache, ResidentExpert, StoreBinding};
 pub use prefetch::{
     plan_prefetch, plan_prefetch_layer, plan_prefetch_union, predicted_expert_counts,
     PlannedFetch,
@@ -40,5 +40,40 @@ pub struct ExpertKey {
 impl ExpertKey {
     pub fn new(block: usize, expert: usize) -> Self {
         ExpertKey { block, expert }
+    }
+}
+
+/// Bind an on-disk [`crate::memory::ExpertStore`] to a model bundle:
+/// the [`StoreBinding`] a cache attaches via
+/// [`ExpertCache::attach_store`] / [`SharedExpertCache::attach_store`].
+/// `spill` serializes the canonical payload from the host
+/// [`crate::runtime::WeightStore`] (the authoritative copy), `stage`
+/// turns a verified payload back into device buffers — so a warm
+/// promotion is bit-identical to a bundle fetch.
+pub fn bind_store(
+    bundle: &crate::runtime::ModelBundle,
+    store: std::sync::Arc<crate::memory::ExpertStore>,
+) -> StoreBinding {
+    let spill = {
+        let weights = bundle.weights.clone();
+        move |key: ExpertKey| weights.expert_payload(key.block, key.expert)
+    };
+    let stage = {
+        let engine = bundle.engine.clone();
+        let weights = bundle.weights.clone();
+        move |key: ExpertKey, payload: &[u8]| {
+            crate::runtime::stage_expert_parts_from_payload(
+                &engine,
+                &weights,
+                key.block,
+                key.expert,
+                payload,
+            )
+        }
+    };
+    StoreBinding {
+        store,
+        spill: std::sync::Arc::new(spill),
+        stage: std::sync::Arc::new(stage),
     }
 }

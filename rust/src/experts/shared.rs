@@ -84,6 +84,13 @@ impl SharedExpertCache {
         self.inner.read().unwrap()
     }
 
+    /// Attach the on-disk SSD tier (see [`ExpertCache::attach_store`]).
+    /// Takes the write lock once; done at construction time, before
+    /// serving traffic.
+    pub fn attach_store(&self, binding: crate::experts::StoreBinding) {
+        self.inner.write().unwrap().attach_store(binding);
+    }
+
     /// Ensure residency without pinning — the prefetch/warmer entry
     /// point.  `fetch` is `Fn` (not `FnOnce`) because a fully pinned
     /// budget makes the call retry.

@@ -77,6 +77,8 @@ fn serve_cli() -> Cli {
         .opt("policy", "eviction policy (fifo|lru|lfu|clock)", "fifo")
         .opt("ram-budget", "host-RAM tier budget (GB); evictions demote here", "64")
         .opt("ram-policy", "RAM-tier eviction policy (fifo|lru|lfu|clock)", "fifo")
+        .opt("store-dir", "on-disk expert store dir (reopen to serve restart-warm)", "")
+        .opt("ssd-budget", "on-disk store budget (GB, 0 = unbounded)", "0")
         .opt("k-used", "hash experts per token (0 = paper default)", "0")
         .opt("batch", "requests per forward pass (1 = paper batch-1; >1 batches cross-request)", "1")
         .opt("pool", "worker threads for expert execution (0 = auto, 1 = sequential)", "0")
@@ -150,6 +152,8 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
                 policy: cfg.policy.clone(),
                 ram_budget_bytes: cfg.ram_budget_bytes(),
                 ram_policy: cfg.ram_policy.clone(),
+                store_dir: cfg.store_dir.clone(),
+                ssd_budget_bytes: cfg.ssd_budget_bytes(),
                 real_sleep: cfg.real_sleep,
                 prefetch: cfg.prefetch,
                 queue_depth: 8,
@@ -290,6 +294,26 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
             fmt_secs(h.ssd_promote_secs)
         ),
     ]);
+    if h.store_hits + h.store_misses + h.store_writes > 0 || h.store_bytes_on_disk > 0 {
+        t.row(vec![
+            "on-disk store".into(),
+            format!(
+                "{} on disk | {} hits | {} refab | {} bad",
+                fmt_bytes(h.store_bytes_on_disk),
+                h.store_hits,
+                h.refabrications,
+                h.integrity_failures
+            ),
+        ]);
+        t.row(vec![
+            "measured ssd secs".into(),
+            format!(
+                "read {} | write {}",
+                fmt_secs(h.measured_ssd_read_secs),
+                fmt_secs(h.measured_ssd_write_secs)
+            ),
+        ]);
+    }
     t.print();
 
     if let Some(cluster) = &stats.cluster {
@@ -325,6 +349,8 @@ fn cmd_server(tail: &[String]) -> Result<()> {
         .opt("budget-gb", "simulated device budget (GB)", "8")
         .opt("ram-budget", "modeled host-RAM tier budget (GB)", "64")
         .opt("ram-policy", "RAM-tier eviction policy (fifo|lru|lfu|clock)", "fifo")
+        .opt("store-dir", "on-disk expert store dir (reopen to serve restart-warm)", "")
+        .opt("ssd-budget", "on-disk store budget (GB, 0 = unbounded)", "0")
         .opt("batch", "max requests coalesced per forward pass", "8")
         .opt("pool", "worker threads for expert execution (0 = auto)", "0")
         .opt("batch-delay-ms", "max time a request waits for its batch to fill", "5")
@@ -345,6 +371,8 @@ fn cmd_server(tail: &[String]) -> Result<()> {
         budget_sim_bytes: (args.get_f64("budget-gb", 8.0) * 1e9) as usize,
         ram_budget_sim_bytes: (args.get_f64("ram-budget", 64.0) * 1e9) as usize,
         ram_policy: args.get_or("ram-policy", "fifo"),
+        store_dir: args.get_or("store-dir", ""),
+        ssd_budget_bytes: (args.get_f64("ssd-budget", 0.0) * 1e9) as usize,
         k_used: k,
         batch: sida_moe::coordinator::BatchPolicy {
             max_batch: args.get_usize("batch", 8).max(1),

@@ -111,6 +111,30 @@ pub struct HierarchyStats {
     pub ram_promote_secs: f64,
     /// modeled seconds charged for SSD -> device promotions
     pub ssd_promote_secs: f64,
+    /// **measured** wall seconds of verified on-disk blob reads (the
+    /// real-I/O companion of `ssd_promote_secs`; zero without a store)
+    pub measured_ssd_read_secs: f64,
+    /// **measured** wall seconds of on-disk blob writes
+    pub measured_ssd_write_secs: f64,
+    /// bytes currently on disk in the expert store (du-style, distinct
+    /// blobs counted once)
+    pub store_bytes_on_disk: usize,
+    /// blob verifications that failed (bad length/hash, or a verified
+    /// payload the cache could not stage) — each fell back to bundle
+    /// re-fabrication, never a wrong answer
+    pub integrity_failures: u64,
+    /// SSD promotions served by a verified on-disk read
+    pub store_hits: u64,
+    /// SSD promotions with no readable blob (never stored, reclaimed,
+    /// or deleted underneath the manifest)
+    pub store_misses: u64,
+    /// SSD promotions that fell back to bundle re-fabrication
+    /// (`store_misses` + failed verifications that re-fetched)
+    pub refabrications: u64,
+    /// blobs written to disk (demote spills + fabrication write-through)
+    pub store_writes: u64,
+    /// store entries reclaimed by the `--ssd-budget` bound
+    pub store_reclaimed: u64,
 }
 
 impl HierarchyStats {
@@ -130,6 +154,18 @@ impl HierarchyStats {
         self.demotions_to_ssd += other.demotions_to_ssd;
         self.ram_promote_secs += other.ram_promote_secs;
         self.ssd_promote_secs += other.ssd_promote_secs;
+        self.measured_ssd_read_secs += other.measured_ssd_read_secs;
+        self.measured_ssd_write_secs += other.measured_ssd_write_secs;
+        // NB: folding store occupancy is only double-count-free because
+        // the on-disk store attaches to single-device serving (cluster
+        // devices run store-less; see the pipeline wiring)
+        self.store_bytes_on_disk += other.store_bytes_on_disk;
+        self.integrity_failures += other.integrity_failures;
+        self.store_hits += other.store_hits;
+        self.store_misses += other.store_misses;
+        self.refabrications += other.refabrications;
+        self.store_writes += other.store_writes;
+        self.store_reclaimed += other.store_reclaimed;
     }
 }
 
@@ -237,9 +273,16 @@ impl ResidencyLedger {
     /// it as the victim, or it was explicitly invalidated): the expert
     /// demotes into the budgeted RAM window, cascading RAM victims —
     /// chosen by the RAM tier's own policy — down to SSD as needed.
-    pub fn demote(&mut self, key: ExpertKey) {
+    ///
+    /// Returns every key that landed on the SSD tier during this call
+    /// (the demoted key itself when it fell straight through, plus any
+    /// cascaded RAM victims) — the cache's spill hook writes exactly
+    /// these to the on-disk store, so blob writes track real SSD
+    /// arrivals and nothing else.
+    pub fn demote(&mut self, key: ExpertKey) -> Vec<ExpertKey> {
+        let mut spilled = Vec::new();
         let Some(bytes) = self.device.remove(&key) else {
-            return; // never promoted through this ledger — nothing to move
+            return spilled; // never promoted through this ledger — nothing to move
         };
         self.device_used -= bytes;
         let prior_transits = {
@@ -250,8 +293,8 @@ impl ResidencyLedger {
         };
         if bytes > self.ram_budget {
             // can never fit the RAM window: straight to SSD
-            self.to_ssd(key, bytes);
-            return;
+            self.to_ssd(key, bytes, &mut spilled);
+            return spilled;
         }
         let no_pins = HashSet::new();
         while self.ram_used + bytes > self.ram_budget {
@@ -259,7 +302,7 @@ impl ResidencyLedger {
                 Some(victim) => {
                     let vb = self.ram.remove(&victim).unwrap_or(0);
                     self.ram_used -= vb;
-                    self.to_ssd(victim, vb);
+                    self.to_ssd(victim, vb, &mut spilled);
                 }
                 None => break, // RAM empty; the budget guard above ensures a fit
             }
@@ -267,8 +310,8 @@ impl ResidencyLedger {
         if self.ram_used + bytes > self.ram_budget {
             // belt-and-braces: a policy that yielded no victim while the
             // window is over budget must not breach it
-            self.to_ssd(key, bytes);
-            return;
+            self.to_ssd(key, bytes, &mut spilled);
+            return spilled;
         }
         self.ram.insert(key, bytes);
         self.ram_used += bytes;
@@ -280,12 +323,28 @@ impl ResidencyLedger {
             self.ram_policy.on_access(key);
         }
         self.counters.demotions_to_ram += 1;
+        spilled
     }
 
-    fn to_ssd(&mut self, key: ExpertKey, bytes: usize) {
+    fn to_ssd(&mut self, key: ExpertKey, bytes: usize, spilled: &mut Vec<ExpertKey>) {
         self.ssd.insert(key, bytes);
         self.ssd_used += bytes;
         self.counters.demotions_to_ssd += 1;
+        spilled.push(key);
+    }
+
+    /// Pre-seed the SSD tier with a key known to be on disk (a reopened
+    /// store's manifest).  Unseen keys are SSD by definition already;
+    /// seeding records their byte occupancy so `ssd_bytes` reflects the
+    /// warm store and promotion removes them tier-consistently.  No-op
+    /// for keys the ledger already tracks anywhere.
+    pub fn seed_ssd(&mut self, key: ExpertKey, bytes: usize) {
+        if self.device.contains_key(&key) || self.ram.contains_key(&key) || self.ssd.contains_key(&key)
+        {
+            return;
+        }
+        self.ssd.insert(key, bytes);
+        self.ssd_used += bytes;
     }
 
     /// Snapshot: counters plus the live per-tier occupancy.
@@ -518,6 +577,28 @@ mod tests {
             }
             last_ssd = Some(ssd);
         }
+    }
+
+    #[test]
+    fn demote_reports_ssd_landings_and_seed_ssd_preserves_invariants() {
+        let mut l = ledger(150);
+        for e in 0..3 {
+            l.promote(k(e), 100);
+        }
+        assert!(l.demote(k(0)).is_empty(), "RAM landing spills nothing");
+        // RAM overflow: the cascaded victim (0) is reported, not key 1
+        assert_eq!(l.demote(k(1)), vec![k(0)]);
+        let mut l0 = ledger(0);
+        l0.promote(k(5), 100);
+        assert_eq!(l0.demote(k(5)), vec![k(5)], "straight-to-SSD reports the key itself");
+        l0.seed_ssd(k(9), 40);
+        assert_eq!(l0.tier_of(&k(9)), Tier::Ssd);
+        assert_eq!(l0.stats().ssd_bytes, 140);
+        l0.seed_ssd(k(5), 77); // already tracked: no-op
+        assert_eq!(l0.stats().ssd_bytes, 140);
+        l0.promote(k(9), 40); // seeded keys promote tier-consistently
+        assert_eq!(l0.stats().ssd_bytes, 100);
+        l0.check_invariants().unwrap();
     }
 
     #[test]

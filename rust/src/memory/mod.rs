@@ -10,7 +10,12 @@
 pub mod cost;
 pub mod hierarchy;
 pub mod pool;
+pub mod store;
 
 pub use cost::{exposed_transfer_secs, CostModel};
 pub use hierarchy::{HierarchyStats, ResidencyLedger, Tier, TierCosts, DEFAULT_RAM_BUDGET};
 pub use pool::{DevicePool, ReserveOutcome};
+pub use store::{
+    decode_expert_payload, encode_expert_payload, fnv1a64, ExpertStore, ReadOutcome, StoreStats,
+    PAYLOAD_HEADER_BYTES,
+};

@@ -1,0 +1,604 @@
+//! On-disk expert blob store: the real device behind the §6 SSD tier.
+//!
+//! The [`crate::memory::ResidencyLedger`] models *where* experts sit;
+//! until this module the SSD tier was bookkeeping only — demotions moved
+//! bytes between hash maps and promotions charged modeled NVMe seconds
+//! that had never met an actual file.  `ExpertStore` is that file layer:
+//! a content-addressed, integrity-hashed blob store the expert cache
+//! writes on demotion and reads (with verification) on promotion, so
+//! SSD promotions carry a **measured** wall-clock timeline alongside the
+//! modeled one, and a restarted process reopens the store warm instead
+//! of re-fabricating every expert.
+//!
+//! Layout under the store directory:
+//!
+//! ```text
+//! <dir>/MANIFEST.json          key -> {hash, bytes, seq} (atomic rewrite)
+//! <dir>/blobs/<hash:016x>.blob one file per distinct payload
+//! ```
+//!
+//! * **Content addressing.**  A blob is named by the FNV-1a 64-bit hash
+//!   of its payload (vendored below — the crate set has no hashing
+//!   dependency).  Two experts with identical bytes share one file; a
+//!   refcount per hash delays deletion until the last key departs.
+//! * **Exactly-once writes.**  All mutation runs under one mutex, and a
+//!   blob lands via write-to-temp + atomic rename — concurrent writers
+//!   of the same content produce exactly one file, and a reader can
+//!   never observe a torn blob (rename is atomic on POSIX).
+//! * **Integrity.**  [`ExpertStore::get`] re-hashes what it read and
+//!   compares length + hash against the manifest.  A mismatch removes
+//!   the entry, counts an `integrity_failure`, and reports
+//!   [`ReadOutcome::Corrupt`]; the cache then falls back to
+//!   re-fabrication from the bundle (the host `WeightStore` remains
+//!   authoritative), so corruption degrades to a cold miss — never a
+//!   wrong answer and never a panic.
+//! * **Budget.**  `--ssd-budget` bounds bytes on disk (0 = unbounded);
+//!   overflow reclaims the oldest-written entries first (`seq` order),
+//!   never the entry just written.
+//!
+//! The blob payload is the four parts of one expert (w1, b1, w2, b2)
+//! behind a fixed header ([`encode_expert_payload`]); staging from a
+//! verified payload produces bit-identical device buffers to staging
+//! from the bundle, which is what makes restart-warm serving exact.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::experts::ExpertKey;
+use crate::util::json::{num, obj, s, Json};
+
+/// FNV-1a 64-bit: the vendored content hash (no crates.io deps).  Not
+/// cryptographic — the threat model is bit rot and torn writes, not an
+/// adversary choosing payloads.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Magic prefix of every expert blob payload.
+pub const BLOB_MAGIC: [u8; 4] = *b"SIDX";
+/// Payload format version.
+pub const BLOB_VERSION: u32 = 1;
+/// Header bytes ahead of the part data: magic + version + 4 part lengths.
+pub const PAYLOAD_HEADER_BYTES: usize = 4 + 4 + 4 * 4;
+
+/// Serialize the four parts of one expert (w1, b1, w2, b2 — artifact
+/// argument order) into the on-disk blob payload.
+pub fn encode_expert_payload(parts: &[&[u8]; 4]) -> Vec<u8> {
+    let total: usize = PAYLOAD_HEADER_BYTES + parts.iter().map(|p| p.len()).sum::<usize>();
+    let mut out = Vec::with_capacity(total);
+    out.extend_from_slice(&BLOB_MAGIC);
+    out.extend_from_slice(&BLOB_VERSION.to_le_bytes());
+    for p in parts {
+        out.extend_from_slice(&(p.len() as u32).to_le_bytes());
+    }
+    for p in parts {
+        out.extend_from_slice(p);
+    }
+    out
+}
+
+/// Split a blob payload back into its four part byte slices, validating
+/// the header and every length (a verified hash already implies these
+/// hold; the checks make hand-built payloads fail loudly too).
+pub fn decode_expert_payload(payload: &[u8]) -> Result<[&[u8]; 4]> {
+    if payload.len() < PAYLOAD_HEADER_BYTES {
+        bail!("blob payload truncated: {} bytes", payload.len());
+    }
+    if payload[..4] != BLOB_MAGIC {
+        bail!("blob payload has bad magic");
+    }
+    let version = u32::from_le_bytes(payload[4..8].try_into().unwrap());
+    if version != BLOB_VERSION {
+        bail!("blob payload version {version} != {BLOB_VERSION}");
+    }
+    let mut lens = [0usize; 4];
+    for (i, len) in lens.iter_mut().enumerate() {
+        let off = 8 + 4 * i;
+        *len = u32::from_le_bytes(payload[off..off + 4].try_into().unwrap()) as usize;
+    }
+    let want = PAYLOAD_HEADER_BYTES + lens.iter().sum::<usize>();
+    if payload.len() != want {
+        bail!("blob payload {} bytes, header implies {want}", payload.len());
+    }
+    let mut off = PAYLOAD_HEADER_BYTES;
+    let mut parts = [&payload[0..0]; 4];
+    for (i, len) in lens.iter().enumerate() {
+        parts[i] = &payload[off..off + len];
+        off += len;
+    }
+    Ok(parts)
+}
+
+/// Outcome of one [`ExpertStore::get`].
+pub enum ReadOutcome {
+    /// Verified payload (length and content hash match the manifest).
+    Hit(Vec<u8>),
+    /// The blob existed but failed verification; the entry has been
+    /// dropped and an `integrity_failure` counted.  Re-fabricate.
+    Corrupt,
+    /// No (readable) blob for this key — a clean miss.  Re-fabricate.
+    Miss,
+}
+
+/// Counters + occupancy snapshot of one store.  Seconds are **measured**
+/// wall clock around the real file I/O — the honest companion to the
+/// ledger's modeled NVMe seconds, never a replacement for them.
+#[derive(Debug, Default, Clone)]
+pub struct StoreStats {
+    /// blobs written (deduplicated re-puts of identical content not
+    /// included)
+    pub writes: u64,
+    /// verified reads (promotions served from disk)
+    pub reads: u64,
+    /// `get` calls with no readable blob (never stored, reclaimed, or
+    /// the file vanished underneath the manifest)
+    pub misses: u64,
+    /// verification failures (bad length or hash) and payloads the
+    /// cache rejected at staging time
+    pub integrity_failures: u64,
+    /// SSD-tier promotions that fell back to bundle re-fabrication
+    pub refabrications: u64,
+    /// entries reclaimed by the `--ssd-budget` bound
+    pub reclaimed: u64,
+    /// measured wall seconds spent in blob writes
+    pub write_secs: f64,
+    /// measured wall seconds spent in (verified) blob reads
+    pub read_secs: f64,
+    /// bytes currently on disk across distinct blobs (du-style)
+    pub bytes_on_disk: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    hash: u64,
+    bytes: u64,
+    /// write order, for oldest-first reclamation
+    seq: u64,
+}
+
+struct Inner {
+    entries: BTreeMap<ExpertKey, Entry>,
+    /// keys per distinct blob; the file is deleted when this hits zero
+    hash_refs: HashMap<u64, usize>,
+    next_seq: u64,
+    stats: StoreStats,
+}
+
+/// The content-addressed on-disk expert store.  One instance per store
+/// directory; share it via `Arc` (all mutation is internally locked).
+pub struct ExpertStore {
+    dir: PathBuf,
+    /// bytes-on-disk bound, 0 = unbounded (`--ssd-budget`)
+    budget: u64,
+    inner: Mutex<Inner>,
+}
+
+impl ExpertStore {
+    /// Open (or create) the store at `dir`.  An existing `MANIFEST.json`
+    /// is reloaded — that is what makes a restarted server warm — and
+    /// orphan blob files (a crash between blob rename and manifest
+    /// rewrite) are swept so disk accounting matches enumeration.
+    pub fn open(dir: &Path, budget_bytes: u64) -> Result<Arc<ExpertStore>> {
+        std::fs::create_dir_all(dir.join("blobs"))
+            .with_context(|| format!("creating expert store at {}", dir.display()))?;
+        let mut inner = Inner {
+            entries: BTreeMap::new(),
+            hash_refs: HashMap::new(),
+            next_seq: 0,
+            stats: StoreStats::default(),
+        };
+        let manifest = dir.join("MANIFEST.json");
+        if manifest.exists() {
+            let text = std::fs::read_to_string(&manifest)
+                .with_context(|| format!("reading {}", manifest.display()))?;
+            let j = Json::parse(&text).context("parsing store MANIFEST.json")?;
+            for e in j.get("entries")?.as_arr()? {
+                let key = ExpertKey::new(e.get_usize("block")?, e.get_usize("expert")?);
+                let hash = u64::from_str_radix(e.get_str("hash")?, 16)
+                    .context("bad hash in store manifest")?;
+                let bytes = e.get_usize("bytes")? as u64;
+                let seq = e.get_usize("seq")? as u64;
+                inner.next_seq = inner.next_seq.max(seq + 1);
+                if inner.entries.insert(key, Entry { hash, bytes, seq }).is_none() {
+                    let refs = inner.hash_refs.entry(hash).or_insert(0);
+                    if *refs == 0 {
+                        inner.stats.bytes_on_disk += bytes;
+                    }
+                    *refs += 1;
+                }
+            }
+        }
+        let store = ExpertStore { dir: dir.to_path_buf(), budget: budget_bytes, inner: Mutex::new(inner) };
+        store.sweep_orphans()?;
+        Ok(Arc::new(store))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Keys on disk with their payload bytes — the ledger pre-seeds its
+    /// SSD tier from this at attach time.
+    pub fn keys_with_bytes(&self) -> Vec<(ExpertKey, u64)> {
+        let inner = self.inner.lock().unwrap();
+        inner.entries.iter().map(|(k, e)| (*k, e.bytes)).collect()
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.inner.lock().unwrap().stats.clone()
+    }
+
+    /// Zero the traffic counters (a new measurement epoch); occupancy —
+    /// what is on disk — is state, not statistics, and carries over.
+    pub fn reset_stats(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        let bytes = inner.stats.bytes_on_disk;
+        inner.stats = StoreStats { bytes_on_disk: bytes, ..StoreStats::default() };
+    }
+
+    fn blob_path(&self, hash: u64) -> PathBuf {
+        self.dir.join("blobs").join(format!("{hash:016x}.blob"))
+    }
+
+    /// Write `payload` for `key`.  Content-addressed: identical payloads
+    /// (same or different key) share one blob file; a re-put of what a
+    /// key already holds is a no-op.  Exactly-once under concurrency:
+    /// registration runs under the store mutex and the file lands via
+    /// temp + atomic rename.
+    pub fn put(&self, key: ExpertKey, payload: &[u8]) -> Result<()> {
+        let hash = fnv1a64(payload);
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(existing) = inner.entries.get(&key) {
+            if existing.hash == hash {
+                return Ok(()); // already stored, content unchanged
+            }
+            // expert content changed (never happens for immutable
+            // checkpoints, but stay correct): drop the stale mapping
+            let stale = existing.clone();
+            inner.entries.remove(&key);
+            Self::release_hash(&self.dir, &mut inner, stale.hash, stale.bytes);
+        }
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        let refs = *inner.hash_refs.get(&hash).unwrap_or(&0);
+        if refs == 0 {
+            // first key with this content: the blob must hit the disk
+            let t0 = Instant::now();
+            let tmp = self
+                .dir
+                .join("blobs")
+                .join(format!(".tmp-{hash:016x}-{}", std::process::id()));
+            std::fs::write(&tmp, payload)
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            std::fs::rename(&tmp, self.blob_path(hash))
+                .with_context(|| format!("publishing blob {hash:016x}"))?;
+            inner.stats.write_secs += t0.elapsed().as_secs_f64();
+            inner.stats.writes += 1;
+            inner.stats.bytes_on_disk += payload.len() as u64;
+        }
+        *inner.hash_refs.entry(hash).or_insert(0) += 1;
+        inner.entries.insert(key, Entry { hash, bytes: payload.len() as u64, seq });
+        if self.budget > 0 {
+            self.reclaim_over_budget(&mut inner, key);
+        }
+        self.persist_manifest(&inner)?;
+        Ok(())
+    }
+
+    /// Read and verify the blob for `key`.  Holds the store mutex across
+    /// the file read so no reclaim or rewrite can race it — with rename-
+    /// atomic publication this is what "no torn reads" means here.
+    pub fn get(&self, key: &ExpertKey) -> ReadOutcome {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(entry) = inner.entries.get(key).cloned() else {
+            inner.stats.misses += 1;
+            return ReadOutcome::Miss;
+        };
+        let t0 = Instant::now();
+        let data = match std::fs::read(self.blob_path(entry.hash)) {
+            Ok(d) => d,
+            Err(_) => {
+                // manifest-listed but unreadable (deleted underneath
+                // us): clean miss, and drop the dangling entry
+                inner.entries.remove(key);
+                Self::release_hash(&self.dir, &mut inner, entry.hash, entry.bytes);
+                inner.stats.misses += 1;
+                let _ = self.persist_manifest(&inner);
+                return ReadOutcome::Miss;
+            }
+        };
+        if data.len() as u64 == entry.bytes && fnv1a64(&data) == entry.hash {
+            inner.stats.read_secs += t0.elapsed().as_secs_f64();
+            inner.stats.reads += 1;
+            ReadOutcome::Hit(data)
+        } else {
+            log::warn!(
+                "expert store: blob {:016x} for {key:?} failed verification \
+                 ({} bytes on disk, {} expected) — falling back to re-fabrication",
+                entry.hash,
+                data.len(),
+                entry.bytes
+            );
+            inner.entries.remove(key);
+            Self::release_hash(&self.dir, &mut inner, entry.hash, entry.bytes);
+            inner.stats.integrity_failures += 1;
+            let _ = self.persist_manifest(&inner);
+            ReadOutcome::Corrupt
+        }
+    }
+
+    /// The cache verified the hash but could not stage the payload
+    /// (header/shape mismatch): treat as corruption — drop the entry and
+    /// count an integrity failure.
+    pub fn reject(&self, key: &ExpertKey) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(entry) = inner.entries.remove(key) {
+            Self::release_hash(&self.dir, &mut inner, entry.hash, entry.bytes);
+            let _ = self.persist_manifest(&inner);
+        }
+        inner.stats.integrity_failures += 1;
+    }
+
+    /// Count one SSD-tier promotion that fell back to bundle
+    /// re-fabrication (the cache calls this after `Miss`/`Corrupt`).
+    pub fn note_refabrication(&self) {
+        self.inner.lock().unwrap().stats.refabrications += 1;
+    }
+
+    /// Drop one key's refcount on `hash`; delete the blob (and its disk
+    /// bytes) when the last reference departs.
+    fn release_hash(dir: &Path, inner: &mut Inner, hash: u64, bytes: u64) {
+        let gone = match inner.hash_refs.get_mut(&hash) {
+            Some(r) => {
+                *r = r.saturating_sub(1);
+                *r == 0
+            }
+            None => false,
+        };
+        if gone {
+            inner.hash_refs.remove(&hash);
+            let _ = std::fs::remove_file(dir.join("blobs").join(format!("{hash:016x}.blob")));
+            inner.stats.bytes_on_disk = inner.stats.bytes_on_disk.saturating_sub(bytes);
+        }
+    }
+
+    /// Oldest-first reclamation down to the byte budget, never evicting
+    /// the entry just written (`keep`).
+    fn reclaim_over_budget(&self, inner: &mut Inner, keep: ExpertKey) {
+        while inner.stats.bytes_on_disk > self.budget {
+            let victim = inner
+                .entries
+                .iter()
+                .filter(|(k, _)| **k != keep)
+                .min_by_key(|(_, e)| e.seq)
+                .map(|(k, _)| *k);
+            let Some(victim) = victim else { break };
+            let entry = inner.entries.remove(&victim).expect("victim chosen from entries");
+            Self::release_hash(&self.dir, inner, entry.hash, entry.bytes);
+            inner.stats.reclaimed += 1;
+        }
+    }
+
+    /// Rewrite MANIFEST.json atomically (temp + rename) to reflect the
+    /// in-memory entry table.
+    fn persist_manifest(&self, inner: &Inner) -> Result<()> {
+        let entries: Vec<Json> = inner
+            .entries
+            .iter()
+            .map(|(k, e)| {
+                obj(vec![
+                    ("block", num(k.block as f64)),
+                    ("expert", num(k.expert as f64)),
+                    ("hash", s(&format!("{:016x}", e.hash))),
+                    ("bytes", num(e.bytes as f64)),
+                    ("seq", num(e.seq as f64)),
+                ])
+            })
+            .collect();
+        let doc = obj(vec![
+            ("version", num(1.0)),
+            ("entries", Json::Arr(entries)),
+        ]);
+        let tmp = self.dir.join(format!(".MANIFEST.tmp-{}", std::process::id()));
+        std::fs::write(&tmp, doc.to_string())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, self.dir.join("MANIFEST.json"))
+            .context("publishing store manifest")?;
+        Ok(())
+    }
+
+    /// Delete blob files no manifest entry references (left by a crash
+    /// between blob rename and manifest rewrite), plus stale temp files.
+    fn sweep_orphans(&self) -> Result<()> {
+        let inner = self.inner.lock().unwrap();
+        for dirent in std::fs::read_dir(self.dir.join("blobs"))? {
+            let path = dirent?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            let live = name
+                .strip_suffix(".blob")
+                .and_then(|h| u64::from_str_radix(h, 16).ok())
+                .is_some_and(|h| inner.hash_refs.contains_key(&h));
+            if !live {
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("sida_store_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn k(e: usize) -> ExpertKey {
+        ExpertKey::new(0, e)
+    }
+
+    fn du(dir: &Path) -> u64 {
+        std::fs::read_dir(dir.join("blobs"))
+            .unwrap()
+            .map(|e| e.unwrap().metadata().unwrap().len())
+            .sum()
+    }
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a64(b"abc"), fnv1a64(b"abd"));
+    }
+
+    #[test]
+    fn payload_roundtrip_and_rejects() {
+        let parts: [&[u8]; 4] = [b"wwww", b"b", b"WWWWWW", b"B"];
+        let payload = encode_expert_payload(&parts);
+        assert_eq!(payload.len(), PAYLOAD_HEADER_BYTES + 12);
+        let back = decode_expert_payload(&payload).unwrap();
+        assert_eq!(back, parts);
+        assert!(decode_expert_payload(&payload[..10]).is_err());
+        let mut bad_magic = payload.clone();
+        bad_magic[0] ^= 0xff;
+        assert!(decode_expert_payload(&bad_magic).is_err());
+        let mut truncated = payload.clone();
+        truncated.pop();
+        assert!(decode_expert_payload(&truncated).is_err());
+    }
+
+    #[test]
+    fn put_get_roundtrip_with_stats() {
+        let dir = tmp("roundtrip");
+        let store = ExpertStore::open(&dir, 0).unwrap();
+        store.put(k(0), b"hello expert").unwrap();
+        match store.get(&k(0)) {
+            ReadOutcome::Hit(d) => assert_eq!(d, b"hello expert"),
+            _ => panic!("expected hit"),
+        }
+        let st = store.stats();
+        assert_eq!(st.writes, 1);
+        assert_eq!(st.reads, 1);
+        assert_eq!(st.bytes_on_disk, 12);
+        assert_eq!(st.bytes_on_disk, du(&dir));
+        assert!(st.write_secs > 0.0 && st.read_secs > 0.0);
+        // re-put of identical content is a no-op
+        store.put(k(0), b"hello expert").unwrap();
+        assert_eq!(store.stats().writes, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn identical_payloads_share_one_blob() {
+        let dir = tmp("dedup");
+        let store = ExpertStore::open(&dir, 0).unwrap();
+        store.put(k(0), b"same bytes").unwrap();
+        store.put(k(1), b"same bytes").unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.stats().writes, 1, "second put must dedup");
+        let files = std::fs::read_dir(dir.join("blobs")).unwrap().count();
+        assert_eq!(files, 1);
+        assert_eq!(store.stats().bytes_on_disk, 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reopen_restores_entries() {
+        let dir = tmp("reopen");
+        {
+            let store = ExpertStore::open(&dir, 0).unwrap();
+            store.put(k(3), b"persistent").unwrap();
+        }
+        let store = ExpertStore::open(&dir, 0).unwrap();
+        assert_eq!(store.keys_with_bytes(), vec![(k(3), 10)]);
+        match store.get(&k(3)) {
+            ReadOutcome::Hit(d) => assert_eq!(d, b"persistent"),
+            _ => panic!("reopened store must hit"),
+        }
+        assert_eq!(store.stats().bytes_on_disk, du(&dir));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_is_detected_and_entry_dropped() {
+        let dir = tmp("corrupt");
+        let store = ExpertStore::open(&dir, 0).unwrap();
+        store.put(k(0), b"pristine content").unwrap();
+        let blob = std::fs::read_dir(dir.join("blobs")).unwrap().next().unwrap().unwrap().path();
+        let mut bytes = std::fs::read(&blob).unwrap();
+        bytes[4] ^= 0x01;
+        std::fs::write(&blob, &bytes).unwrap();
+        assert!(matches!(store.get(&k(0)), ReadOutcome::Corrupt));
+        assert_eq!(store.stats().integrity_failures, 1);
+        // the entry is gone: the next lookup is a clean miss
+        assert!(matches!(store.get(&k(0)), ReadOutcome::Miss));
+        assert_eq!(store.stats().bytes_on_disk, du(&dir));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_blob_is_a_clean_miss() {
+        let dir = tmp("missing");
+        let store = ExpertStore::open(&dir, 0).unwrap();
+        store.put(k(0), b"soon gone").unwrap();
+        let blob = std::fs::read_dir(dir.join("blobs")).unwrap().next().unwrap().unwrap().path();
+        std::fs::remove_file(&blob).unwrap();
+        assert!(matches!(store.get(&k(0)), ReadOutcome::Miss));
+        assert_eq!(store.stats().misses, 1);
+        assert_eq!(store.stats().integrity_failures, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ssd_budget_reclaims_oldest_first() {
+        let dir = tmp("budget");
+        // room for two 8-byte payloads
+        let store = ExpertStore::open(&dir, 16).unwrap();
+        store.put(k(0), b"payload0").unwrap();
+        store.put(k(1), b"payload1").unwrap();
+        store.put(k(2), b"payload2").unwrap(); // over budget: k0 (oldest) goes
+        let st = store.stats();
+        assert_eq!(st.reclaimed, 1);
+        assert!(st.bytes_on_disk <= 16);
+        assert_eq!(st.bytes_on_disk, du(&dir));
+        assert!(matches!(store.get(&k(0)), ReadOutcome::Miss));
+        assert!(matches!(store.get(&k(1)), ReadOutcome::Hit(_)));
+        assert!(matches!(store.get(&k(2)), ReadOutcome::Hit(_)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn orphan_blobs_are_swept_on_open() {
+        let dir = tmp("orphan");
+        {
+            let store = ExpertStore::open(&dir, 0).unwrap();
+            store.put(k(0), b"kept").unwrap();
+        }
+        std::fs::write(dir.join("blobs").join("deadbeefdeadbeef.blob"), b"orphan").unwrap();
+        std::fs::write(dir.join("blobs").join(".tmp-stale-123"), b"tmp").unwrap();
+        let store = ExpertStore::open(&dir, 0).unwrap();
+        assert_eq!(std::fs::read_dir(dir.join("blobs")).unwrap().count(), 1);
+        assert_eq!(store.stats().bytes_on_disk, du(&dir));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

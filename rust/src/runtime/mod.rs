@@ -52,6 +52,43 @@ pub fn stage_expert_parts(
     ])
 }
 
+/// Stage one expert from a verified on-disk blob payload
+/// ([`crate::memory::ExpertStore`]) instead of the host bundle.  Shapes
+/// and dtypes still come from the manifest; every part length must
+/// match its manifest byte count exactly, so a payload that decodes but
+/// disagrees with the model is rejected (the cache counts that as an
+/// integrity failure and re-fabricates).
+pub fn stage_expert_parts_from_payload(
+    engine: &Engine,
+    weights: &WeightStore,
+    block: usize,
+    expert: usize,
+    payload: &[u8],
+) -> Result<[DeviceBuffer; 4]> {
+    use anyhow::bail;
+    let parts = crate::memory::decode_expert_payload(payload)?;
+    let names = WeightStore::expert_part_names(block, expert);
+    let mut staged: Vec<DeviceBuffer> = Vec::with_capacity(4);
+    for (name, bytes) in names.iter().zip(parts.iter()) {
+        let meta = weights.meta(name)?;
+        if bytes.len() != meta.nbytes {
+            bail!(
+                "blob part '{name}' is {} bytes, manifest says {}",
+                bytes.len(),
+                meta.nbytes
+            );
+        }
+        staged.push(engine.stage_raw(meta.dtype.element_type(), &meta.shape, bytes)?);
+    }
+    let mut it = staged.into_iter();
+    Ok([
+        it.next().unwrap(),
+        it.next().unwrap(),
+        it.next().unwrap(),
+        it.next().unwrap(),
+    ])
+}
+
 /// Everything needed to serve one model config: engine, host weights,
 /// topology.
 pub struct ModelBundle {

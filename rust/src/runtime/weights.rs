@@ -174,6 +174,21 @@ impl WeightStore {
         }
         Ok(total)
     }
+
+    /// Serialize one expert into the on-disk blob payload of the §6 SSD
+    /// tier ([`crate::memory::ExpertStore`]).  Built from the host blob
+    /// — the authoritative copy every staging path reads — so a verified
+    /// payload stages bit-identically to a direct bundle fetch.
+    pub fn expert_payload(&self, block: usize, expert: usize) -> Result<Vec<u8>> {
+        let names = Self::expert_part_names(block, expert);
+        let parts: [&[u8]; 4] = [
+            self.bytes(&names[0])?,
+            self.bytes(&names[1])?,
+            self.bytes(&names[2])?,
+            self.bytes(&names[3])?,
+        ];
+        Ok(crate::memory::encode_expert_payload(&parts))
+    }
 }
 
 #[cfg(test)]

@@ -80,6 +80,14 @@ pub struct ServerConfig {
     pub ram_budget_sim_bytes: usize,
     /// the RAM window's own eviction policy (`--ram-policy`)
     pub ram_policy: String,
+    /// on-disk expert store directory (`--store-dir`): SSD promotions
+    /// do real, hash-verified blob reads; reopening an existing
+    /// directory pre-seeds the SSD tier so a restarted server warm-hits
+    /// instead of re-fabricating.  Empty = modeled-only SSD tier.
+    /// Single-device serving only.
+    pub store_dir: String,
+    /// on-disk store byte budget (`--ssd-budget`, 0 = unbounded)
+    pub ssd_budget_bytes: usize,
     /// hash experts consumed per token
     pub k_used: usize,
     /// batch-forming policy (size/deadline/queue bound)
@@ -104,6 +112,8 @@ impl Default for ServerConfig {
             budget_sim_bytes: 8 << 30,
             ram_budget_sim_bytes: crate::memory::DEFAULT_RAM_BUDGET,
             ram_policy: "fifo".into(),
+            store_dir: String::new(),
+            ssd_budget_bytes: 0,
             k_used: 1,
             batch: BatchPolicy::default(),
             pool_threads: 0,
@@ -167,13 +177,27 @@ impl ServerState {
         let runner = ModelRunner::with_pool(bundle.clone(), profile, pool)?;
         let hash = HashBuilder::new(&bundle, profile)?;
         let real = bundle.weights.expert_bytes(bundle.topology.moe_blocks[0], 0)?;
-        let cache = Arc::new(SharedExpertCache::new(ExpertCache::with_hierarchy(
+        let mut core = ExpertCache::with_hierarchy(
             cfg.budget_sim_bytes,
             CostModel::paper_scale(real),
             make_policy("fifo")?,
             cfg.ram_budget_sim_bytes,
             make_policy(&cfg.ram_policy)?,
-        )));
+        );
+        if !cfg.store_dir.is_empty() {
+            if cfg.devices > 1 {
+                anyhow::bail!(
+                    "--store-dir applies to single-device serving \
+                     (cluster devices run store-less)"
+                );
+            }
+            let store = crate::memory::ExpertStore::open(
+                std::path::Path::new(&cfg.store_dir),
+                cfg.ssd_budget_bytes as u64,
+            )?;
+            core.attach_store(crate::experts::bind_store(&bundle, store));
+        }
+        let cache = Arc::new(SharedExpertCache::new(core));
         let cluster = if cfg.devices > 1 {
             Some(Arc::new(ClusterRouter::new(
                 &bundle,
@@ -618,6 +642,12 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
                         ("demotions_to_ssd", Json::Num(hier.demotions_to_ssd as f64)),
                         ("ssd_promote_secs", Json::Num(hier.ssd_promote_secs)),
                         ("ladder_secs", Json::Num(hier.ladder_secs())),
+                        ("measured_ssd_read_secs", Json::Num(hier.measured_ssd_read_secs)),
+                        ("measured_ssd_write_secs", Json::Num(hier.measured_ssd_write_secs)),
+                        ("store_bytes_on_disk", Json::Num(hier.store_bytes_on_disk as f64)),
+                        ("integrity_failures", Json::Num(hier.integrity_failures as f64)),
+                        ("store_hits", Json::Num(hier.store_hits as f64)),
+                        ("refabrications", Json::Num(hier.refabrications as f64)),
                     ];
                     if let Some(cl) = &cluster {
                         let devices: Vec<Json> = cl

@@ -708,6 +708,180 @@ fn hash_agreement_rate_tracks_configuration() {
 }
 
 // ---------------------------------------------------------------------------
+// On-disk expert store: interleaved promote/demote storms across threads
+// on overlapping keys — exactly one blob per content hash, every
+// successful read verifies, and the byte accounting matches a du-style
+// enumeration of the blobs directory (ISSUE 7).
+// ---------------------------------------------------------------------------
+
+/// Deterministic, per-key-distinct payload for store storms.
+fn storm_payload(e: usize) -> Vec<u8> {
+    format!("expert-{e}-payload-").repeat(3 + e).into_bytes()
+}
+
+/// `du` over the store's blobs directory; also verifies content
+/// addressing file-by-file: every blob's name IS the FNV-1a hash of the
+/// bytes inside it (a torn or half-published blob cannot satisfy this).
+fn du_verified(dir: &std::path::Path) -> u64 {
+    use sida_moe::memory::fnv1a64;
+    let mut total = 0u64;
+    let mut seen = HashSet::new();
+    for entry in std::fs::read_dir(dir.join("blobs")).unwrap() {
+        let path = entry.unwrap().path();
+        let name = path.file_name().unwrap().to_str().unwrap().to_string();
+        let hash = u64::from_str_radix(name.strip_suffix(".blob").unwrap(), 16).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        assert_eq!(fnv1a64(&data), hash, "blob {name} does not hash to its own name");
+        assert!(seen.insert(hash), "duplicate blob for hash {hash:016x}");
+        total += data.len() as u64;
+    }
+    total
+}
+
+#[test]
+fn prop_store_concurrent_writers_publish_exactly_once_per_hash() {
+    use sida_moe::memory::{ExpertStore, ReadOutcome};
+
+    let dir = std::env::temp_dir()
+        .join(format!("sida_prop_store_{}", std::process::id()));
+    Prop::new(16).check(
+        "store: concurrent put/get storm",
+        |r| {
+            // 4 threads x up to 30 ops over <= 6 overlapping keys
+            (0..4)
+                .map(|_| (0..r.usize_below(30)).map(|_| r.below(6) as u8).collect())
+                .collect::<Vec<Vec<u8>>>()
+        },
+        |v| shrink_vec(v),
+        |plans| {
+            let _ = std::fs::remove_dir_all(&dir);
+            let store = ExpertStore::open(&dir, 0).unwrap();
+            std::thread::scope(|s| {
+                for plan in plans {
+                    let store = store.clone();
+                    s.spawn(move || {
+                        for &e in plan {
+                            let key = ExpertKey::new(1, e as usize);
+                            store.put(key, &storm_payload(e as usize)).unwrap();
+                            // a key this thread just put can never miss:
+                            // entries only leave on corruption/budget,
+                            // and this storm has neither
+                            match store.get(&key) {
+                                ReadOutcome::Hit(d) => {
+                                    assert_eq!(d, storm_payload(e as usize))
+                                }
+                                _ => panic!("own put of {key:?} must read back"),
+                            }
+                        }
+                    });
+                }
+            });
+            let st = store.stats();
+            let touched: HashSet<u8> =
+                plans.iter().flatten().copied().collect();
+            if st.integrity_failures != 0 {
+                return Err(format!("{} torn/corrupt reads", st.integrity_failures));
+            }
+            if st.misses != 0 {
+                return Err(format!("{} misses in an all-hot storm", st.misses));
+            }
+            if st.writes != touched.len() as u64 {
+                return Err(format!(
+                    "{} blobs written for {} distinct payloads",
+                    st.writes,
+                    touched.len()
+                ));
+            }
+            let du = du_verified(&dir);
+            if st.bytes_on_disk != du {
+                return Err(format!(
+                    "accounted {} bytes on disk, enumeration finds {du}",
+                    st.bytes_on_disk
+                ));
+            }
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn prop_shared_cache_store_storm_keeps_disk_accounting_exact() {
+    use sida_moe::experts::SharedExpertCache;
+    use sida_moe::memory::ExpertStore;
+
+    let bundle = sida_moe::testkit::tiny_bundle();
+    let block = bundle.topology.moe_blocks[0];
+    let num_experts = bundle.topology.num_experts;
+    let real = bundle.weights.expert_bytes(block, 0).unwrap();
+    let dir = std::env::temp_dir()
+        .join(format!("sida_prop_cache_store_{}", std::process::id()));
+    Prop::new(8).check(
+        "shared cache + store: concurrent ensure storm",
+        |r| {
+            (0..3)
+                .map(|_| (0..r.usize_below(25)).map(|_| r.below(8) as u8).collect())
+                .collect::<Vec<Vec<u8>>>()
+        },
+        |v| shrink_vec(v),
+        |plans| {
+            let _ = std::fs::remove_dir_all(&dir);
+            let store = ExpertStore::open(&dir, 0).unwrap();
+            // 2-expert device tier, no RAM window: every eviction falls
+            // to SSD and spills a real blob; promotions read them back
+            let mut core = ExpertCache::with_hierarchy(
+                2 * real + 64,
+                CostModel::physical(real),
+                make_policy("fifo").unwrap(),
+                0,
+                make_policy("fifo").unwrap(),
+            );
+            core.attach_store(sida_moe::experts::bind_store(&bundle, store));
+            let cache = SharedExpertCache::new(core);
+            std::thread::scope(|s| {
+                for plan in plans {
+                    let cache = &cache;
+                    let bundle = bundle.clone();
+                    s.spawn(move || {
+                        for &e in plan {
+                            let expert = e as usize % num_experts;
+                            let key = ExpertKey::new(block, expert);
+                            cache
+                                .ensure(key, real, true, || {
+                                    stage_expert_parts(
+                                        &bundle.engine,
+                                        &bundle.weights,
+                                        block,
+                                        expert,
+                                    )
+                                })
+                                .unwrap();
+                        }
+                    });
+                }
+            });
+            cache.check_invariants().map_err(|e| format!("{e:#}"))?;
+            let h = cache.hierarchy_stats();
+            if h.integrity_failures != 0 {
+                return Err(format!(
+                    "{} integrity failures without injected faults",
+                    h.integrity_failures
+                ));
+            }
+            let du = du_verified(&dir);
+            if h.store_bytes_on_disk as u64 != du {
+                return Err(format!(
+                    "HierarchyStats accounts {} store bytes, enumeration finds {du}",
+                    h.store_bytes_on_disk
+                ));
+            }
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
 // Worker pool: scatter order is independent of expert completion order
 // ---------------------------------------------------------------------------
 

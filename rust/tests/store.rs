@@ -1,0 +1,197 @@
+//! On-disk expert store: restart-warm serving and fault injection
+//! (hermetic, synthetic bundle + TempDir stores).
+//!
+//! The contract under test (ISSUE 7):
+//! * a pipeline reopening an existing `--store-dir` serves warm — the
+//!   manifest pre-seeds the ledger's SSD tier, promotions do real
+//!   verified file reads (`store_hits > 0`), nothing is refabricated,
+//!   and the outputs are bit-for-bit what a cold (and a store-less) run
+//!   produces;
+//! * corrupting a blob (flipped byte, truncation) is DETECTED at
+//!   promotion time — the read fails its content-hash check, serving
+//!   falls back to re-fabrication from the bundle, outputs stay
+//!   bit-identical, and the incident is counted in
+//!   `integrity_failures`;
+//! * deleting a manifest-listed blob is a clean miss (refabrication,
+//!   no panic, no integrity failure — nothing lied about its content).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use sida_moe::coordinator::{Pipeline, PipelineConfig, ServeOutcome};
+use sida_moe::memory::HierarchyStats;
+use sida_moe::runtime::ModelBundle;
+use sida_moe::testkit::{self, SynthSpec, TINY_PROFILE};
+use sida_moe::workload::Request;
+
+fn deep_bundle() -> Arc<ModelBundle> {
+    testkit::bundle(&SynthSpec::default().two_moe_layers()).unwrap()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("sida_tstore_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// One serving run at a store-stressing configuration: tight device
+/// tier, no RAM window (every eviction falls to SSD), deterministic
+/// fetch order (no prefetch, one lane).  `store_dir = None` runs
+/// store-less (modeled SSD only) — the bit-identity reference.
+fn run(
+    bundle: &Arc<ModelBundle>,
+    requests: &[Request],
+    store_dir: Option<&Path>,
+) -> (ServeOutcome, HierarchyStats) {
+    let sim = sida_moe::bench_support::sim_expert_bytes(bundle).unwrap();
+    let cfg = PipelineConfig {
+        k_used: 2,
+        budget_sim_bytes: 4 * sim + 1024,
+        ram_budget_bytes: 0,
+        prefetch: false,
+        pool_threads: 1,
+        want_cls: true,
+        want_lm: true,
+        store_dir: store_dir.map(|p| p.display().to_string()).unwrap_or_default(),
+        ..Default::default()
+    };
+    let p = Pipeline::new(bundle.clone(), TINY_PROFILE, cfg).unwrap();
+    let out = p.serve(requests).unwrap();
+    p.cache.check_invariants().unwrap();
+    let h = out.stats.hierarchy.clone();
+    (out, h)
+}
+
+/// Exact per-request outputs, order-normalized: bit-identity means the
+/// classification argmax AND the full-precision LM NLL agree.
+fn outputs(out: &ServeOutcome) -> Vec<(u64, Option<usize>, Option<f64>)> {
+    let mut v: Vec<_> =
+        out.per_request.iter().map(|r| (r.id, r.cls_pred, r.lm_nll)).collect();
+    v.sort_by_key(|(id, ..)| *id);
+    assert!(!v.is_empty());
+    v
+}
+
+fn blob_files(dir: &Path) -> Vec<PathBuf> {
+    let mut v: Vec<_> = std::fs::read_dir(dir.join("blobs"))
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().map(|e| e == "blob").unwrap_or(false))
+        .collect();
+    v.sort();
+    assert!(!v.is_empty(), "cold run must leave blobs on disk");
+    v
+}
+
+#[test]
+fn reopened_store_serves_warm_and_bit_identical() {
+    let b = deep_bundle();
+    let reqs = testkit::tiny_trace(&b, 12, 11);
+    let dir = tmp("warm");
+
+    let (ref_out, ref_h) = run(&b, &reqs, None); // store-less reference
+    let (cold_out, cold_h) = run(&b, &reqs, Some(&dir));
+    assert!(cold_h.store_writes > 0, "cold run must write blobs");
+    assert_eq!(cold_h.integrity_failures, 0);
+    // attaching a store must not change what the model computes
+    assert_eq!(outputs(&cold_out), outputs(&ref_out));
+    // and the modeled timeline is untouched by the measured one
+    assert_eq!(ref_h.ladder_secs(), cold_h.ladder_secs());
+
+    // restart: drop every in-memory structure, reopen the directory
+    let (warm_out, warm_h) = run(&b, &reqs, Some(&dir));
+    assert!(
+        warm_h.promotions_from_ssd > 0,
+        "reopened store must pre-seed the SSD tier"
+    );
+    assert!(warm_h.store_hits > 0, "warm promotions must read from disk");
+    assert_eq!(
+        warm_h.refabrications, 0,
+        "a warm store refabricates nothing"
+    );
+    assert_eq!(warm_h.integrity_failures, 0);
+    assert!(warm_h.measured_ssd_read_secs > 0.0, "real reads take real time");
+    assert!(warm_h.store_bytes_on_disk > 0);
+    assert_eq!(outputs(&warm_out), outputs(&ref_out));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flipped_byte_is_detected_and_refabricated_bit_identically() {
+    let b = deep_bundle();
+    let reqs = testkit::tiny_trace(&b, 12, 13);
+    let dir = tmp("flip");
+
+    let (cold_out, _) = run(&b, &reqs, Some(&dir));
+
+    // corrupt every blob: flip one payload byte in each, so whichever
+    // experts the warm run promotes first, it meets a liar
+    for blob in blob_files(&dir) {
+        let mut bytes = std::fs::read(&blob).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&blob, &bytes).unwrap();
+    }
+
+    let (warm_out, warm_h) = run(&b, &reqs, Some(&dir));
+    assert!(
+        warm_h.integrity_failures > 0,
+        "flipped bytes must fail the content-hash check"
+    );
+    assert!(
+        warm_h.refabrications > 0,
+        "corrupt blobs must fall back to bundle re-fabrication"
+    );
+    // the fallback is invisible in the outputs
+    assert_eq!(outputs(&warm_out), outputs(&cold_out));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_blob_is_detected_and_refabricated_bit_identically() {
+    let b = deep_bundle();
+    let reqs = testkit::tiny_trace(&b, 12, 17);
+    let dir = tmp("trunc");
+
+    let (cold_out, _) = run(&b, &reqs, Some(&dir));
+    for blob in blob_files(&dir) {
+        let bytes = std::fs::read(&blob).unwrap();
+        std::fs::write(&blob, &bytes[..bytes.len() / 2]).unwrap();
+    }
+
+    let (warm_out, warm_h) = run(&b, &reqs, Some(&dir));
+    assert!(
+        warm_h.integrity_failures > 0,
+        "truncation must fail the length/hash check"
+    );
+    assert!(warm_h.refabrications > 0);
+    assert_eq!(outputs(&warm_out), outputs(&cold_out));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn deleted_blob_is_a_clean_miss_not_a_panic() {
+    let b = deep_bundle();
+    let reqs = testkit::tiny_trace(&b, 12, 19);
+    let dir = tmp("gone");
+
+    let (cold_out, _) = run(&b, &reqs, Some(&dir));
+    // delete the blobs out from under the manifest
+    for blob in blob_files(&dir) {
+        std::fs::remove_file(&blob).unwrap();
+    }
+
+    let (warm_out, warm_h) = run(&b, &reqs, Some(&dir));
+    assert!(warm_h.store_misses > 0, "vanished blobs are misses");
+    assert!(warm_h.refabrications > 0);
+    assert_eq!(
+        warm_h.integrity_failures, 0,
+        "a missing file is a miss, not a corruption"
+    );
+    assert_eq!(outputs(&warm_out), outputs(&cold_out));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
