@@ -1,0 +1,154 @@
+//! fig_failover — fault-tolerant cluster serving: kill 1 of 4 devices
+//! mid-trace, verify serving degrades instead of dying.
+//!
+//! Serves the same trace twice on a 4-device fleet: once fault-free and
+//! once under a deterministic fault plan that downs device 1 for the
+//! middle half of the trace (batch ticks n/4 .. 3n/4).  The checks are
+//! the ISSUE 8 acceptance criteria, and the bench exits 1 if any
+//! fails:
+//!
+//! * **bit-identity** — per-request outputs under the fault schedule
+//!   are exactly the fault-free outputs (failover moves work, never
+//!   changes what it computes);
+//! * **availability** — every offered request is served (>= 99%
+//!   required; this path delivers 100% because lost lanes retry on
+//!   survivors and the evacuated experts fail over);
+//! * **accounting** — the outage is visible: nonzero failovers,
+//!   exactly one device failure and one recovery, measured downtime;
+//! * **recovery** — a post-recovery epoch (stats reset, trace
+//!   re-served on the same pipeline) rebalances to within 10% of the
+//!   fault-free run's load imbalance.
+//!
+//! Hermetic (synthetic two-MoE-layer bundle), so CI's bench-smoke job
+//! exercises the failover path instead of SKIP-ing.  Emits
+//! `BENCH_failover.json`.
+
+use sida_moe::bench_support as bs;
+use sida_moe::coordinator::{Pipeline, PipelineConfig, ServeOutcome};
+use sida_moe::metrics::Table;
+use sida_moe::testkit::{self, SynthSpec, TINY_PROFILE};
+use sida_moe::util::json::{num, obj, s, Json};
+
+fn outputs(out: &ServeOutcome) -> Vec<(u64, Option<usize>)> {
+    let mut v: Vec<_> = out.per_request.iter().map(|r| (r.id, r.cls_pred)).collect();
+    v.sort_by_key(|(id, _)| *id);
+    v
+}
+
+fn main() -> anyhow::Result<()> {
+    bs::banner(
+        "fig_failover: device failure + recovery mid-trace",
+        "outputs bit-identical, availability 100%, balance recovers",
+    );
+    let bundle = testkit::bundle(&SynthSpec::default().two_moe_layers())?;
+    let n = bs::n_requests(24);
+    let warmup = testkit::tiny_trace(&bundle, 4, 0xA5A5);
+    let requests = testkit::tiny_trace(&bundle, n, 7);
+    let devices = 4usize;
+    // device 1 dies a quarter of the way into the measured trace and
+    // recovers at three quarters (batch-1 serving: one fault tick per
+    // request; the unmeasured warmup also ticks, hence the offset)
+    let w = warmup.len() as u64;
+    let plan = format!(
+        "down:1@{}..{}",
+        w + (n as u64 / 4).max(1),
+        w + (3 * n as u64 / 4).max(2)
+    );
+
+    let run = |fault_plan: &str| -> anyhow::Result<(Pipeline, ServeOutcome)> {
+        let cfg = PipelineConfig {
+            devices,
+            replicate_top: 1,
+            min_replicas: 2,
+            fault_plan: fault_plan.into(),
+            want_cls: true,
+            ..Default::default()
+        };
+        let pipeline = Pipeline::new(bundle.clone(), TINY_PROFILE, cfg)?;
+        let _ = pipeline.serve(&warmup)?;
+        pipeline.reset_serving_stats();
+        let out = pipeline.serve(&requests)?;
+        Ok((pipeline, out))
+    };
+
+    let (_clean_pipeline, clean) = run("")?;
+    let (faulted_pipeline, faulted) = run(&plan)?;
+    let clean_cl = clean.stats.cluster.clone().expect("cluster stats");
+    let faulted_cl = faulted.stats.cluster.clone().expect("cluster stats");
+
+    // post-recovery epoch: the fleet is whole again (every fault tick
+    // has passed); a fresh measurement window must rebalance
+    faulted_pipeline.reset_serving_stats();
+    let recovered = faulted_pipeline.serve(&requests)?;
+    let recovered_cl = recovered.stats.cluster.clone().expect("cluster stats");
+
+    let availability = faulted.stats.requests as f64 / n as f64;
+    let clean_imb = clean_cl.load_imbalance().unwrap_or(1.0);
+    let recovered_imb = recovered_cl.load_imbalance().unwrap_or(1.0);
+
+    let mut t = Table::new(
+        &format!("fig_failover — 4 devices, fault plan {plan}"),
+        &["run", "served", "failovers", "retries", "downtime s", "imbalance"],
+    );
+    for (name, out, cl) in [
+        ("fault-free", &clean, &clean_cl),
+        ("faulted", &faulted, &faulted_cl),
+        ("post-recovery", &recovered, &recovered_cl),
+    ] {
+        t.row(vec![
+            name.into(),
+            out.stats.requests.to_string(),
+            format!("{} ({} promoted)", cl.failovers, cl.failover_promotions),
+            cl.retries.to_string(),
+            format!("{:.3}", cl.downtime_secs),
+            format!("{:.2}x", cl.load_imbalance().unwrap_or(1.0)),
+        ]);
+    }
+    t.print();
+    t.save_csv(&bs::csv_path("fig_failover"))?;
+
+    let bit_identical =
+        outputs(&faulted) == outputs(&clean) && outputs(&recovered) == outputs(&clean);
+    let available = availability >= 0.99;
+    let accounted = faulted_cl.failovers > 0
+        && faulted_cl.device_failures == 1
+        && faulted_cl.recoveries == 1
+        && faulted_cl.downtime_secs > 0.0;
+    let rebalanced = recovered_imb <= clean_imb * 1.10 + 1e-9;
+    let checks = [
+        ("outputs bit-identical to the fault-free run", bit_identical),
+        ("availability >= 99%", available),
+        ("failover + downtime accounted", accounted),
+        ("post-recovery imbalance within 10% of fault-free", rebalanced),
+    ];
+    for (what, ok) in checks {
+        println!("failover check: {what}: {}", if ok { "PASS" } else { "FAIL" });
+    }
+
+    let mut j = bs::BenchJson::new("failover");
+    j.push(obj(vec![
+        ("devices", num(devices as f64)),
+        ("fault_plan", s(&plan)),
+        ("requests", num(n as f64)),
+        ("availability", num(availability)),
+        ("throughput_rps_clean", num(clean.stats.throughput())),
+        ("throughput_rps_faulted", num(faulted.stats.throughput())),
+        ("failovers", num(faulted_cl.failovers as f64)),
+        ("failover_promotions", num(faulted_cl.failover_promotions as f64)),
+        ("retries", num(faulted_cl.retries as f64)),
+        ("device_failures", num(faulted_cl.device_failures as f64)),
+        ("recoveries", num(faulted_cl.recoveries as f64)),
+        ("downtime_secs", num(faulted_cl.downtime_secs)),
+        ("imbalance_clean", num(clean_imb)),
+        ("imbalance_faulted", num(faulted_cl.load_imbalance().unwrap_or(1.0))),
+        ("imbalance_post_recovery", num(recovered_imb)),
+        ("bit_identical", Json::Bool(bit_identical)),
+        ("dataset", s(TINY_PROFILE)),
+    ]));
+    let path = j.save()?;
+    println!("perf-trajectory JSON: {}", path.display());
+    if checks.iter().any(|(_, ok)| !ok) {
+        std::process::exit(1);
+    }
+    Ok(())
+}

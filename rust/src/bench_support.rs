@@ -85,6 +85,10 @@ pub struct RunSpec {
     pub devices: usize,
     /// hottest experts per MoE layer replicated across the fleet
     pub replicate_top: usize,
+    /// availability floor: holders per predicted-hot expert (cluster)
+    pub min_replicas: usize,
+    /// deterministic fault schedule ("" = fault-free; cluster only)
+    pub fault_plan: String,
     /// on-disk expert store directory ("" = store-less, modeled SSD
     /// only); reopening the same dir serves restart-warm
     pub store_dir: String,
@@ -111,6 +115,8 @@ impl RunSpec {
             pool_threads: 0,
             devices: 1,
             replicate_top: 1,
+            min_replicas: 1,
+            fault_plan: String::new(),
             store_dir: String::new(),
             ssd_budget_bytes: 0,
             seed: 0,
@@ -137,6 +143,18 @@ impl RunSpec {
     /// Hot-expert replication factor (cluster mode).
     pub fn replicate(mut self, r: usize) -> Self {
         self.replicate_top = r;
+        self
+    }
+
+    /// Availability floor: holders per predicted-hot expert (cluster).
+    pub fn min_replicas(mut self, k: usize) -> Self {
+        self.min_replicas = k.max(1);
+        self
+    }
+
+    /// Deterministic fault schedule (`--fault-plan` grammar).
+    pub fn faults(mut self, plan: &str) -> Self {
+        self.fault_plan = plan.to_string();
         self
     }
 
@@ -231,6 +249,8 @@ pub fn run_method(
                 pool_threads: spec.pool_threads,
                 devices: spec.devices,
                 replicate_top: spec.replicate_top,
+                min_replicas: spec.min_replicas,
+                fault_plan: spec.fault_plan.clone(),
                 want_lm: spec.want_lm,
                 want_cls: spec.want_cls,
             };

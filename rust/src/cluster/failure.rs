@@ -1,0 +1,526 @@
+//! Deterministic fault injection for the modeled device fleet: a seeded
+//! [`FaultPlan`] of device failures/recoveries/degradations pinned to
+//! the **batch-tick timeline**, and the [`FaultInjector`] the
+//! [`crate::cluster::ClusterRouter`] consults on every routing and
+//! prefetch decision.
+//!
+//! The cluster has no wall clock it could key faults to without losing
+//! reproducibility, but it does have a deterministic timeline: the
+//! router counts served batches (`ClusterRouter::advance_batch`, called
+//! once per batch by every serving front-end).  A fault plan names tick
+//! indices on that counter, so the same plan against the same trace
+//! produces the same failures, the same failovers, and — because expert
+//! math is device-independent — the same output bits as the fault-free
+//! run.
+//!
+//! Plan grammar (comma-separated events, `--fault-plan`):
+//!
+//! ```text
+//! down:D@T..U      device D crashes at batch tick T, recovers at U:
+//!                  lanes in flight at tick T fail (retried once on
+//!                  survivors); T < tick < U the device is Down —
+//!                  excluded from assignment, prefetch, and replans;
+//!                  tick >= U it is re-admitted (replan).
+//! degrade:D@T..UxF device D's modeled transfer charges are multiplied
+//!                  by F while T <= tick < U (accounting only — the
+//!                  device still computes, so outputs are unchanged).
+//! drop:D@T         prefetches planned for device D at tick T are
+//!                  dropped (the expert degrades to a later blocking
+//!                  miss — slower, never wrong).
+//! ```
+//!
+//! Device 0 is the primary (dense stages + scatter accumulators live
+//! there, mirroring the single-device path) and cannot go down; plans
+//! that try are rejected at parse time.
+//!
+//! Health states ([`DeviceHealth`]): `Up` (normal), `Degraded`
+//! (assignable, transfer charges inflated), `Down` (excluded).  Wall
+//! downtime (`downtime_secs`) is *measured* between the Down/Up
+//! transitions — a diagnostic alongside the deterministic tick
+//! timeline, like the store's measured SSD seconds (DESIGN.md §2.6).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+/// One device's health at the current batch tick.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceHealth {
+    /// Normal operation.
+    #[default]
+    Up,
+    /// Still serving, but its modeled transfers run slower (a flaky
+    /// link, a throttled device).
+    Degraded,
+    /// Excluded from assignment, prefetch, and placement until
+    /// recovery.
+    Down,
+}
+
+/// One scheduled fault on the batch-tick timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Device crashes at tick `at`, recovers at tick `until`.
+    Down { device: usize, at: u64, until: u64 },
+    /// Transfer charges on `device` multiplied by `factor_milli`/1000
+    /// while `at <= tick < until` (stored in milli-units so the event
+    /// stays `Eq` and exactly round-trippable through the grammar).
+    Degrade { device: usize, at: u64, until: u64, factor_milli: u64 },
+    /// Prefetches planned for `device` at tick `at` are dropped.
+    DropFetch { device: usize, at: u64 },
+}
+
+impl fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultEvent::Down { device, at, until } => {
+                write!(f, "down:{device}@{at}..{until}")
+            }
+            FaultEvent::Degrade { device, at, until, factor_milli } => {
+                write!(f, "degrade:{device}@{at}..{until}x{}", *factor_milli as f64 / 1000.0)
+            }
+            FaultEvent::DropFetch { device, at } => write!(f, "drop:{device}@{at}"),
+        }
+    }
+}
+
+/// A deterministic fault schedule: a list of [`FaultEvent`]s on the
+/// batch-tick timeline.  Parse one from the `--fault-plan` grammar or
+/// generate one with [`FaultPlan::seeded_random`]; `to_string()`
+/// round-trips through [`FaultPlan::parse`].
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{e}")?;
+        }
+        Ok(())
+    }
+}
+
+impl FaultPlan {
+    /// Parse the `--fault-plan` grammar (see the module docs).  An
+    /// empty string is the empty (fault-free) plan.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let mut events = Vec::new();
+        for part in text.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let event = Self::parse_event(part)
+                .with_context(|| format!("bad fault event '{part}'"))?;
+            events.push(event);
+        }
+        Ok(FaultPlan { events })
+    }
+
+    fn parse_event(part: &str) -> Result<FaultEvent> {
+        let (kind, rest) = part
+            .split_once(':')
+            .context("expected down:D@T..U, degrade:D@T..UxF, or drop:D@T")?;
+        let (dev, when) = rest.split_once('@').context("expected D@<ticks>")?;
+        let device: usize = dev.parse().context("bad device index")?;
+        match kind {
+            "down" => {
+                let (at, until) = parse_range(when)?;
+                if device == 0 {
+                    bail!("device 0 is the primary and cannot go down");
+                }
+                Ok(FaultEvent::Down { device, at, until })
+            }
+            "degrade" => {
+                let (range, factor) =
+                    when.split_once('x').context("expected T..UxF")?;
+                let (at, until) = parse_range(range)?;
+                let factor: f64 = factor.parse().context("bad degrade factor")?;
+                if !(factor > 0.0) {
+                    bail!("degrade factor must be > 0");
+                }
+                Ok(FaultEvent::Degrade {
+                    device,
+                    at,
+                    until,
+                    factor_milli: (factor * 1000.0).round() as u64,
+                })
+            }
+            "drop" => {
+                let at: u64 = when.parse().context("bad drop tick")?;
+                Ok(FaultEvent::DropFetch { device, at })
+            }
+            other => bail!("unknown fault kind '{other}' (down|degrade|drop)"),
+        }
+    }
+
+    /// A reproducible random schedule for property tests: 1–3 events
+    /// over devices `1..devices` (device 0 never fails) within
+    /// `max_tick` batch ticks.
+    pub fn seeded_random(seed: u64, devices: usize, max_tick: u64) -> FaultPlan {
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0xFA17_FA17);
+        let mut events = Vec::new();
+        if devices < 2 || max_tick < 2 {
+            return FaultPlan { events };
+        }
+        let n = 1 + rng.usize_below(3);
+        for _ in 0..n {
+            let device = 1 + rng.usize_below(devices - 1);
+            let at = 1 + rng.below(max_tick - 1);
+            let until = (at + 1 + rng.below(max_tick)).min(at + max_tick);
+            match rng.usize_below(3) {
+                0 => events.push(FaultEvent::Down { device, at, until }),
+                1 => events.push(FaultEvent::Degrade {
+                    device,
+                    at,
+                    until,
+                    factor_milli: 1000 * (2 + rng.below(7)),
+                }),
+                _ => events.push(FaultEvent::DropFetch { device, at }),
+            }
+        }
+        FaultPlan { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Every device an event references must exist in a fleet of
+    /// `devices` devices (checked when the router adopts the plan).
+    pub fn validate(&self, devices: usize) -> Result<()> {
+        for e in &self.events {
+            let (d, label) = match *e {
+                FaultEvent::Down { device, at, until } => {
+                    if until <= at {
+                        bail!("down:{device}@{at}..{until}: recovery must follow failure");
+                    }
+                    (device, "down")
+                }
+                FaultEvent::Degrade { device, at, until, .. } => {
+                    if until <= at {
+                        bail!("degrade:{device}@{at}..{until}: window must be non-empty");
+                    }
+                    (device, "degrade")
+                }
+                FaultEvent::DropFetch { device, .. } => (device, "drop"),
+            };
+            if d >= devices {
+                bail!("{label} event names device {d}, fleet has {devices}");
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_range(text: &str) -> Result<(u64, u64)> {
+    let (a, b) = text.split_once("..").context("expected T..U")?;
+    let at: u64 = a.parse().context("bad start tick")?;
+    let until: u64 = b.parse().context("bad end tick")?;
+    if until <= at {
+        bail!("tick window {at}..{until} is empty");
+    }
+    Ok((at, until))
+}
+
+/// What one batch-tick advance changed.
+#[derive(Debug, Default, Clone)]
+pub struct TickTransitions {
+    /// devices that transitioned Up/Degraded → Down on this tick
+    pub went_down: Vec<usize>,
+    /// devices that transitioned Down → Up/Degraded on this tick
+    pub recovered: Vec<usize>,
+}
+
+impl TickTransitions {
+    /// Whether this tick changed any device's Down status — the
+    /// router's replan trigger.
+    pub fn any(&self) -> bool {
+        !self.went_down.is_empty() || !self.recovered.is_empty()
+    }
+}
+
+/// The runtime side of a [`FaultPlan`]: tracks the batch-tick counter,
+/// answers health queries deterministically from (plan, tick), and
+/// measures wall downtime across Down/Up transitions.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    devices: usize,
+    tick: AtomicU64,
+    /// when each currently-Down device went down (wall clock, for the
+    /// measured `downtime_secs` diagnostic)
+    down_since: Mutex<Vec<Option<Instant>>>,
+    downtime_secs: Mutex<f64>,
+    device_failures: AtomicU64,
+    recoveries: AtomicU64,
+    dropped_fetches: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan, devices: usize) -> Self {
+        FaultInjector {
+            plan,
+            devices,
+            tick: AtomicU64::new(0),
+            down_since: Mutex::new(vec![None; devices]),
+            downtime_secs: Mutex::new(0.0),
+            device_failures: AtomicU64::new(0),
+            recoveries: AtomicU64::new(0),
+            dropped_fetches: AtomicU64::new(0),
+        }
+    }
+
+    /// The current batch tick (0 before any batch was served).
+    pub fn tick(&self) -> u64 {
+        self.tick.load(Ordering::Relaxed)
+    }
+
+    /// Health of `device` at tick `t`, purely from the plan: Down while
+    /// strictly inside a crash window (`at < t < until` — at `t == at`
+    /// the device is still assignable but its in-flight lanes fail, see
+    /// [`FaultInjector::lane_should_fail`]), Degraded inside a degrade
+    /// window, Up otherwise.
+    pub fn health_at(&self, device: usize, t: u64) -> DeviceHealth {
+        for e in &self.plan.events {
+            if let FaultEvent::Down { device: d, at, until } = *e {
+                if d == device && at < t && t < until {
+                    return DeviceHealth::Down;
+                }
+            }
+        }
+        for e in &self.plan.events {
+            if let FaultEvent::Degrade { device: d, at, until, .. } = *e {
+                if d == device && at <= t && t < until {
+                    return DeviceHealth::Degraded;
+                }
+            }
+        }
+        DeviceHealth::Up
+    }
+
+    /// Health of `device` at the current tick.
+    pub fn health(&self, device: usize) -> DeviceHealth {
+        self.health_at(device, self.tick())
+    }
+
+    /// Advance the batch-tick counter by one and report the Down/Up
+    /// transitions it caused.  Called once per served batch by the
+    /// router; also maintains the failure/recovery counters and the
+    /// measured wall downtime.
+    pub fn advance(&self) -> TickTransitions {
+        let old = self.tick.fetch_add(1, Ordering::SeqCst);
+        let new = old + 1;
+        let mut out = TickTransitions::default();
+        if self.plan.is_empty() {
+            return out;
+        }
+        let mut down_since = self.down_since.lock().unwrap_or_else(|e| e.into_inner());
+        for device in 0..self.devices {
+            let was = self.health_at(device, old) == DeviceHealth::Down;
+            let is = self.health_at(device, new) == DeviceHealth::Down;
+            match (was, is) {
+                (false, true) => {
+                    self.device_failures.fetch_add(1, Ordering::Relaxed);
+                    down_since[device] = Some(Instant::now());
+                    out.went_down.push(device);
+                }
+                (true, false) => {
+                    self.recoveries.fetch_add(1, Ordering::Relaxed);
+                    if let Some(t0) = down_since[device].take() {
+                        *self.downtime_secs.lock().unwrap_or_else(|e| e.into_inner()) +=
+                            t0.elapsed().as_secs_f64();
+                    }
+                    out.recovered.push(device);
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Whether a lane executing on `device` during the current tick
+    /// fails (the crash lands mid-batch: the device was assignable when
+    /// the layer was routed, its in-flight work is lost and must be
+    /// retried on survivors).
+    pub fn lane_should_fail(&self, device: usize) -> bool {
+        let t = self.tick();
+        self.plan.events.iter().any(|e| {
+            matches!(*e, FaultEvent::Down { device: d, at, .. } if d == device && at == t)
+        })
+    }
+
+    /// The multiplier on `device`'s modeled transfer charges at the
+    /// current tick (1.0 when healthy).  Accounting only: a degraded
+    /// device still computes, so outputs are untouched.
+    pub fn degrade_factor(&self, device: usize) -> f64 {
+        let t = self.tick();
+        let mut factor = 1.0;
+        for e in &self.plan.events {
+            if let FaultEvent::Degrade { device: d, at, until, factor_milli } = *e {
+                if d == device && at <= t && t < until {
+                    factor *= factor_milli as f64 / 1000.0;
+                }
+            }
+        }
+        factor
+    }
+
+    /// Whether prefetches planned for `device` at the current tick are
+    /// dropped; counts the drop when they are.
+    pub fn drops_fetch(&self, device: usize) -> bool {
+        let t = self.tick();
+        let dropped = self.plan.events.iter().any(|e| {
+            matches!(*e, FaultEvent::DropFetch { device: d, at } if d == device && at == t)
+        });
+        if dropped {
+            self.dropped_fetches.fetch_add(1, Ordering::Relaxed);
+        }
+        dropped
+    }
+
+    /// Devices not Down at the current tick, ascending.  Never empty:
+    /// device 0 cannot go down.
+    pub fn healthy_devices(&self) -> Vec<usize> {
+        (0..self.devices).filter(|&d| self.health(d) != DeviceHealth::Down).collect()
+    }
+
+    pub fn device_failures(&self) -> u64 {
+        self.device_failures.load(Ordering::Relaxed)
+    }
+
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries.load(Ordering::Relaxed)
+    }
+
+    pub fn dropped_fetches(&self) -> u64 {
+        self.dropped_fetches.load(Ordering::Relaxed)
+    }
+
+    /// Measured wall seconds devices have spent Down — completed
+    /// outages plus the in-flight portion of any device still down.
+    pub fn downtime_secs(&self) -> f64 {
+        let completed = *self.downtime_secs.lock().unwrap_or_else(|e| e.into_inner());
+        let down_since = self.down_since.lock().unwrap_or_else(|e| e.into_inner());
+        completed
+            + down_since
+                .iter()
+                .filter_map(|t0| t0.map(|t| t.elapsed().as_secs_f64()))
+                .sum::<f64>()
+    }
+
+    /// Zero the fault counters and the measured downtime (a new
+    /// measurement epoch); the tick counter and plan are state, not
+    /// statistics, and carry over.
+    pub fn reset_stats(&self) {
+        self.device_failures.store(0, Ordering::Relaxed);
+        self.recoveries.store(0, Ordering::Relaxed);
+        self.dropped_fetches.store(0, Ordering::Relaxed);
+        *self.downtime_secs.lock().unwrap_or_else(|e| e.into_inner()) = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_round_trips() {
+        let text = "down:1@3..8,degrade:2@1..4x3.5,drop:3@5";
+        let plan = FaultPlan::parse(text).unwrap();
+        assert_eq!(plan.events().len(), 3);
+        assert_eq!(plan.to_string(), text);
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_plans_are_rejected() {
+        assert!(FaultPlan::parse("down:0@1..5").is_err(), "primary cannot fail");
+        assert!(FaultPlan::parse("down:1@5..5").is_err(), "empty window");
+        assert!(FaultPlan::parse("down:1@5..3").is_err(), "inverted window");
+        assert!(FaultPlan::parse("degrade:1@1..3x0").is_err(), "zero factor");
+        assert!(FaultPlan::parse("explode:1@1..3").is_err(), "unknown kind");
+        assert!(FaultPlan::parse("down:1").is_err(), "missing ticks");
+        let plan = FaultPlan::parse("down:5@1..3").unwrap();
+        assert!(plan.validate(4).is_err(), "device out of fleet range");
+        assert!(plan.validate(6).is_ok());
+    }
+
+    #[test]
+    fn health_timeline_matches_the_grammar_semantics() {
+        let inj =
+            FaultInjector::new(FaultPlan::parse("down:1@2..5,degrade:2@1..4x2").unwrap(), 3);
+        // tick 2: still assignable, but in-flight lanes fail
+        assert_eq!(inj.health_at(1, 2), DeviceHealth::Up);
+        assert_eq!(inj.health_at(1, 3), DeviceHealth::Down);
+        assert_eq!(inj.health_at(1, 4), DeviceHealth::Down);
+        assert_eq!(inj.health_at(1, 5), DeviceHealth::Up);
+        assert_eq!(inj.health_at(2, 1), DeviceHealth::Degraded);
+        assert_eq!(inj.health_at(2, 4), DeviceHealth::Up);
+        assert_eq!(inj.health_at(0, 3), DeviceHealth::Up);
+    }
+
+    #[test]
+    fn advance_reports_transitions_and_measures_downtime() {
+        let inj = FaultInjector::new(FaultPlan::parse("down:1@1..3").unwrap(), 2);
+        assert!(!inj.advance().any(), "tick 1: lane-fail window, not Down yet");
+        assert!(inj.lane_should_fail(1));
+        assert!(!inj.lane_should_fail(0));
+        let t = inj.advance(); // tick 2: Down
+        assert_eq!(t.went_down, vec![1]);
+        assert_eq!(inj.health(1), DeviceHealth::Down);
+        assert_eq!(inj.healthy_devices(), vec![0]);
+        assert!(inj.downtime_secs() >= 0.0);
+        let t = inj.advance(); // tick 3: recovered
+        assert_eq!(t.recovered, vec![1]);
+        assert_eq!(inj.health(1), DeviceHealth::Up);
+        assert_eq!(inj.device_failures(), 1);
+        assert_eq!(inj.recoveries(), 1);
+        assert!(inj.downtime_secs() > 0.0, "a completed outage has wall duration");
+    }
+
+    #[test]
+    fn degrade_and_drop_consult_the_current_tick() {
+        let inj =
+            FaultInjector::new(FaultPlan::parse("degrade:1@1..3x4,drop:1@2").unwrap(), 2);
+        assert_eq!(inj.degrade_factor(1), 1.0, "tick 0: window not open");
+        inj.advance();
+        assert!((inj.degrade_factor(1) - 4.0).abs() < 1e-12);
+        assert!(!inj.drops_fetch(1), "drop fires only at its tick");
+        inj.advance();
+        assert!(inj.drops_fetch(1));
+        assert_eq!(inj.dropped_fetches(), 1);
+        inj.advance();
+        assert_eq!(inj.degrade_factor(1), 1.0, "window closed");
+    }
+
+    #[test]
+    fn seeded_random_is_reproducible_and_valid() {
+        for seed in 0..32u64 {
+            let a = FaultPlan::seeded_random(seed, 4, 16);
+            let b = FaultPlan::seeded_random(seed, 4, 16);
+            assert_eq!(a, b);
+            a.validate(4).unwrap();
+            // the grammar round-trips every generated plan
+            assert_eq!(FaultPlan::parse(&a.to_string()).unwrap(), a);
+        }
+        assert_ne!(
+            FaultPlan::seeded_random(1, 4, 16),
+            FaultPlan::seeded_random(2, 4, 16),
+            "different seeds should differ (overwhelmingly)"
+        );
+    }
+}

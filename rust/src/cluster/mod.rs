@@ -41,11 +41,13 @@
 //! [`TierCosts`]: crate::memory::TierCosts
 
 pub mod device;
+pub mod failure;
 pub mod placement;
 pub mod router;
 pub mod stats;
 
 pub use device::{Device, DeviceSet};
+pub use failure::{DeviceHealth, FaultEvent, FaultInjector, FaultPlan};
 pub use placement::{ActivationProfile, Placement, PlacementPlanner};
 pub use router::{ClusterFetch, ClusterRouter};
 pub use stats::{ClusterStats, DeviceStats};
@@ -74,6 +76,13 @@ pub struct ClusterConfig {
     pub host_ram_budget: usize,
     /// the RAM window's own eviction policy (`--ram-policy`)
     pub ram_policy: String,
+    /// availability floor: every predicted-hot expert should have at
+    /// least this many holders, best-effort under per-device capacity
+    /// (`--min-replicas`; 1 = the home alone, i.e. no floor)
+    pub min_replicas: usize,
+    /// deterministic fault schedule on the batch-tick timeline
+    /// (`--fault-plan`, [`FaultPlan`] grammar; empty = fault-free)
+    pub fault_plan: String,
 }
 
 impl Default for ClusterConfig {
@@ -87,6 +96,8 @@ impl Default for ClusterConfig {
             link: TierCosts::default(),
             host_ram_budget: crate::memory::DEFAULT_RAM_BUDGET,
             ram_policy: "fifo".into(),
+            min_replicas: 1,
+            fault_plan: String::new(),
         }
     }
 }

@@ -162,6 +162,10 @@ pub struct PlacementPlanner {
     /// max placement entries per device (simulated budget / simulated
     /// expert bytes); caps replicas only — homes are always assigned
     pub capacity_per_device: usize,
+    /// availability floor: every predicted-hot expert (nonzero profile
+    /// count) gets at least this many holders, best-effort under
+    /// capacity.  1 (the default) is no floor — the home alone.
+    pub min_replicas: usize,
 }
 
 impl PlacementPlanner {
@@ -170,7 +174,14 @@ impl PlacementPlanner {
             devices: devices.max(1),
             replicate_top,
             capacity_per_device: capacity_per_device.max(1),
+            min_replicas: 1,
         }
+    }
+
+    /// Set the `--min-replicas` availability floor (clamped to ≥ 1).
+    pub fn with_min_replicas(mut self, min_replicas: usize) -> Self {
+        self.min_replicas = min_replicas.max(1);
+        self
     }
 
     /// Plan homes + replicas for every (MoE block, expert) of `topo`
@@ -179,15 +190,40 @@ impl PlacementPlanner {
     /// deterministic round-robin with the lowest-indexed experts
     /// replicated — replaced as soon as traffic is observed.
     pub fn plan(&self, topo: &Topology, profile: &ActivationProfile) -> Placement {
+        let all: Vec<usize> = (0..self.devices).collect();
+        self.plan_healthy(topo, profile, &all)
+    }
+
+    /// [`PlacementPlanner::plan`] restricted to the `healthy` devices
+    /// (ascending ids): homes and replicas land only on healthy devices
+    /// — how the router replans around a Down device and re-admits a
+    /// recovered one (DESIGN.md §2.7).  The placement still spans the
+    /// full fleet (`devices` unchanged), the excluded devices just hold
+    /// nothing.  An empty `healthy` list degenerates to the full fleet
+    /// (the all-down guard; unreachable in practice — device 0 cannot
+    /// fail).
+    pub fn plan_healthy(
+        &self,
+        topo: &Topology,
+        profile: &ActivationProfile,
+        healthy: &[usize],
+    ) -> Placement {
+        let all: Vec<usize>;
+        let healthy = if healthy.is_empty() {
+            all = (0..self.devices).collect();
+            &all[..]
+        } else {
+            healthy
+        };
         let mut home = BTreeMap::new();
         let mut holders: BTreeMap<ExpertKey, Vec<usize>> = BTreeMap::new();
         let mut entries = vec![0usize; self.devices];
 
-        // per-layer home cap: each device homes at most ⌈E/N⌉ experts
-        // of one layer, so cold experts cannot all pile onto whichever
-        // device happens to carry the least predicted load — per-device
-        // expert *memory* stays balanced along with the load
-        let home_cap = topo.num_experts.div_ceil(self.devices);
+        // per-layer home cap: each healthy device homes at most ⌈E/H⌉
+        // experts of one layer, so cold experts cannot all pile onto
+        // whichever device happens to carry the least predicted load —
+        // per-device expert *memory* stays balanced along with the load
+        let home_cap = topo.num_experts.div_ceil(healthy.len());
         let mut ranked_by_block: Vec<(usize, Vec<(u64, usize)>)> = Vec::new();
         for &block in &topo.moe_blocks {
             // hottest first; ties by ascending expert id (deterministic)
@@ -196,12 +232,14 @@ impl PlacementPlanner {
                 .collect();
             ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
 
-            // greedy homes: least predicted load among devices under
-            // the home cap; ties on fewer homes, then device id
+            // greedy homes: least predicted load among healthy devices
+            // under the home cap; ties on fewer homes, then device id
             let mut load = vec![0u64; self.devices];
             let mut homes_in_layer = vec![0usize; self.devices];
             for &(count, expert) in &ranked {
-                let dev = (0..self.devices)
+                let dev = healthy
+                    .iter()
+                    .copied()
                     .filter(|&d| homes_in_layer[d] < home_cap)
                     .min_by_key(|&d| (load[d], homes_in_layer[d], d))
                     .expect("home cap admits all experts");
@@ -224,7 +262,7 @@ impl PlacementPlanner {
             for &(_, expert) in ranked.iter().take(self.replicate_top) {
                 let key = ExpertKey::new(*block, expert);
                 let hs = holders.get_mut(&key).expect("homed above");
-                for dev in 0..self.devices {
+                for &dev in healthy {
                     if hs.contains(&dev) {
                         continue;
                     }
@@ -235,6 +273,42 @@ impl PlacementPlanner {
                     entries[dev] += 1;
                 }
                 hs.sort_unstable();
+            }
+        }
+
+        // Availability floor (`--min-replicas K`): every predicted-hot
+        // expert should survive K-1 device losses, so give it K holders
+        // — hottest experts first, so under tight capacity the floor
+        // protects the traffic that matters most.  Best-effort: when no
+        // healthy device has spare capacity the expert keeps the
+        // holders it has (the runtime cache still refabricates from
+        // host RAM on demand — availability degrades, correctness does
+        // not).
+        let want = self.min_replicas.min(healthy.len());
+        if want > 1 {
+            for (block, ranked) in &ranked_by_block {
+                for &(count, expert) in ranked {
+                    if count == 0 {
+                        continue; // floor covers predicted-hot experts
+                    }
+                    let key = ExpertKey::new(*block, expert);
+                    let hs = holders.get_mut(&key).expect("homed above");
+                    while hs.len() < want {
+                        // least-filled healthy device with room, ties on id
+                        let Some(dev) = healthy
+                            .iter()
+                            .copied()
+                            .filter(|d| !hs.contains(d))
+                            .filter(|&d| entries[d] < self.capacity_per_device)
+                            .min_by_key(|&d| (entries[d], d))
+                        else {
+                            break;
+                        };
+                        hs.push(dev);
+                        entries[dev] += 1;
+                    }
+                    hs.sort_unstable();
+                }
             }
         }
         Placement { devices: self.devices, home, holders }
@@ -314,6 +388,56 @@ mod tests {
             placement.home_of(&ExpertKey::new(block, 3)),
             placement.home_of(&ExpertKey::new(block, 6)),
         );
+    }
+
+    #[test]
+    fn min_replicas_floor_covers_predicted_hot_experts() {
+        let b = testkit::tiny_bundle();
+        let block = b.topology.moe_blocks[0];
+        let profile = profile_with(&[(block, 1, 10), (block, 4, 5), (block, 6, 1)]);
+        let placement =
+            PlacementPlanner::new(4, 0, 64).with_min_replicas(2).plan(&b.topology, &profile);
+        placement.check_invariants(&b.topology).unwrap();
+        for &expert in &[1usize, 4, 6] {
+            assert!(
+                placement.holders(&ExpertKey::new(block, expert)).len() >= 2,
+                "hot expert {expert} must meet the availability floor"
+            );
+        }
+        // cold experts are not floored
+        assert_eq!(placement.holders(&ExpertKey::new(block, 0)).len(), 1);
+    }
+
+    #[test]
+    fn min_replicas_is_best_effort_under_capacity() {
+        let b = testkit::tiny_bundle();
+        let block = b.topology.moe_blocks[0];
+        let profile = profile_with(&[(block, 1, 10), (block, 2, 9)]);
+        // 8 experts over 2 devices = 4 homes each, filling capacity 4
+        // exactly: no room for any floor replica, and no panic
+        let placement =
+            PlacementPlanner::new(2, 0, 4).with_min_replicas(2).plan(&b.topology, &profile);
+        placement.check_invariants(&b.topology).unwrap();
+        assert_eq!(placement.replicated_entries(), 0);
+    }
+
+    #[test]
+    fn plan_healthy_homes_only_on_healthy_devices() {
+        let b = testkit::tiny_bundle();
+        let block = b.topology.moe_blocks[0];
+        let profile = profile_with(&[(block, 3, 100)]);
+        let planner = PlacementPlanner::new(4, 1, 64).with_min_replicas(2);
+        let placement = planner.plan_healthy(&b.topology, &profile, &[0, 2, 3]);
+        placement.check_invariants(&b.topology).unwrap();
+        assert_eq!(placement.devices(), 4, "fleet size unchanged");
+        assert_eq!(placement.assigned_to(1), 0, "Down device holds nothing");
+        for key in placement.keys() {
+            assert!(!placement.holders(key).contains(&1));
+        }
+        // the all-down guard degenerates to the full fleet
+        let placement = planner.plan_healthy(&b.topology, &profile, &[]);
+        placement.check_invariants(&b.topology).unwrap();
+        assert!(placement.assigned_to(1) > 0);
     }
 
     #[test]

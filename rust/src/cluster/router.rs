@@ -15,6 +15,22 @@
 //! bit-identical to single-device serving regardless of assignment
 //! because assignment only decides *where* an invocation computes,
 //! never how results are merged.
+//!
+//! **Failure model** (DESIGN.md §2.7): the router owns a
+//! [`FaultInjector`] on the batch-tick timeline
+//! ([`ClusterRouter::advance_batch`], called once per served batch).
+//! Down devices are skipped by `assign`, `plan_layer`, and
+//! `fetch_planned`; a job whose home is Down steers to a healthy
+//! replica (`failovers`) or, with no healthy holder at all, is
+//! emergency-promoted onto the least-loaded healthy device
+//! (`failover_promotions` — the promotion pays its expert fetch on the
+//! modeled timeline via the lane's blocking ensure).  Lanes in flight
+//! when a device crashes are recomputed once on a survivor
+//! (`retries`, `model::forward::run_cluster_lanes`).  Every Down/Up
+//! transition triggers a replan that excludes the dead device or
+//! re-admits the recovered one.  None of this can change outputs: the
+//! fault schedule only perturbs *where* jobs compute, and the scatter
+//! stays on the primary in ascending expert order.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
@@ -22,6 +38,7 @@ use std::sync::{Mutex, RwLock};
 use anyhow::Result;
 
 use crate::cluster::device::DeviceSet;
+use crate::cluster::failure::{DeviceHealth, FaultInjector, FaultPlan};
 use crate::cluster::placement::{ActivationProfile, Placement, PlacementPlanner};
 use crate::cluster::stats::{ClusterStats, DeviceStats};
 use crate::cluster::ClusterConfig;
@@ -61,6 +78,15 @@ pub struct ClusterRouter {
     cross_device_bytes: AtomicU64,
     interconnect_secs: Mutex<f64>,
     replans: AtomicU64,
+    /// deterministic fault timeline + per-device health (§2.7)
+    injector: FaultInjector,
+    /// jobs rerouted because their home device was Down
+    failovers: AtomicU64,
+    /// failovers that found no healthy holder and promoted the expert
+    /// onto a fresh device
+    failover_promotions: AtomicU64,
+    /// lanes lost to a mid-batch crash and recomputed on survivors
+    retries: AtomicU64,
     d_model: usize,
     moe_blocks: Vec<usize>,
     /// the served model's topology — bucket geometry for lane weighting
@@ -87,7 +113,10 @@ impl ClusterRouter {
             &cfg.ram_policy,
         )?;
         let capacity = (cfg.budget_per_device / expert_sim_bytes.max(1)).max(1);
-        let planner = PlacementPlanner::new(cfg.devices, cfg.replicate_top, capacity);
+        let planner = PlacementPlanner::new(cfg.devices, cfg.replicate_top, capacity)
+            .with_min_replicas(cfg.min_replicas);
+        let fault_plan = FaultPlan::parse(&cfg.fault_plan)?;
+        fault_plan.validate(cfg.devices)?;
         let placement = planner.plan(topo, &ActivationProfile::default());
         let rows = (0..cfg.devices).map(|_| AtomicU64::new(0)).collect();
         let bucket_units = (0..cfg.devices).map(|_| AtomicU64::new(0)).collect();
@@ -102,6 +131,10 @@ impl ClusterRouter {
             cross_device_bytes: AtomicU64::new(0),
             interconnect_secs: Mutex::new(0.0),
             replans: AtomicU64::new(0),
+            injector: FaultInjector::new(fault_plan, cfg.devices),
+            failovers: AtomicU64::new(0),
+            failover_promotions: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
             d_model: topo.d_model,
             moe_blocks: topo.moe_blocks.clone(),
             topo: bundle.topology.clone(),
@@ -133,15 +166,97 @@ impl ClusterRouter {
         }
     }
 
-    /// Re-plan placement from everything observed so far.  Takes the
-    /// write lock briefly; in-flight assignments finish on the old plan
-    /// (correctness does not depend on which plan routed a job).
+    /// Re-plan placement from everything observed so far, on the
+    /// currently healthy devices only (Down devices hold nothing until
+    /// they recover).  Takes the write lock briefly; in-flight
+    /// assignments finish on the old plan (correctness does not depend
+    /// on which plan routed a job).
     pub fn replan_now(&self, bundle: &ModelBundle) {
         let profile = self.profile.lock().unwrap().clone();
-        let new_plan = self.planner.plan(&bundle.topology, &profile);
+        let healthy = self.injector.healthy_devices();
+        let new_plan = self.planner.plan_healthy(&bundle.topology, &profile, &healthy);
         *self.placement.write().unwrap() = new_plan;
         self.observed_at_plan.store(profile.observed_tables(), Ordering::Relaxed);
         self.replans.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Advance the fault timeline by one batch tick — called exactly
+    /// once per served batch by every serving front-end (pipeline,
+    /// scheduler replay, TCP server).  A device failing or recovering
+    /// on this tick triggers an immediate replan: failure evacuates its
+    /// placement entries to the survivors, recovery re-admits it.
+    ///
+    /// The evacuation is accounted before the replan erases the
+    /// evidence: every placement entry homed on a device that just went
+    /// down is a failover — to a healthy replica when another holder
+    /// exists, else an emergency promotion (the replan hands the expert
+    /// a fresh healthy home, which pays the weight fetch on first use).
+    pub fn advance_batch(&self, bundle: &ModelBundle) {
+        let transitions = self.injector.advance();
+        if !transitions.any() {
+            return;
+        }
+        if !transitions.went_down.is_empty() {
+            let placement = self.placement.read().unwrap();
+            for key in placement.keys() {
+                if !transitions.went_down.contains(&placement.home_of(key)) {
+                    continue;
+                }
+                self.failovers.fetch_add(1, Ordering::Relaxed);
+                let survives = placement
+                    .holders(key)
+                    .iter()
+                    .any(|&d| self.injector.health(d) != DeviceHealth::Down);
+                if !survives {
+                    self.failover_promotions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        self.replan_now(bundle);
+    }
+
+    /// The fault timeline and per-device health (diagnostics, tests).
+    pub fn injector(&self) -> &FaultInjector {
+        &self.injector
+    }
+
+    /// Whether a lane on `device` crashes mid-batch at the current tick
+    /// (consulted by `run_cluster_lanes` before it merges results).
+    pub fn lane_should_fail(&self, device: usize) -> bool {
+        self.injector.lane_should_fail(device)
+    }
+
+    /// Pick the survivor that recomputes a lost job `(block, expert,
+    /// rows)` after `failed` crashed mid-batch: the lowest-id holder
+    /// that is healthy and not itself crashing this tick, else the
+    /// primary (which can never fail).  Counts the retry and records
+    /// the survivor's extra load — the lost work consumed the dead
+    /// device AND the survivor, and the balancer should see both.
+    pub fn retry_assignment(
+        &self,
+        block: usize,
+        expert: usize,
+        rows: usize,
+        failed: usize,
+    ) -> usize {
+        let key = ExpertKey::new(block, expert);
+        let placement = self.placement.read().unwrap();
+        let dev = placement
+            .holders(&key)
+            .iter()
+            .copied()
+            .filter(|&d| {
+                d != failed
+                    && self.injector.health(d) != DeviceHealth::Down
+                    && !self.injector.lane_should_fail(d)
+            })
+            .min()
+            .unwrap_or(0);
+        drop(placement);
+        self.retries.fetch_add(1, Ordering::Relaxed);
+        self.rows[dev].fetch_add(rows as u64, Ordering::Relaxed);
+        self.bucket_units[dev].fetch_add(self.job_bucket_units(rows) as u64, Ordering::Relaxed);
+        dev
     }
 
     /// Re-plan when the profile has grown meaningfully since the last
@@ -191,12 +306,37 @@ impl ClusterRouter {
         let mut units = Vec::with_capacity(jobs.len());
         for &(expert, rows) in jobs {
             let key = ExpertKey::new(block, expert);
-            let dev = placement
+            // Down devices are invisible to routing; a job whose home is
+            // Down steers to a healthy replica holder (failover).  With
+            // no healthy holder at all the expert is emergency-promoted:
+            // routed to the least-loaded healthy device, where the
+            // lane's blocking ensure fetches the weights — charged on
+            // the modeled transfer timeline like any cold miss.  Either
+            // way only *where* the job computes changes, so outputs stay
+            // bit-identical to the fault-free run.
+            let dev = match placement
                 .holders(&key)
                 .iter()
                 .copied()
+                .filter(|&d| self.injector.health(d) != DeviceHealth::Down)
                 .min_by_key(|&d| (loads[d], d))
-                .unwrap_or(0);
+            {
+                Some(d) => {
+                    let home = placement.home_of(&key);
+                    if self.injector.health(home) == DeviceHealth::Down {
+                        self.failovers.fetch_add(1, Ordering::Relaxed);
+                    }
+                    d
+                }
+                None => {
+                    self.failovers.fetch_add(1, Ordering::Relaxed);
+                    self.failover_promotions.fetch_add(1, Ordering::Relaxed);
+                    (0..self.set.len())
+                        .filter(|&d| self.injector.health(d) != DeviceHealth::Down)
+                        .min_by_key(|&d| (loads[d], d))
+                        .unwrap_or(0)
+                }
+            };
             let w = self.job_bucket_units(rows);
             loads[dev] += w;
             units.push(w);
@@ -220,7 +360,9 @@ impl ClusterRouter {
             return 0.0;
         }
         let bytes = 2 * n_rows * self.d_model * std::mem::size_of::<f32>();
-        let secs = self.set.link_secs(bytes);
+        // a Degraded device still computes (outputs untouched) but its
+        // fabric runs slower: the modeled charge is inflated (§2.7)
+        let secs = self.set.link_secs(bytes) * self.injector.degrade_factor(device);
         self.cross_device_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         *self.interconnect_secs.lock().unwrap() += secs;
         secs
@@ -246,6 +388,9 @@ impl ClusterRouter {
         for (expert, token_count) in counts {
             let key = ExpertKey::new(block, expert);
             for &device in placement.holders(&key) {
+                if self.injector.health(device) == DeviceHealth::Down {
+                    continue; // never warm a dead device
+                }
                 let tier = self.set.device(device).tier_of(&key);
                 if tier != Tier::Device {
                     plan.push(ClusterFetch { key, device, token_count, tier });
@@ -268,6 +413,15 @@ impl ClusterRouter {
     /// there is no separate promote bookkeeping to drift.
     pub fn fetch_planned(&self, bundle: &ModelBundle, plan: &[ClusterFetch]) -> Result<()> {
         for fetch in plan {
+            // a plan can outlive a health transition (it was computed at
+            // an earlier tick); drop-fetch faults swallow the prefetch
+            // entirely — the expert degrades to a later blocking miss,
+            // which is slower but never wrong
+            if self.injector.health(fetch.device) == DeviceHealth::Down
+                || self.injector.drops_fetch(fetch.device)
+            {
+                continue;
+            }
             let key = fetch.key;
             let real = bundle.weights.expert_bytes(key.block, key.expert)?;
             let _ = self.set.device(fetch.device).cache.ensure(key, real, false, || {
@@ -313,6 +467,7 @@ impl ClusterRouter {
                 bucket_units: self.bucket_units[d.id].load(Ordering::Relaxed),
                 cache: d.cache.stats(),
                 hierarchy: d.hierarchy_stats(),
+                health: self.injector.health(d.id),
             })
             .collect();
         ClusterStats {
@@ -321,6 +476,13 @@ impl ClusterRouter {
             cross_device_bytes: self.cross_device_bytes.load(Ordering::Relaxed),
             interconnect_secs: *self.interconnect_secs.lock().unwrap(),
             replans: self.replans.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            failover_promotions: self.failover_promotions.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            dropped_fetches: self.injector.dropped_fetches(),
+            device_failures: self.injector.device_failures(),
+            recoveries: self.injector.recoveries(),
+            downtime_secs: self.injector.downtime_secs(),
         }
     }
 
@@ -338,6 +500,10 @@ impl ClusterRouter {
         }
         self.cross_device_bytes.store(0, Ordering::Relaxed);
         *self.interconnect_secs.lock().unwrap() = 0.0;
+        self.failovers.store(0, Ordering::Relaxed);
+        self.failover_promotions.store(0, Ordering::Relaxed);
+        self.retries.store(0, Ordering::Relaxed);
+        self.injector.reset_stats();
     }
 
     /// Every device cache's internal consistency (tests).
@@ -519,5 +685,164 @@ mod tests {
         r.observe(&pairs[1..], 1);
         r.replan_if_due(&b);
         assert_eq!(r.stats().replans, 2, "doubled traffic must replan");
+    }
+
+    fn faulty_router(
+        devices: usize,
+        replicate_top: usize,
+        min_replicas: usize,
+        fault_plan: &str,
+    ) -> (std::sync::Arc<ModelBundle>, ClusterRouter) {
+        let b = testkit::tiny_bundle();
+        let cfg = ClusterConfig {
+            devices,
+            replicate_top,
+            min_replicas,
+            fault_plan: fault_plan.into(),
+            ..ClusterConfig::default()
+        };
+        let r = ClusterRouter::new(&b, &cfg).unwrap();
+        (b, r)
+    }
+
+    #[test]
+    fn bad_fault_plans_are_rejected_at_router_construction() {
+        let b = testkit::tiny_bundle();
+        for plan in ["down:7@1..3", "down:0@1..3", "gibberish"] {
+            let cfg = ClusterConfig {
+                devices: 2,
+                fault_plan: plan.into(),
+                ..ClusterConfig::default()
+            };
+            assert!(ClusterRouter::new(&b, &cfg).is_err(), "plan '{plan}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn down_device_is_evacuated_and_readmitted() {
+        let (b, r) = faulty_router(2, 0, 1, "down:1@1..3");
+        let block = b.topology.moe_blocks[0];
+        r.advance_batch(&b); // tick 1: crash lands, device still assigned
+        assert!(r.lane_should_fail(1));
+        r.advance_batch(&b); // tick 2: Down — replan evacuates device 1
+        assert_eq!(r.placement().assigned_to(1), 0, "Down device must hold nothing");
+        let assign = r.assign(block, &(0..8).map(|e| (e, 2)).collect::<Vec<_>>());
+        assert!(assign.iter().all(|&d| d == 0), "all jobs must avoid the Down device");
+        r.advance_batch(&b); // tick 3: recovered — replan re-admits
+        assert!(r.placement().assigned_to(1) > 0, "recovered device must be re-admitted");
+        let s = r.stats();
+        assert_eq!(s.device_failures, 1);
+        assert_eq!(s.recoveries, 1);
+        assert!(s.downtime_secs > 0.0, "a completed outage has measured wall duration");
+        assert!(s.replans >= 2, "failure and recovery each replan");
+        // the cold round-robin plan homed 4 of 8 experts on device 1;
+        // all were evacuated at the down transition, and with no
+        // replicas each evacuation is an emergency promotion
+        assert_eq!(s.failovers, 4);
+        assert_eq!(s.failover_promotions, 4);
+        r.check_invariants().unwrap();
+        r.placement().check_invariants(&b.topology).unwrap();
+    }
+
+    #[test]
+    fn stale_placement_fails_over_without_promotion_when_replicas_exist() {
+        // min_replicas=2 on 2 devices: every hot expert lives on both.
+        // Freeze the placement *before* the crash (no replan between) so
+        // assignment must fail over on the stale plan: the home is Down
+        // but a healthy replica exists -> failovers without promotions.
+        let (b, r) = faulty_router(2, 0, 2, "down:1@1..9");
+        let builder = crate::coordinator::HashBuilder::new(&b, testkit::TINY_PROFILE).unwrap();
+        let reqs = testkit::tiny_trace(&b, 6, 21);
+        let masks: Vec<Vec<f32>> = reqs.iter().map(|q| q.mask()).collect();
+        let tables: Vec<_> =
+            reqs.iter().map(|q| builder.build(q.id, &q.ids).unwrap()).collect();
+        let pairs: Vec<(&HashTable, &[f32])> =
+            tables.iter().zip(masks.iter()).map(|(t, m)| (t, m.as_slice())).collect();
+        r.observe(&pairs, 1);
+        r.replan_now(&b);
+        let placement = r.placement();
+        let hot: Vec<usize> = placement
+            .keys()
+            .copied()
+            .filter(|k| placement.home_of(k) == 1 && placement.holders(k).len() == 2)
+            .map(|k| k.expert)
+            .collect();
+        assert!(!hot.is_empty(), "min_replicas=2 must replicate hot experts");
+        // advance past the crash WITHOUT letting advance_batch replan
+        r.injector().advance();
+        r.injector().advance();
+        assert_eq!(r.injector().health(1), DeviceHealth::Down);
+        let jobs: Vec<(usize, usize)> = hot.iter().map(|&e| (e, 2)).collect();
+        let assign = r.assign(b.topology.moe_blocks[0], &jobs);
+        assert!(assign.iter().all(|&d| d == 0));
+        let s = r.stats();
+        assert_eq!(s.failovers, hot.len() as u64);
+        assert_eq!(s.failover_promotions, 0, "replicas exist: no promotion needed");
+    }
+
+    #[test]
+    fn sole_holder_down_triggers_emergency_promotion() {
+        // replicate_top=0, min_replicas=1: every expert has exactly one
+        // holder.  Down the device on the stale plan and jobs for its
+        // experts must be emergency-promoted.
+        let (b, r) = faulty_router(2, 0, 1, "down:1@1..9");
+        let placement = r.placement();
+        let block = b.topology.moe_blocks[0];
+        let orphaned: Vec<usize> = placement
+            .keys()
+            .copied()
+            .filter(|k| k.block == block && placement.home_of(k) == 1)
+            .map(|k| k.expert)
+            .collect();
+        assert!(!orphaned.is_empty());
+        r.injector().advance();
+        r.injector().advance();
+        let jobs: Vec<(usize, usize)> = orphaned.iter().map(|&e| (e, 3)).collect();
+        let assign = r.assign(block, &jobs);
+        assert!(assign.iter().all(|&d| d == 0), "promotion must pick a healthy device");
+        let s = r.stats();
+        assert_eq!(s.failover_promotions, orphaned.len() as u64);
+        assert_eq!(s.failovers, orphaned.len() as u64, "promotions count as failovers too");
+    }
+
+    #[test]
+    fn retry_assignment_picks_a_live_survivor_and_records_load() {
+        let (b, r) = faulty_router(2, 0, 1, "down:1@1..3");
+        let block = b.topology.moe_blocks[0];
+        r.advance_batch(&b); // tick 1: lanes on device 1 crash
+        let dev = r.retry_assignment(block, 0, 5, 1);
+        assert_ne!(dev, 1, "the survivor cannot be the crashed device");
+        let s = r.stats();
+        assert_eq!(s.retries, 1);
+        assert_eq!(s.devices[dev].rows, 5, "retried rows charged to the survivor");
+    }
+
+    #[test]
+    fn degraded_device_pays_inflated_transfer_charges() {
+        let (b, r) = faulty_router(2, 0, 1, "degrade:1@1..2x4");
+        let base = r.charge_activation_transfer(1, 10);
+        assert!(base > 0.0);
+        r.advance_batch(&b); // tick 1: degrade window opens
+        assert_eq!(r.injector().health(1), DeviceHealth::Degraded);
+        let slow = r.charge_activation_transfer(1, 10);
+        assert!((slow - 4.0 * base).abs() < 1e-12, "factor 4 must inflate the charge");
+        let assign = r.assign(b.topology.moe_blocks[0], &[(0, 2), (1, 2)]);
+        assert!(assign.contains(&1), "Degraded devices still serve");
+    }
+
+    #[test]
+    fn dropped_fetches_skip_the_prefetch_but_count() {
+        let (b, r) = faulty_router(2, 0, 1, "drop:1@1");
+        let block = b.topology.moe_blocks[0];
+        r.advance_batch(&b); // tick 1: device 1's prefetches drop
+        let key = ExpertKey::new(block, 0);
+        let plan = vec![
+            ClusterFetch { key, device: 0, token_count: 4, tier: Tier::Ssd },
+            ClusterFetch { key, device: 1, token_count: 4, tier: Tier::Ssd },
+        ];
+        r.fetch_planned(&b, &plan).unwrap();
+        assert!(r.device_cache(0).contains(&key), "healthy device's prefetch lands");
+        assert!(!r.device_cache(1).contains(&key), "faulted device's prefetch dropped");
+        assert_eq!(r.stats().dropped_fetches, 1);
     }
 }

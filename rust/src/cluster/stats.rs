@@ -1,6 +1,7 @@
 //! Per-device and cluster-wide serving statistics: memory, cache
 //! traffic, load balance, and modeled interconnect cost.
 
+use crate::cluster::failure::DeviceHealth;
 use crate::experts::CacheStats;
 use crate::memory::HierarchyStats;
 
@@ -31,6 +32,8 @@ pub struct DeviceStats {
     /// residency ledger (per-tier occupancy, promotions per hop, ladder
     /// seconds), never modeled beside it
     pub hierarchy: HierarchyStats,
+    /// health at snapshot time (Up / Degraded / Down, DESIGN.md §2.7)
+    pub health: DeviceHealth,
 }
 
 /// Cluster-wide snapshot: every device plus the cross-device totals.
@@ -45,6 +48,24 @@ pub struct ClusterStats {
     pub interconnect_secs: f64,
     /// placement (re)computations performed
     pub replans: u64,
+    /// expert jobs rerouted because their home device was Down
+    /// (replica steering plus emergency promotions)
+    pub failovers: u64,
+    /// the subset of failovers with no healthy holder at all — the
+    /// expert was emergency-promoted onto the least-loaded healthy
+    /// device, paying the fetch on the modeled timeline
+    pub failover_promotions: u64,
+    /// lanes lost to a mid-batch crash and recomputed on survivors
+    pub retries: u64,
+    /// planned prefetches dropped by injected fetch faults
+    pub dropped_fetches: u64,
+    /// Up→Down transitions observed on the batch-tick timeline
+    pub device_failures: u64,
+    /// Down→Up transitions (each triggers a re-admitting replan)
+    pub recoveries: u64,
+    /// measured wall seconds devices spent Down (diagnostic; the fault
+    /// schedule itself is deterministic in batch ticks)
+    pub downtime_secs: f64,
 }
 
 impl ClusterStats {

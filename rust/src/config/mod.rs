@@ -55,6 +55,13 @@ pub struct ServeConfig {
     /// hottest experts per MoE layer replicated across the fleet
     /// (cluster mode only)
     pub replicate_top: usize,
+    /// availability floor: every predicted-hot expert placed on at
+    /// least this many devices (`--min-replicas`; cluster mode only)
+    pub min_replicas: usize,
+    /// deterministic fault schedule on the batch-tick timeline
+    /// (`--fault-plan`, e.g. `"down:1@8..24"`; cluster mode only,
+    /// empty = fault-free)
+    pub fault_plan: String,
     /// arrival process for the trace (`closed` replays the whole trace
     /// back-to-back; `poisson`/`bursty`/`diurnal` run the open-loop
     /// scheduler at `arrival_rate` — sida method only)
@@ -98,6 +105,8 @@ impl Default for ServeConfig {
             pool_threads: 0,
             devices: 1,
             replicate_top: 1,
+            min_replicas: 1,
+            fault_plan: String::new(),
             arrivals: "closed".into(),
             arrival_rate: 50.0,
             interactive_frac: 0.0,
@@ -134,6 +143,8 @@ impl ServeConfig {
                 "pool_threads" => cfg.pool_threads = val.as_usize()?,
                 "devices" => cfg.devices = val.as_usize()?.max(1),
                 "replicate_top" => cfg.replicate_top = val.as_usize()?,
+                "min_replicas" => cfg.min_replicas = val.as_usize()?.max(1),
+                "fault_plan" => cfg.fault_plan = val.as_str()?.to_string(),
                 "arrivals" => cfg.arrivals = val.as_str()?.to_string(),
                 "arrival_rate" => cfg.arrival_rate = val.as_f64()?,
                 "interactive_frac" => cfg.interactive_frac = val.as_f64()?.clamp(0.0, 1.0),
@@ -215,6 +226,14 @@ impl ServeConfig {
             if let Ok(x) = v.parse::<usize>() {
                 self.replicate_top = x;
             }
+        }
+        if let Some(v) = args.get("min-replicas") {
+            if let Ok(x) = v.parse::<usize>() {
+                self.min_replicas = x.max(1);
+            }
+        }
+        if let Some(v) = args.get("fault-plan") {
+            self.fault_plan = v.to_string();
         }
         if let Some(v) = args.get("arrivals") {
             self.arrivals = v.to_string();
@@ -320,6 +339,20 @@ mod tests {
         let d = ServeConfig::default();
         assert_eq!(d.devices, 1);
         assert_eq!(d.replicate_top, 1);
+    }
+
+    #[test]
+    fn fault_keys_parse_and_clamp() {
+        let j = Json::parse(r#"{"min_replicas":2,"fault_plan":"down:1@8..24"}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.min_replicas, 2);
+        assert_eq!(c.fault_plan, "down:1@8..24");
+        let j = Json::parse(r#"{"min_replicas":0}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().min_replicas, 1);
+        // defaults: no availability floor beyond one holder, fault-free
+        let d = ServeConfig::default();
+        assert_eq!(d.min_replicas, 1);
+        assert!(d.fault_plan.is_empty());
     }
 
     #[test]

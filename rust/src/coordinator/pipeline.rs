@@ -108,6 +108,14 @@ pub struct PipelineConfig {
     /// hottest experts per MoE layer replicated across the fleet
     /// (cluster mode only)
     pub replicate_top: usize,
+    /// availability floor (`--min-replicas`): every predicted-hot
+    /// expert placed on at least this many devices, best-effort under
+    /// capacity (cluster mode only; 1 = no floor)
+    pub min_replicas: usize,
+    /// deterministic fault schedule on the batch-tick timeline
+    /// (`--fault-plan`, [`crate::cluster::FaultPlan`] grammar; cluster
+    /// mode only, empty = fault-free)
+    pub fault_plan: String,
     pub want_lm: bool,
     pub want_cls: bool,
 }
@@ -129,6 +137,8 @@ impl Default for PipelineConfig {
             pool_threads: 0,
             devices: 1,
             replicate_top: 1,
+            min_replicas: 1,
+            fault_plan: String::new(),
             want_lm: false,
             want_cls: false,
         }
@@ -212,6 +222,8 @@ impl Pipeline {
                 &ClusterConfig {
                     devices: cfg.devices,
                     replicate_top: cfg.replicate_top,
+                    min_replicas: cfg.min_replicas,
+                    fault_plan: cfg.fault_plan.clone(),
                     budget_per_device: cfg.budget_sim_bytes,
                     policy: cfg.policy.clone(),
                     real_sleep: cfg.real_sleep,
@@ -383,6 +395,12 @@ impl Pipeline {
             want_cls: self.cfg.want_cls,
         };
         while let Ok((req, table)) = prx.recv() {
+            // one batch tick per forward: the fault timeline advances,
+            // and a device failing/recovering on this tick replans
+            // before any routing decision for the batch
+            if let Some(router) = &self.cluster {
+                router.advance_batch(&self.bundle);
+            }
             let t0 = Instant::now();
             let mut provider = self.provider();
             let out = if self.cfg.prefetch {
@@ -549,6 +567,10 @@ impl Pipeline {
             want_cls: self.cfg.want_cls,
         };
         while let Ok(batch) = prx.recv() {
+            // one batch tick per formed batch (see `serve`)
+            if let Some(router) = &self.cluster {
+                router.advance_batch(&self.bundle);
+            }
             let t0 = Instant::now();
             let masks: Vec<Vec<f32>> = batch.iter().map(|(req, _)| req.mask()).collect();
             let items: Vec<BatchItem<'_>> = batch

@@ -109,6 +109,11 @@ pub fn replay_open_loop(
         // `provider()` keeps this path cluster-aware: with
         // `cfg.devices > 1` the forward fans out across the fleet.
         let table = builder.build(req.id, &req.ids)?;
+        // one batch tick per served forward: the fault timeline advances
+        // and failures/recoveries replan before this request is routed
+        if let Some(router) = &pipeline.cluster {
+            router.advance_batch(&pipeline.bundle);
+        }
         let t0 = Instant::now();
         let mut provider = pipeline.provider();
         let out = pipeline.runner.forward(

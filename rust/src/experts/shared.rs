@@ -27,9 +27,23 @@
 //! [`SharedExpertCache::ensure`] waits for an unpin and retries instead
 //! of failing — with a worker pool, "every expert pinned" is a
 //! transient state that resolves as soon as one invocation completes.
+//!
+//! **Lock poisoning.** Every lock acquisition here tolerates poisoning
+//! (`unwrap_or_else(|e| e.into_inner())`) instead of unwrapping.  A
+//! poisoned lock means some thread panicked while holding it; for this
+//! cache that is a panicking `fetch` closure, which runs under the
+//! write lock in `try_ensure` *before* the ledger is mutated for the
+//! new entry — the cache's own transitions are transactional (ledger,
+//! policy, and pin state change only after a fetch succeeds), so the
+//! data behind a poisoned lock is still structurally sound.  Refusing
+//! the guard would turn one failed request into a permanent outage:
+//! every later `.unwrap()` on the same lock cascade-panics across the
+//! whole worker pool.  `check_invariants` stays available as the cheap
+//! recheck, and `poisoned_lock_does_not_cascade` below drives this
+//! exact path.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::Duration;
 
 use anyhow::Result;
@@ -66,7 +80,26 @@ pub struct SharedExpertCache {
     unpin_cv: Condvar,
 }
 
+/// Poison-tolerant mutex acquisition (see the module doc): take the
+/// guard even if a holder panicked — the protected state is a counter
+/// or bounded queue whose updates are single statements, never left
+/// half-applied by an unwind.
+fn lock_tolerant<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 impl SharedExpertCache {
+    /// Poison-tolerant read lock (see the module doc for why the state
+    /// behind a poisoned lock is still sound).
+    fn read_inner(&self) -> RwLockReadGuard<'_, ExpertCache> {
+        self.inner.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Poison-tolerant write lock.
+    fn write_inner(&self) -> RwLockWriteGuard<'_, ExpertCache> {
+        self.inner.write().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn new(cache: ExpertCache) -> Self {
         let track_touches = cache.policy_uses_access();
         SharedExpertCache {
@@ -81,14 +114,14 @@ impl SharedExpertCache {
 
     /// Read access to the underlying cache (planning, diagnostics).
     pub fn read(&self) -> RwLockReadGuard<'_, ExpertCache> {
-        self.inner.read().unwrap()
+        self.read_inner()
     }
 
     /// Attach the on-disk SSD tier (see [`ExpertCache::attach_store`]).
     /// Takes the write lock once; done at construction time, before
     /// serving traffic.
     pub fn attach_store(&self, binding: crate::experts::StoreBinding) {
-        self.inner.write().unwrap().attach_store(binding);
+        self.write_inner().attach_store(binding);
     }
 
     /// Ensure residency without pinning — the prefetch/warmer entry
@@ -137,7 +170,7 @@ impl SharedExpertCache {
     {
         // fast path: warm expert under the read lock
         {
-            let guard = self.inner.read().unwrap();
+            let guard = self.read_inner();
             if let Some(resident) = guard.get(&key) {
                 if pin {
                     // still holding the read lock: no evictor can run
@@ -146,7 +179,7 @@ impl SharedExpertCache {
                 }
                 self.read_hits.fetch_add(1, Ordering::Relaxed);
                 if self.track_touches {
-                    let mut touched = self.touched.lock().unwrap();
+                    let mut touched = lock_tolerant(&self.touched);
                     if touched.len() < TOUCH_QUEUE_LIMIT {
                         touched.push(key);
                     }
@@ -160,10 +193,10 @@ impl SharedExpertCache {
             // snapshot the unpin generation BEFORE trying, so an unpin
             // that lands between the failed attempt and the wait below
             // is never missed
-            let gen_before = *self.unpin_gen.lock().unwrap();
+            let gen_before = *lock_tolerant(&self.unpin_gen);
             {
-                let mut guard = self.inner.write().unwrap();
-                let deferred = std::mem::take(&mut *self.touched.lock().unwrap());
+                let mut guard = self.write_inner();
+                let deferred = std::mem::take(&mut *lock_tolerant(&self.touched));
                 guard.note_accesses(&deferred);
                 match guard.try_ensure(key, real_bytes, blocking, || fetch())? {
                     EnsureOutcome::Resident { expert, hit, transfer_secs } => {
@@ -187,12 +220,12 @@ impl SharedExpertCache {
             // every resident expert is pinned by an in-flight
             // invocation; block until one unpins (timeout-bounded as a
             // belt-and-braces backstop)
-            let mut gen = self.unpin_gen.lock().unwrap();
+            let mut gen = lock_tolerant(&self.unpin_gen);
             while *gen == gen_before {
                 let (g, timeout) = self
                     .unpin_cv
                     .wait_timeout(gen, Duration::from_millis(1))
-                    .unwrap();
+                    .unwrap_or_else(|e| e.into_inner());
                 gen = g;
                 if timeout.timed_out() {
                     break;
@@ -202,69 +235,69 @@ impl SharedExpertCache {
     }
 
     pub fn pin(&self, key: ExpertKey) {
-        self.inner.read().unwrap().pin(key);
+        self.read_inner().pin(key);
     }
 
     pub fn unpin(&self, key: &ExpertKey) {
-        self.inner.read().unwrap().unpin(key);
+        self.read_inner().unpin(key);
         // wake any `ensure` stalled on a fully pinned budget
-        *self.unpin_gen.lock().unwrap() += 1;
+        *lock_tolerant(&self.unpin_gen) += 1;
         self.unpin_cv.notify_all();
     }
 
     pub fn contains(&self, key: &ExpertKey) -> bool {
-        self.inner.read().unwrap().contains(key)
+        self.read_inner().contains(key)
     }
 
     /// Which tier of the §6 ladder `key` sits in right now (tier-aware
     /// prefetch planning reads this under the read lock).
     pub fn tier_of(&self, key: &ExpertKey) -> crate::memory::Tier {
-        self.inner.read().unwrap().tier_of(key)
+        self.read_inner().tier_of(key)
     }
 
     /// Snapshot of the underlying residency ledger (per-tier occupancy,
     /// promotions per hop, ladder seconds).
     pub fn hierarchy_stats(&self) -> crate::memory::HierarchyStats {
-        self.inner.read().unwrap().hierarchy_stats()
+        self.read_inner().hierarchy_stats()
     }
 
     /// Merged statistics snapshot: the inner cache's counters plus the
     /// hits resolved on the lock-free read path.
     pub fn stats(&self) -> CacheStats {
-        let mut stats = self.inner.read().unwrap().stats().clone();
+        let mut stats = self.read_inner().stats().clone();
         stats.hits += self.read_hits.load(Ordering::Relaxed);
         stats
     }
 
     pub fn reset_stats(&self) {
-        let mut guard = self.inner.write().unwrap();
+        let mut guard = self.write_inner();
         guard.reset_stats();
         self.read_hits.store(0, Ordering::Relaxed);
-        self.touched.lock().unwrap().clear();
+        lock_tolerant(&self.touched).clear();
     }
 
     pub fn check_invariants(&self) -> Result<()> {
-        self.inner.read().unwrap().check_invariants()
+        self.read_inner().check_invariants()
     }
 
     pub fn used(&self) -> usize {
-        self.inner.read().unwrap().used()
+        self.read_inner().used()
     }
 
     pub fn budget(&self) -> usize {
-        self.inner.read().unwrap().budget()
+        self.read_inner().budget()
     }
 
     pub fn peak(&self) -> usize {
-        self.inner.read().unwrap().peak()
+        self.read_inner().peak()
     }
 
     pub fn resident_count(&self) -> usize {
-        self.inner.read().unwrap().resident_count()
+        self.read_inner().resident_count()
     }
 
     pub fn clear(&self) {
-        self.inner.write().unwrap().clear();
+        self.write_inner().clear();
     }
 }
 
@@ -332,6 +365,32 @@ mod tests {
         cache.unpin(&k1);
         cache.check_invariants().unwrap();
         assert!(cache.contains(&k1));
+    }
+
+    #[test]
+    fn poisoned_lock_does_not_cascade() {
+        let (b, cache, real) = shared_cache(2);
+        let block = b.topology.moe_blocks[0];
+        let k0 = ExpertKey::new(block, 0);
+        // a fetch closure that panics does so while `ensure` holds the
+        // write lock — the same shape as the server's `inject_panic`
+        // hook firing mid-batch — poisoning `inner`
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = cache.ensure(k0, real, true, || panic!("injected fetch panic"));
+        }));
+        assert!(result.is_err(), "the injected panic must reach its own caller");
+        // every accessor below used to cascade-panic on the poisoned
+        // lock; the fetch panicked before any ledger mutation, so the
+        // cache must still be consistent and must keep serving
+        cache.check_invariants().unwrap();
+        assert!(!cache.contains(&k0), "failed fetch must not leave a resident entry");
+        assert_eq!(cache.resident_count(), 0);
+        let (_, hit, _) = cache
+            .ensure(k0, real, true, || stage_expert_parts(&b.engine, &b.weights, block, 0))
+            .unwrap();
+        assert!(!hit, "the retried fetch is a plain miss");
+        assert!(cache.contains(&k0));
+        cache.check_invariants().unwrap();
     }
 
     #[test]

@@ -84,6 +84,8 @@ fn serve_cli() -> Cli {
         .opt("pool", "worker threads for expert execution (0 = auto, 1 = sequential)", "0")
         .opt("devices", "modeled devices for expert parallelism (budget is per device)", "1")
         .opt("replicate-top", "hottest experts per MoE layer replicated across devices", "1")
+        .opt("min-replicas", "availability floor: holders per predicted-hot expert", "1")
+        .opt("fault-plan", "fault schedule, e.g. down:1@8..24,degrade:2@4..9x3", "")
         .opt("arrivals", "arrival process (closed|poisson|bursty|diurnal)", "closed")
         .opt("rate", "mean offered rate for open-loop arrivals (req/s)", "50")
         .opt("interactive-frac", "fraction of requests on the interactive SLO lane", "0")
@@ -161,6 +163,8 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
                 pool_threads: cfg.pool_threads,
                 devices: cfg.devices,
                 replicate_top: cfg.replicate_top,
+                min_replicas: cfg.min_replicas,
+                fault_plan: cfg.fault_plan.clone(),
                 want_lm: cfg.want_lm,
                 want_cls: cfg.want_cls,
             };
@@ -337,6 +341,21 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
             format!("{:.3}s link", cluster.interconnect_secs),
             format!("{} replicas", cluster.replicated_entries),
         ]);
+        if cluster.device_failures + cluster.failovers + cluster.dropped_fetches > 0 {
+            ct.row(vec![
+                "faults".into(),
+                format!(
+                    "{} down / {} back",
+                    cluster.device_failures, cluster.recoveries
+                ),
+                format!(
+                    "{} failover ({} promoted)",
+                    cluster.failovers, cluster.failover_promotions
+                ),
+                format!("{} retries", cluster.retries),
+                format!("{:.3}s downtime", cluster.downtime_secs),
+            ]);
+        }
         ct.print();
     }
     Ok(())
@@ -357,7 +376,10 @@ fn cmd_server(tail: &[String]) -> Result<()> {
         .opt("queue-cap", "admission queue bound (overflow is rejected)", "256")
         .opt("devices", "modeled devices for expert parallelism (budget is per device)", "1")
         .opt("replicate-top", "hottest experts per MoE layer replicated across devices", "1")
+        .opt("min-replicas", "availability floor: holders per predicted-hot expert", "1")
+        .opt("fault-plan", "fault schedule, e.g. down:1@8..24,degrade:2@4..9x3", "")
         .opt("slo-deadline", "default interactive completion deadline (ms)", "100")
+        .opt("conn-timeout", "socket read/write timeout (seconds, 0 = none)", "0")
         .opt("addr", "listen address", "127.0.0.1:7700")
         .opt("artifacts", "artifacts root", "");
     let args = cli.parse_tail(tail);
@@ -383,7 +405,10 @@ fn cmd_server(tail: &[String]) -> Result<()> {
         pool_threads: args.get_usize("pool", 0),
         devices: args.get_usize("devices", 1).max(1),
         replicate_top: args.get_usize("replicate-top", 1),
+        min_replicas: args.get_usize("min-replicas", 1).max(1),
+        fault_plan: args.get_or("fault-plan", ""),
         default_deadline_secs: args.get_f64("slo-deadline", 100.0) / 1e3,
+        conn_timeout_secs: args.get_f64("conn-timeout", 0.0).max(0.0),
     };
     let state = Arc::new(ServerState::new(
         bundle,

@@ -425,7 +425,11 @@ impl ExpertStore {
     }
 
     /// Delete blob files no manifest entry references (left by a crash
-    /// between blob rename and manifest rewrite), plus stale temp files.
+    /// between blob rename and manifest rewrite), stale blob temp
+    /// files, and torn `.MANIFEST.tmp-*` leftovers at the store root (a
+    /// crash inside `persist_manifest` before the rename publishes —
+    /// `MANIFEST.json` itself is never touched until the rename, so the
+    /// leftover is pure garbage).
     fn sweep_orphans(&self) -> Result<()> {
         let inner = self.inner.lock().unwrap();
         for dirent in std::fs::read_dir(self.dir.join("blobs"))? {
@@ -436,6 +440,13 @@ impl ExpertStore {
                 .and_then(|h| u64::from_str_radix(h, 16).ok())
                 .is_some_and(|h| inner.hash_refs.contains_key(&h));
             if !live {
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+        for dirent in std::fs::read_dir(&self.dir)? {
+            let path = dirent?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name.starts_with(".MANIFEST.tmp-") {
                 let _ = std::fs::remove_file(&path);
             }
         }

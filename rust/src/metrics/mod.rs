@@ -217,6 +217,8 @@ pub struct BatchingStats {
     /// served interactive requests that missed their deadline (shed
     /// requests are counted via `shed`, not here)
     pub slo_missed: u64,
+    /// connections reaped after idling past `--conn-timeout`
+    pub conn_timeouts: u64,
 }
 
 impl BatchingStats {

@@ -794,6 +794,12 @@ impl ModelRunner {
         let meta: Vec<(usize, usize)> =
             jobs.iter().map(|j| (j.expert, j.rows.len())).collect();
         let assign = router.assign(block, &meta);
+        // A device crashing on this batch tick loses its in-flight
+        // lanes (DESIGN.md §2.7).  Which jobs fail is decided here,
+        // before dispatch, purely from (fault plan, tick, assignment) —
+        // fully deterministic, unlike asking mid-execution.
+        let lane_failed: Vec<bool> =
+            assign.iter().map(|&dev| router.lane_should_fail(dev)).collect();
         let mut per_device: Vec<Vec<usize>> = vec![Vec::new(); router.devices()];
         for (i, &dev) in assign.iter().enumerate() {
             per_device[dev].push(i);
@@ -828,6 +834,33 @@ impl ModelRunner {
             for (i, res) in lane {
                 outs[i] = Some(res);
             }
+        }
+        // Retry-once-on-survivors: recompute each lost job inline on a
+        // healthy device the router picks.  Exactly one retry — the
+        // survivor is healthy by construction, so it cannot fail on the
+        // same tick.  The replacement lands in the same job slot before
+        // the caller's ascending-order scatter, and expert math is
+        // device-independent, so outputs stay bit-identical; the
+        // survivor pays a blocking ensure (it may not hold the expert)
+        // plus the activation transfer on the modeled timeline.  Any
+        // deadline this recovery blows is shed by the batcher exactly
+        // like any other slow batch (the PR 6 SLO rules).
+        for (i, job) in jobs.iter().enumerate() {
+            if !lane_failed[i] {
+                continue;
+            }
+            let retry_dev =
+                router.retry_assignment(block, job.expert, job.rows.len(), assign[i]);
+            let par =
+                ParProvider::Shared { cache: router.device_cache(retry_dev), blocking: true };
+            let res = self
+                .compute_expert_rows(block, job.expert, xlns, &job.rows, &par, fixed_bucket)
+                .map(|mut out| {
+                    out.transfer_secs +=
+                        router.charge_activation_transfer(retry_dev, job.rows.len());
+                    out
+                });
+            outs[i] = Some(res);
         }
         outs.into_iter()
             .map(|o| o.expect("cluster lane left a job without a result"))

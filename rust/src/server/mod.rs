@@ -101,9 +101,19 @@ pub struct ServerConfig {
     /// hottest experts per MoE layer replicated across the fleet
     /// (`--replicate-top`; cluster mode only)
     pub replicate_top: usize,
+    /// availability floor: every predicted-hot expert placed on at
+    /// least this many devices (`--min-replicas`; cluster mode only)
+    pub min_replicas: usize,
+    /// deterministic fault schedule on the batch-tick timeline
+    /// (`--fault-plan`; cluster mode only, empty = fault-free)
+    pub fault_plan: String,
     /// SLO deadline applied to `"class": "interactive"` requests that
     /// carry no `deadline_ms` of their own (`--slo-deadline`)
     pub default_deadline_secs: f64,
+    /// socket read/write timeout per connection (`--conn-timeout`,
+    /// seconds; 0 = none): a client idle past this gets an error reply
+    /// and its handler thread is reaped instead of held forever
+    pub conn_timeout_secs: f64,
 }
 
 impl Default for ServerConfig {
@@ -119,7 +129,10 @@ impl Default for ServerConfig {
             pool_threads: 0,
             devices: 1,
             replicate_top: 1,
+            min_replicas: 1,
+            fault_plan: String::new(),
             default_deadline_secs: 0.100,
+            conn_timeout_secs: 0.0,
         }
     }
 }
@@ -166,6 +179,8 @@ pub struct ServerState {
     pub inject_panic: AtomicBool,
     /// default deadline for interactive requests without their own
     default_deadline_secs: f64,
+    /// socket read/write timeout per connection (0 = none)
+    conn_timeout_secs: f64,
     next_id: AtomicU64,
     pub shutdown: AtomicBool,
     t0: Instant,
@@ -204,6 +219,8 @@ impl ServerState {
                 &ClusterConfig {
                     devices: cfg.devices,
                     replicate_top: cfg.replicate_top,
+                    min_replicas: cfg.min_replicas,
+                    fault_plan: cfg.fault_plan.clone(),
                     budget_per_device: cfg.budget_sim_bytes,
                     host_ram_budget: cfg.ram_budget_sim_bytes,
                     ram_policy: cfg.ram_policy.clone(),
@@ -229,6 +246,7 @@ impl ServerState {
             worker_panics: AtomicU64::new(0),
             inject_panic: AtomicBool::new(false),
             default_deadline_secs: cfg.default_deadline_secs,
+            conn_timeout_secs: cfg.conn_timeout_secs,
             next_id: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
             t0: Instant::now(),
@@ -413,6 +431,9 @@ fn run_batch(
     // batch's predictions into the activation profile and re-plan when
     // the profile has grown enough (first batch, then every doubling)
     if let Some(router) = &state.cluster {
+        // one fault-timeline tick per batch: failures/recoveries take
+        // effect (and force a replan) before this batch is routed
+        router.advance_batch(&state.runner.bundle);
         router.observe(&pairs, state.k_used);
         router.replan_if_due(&state.runner.bundle);
     }
@@ -546,10 +567,41 @@ fn worker_died(state: &ServerState) {
 fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
     let peer = stream.peer_addr()?;
     log::info!("connection from {peer}");
+    // with --conn-timeout set, an idle client cannot pin this handler
+    // thread forever: the blocking read wakes with WouldBlock/TimedOut,
+    // the client gets one error reply, and the connection is reaped
+    if state.conn_timeout_secs > 0.0 {
+        let t = Duration::from_secs_f64(state.conn_timeout_secs);
+        stream.set_read_timeout(Some(t))?;
+        stream.set_write_timeout(Some(t))?;
+    }
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
-        let line = line?;
+        let line = match line {
+            Ok(line) => line,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                lock_tolerant(&state.batching).conn_timeouts += 1;
+                let _ = writeln!(
+                    writer,
+                    "{}",
+                    obj(vec![(
+                        "error",
+                        Json::Str(format!(
+                            "connection idle past --conn-timeout ({}s); closing",
+                            state.conn_timeout_secs
+                        )),
+                    )])
+                );
+                return Ok(());
+            }
+            Err(e) => return Err(e.into()),
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -568,7 +620,7 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
                     let rejected_slo = state.rejected_slo.load(Ordering::SeqCst);
                     let worker_panics = state.worker_panics.load(Ordering::SeqCst);
                     let queued = lock_tolerant(&state.queue).len();
-                    let (batches, mean_size, delay_ms, infer_ms, slo) = {
+                    let (batches, mean_size, delay_ms, infer_ms, conn_timeouts, slo) = {
                         let mut b = lock_tolerant(&state.batching);
                         let slo = (
                             b.shed,
@@ -583,6 +635,7 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
                             b.mean_batch_size().unwrap_or(0.0),
                             b.batching_delay.mean() * 1e3,
                             b.inference.mean() * 1e3,
+                            b.conn_timeouts,
                             slo,
                         )
                     };
@@ -632,6 +685,7 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
                         ("mean_batch_size", Json::Num(mean_size)),
                         ("batching_delay_ms_mean", Json::Num(delay_ms)),
                         ("infer_ms_mean", Json::Num(infer_ms)),
+                        ("conn_timeouts", Json::Num(conn_timeouts as f64)),
                         ("cache_hits", Json::Num(hits as f64)),
                         ("cache_misses", Json::Num(misses as f64)),
                         ("transfer_overlapped_secs", Json::Num(overlapped)),
@@ -665,6 +719,10 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
                                     ("rows", Json::Num(d.rows as f64)),
                                     ("hits", Json::Num(d.cache.hits as f64)),
                                     ("misses", Json::Num(d.cache.misses as f64)),
+                                    (
+                                        "health",
+                                        Json::Str(format!("{:?}", d.health).to_lowercase()),
+                                    ),
                                 ])
                             })
                             .collect();
@@ -685,6 +743,22 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
                             "replicated_entries",
                             Json::Num(cl.replicated_entries as f64),
                         ));
+                        fields.push(("failovers", Json::Num(cl.failovers as f64)));
+                        fields.push((
+                            "failover_promotions",
+                            Json::Num(cl.failover_promotions as f64),
+                        ));
+                        fields.push(("retries", Json::Num(cl.retries as f64)));
+                        fields.push((
+                            "dropped_fetches",
+                            Json::Num(cl.dropped_fetches as f64),
+                        ));
+                        fields.push((
+                            "device_failures",
+                            Json::Num(cl.device_failures as f64),
+                        ));
+                        fields.push(("recoveries", Json::Num(cl.recoveries as f64)));
+                        fields.push(("downtime_secs", Json::Num(cl.downtime_secs)));
                     }
                     writeln!(writer, "{}", obj(fields))?;
                 }

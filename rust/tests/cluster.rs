@@ -13,8 +13,8 @@
 
 use std::sync::Arc;
 
-use sida_moe::cluster::{ActivationProfile, ClusterConfig, ClusterRouter, PlacementPlanner};
-use sida_moe::coordinator::{HashBuilder, Pipeline, PipelineConfig};
+use sida_moe::cluster::{ActivationProfile, ClusterConfig, ClusterRouter, FaultPlan, PlacementPlanner};
+use sida_moe::coordinator::{HashBuilder, Pipeline, PipelineConfig, ServeOutcome};
 use sida_moe::experts::ExpertKey;
 use sida_moe::model::{ExpertProvider, ForwardOptions, ModelRunner};
 use sida_moe::runtime::ModelBundle;
@@ -244,6 +244,129 @@ fn load_imbalance_stat_is_sane() {
         assert!(cluster.cross_device_bytes > 0);
         assert!(cluster.interconnect_secs > 0.0);
     }
+}
+
+/// Exact per-request outputs, order-normalized: bit-identical logits
+/// imply exactly equal argmax + NLL.
+fn outputs(out: &ServeOutcome) -> Vec<(u64, Option<usize>, Option<f64>)> {
+    let mut v: Vec<_> =
+        out.per_request.iter().map(|r| (r.id, r.cls_pred, r.lm_nll)).collect();
+    v.sort_by_key(|(id, ..)| *id);
+    assert!(!v.is_empty());
+    v
+}
+
+/// One cluster serving run under `fault_plan` ("" = fault-free).
+fn run_with_faults(
+    b: &Arc<ModelBundle>,
+    reqs: &[sida_moe::workload::Request],
+    devices: usize,
+    min_replicas: usize,
+    fault_plan: &str,
+) -> ServeOutcome {
+    let cfg = PipelineConfig {
+        k_used: 2,
+        devices,
+        replicate_top: 1,
+        min_replicas,
+        fault_plan: fault_plan.into(),
+        want_lm: true,
+        want_cls: true,
+        ..Default::default()
+    };
+    let p = Pipeline::new(b.clone(), TINY_PROFILE, cfg).unwrap();
+    let out = p.serve(reqs).unwrap();
+    let router = p.cluster.as_ref().expect("cluster mode");
+    router.check_invariants().unwrap();
+    router.placement().check_invariants(&b.topology).unwrap();
+    // per-device budgets hold under every fault schedule
+    for dev in 0..devices {
+        let cache = router.device_cache(dev);
+        assert!(
+            cache.used() <= cache.budget(),
+            "device {dev} cache over budget under plan '{fault_plan}'"
+        );
+    }
+    out
+}
+
+#[test]
+fn faulted_cluster_serving_is_bit_identical_and_accounted() {
+    // ISSUE 8 acceptance: 1 of 4 devices down mid-trace with later
+    // recovery — serving continues (zero hung requests), outputs are
+    // bit-identical to the fault-free run, and the failover work is
+    // visible in ClusterStats.
+    let b = deep_bundle();
+    let reqs = testkit::tiny_trace(&b, 12, 7);
+
+    let clean = run_with_faults(&b, &reqs, 4, 2, "");
+    // batch-1 serving ticks once per request: device 1 crashes on tick
+    // 3 (in-flight lanes retry), is Down for ticks 4..7, recovers at 8
+    let faulted = run_with_faults(&b, &reqs, 4, 2, "down:1@3..8");
+
+    assert_eq!(
+        faulted.stats.requests,
+        reqs.len() as u64,
+        "every request must complete exactly once — none hung, none lost"
+    );
+    assert_eq!(
+        outputs(&faulted),
+        outputs(&clean),
+        "a fault schedule may move work, never change what it computes"
+    );
+    let cl = faulted.stats.cluster.expect("cluster stats");
+    assert_eq!(cl.device_failures, 1);
+    assert_eq!(cl.recoveries, 1);
+    assert!(cl.failovers > 0, "the evacuated experts are failovers");
+    assert!(cl.downtime_secs > 0.0, "the outage has measured wall duration");
+    // the fault-free run reports a quiet fault ledger
+    let quiet = clean.stats.cluster.expect("cluster stats");
+    assert_eq!(quiet.device_failures, 0);
+    assert_eq!(quiet.failovers, 0);
+    assert_eq!(quiet.retries, 0);
+    assert_eq!(quiet.downtime_secs, 0.0);
+}
+
+#[test]
+fn random_fault_schedules_never_change_outputs_or_break_invariants() {
+    // Property: for random seeded fault schedules x devices {2,4} x
+    // min-replicas {1,2}, serving completes every request exactly
+    // once, outputs match the fault-free run bit-for-bit, budgets
+    // hold, and the router invariants stay clean (all checked inside
+    // `run_with_faults`).
+    let b = deep_bundle();
+    let reqs = testkit::tiny_trace(&b, 8, 3);
+    let clean: std::collections::HashMap<(usize, usize), Vec<(u64, Option<usize>, Option<f64>)>> =
+        [(2usize, 1usize), (2, 2), (4, 1), (4, 2)]
+            .into_iter()
+            .map(|(d, k)| ((d, k), outputs(&run_with_faults(&b, &reqs, d, k, ""))))
+            .collect();
+    Prop::new(10).check(
+        "fault schedules preserve outputs",
+        |rng| {
+            let devices = if rng.below(2) == 0 { 2usize } else { 4 };
+            let min_replicas = 1 + rng.usize_below(2);
+            let seed = rng.below(1 << 20);
+            (devices, min_replicas, seed)
+        },
+        |_| Vec::new(),
+        |(devices, min_replicas, seed)| {
+            let plan = FaultPlan::seeded_random(*seed, *devices, reqs.len() as u64).to_string();
+            let out = run_with_faults(&b, &reqs, *devices, *min_replicas, &plan);
+            if out.stats.requests != reqs.len() as u64 {
+                return Err(format!(
+                    "plan '{plan}': {} of {} requests served",
+                    out.stats.requests,
+                    reqs.len()
+                ));
+            }
+            let want = &clean[&(*devices, *min_replicas)];
+            if &outputs(&out) != want {
+                return Err(format!("plan '{plan}': outputs diverged from fault-free run"));
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

@@ -173,6 +173,47 @@ fn truncated_blob_is_detected_and_refabricated_bit_identically() {
 }
 
 #[test]
+fn crash_between_blob_publish_and_manifest_is_swept_on_reopen() {
+    let b = deep_bundle();
+    let reqs = testkit::tiny_trace(&b, 12, 23);
+    let dir = tmp("crash");
+
+    let (cold_out, cold_h) = run(&b, &reqs, Some(&dir));
+    assert!(cold_h.store_bytes_on_disk > 0);
+
+    // simulate the crash window in `put`: the blob rename published,
+    // but the process died before MANIFEST.json was rewritten — an
+    // on-disk blob no manifest entry references
+    let orphan = dir.join("blobs").join(format!("{:016x}.blob", 0xdead_beef_u64));
+    std::fs::write(&orphan, vec![0xABu8; 4096]).unwrap();
+    // plus a blob temp torn mid-write (crash before its rename)
+    let torn_blob = dir.join("blobs").join(".tmp-cafebabe-12345");
+    std::fs::write(&torn_blob, b"partial payload").unwrap();
+    // plus a torn manifest temp (crash inside persist_manifest before
+    // the rename) — MANIFEST.json itself stays intact
+    let torn_manifest = dir.join(".MANIFEST.tmp-99999");
+    std::fs::write(&torn_manifest, b"{\"version\":1,\"entries\":[trunca").unwrap();
+
+    let (warm_out, warm_h) = run(&b, &reqs, Some(&dir));
+    assert!(!orphan.exists(), "reopen must sweep the orphan blob");
+    assert!(!torn_blob.exists(), "reopen must sweep the torn blob temp");
+    assert!(!torn_manifest.exists(), "reopen must sweep the torn manifest temp");
+    // exact byte accounting: what the ledger claims is on disk is
+    // exactly what enumeration finds — the crash leftovers neither
+    // count nor linger
+    let on_disk: u64 = std::fs::read_dir(dir.join("blobs"))
+        .unwrap()
+        .map(|e| e.unwrap().metadata().unwrap().len())
+        .sum();
+    assert_eq!(warm_h.store_bytes_on_disk as u64, on_disk);
+    assert_eq!(warm_h.store_bytes_on_disk, cold_h.store_bytes_on_disk);
+    assert_eq!(warm_h.integrity_failures, 0, "leftovers are garbage, not corruption");
+    assert_eq!(outputs(&warm_out), outputs(&cold_out));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn deleted_blob_is_a_clean_miss_not_a_panic() {
     let b = deep_bundle();
     let reqs = testkit::tiny_trace(&b, 12, 19);
