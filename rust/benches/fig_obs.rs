@@ -1,0 +1,161 @@
+//! fig_obs — observability overhead and trace well-formedness (ISSUE 9).
+//!
+//! Serves the same trace twice through a 4-device faulted cluster
+//! pipeline — tracing OFF, then tracing ON — and gates CI on the
+//! observability contract:
+//!
+//! * **bit-identity** — predictions, LM NLLs and the modeled ladder
+//!   attribution are bitwise equal with the tracer enabled (tracing
+//!   never touches the f32 compute path or the modeled cost ledger);
+//! * **modeled overhead < 2%** — the modeled serving-time totals of the
+//!   traced run stay within 2% of the untraced run (they are exactly
+//!   equal today; the gate is the regression trip-wire);
+//! * **valid Chrome trace** — the exported document round-trips through
+//!   the JSON parser with a non-empty `traceEvents` array;
+//! * **flows resolve** — every flow step/end (`ph:"t"/"f"`) carries an
+//!   id with a matching flow start (`ph:"s"`), so Perfetto renders no
+//!   dangling arrows.
+//!
+//! Hermetic (synthetic testkit bundle) — CI's bench-smoke job RUNS this
+//! instead of SKIP-ing.  Emits `BENCH_obs.json`.
+
+use std::collections::BTreeSet;
+use std::time::Instant;
+
+use sida_moe::bench_support as bs;
+use sida_moe::coordinator::{Pipeline, PipelineConfig, ServeOutcome};
+use sida_moe::metrics::Table;
+use sida_moe::obs::trace;
+use sida_moe::testkit::{self, SynthSpec, TINY_PROFILE};
+use sida_moe::util::json::{num, obj, s, Json};
+
+fn outputs(out: &ServeOutcome) -> Vec<(u64, Option<usize>, Option<f64>)> {
+    let mut v: Vec<_> = out.per_request.iter().map(|r| (r.id, r.cls_pred, r.lm_nll)).collect();
+    v.sort_by_key(|(id, ..)| *id);
+    v
+}
+
+fn main() -> anyhow::Result<()> {
+    bs::banner(
+        "fig_obs: span tracing overhead + Chrome trace well-formedness",
+        "tracing must observe serving, never change it",
+    );
+    let bundle = testkit::bundle(&SynthSpec::default().two_moe_layers())?;
+    let n = bs::n_requests(16);
+    let requests = testkit::tiny_trace(&bundle, n, 7);
+    let run = || -> anyhow::Result<(ServeOutcome, f64)> {
+        let cfg = PipelineConfig {
+            k_used: 2,
+            devices: 4,
+            replicate_top: 1,
+            min_replicas: 2,
+            fault_plan: "down:1@3..8".into(),
+            want_lm: true,
+            want_cls: true,
+            ..Default::default()
+        };
+        let pipeline = Pipeline::new(bundle.clone(), TINY_PROFILE, cfg)?;
+        let t0 = Instant::now();
+        let out = pipeline.serve(&requests)?;
+        Ok((out, t0.elapsed().as_secs_f64()))
+    };
+
+    trace::disable();
+    let (plain, wall_off) = run()?;
+    trace::enable(trace::DEFAULT_CAPACITY);
+    let (traced, wall_on) = run()?;
+    trace::disable();
+    let events = trace::snapshot_events();
+
+    // gate 1: bit-identical outputs and ladder attribution
+    let identical = outputs(&plain) == outputs(&traced)
+        && plain.stats.hierarchy.ladder_secs().to_bits()
+            == traced.stats.hierarchy.ladder_secs().to_bits();
+
+    // gate 2: modeled serving time within 2% (+ tiny absolute slack)
+    let modeled_off = plain.stats.modeled_transfer_secs;
+    let modeled_on = traced.stats.modeled_transfer_secs;
+    let overhead = (modeled_on - modeled_off).abs() / modeled_off.max(1e-12);
+    let overhead_ok = (modeled_on - modeled_off).abs() <= 0.02 * modeled_off + 1e-9;
+
+    // gate 3: the export round-trips as a Chrome trace-event document
+    let doc = Json::parse(&trace::export_json().to_string());
+    let trace_events = doc
+        .as_ref()
+        .ok()
+        .and_then(|d| d.get("traceEvents").ok())
+        .and_then(|a| a.as_arr().ok().map(|a| a.len()))
+        .unwrap_or(0);
+    let valid_json = trace_events > 0;
+
+    // gate 4: every flow step/end id resolves to a flow start
+    let starts: BTreeSet<u64> =
+        events.iter().filter(|e| e.ph == 's').map(|e| e.id).collect();
+    let dangling = events
+        .iter()
+        .filter(|e| (e.ph == 't' || e.ph == 'f') && !starts.contains(&e.id))
+        .count();
+    let flows_ok = !starts.is_empty() && dangling == 0;
+
+    let span_count = events.iter().filter(|e| e.ph == 'X').count();
+    let mut t = Table::new(
+        "fig_obs — tracing off vs on, same faulted 4-device trace",
+        &["tracer", "wall s", "modeled transfer s", "events", "spans", "flow starts"],
+    );
+    t.row(vec![
+        "off".into(),
+        format!("{wall_off:.3}"),
+        format!("{modeled_off:.6}"),
+        "0".into(),
+        "0".into(),
+        "0".into(),
+    ]);
+    t.row(vec![
+        "on".into(),
+        format!("{wall_on:.3}"),
+        format!("{modeled_on:.6}"),
+        events.len().to_string(),
+        span_count.to_string(),
+        starts.len().to_string(),
+    ]);
+    t.print();
+    t.save_csv(&bs::csv_path("fig_obs"))?;
+
+    println!(
+        "obs check: outputs bit-identical with tracing on: {}; modeled overhead \
+         {:.4}% (< 2%): {}; trace valid Chrome JSON ({} events): {}; {} dangling \
+         flow ids: {}",
+        if identical { "PASS" } else { "FAIL" },
+        overhead * 100.0,
+        if overhead_ok { "PASS" } else { "FAIL" },
+        trace_events,
+        if valid_json { "PASS" } else { "FAIL" },
+        dangling,
+        if flows_ok { "PASS" } else { "FAIL" }
+    );
+
+    let mut j = bs::BenchJson::new("obs");
+    j.push(obj(vec![
+        ("requests", num(traced.stats.requests as f64)),
+        ("wall_secs_traced_off", num(wall_off)),
+        ("wall_secs_traced_on", num(wall_on)),
+        ("modeled_transfer_secs_off", num(modeled_off)),
+        ("modeled_transfer_secs_on", num(modeled_on)),
+        ("modeled_overhead_frac", num(overhead)),
+        ("trace_events", num(events.len() as f64)),
+        ("trace_spans", num(span_count as f64)),
+        ("trace_flow_starts", num(starts.len() as f64)),
+        ("trace_dropped", num(trace::dropped() as f64)),
+        ("outputs_bit_identical", Json::Bool(identical)),
+        ("modeled_overhead_under_2pct", Json::Bool(overhead_ok)),
+        ("trace_valid_chrome_json", Json::Bool(valid_json)),
+        ("flow_ids_resolve", Json::Bool(flows_ok)),
+        ("dataset", s(TINY_PROFILE)),
+    ]));
+    let path = j.save()?;
+    println!("perf-trajectory JSON: {}", path.display());
+    if !(identical && overhead_ok && valid_json && flows_ok) {
+        std::process::exit(1);
+    }
+    Ok(())
+}

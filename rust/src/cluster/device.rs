@@ -79,16 +79,17 @@ impl DeviceSet {
         let mut devices = Vec::with_capacity(n);
         for id in 0..n {
             let cost = CostModel::paper_scale(real_expert_bytes).with_real_sleep(real_sleep);
-            devices.push(Device {
-                id,
-                cache: Arc::new(SharedExpertCache::new(ExpertCache::with_hierarchy(
-                    budget_per_device,
-                    cost,
-                    make_policy(policy)?,
-                    ram_budget,
-                    make_policy(ram_policy)?,
-                ))),
-            });
+            let mut cache = ExpertCache::with_hierarchy(
+                budget_per_device,
+                cost,
+                make_policy(policy)?,
+                ram_budget,
+                make_policy(ram_policy)?,
+            );
+            // ladder events (promote/demote) land on this device's trace
+            // track rather than the shared device-0 default
+            cache.set_trace_pid(crate::obs::trace::device_pid(id));
+            devices.push(Device { id, cache: Arc::new(SharedExpertCache::new(cache)) });
         }
         Ok(DeviceSet { devices, link, budget_per_device })
     }

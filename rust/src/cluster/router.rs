@@ -45,6 +45,7 @@ use crate::cluster::ClusterConfig;
 use crate::coordinator::hash_table::HashTable;
 use crate::experts::ExpertKey;
 use crate::memory::{CostModel, Tier};
+use crate::obs::trace::{self, ArgValue};
 use crate::runtime::ModelBundle;
 
 /// One planned cluster prefetch: which expert to warm on which device.
@@ -196,6 +197,24 @@ impl ClusterRouter {
         if !transitions.any() {
             return;
         }
+        if trace::enabled() {
+            for &d in &transitions.went_down {
+                trace::instant(
+                    "device_down",
+                    "cluster",
+                    trace::device_pid(d),
+                    vec![("device", ArgValue::U(d as u64))],
+                );
+            }
+            for &d in &transitions.recovered {
+                trace::instant(
+                    "device_up",
+                    "cluster",
+                    trace::device_pid(d),
+                    vec![("device", ArgValue::U(d as u64))],
+                );
+            }
+        }
         if !transitions.went_down.is_empty() {
             let placement = self.placement.read().unwrap();
             for key in placement.keys() {
@@ -325,16 +344,40 @@ impl ClusterRouter {
                     let home = placement.home_of(&key);
                     if self.injector.health(home) == DeviceHealth::Down {
                         self.failovers.fetch_add(1, Ordering::Relaxed);
+                        if trace::enabled() {
+                            trace::instant(
+                                "failover",
+                                "cluster",
+                                trace::device_pid(d),
+                                vec![
+                                    ("block", ArgValue::U(block as u64)),
+                                    ("expert", ArgValue::U(expert as u64)),
+                                    ("down_home", ArgValue::U(home as u64)),
+                                ],
+                            );
+                        }
                     }
                     d
                 }
                 None => {
                     self.failovers.fetch_add(1, Ordering::Relaxed);
                     self.failover_promotions.fetch_add(1, Ordering::Relaxed);
-                    (0..self.set.len())
+                    let d = (0..self.set.len())
                         .filter(|&d| self.injector.health(d) != DeviceHealth::Down)
                         .min_by_key(|&d| (loads[d], d))
-                        .unwrap_or(0)
+                        .unwrap_or(0);
+                    if trace::enabled() {
+                        trace::instant(
+                            "failover_promotion",
+                            "cluster",
+                            trace::device_pid(d),
+                            vec![
+                                ("block", ArgValue::U(block as u64)),
+                                ("expert", ArgValue::U(expert as u64)),
+                            ],
+                        );
+                    }
+                    d
                 }
             };
             let w = self.job_bucket_units(rows);
@@ -365,6 +408,18 @@ impl ClusterRouter {
         let secs = self.set.link_secs(bytes) * self.injector.degrade_factor(device);
         self.cross_device_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         *self.interconnect_secs.lock().unwrap() += secs;
+        if trace::enabled() {
+            trace::instant(
+                "interconnect",
+                "cluster",
+                trace::device_pid(device),
+                vec![
+                    ("rows", ArgValue::U(n_rows as u64)),
+                    ("bytes", ArgValue::U(bytes as u64)),
+                    ("modeled_secs", ArgValue::F(secs)),
+                ],
+            );
+        }
         secs
     }
 
@@ -412,6 +467,10 @@ impl ClusterRouter {
     /// device's cache drives its own residency ledger as it fetches —
     /// there is no separate promote bookkeeping to drift.
     pub fn fetch_planned(&self, bundle: &ModelBundle, plan: &[ClusterFetch]) -> Result<()> {
+        if plan.is_empty() {
+            return Ok(());
+        }
+        let t_stage = trace::begin();
         for fetch in plan {
             // a plan can outlive a health transition (it was computed at
             // an earlier tick); drop-fetch faults swallow the prefetch
@@ -432,6 +491,15 @@ impl ClusterRouter {
                     key.expert,
                 )
             })?;
+        }
+        if trace::enabled() {
+            trace::complete(
+                "prefetch_stage",
+                "prefetch",
+                trace::host_pid(),
+                t_stage,
+                vec![("experts", ArgValue::U(plan.len() as u64))],
+            );
         }
         Ok(())
     }

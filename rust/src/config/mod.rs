@@ -84,6 +84,12 @@ pub struct ServeConfig {
     pub want_cls: bool,
     /// artifacts root directory
     pub artifacts: String,
+    /// write a Chrome trace-event JSON of the run here (`--trace-out`;
+    /// empty = span tracer stays disabled, near-zero cost)
+    pub trace_out: String,
+    /// emit a one-line registry snapshot to stderr every this many
+    /// seconds while serving (`--metrics-interval`; 0 = off)
+    pub metrics_interval_secs: f64,
 }
 
 impl Default for ServeConfig {
@@ -117,6 +123,8 @@ impl Default for ServeConfig {
             want_lm: false,
             want_cls: true,
             artifacts: "artifacts".into(),
+            trace_out: String::new(),
+            metrics_interval_secs: 0.0,
         }
     }
 }
@@ -155,6 +163,10 @@ impl ServeConfig {
                 "want_lm" => cfg.want_lm = val.as_bool()?,
                 "want_cls" => cfg.want_cls = val.as_bool()?,
                 "artifacts" => cfg.artifacts = val.as_str()?.to_string(),
+                "trace_out" => cfg.trace_out = val.as_str()?.to_string(),
+                "metrics_interval_secs" => {
+                    cfg.metrics_interval_secs = val.as_f64()?.max(0.0)
+                }
                 other => anyhow::bail!("unknown config key '{other}'"),
             }
         }
@@ -270,6 +282,14 @@ impl ServeConfig {
         }
         if let Some(v) = args.get("artifacts") {
             self.artifacts = v.to_string();
+        }
+        if let Some(v) = args.get("trace-out") {
+            self.trace_out = v.to_string();
+        }
+        if let Some(v) = args.get("metrics-interval") {
+            if let Ok(x) = v.parse::<f64>() {
+                self.metrics_interval_secs = x.max(0.0);
+            }
         }
         if args.flag("real-sleep") {
             self.real_sleep = true;
@@ -402,6 +422,20 @@ mod tests {
         assert_eq!(d.arrivals, "closed");
         assert_eq!(d.interactive_frac, 0.0);
         assert_eq!(d.queue_cap, 256);
+    }
+
+    #[test]
+    fn observability_keys_parse_with_defaults() {
+        let j =
+            Json::parse(r#"{"trace_out":"/tmp/t.json","metrics_interval_secs":5.0}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.trace_out, "/tmp/t.json");
+        assert!((c.metrics_interval_secs - 5.0).abs() < 1e-9);
+        let j = Json::parse(r#"{"metrics_interval_secs":-1.0}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().metrics_interval_secs, 0.0);
+        let d = ServeConfig::default();
+        assert!(d.trace_out.is_empty(), "tracer off by default");
+        assert_eq!(d.metrics_interval_secs, 0.0, "no periodic snapshot by default");
     }
 
     #[test]

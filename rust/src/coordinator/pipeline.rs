@@ -52,6 +52,7 @@ use crate::experts::{
 use crate::memory::CostModel;
 use crate::metrics::ServeStats;
 use crate::model::{BatchItem, ExpertProvider, ForwardHooks, ForwardOptions, ModelRunner};
+use crate::obs::trace::{self, ArgValue};
 use crate::runtime::ModelBundle;
 use crate::util::pool::WorkerPool;
 use crate::util::sync::LayerGate;
@@ -319,8 +320,21 @@ impl Pipeline {
             .spawn(move || -> Result<f64> {
                 let mut total_build = 0.0;
                 for req in reqs {
+                    let t_hash = trace::begin();
                     let table = builder.build(req.id, &req.ids)?;
                     total_build += table.build_secs;
+                    if trace::enabled() {
+                        trace::complete(
+                            "hash_build",
+                            "hash",
+                            trace::host_pid(),
+                            t_hash,
+                            vec![
+                                ("request", ArgValue::U(req.id)),
+                                ("secs", ArgValue::F(table.build_secs)),
+                            ],
+                        );
+                    }
                     if tx.send((req, table)).is_err() {
                         break; // inference side hung up
                     }
@@ -401,12 +415,17 @@ impl Pipeline {
             if let Some(router) = &self.cluster {
                 router.advance_batch(&self.bundle);
             }
+            let trace_ids = [req.id];
+            let t_req = trace::begin();
+            if trace::enabled() {
+                trace::flow('s', req.id, trace::host_pid());
+            }
             let t0 = Instant::now();
             let mut provider = self.provider();
             let out = if self.cfg.prefetch {
                 let mask = req.mask();
                 let pairs: Vec<(&HashTable, &[f32])> = vec![(&table, &mask[..])];
-                self.forward_gated(&pairs, |hooks| {
+                self.forward_gated(&pairs, &trace_ids, |hooks| {
                     self.runner.forward_hooked(
                         &req.ids,
                         Some((&table, self.cfg.k_used)),
@@ -416,14 +435,28 @@ impl Pipeline {
                     )
                 })?
             } else {
-                self.runner.forward(
+                self.runner.forward_hooked(
                     &req.ids,
                     Some((&table, self.cfg.k_used)),
                     &mut provider,
                     opts,
+                    ForwardHooks { layer_gate: None, trace_ids: Some(&trace_ids) },
                 )?
             };
             let latency = t0.elapsed().as_secs_f64();
+            if trace::enabled() {
+                trace::flow('f', req.id, trace::host_pid());
+                trace::complete(
+                    "request",
+                    "serve",
+                    trace::host_pid(),
+                    t_req,
+                    vec![
+                        ("request", ArgValue::U(req.id)),
+                        ("latency_secs", ArgValue::F(latency)),
+                    ],
+                );
+            }
             stats.latency.record(latency);
             stats.record_class(&req.class, latency);
             stats.phases.add(&out.times);
@@ -487,8 +520,21 @@ impl Pipeline {
             .spawn(move || -> Result<f64> {
                 let mut total_build = 0.0;
                 for req in reqs {
+                    let t_hash = trace::begin();
                     let table = builder.build(req.id, &req.ids)?;
                     total_build += table.build_secs;
+                    if trace::enabled() {
+                        trace::complete(
+                            "hash_build",
+                            "hash",
+                            trace::host_pid(),
+                            t_hash,
+                            vec![
+                                ("request", ArgValue::U(req.id)),
+                                ("secs", ArgValue::F(table.build_secs)),
+                            ],
+                        );
+                    }
                     if tx.send((req, table)).is_err() {
                         break; // inference side hung up
                     }
@@ -571,6 +617,13 @@ impl Pipeline {
             if let Some(router) = &self.cluster {
                 router.advance_batch(&self.bundle);
             }
+            let trace_ids: Vec<u64> = batch.iter().map(|(req, _)| req.id).collect();
+            let t_batch = trace::begin();
+            if trace::enabled() {
+                for &rid in &trace_ids {
+                    trace::flow('s', rid, trace::host_pid());
+                }
+            }
             let t0 = Instant::now();
             let masks: Vec<Vec<f32>> = batch.iter().map(|(req, _)| req.mask()).collect();
             let items: Vec<BatchItem<'_>> = batch
@@ -587,13 +640,33 @@ impl Pipeline {
                     .zip(masks.iter())
                     .map(|((_, table), mask)| (table, mask.as_slice()))
                     .collect();
-                self.forward_gated(&pairs, |hooks| {
+                self.forward_gated(&pairs, &trace_ids, |hooks| {
                     self.runner.forward_batch_hooked(&items, &mut provider, opts, hooks)
                 })?
             } else {
-                self.runner.forward_batch(&items, &mut provider, opts)?
+                self.runner.forward_batch_hooked(
+                    &items,
+                    &mut provider,
+                    opts,
+                    ForwardHooks { layer_gate: None, trace_ids: Some(&trace_ids) },
+                )?
             };
             let secs = t0.elapsed().as_secs_f64();
+            if trace::enabled() {
+                for &rid in &trace_ids {
+                    trace::flow('f', rid, trace::host_pid());
+                }
+                trace::complete(
+                    "batch",
+                    "serve",
+                    trace::host_pid(),
+                    t_batch,
+                    vec![
+                        ("requests", ArgValue::U(trace_ids.len() as u64)),
+                        ("secs", ArgValue::F(secs)),
+                    ],
+                );
+            }
             stats.batches += 1;
             stats.phases.add(&out.times);
             for ((req, table), fo) in batch.iter().zip(out.outputs.iter()) {
@@ -632,6 +705,7 @@ impl Pipeline {
     fn forward_gated<T>(
         &self,
         pairs: &[(&HashTable, &[f32])],
+        trace_ids: &[u64],
         body: impl FnOnce(ForwardHooks<'_>) -> Result<T>,
     ) -> Result<T> {
         run_gated_forward(
@@ -640,8 +714,20 @@ impl Pipeline {
             pairs,
             &self.bundle.topology.moe_blocks,
             self.cfg.k_used,
+            trace_ids,
             body,
         )
+    }
+
+    /// Publish the pipeline's live serving-tier counters (cache,
+    /// hierarchy ladder, cluster devices) into a metrics registry —
+    /// what the `--metrics-interval` snapshot thread reads mid-run.
+    /// Request-level series stay at their defaults until the final
+    /// publish at end of serve.
+    pub fn publish_live_metrics(&self, reg: &crate::obs::Registry) {
+        let mut stats = ServeStats::default();
+        self.collect_serving_stats(&mut stats);
+        crate::obs::publish::publish_serve_stats(reg, &stats);
     }
 
     /// Fold the serving-tier counters into `stats`: the single shared
@@ -775,6 +861,7 @@ pub(crate) fn run_gated_forward<T>(
     pairs: &[(&HashTable, &[f32])],
     moe_blocks: &[usize],
     k_used: usize,
+    trace_ids: &[u64],
     body: impl FnOnce(ForwardHooks<'_>) -> Result<T>,
 ) -> Result<T> {
     let gate = LayerGate::new();
@@ -792,7 +879,7 @@ pub(crate) fn run_gated_forward<T>(
                 }
             }
             let _finish = FinishCompute(&gate);
-            body(ForwardHooks { layer_gate: Some(&gate) })
+            body(ForwardHooks { layer_gate: Some(&gate), trace_ids: Some(trace_ids) })
         };
         if let Err(e) = warmer.join().expect("layer-ahead warmer panicked") {
             log::warn!("layer-ahead warmer failed (forward fell back to blocking fetches): {e:#}");
@@ -808,6 +895,10 @@ fn fetch_planned(
     cache: &SharedExpertCache,
     plan: &[PlannedFetch],
 ) -> Result<()> {
+    if plan.is_empty() {
+        return Ok(());
+    }
+    let t_stage = trace::begin();
     for fetch in plan {
         let key = fetch.key;
         let real = bundle.weights.expert_bytes(key.block, key.expert)?;
@@ -820,6 +911,15 @@ fn fetch_planned(
                 key.expert,
             )
         })?;
+    }
+    if trace::enabled() {
+        trace::complete(
+            "prefetch_stage",
+            "prefetch",
+            trace::host_pid(),
+            t_stage,
+            vec![("experts", ArgValue::U(plan.len() as u64))],
+        );
     }
     Ok(())
 }

@@ -29,7 +29,8 @@ use anyhow::Result;
 use crate::coordinator::batcher::{Batcher, QueueDelayEstimator};
 use crate::coordinator::pipeline::{Pipeline, RequestResult, ServeOutcome};
 use crate::metrics::ServeStats;
-use crate::model::ForwardOptions;
+use crate::model::{ForwardHooks, ForwardOptions};
+use crate::obs::trace::{self, ArgValue};
 use crate::workload::Request;
 
 pub struct OpenLoopReport {
@@ -100,31 +101,105 @@ pub fn replay_open_loop(
             // already past deadline: serving it cannot meet the SLO and
             // only delays the requests queued behind it
             shed += 1;
+            if trace::enabled() {
+                trace::instant(
+                    "shed",
+                    "queue",
+                    trace::host_pid(),
+                    vec![
+                        ("request", ArgValue::U(req.id)),
+                        ("wait_secs", ArgValue::F(wait)),
+                    ],
+                );
+            }
             continue;
         }
         queueing_total += wait;
+        let t_req = trace::begin();
+        if trace::enabled() {
+            // the queue wait already elapsed on the modeled arrival
+            // timeline; replay it as a span ending now
+            let wait_us = (wait * 1e6) as u64;
+            trace::complete_at(
+                "queue_wait",
+                "queue",
+                trace::host_pid(),
+                t_req.saturating_sub(wait_us),
+                wait_us,
+                vec![
+                    ("request", ArgValue::U(req.id)),
+                    ("secs", ArgValue::F(wait)),
+                ],
+            );
+            trace::flow('s', req.id, trace::host_pid());
+        }
 
         // synchronous hash build + forward (the pipelined variant is
         // Pipeline::serve; open-loop measures client-visible latency).
         // `provider()` keeps this path cluster-aware: with
         // `cfg.devices > 1` the forward fans out across the fleet.
+        let t_hash = trace::begin();
         let table = builder.build(req.id, &req.ids)?;
+        if trace::enabled() {
+            trace::complete(
+                "hash_build",
+                "hash",
+                trace::host_pid(),
+                t_hash,
+                vec![
+                    ("request", ArgValue::U(req.id)),
+                    ("secs", ArgValue::F(table.build_secs)),
+                ],
+            );
+        }
         // one batch tick per served forward: the fault timeline advances
         // and failures/recoveries replan before this request is routed
         if let Some(router) = &pipeline.cluster {
             router.advance_batch(&pipeline.bundle);
         }
+        let trace_ids = [req.id];
+        let t_service = trace::begin();
         let t0 = Instant::now();
         let mut provider = pipeline.provider();
-        let out = pipeline.runner.forward(
+        let out = pipeline.runner.forward_hooked(
             &req.ids,
             Some((&table, pipeline.cfg.k_used)),
             &mut provider,
             opts,
+            ForwardHooks { layer_gate: None, trace_ids: Some(&trace_ids) },
         )?;
         let service = t0.elapsed().as_secs_f64();
         estimator.observe(table.build_secs + service);
         let latency = wait + table.build_secs + service;
+        if trace::enabled() {
+            // the flow end binds to the enclosing slice (`bp:"e"`), so
+            // emit it before the service span closes
+            trace::flow('f', req.id, trace::host_pid());
+            trace::complete(
+                "service",
+                "serve",
+                trace::host_pid(),
+                t_service,
+                vec![
+                    ("request", ArgValue::U(req.id)),
+                    ("secs", ArgValue::F(service)),
+                ],
+            );
+            // exact f64 components ride along so the trace reconciles
+            // with the reported latency bit-for-bit (tests/obs.rs)
+            trace::instant(
+                "request_done",
+                "serve",
+                trace::host_pid(),
+                vec![
+                    ("request", ArgValue::U(req.id)),
+                    ("latency_secs", ArgValue::F(latency)),
+                    ("wait_secs", ArgValue::F(wait)),
+                    ("hash_secs", ArgValue::F(table.build_secs)),
+                    ("service_secs", ArgValue::F(service)),
+                ],
+            );
+        }
         stats.latency.record(latency);
         stats.record_class(&req.class, latency);
         stats.phases.add(&out.times);

@@ -40,6 +40,7 @@ use crate::memory::{
     CostModel, DevicePool, ExpertStore, HierarchyStats, ReadOutcome, ReserveOutcome,
     ResidencyLedger, Tier, DEFAULT_RAM_BUDGET, PAYLOAD_HEADER_BYTES,
 };
+use crate::obs::trace::{self, ArgValue};
 use crate::runtime::DeviceBuffer;
 
 /// The four staged parts of one resident expert (w1, b1, w2, b2) in
@@ -179,6 +180,10 @@ pub struct ExpertCache {
     /// fabrications write them — all on a measured timeline beside the
     /// ledger's modeled one
     store: Option<StoreBinding>,
+    /// Chrome trace pid this cache's ladder events are emitted under
+    /// (device 0 by default; cluster device caches override — see
+    /// [`crate::obs::trace::device_pid`])
+    trace_pid: u32,
     stats: CacheStats,
 }
 
@@ -215,8 +220,15 @@ impl ExpertCache {
             prefetch_busy_until: 0.0,
             pinned: Mutex::new(HashMap::new()),
             store: None,
+            trace_pid: trace::device_pid(0),
             stats: CacheStats::default(),
         }
+    }
+
+    /// Set the Chrome trace pid for this cache's ladder events (cluster
+    /// device caches report under their own device timeline).
+    pub fn set_trace_pid(&mut self, pid: u32) {
+        self.trace_pid = pid;
     }
 
     /// Attach the on-disk SSD tier.  Every key already in the store
@@ -426,12 +438,28 @@ impl ExpertCache {
                     // and every key that lands on SSD spills its blob
                     // to the on-disk store
                     let spilled = self.ledger.demote(victim);
+                    if trace::enabled() {
+                        trace::instant(
+                            "demote",
+                            "ladder",
+                            self.trace_pid,
+                            vec![
+                                ("block", ArgValue::U(victim.block as u64)),
+                                ("expert", ArgValue::U(victim.expert as u64)),
+                                ("to", ArgValue::S(format!("{:?}", self.ledger.tier_of(&victim)))),
+                            ],
+                        );
+                    }
                     self.spill_to_store(&spilled);
                     self.stats.evictions += 1;
                 }
                 None => return Ok(EnsureOutcome::AllPinned),
             }
         }
+        // measured fetch wall for the promotion event only — the clock
+        // is read solely with tracing on, so the traced-off hot path is
+        // untouched
+        let t_fetch = trace::enabled().then(std::time::Instant::now);
         let parts = self.fetch_parts(key, from_tier, fetch)?;
         match self.pool.reserve(key, sim_bytes) {
             ReserveOutcome::Ok => {}
@@ -453,6 +481,24 @@ impl ExpertCache {
         // parallel promote accounting
         let secs = self.ledger.promote(key, sim_bytes);
         self.stats.modeled_transfer_secs += secs;
+        if let Some(t0) = t_fetch {
+            // the ladder promotion event: which tier the expert came
+            // from, the modeled ladder seconds charged, and the
+            // measured staging wall beside it
+            trace::instant(
+                "promote",
+                "ladder",
+                self.trace_pid,
+                vec![
+                    ("block", ArgValue::U(key.block as u64)),
+                    ("expert", ArgValue::U(key.expert as u64)),
+                    ("from", ArgValue::S(format!("{from_tier:?}"))),
+                    ("modeled_secs", ArgValue::F(secs)),
+                    ("measured_secs", ArgValue::F(t0.elapsed().as_secs_f64())),
+                    ("blocking", ArgValue::U(blocking as u64)),
+                ],
+            );
+        }
         if !blocking {
             // virtual prefetch timeline: the transfer starts when the
             // single modeled link frees up, and only the share that

@@ -124,6 +124,12 @@ impl SharedExpertCache {
         self.write_inner().attach_store(binding);
     }
 
+    /// Label ladder trace events with the owning device's trace pid
+    /// (see [`ExpertCache::set_trace_pid`]).  Construction-time only.
+    pub fn set_trace_pid(&self, pid: u32) {
+        self.write_inner().set_trace_pid(pid);
+    }
+
     /// Ensure residency without pinning — the prefetch/warmer entry
     /// point.  `fetch` is `Fn` (not `FnOnce`) because a fully pinned
     /// budget makes the call retry.

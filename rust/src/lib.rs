@@ -36,6 +36,9 @@
 //!   the cluster router (`--devices N --replicate-top R`).
 //! * [`server`] — TCP line-protocol front-end: connections feed one
 //!   shared admission queue; a worker serves formed batches.
+//! * [`obs`] — observability: the unified metrics registry, the
+//!   per-request span tracer (`--trace-out`, Chrome trace-event JSON),
+//!   and the Prometheus text exposition behind `cmd:metrics`.
 //! * [`testkit`] — synthetic bundles + the pure-Rust reference backend;
 //!   what makes `cargo test` hermetic.
 //!
@@ -72,6 +75,7 @@ pub mod experts;
 pub mod memory;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod testkit;

@@ -94,6 +94,8 @@ fn serve_cli() -> Cli {
         .opt("requests", "number of requests", "32")
         .opt("seed", "workload seed", "0")
         .opt("artifacts", "artifacts root", "")
+        .opt("trace-out", "write a Chrome trace-event JSON of the run (load in Perfetto)", "")
+        .opt("metrics-interval", "periodic metrics snapshot to stderr (seconds, 0 = off)", "0")
         .flag("real-sleep", "sleep modeled transfer time on the critical path")
         .flag("no-prefetch", "disable the SiDA prefetch stage")
         .flag("lm", "also compute LM NLL per request")
@@ -123,8 +125,40 @@ fn profile_named(name: &str) -> Result<Profile> {
     Profile::named(name)
 }
 
+/// Periodic metrics reporter: publish the pipeline's live counters into
+/// the global registry and print a one-line snapshot to stderr every
+/// `interval_secs`.  Polls a stop flag at 50ms so shutdown is prompt.
+fn spawn_metrics_reporter(
+    pipeline: &Arc<Pipeline>,
+    stop: &Arc<std::sync::atomic::AtomicBool>,
+    interval_secs: f64,
+) -> Option<std::thread::JoinHandle<()>> {
+    if interval_secs <= 0.0 {
+        return None;
+    }
+    let pipeline = Arc::clone(pipeline);
+    let stop = Arc::clone(stop);
+    Some(std::thread::spawn(move || {
+        let reg = sida_moe::obs::Registry::global();
+        let tick = std::time::Duration::from_millis(50);
+        let mut elapsed = 0.0;
+        while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+            std::thread::sleep(tick);
+            elapsed += tick.as_secs_f64();
+            if elapsed + 1e-9 >= interval_secs {
+                elapsed = 0.0;
+                pipeline.publish_live_metrics(reg);
+                eprintln!("{}", sida_moe::obs::publish::snapshot_line(reg));
+            }
+        }
+    }))
+}
+
 fn cmd_serve(tail: &[String]) -> Result<()> {
     let cfg = load_serve_config(tail)?;
+    if !cfg.trace_out.is_empty() {
+        sida_moe::obs::trace::enable(sida_moe::obs::trace::DEFAULT_CAPACITY);
+    }
     let bundle = load_bundle(std::path::Path::new(&cfg.artifacts), &cfg.model)?;
     let profile = profile_named(&cfg.dataset)?;
     let mut gen = TraceGenerator::new(profile, bundle.topology.vocab, cfg.seed);
@@ -168,8 +202,11 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
                 want_lm: cfg.want_lm,
                 want_cls: cfg.want_cls,
             };
-            let pipeline = Pipeline::new(bundle, &cfg.dataset, pcfg)?;
-            if open_loop {
+            let pipeline = Arc::new(Pipeline::new(bundle, &cfg.dataset, pcfg)?);
+            let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let reporter =
+                spawn_metrics_reporter(&pipeline, &stop, cfg.metrics_interval_secs);
+            let outcome = if open_loop {
                 let report = replay_open_loop(&pipeline, &requests, cfg.queue_cap)?;
                 println!(
                     "open-loop: mean queueing {:.2} ms | rejected {} (capacity) + {} (slo) | shed {}",
@@ -181,7 +218,12 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
                 report.outcome
             } else {
                 pipeline.serve(&requests)?
+            };
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            if let Some(h) = reporter {
+                let _ = h.join();
             }
+            outcome
         }
         m => {
             anyhow::ensure!(
@@ -358,6 +400,24 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
         }
         ct.print();
     }
+
+    // final registry publish: the serve report above and a `cmd:metrics`
+    // style exposition now read from the same snapshot
+    let reg = sida_moe::obs::Registry::global();
+    sida_moe::obs::publish::publish_serve_stats(reg, &stats);
+    sida_moe::obs::publish::publish_trace_health(reg);
+    if cfg.metrics_interval_secs > 0.0 {
+        eprintln!("{}", sida_moe::obs::publish::snapshot_line(reg));
+    }
+    if !cfg.trace_out.is_empty() {
+        sida_moe::obs::trace::write_to(&cfg.trace_out)?;
+        println!(
+            "trace: {} events ({} dropped) -> {} (open in Perfetto / chrome://tracing)",
+            sida_moe::obs::trace::len(),
+            sida_moe::obs::trace::dropped(),
+            cfg.trace_out
+        );
+    }
     Ok(())
 }
 
@@ -381,7 +441,9 @@ fn cmd_server(tail: &[String]) -> Result<()> {
         .opt("slo-deadline", "default interactive completion deadline (ms)", "100")
         .opt("conn-timeout", "socket read/write timeout (seconds, 0 = none)", "0")
         .opt("addr", "listen address", "127.0.0.1:7700")
-        .opt("artifacts", "artifacts root", "");
+        .opt("artifacts", "artifacts root", "")
+        .opt("trace-out", "write a Chrome trace-event JSON on shutdown (load in Perfetto)", "")
+        .opt("metrics-interval", "periodic metrics snapshot to stderr (seconds, 0 = off)", "0");
     let args = cli.parse_tail(tail);
     let root = match args.get("artifacts") {
         Some("") | None => sida_moe::default_artifacts_root(),
@@ -409,7 +471,12 @@ fn cmd_server(tail: &[String]) -> Result<()> {
         fault_plan: args.get_or("fault-plan", ""),
         default_deadline_secs: args.get_f64("slo-deadline", 100.0) / 1e3,
         conn_timeout_secs: args.get_f64("conn-timeout", 0.0).max(0.0),
+        trace_out: args.get_or("trace-out", ""),
+        metrics_interval_secs: args.get_f64("metrics-interval", 0.0).max(0.0),
     };
+    if !scfg.trace_out.is_empty() {
+        sida_moe::obs::trace::enable(sida_moe::obs::trace::DEFAULT_CAPACITY);
+    }
     let state = Arc::new(ServerState::new(
         bundle,
         args.get("dataset").unwrap_or("sst2"),

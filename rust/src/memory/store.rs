@@ -49,6 +49,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::experts::ExpertKey;
+use crate::obs::trace::{self, ArgValue};
 use crate::util::json::{num, obj, s, Json};
 
 /// FNV-1a 64-bit: the vendored content hash (no crates.io deps).  Not
@@ -280,6 +281,7 @@ impl ExpertStore {
         let refs = *inner.hash_refs.get(&hash).unwrap_or(&0);
         if refs == 0 {
             // first key with this content: the blob must hit the disk
+            let t_span = trace::begin();
             let t0 = Instant::now();
             let tmp = self
                 .dir
@@ -292,6 +294,19 @@ impl ExpertStore {
             inner.stats.write_secs += t0.elapsed().as_secs_f64();
             inner.stats.writes += 1;
             inner.stats.bytes_on_disk += payload.len() as u64;
+            if trace::enabled() {
+                trace::complete(
+                    "store_write",
+                    "store",
+                    trace::host_pid(),
+                    t_span,
+                    vec![
+                        ("block", ArgValue::U(key.block as u64)),
+                        ("expert", ArgValue::U(key.expert as u64)),
+                        ("bytes", ArgValue::U(payload.len() as u64)),
+                    ],
+                );
+            }
         }
         *inner.hash_refs.entry(hash).or_insert(0) += 1;
         inner.entries.insert(key, Entry { hash, bytes: payload.len() as u64, seq });
@@ -311,6 +326,7 @@ impl ExpertStore {
             inner.stats.misses += 1;
             return ReadOutcome::Miss;
         };
+        let t_span = trace::begin();
         let t0 = Instant::now();
         let data = match std::fs::read(self.blob_path(entry.hash)) {
             Ok(d) => d,
@@ -327,6 +343,19 @@ impl ExpertStore {
         if data.len() as u64 == entry.bytes && fnv1a64(&data) == entry.hash {
             inner.stats.read_secs += t0.elapsed().as_secs_f64();
             inner.stats.reads += 1;
+            if trace::enabled() {
+                trace::complete(
+                    "store_read",
+                    "store",
+                    trace::host_pid(),
+                    t_span,
+                    vec![
+                        ("block", ArgValue::U(key.block as u64)),
+                        ("expert", ArgValue::U(key.expert as u64)),
+                        ("bytes", ArgValue::U(data.len() as u64)),
+                    ],
+                );
+            }
             ReadOutcome::Hit(data)
         } else {
             log::warn!(

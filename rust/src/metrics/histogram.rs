@@ -79,6 +79,13 @@ impl LatencyHistogram {
         self.samples.iter().sum()
     }
 
+    /// The raw observations (unsorted unless a quantile was taken).
+    /// The observability publisher mirrors these into the bucketed
+    /// registry histogram (`crate::obs`).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
     pub fn merge(&mut self, other: &LatencyHistogram) {
         self.samples.extend_from_slice(&other.samples);
         self.sorted = false;

@@ -22,7 +22,7 @@
 //! width (asserted in `tests/integration.rs`).
 
 use std::cell::RefCell;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -31,6 +31,7 @@ use anyhow::{bail, Context, Result};
 use crate::cluster::ClusterRouter;
 use crate::coordinator::hash_table::HashTable;
 use crate::experts::{ExpertCache, ExpertKey, SharedExpertCache};
+use crate::obs::trace::{self, ArgValue};
 use crate::runtime::{
     literal_from_f32s, literal_i32, to_f32_vec, to_i32_vec, DeviceBuffer, Executable, Literal,
     ModelBundle,
@@ -212,6 +213,11 @@ pub struct ForwardOptions {
 #[derive(Clone, Copy, Default)]
 pub struct ForwardHooks<'a> {
     pub layer_gate: Option<&'a LayerGate>,
+    /// Request ids aligned with the batch items, used by the span
+    /// tracer (`crate::obs::trace`) to emit flow steps that tie each
+    /// device lane back to the requests it computed.  `None` (or a
+    /// disabled tracer) emits no flow events.
+    pub trace_ids: Option<&'a [u64]>,
 }
 
 /// One request in a cross-request batch handed to
@@ -782,6 +788,7 @@ impl ModelRunner {
     /// cross-device activation transfer.  Returns per-job results in
     /// the original job order, so the caller's scatter (and therefore
     /// the f32 bits) is identical to the single-device path.
+    #[allow(clippy::too_many_arguments)]
     fn run_cluster_lanes(
         &self,
         block: usize,
@@ -790,6 +797,7 @@ impl ModelRunner {
         router: &ClusterRouter,
         blocking: bool,
         fixed_bucket: bool,
+        trace_ids: Option<&[u64]>,
     ) -> Vec<Result<ExpertComputeOut>> {
         let meta: Vec<(usize, usize)> =
             jobs.iter().map(|j| (j.expert, j.rows.len())).collect();
@@ -812,8 +820,10 @@ impl ModelRunner {
         let lane_outs: Vec<Vec<(usize, Result<ExpertComputeOut>)>> =
             self.pool.run(lanes, |_slot, (device, idxs)| {
                 let par = ParProvider::Shared { cache: router.device_cache(device), blocking };
-                idxs.into_iter()
-                    .map(|i| {
+                let t_lane = trace::begin();
+                let lane: Vec<(usize, Result<ExpertComputeOut>)> = idxs
+                    .iter()
+                    .map(|&i| {
                         let job = &jobs[i];
                         let res = self
                             .compute_expert_rows(
@@ -826,7 +836,34 @@ impl ModelRunner {
                             });
                         (i, res)
                     })
-                    .collect()
+                    .collect();
+                if trace::enabled() {
+                    // flow steps tie each request through this lane's
+                    // slice (emitted before the span closes so their
+                    // timestamps land inside it)
+                    if let Some(ids) = trace_ids {
+                        let items: BTreeSet<usize> = idxs
+                            .iter()
+                            .flat_map(|&i| jobs[i].rows.iter().map(|r| r.item))
+                            .collect();
+                        for item in items {
+                            if let Some(&rid) = ids.get(item) {
+                                trace::flow('t', rid, trace::device_pid(device));
+                            }
+                        }
+                    }
+                    trace::complete(
+                        "lane",
+                        "cluster",
+                        trace::device_pid(device),
+                        t_lane,
+                        vec![
+                            ("block", ArgValue::U(block as u64)),
+                            ("jobs", ArgValue::U(idxs.len() as u64)),
+                        ],
+                    );
+                }
+                lane
             });
         let mut outs: Vec<Option<Result<ExpertComputeOut>>> =
             (0..jobs.len()).map(|_| None).collect();
@@ -853,6 +890,7 @@ impl ModelRunner {
                 router.retry_assignment(block, job.expert, job.rows.len(), assign[i]);
             let par =
                 ParProvider::Shared { cache: router.device_cache(retry_dev), blocking: true };
+            let t_retry = trace::begin();
             let res = self
                 .compute_expert_rows(block, job.expert, xlns, &job.rows, &par, fixed_bucket)
                 .map(|mut out| {
@@ -860,6 +898,27 @@ impl ModelRunner {
                         router.charge_activation_transfer(retry_dev, job.rows.len());
                     out
                 });
+            if trace::enabled() {
+                if let Some(ids) = trace_ids {
+                    let items: BTreeSet<usize> = job.rows.iter().map(|r| r.item).collect();
+                    for item in items {
+                        if let Some(&rid) = ids.get(item) {
+                            trace::flow('t', rid, trace::device_pid(retry_dev));
+                        }
+                    }
+                }
+                trace::complete(
+                    "lane_retry",
+                    "cluster",
+                    trace::device_pid(retry_dev),
+                    t_retry,
+                    vec![
+                        ("block", ArgValue::U(block as u64)),
+                        ("expert", ArgValue::U(job.expert as u64)),
+                        ("failed_device", ArgValue::U(assign[i] as u64)),
+                    ],
+                );
+            }
             outs[i] = Some(res);
         }
         outs.into_iter()
@@ -884,11 +943,13 @@ impl ModelRunner {
         provider: &mut ExpertProvider<'_>,
         fixed_bucket: bool,
         times: &mut PhaseTimes,
+        trace_ids: Option<&[u64]>,
     ) -> Result<()> {
         if jobs.is_empty() {
             return Ok(());
         }
         let d = self.bundle.topology.d_model;
+        let t_span = trace::begin();
         let t_wall = Instant::now();
         let outs: Vec<Result<ExpertComputeOut>> = match provider {
             ExpertProvider::Cached { cache, blocking } => {
@@ -903,9 +964,15 @@ impl ModelRunner {
                     })
                     .collect()
             }
-            ExpertProvider::Cluster { router, blocking } => {
-                self.run_cluster_lanes(block, jobs, xlns, *router, *blocking, fixed_bucket)
-            }
+            ExpertProvider::Cluster { router, blocking } => self.run_cluster_lanes(
+                block,
+                jobs,
+                xlns,
+                *router,
+                *blocking,
+                fixed_bucket,
+                trace_ids,
+            ),
             other => {
                 let par = match &*other {
                     ExpertProvider::AllResident(map) => ParProvider::AllResident(*map),
@@ -926,8 +993,23 @@ impl ModelRunner {
                 })
             }
         };
-        times.expert_wall_secs += t_wall.elapsed().as_secs_f64();
+        let wall = t_wall.elapsed().as_secs_f64();
+        times.expert_wall_secs += wall;
+        if trace::enabled() {
+            trace::complete(
+                "expert_wall",
+                "moe",
+                trace::host_pid(),
+                t_span,
+                vec![
+                    ("block", ArgValue::U(block as u64)),
+                    ("jobs", ArgValue::U(jobs.len() as u64)),
+                    ("secs", ArgValue::F(wall)),
+                ],
+            );
+        }
 
+        let t_scatter_span = trace::begin();
         let t_scatter = Instant::now();
         for (job, out) in jobs.iter().zip(outs) {
             let out = out?;
@@ -942,7 +1024,20 @@ impl ModelRunner {
                 }
             }
         }
-        times.scatter_secs += t_scatter.elapsed().as_secs_f64();
+        let scatter = t_scatter.elapsed().as_secs_f64();
+        times.scatter_secs += scatter;
+        if trace::enabled() {
+            trace::complete(
+                "scatter",
+                "moe",
+                trace::host_pid(),
+                t_scatter_span,
+                vec![
+                    ("block", ArgValue::U(block as u64)),
+                    ("secs", ArgValue::F(scatter)),
+                ],
+            );
+        }
         Ok(())
     }
 
@@ -973,7 +1068,9 @@ impl ModelRunner {
 
     /// Run one MoE layer given a routing decision.  The decision's
     /// alphas are applied host-side during scatter; the combine artifact
-    /// adds the residual with alpha=1 on real tokens.
+    /// adds the residual with alpha=1 on real tokens.  `trace_ids`
+    /// carries the request ids for span-tracer flow events (see
+    /// [`ForwardHooks::trace_ids`]).
     #[allow(clippy::too_many_arguments)]
     pub fn run_moe_layer(
         &self,
@@ -985,12 +1082,14 @@ impl ModelRunner {
         provider: &mut ExpertProvider<'_>,
         opts: ForwardOptions,
         times: &mut PhaseTimes,
+        trace_ids: Option<&[u64]>,
     ) -> Result<Literal> {
         let topo = &self.bundle.topology;
         let d = topo.d_model;
         let l = self.seq_len;
         let xln = self.run_moe_ln(x, block)?;
 
+        let t_gather_span = trace::begin();
         let t_gather = Instant::now();
         let xln_host = to_f32_vec(&xln)?;
         let mut y_acc = vec![0f32; l * d];
@@ -1005,7 +1104,21 @@ impl ModelRunner {
             );
         }
         let jobs = self.jobs_from_union(union, opts.invoke_all);
-        times.gather_secs += t_gather.elapsed().as_secs_f64();
+        let gather = t_gather.elapsed().as_secs_f64();
+        times.gather_secs += gather;
+        if trace::enabled() {
+            trace::complete(
+                "gather",
+                "moe",
+                trace::host_pid(),
+                t_gather_span,
+                vec![
+                    ("block", ArgValue::U(block as u64)),
+                    ("experts", ArgValue::U(jobs.len() as u64)),
+                    ("secs", ArgValue::F(gather)),
+                ],
+            );
+        }
 
         self.run_expert_set(
             block,
@@ -1015,6 +1128,7 @@ impl ModelRunner {
             provider,
             opts.fixed_bucket,
             times,
+            trace_ids,
         )?;
 
         let y_lit = literal_from_f32s(&[1, l, d], &y_acc)?;
@@ -1092,7 +1206,15 @@ impl ModelRunner {
                     }
 
                     x = self.run_moe_layer(
-                        &x, &mask_host, &mask_lit, block, &routing, provider, opts, &mut times,
+                        &x,
+                        &mask_host,
+                        &mask_lit,
+                        block,
+                        &routing,
+                        provider,
+                        opts,
+                        &mut times,
+                        hooks.trace_ids,
                     )?;
                     routing_used.push(routing);
                 }
@@ -1247,6 +1369,7 @@ impl ModelRunner {
                         times.stall_secs += gate.begin_layer(moe_layer);
                     }
 
+                    let t_gather_span = trace::begin();
                     let t_gather = Instant::now();
                     let mut y_accs: Vec<Vec<f32>> =
                         (0..n).map(|_| vec![0f32; l * d]).collect();
@@ -1261,7 +1384,22 @@ impl ModelRunner {
                         }
                     }
                     let jobs = self.jobs_from_union(union, opts.invoke_all);
-                    times.gather_secs += t_gather.elapsed().as_secs_f64();
+                    let gather = t_gather.elapsed().as_secs_f64();
+                    times.gather_secs += gather;
+                    if trace::enabled() {
+                        trace::complete(
+                            "gather",
+                            "moe",
+                            trace::host_pid(),
+                            t_gather_span,
+                            vec![
+                                ("block", ArgValue::U(block as u64)),
+                                ("experts", ArgValue::U(jobs.len() as u64)),
+                                ("batch", ArgValue::U(n as u64)),
+                                ("secs", ArgValue::F(gather)),
+                            ],
+                        );
+                    }
 
                     self.run_expert_set(
                         block,
@@ -1271,6 +1409,7 @@ impl ModelRunner {
                         provider,
                         opts.fixed_bucket,
                         &mut times,
+                        hooks.trace_ids,
                     )?;
 
                     xs = self.combine_many(&xs, &y_accs, &mask_lits, mask_stack.as_ref())?;

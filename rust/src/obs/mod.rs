@@ -1,0 +1,23 @@
+//! Observability: the unified metrics registry, the per-request span
+//! tracer, and the Prometheus text exposition (DESIGN.md §2.8).
+//!
+//! Three pieces, one rule — every number that leaves the process goes
+//! through the [`Registry`]:
+//!
+//! * [`registry`] — typed [`Counter`]/[`Gauge`]/[`Histogram`] handles
+//!   backed by atomics, registered once under (name, labels);
+//! * [`trace`] — a ring-buffer span recorder (off by default,
+//!   `--trace-out FILE` to enable) exported as Chrome trace-event JSON
+//!   with request ids as flow events;
+//! * [`prom`] + [`publish`] — snapshot publishers mapping the serving
+//!   accumulator structs into registry series and rendering them as
+//!   Prometheus text (`cmd:metrics`) or a compact stderr line
+//!   (`--metrics-interval`).
+
+pub mod prom;
+pub mod publish;
+pub mod registry;
+pub mod trace;
+
+pub use registry::{default_secs_buckets, Counter, Gauge, Histogram, Registry};
+pub use registry::{SeriesSnapshot, SnapValue};

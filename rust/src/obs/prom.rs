@@ -1,0 +1,153 @@
+//! Prometheus text exposition (version 0.0.4) rendered from a registry
+//! snapshot: `# HELP`/`# TYPE` once per metric family, counters and
+//! gauges as plain samples, histograms as cumulative `_bucket{le=...}`
+//! series plus `_sum` and `_count`.
+
+use crate::obs::registry::{SeriesSnapshot, SnapValue};
+
+/// Format a sample value the way Prometheus expects: integers without a
+/// decimal point, infinities as `+Inf`/`-Inf`.
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        return "NaN".to_string();
+    }
+    if v == f64::INFINITY {
+        return "+Inf".to_string();
+    }
+    if v == f64::NEG_INFINITY {
+        return "-Inf".to_string();
+    }
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+fn sample_line(out: &mut String, name: &str, labels: &str, value: &str) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        out.push_str(labels);
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(value);
+    out.push('\n');
+}
+
+fn join_labels(base: &str, extra: &str) -> String {
+    if base.is_empty() {
+        extra.to_string()
+    } else if extra.is_empty() {
+        base.to_string()
+    } else {
+        format!("{base},{extra}")
+    }
+}
+
+/// Render a snapshot (sorted by name, as [`crate::obs::Registry::snapshot`]
+/// produces) as Prometheus text format.
+pub fn render(snaps: &[SeriesSnapshot]) -> String {
+    let mut out = String::new();
+    let mut last_name: Option<&str> = None;
+    for s in snaps {
+        if last_name != Some(s.name.as_str()) {
+            out.push_str(&format!("# HELP {} {}\n", s.name, escape_help(&s.help)));
+            let kind = match &s.value {
+                SnapValue::Counter(_) => "counter",
+                SnapValue::Gauge(_) => "gauge",
+                SnapValue::Histogram { .. } => "histogram",
+            };
+            out.push_str(&format!("# TYPE {} {}\n", s.name, kind));
+            last_name = Some(s.name.as_str());
+        }
+        match &s.value {
+            SnapValue::Counter(n) => {
+                sample_line(&mut out, &s.name, &s.labels, &format!("{n}"));
+            }
+            SnapValue::Gauge(v) => {
+                sample_line(&mut out, &s.name, &s.labels, &fmt_value(*v));
+            }
+            SnapValue::Histogram { cumulative, sum, count } => {
+                let bucket = format!("{}_bucket", s.name);
+                for (le, cum) in cumulative {
+                    let labels = join_labels(&s.labels, &format!("le=\"{}\"", fmt_value(*le)));
+                    sample_line(&mut out, &bucket, &labels, &format!("{cum}"));
+                }
+                sample_line(&mut out, &format!("{}_sum", s.name), &s.labels, &fmt_value(*sum));
+                sample_line(&mut out, &format!("{}_count", s.name), &s.labels, &format!("{count}"));
+            }
+        }
+    }
+    out
+}
+
+/// Look up one sample in rendered text by its full series name
+/// (including labels, e.g. `sida_device_rows_total{device="0"}`).
+/// Used by the view-agreement tests.
+pub fn sample(text: &str, series: &str) -> Option<f64> {
+    for line in text.lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        let Some((name, value)) = line.rsplit_once(' ') else {
+            continue;
+        };
+        if name == series {
+            return match value {
+                "+Inf" => Some(f64::INFINITY),
+                "-Inf" => Some(f64::NEG_INFINITY),
+                v => v.parse().ok(),
+            };
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::Registry;
+
+    #[test]
+    fn renders_families_once_and_samples_per_series() {
+        let reg = Registry::new();
+        reg.counter_with("sida_x_total", &[("device", "0")], "x help").add(3);
+        reg.counter_with("sida_x_total", &[("device", "1")], "x help").add(5);
+        reg.gauge("sida_y_bytes", "y help").set(1.5e9);
+        let text = render(&reg.snapshot());
+        assert_eq!(text.matches("# HELP sida_x_total").count(), 1);
+        assert_eq!(text.matches("# TYPE sida_x_total counter").count(), 1);
+        assert_eq!(sample(&text, "sida_x_total{device=\"0\"}"), Some(3.0));
+        assert_eq!(sample(&text, "sida_x_total{device=\"1\"}"), Some(5.0));
+        assert_eq!(sample(&text, "sida_y_bytes"), Some(1.5e9));
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_buckets() {
+        let reg = Registry::new();
+        let h = reg.histogram_with("sida_lat_seconds", &[], "latency", &[0.1, 1.0]);
+        h.observe(0.05);
+        h.observe(0.5);
+        h.observe(5.0);
+        let text = render(&reg.snapshot());
+        assert_eq!(sample(&text, "sida_lat_seconds_bucket{le=\"0.1\"}"), Some(1.0));
+        assert_eq!(sample(&text, "sida_lat_seconds_bucket{le=\"1\"}"), Some(2.0));
+        assert_eq!(sample(&text, "sida_lat_seconds_bucket{le=\"+Inf\"}"), Some(3.0));
+        assert_eq!(sample(&text, "sida_lat_seconds_count"), Some(3.0));
+        assert!((sample(&text, "sida_lat_seconds_sum").unwrap() - 5.55).abs() < 1e-12);
+        assert_eq!(text.matches("# TYPE sida_lat_seconds histogram").count(), 1);
+    }
+
+    #[test]
+    fn integer_and_float_formatting() {
+        assert_eq!(fmt_value(5.0), "5");
+        assert_eq!(fmt_value(0.25), "0.25");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+    }
+}

@@ -1,0 +1,385 @@
+//! Snapshot publishers: mirror the serving stack's accumulator structs
+//! (`ServeStats` and friends) into a [`Registry`].
+//!
+//! The accumulators stay the single WRITERS (hot paths keep their plain
+//! counters and the tests that assert on them keep working); the
+//! registry is the single EXPORT surface.  Everything that leaves the
+//! process — the serve report, the server's `cmd:stats` JSON, the
+//! `cmd:metrics` Prometheus text, the `--metrics-interval` stderr line
+//! — reads one published snapshot, so the views cannot drift.
+//!
+//! Conventions: every series is `sida_`-prefixed; counters end in
+//! `_total`; seconds/bytes units are spelled in the name; optional
+//! ratios (`hit_rate`, `slo_attainment`, …) publish `NaN` when the run
+//! produced no traffic for them — the same distinction the report
+//! structs make with `Option`/`null`.
+
+use crate::metrics::ServeStats;
+use crate::obs::registry::Registry;
+use crate::obs::{prom, trace};
+
+fn opt(v: Option<f64>) -> f64 {
+    v.unwrap_or(f64::NAN)
+}
+
+/// Publish one serving run's aggregate stats.  Idempotent: republishing
+/// a newer snapshot overwrites the same series.
+pub fn publish_serve_stats(reg: &Registry, stats: &ServeStats) {
+    // ---- request flow -----------------------------------------------------
+    reg.counter("sida_requests_total", "requests served").set(stats.requests);
+    reg.counter("sida_batches_total", "forward passes issued").set(stats.batches);
+    reg.counter("sida_shed_total", "admitted requests shed with a blown deadline")
+        .set(stats.shed);
+    reg.counter_with(
+        "sida_rejected_total",
+        &[("reason", "queue_full")],
+        "arrivals rejected at admission",
+    )
+    .set(stats.rejected);
+    reg.counter_with(
+        "sida_rejected_total",
+        &[("reason", "slo")],
+        "arrivals rejected at admission",
+    )
+    .set(stats.rejected_slo);
+    reg.counter("sida_interactive_offered_total", "interactive requests offered")
+        .set(stats.interactive_offered);
+    reg.counter("sida_slo_attained_total", "interactive requests served within deadline")
+        .set(stats.slo_attained);
+    reg.gauge("sida_slo_attainment_ratio", "attained / offered interactive (NaN: none offered)")
+        .set(opt(stats.slo_attainment()));
+    reg.gauge("sida_mean_batch_size", "requests per formed batch (NaN: no batches)")
+        .set(opt(stats.mean_batch_size()));
+    reg.gauge("sida_throughput_rps", "served requests per wall second")
+        .set(stats.throughput());
+
+    // ---- time -------------------------------------------------------------
+    reg.gauge("sida_wall_seconds", "wall-clock seconds of the run").set(stats.wall_secs);
+    reg.gauge("sida_hash_build_seconds", "hash-building thread seconds (overlapped)")
+        .set(stats.hash_build_secs);
+    reg.gauge(
+        "sida_modeled_request_seconds",
+        "modeled per-request latency: critical path + exposed transfer (NaN: no requests)",
+    )
+    .set(opt(stats.modeled_request_secs()));
+    let phases: &[(&str, f64)] = &[
+        ("dense", stats.phases.dense_secs),
+        ("selection", stats.phases.selection_secs),
+        ("gather", stats.phases.gather_secs),
+        ("expert", stats.phases.expert_secs),
+        ("expert_wall", stats.phases.expert_wall_secs),
+        ("scatter", stats.phases.scatter_secs),
+        ("stall", stats.phases.stall_secs),
+        ("transfer", stats.phases.transfer_secs),
+    ];
+    for (phase, secs) in phases {
+        reg.gauge_with(
+            "sida_phase_seconds",
+            &[("phase", phase)],
+            "cumulative forward-phase seconds",
+        )
+        .set(*secs);
+    }
+    reg.counter("sida_expert_invocations_total", "expert FFN invocations")
+        .set(stats.phases.expert_invocations as u64);
+
+    // ---- latency ----------------------------------------------------------
+    reg.histogram("sida_request_latency_seconds", "end-to-end request latency")
+        .reload(stats.latency.samples().iter().copied());
+    let quantiles: &[(&str, f64)] = &[("p50", 0.50), ("p95", 0.95), ("p99", 0.99), ("p999", 0.999)];
+    let mut lat = stats.latency.clone();
+    let mut lat_int = stats.latency_interactive.clone();
+    let mut lat_batch = stats.latency_batch.clone();
+    for (name, q) in quantiles {
+        reg.gauge_with(
+            "sida_latency_seconds",
+            &[("class", "all"), ("q", name)],
+            "exact nearest-rank latency quantiles",
+        )
+        .set(if lat.is_empty() { f64::NAN } else { lat.quantile(*q) });
+        reg.gauge_with(
+            "sida_latency_seconds",
+            &[("class", "interactive"), ("q", name)],
+            "exact nearest-rank latency quantiles",
+        )
+        .set(if lat_int.is_empty() { f64::NAN } else { lat_int.quantile(*q) });
+        reg.gauge_with(
+            "sida_latency_seconds",
+            &[("class", "batch"), ("q", name)],
+            "exact nearest-rank latency quantiles",
+        )
+        .set(if lat_batch.is_empty() { f64::NAN } else { lat_batch.quantile(*q) });
+    }
+
+    // ---- memory + cache ---------------------------------------------------
+    reg.gauge("sida_peak_device_bytes", "peak simulated device bytes")
+        .set(stats.peak_device_bytes as f64);
+    reg.gauge("sida_budget_bytes", "simulated device budget").set(stats.budget_bytes as f64);
+    reg.counter("sida_cache_hits_total", "expert cache hits").set(stats.cache_hits);
+    reg.counter("sida_cache_misses_total", "expert cache misses").set(stats.cache_misses);
+    reg.counter("sida_cache_blocking_misses_total", "misses paid on the critical path")
+        .set(stats.blocking_misses);
+    reg.counter("sida_cache_evictions_total", "expert cache evictions").set(stats.evictions);
+    reg.gauge("sida_cache_hit_ratio", "hits / (hits + misses) (NaN: no traffic)")
+        .set(opt(stats.hit_rate()));
+    reg.counter("sida_transferred_sim_bytes_total", "simulated H2D bytes moved")
+        .set(stats.transferred_bytes);
+    reg.gauge("sida_modeled_transfer_seconds", "modeled H2D transfer seconds (both timelines)")
+        .set(stats.modeled_transfer_secs);
+    reg.gauge(
+        "sida_overlapped_transfer_seconds",
+        "modeled transfer seconds hidden behind compute",
+    )
+    .set(stats.overlapped_transfer_secs);
+    reg.gauge("sida_exposed_transfer_seconds", "modeled transfer seconds on the critical path")
+        .set(stats.exposed_transfer_secs());
+
+    // ---- §6 tier ladder ---------------------------------------------------
+    let h = &stats.hierarchy;
+    reg.gauge("sida_ladder_seconds", "tier-ladder seconds (== modeled transfer attribution)")
+        .set(stats.ladder_secs());
+    let tiers: &[(&str, usize)] =
+        &[("device", h.device_bytes), ("ram", h.ram_bytes), ("ssd", h.ssd_bytes)];
+    for (tier, bytes) in tiers {
+        reg.gauge_with("sida_tier_bytes", &[("tier", tier)], "simulated bytes resident per tier")
+            .set(*bytes as f64);
+    }
+    reg.counter_with(
+        "sida_ladder_promotions_total",
+        &[("from", "ram")],
+        "promotions into device tier by source",
+    )
+    .set(h.promotions_from_ram);
+    reg.counter_with(
+        "sida_ladder_promotions_total",
+        &[("from", "ssd")],
+        "promotions into device tier by source",
+    )
+    .set(h.promotions_from_ssd);
+    reg.counter_with(
+        "sida_ladder_demotions_total",
+        &[("to", "ram")],
+        "device-tier demotions by destination",
+    )
+    .set(h.demotions_to_ram);
+    reg.counter_with(
+        "sida_ladder_demotions_total",
+        &[("to", "ssd")],
+        "device-tier demotions by destination",
+    )
+    .set(h.demotions_to_ssd);
+    reg.gauge_with(
+        "sida_ladder_promote_seconds",
+        &[("from", "ram")],
+        "modeled promotion seconds by source tier",
+    )
+    .set(h.ram_promote_secs);
+    reg.gauge_with(
+        "sida_ladder_promote_seconds",
+        &[("from", "ssd")],
+        "modeled promotion seconds by source tier",
+    )
+    .set(h.ssd_promote_secs);
+    reg.gauge_with(
+        "sida_measured_ssd_seconds",
+        &[("op", "read")],
+        "measured wall seconds of on-disk store I/O",
+    )
+    .set(h.measured_ssd_read_secs);
+    reg.gauge_with(
+        "sida_measured_ssd_seconds",
+        &[("op", "write")],
+        "measured wall seconds of on-disk store I/O",
+    )
+    .set(h.measured_ssd_write_secs);
+    reg.gauge("sida_store_bytes_on_disk", "expert-store bytes on disk")
+        .set(h.store_bytes_on_disk as f64);
+    reg.counter("sida_store_hits_total", "SSD promotions served by verified reads")
+        .set(h.store_hits);
+    reg.counter("sida_store_misses_total", "SSD promotions with no readable blob")
+        .set(h.store_misses);
+    reg.counter("sida_store_writes_total", "blobs written to disk").set(h.store_writes);
+    reg.counter("sida_store_refabrications_total", "promotions re-fabricated from the bundle")
+        .set(h.refabrications);
+    reg.counter("sida_store_integrity_failures_total", "blob verifications that failed")
+        .set(h.integrity_failures);
+    reg.counter("sida_store_reclaimed_total", "store entries reclaimed by the SSD budget")
+        .set(h.store_reclaimed);
+
+    // ---- cluster ----------------------------------------------------------
+    if let Some(cs) = &stats.cluster {
+        publish_cluster(reg, cs);
+    }
+    publish_trace_health(reg);
+}
+
+fn publish_cluster(reg: &Registry, cs: &crate::cluster::ClusterStats) {
+    use crate::cluster::DeviceHealth;
+    reg.gauge("sida_cluster_devices", "devices in the modeled fleet")
+        .set(cs.devices.len() as f64);
+    reg.gauge("sida_cluster_replicated_entries", "placement entries beyond one home per expert")
+        .set(cs.replicated_entries as f64);
+    reg.counter("sida_cluster_cross_device_bytes_total", "activation bytes across the fabric")
+        .set(cs.cross_device_bytes);
+    reg.gauge("sida_cluster_interconnect_seconds", "modeled activation-transfer seconds")
+        .set(cs.interconnect_secs);
+    reg.counter("sida_cluster_replans_total", "placement (re)computations").set(cs.replans);
+    reg.counter("sida_cluster_failovers_total", "jobs rerouted off a Down home")
+        .set(cs.failovers);
+    reg.counter("sida_cluster_failover_promotions_total", "failovers with no healthy holder")
+        .set(cs.failover_promotions);
+    reg.counter("sida_cluster_retries_total", "lanes recomputed after a mid-batch crash")
+        .set(cs.retries);
+    reg.counter("sida_cluster_dropped_fetches_total", "planned prefetches dropped by faults")
+        .set(cs.dropped_fetches);
+    reg.counter("sida_cluster_device_failures_total", "Up->Down transitions")
+        .set(cs.device_failures);
+    reg.counter("sida_cluster_recoveries_total", "Down->Up transitions").set(cs.recoveries);
+    reg.gauge("sida_cluster_downtime_seconds", "measured wall seconds devices spent Down")
+        .set(cs.downtime_secs);
+    reg.gauge("sida_cluster_load_imbalance", "max-over-mean row load (NaN: idle)")
+        .set(opt(cs.load_imbalance()));
+    reg.gauge("sida_cluster_compute_imbalance", "max-over-mean bucket-unit load (NaN: idle)")
+        .set(opt(cs.compute_imbalance()));
+    for d in &cs.devices {
+        let id = d.device.to_string();
+        let l: &[(&str, &str)] = &[("device", id.as_str())];
+        reg.gauge_with("sida_device_up", l, "1 Up, 0.5 Degraded, 0 Down").set(match d.health {
+            DeviceHealth::Up => 1.0,
+            DeviceHealth::Degraded => 0.5,
+            DeviceHealth::Down => 0.0,
+        });
+        reg.gauge_with("sida_device_peak_bytes", l, "peak simulated bytes per device")
+            .set(d.peak_bytes as f64);
+        reg.gauge_with("sida_device_used_bytes", l, "simulated bytes resident per device")
+            .set(d.used_bytes as f64);
+        reg.gauge_with("sida_device_resident_experts", l, "experts resident per device")
+            .set(d.resident_experts as f64);
+        reg.gauge_with("sida_device_assigned_experts", l, "placement entries per device")
+            .set(d.assigned_experts as f64);
+        reg.counter_with("sida_device_rows_total", l, "token rows dispatched per device")
+            .set(d.rows);
+        reg.counter_with("sida_device_bucket_units_total", l, "dispatch buckets per device")
+            .set(d.bucket_units);
+        reg.counter_with("sida_device_cache_hits_total", l, "cache hits per device")
+            .set(d.cache.hits);
+        reg.counter_with("sida_device_cache_misses_total", l, "cache misses per device")
+            .set(d.cache.misses);
+    }
+}
+
+/// Publish the tracer's own health counters (buffer fill + drops).
+pub fn publish_trace_health(reg: &Registry) {
+    reg.counter("sida_trace_events_dropped_total", "trace ring-buffer events dropped (oldest)")
+        .set(trace::dropped());
+    reg.gauge("sida_trace_events", "trace events currently buffered").set(trace::len() as f64);
+    reg.gauge("sida_trace_enabled", "1 when span tracing is recording")
+        .set(if trace::enabled() { 1.0 } else { 0.0 });
+}
+
+/// Prometheus text for the registry's current contents.
+pub fn render_text(reg: &Registry) -> String {
+    prom::render(&reg.snapshot())
+}
+
+/// One compact stderr line for `--metrics-interval`: every non-zero
+/// counter/gauge as `name{labels}=value`.
+pub fn snapshot_line(reg: &Registry) -> String {
+    use crate::obs::registry::SnapValue;
+    let mut out = String::from("metrics:");
+    for s in reg.snapshot() {
+        let val = match s.value {
+            SnapValue::Counter(0) => continue,
+            SnapValue::Counter(n) => format!("{n}"),
+            SnapValue::Gauge(v) if v == 0.0 || v.is_nan() => continue,
+            SnapValue::Gauge(v) => format!("{v:.6}"),
+            SnapValue::Histogram { .. } => continue,
+        };
+        out.push(' ');
+        out.push_str(&s.name);
+        if !s.labels.is_empty() {
+            out.push('{');
+            out.push_str(&s.labels);
+            out.push('}');
+        }
+        out.push('=');
+        out.push_str(&val);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publishes_a_rich_series_set() {
+        let reg = Registry::new();
+        let mut stats = ServeStats::default();
+        stats.requests = 8;
+        stats.batches = 2;
+        stats.wall_secs = 0.5;
+        stats.cache_hits = 30;
+        stats.cache_misses = 10;
+        stats.latency.record(0.010);
+        stats.latency.record(0.020);
+        stats.hierarchy.promotions_from_ssd = 3;
+        stats.hierarchy.ssd_promote_secs = 0.3;
+        publish_serve_stats(&reg, &stats);
+        // the acceptance floor is 25 exported series; single-device
+        // publishing alone must clear it with headroom
+        assert!(reg.series_count() >= 25, "only {} series", reg.series_count());
+        let text = render_text(&reg);
+        assert_eq!(prom::sample(&text, "sida_requests_total"), Some(8.0));
+        assert_eq!(prom::sample(&text, "sida_cache_hits_total"), Some(30.0));
+        assert_eq!(prom::sample(&text, "sida_cache_hit_ratio"), Some(0.75));
+        assert_eq!(
+            prom::sample(&text, "sida_ladder_promotions_total{from=\"ssd\"}"),
+            Some(3.0)
+        );
+        assert_eq!(prom::sample(&text, "sida_request_latency_seconds_count"), Some(2.0));
+    }
+
+    #[test]
+    fn republish_overwrites_not_accumulates() {
+        let reg = Registry::new();
+        let mut stats = ServeStats::default();
+        stats.requests = 5;
+        publish_serve_stats(&reg, &stats);
+        stats.requests = 9;
+        publish_serve_stats(&reg, &stats);
+        let text = render_text(&reg);
+        assert_eq!(prom::sample(&text, "sida_requests_total"), Some(9.0));
+    }
+
+    #[test]
+    fn cluster_devices_get_labeled_series() {
+        use crate::cluster::{ClusterStats, DeviceStats};
+        let reg = Registry::new();
+        let mut stats = ServeStats::default();
+        let mut cs = ClusterStats::default();
+        for id in 0..2 {
+            let mut d = DeviceStats { device: id, ..Default::default() };
+            d.rows = 10 + id as u64;
+            cs.devices.push(d);
+        }
+        cs.failovers = 4;
+        stats.cluster = Some(cs);
+        publish_serve_stats(&reg, &stats);
+        let text = render_text(&reg);
+        assert_eq!(prom::sample(&text, "sida_device_rows_total{device=\"0\"}"), Some(10.0));
+        assert_eq!(prom::sample(&text, "sida_device_rows_total{device=\"1\"}"), Some(11.0));
+        assert_eq!(prom::sample(&text, "sida_cluster_failovers_total"), Some(4.0));
+        assert_eq!(prom::sample(&text, "sida_device_up{device=\"0\"}"), Some(1.0));
+    }
+
+    #[test]
+    fn snapshot_line_skips_zeros() {
+        let reg = Registry::new();
+        reg.counter("sida_a_total", "a").set(0);
+        reg.counter("sida_b_total", "b").set(7);
+        let line = snapshot_line(&reg);
+        assert!(line.contains("sida_b_total=7"));
+        assert!(!line.contains("sida_a_total"));
+    }
+}

@@ -1,0 +1,496 @@
+//! Unified metrics registry: typed `Counter`/`Gauge`/`Histogram` handles
+//! backed by atomics, registered once under a (name, labels) key.
+//!
+//! The serving stack accumulates statistics in several purpose-built
+//! structs (`CacheStats`, `BatchingStats`, `ClusterStats`,
+//! `HierarchyStats`, `ServeStats`).  Those structs stay — they are the
+//! snapshot views the tests and benches assert on — but every exported
+//! number now flows through ONE registry so the serve report, the
+//! server's `cmd:stats`/`cmd:metrics` replies and the bench JSON all
+//! read the same series (see [`crate::obs::publish`]).
+//!
+//! Handles are cheap clones of an `Arc<AtomicU64>`; registration is
+//! idempotent (same name + labels returns the same underlying cell) and
+//! re-registering a name under a different type panics — that is a
+//! programming error, not a runtime condition.
+//!
+//! Two registries matter in practice:
+//!
+//! * [`Registry::global`] — the process-wide registry the CLI serve
+//!   path publishes into;
+//! * per-instance registries (`Registry::new`) — the TCP server gives
+//!   each `ServerState` its own so parallel test servers in one process
+//!   do not pollute each other's exact counts.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // a panicked holder leaves the data valid (all writes are atomic
+    // stores); poisoning must not take metrics down with it
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// handles
+// ---------------------------------------------------------------------------
+
+/// Monotonically increasing event count (u64).
+#[derive(Clone, Debug, Default)]
+pub struct Counter {
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.cell.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.cell.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite the count.  Used by the snapshot publishers, which
+    /// mirror an externally accumulated total into the registry.
+    pub fn set(&self, n: u64) {
+        self.cell.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous f64 value (stored as IEEE-754 bits in an `AtomicU64`).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge {
+    bits: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn add(&self, delta: f64) {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + delta).to_bits();
+            match self
+                .bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram with atomic per-bucket counts.
+///
+/// Unlike [`crate::metrics::LatencyHistogram`] (which keeps every
+/// sample for exact quantiles) this is a constant-memory Prometheus
+/// histogram: ascending finite upper bounds plus an implicit `+Inf`
+/// bucket, a total count and an f64 sum.  Quantiles are therefore only
+/// known to bucket resolution — [`Histogram::quantile_bounds`] returns
+/// the enclosing bucket interval, which the tests check against the
+/// exact `LatencyHistogram` answer.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    core: Arc<HistCore>,
+}
+
+#[derive(Debug)]
+struct HistCore {
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+/// Default latency buckets (seconds): log-spaced 1µs .. 10s.
+pub fn default_secs_buckets() -> Vec<f64> {
+    vec![
+        1e-6, 2.5e-6, 5e-6, 1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2,
+        2.5e-2, 5e-2, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+    ]
+}
+
+impl Histogram {
+    fn with_bounds(bounds: &[f64]) -> Histogram {
+        let mut bounds: Vec<f64> = bounds.iter().copied().filter(|b| b.is_finite()).collect();
+        bounds.sort_by(|a, b| a.total_cmp(b));
+        bounds.dedup();
+        let buckets = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            core: Arc::new(HistCore {
+                bounds,
+                buckets,
+                count: AtomicU64::new(0),
+                sum_bits: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let core = &self.core;
+        let idx = core
+            .bounds
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(core.bounds.len());
+        core.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        core.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = core.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match core
+                .sum_bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.core.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.core.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Cumulative `(le, count)` pairs; the last entry is `+Inf`.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.core.bounds.len() + 1);
+        let mut acc = 0u64;
+        for (i, b) in self.core.bounds.iter().enumerate() {
+            acc += self.core.buckets[i].load(Ordering::Relaxed);
+            out.push((*b, acc));
+        }
+        acc += self.core.buckets[self.core.bounds.len()].load(Ordering::Relaxed);
+        out.push((f64::INFINITY, acc));
+        out
+    }
+
+    /// The `[lower, upper]` bucket interval containing the nearest-rank
+    /// `q`-quantile (matching `LatencyHistogram::quantile` rank rules).
+    pub fn quantile_bounds(&self, q: f64) -> (f64, f64) {
+        let n = self.count();
+        if n == 0 {
+            return (0.0, 0.0);
+        }
+        let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 1.0) };
+        let rank = ((q * n as f64).ceil() as u64).max(1);
+        let mut lower = 0.0;
+        for (le, cum) in self.cumulative() {
+            if cum >= rank {
+                return (lower, le);
+            }
+            lower = le;
+        }
+        (lower, f64::INFINITY)
+    }
+
+    /// Zero all buckets, the count and the sum.
+    pub fn reset(&self) {
+        for b in &self.core.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.core.count.store(0, Ordering::Relaxed);
+        self.core.sum_bits.store(0, Ordering::Relaxed);
+    }
+
+    /// Reset then observe every sample: mirrors an exact sample set
+    /// (e.g. a `LatencyHistogram`) into the bucketed exposition view.
+    pub fn reload(&self, samples: impl IntoIterator<Item = f64>) {
+        self.reset();
+        for s in samples {
+            self.observe(s);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum Series {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+#[derive(Debug)]
+struct Entry {
+    help: String,
+    series: Series,
+}
+
+/// Snapshot of one series, ready for exposition (see [`crate::obs::prom`]).
+#[derive(Clone, Debug)]
+pub struct SeriesSnapshot {
+    pub name: String,
+    /// Rendered label pairs without braces (`device="0"`), or empty.
+    pub labels: String,
+    pub help: String,
+    pub value: SnapValue,
+}
+
+#[derive(Clone, Debug)]
+pub enum SnapValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram {
+        cumulative: Vec<(f64, u64)>,
+        sum: f64,
+        count: u64,
+    },
+}
+
+/// Render label pairs as `k1="v1",k2="v2"` with Prometheus escaping.
+fn fmt_labels(labels: &[(&str, &str)]) -> String {
+    let mut out = String::new();
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        for c in v.chars() {
+            match c {
+                '\\' => out.push_str("\\\\"),
+                '"' => out.push_str("\\\""),
+                '\n' => out.push_str("\\n"),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+    out
+}
+
+#[derive(Debug, Default)]
+pub struct Registry {
+    series: Mutex<BTreeMap<(String, String), Entry>>,
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The process-wide registry used by the CLI serve path.
+    pub fn global() -> &'static Registry {
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        self.counter_with(name, &[], help)
+    }
+
+    pub fn counter_with(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Counter {
+        let entry = self.entry(name, labels, help, || Series::Counter(Counter::default()));
+        match entry {
+            Series::Counter(c) => c,
+            _ => panic!("metric '{name}' already registered with a non-counter type"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        self.gauge_with(name, &[], help)
+    }
+
+    pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Gauge {
+        let entry = self.entry(name, labels, help, || Series::Gauge(Gauge::default()));
+        match entry {
+            Series::Gauge(g) => g,
+            _ => panic!("metric '{name}' already registered with a non-gauge type"),
+        }
+    }
+
+    /// Histogram with [`default_secs_buckets`] bounds.
+    pub fn histogram(&self, name: &str, help: &str) -> Histogram {
+        self.histogram_with(name, &[], help, &default_secs_buckets())
+    }
+
+    /// Bounds apply on first registration only; later calls return the
+    /// existing series unchanged.
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &str,
+        bounds: &[f64],
+    ) -> Histogram {
+        let entry = self.entry(name, labels, help, || {
+            Series::Histogram(Histogram::with_bounds(bounds))
+        });
+        match entry {
+            Series::Histogram(h) => h,
+            _ => panic!("metric '{name}' already registered with a non-histogram type"),
+        }
+    }
+
+    fn entry(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &str,
+        make: impl FnOnce() -> Series,
+    ) -> Series {
+        let key = (name.to_string(), fmt_labels(labels));
+        let mut map = lock(&self.series);
+        map.entry(key)
+            .or_insert_with(|| Entry { help: help.to_string(), series: make() })
+            .series
+            .clone()
+    }
+
+    pub fn series_count(&self) -> usize {
+        lock(&self.series).len()
+    }
+
+    /// Sorted snapshot (by name, then labels) — all series of one
+    /// metric family are contiguous, as the text exposition requires.
+    pub fn snapshot(&self) -> Vec<SeriesSnapshot> {
+        lock(&self.series)
+            .iter()
+            .map(|((name, labels), e)| SeriesSnapshot {
+                name: name.clone(),
+                labels: labels.clone(),
+                help: e.help.clone(),
+                value: match &e.series {
+                    Series::Counter(c) => SnapValue::Counter(c.get()),
+                    Series::Gauge(g) => SnapValue::Gauge(g.get()),
+                    Series::Histogram(h) => SnapValue::Histogram {
+                        cumulative: h.cumulative(),
+                        sum: h.sum(),
+                        count: h.count(),
+                    },
+                },
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registration_is_idempotent() {
+        let reg = Registry::new();
+        let a = reg.counter("x_total", "help");
+        let b = reg.counter("x_total", "help");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        assert_eq!(reg.series_count(), 1);
+    }
+
+    #[test]
+    fn labels_split_series() {
+        let reg = Registry::new();
+        let a = reg.counter_with("y_total", &[("device", "0")], "h");
+        let b = reg.counter_with("y_total", &[("device", "1")], "h");
+        a.inc();
+        assert_eq!(a.get(), 1);
+        assert_eq!(b.get(), 0);
+        assert_eq!(reg.series_count(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-counter")]
+    fn type_mismatch_panics() {
+        let reg = Registry::new();
+        let _ = reg.gauge("z", "h");
+        let _ = reg.counter("z", "h");
+    }
+
+    #[test]
+    fn gauge_add_is_exact_under_contention() {
+        let reg = Registry::new();
+        let g = reg.gauge("g", "h");
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let g = g.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        g.add(0.5);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // 0.5 is a power of two: the CAS-summed total is exact
+        assert_eq!(g.get(), 2000.0);
+    }
+
+    #[test]
+    fn histogram_cumulative_is_monotone() {
+        let h = Histogram::with_bounds(&[1.0, 2.0, 4.0]);
+        for v in [0.5, 1.5, 3.0, 8.0, 1.0] {
+            h.observe(v);
+        }
+        let cum = h.cumulative();
+        assert_eq!(cum.len(), 4);
+        assert!(cum.windows(2).all(|w| w[0].1 <= w[1].1));
+        assert_eq!(cum.last().unwrap().1, 5);
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 14.0).abs() < 1e-12);
+        // le=1.0 is inclusive: 0.5 and 1.0 land there
+        assert_eq!(cum[0], (1.0, 2));
+    }
+
+    #[test]
+    fn quantile_bounds_bracket() {
+        let h = Histogram::with_bounds(&[1.0, 2.0, 4.0]);
+        for v in [0.5, 1.5, 1.6, 3.0] {
+            h.observe(v);
+        }
+        let (lo, hi) = h.quantile_bounds(0.5);
+        assert_eq!((lo, hi), (1.0, 2.0));
+        let (lo, hi) = h.quantile_bounds(1.0);
+        assert_eq!((lo, hi), (2.0, 4.0));
+        assert_eq!(h.quantile_bounds(0.0), (0.0, 1.0));
+    }
+
+    #[test]
+    fn reload_replaces_contents() {
+        let h = Histogram::with_bounds(&[1.0, 2.0]);
+        h.observe(0.5);
+        h.reload([1.5, 1.5, 5.0]);
+        assert_eq!(h.count(), 3);
+        let cum = h.cumulative();
+        assert_eq!(cum[0].1, 0);
+        assert_eq!(cum[1].1, 2);
+        assert_eq!(cum[2].1, 3);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_complete() {
+        let reg = Registry::new();
+        reg.counter("b_total", "bb").inc();
+        reg.gauge("a_gauge", "aa").set(1.5);
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].name, "a_gauge");
+        assert_eq!(snap[1].name, "b_total");
+        assert!(matches!(snap[0].value, SnapValue::Gauge(v) if v == 1.5));
+        assert!(matches!(snap[1].value, SnapValue::Counter(1)));
+    }
+}

@@ -1,0 +1,452 @@
+//! Per-request span tracer: a lock-cheap ring-buffer event recorder
+//! exported as Chrome trace-event JSON (loadable in `chrome://tracing`
+//! and Perfetto).
+//!
+//! Off by default.  When disabled every emission helper is a single
+//! relaxed atomic load and an early return — no clock reads, no
+//! allocation, no lock — which is what lets the serving hot path keep
+//! emission calls unconditionally inline.  `--trace-out FILE` (serve and
+//! server CLIs) enables recording and writes the JSON on exit.
+//!
+//! Model:
+//!
+//! * **pid** — one Chrome "process" per device timeline: pid 0 is the
+//!   host (batcher, scheduler, server threads), pid `1 + d` is device
+//!   `d` (see [`crate::obs::trace::host_pid`] / [`device_pid`]);
+//! * **tid** — one Chrome "thread" per OS worker thread (small dense
+//!   ids handed out per thread on first emission);
+//! * **spans** — `ph:"X"` complete events with µs timestamps/durations;
+//!   exact f64 second values ride in `args` so trace consumers (and the
+//!   self-consistency test in `tests/obs.rs`) are not limited to µs
+//!   resolution;
+//! * **flows** — request ids become flow events (`ph:"s"/"t"/"f"`, name
+//!   `req`) so one request can be followed from batch formation through
+//!   per-layer device lanes to completion;
+//! * **ring buffer** — bounded at [`enable`]'s capacity; when full the
+//!   OLDEST event is dropped and `dropped()` counts it (exported as
+//!   `sida_trace_events_dropped_total`).
+//!
+//! Recording never touches the f32 compute path: with tracing on,
+//! outputs are bit-identical to a traced-off run (asserted by
+//! `tests/obs.rs` and the `fig_obs` bench gate).
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Default ring capacity (events) used by `--trace-out`.
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+static T0: OnceLock<Instant> = OnceLock::new();
+static BUF: OnceLock<Mutex<TraceBuf>> = OnceLock::new();
+
+struct TraceBuf {
+    events: VecDeque<Event>,
+    cap: usize,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn buf() -> &'static Mutex<TraceBuf> {
+    BUF.get_or_init(|| Mutex::new(TraceBuf { events: VecDeque::new(), cap: DEFAULT_CAPACITY }))
+}
+
+/// Small dense per-thread id (first emission on a thread assigns one).
+fn tid() -> u64 {
+    thread_local! {
+        static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+/// Chrome pid for host-side timelines (queue, batching, scatter).
+pub fn host_pid() -> u32 {
+    0
+}
+
+/// Chrome pid for device `d`'s timeline.
+pub fn device_pid(device: usize) -> u32 {
+    1 + device as u32
+}
+
+/// One recorded trace event (see the Chrome trace-event format).
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub ph: char,
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub pid: u32,
+    pub tid: u64,
+    /// Flow id (`ph` s/t/f); 0 means "no id".
+    pub id: u64,
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+#[derive(Clone, Debug)]
+pub enum ArgValue {
+    U(u64),
+    F(f64),
+    S(String),
+}
+
+impl ArgValue {
+    fn to_json(&self) -> Json {
+        match self {
+            ArgValue::U(n) => Json::Num(*n as f64),
+            ArgValue::F(x) => Json::Num(*x),
+            ArgValue::S(s) => Json::Str(s.clone()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// lifecycle
+// ---------------------------------------------------------------------------
+
+/// Start recording into a fresh ring of `cap` events.
+pub fn enable(cap: usize) {
+    let _ = T0.get_or_init(Instant::now);
+    let mut b = lock(buf());
+    b.cap = cap.max(1);
+    b.events.clear();
+    DROPPED.store(0, Ordering::Relaxed);
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Stop recording (the buffer is kept for export).
+pub fn disable() {
+    ENABLED.store(false, Ordering::Release);
+}
+
+/// One relaxed load — THE guard every emission helper bails on.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Microseconds since the tracer first started (0 when never enabled).
+pub fn now_us() -> u64 {
+    match T0.get() {
+        Some(t0) => t0.elapsed().as_micros() as u64,
+        None => 0,
+    }
+}
+
+/// Span-start helper: a timestamp when enabled, 0 (and no clock read)
+/// when disabled.
+#[inline]
+pub fn begin() -> u64 {
+    if enabled() {
+        now_us()
+    } else {
+        0
+    }
+}
+
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+pub fn len() -> usize {
+    lock(buf()).events.len()
+}
+
+pub fn is_empty() -> bool {
+    len() == 0
+}
+
+/// Clone the recorded events (oldest first).
+pub fn snapshot_events() -> Vec<Event> {
+    lock(buf()).events.iter().cloned().collect()
+}
+
+// ---------------------------------------------------------------------------
+// emission
+// ---------------------------------------------------------------------------
+
+pub fn record(ev: Event) {
+    if !enabled() {
+        return;
+    }
+    let mut b = lock(buf());
+    if b.events.len() >= b.cap {
+        b.events.pop_front();
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+    }
+    b.events.push_back(ev);
+}
+
+/// Complete span (`ph:"X"`) from `start_us` (a [`begin`] value) to now.
+pub fn complete(
+    name: &'static str,
+    cat: &'static str,
+    pid: u32,
+    start_us: u64,
+    args: Vec<(&'static str, ArgValue)>,
+) {
+    if !enabled() {
+        return;
+    }
+    record(Event {
+        name,
+        cat,
+        ph: 'X',
+        ts_us: start_us,
+        dur_us: now_us().saturating_sub(start_us),
+        pid,
+        tid: tid(),
+        id: 0,
+        args,
+    });
+}
+
+/// Complete span with explicit µs duration (for replayed timings).
+pub fn complete_at(
+    name: &'static str,
+    cat: &'static str,
+    pid: u32,
+    start_us: u64,
+    dur_us: u64,
+    args: Vec<(&'static str, ArgValue)>,
+) {
+    if !enabled() {
+        return;
+    }
+    record(Event { name, cat, ph: 'X', ts_us: start_us, dur_us, pid, tid: tid(), id: 0, args });
+}
+
+/// Instant event (`ph:"i"`).
+pub fn instant(
+    name: &'static str,
+    cat: &'static str,
+    pid: u32,
+    args: Vec<(&'static str, ArgValue)>,
+) {
+    if !enabled() {
+        return;
+    }
+    record(Event {
+        name,
+        cat,
+        ph: 'i',
+        ts_us: now_us(),
+        dur_us: 0,
+        pid,
+        tid: tid(),
+        id: 0,
+        args,
+    });
+}
+
+/// Flow event for a request id: `ph` is `'s'` (start, at batch
+/// formation), `'t'` (step, inside a device lane span) or `'f'` (end,
+/// at request completion).  Flow events bind to the enclosing slice on
+/// the same pid/tid at this timestamp.
+pub fn flow(ph: char, request_id: u64, pid: u32) {
+    if !enabled() {
+        return;
+    }
+    record(Event {
+        name: "req",
+        cat: "flow",
+        ph,
+        ts_us: now_us(),
+        dur_us: 0,
+        pid,
+        tid: tid(),
+        // flow ids must be non-zero; offset keeps request id 0 traceable
+        id: request_id + 1,
+        args: vec![("request", ArgValue::U(request_id))],
+    });
+}
+
+// ---------------------------------------------------------------------------
+// export
+// ---------------------------------------------------------------------------
+
+fn event_json(ev: &Event) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(ev.name.to_string()));
+    o.insert("cat".to_string(), Json::Str(ev.cat.to_string()));
+    o.insert("ph".to_string(), Json::Str(ev.ph.to_string()));
+    o.insert("ts".to_string(), Json::Num(ev.ts_us as f64));
+    o.insert("pid".to_string(), Json::Num(ev.pid as f64));
+    o.insert("tid".to_string(), Json::Num(ev.tid as f64));
+    if ev.ph == 'X' {
+        o.insert("dur".to_string(), Json::Num(ev.dur_us as f64));
+    }
+    if ev.id != 0 {
+        o.insert("id".to_string(), Json::Num(ev.id as f64));
+    }
+    if ev.ph == 'f' {
+        // bind the flow end to the enclosing slice, not the next one
+        o.insert("bp".to_string(), Json::Str("e".to_string()));
+    }
+    if ev.ph == 'i' {
+        o.insert("s".to_string(), Json::Str("t".to_string()));
+    }
+    if !ev.args.is_empty() {
+        let args: BTreeMap<String, Json> =
+            ev.args.iter().map(|(k, v)| (k.to_string(), v.to_json())).collect();
+        o.insert("args".to_string(), Json::Obj(args));
+    }
+    Json::Obj(o)
+}
+
+fn metadata_json(pid: u32, tid: Option<u64>, name: String) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert(
+        "name".to_string(),
+        Json::Str(if tid.is_some() { "thread_name" } else { "process_name" }.to_string()),
+    );
+    o.insert("ph".to_string(), Json::Str("M".to_string()));
+    o.insert("ts".to_string(), Json::Num(0.0));
+    o.insert("pid".to_string(), Json::Num(pid as f64));
+    o.insert("tid".to_string(), Json::Num(tid.unwrap_or(0) as f64));
+    let mut args = BTreeMap::new();
+    args.insert("name".to_string(), Json::Str(name));
+    o.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(o)
+}
+
+/// The full Chrome trace-event document for the recorded buffer.
+pub fn export_json() -> Json {
+    let events = snapshot_events();
+    let mut pids: BTreeSet<u32> = BTreeSet::new();
+    let mut tids: BTreeSet<(u32, u64)> = BTreeSet::new();
+    for ev in &events {
+        pids.insert(ev.pid);
+        tids.insert((ev.pid, ev.tid));
+    }
+    let mut arr = Vec::with_capacity(events.len() + pids.len() + tids.len());
+    for pid in &pids {
+        let name = if *pid == 0 {
+            "host".to_string()
+        } else {
+            format!("device{}", pid - 1)
+        };
+        arr.push(metadata_json(*pid, None, name));
+    }
+    for (pid, tid) in &tids {
+        arr.push(metadata_json(*pid, Some(*tid), format!("worker{tid}")));
+    }
+    arr.extend(events.iter().map(event_json));
+    let mut o = BTreeMap::new();
+    o.insert("traceEvents".to_string(), Json::Arr(arr));
+    o.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    o.insert(
+        "otherData".to_string(),
+        Json::Obj(BTreeMap::from([(
+            "dropped_events".to_string(),
+            Json::Num(dropped() as f64),
+        )])),
+    );
+    Json::Obj(o)
+}
+
+/// Write the trace document to `path`.
+pub fn write_to(path: &str) -> Result<()> {
+    std::fs::write(path, export_json().to_string())
+        .with_context(|| format!("writing trace to {path}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // the tracer is process-global: serialize the tests that toggle it
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    fn test_lock() -> MutexGuard<'static, ()> {
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let _g = test_lock();
+        disable();
+        let before = len();
+        complete("unit_noop", "test", 0, begin(), vec![]);
+        instant("unit_noop_i", "test", 0, vec![]);
+        flow('s', 42, 0);
+        assert_eq!(len(), before);
+        assert!(!snapshot_events().iter().any(|e| e.name.starts_with("unit_noop")));
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let _g = test_lock();
+        enable(4);
+        for i in 0..10u64 {
+            record(Event {
+                name: "unit_ring",
+                cat: "test",
+                ph: 'i',
+                ts_us: i,
+                dur_us: 0,
+                pid: 0,
+                tid: 0,
+                id: 0,
+                args: vec![("seq", ArgValue::U(i))],
+            });
+        }
+        let events = snapshot_events();
+        assert_eq!(events.len(), 4);
+        assert_eq!(dropped(), 6);
+        // the survivors are the NEWEST four, in order
+        let seqs: Vec<u64> = events
+            .iter()
+            .map(|e| match e.args[0].1 {
+                ArgValue::U(n) => n,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        disable();
+    }
+
+    #[test]
+    fn export_is_valid_chrome_trace_json() {
+        let _g = test_lock();
+        enable(64);
+        let t = begin();
+        complete("unit_span", "test", 1, t, vec![("secs", ArgValue::F(0.25))]);
+        flow('s', 7, 1);
+        instant("unit_mark", "test", 2, vec![("k", ArgValue::S("v".to_string()))]);
+        let doc = export_json();
+        disable();
+        // roundtrip through the serializer and parser
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 process_name + >=1 thread_name + 3 recorded
+        assert!(events.len() >= 6, "got {} events", events.len());
+        let span = events
+            .iter()
+            .find(|e| e.get_str("name").is_ok_and(|n| n == "unit_span"))
+            .expect("span exported");
+        assert_eq!(span.get_str("ph").unwrap(), "X");
+        assert!(span.get("dur").is_ok());
+        assert_eq!(span.get("args").unwrap().get_f64("secs").unwrap(), 0.25);
+        let f = events
+            .iter()
+            .find(|e| e.get_str("ph").is_ok_and(|p| p == "s"))
+            .expect("flow start exported");
+        assert_eq!(f.get("id").unwrap().as_u64().unwrap(), 8);
+        assert!(events.iter().any(|e| {
+            e.get_str("name").is_ok_and(|n| n == "process_name")
+                && e.get("args").unwrap().get_str("name").is_ok_and(|n| n == "device0")
+        }));
+    }
+}

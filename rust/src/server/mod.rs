@@ -18,7 +18,9 @@
 //! -> {"ids": [1, 17, 42, 2]}      token ids (unpadded ok)
 //! -> {"ids": [...], "class": "interactive", "deadline_ms": 50}
 //! <- {"id": 3, "label": 2, "latency_ms": 1.9, "queue_ms": 0.4, "infer_ms": 1.5}
-//! -> {"cmd": "stats"}             server + batching counters
+//! -> {"cmd": "stats"}             server + batching counters (JSON)
+//! -> {"cmd": "metrics"}           Prometheus text exposition, terminated
+//!                                 by a literal "# EOF" line
 //! -> {"cmd": "shutdown"}
 //! ```
 //!
@@ -114,6 +116,12 @@ pub struct ServerConfig {
     /// seconds; 0 = none): a client idle past this gets an error reply
     /// and its handler thread is reaped instead of held forever
     pub conn_timeout_secs: f64,
+    /// write a Chrome trace-event JSON here on shutdown
+    /// (`--trace-out`; empty = tracing stays off)
+    pub trace_out: String,
+    /// periodic metrics snapshot to stderr every this many seconds
+    /// (`--metrics-interval`; 0 = off)
+    pub metrics_interval_secs: f64,
 }
 
 impl Default for ServerConfig {
@@ -133,6 +141,8 @@ impl Default for ServerConfig {
             fault_plan: String::new(),
             default_deadline_secs: 0.100,
             conn_timeout_secs: 0.0,
+            trace_out: String::new(),
+            metrics_interval_secs: 0.0,
         }
     }
 }
@@ -181,6 +191,15 @@ pub struct ServerState {
     default_deadline_secs: f64,
     /// socket read/write timeout per connection (0 = none)
     conn_timeout_secs: f64,
+    /// write a Chrome trace-event JSON here on shutdown (empty = off)
+    trace_out: String,
+    /// periodic stderr metrics snapshot interval (0 = off)
+    metrics_interval_secs: f64,
+    /// per-instance metrics registry: `cmd:stats` and `cmd:metrics`
+    /// both render from snapshots published here, so the two endpoints
+    /// can never drift (instance-local, not the process-global registry,
+    /// so parallel test servers don't cross-contaminate)
+    pub obs: crate::obs::Registry,
     next_id: AtomicU64,
     pub shutdown: AtomicBool,
     t0: Instant,
@@ -247,6 +266,9 @@ impl ServerState {
             inject_panic: AtomicBool::new(false),
             default_deadline_secs: cfg.default_deadline_secs,
             conn_timeout_secs: cfg.conn_timeout_secs,
+            trace_out: cfg.trace_out.clone(),
+            metrics_interval_secs: cfg.metrics_interval_secs,
+            obs: crate::obs::Registry::new(),
             next_id: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
             t0: Instant::now(),
@@ -358,11 +380,200 @@ impl ServerState {
     }
 }
 
+/// Build one consistent stats snapshot as the `cmd:stats` JSON field
+/// list.  Shared by the `stats`/`metrics` endpoints and the periodic
+/// `--metrics-interval` reporter, so every exposition path reads the
+/// same values from one snapshot.
+fn stats_fields(state: &ServerState) -> Vec<(&'static str, Json)> {
+    let served = state.served.load(Ordering::SeqCst);
+    let rejected = state.rejected.load(Ordering::SeqCst);
+    let rejected_slo = state.rejected_slo.load(Ordering::SeqCst);
+    let worker_panics = state.worker_panics.load(Ordering::SeqCst);
+    let queued = lock_tolerant(&state.queue).len();
+    let (batches, mean_size, delay_ms, infer_ms, conn_timeouts, slo) = {
+        let mut b = lock_tolerant(&state.batching);
+        let slo = (
+            b.shed,
+            b.slo_attainment(),
+            b.latency_interactive.p99() * 1e3,
+            b.latency_interactive.p999() * 1e3,
+            b.latency_batch.p99() * 1e3,
+            b.latency_batch.p999() * 1e3,
+        );
+        (
+            b.batches,
+            b.mean_batch_size().unwrap_or(0.0),
+            b.batching_delay.mean() * 1e3,
+            b.inference.mean() * 1e3,
+            b.conn_timeouts,
+            slo,
+        )
+    };
+    let (shed, attainment, int_p99, int_p999, bat_p99, bat_p999) = slo;
+    // ONE cluster snapshot per reply, so the top-level
+    // aggregates and the per-device array below can
+    // never disagree.  Top-level cache fields reflect
+    // wherever serving actually resolves residency:
+    // the aggregate over every device cache in cluster
+    // mode, the single shared cache otherwise.
+    let cluster = state.cluster.as_ref().map(|r| r.stats());
+    let (hits, misses, overlapped, used) = match &cluster {
+        Some(cl) => (
+            cl.devices.iter().map(|d| d.cache.hits).sum::<u64>(),
+            cl.devices.iter().map(|d| d.cache.misses).sum::<u64>(),
+            cl.devices
+                .iter()
+                .map(|d| d.cache.overlapped_transfer_secs)
+                .sum::<f64>(),
+            cl.devices.iter().map(|d| d.used_bytes).sum::<usize>(),
+        ),
+        None => {
+            let cs = state.cache.stats();
+            (cs.hits, cs.misses, cs.overlapped_transfer_secs, state.cache.used())
+        }
+    };
+    // the §6 ladder, from the same snapshot: aggregate
+    // over every device's cache-driven ledger in
+    // cluster mode, the single cache's ledger otherwise
+    let hier = match &cluster {
+        Some(cl) => cl.hierarchy_total(),
+        None => state.cache.hierarchy_stats(),
+    };
+    let mut fields = vec![
+        ("served", Json::Num(served as f64)),
+        ("rejected", Json::Num(rejected as f64)),
+        ("rejected_slo", Json::Num(rejected_slo as f64)),
+        ("shed", Json::Num(shed as f64)),
+        ("worker_panics", Json::Num(worker_panics as f64)),
+        ("slo_attainment", Json::Num(attainment.unwrap_or(1.0))),
+        ("latency_p99_ms_interactive", Json::Num(int_p99)),
+        ("latency_p999_ms_interactive", Json::Num(int_p999)),
+        ("latency_p99_ms_batch", Json::Num(bat_p99)),
+        ("latency_p999_ms_batch", Json::Num(bat_p999)),
+        ("queued", Json::Num(queued as f64)),
+        ("batches_formed", Json::Num(batches as f64)),
+        ("mean_batch_size", Json::Num(mean_size)),
+        ("batching_delay_ms_mean", Json::Num(delay_ms)),
+        ("infer_ms_mean", Json::Num(infer_ms)),
+        ("conn_timeouts", Json::Num(conn_timeouts as f64)),
+        ("cache_hits", Json::Num(hits as f64)),
+        ("cache_misses", Json::Num(misses as f64)),
+        ("transfer_overlapped_secs", Json::Num(overlapped)),
+        ("device_used_bytes", Json::Num(used as f64)),
+        ("ram_used_bytes", Json::Num(hier.ram_bytes as f64)),
+        ("ssd_used_bytes", Json::Num(hier.ssd_bytes as f64)),
+        ("demotions_to_ram", Json::Num(hier.demotions_to_ram as f64)),
+        ("demotions_to_ssd", Json::Num(hier.demotions_to_ssd as f64)),
+        ("ssd_promote_secs", Json::Num(hier.ssd_promote_secs)),
+        ("ladder_secs", Json::Num(hier.ladder_secs())),
+        ("measured_ssd_read_secs", Json::Num(hier.measured_ssd_read_secs)),
+        ("measured_ssd_write_secs", Json::Num(hier.measured_ssd_write_secs)),
+        ("store_bytes_on_disk", Json::Num(hier.store_bytes_on_disk as f64)),
+        ("integrity_failures", Json::Num(hier.integrity_failures as f64)),
+        ("store_hits", Json::Num(hier.store_hits as f64)),
+        ("refabrications", Json::Num(hier.refabrications as f64)),
+    ];
+    if let Some(cl) = &cluster {
+        let devices: Vec<Json> = cl
+            .devices
+            .iter()
+            .map(|d| {
+                obj(vec![
+                    ("device", Json::Num(d.device as f64)),
+                    ("used_bytes", Json::Num(d.used_bytes as f64)),
+                    ("peak_bytes", Json::Num(d.peak_bytes as f64)),
+                    (
+                        "assigned_experts",
+                        Json::Num(d.assigned_experts as f64),
+                    ),
+                    ("rows", Json::Num(d.rows as f64)),
+                    ("hits", Json::Num(d.cache.hits as f64)),
+                    ("misses", Json::Num(d.cache.misses as f64)),
+                    (
+                        "health",
+                        Json::Str(format!("{:?}", d.health).to_lowercase()),
+                    ),
+                ])
+            })
+            .collect();
+        fields.push(("devices", Json::Arr(devices)));
+        fields.push((
+            "load_imbalance",
+            Json::Num(cl.load_imbalance().unwrap_or(0.0)),
+        ));
+        fields.push((
+            "cross_device_bytes",
+            Json::Num(cl.cross_device_bytes as f64),
+        ));
+        fields.push((
+            "interconnect_secs",
+            Json::Num(cl.interconnect_secs),
+        ));
+        fields.push((
+            "replicated_entries",
+            Json::Num(cl.replicated_entries as f64),
+        ));
+        fields.push(("failovers", Json::Num(cl.failovers as f64)));
+        fields.push((
+            "failover_promotions",
+            Json::Num(cl.failover_promotions as f64),
+        ));
+        fields.push(("retries", Json::Num(cl.retries as f64)));
+        fields.push((
+            "dropped_fetches",
+            Json::Num(cl.dropped_fetches as f64),
+        ));
+        fields.push((
+            "device_failures",
+            Json::Num(cl.device_failures as f64),
+        ));
+        fields.push(("recoveries", Json::Num(cl.recoveries as f64)));
+        fields.push(("downtime_secs", Json::Num(cl.downtime_secs)));
+    }
+    fields
+}
+
 /// Lock a mutex, recovering the data from a poisoned lock: the batch
 /// worker wraps its fallible work in `catch_unwind`, and a panic that
 /// slipped through must not cascade into every connection thread.
 fn lock_tolerant<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Mirror one `cmd:stats` snapshot into the server's registry: every
+/// numeric field becomes a `sida_server_<field>` gauge, and the
+/// per-device array becomes `sida_server_device_<field>` gauges carrying
+/// a `device` label.  Because `cmd:metrics` renders the registry right
+/// after this publish, a scrape and a `cmd:stats` issued on the same
+/// snapshot agree field-for-field (tests/server.rs asserts it).
+fn publish_stats_fields(reg: &crate::obs::Registry, fields: &[(&'static str, Json)]) {
+    for (name, v) in fields {
+        match v {
+            Json::Num(x) => {
+                reg.gauge(&format!("sida_server_{name}"), "server stats field (see cmd:stats)")
+                    .set(*x);
+            }
+            Json::Arr(devices) if *name == "devices" => {
+                for d in devices {
+                    let Ok(id) = d.get_usize("device") else { continue };
+                    let label = id.to_string();
+                    for key in
+                        ["used_bytes", "peak_bytes", "assigned_experts", "rows", "hits", "misses"]
+                    {
+                        if let Some(x) = d.opt(key).and_then(|j| j.as_f64().ok()) {
+                            reg.gauge_with(
+                                &format!("sida_server_device_{key}"),
+                                &[("device", label.as_str())],
+                                "per-device server stats field (see cmd:stats)",
+                            )
+                            .set(x);
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
 }
 
 /// Wait for the next formed batch: cut on size, cut on deadline, or
@@ -439,14 +650,37 @@ fn run_batch(
     }
     let mut provider = state.provider();
     let opts = ForwardOptions { want_cls: true, ..Default::default() };
+    let trace_ids: Vec<u64> = batch.requests.iter().map(|(req, _)| req.id).collect();
+    let t_batch = crate::obs::trace::begin();
+    if crate::obs::trace::enabled() {
+        for &rid in &trace_ids {
+            crate::obs::trace::flow('s', rid, crate::obs::trace::host_pid());
+        }
+    }
     let out = run_gated_forward(
         &state.runner.bundle,
         &state.warm_target(),
         &pairs,
         &state.runner.bundle.topology.moe_blocks,
         state.k_used,
+        &trace_ids,
         |hooks| state.runner.forward_batch_hooked(&items, &mut provider, opts, hooks),
     )?;
+    if crate::obs::trace::enabled() {
+        use crate::obs::trace::ArgValue;
+        // flow ends bind to the enclosing slice (`bp:"e"`): emit before
+        // the batch span closes
+        for &rid in &trace_ids {
+            crate::obs::trace::flow('f', rid, crate::obs::trace::host_pid());
+        }
+        crate::obs::trace::complete(
+            "batch",
+            "serve",
+            crate::obs::trace::host_pid(),
+            t_batch,
+            vec![("requests", ArgValue::U(trace_ids.len() as u64))],
+        );
+    }
     Ok(out
         .outputs
         .iter()
@@ -614,153 +848,21 @@ fn handle_conn(state: Arc<ServerState>, stream: TcpStream) -> Result<()> {
         };
         if let Some(cmd) = req.opt("cmd") {
             match cmd.as_str().unwrap_or("") {
-                "stats" => {
-                    let served = state.served.load(Ordering::SeqCst);
-                    let rejected = state.rejected.load(Ordering::SeqCst);
-                    let rejected_slo = state.rejected_slo.load(Ordering::SeqCst);
-                    let worker_panics = state.worker_panics.load(Ordering::SeqCst);
-                    let queued = lock_tolerant(&state.queue).len();
-                    let (batches, mean_size, delay_ms, infer_ms, conn_timeouts, slo) = {
-                        let mut b = lock_tolerant(&state.batching);
-                        let slo = (
-                            b.shed,
-                            b.slo_attainment(),
-                            b.latency_interactive.p99() * 1e3,
-                            b.latency_interactive.p999() * 1e3,
-                            b.latency_batch.p99() * 1e3,
-                            b.latency_batch.p999() * 1e3,
-                        );
-                        (
-                            b.batches,
-                            b.mean_batch_size().unwrap_or(0.0),
-                            b.batching_delay.mean() * 1e3,
-                            b.inference.mean() * 1e3,
-                            b.conn_timeouts,
-                            slo,
-                        )
-                    };
-                    let (shed, attainment, int_p99, int_p999, bat_p99, bat_p999) = slo;
-                    // ONE cluster snapshot per reply, so the top-level
-                    // aggregates and the per-device array below can
-                    // never disagree.  Top-level cache fields reflect
-                    // wherever serving actually resolves residency:
-                    // the aggregate over every device cache in cluster
-                    // mode, the single shared cache otherwise.
-                    let cluster = state.cluster.as_ref().map(|r| r.stats());
-                    let (hits, misses, overlapped, used) = match &cluster {
-                        Some(cl) => (
-                            cl.devices.iter().map(|d| d.cache.hits).sum::<u64>(),
-                            cl.devices.iter().map(|d| d.cache.misses).sum::<u64>(),
-                            cl.devices
-                                .iter()
-                                .map(|d| d.cache.overlapped_transfer_secs)
-                                .sum::<f64>(),
-                            cl.devices.iter().map(|d| d.used_bytes).sum::<usize>(),
-                        ),
-                        None => {
-                            let cs = state.cache.stats();
-                            (cs.hits, cs.misses, cs.overlapped_transfer_secs, state.cache.used())
-                        }
-                    };
-                    // the §6 ladder, from the same snapshot: aggregate
-                    // over every device's cache-driven ledger in
-                    // cluster mode, the single cache's ledger otherwise
-                    let hier = match &cluster {
-                        Some(cl) => cl.hierarchy_total(),
-                        None => state.cache.hierarchy_stats(),
-                    };
-                    let mut fields = vec![
-                        ("served", Json::Num(served as f64)),
-                        ("rejected", Json::Num(rejected as f64)),
-                        ("rejected_slo", Json::Num(rejected_slo as f64)),
-                        ("shed", Json::Num(shed as f64)),
-                        ("worker_panics", Json::Num(worker_panics as f64)),
-                        ("slo_attainment", Json::Num(attainment.unwrap_or(1.0))),
-                        ("latency_p99_ms_interactive", Json::Num(int_p99)),
-                        ("latency_p999_ms_interactive", Json::Num(int_p999)),
-                        ("latency_p99_ms_batch", Json::Num(bat_p99)),
-                        ("latency_p999_ms_batch", Json::Num(bat_p999)),
-                        ("queued", Json::Num(queued as f64)),
-                        ("batches_formed", Json::Num(batches as f64)),
-                        ("mean_batch_size", Json::Num(mean_size)),
-                        ("batching_delay_ms_mean", Json::Num(delay_ms)),
-                        ("infer_ms_mean", Json::Num(infer_ms)),
-                        ("conn_timeouts", Json::Num(conn_timeouts as f64)),
-                        ("cache_hits", Json::Num(hits as f64)),
-                        ("cache_misses", Json::Num(misses as f64)),
-                        ("transfer_overlapped_secs", Json::Num(overlapped)),
-                        ("device_used_bytes", Json::Num(used as f64)),
-                        ("ram_used_bytes", Json::Num(hier.ram_bytes as f64)),
-                        ("ssd_used_bytes", Json::Num(hier.ssd_bytes as f64)),
-                        ("demotions_to_ram", Json::Num(hier.demotions_to_ram as f64)),
-                        ("demotions_to_ssd", Json::Num(hier.demotions_to_ssd as f64)),
-                        ("ssd_promote_secs", Json::Num(hier.ssd_promote_secs)),
-                        ("ladder_secs", Json::Num(hier.ladder_secs())),
-                        ("measured_ssd_read_secs", Json::Num(hier.measured_ssd_read_secs)),
-                        ("measured_ssd_write_secs", Json::Num(hier.measured_ssd_write_secs)),
-                        ("store_bytes_on_disk", Json::Num(hier.store_bytes_on_disk as f64)),
-                        ("integrity_failures", Json::Num(hier.integrity_failures as f64)),
-                        ("store_hits", Json::Num(hier.store_hits as f64)),
-                        ("refabrications", Json::Num(hier.refabrications as f64)),
-                    ];
-                    if let Some(cl) = &cluster {
-                        let devices: Vec<Json> = cl
-                            .devices
-                            .iter()
-                            .map(|d| {
-                                obj(vec![
-                                    ("device", Json::Num(d.device as f64)),
-                                    ("used_bytes", Json::Num(d.used_bytes as f64)),
-                                    ("peak_bytes", Json::Num(d.peak_bytes as f64)),
-                                    (
-                                        "assigned_experts",
-                                        Json::Num(d.assigned_experts as f64),
-                                    ),
-                                    ("rows", Json::Num(d.rows as f64)),
-                                    ("hits", Json::Num(d.cache.hits as f64)),
-                                    ("misses", Json::Num(d.cache.misses as f64)),
-                                    (
-                                        "health",
-                                        Json::Str(format!("{:?}", d.health).to_lowercase()),
-                                    ),
-                                ])
-                            })
-                            .collect();
-                        fields.push(("devices", Json::Arr(devices)));
-                        fields.push((
-                            "load_imbalance",
-                            Json::Num(cl.load_imbalance().unwrap_or(0.0)),
-                        ));
-                        fields.push((
-                            "cross_device_bytes",
-                            Json::Num(cl.cross_device_bytes as f64),
-                        ));
-                        fields.push((
-                            "interconnect_secs",
-                            Json::Num(cl.interconnect_secs),
-                        ));
-                        fields.push((
-                            "replicated_entries",
-                            Json::Num(cl.replicated_entries as f64),
-                        ));
-                        fields.push(("failovers", Json::Num(cl.failovers as f64)));
-                        fields.push((
-                            "failover_promotions",
-                            Json::Num(cl.failover_promotions as f64),
-                        ));
-                        fields.push(("retries", Json::Num(cl.retries as f64)));
-                        fields.push((
-                            "dropped_fetches",
-                            Json::Num(cl.dropped_fetches as f64),
-                        ));
-                        fields.push((
-                            "device_failures",
-                            Json::Num(cl.device_failures as f64),
-                        ));
-                        fields.push(("recoveries", Json::Num(cl.recoveries as f64)));
-                        fields.push(("downtime_secs", Json::Num(cl.downtime_secs)));
+                // one snapshot feeds BOTH exposition endpoints: the
+                // JSON `stats` reply and the Prometheus-text `metrics`
+                // reply are rendered from the identical field list (and
+                // the registry is updated from it either way), so the
+                // two can never drift
+                which @ ("stats" | "metrics") => {
+                    let fields = stats_fields(&state);
+                    publish_stats_fields(&state.obs, &fields);
+                    if which == "metrics" {
+                        crate::obs::publish::publish_trace_health(&state.obs);
+                        write!(writer, "{}", crate::obs::publish::render_text(&state.obs))?;
+                        writeln!(writer, "# EOF")?;
+                    } else {
+                        writeln!(writer, "{}", obj(fields))?;
                     }
-                    writeln!(writer, "{}", obj(fields))?;
                 }
                 "shutdown" => {
                     state.shutdown.store(true, Ordering::SeqCst);
@@ -861,6 +963,28 @@ pub fn run_server(state: Arc<ServerState>, addr: &str) -> Result<()> {
 /// connection threads and the worker (which drains the queue first).
 pub fn run_server_on(state: Arc<ServerState>, listener: TcpListener) -> Result<()> {
     listener.set_nonblocking(true)?;
+    // --metrics-interval: publish a fresh snapshot into the registry and
+    // print one line to stderr every interval; polls shutdown at 50ms so
+    // teardown is prompt
+    let reporter = (state.metrics_interval_secs > 0.0).then(|| {
+        let st = state.clone();
+        std::thread::Builder::new()
+            .name("sida-metrics".into())
+            .spawn(move || {
+                let tick = Duration::from_millis(50);
+                let mut elapsed = 0.0;
+                while !st.shutdown.load(Ordering::SeqCst) {
+                    std::thread::sleep(tick);
+                    elapsed += tick.as_secs_f64();
+                    if elapsed + 1e-9 >= st.metrics_interval_secs {
+                        elapsed = 0.0;
+                        publish_stats_fields(&st.obs, &stats_fields(&st));
+                        eprintln!("{}", crate::obs::publish::snapshot_line(&st.obs));
+                    }
+                }
+            })
+            .expect("spawn metrics reporter")
+    });
     let worker = {
         let st = state.clone();
         std::thread::Builder::new()
@@ -897,5 +1021,17 @@ pub fn run_server_on(state: Arc<ServerState>, listener: TcpListener) -> Result<(
     }
     state.queue_cv.notify_all();
     let _ = worker.join();
+    if let Some(h) = reporter {
+        let _ = h.join();
+    }
+    if !state.trace_out.is_empty() {
+        crate::obs::trace::write_to(&state.trace_out)?;
+        log::info!(
+            "trace: {} events ({} dropped) -> {}",
+            crate::obs::trace::len(),
+            crate::obs::trace::dropped(),
+            state.trace_out
+        );
+    }
     Ok(())
 }

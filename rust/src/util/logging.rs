@@ -1,20 +1,123 @@
-//! Minimal `log` backend: stderr with level filtering from
-//! `SIDA_LOG` (error|warn|info|debug|trace; default warn).
+//! Minimal `log` backend: stderr with monotonic timestamps and
+//! per-module-target level filtering from `SIDA_LOG`.
+//!
+//! Spec grammar (comma-separated, order-independent):
+//!
+//! ```text
+//! SIDA_LOG=<level>                    # default level for everything
+//! SIDA_LOG=debug,cluster=trace        # default debug, cluster::* at trace
+//! SIDA_LOG=warn,server=info,obs=off   # per-target overrides
+//! ```
+//!
+//! A bare token is the default level; `target=level` raises or lowers
+//! one module subtree, matched against any `::`-separated segment of
+//! the record's target (the full module path, e.g.
+//! `sida_moe::cluster::router` matches `cluster` and `router`).
+//! Unrecognized tokens warn ONCE on stderr at init instead of being
+//! silently swallowed.  Lines carry monotonic seconds since init:
+//!
+//! ```text
+//! [   0.123s WARN  sida_moe::cluster::router] device 1 down
+//! ```
+
+use std::time::Instant;
 
 use log::{Level, LevelFilter, Metadata, Record};
 
+/// One parsed `SIDA_LOG` directive set.
+struct Spec {
+    default: LevelFilter,
+    /// (target segment, level) overrides, first match wins
+    targets: Vec<(String, LevelFilter)>,
+}
+
+fn parse_level(s: &str) -> Option<LevelFilter> {
+    match s {
+        "off" => Some(LevelFilter::Off),
+        "error" => Some(LevelFilter::Error),
+        "warn" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
+/// Parse a spec; the second return is the unrecognized tokens (warned
+/// once at init).
+fn parse_spec(raw: &str) -> (Spec, Vec<String>) {
+    let mut spec = Spec { default: LevelFilter::Warn, targets: Vec::new() };
+    let mut bad = Vec::new();
+    for token in raw.split(',') {
+        let token = token.trim();
+        if token.is_empty() {
+            continue;
+        }
+        if let Some((target, level)) = token.split_once('=') {
+            let (target, level) = (target.trim(), level.trim());
+            match parse_level(level) {
+                Some(l) if !target.is_empty() => spec.targets.push((target.to_string(), l)),
+                _ => bad.push(token.to_string()),
+            }
+        } else {
+            match parse_level(token) {
+                Some(l) => spec.default = l,
+                None => bad.push(token.to_string()),
+            }
+        }
+    }
+    (spec, bad)
+}
+
+impl Spec {
+    /// The level filter in effect for a record target: the first
+    /// override whose name matches a `::` segment of the target, else
+    /// the default.
+    fn filter_for(&self, target: &str) -> LevelFilter {
+        for (name, level) in &self.targets {
+            if target.split("::").any(|seg| seg == name) {
+                return *level;
+            }
+        }
+        self.default
+    }
+
+    /// The most verbose level any directive allows (drives
+    /// `log::set_max_level` so disabled levels cost one comparison).
+    fn max_filter(&self) -> LevelFilter {
+        self.targets
+            .iter()
+            .map(|(_, l)| *l)
+            .fold(self.default, |a, b| if b > a { b } else { a })
+    }
+}
+
 struct StderrLogger {
-    max: Level,
+    spec: Spec,
+    t0: Instant,
+}
+
+/// `Level` and `LevelFilter` share discriminant numbering (Off=0,
+/// Error=1 .. Trace=5); the vendored `log` has no cross-type ordering,
+/// so compare the discriminants directly.
+fn allows(filter: LevelFilter, level: Level) -> bool {
+    level as usize <= filter as usize
 }
 
 impl log::Log for StderrLogger {
     fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= self.max
+        allows(self.spec.filter_for(metadata.target()), metadata.level())
     }
 
     fn log(&self, record: &Record) {
         if self.enabled(record.metadata()) {
-            eprintln!("[{:5}] {}: {}", record.level(), record.target(), record.args());
+            eprintln!(
+                "[{:>8.3}s {:5} {}] {}",
+                self.t0.elapsed().as_secs_f64(),
+                record.level(),
+                record.target(),
+                record.args()
+            );
         }
     }
 
@@ -25,25 +128,81 @@ impl log::Log for StderrLogger {
 /// The vendored `log` crate is built without its `std` feature, so the
 /// logger is a leaked static rather than `set_boxed_logger`.
 pub fn init() {
-    let level = match std::env::var("SIDA_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("info") => Level::Info,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Warn,
-    };
-    let logger: &'static StderrLogger = Box::leak(Box::new(StderrLogger { max: level }));
+    let raw = std::env::var("SIDA_LOG").unwrap_or_default();
+    let (spec, bad) = parse_spec(&raw);
+    if !bad.is_empty() {
+        eprintln!(
+            "warning: unrecognized SIDA_LOG directive(s): {} \
+             (grammar: level | target=level, levels off|error|warn|info|debug|trace)",
+            bad.join(", ")
+        );
+    }
+    let max = spec.max_filter();
+    let logger: &'static StderrLogger =
+        Box::leak(Box::new(StderrLogger { spec, t0: Instant::now() }));
     if log::set_logger(logger).is_ok() {
-        log::set_max_level(LevelFilter::Trace);
+        log::set_max_level(max);
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::warn!("logging smoke test");
+    }
+
+    #[test]
+    fn default_spec_is_warn() {
+        let (spec, bad) = parse_spec("");
+        assert_eq!(spec.default, LevelFilter::Warn);
+        assert!(bad.is_empty());
+        assert_eq!(spec.filter_for("sida_moe::cluster::router"), LevelFilter::Warn);
+    }
+
+    #[test]
+    fn bare_level_sets_default() {
+        let (spec, bad) = parse_spec("debug");
+        assert!(bad.is_empty());
+        assert_eq!(spec.default, LevelFilter::Debug);
+        assert_eq!(spec.max_filter(), LevelFilter::Debug);
+    }
+
+    #[test]
+    fn target_overrides_match_module_segments() {
+        let (spec, bad) = parse_spec("debug,cluster=trace,server=off");
+        assert!(bad.is_empty());
+        assert_eq!(spec.filter_for("sida_moe::cluster::router"), LevelFilter::Trace);
+        assert_eq!(spec.filter_for("sida_moe::server"), LevelFilter::Off);
+        assert_eq!(spec.filter_for("sida_moe::coordinator::pipeline"), LevelFilter::Debug);
+        // max over all directives: trace (drives set_max_level)
+        assert_eq!(spec.max_filter(), LevelFilter::Trace);
+    }
+
+    #[test]
+    fn first_matching_override_wins() {
+        let (spec, _) = parse_spec("warn,router=debug,cluster=error");
+        // both segments match; the earlier directive takes precedence
+        assert_eq!(spec.filter_for("sida_moe::cluster::router"), LevelFilter::Debug);
+    }
+
+    #[test]
+    fn unrecognized_tokens_are_reported_not_swallowed() {
+        let (spec, bad) = parse_spec("verbose,cluster=loud,info,=debug");
+        assert_eq!(bad, vec!["verbose", "cluster=loud", "=debug"]);
+        // the valid directive still applies
+        assert_eq!(spec.default, LevelFilter::Info);
+    }
+
+    #[test]
+    fn whitespace_tolerated() {
+        let (spec, bad) = parse_spec(" debug , cluster = trace ");
+        assert!(bad.is_empty());
+        assert_eq!(spec.default, LevelFilter::Debug);
+        assert_eq!(spec.filter_for("a::cluster::b"), LevelFilter::Trace);
     }
 }

@@ -1,0 +1,327 @@
+//! Observability layer tests (ISSUE 9 acceptance): registry atomics
+//! under contention, bucketed-histogram agreement with the exact
+//! [`LatencyHistogram`], tracing bit-identity, trace self-consistency
+//! (a request's exposed span components reconcile with its reported
+//! latency), and the 4-device faulted flow/lane/promotion structure of
+//! an exported Chrome trace.
+//!
+//! The tracer is process-global, so every test that enables it holds
+//! [`tracer_lock`] — registry tests use per-instance registries and
+//! need no serialization.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use sida_moe::coordinator::{replay_open_loop, Pipeline, PipelineConfig, ServeOutcome};
+use sida_moe::metrics::LatencyHistogram;
+use sida_moe::obs::trace::{self, ArgValue, Event};
+use sida_moe::obs::{Registry, SnapValue};
+use sida_moe::runtime::ModelBundle;
+use sida_moe::testkit::{self, SynthSpec, TINY_PROFILE};
+use sida_moe::util::json::Json;
+use sida_moe::util::rng::Rng;
+use sida_moe::workload::{ArrivalProcess, ClassMix};
+
+static TRACER: Mutex<()> = Mutex::new(());
+
+fn tracer_lock() -> MutexGuard<'static, ()> {
+    TRACER.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn deep_bundle() -> Arc<ModelBundle> {
+    testkit::bundle(&SynthSpec::default().two_moe_layers()).unwrap()
+}
+
+/// Order-normalized per-request outputs for bit-identity comparison.
+fn outputs(out: &ServeOutcome) -> Vec<(u64, Option<usize>, Option<f64>)> {
+    let mut v: Vec<_> = out.per_request.iter().map(|r| (r.id, r.cls_pred, r.lm_nll)).collect();
+    v.sort_by_key(|(id, ..)| *id);
+    assert!(!v.is_empty());
+    v
+}
+
+fn arg_f(ev: &Event, key: &str) -> f64 {
+    match ev.args.iter().find(|(k, _)| *k == key) {
+        Some((_, ArgValue::F(x))) => *x,
+        other => panic!("event '{}' missing f64 arg '{key}': {other:?}", ev.name),
+    }
+}
+
+fn arg_u(ev: &Event, key: &str) -> u64 {
+    match ev.args.iter().find(|(k, _)| *k == key) {
+        Some((_, ArgValue::U(n))) => *n,
+        other => panic!("event '{}' missing u64 arg '{key}': {other:?}", ev.name),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry
+// ---------------------------------------------------------------------------
+
+#[test]
+fn registry_counts_exactly_under_concurrent_increment_storm() {
+    // 8 threads x 10k increments against ONE underlying atomic (all
+    // handles resolve to the same (name, labels) series): the total
+    // must be exact, not approximately right.
+    let reg = Registry::new();
+    let threads = 8;
+    let per_thread = 10_000u64;
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let c = reg.counter("obs_test_storm_total", "storm test");
+                let h = reg.histogram("obs_test_storm_secs", "storm test");
+                for _ in 0..per_thread {
+                    c.inc();
+                    h.observe(0.001);
+                }
+            });
+        }
+    });
+    let want = threads * per_thread;
+    assert_eq!(reg.counter("obs_test_storm_total", "storm test").get(), want);
+
+    let h = reg.histogram("obs_test_storm_secs", "storm test");
+    assert_eq!(h.count(), want);
+    let (_, total) = *h.cumulative().last().unwrap();
+    assert_eq!(total, want, "every observation lands in exactly one bucket");
+    // the CAS-loop f64 sum is order-independent for identical addends:
+    // each retry re-adds onto the freshest value, so the final sum is
+    // the sequential fold bit-for-bit
+    let sequential = (0..want).fold(0.0f64, |acc, _| acc + 0.001);
+    assert_eq!(h.sum().to_bits(), sequential.to_bits());
+
+    // the snapshot sees the same numbers the handles do
+    let snap = reg.snapshot();
+    let counter = snap.iter().find(|s| s.name == "obs_test_storm_total").unwrap();
+    match &counter.value {
+        SnapValue::Counter(n) => assert_eq!(*n, want),
+        other => panic!("counter snapshotted as {other:?}"),
+    }
+}
+
+#[test]
+fn registry_histogram_brackets_agree_with_exact_latency_histogram() {
+    // The bucketed exposition histogram can only bracket a quantile;
+    // the bracket must always contain the exact nearest-rank quantile
+    // the serve report computes from the full sample set.
+    let mut rng = Rng::new(0xB0B5);
+    let reg = Registry::new();
+    let h = reg.histogram("obs_test_latency_secs", "agreement test");
+    let mut exact = LatencyHistogram::default();
+    for _ in 0..500 {
+        // log-ish spread across the default bucket range
+        let v = 1e-5 * (1.0 + rng.f64() * 9999.0);
+        exact.record(v);
+        h.observe(v);
+    }
+    assert_eq!(h.count(), exact.len() as u64);
+    assert!((h.sum() - exact.sum()).abs() <= 1e-9 * exact.sum().max(1.0));
+    for q in [0.0, 0.5, 0.9, 0.95, 0.99, 0.999, 1.0] {
+        let want = exact.quantile(q);
+        let (lo, hi) = h.quantile_bounds(q);
+        assert!(
+            lo <= want && want <= hi,
+            "q={q}: exact quantile {want} outside bucket bracket [{lo}, {hi}]"
+        );
+    }
+    // reload() mirrors an exact sample set: counts and sum must match
+    h.reload(exact.samples().iter().copied());
+    assert_eq!(h.count(), exact.len() as u64);
+    assert!((h.sum() - exact.sum()).abs() <= 1e-9 * exact.sum().max(1.0));
+}
+
+// ---------------------------------------------------------------------------
+// tracer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tracer_ring_wraparound_keeps_newest_and_counts_drops() {
+    let _g = tracer_lock();
+    trace::enable(8);
+    for i in 0..20u64 {
+        trace::instant("obs_test_wrap", "test", trace::host_pid(), vec![("seq", ArgValue::U(i))]);
+    }
+    let events: Vec<Event> = trace::snapshot_events()
+        .into_iter()
+        .filter(|e| e.name == "obs_test_wrap")
+        .collect();
+    trace::disable();
+    assert_eq!(events.len(), 8, "ring bounded at capacity");
+    assert_eq!(trace::dropped(), 12, "overflow is counted, not silent");
+    let seqs: Vec<u64> = events.iter().map(|e| arg_u(e, "seq")).collect();
+    assert_eq!(seqs, (12..20).collect::<Vec<_>>(), "the OLDEST events are dropped");
+}
+
+#[test]
+fn serving_with_tracing_enabled_is_bit_identical() {
+    // Tracing never touches the f32 compute path or the modeled cost
+    // ledger: predictions, NLLs and ladder attribution are bitwise
+    // equal with the tracer on.
+    let _g = tracer_lock();
+    let b = deep_bundle();
+    let reqs = testkit::tiny_trace(&b, 8, 21);
+    let run = || {
+        let cfg = PipelineConfig {
+            k_used: 2,
+            devices: 2,
+            replicate_top: 1,
+            want_lm: true,
+            want_cls: true,
+            ..Default::default()
+        };
+        Pipeline::new(b.clone(), TINY_PROFILE, cfg).unwrap().serve(&reqs).unwrap()
+    };
+    trace::disable();
+    let plain = run();
+    trace::enable(trace::DEFAULT_CAPACITY);
+    let traced = run();
+    trace::disable();
+    assert!(trace::len() > 0, "the traced run must have recorded spans");
+    assert_eq!(outputs(&plain), outputs(&traced), "tracing changed what serving computed");
+    assert_eq!(
+        plain.stats.hierarchy.ladder_secs().to_bits(),
+        traced.stats.hierarchy.ladder_secs().to_bits(),
+        "tracing changed the modeled ladder attribution"
+    );
+}
+
+#[test]
+fn request_done_span_components_reconcile_with_reported_latency() {
+    // Self-consistency: the exact f64 components exposed on each
+    // `request_done` instant must sum to the latency the serve report
+    // recorded — same values, same addition order, bitwise equal.
+    let _g = tracer_lock();
+    let bundle = testkit::tiny_bundle();
+    let p = Pipeline::new(
+        bundle.clone(),
+        TINY_PROFILE,
+        PipelineConfig { want_cls: true, ..Default::default() },
+    )
+    .unwrap();
+    let mix = ClassMix { interactive_frac: 0.5, deadline_secs: 10.0 };
+    let reqs =
+        testkit::tiny_trace_classed(&bundle, 6, 5, ArrivalProcess::Poisson { rate: 200.0 }, mix);
+    trace::enable(trace::DEFAULT_CAPACITY);
+    let report = replay_open_loop(&p, &reqs, 64).unwrap();
+    trace::disable();
+    let events = trace::snapshot_events();
+
+    let done: Vec<&Event> = events.iter().filter(|e| e.name == "request_done").collect();
+    assert_eq!(
+        done.len(),
+        report.outcome.stats.requests as usize,
+        "one request_done instant per served request"
+    );
+    let mut latencies: Vec<f64> = Vec::new();
+    for ev in &done {
+        let latency = arg_f(ev, "latency_secs");
+        let parts = arg_f(ev, "wait_secs") + arg_f(ev, "hash_secs") + arg_f(ev, "service_secs");
+        assert_eq!(
+            parts.to_bits(),
+            latency.to_bits(),
+            "request {}: span components {parts} != reported latency {latency}",
+            arg_u(ev, "request")
+        );
+        latencies.push(latency);
+    }
+    // ... and those latencies are exactly what the report's histogram
+    // recorded (order-normalized: both are per-request exact values)
+    let mut recorded: Vec<f64> = report.outcome.stats.latency.samples().to_vec();
+    recorded.sort_by(|a, b| a.total_cmp(b));
+    latencies.sort_by(|a, b| a.total_cmp(b));
+    assert_eq!(
+        latencies.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        recorded.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "trace-exposed latencies drifted from the report histogram"
+    );
+    // every served request opened and closed its flow on the host
+    for ev in &done {
+        let fid = arg_u(ev, "request") + 1;
+        assert!(events.iter().any(|e| e.ph == 's' && e.id == fid), "flow start missing");
+        assert!(events.iter().any(|e| e.ph == 'f' && e.id == fid), "flow end missing");
+    }
+}
+
+#[test]
+fn faulted_cluster_trace_follows_requests_across_devices() {
+    // ISSUE 9 acceptance: a 4-device faulted run with tracing on stays
+    // bit-identical AND its trace follows a request id from batch
+    // formation ('s' flow on the host) through per-layer lanes on >= 2
+    // device timelines ('t' flows) to completion ('f'), with the fault
+    // window and ladder promotions visible as instants.
+    let _g = tracer_lock();
+    let b = deep_bundle();
+    let reqs = testkit::tiny_trace(&b, 12, 7);
+    let run = || {
+        let cfg = PipelineConfig {
+            k_used: 2,
+            devices: 4,
+            replicate_top: 1,
+            min_replicas: 2,
+            fault_plan: "down:1@3..8".into(),
+            want_lm: true,
+            want_cls: true,
+            ..Default::default()
+        };
+        Pipeline::new(b.clone(), TINY_PROFILE, cfg).unwrap().serve(&reqs).unwrap()
+    };
+    trace::disable();
+    let plain = run();
+    trace::enable(trace::DEFAULT_CAPACITY);
+    let traced = run();
+    trace::disable();
+    assert_eq!(outputs(&plain), outputs(&traced), "tracing changed a faulted cluster run");
+
+    let events = trace::snapshot_events();
+    // lanes computed on at least two distinct device timelines
+    let lane_pids: BTreeSet<u32> =
+        events.iter().filter(|e| e.name == "lane").map(|e| e.pid).collect();
+    assert!(lane_pids.len() >= 2, "lane spans on one pid only: {lane_pids:?}");
+    assert!(!lane_pids.contains(&trace::host_pid()), "lanes belong on device pids");
+
+    // every flow step/end resolves to a start (Perfetto would render a
+    // dangling arrow otherwise)
+    let starts: BTreeSet<u64> =
+        events.iter().filter(|e| e.ph == 's').map(|e| e.id).collect();
+    assert!(!starts.is_empty(), "no flow starts recorded");
+    for e in events.iter().filter(|e| e.ph == 't' || e.ph == 'f') {
+        assert!(starts.contains(&e.id), "flow {} ({}) has no start", e.id, e.ph);
+    }
+    // ... and at least one request's flow steps across >= 2 devices
+    let mut step_pids: BTreeMap<u64, BTreeSet<u32>> = BTreeMap::new();
+    for e in events.iter().filter(|e| e.ph == 't') {
+        step_pids.entry(e.id).or_default().insert(e.pid);
+    }
+    assert!(
+        step_pids.values().any(|pids| pids.len() >= 2),
+        "no request flowed across two devices: {step_pids:?}"
+    );
+
+    // the fault window and the ladder are visible
+    let count = |name: &str| events.iter().filter(|e| e.name == name).count();
+    assert!(count("device_down") >= 1, "the injected failure must appear");
+    assert!(count("device_up") >= 1, "the recovery must appear");
+    assert!(count("promote") >= 1, "cold fetches must appear as ladder promotions");
+
+    // the export is a well-formed Chrome trace document: it parses,
+    // names every pid, and round-trips the event count
+    let doc = Json::parse(&trace::export_json().to_string()).unwrap();
+    let arr = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let meta = arr
+        .iter()
+        .filter(|e| e.get_str("ph").is_ok_and(|p| p == "M"))
+        .count();
+    assert_eq!(arr.len(), meta + events.len());
+    for pid in &lane_pids {
+        let label = format!("device{}", pid - 1);
+        assert!(
+            arr.iter().any(|e| {
+                e.get_str("name").is_ok_and(|n| n == "process_name")
+                    && e.get("pid").unwrap().as_u64().unwrap() == *pid as u64
+                    && e.get("args").unwrap().get_str("name").is_ok_and(|n| n == label)
+            }),
+            "device pid {pid} lacks a process_name metadata record"
+        );
+    }
+}

@@ -260,6 +260,75 @@ fn worker_panic_fails_requests_and_shuts_down_instead_of_hanging() {
 }
 
 #[test]
+fn metrics_exposition_agrees_with_stats_field_for_field() {
+    // ISSUE 9 satellite: `cmd:stats` and `cmd:metrics` render the SAME
+    // snapshot builder, so a scrape and a stats reply taken back to
+    // back on a quiescent server must agree field for field.
+    let (addr, _state, handle) = start_server();
+    {
+        let mut c = Client::connect(addr);
+        for tok in [40u64, 41, 42] {
+            let r = c.roundtrip(&format!(r#"{{"ids": [1, {tok}, {tok}, 2]}}"#));
+            assert!(r.get("label").is_ok(), "bad reply {r:?}");
+        }
+        let stats = c.roundtrip(r#"{"cmd": "stats"}"#);
+
+        // the metrics reply is multi-line Prometheus text terminated by
+        // a literal `# EOF` line
+        writeln!(c.writer, r#"{{"cmd": "metrics"}}"#).expect("send");
+        let mut text = String::new();
+        loop {
+            let mut line = String::new();
+            let n = c.reader.read_line(&mut line).expect("recv");
+            assert!(n > 0, "connection closed before # EOF");
+            if line.trim_end() == "# EOF" {
+                break;
+            }
+            text.push_str(&line);
+        }
+
+        // well-formed text exposition: every sample line parses, and the
+        // scrape carries a real series count (acceptance: >= 25)
+        let mut samples = 0;
+        for line in text.lines() {
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (name, value) =
+                line.rsplit_once(' ').unwrap_or_else(|| panic!("bad sample line: {line}"));
+            assert!(!name.is_empty(), "empty series name in '{line}'");
+            assert!(
+                matches!(value, "+Inf" | "-Inf" | "NaN") || value.parse::<f64>().is_ok(),
+                "unparseable sample value in '{line}'"
+            );
+            samples += 1;
+        }
+        assert!(samples >= 25, "only {samples} samples exposed");
+
+        // field-for-field agreement with the stats reply
+        let Json::Obj(map) = &stats else { panic!("stats must be an object: {stats:?}") };
+        let mut checked = 0;
+        for (name, v) in map.iter() {
+            let Json::Num(want) = v else { continue };
+            let got = sida_moe::obs::prom::sample(&text, &format!("sida_server_{name}"))
+                .unwrap_or_else(|| panic!("scrape missing sida_server_{name}"));
+            assert!(
+                (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                "sida_server_{name}: scrape says {got}, cmd:stats says {want}"
+            );
+            checked += 1;
+        }
+        assert!(checked >= 25, "only {checked} numeric stats fields compared");
+
+        // the connection stays usable after a multi-line reply
+        let ok = c.roundtrip(r#"{"ids": [1, 10, 2]}"#);
+        assert!(ok.get("label").is_ok());
+    }
+    shutdown(addr);
+    handle.join().expect("server thread");
+}
+
+#[test]
 fn shutdown_terminates_accept_loop() {
     let (addr, state, handle) = start_server();
     shutdown(addr);
