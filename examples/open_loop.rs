@@ -30,7 +30,9 @@ fn main() -> anyhow::Result<()> {
         .opt("arrivals", "arrival process (poisson|bursty|diurnal)", "poisson")
         .opt("interactive-frac", "fraction of requests with an SLO deadline", "0")
         .opt("slo-deadline", "interactive completion deadline (ms)", "100")
-        .opt("queue-cap", "admission queue bound", "32");
+        .opt("queue-cap", "admission queue bound", "32")
+        .opt("prefetch-depth", "MoE layers the warmer may stage ahead (1 = baseline)", "3")
+        .opt("host-bw", "modeled host staging bandwidth (bytes/s, 0 = reference PCIe)", "0");
     let args = cli.parse();
     let model = args.get_or("model", "switch64");
     let dataset = args.get_or("dataset", "sst2");
@@ -49,6 +51,10 @@ fn main() -> anyhow::Result<()> {
     let cfg = PipelineConfig {
         k_used: ServeConfig::paper_k_for(&dataset),
         want_cls: true,
+        // sweep prefetch depth against tail latency: deeper staging
+        // hides SSD promotions but spends shared window bandwidth
+        prefetch_depth: args.get_usize("prefetch-depth", 3).max(1),
+        host_bw: args.get_f64("host-bw", 0.0).max(0.0),
         ..Default::default()
     };
     let pipeline = Pipeline::new(bundle.clone(), &dataset, cfg)?;

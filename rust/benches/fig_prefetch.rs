@@ -1,0 +1,147 @@
+//! fig_prefetch — cross-layer prefetch bandwidth scheduling vs the
+//! one-layer-ahead baseline (ISSUE 10 headline).
+//!
+//! Serves the same trace twice at fixed tight device and `--ram-budget`
+//! windows: once at `--prefetch-depth 1` (the PR 5 baseline — every
+//! fetch staged exactly one layer ahead, one layer window of deadline)
+//! and once at depth 3 (the cross-layer scheduler: SSD-deep experts
+//! staged 2–3 layers ahead of their compute with correspondingly later
+//! deadlines, EDF-admitted into the shared bandwidth window).  The CI
+//! gates this bench enforces:
+//!
+//! * **exposed transfer seconds strictly drop** with depth scheduling —
+//!   the deeper deadlines buy SSD promotions hideable window the
+//!   one-layer-ahead model could never credit;
+//! * **outputs are bit-identical** across depths — scheduling reorders
+//!   and defers non-blocking staging only, never what compute sees;
+//! * the ladder attribution identity (`ladder_secs() ==
+//!   modeled_transfer_secs`) holds in both cells.
+//!
+//! Hermetic (synthetic testkit bundle) — CI's bench-smoke job RUNS this
+//! instead of SKIP-ing.  Emits `BENCH_prefetch.json`.
+
+use sida_moe::bench_support as bs;
+use sida_moe::coordinator::{Pipeline, PipelineConfig};
+use sida_moe::metrics::Table;
+use sida_moe::testkit::{self, SynthSpec, TINY_PROFILE};
+use sida_moe::util::json::{num, obj, s, Json};
+
+fn main() -> anyhow::Result<()> {
+    bs::banner(
+        "fig_prefetch: cross-layer prefetch scheduling vs one-layer-ahead",
+        "exposed transfer strictly drops at fixed budgets; outputs bit-identical",
+    );
+    let bundle = testkit::bundle(&SynthSpec::default().two_moe_layers())?;
+    let n = bs::n_requests(16);
+    let requests = testkit::tiny_trace(&bundle, n, 7);
+
+    let sim_expert = bs::sim_expert_bytes(&bundle)?;
+    // Fixed budgets picking the scheduler's operating regime: the device
+    // tier holds 8 of the 16 experts (a full request's two-layer union —
+    // so deep staging never evicts the layer compute is on), the
+    // host-RAM window only 2, so cross-request expert drift keeps a
+    // steady share of promotions SSD-deep — exactly the ladder traffic
+    // deep staging exists to hide.  The modeled host link runs at 16x
+    // the reference PCIe rate: staging occupancy then stays inside the
+    // per-layer drain, so the binding constraint on overlap credit is
+    // each fetch's *deadline* — what `--prefetch-depth` moves — rather
+    // than raw link saturation (where no schedule could help and both
+    // depths would tie).
+    let device_budget = 8 * sim_expert + 1024;
+    let ram_budget = 2 * sim_expert + 1024;
+    let host_bw = 16.0 * 16.0e9;
+
+    let mut t = Table::new(
+        "fig_prefetch — staging depth at fixed budgets",
+        &[
+            "depth", "exposed s", "overlapped s", "modeled s",
+            "admitted", "deferred", "backlog s", "window util",
+        ],
+    );
+    let mut j = bs::BenchJson::new("prefetch");
+    let mut cells = Vec::new();
+    for depth in [1usize, 3] {
+        let cfg = PipelineConfig {
+            k_used: 2,
+            budget_sim_bytes: device_budget,
+            ram_budget_bytes: ram_budget,
+            prefetch_depth: depth,
+            host_bw,
+            want_lm: true,
+            want_cls: true,
+            // one worker lane: identical invocation order across cells
+            pool_threads: 1,
+            ..Default::default()
+        };
+        let pipeline = Pipeline::new(bundle.clone(), TINY_PROFILE, cfg)?;
+        let out = pipeline.serve(&requests)?;
+        let st = &out.stats;
+        // the ladder attribution identity survives scheduling
+        let drift = (st.ladder_secs() - st.modeled_transfer_secs).abs();
+        anyhow::ensure!(
+            drift <= 1e-9 * st.modeled_transfer_secs.max(1.0),
+            "depth {depth}: ladder seconds {} drifted from modeled transfer {}",
+            st.ladder_secs(),
+            st.modeled_transfer_secs
+        );
+        t.row(vec![
+            depth.to_string(),
+            format!("{:.4}", st.exposed_transfer_secs()),
+            format!("{:.4}", st.overlapped_transfer_secs),
+            format!("{:.4}", st.modeled_transfer_secs),
+            st.prefetch_admitted.to_string(),
+            st.prefetch_deferred.to_string(),
+            format!("{:.4}", st.prefetch_backlog_secs),
+            st.prefetch_window_utilization
+                .map_or_else(|| "-".into(), |u| format!("{:.0}%", 100.0 * u)),
+        ]);
+        j.push(obj(vec![
+            ("prefetch_depth", num(depth as f64)),
+            ("device_budget_bytes", num(device_budget as f64)),
+            ("ram_budget_bytes", num(ram_budget as f64)),
+            ("host_bw_bytes_per_sec", num(host_bw)),
+            ("exposed_transfer_secs", num(st.exposed_transfer_secs())),
+            ("overlapped_transfer_secs", num(st.overlapped_transfer_secs)),
+            ("modeled_transfer_secs", num(st.modeled_transfer_secs)),
+            ("prefetch_admitted", num(st.prefetch_admitted as f64)),
+            ("prefetch_deferred", num(st.prefetch_deferred as f64)),
+            ("prefetch_backlog_secs", num(st.prefetch_backlog_secs)),
+            (
+                "prefetch_window_utilization",
+                st.prefetch_window_utilization.map(num).unwrap_or(Json::Null),
+            ),
+            ("requests", num(st.requests as f64)),
+            ("dataset", s(TINY_PROFILE)),
+        ]));
+        let outputs: Vec<(Option<usize>, Option<f64>)> =
+            out.per_request.iter().map(|r| (r.cls_pred, r.lm_nll)).collect();
+        cells.push((depth, st.exposed_transfer_secs(), outputs));
+    }
+    t.print();
+    t.save_csv(&bs::csv_path("fig_prefetch"))?;
+
+    // the gates
+    let (_, exposed_base, ref out_base) = cells[0];
+    let (_, exposed_sched, ref out_sched) = cells[1];
+    let strict_drop = exposed_sched < exposed_base - 1e-12;
+    let bit_identical = out_base == out_sched;
+    println!(
+        "prefetch check: exposed transfer strictly drops with depth scheduling \
+         ({exposed_base:.4}s -> {exposed_sched:.4}s): {}; outputs bit-identical \
+         across depths: {}",
+        if strict_drop { "PASS" } else { "FAIL" },
+        if bit_identical { "PASS" } else { "FAIL" }
+    );
+    j.push(obj(vec![
+        ("exposed_secs_depth1", num(exposed_base)),
+        ("exposed_secs_depth3", num(exposed_sched)),
+        ("exposed_strictly_drops", Json::Bool(strict_drop)),
+        ("outputs_bit_identical", Json::Bool(bit_identical)),
+    ]));
+    let path = j.save()?;
+    println!("perf-trajectory JSON: {}", path.display());
+    if !(strict_drop && bit_identical) {
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -6,7 +6,8 @@
 //! stages (hash build, expert invocation, end-to-end forward), a
 //! per-stage breakdown of the expert path (gather / expert compute /
 //! scatter / transfer exposed-vs-overlapped), and a sequential-vs-
-//! pooled comparison under a tight budget.  Emits
+//! pooled comparison under a tight budget (with a `--prefetch-depth`
+//! 1-vs-3 arm isolating the cross-layer bandwidth scheduler).  Emits
 //! `BENCH_hotpath.json` (see `bench_support::BenchJson`) so the
 //! numbers form a diffable perf trajectory across PRs.
 
@@ -122,7 +123,8 @@ fn main() -> anyhow::Result<()> {
     //   serial = pool 1, no prefetch (blocking on-demand fetches)
     //   pooled = auto pool, request-ahead + layer-ahead prefetch
     let n = bs::n_requests(8);
-    let tight = 6 * bs::sim_expert_bytes(&b)?;
+    let sim = bs::sim_expert_bytes(&b)?;
+    let tight = 6 * sim;
     let serial = bs::run_method(
         b.clone(),
         Method::Sida,
@@ -133,6 +135,25 @@ fn main() -> anyhow::Result<()> {
         Method::Sida,
         &bs::RunSpec::new("sst2", n).sleep(false).budget(tight).pool(0),
     )?;
+    // depth-scheduled arm: the same pooled configuration at a tight
+    // host-RAM window (2 experts, so misses are SSD-ladder-deep) and a
+    // 16x-reference host link (staging occupancy fits the per-layer
+    // drain, so each fetch's *deadline* binds its overlap credit),
+    // with the cross-layer scheduler clamped to the one-layer-ahead
+    // baseline (`--prefetch-depth 1`) vs the default depth 3 — the
+    // pair isolates what deadline-aware deep staging buys in exposed
+    // transfer at fixed budgets.
+    let depth_spec = |d: usize| {
+        bs::RunSpec::new("sst2", n)
+            .sleep(false)
+            .budget(tight)
+            .pool(0)
+            .ram_budget(2 * sim + 1024)
+            .host_bw(16.0 * 16.0e9)
+            .prefetch_depth(d)
+    };
+    let depth1 = bs::run_method(b.clone(), Method::Sida, &depth_spec(1))?;
+    let depth3 = bs::run_method(b.clone(), Method::Sida, &depth_spec(3))?;
     let mut t3 = Table::new(
         "expert-path per-stage breakdown (ms/request)",
         &[
@@ -156,6 +177,8 @@ fn main() -> anyhow::Result<()> {
     };
     t3.row(breakdown_row("serial (pool 1, no prefetch)", &serial.stats));
     t3.row(breakdown_row("pooled + layer-ahead", &pooled.stats));
+    t3.row(breakdown_row("tight RAM, depth 1 (one-layer-ahead)", &depth1.stats));
+    t3.row(breakdown_row("tight RAM, depth 3 (cross-layer EDF)", &depth3.stats));
     t3.print();
     let serial_ms = bs::modeled_request_ms(&serial.stats);
     let pooled_ms = bs::modeled_request_ms(&pooled.stats);
@@ -182,13 +205,28 @@ fn main() -> anyhow::Result<()> {
             ("blocking_misses", num(st.blocking_misses as f64)),
         ])
     };
+    let depth1_exposed =
+        depth1.stats.exposed_transfer_secs() * 1e3 / depth1.stats.requests.max(1) as f64;
+    let depth3_exposed =
+        depth3.stats.exposed_transfer_secs() * 1e3 / depth3.stats.requests.max(1) as f64;
+    println!(
+        "depth scheduling exposed transfer (tight RAM): {depth1_exposed:.3}ms/req \
+         at depth 1 -> {depth3_exposed:.3}ms/req at depth 3"
+    );
     let mut j = bs::BenchJson::new("hotpath");
     j.push(breakdown_json("serial", &serial.stats));
     j.push(breakdown_json("pooled_layer_ahead", &pooled.stats));
+    j.push(breakdown_json("tight_ram_depth1_one_layer_ahead", &depth1.stats));
+    j.push(breakdown_json("tight_ram_depth3_cross_layer", &depth3.stats));
     j.push(obj(vec![
         ("metric", s("sequential_vs_pooled_modeled_speedup")),
         ("speedup", num(speedup)),
         ("strictly_lower", Json::Bool(pooled_ms < serial_ms)),
+    ]));
+    j.push(obj(vec![
+        ("metric", s("depth_scheduling_exposed_transfer_ms_per_req")),
+        ("depth1", num(depth1_exposed)),
+        ("depth3", num(depth3_exposed)),
     ]));
     j.push_table(&t2);
     let path = j.save()?;

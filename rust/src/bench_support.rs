@@ -94,6 +94,11 @@ pub struct RunSpec {
     pub store_dir: String,
     /// on-disk store budget in real bytes (0 = unbounded)
     pub ssd_budget_bytes: usize,
+    /// MoE layers the depth-window warmer may stage ahead (1 = the
+    /// one-layer-ahead baseline, 3 = the cross-layer scheduler default)
+    pub prefetch_depth: usize,
+    /// modeled host staging bandwidth in bytes/sec (0 = reference link)
+    pub host_bw: f64,
     pub seed: u64,
 }
 
@@ -119,8 +124,22 @@ impl RunSpec {
             fault_plan: String::new(),
             store_dir: String::new(),
             ssd_budget_bytes: 0,
+            prefetch_depth: 3,
+            host_bw: 0.0,
             seed: 0,
         }
+    }
+
+    /// Cross-layer prefetch depth (1 = one-layer-ahead baseline).
+    pub fn prefetch_depth(mut self, d: usize) -> Self {
+        self.prefetch_depth = d.max(1);
+        self
+    }
+
+    /// Modeled host staging bandwidth in bytes/sec (0 = reference).
+    pub fn host_bw(mut self, bw: f64) -> Self {
+        self.host_bw = bw.max(0.0);
+        self
     }
 
     pub fn batch(mut self, b: usize) -> Self {
@@ -244,6 +263,8 @@ pub fn run_method(
                 ssd_budget_bytes: spec.ssd_budget_bytes,
                 real_sleep: spec.real_sleep,
                 prefetch: spec.prefetch,
+                prefetch_depth: spec.prefetch_depth,
+                host_bw: spec.host_bw,
                 queue_depth: 8,
                 max_batch: spec.max_batch,
                 pool_threads: spec.pool_threads,

@@ -21,7 +21,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::experts::{make_policy, ExpertCache, ExpertKey, SharedExpertCache};
+use crate::experts::{make_policy, BandwidthWindow, ExpertCache, ExpertKey, SharedExpertCache};
 use crate::memory::{CostModel, HierarchyStats, Tier, TierCosts};
 
 /// One modeled accelerator: a budgeted expert cache whose embedded
@@ -56,6 +56,11 @@ pub struct DeviceSet {
     pub link: TierCosts,
     /// simulated device budget, per device
     pub budget_per_device: usize,
+    /// the ONE staging bandwidth window every device cache of this box
+    /// charges its non-blocking prefetches into — devices share the
+    /// host link, so their staging contends on a single modeled backlog
+    /// rather than the independent per-cache clocks of PR 5
+    window: Arc<BandwidthWindow>,
 }
 
 impl DeviceSet {
@@ -64,6 +69,9 @@ impl DeviceSet {
     /// per-device host-RAM window device evictions demote into
     /// (`ram_policy` is that window's own eviction policy; overflow
     /// falls to unbounded SSD).
+    /// `host_bw` (bytes/sec, `0` = the reference PCIe link) sets the
+    /// shared staging window's occupancy rate — see
+    /// [`BandwidthWindow::set_rate`].
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         n: usize,
@@ -74,8 +82,13 @@ impl DeviceSet {
         link: TierCosts,
         ram_budget: usize,
         ram_policy: &str,
+        host_bw: f64,
     ) -> Result<Self> {
         anyhow::ensure!(n >= 1, "a cluster needs at least one device");
+        let window = Arc::new(BandwidthWindow::new());
+        if host_bw > 0.0 {
+            window.set_rate(CostModel::paper_scale(real_expert_bytes).h2d_bandwidth / host_bw);
+        }
         let mut devices = Vec::with_capacity(n);
         for id in 0..n {
             let cost = CostModel::paper_scale(real_expert_bytes).with_real_sleep(real_sleep);
@@ -89,9 +102,18 @@ impl DeviceSet {
             // ladder events (promote/demote) land on this device's trace
             // track rather than the shared device-0 default
             cache.set_trace_pid(crate::obs::trace::device_pid(id));
+            // all devices of one box draw staging bandwidth from the
+            // same host link
+            cache.share_window(window.clone());
             devices.push(Device { id, cache: Arc::new(SharedExpertCache::new(cache)) });
         }
-        Ok(DeviceSet { devices, link, budget_per_device })
+        Ok(DeviceSet { devices, link, budget_per_device, window })
+    }
+
+    /// The box-wide staging bandwidth window shared by every device
+    /// cache.
+    pub fn bandwidth_window(&self) -> Arc<BandwidthWindow> {
+        self.window.clone()
     }
 
     pub fn len(&self) -> usize {
@@ -132,7 +154,7 @@ mod tests {
     use super::*;
 
     fn set(n: usize, budget: usize) -> DeviceSet {
-        DeviceSet::new(n, budget, 1000, "fifo", false, TierCosts::default(), 1 << 24, "fifo")
+        DeviceSet::new(n, budget, 1000, "fifo", false, TierCosts::default(), 1 << 24, "fifo", 0.0)
             .unwrap()
     }
 
@@ -153,6 +175,28 @@ mod tests {
         let b = 1 << 20;
         assert_eq!(s.link_secs(b), s.link.promote_secs(Tier::Ram, b));
         assert!(s.link_secs(b) > 0.0);
+    }
+
+    #[test]
+    fn devices_share_one_staging_window() {
+        // a non-blocking fetch through device 0's cache backlogs the
+        // box-wide window, and device 1's cache sees the same backlog —
+        // staging bandwidth is shared, not per-cache
+        let s = set(2, 1 << 20);
+        let buf = || {
+            crate::runtime::DeviceBuffer(
+                crate::runtime::Literal::from_f32s(&[1], vec![0.0]).unwrap(),
+            )
+        };
+        s.device(0)
+            .cache
+            .ensure(ExpertKey::new(0, 0), 1000, false, || Ok([buf(), buf(), buf(), buf()]))
+            .unwrap();
+        let b0 = s.device(0).cache.prefetch_backlog_secs();
+        let b1 = s.device(1).cache.prefetch_backlog_secs();
+        assert!(b0 > 0.0, "non-blocking fetch must queue on the window");
+        assert_eq!(b0, b1, "both caches read the one shared window");
+        assert_eq!(b0, s.bandwidth_window().backlog_secs());
     }
 
     #[test]

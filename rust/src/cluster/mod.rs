@@ -83,6 +83,11 @@ pub struct ClusterConfig {
     /// deterministic fault schedule on the batch-tick timeline
     /// (`--fault-plan`, [`FaultPlan`] grammar; empty = fault-free)
     pub fault_plan: String,
+    /// modeled host-link staging bandwidth in bytes/sec (`--host-bw`;
+    /// `0` = the reference PCIe link).  All devices of the box draw
+    /// expert staging from ONE shared bandwidth window scaled by this
+    /// — see [`crate::experts::BandwidthWindow`]
+    pub host_bw: f64,
 }
 
 impl Default for ClusterConfig {
@@ -98,6 +103,7 @@ impl Default for ClusterConfig {
             ram_policy: "fifo".into(),
             min_replicas: 1,
             fault_plan: String::new(),
+            host_bw: 0.0,
         }
     }
 }

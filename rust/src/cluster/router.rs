@@ -48,8 +48,11 @@ use crate::memory::{CostModel, Tier};
 use crate::obs::trace::{self, ArgValue};
 use crate::runtime::ModelBundle;
 
-/// One planned cluster prefetch: which expert to warm on which device.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// One planned cluster prefetch: which expert to warm on which device,
+/// plus the cross-layer scheduling metadata the shared bandwidth
+/// window's EDF admission consumes (the cluster twin of
+/// [`crate::experts::PlannedFetch`]).
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClusterFetch {
     pub key: ExpertKey,
     pub device: usize,
@@ -59,6 +62,37 @@ pub struct ClusterFetch {
     /// SSD-deep promotions are issued first (they take ~9x as long, so
     /// they must start earliest to hide behind compute)
     pub tier: Tier,
+    /// layers before this fetch's layer computes when it was planned
+    /// (1 = just-in-time)
+    pub layers_ahead: usize,
+    /// tier-derived staging lead ([`crate::memory::lead_layers`])
+    pub lead_layers: usize,
+    /// modeled seconds until the layer computes — the EDF key and the
+    /// bound on the fetch's overlap credit
+    pub deadline_secs: f64,
+    /// per-layer hash-prediction confidence (mean top-rank alpha)
+    pub confidence: f64,
+}
+
+impl crate::experts::ScheduledFetch for ClusterFetch {
+    fn key(&self) -> ExpertKey {
+        self.key
+    }
+    fn tier(&self) -> Tier {
+        self.tier
+    }
+    fn token_count(&self) -> usize {
+        self.token_count
+    }
+    fn deadline_secs(&self) -> f64 {
+        self.deadline_secs
+    }
+    fn confidence(&self) -> f64 {
+        self.confidence
+    }
+    fn layers_ahead(&self) -> usize {
+        self.layers_ahead
+    }
 }
 
 /// See the module docs.  Shared concurrently by the worker-pool lanes,
@@ -92,6 +126,11 @@ pub struct ClusterRouter {
     moe_blocks: Vec<usize>,
     /// the served model's topology — bucket geometry for lane weighting
     topo: std::sync::Arc<crate::runtime::Topology>,
+    /// tier-ladder cost table of the device caches (all identical) —
+    /// deadline/lead arithmetic for the staging scheduler
+    costs: crate::memory::TierCosts,
+    /// simulated (paper-scale) bytes of one expert
+    sim_expert_bytes: usize,
 }
 
 impl ClusterRouter {
@@ -101,8 +140,8 @@ impl ClusterRouter {
     pub fn new(bundle: &ModelBundle, cfg: &ClusterConfig) -> Result<Self> {
         let topo = &bundle.topology;
         let real_expert_bytes = bundle.weights.expert_bytes(topo.moe_blocks[0], 0)?;
-        let expert_sim_bytes =
-            CostModel::paper_scale(real_expert_bytes).sim_bytes(real_expert_bytes);
+        let cost_model = CostModel::paper_scale(real_expert_bytes);
+        let expert_sim_bytes = cost_model.sim_bytes(real_expert_bytes);
         let set = DeviceSet::new(
             cfg.devices,
             cfg.budget_per_device,
@@ -112,6 +151,7 @@ impl ClusterRouter {
             cfg.link.clone(),
             cfg.host_ram_budget,
             &cfg.ram_policy,
+            cfg.host_bw,
         )?;
         let capacity = (cfg.budget_per_device / expert_sim_bytes.max(1)).max(1);
         let planner = PlacementPlanner::new(cfg.devices, cfg.replicate_top, capacity)
@@ -139,7 +179,20 @@ impl ClusterRouter {
             d_model: topo.d_model,
             moe_blocks: topo.moe_blocks.clone(),
             topo: bundle.topology.clone(),
+            costs: cost_model.tier_costs(),
+            sim_expert_bytes: cost_model.sim_expert_bytes,
         })
+    }
+
+    /// The box-wide staging bandwidth window shared by every device.
+    pub fn bandwidth_window(&self) -> std::sync::Arc<crate::experts::BandwidthWindow> {
+        self.set.bandwidth_window()
+    }
+
+    /// Cost table + simulated expert bytes the staging scheduler's
+    /// deadline/lead arithmetic runs on.
+    pub fn staging_costs(&self) -> (crate::memory::TierCosts, usize) {
+        (self.costs.clone(), self.sim_expert_bytes)
     }
 
     pub fn devices(&self) -> usize {
@@ -429,15 +482,27 @@ impl ClusterRouter {
     /// that device's ladder, so it must start earliest), then hottest.
     /// Replicas are warmed on every holder — replication means the
     /// weights live on several devices, so the router can steer traffic
-    /// freely without a cold-start penalty.
+    /// freely without a cold-start penalty.  `layers_ahead` sets every
+    /// fetch's deadline ([`crate::memory::fetch_deadline_secs`]);
+    /// `max_lead` clamps the tier-derived lead (`--prefetch-depth`).
     pub fn plan_layer(
         &self,
         pairs: &[(&HashTable, &[f32])],
         block: usize,
         layer: usize,
         k_used: usize,
+        layers_ahead: usize,
+        max_lead: usize,
     ) -> Vec<ClusterFetch> {
         let counts = crate::experts::predicted_expert_counts(pairs, layer, k_used);
+        let experts_in_layer = counts.len();
+        let confidence = crate::experts::prefetch::layer_confidence(pairs, layer);
+        let deadline_secs = crate::memory::fetch_deadline_secs(
+            &self.costs,
+            self.sim_expert_bytes,
+            experts_in_layer,
+            layers_ahead.max(1),
+        );
         let placement = self.placement.read().unwrap();
         let mut plan = Vec::new();
         for (expert, token_count) in counts {
@@ -448,7 +513,22 @@ impl ClusterRouter {
                 }
                 let tier = self.set.device(device).tier_of(&key);
                 if tier != Tier::Device {
-                    plan.push(ClusterFetch { key, device, token_count, tier });
+                    plan.push(ClusterFetch {
+                        key,
+                        device,
+                        token_count,
+                        tier,
+                        layers_ahead: layers_ahead.max(1),
+                        lead_layers: crate::memory::lead_layers(
+                            &self.costs,
+                            tier,
+                            self.sim_expert_bytes,
+                            experts_in_layer,
+                            max_lead,
+                        ),
+                        deadline_secs,
+                        confidence,
+                    });
                 }
             }
         }
@@ -463,15 +543,25 @@ impl ClusterRouter {
     }
 
     /// Execute a cluster fetch plan on the prefetch timeline
-    /// (non-blocking; resident entries cost one read-path hit).  Each
-    /// device's cache drives its own residency ledger as it fetches —
-    /// there is no separate promote bookkeeping to drift.
+    /// (non-blocking; resident entries cost one read-path hit).  The
+    /// plan is first admitted earliest-deadline-first into the box-wide
+    /// bandwidth window ([`crate::experts::admit_edf`]) — all devices
+    /// draw staging from the one shared host link, so admission and
+    /// backlog are global, not per-device.  Each device's cache drives
+    /// its own residency ledger as it fetches — there is no separate
+    /// promote bookkeeping to drift.
     pub fn fetch_planned(&self, bundle: &ModelBundle, plan: &[ClusterFetch]) -> Result<()> {
         if plan.is_empty() {
             return Ok(());
         }
+        let window = self.set.bandwidth_window();
+        let rate = window.rate();
+        let adm = crate::experts::admit_edf(plan.to_vec(), window.backlog_secs(), |f| {
+            self.costs.promote_secs(f.tier, self.sim_expert_bytes) * rate
+        });
+        window.note_deferred(adm.deferred as u64);
         let t_stage = trace::begin();
-        for fetch in plan {
+        for fetch in &adm.admit {
             // a plan can outlive a health transition (it was computed at
             // an earlier tick); drop-fetch faults swallow the prefetch
             // entirely — the expert degrades to a later blocking miss,
@@ -483,14 +573,18 @@ impl ClusterRouter {
             }
             let key = fetch.key;
             let real = bundle.weights.expert_bytes(key.block, key.expert)?;
-            let _ = self.set.device(fetch.device).cache.ensure(key, real, false, || {
-                crate::runtime::stage_expert_parts(
-                    &bundle.engine,
-                    &bundle.weights,
-                    key.block,
-                    key.expert,
-                )
-            })?;
+            let _ = self
+                .set
+                .device(fetch.device)
+                .cache
+                .ensure_deadline(key, real, fetch.deadline_secs, || {
+                    crate::runtime::stage_expert_parts(
+                        &bundle.engine,
+                        &bundle.weights,
+                        key.block,
+                        key.expert,
+                    )
+                })?;
         }
         if trace::enabled() {
             trace::complete(
@@ -498,7 +592,12 @@ impl ClusterRouter {
                 "prefetch",
                 trace::host_pid(),
                 t_stage,
-                vec![("experts", ArgValue::U(plan.len() as u64))],
+                vec![
+                    ("experts", ArgValue::U(adm.admit.len() as u64)),
+                    ("deferred", ArgValue::U(adm.deferred as u64)),
+                    ("lead_layers", ArgValue::U(adm.max_lead_layers as u64)),
+                    ("deadline_slack_ms", ArgValue::F(adm.min_slack_secs.unwrap_or(0.0) * 1e3)),
+                ],
             );
         }
         Ok(())
@@ -506,6 +605,7 @@ impl ClusterRouter {
 
     /// Warm one MoE layer's predicted experts on their holder devices
     /// (the cluster twin of the single-device `warm_layer`).
+    #[allow(clippy::too_many_arguments)]
     pub fn warm_layer(
         &self,
         bundle: &ModelBundle,
@@ -513,8 +613,10 @@ impl ClusterRouter {
         block: usize,
         layer: usize,
         k_used: usize,
+        layers_ahead: usize,
+        max_lead: usize,
     ) -> Result<()> {
-        let plan = self.plan_layer(pairs, block, layer, k_used);
+        let plan = self.plan_layer(pairs, block, layer, k_used, layers_ahead, max_lead);
         self.fetch_planned(bundle, &plan)
     }
 
@@ -724,6 +826,31 @@ mod tests {
     }
 
     #[test]
+    fn plan_layer_carries_scheduling_metadata_and_charges_shared_window() {
+        let (b, r) = router(2, 1);
+        let builder = crate::coordinator::HashBuilder::new(&b, testkit::TINY_PROFILE).unwrap();
+        let reqs = testkit::tiny_trace(&b, 2, 5);
+        let masks: Vec<Vec<f32>> = reqs.iter().map(|q| q.mask()).collect();
+        let tables: Vec<_> =
+            reqs.iter().map(|q| builder.build(q.id, &q.ids).unwrap()).collect();
+        let pairs: Vec<(&HashTable, &[f32])> =
+            tables.iter().zip(masks.iter()).map(|(t, m)| (t, m.as_slice())).collect();
+        let plan = r.plan_layer(&pairs, b.topology.moe_blocks[0], 0, 1, 2, 3);
+        assert!(!plan.is_empty(), "cold fleet: the predicted union is all missing");
+        for f in &plan {
+            assert_eq!(f.layers_ahead, 2);
+            assert!((1..=3).contains(&f.lead_layers));
+            assert!(f.deadline_secs > 0.0);
+            assert!((0.0..=1.0).contains(&f.confidence));
+        }
+        r.fetch_planned(&b, &plan).unwrap();
+        assert!(
+            r.bandwidth_window().backlog_secs() > 0.0,
+            "cluster staging must queue on the box-wide shared window"
+        );
+    }
+
+    #[test]
     fn interconnect_charged_only_off_primary() {
         let (_, r) = router(2, 0);
         assert_eq!(r.charge_activation_transfer(0, 100), 0.0);
@@ -904,10 +1031,17 @@ mod tests {
         let block = b.topology.moe_blocks[0];
         r.advance_batch(&b); // tick 1: device 1's prefetches drop
         let key = ExpertKey::new(block, 0);
-        let plan = vec![
-            ClusterFetch { key, device: 0, token_count: 4, tier: Tier::Ssd },
-            ClusterFetch { key, device: 1, token_count: 4, tier: Tier::Ssd },
-        ];
+        let fetch = |device: usize| ClusterFetch {
+            key,
+            device,
+            token_count: 4,
+            tier: Tier::Ssd,
+            layers_ahead: 1,
+            lead_layers: 1,
+            deadline_secs: 1.0,
+            confidence: 1.0,
+        };
+        let plan = vec![fetch(0), fetch(1)];
         r.fetch_planned(&b, &plan).unwrap();
         assert!(r.device_cache(0).contains(&key), "healthy device's prefetch lands");
         assert!(!r.device_cache(1).contains(&key), "faulted device's prefetch dropped");

@@ -42,6 +42,14 @@ pub struct ServeConfig {
     pub real_sleep: bool,
     /// run the prefetch stage of the SiDA pipeline
     pub prefetch: bool,
+    /// how many MoE layers ahead the depth-window warmer may stage
+    /// experts (`--prefetch-depth`; 1 = the one-layer-ahead baseline,
+    /// 3 lets SSD-deep promotions start early enough to hide)
+    pub prefetch_depth: usize,
+    /// modeled host-link staging bandwidth in bytes/sec (`--host-bw`;
+    /// 0 = the reference PCIe link) — scales the shared
+    /// [`crate::experts::BandwidthWindow`] all prefetches contend on
+    pub host_bw: f64,
     /// requests coalesced per forward pass (1 = the paper's batch-1
     /// setting; > 1 enables cross-request batching for the sida method)
     pub max_batch: usize,
@@ -107,6 +115,8 @@ impl Default for ServeConfig {
             k_used: 1,
             real_sleep: false,
             prefetch: true,
+            prefetch_depth: 3,
+            host_bw: 0.0,
             max_batch: 1,
             pool_threads: 0,
             devices: 1,
@@ -147,6 +157,8 @@ impl ServeConfig {
                 "k_used" => cfg.k_used = val.as_usize()?,
                 "real_sleep" => cfg.real_sleep = val.as_bool()?,
                 "prefetch" => cfg.prefetch = val.as_bool()?,
+                "prefetch_depth" => cfg.prefetch_depth = val.as_usize()?.max(1),
+                "host_bw" => cfg.host_bw = val.as_f64()?.max(0.0),
                 "max_batch" => cfg.max_batch = val.as_usize()?.max(1),
                 "pool_threads" => cfg.pool_threads = val.as_usize()?,
                 "devices" => cfg.devices = val.as_usize()?.max(1),
@@ -217,6 +229,16 @@ impl ServeConfig {
         if let Some(v) = args.get("k-used") {
             if let Ok(x) = v.parse() {
                 self.k_used = x;
+            }
+        }
+        if let Some(v) = args.get("prefetch-depth") {
+            if let Ok(x) = v.parse::<usize>() {
+                self.prefetch_depth = x.max(1);
+            }
+        }
+        if let Some(v) = args.get("host-bw") {
+            if let Ok(x) = v.parse::<f64>() {
+                self.host_bw = x.max(0.0);
             }
         }
         if let Some(v) = args.get("batch") {
@@ -396,6 +418,23 @@ mod tests {
         let d = ServeConfig::default();
         assert!(d.store_dir.is_empty(), "modeled-only SSD tier by default");
         assert_eq!(d.ssd_budget_bytes(), 0, "0 = unbounded");
+    }
+
+    #[test]
+    fn prefetch_scheduler_keys_parse_and_clamp() {
+        let j = Json::parse(r#"{"prefetch_depth":4,"host_bw":8e9}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.prefetch_depth, 4);
+        assert!((c.host_bw - 8e9).abs() < 1.0);
+        // clamps: depth floors at the one-layer-ahead baseline,
+        // negative bandwidth means "reference link"
+        let j = Json::parse(r#"{"prefetch_depth":0,"host_bw":-1}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.prefetch_depth, 1);
+        assert_eq!(c.host_bw, 0.0);
+        let d = ServeConfig::default();
+        assert_eq!(d.prefetch_depth, 3);
+        assert_eq!(d.host_bw, 0.0);
     }
 
     #[test]

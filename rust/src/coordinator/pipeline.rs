@@ -92,6 +92,19 @@ pub struct PipelineConfig {
     /// false = fetch on demand at compute time, an ablation that shows
     /// what the look-ahead buys
     pub prefetch: bool,
+    /// staging depth of the cross-layer prefetch scheduler
+    /// (`--prefetch-depth`): how many layers ahead of compute the
+    /// depth-window warmer may probe, and the clamp on every fetch's
+    /// tier-derived lead ([`crate::memory::lead_layers`]).  `1` is the
+    /// PR 5 one-layer-ahead baseline; the default `3` lets SSD-deep
+    /// promotions start 2–3 layers early, bounded by their ladder time
+    pub prefetch_depth: usize,
+    /// modeled host-link bandwidth for expert staging in bytes/sec
+    /// (`--host-bw`; `0` = the reference PCIe link of the cost model).
+    /// A slower link inflates the shared bandwidth window's occupancy
+    /// (`reference_bw / host_bw`), so the same staging plan backlogs it
+    /// faster — the ladder charge per transfer is untouched
+    pub host_bw: f64,
     /// hash-table queue depth
     pub queue_depth: usize,
     /// requests coalesced per forward pass (1 = the paper's batch-1
@@ -133,6 +146,8 @@ impl Default for PipelineConfig {
             ssd_budget_bytes: 0,
             real_sleep: false,
             prefetch: true,
+            prefetch_depth: 3,
+            host_bw: 0.0,
             queue_depth: 8,
             max_batch: 1,
             pool_threads: 0,
@@ -217,6 +232,13 @@ impl Pipeline {
             core.attach_store(crate::experts::bind_store(&bundle, store));
         }
         let cache = Arc::new(SharedExpertCache::new(core));
+        if cfg.host_bw > 0.0 {
+            // occupancy multiplier of the shared staging window: a link
+            // at half the reference bandwidth backlogs twice as fast
+            cache
+                .bandwidth_window()
+                .set_rate(CostModel::paper_scale(real_expert_bytes).h2d_bandwidth / cfg.host_bw);
+        }
         let cluster = if cfg.devices > 1 {
             Some(Arc::new(ClusterRouter::new(
                 &bundle,
@@ -230,6 +252,7 @@ impl Pipeline {
                     real_sleep: cfg.real_sleep,
                     host_ram_budget: cfg.ram_budget_bytes,
                     ram_policy: cfg.ram_policy.clone(),
+                    host_bw: cfg.host_bw,
                     ..ClusterConfig::default()
                 },
             )?))
@@ -359,6 +382,7 @@ impl Pipeline {
             let target = self.warm_target();
             let bundle = self.bundle.clone();
             let k_used = self.cfg.k_used;
+            let depth = self.cfg.prefetch_depth.max(1);
             let moe_blocks = self.bundle.topology.moe_blocks.clone();
             Some(
                 std::thread::Builder::new()
@@ -369,8 +393,10 @@ impl Pipeline {
                             let deeper = {
                                 let pairs: Vec<(&HashTable, &[f32])> =
                                     vec![(&table, &mask[..])];
-                                target.warm_layer(&bundle, &pairs, moe_blocks[0], 0, k_used)?;
-                                target.plan_deeper(&pairs, &moe_blocks, k_used)
+                                target.warm_layer(
+                                    &bundle, &pairs, moe_blocks[0], 0, k_used, 1, depth,
+                                )?;
+                                target.plan_deeper(&pairs, &moe_blocks, k_used, depth)
                             };
                             if ptx.send((req, table)).is_err() {
                                 break;
@@ -552,6 +578,7 @@ impl Pipeline {
             let target = self.warm_target();
             let bundle = self.bundle.clone();
             let k_used = self.cfg.k_used;
+            let depth = self.cfg.prefetch_depth.max(1);
             let max_batch = self.cfg.max_batch.max(1);
             let prefetch = self.cfg.prefetch;
             let moe_blocks = self.bundle.topology.moe_blocks.clone();
@@ -567,7 +594,7 @@ impl Pipeline {
                                     let batch = std::mem::take(&mut pending);
                                     let deeper = if prefetch {
                                         Some(stage_batch_prefetch(
-                                            &bundle, &target, &batch, &moe_blocks, k_used,
+                                            &bundle, &target, &batch, &moe_blocks, k_used, depth,
                                         )?)
                                     } else {
                                         None
@@ -586,7 +613,7 @@ impl Pipeline {
                     if !pending.is_empty() {
                         let deeper = if prefetch {
                             Some(stage_batch_prefetch(
-                                &bundle, &target, &pending, &moe_blocks, k_used,
+                                &bundle, &target, &pending, &moe_blocks, k_used, depth,
                             )?)
                         } else {
                             None
@@ -702,7 +729,7 @@ impl Pipeline {
     }
 
     /// See [`run_gated_forward`].
-    fn forward_gated<T>(
+    pub(crate) fn forward_gated<T>(
         &self,
         pairs: &[(&HashTable, &[f32])],
         trace_ids: &[u64],
@@ -714,6 +741,7 @@ impl Pipeline {
             pairs,
             &self.bundle.topology.moe_blocks,
             self.cfg.k_used,
+            self.cfg.prefetch_depth,
             trace_ids,
             body,
         )
@@ -767,6 +795,17 @@ impl Pipeline {
                 stats.cluster = Some(cs);
             }
         }
+        // the shared staging window (one per box: the single cache's, or
+        // the one every cluster device charges into)
+        let snap = match &self.cluster {
+            None => self.cache.bandwidth_window().snapshot(),
+            Some(router) => router.bandwidth_window().snapshot(),
+        };
+        stats.prefetch_backlog_secs = snap.backlog_secs;
+        stats.prefetch_carried_backlog_secs = snap.carried_backlog_secs;
+        stats.prefetch_admitted = snap.admitted;
+        stats.prefetch_deferred = snap.deferred_low_confidence;
+        stats.prefetch_window_utilization = snap.utilization();
     }
 }
 
@@ -787,8 +826,42 @@ pub(crate) enum DeeperPlan {
 }
 
 impl WarmTarget {
+    /// The shared staging bandwidth window this target charges
+    /// non-blocking fetches into (one per box).
+    pub(crate) fn bandwidth_window(&self) -> Arc<crate::experts::BandwidthWindow> {
+        match self {
+            WarmTarget::Single { cache } => cache.bandwidth_window(),
+            WarmTarget::Cluster { router } => router.bandwidth_window(),
+        }
+    }
+
+    /// Modeled staging window of one MoE layer of this batch
+    /// ([`crate::memory::layer_window_secs`] at the layer's predicted
+    /// expert count) — what a compute-layer advance drains from the
+    /// shared window.
+    pub(crate) fn layer_window_secs(
+        &self,
+        pairs: &[(&HashTable, &[f32])],
+        layer: usize,
+        k_used: usize,
+    ) -> f64 {
+        let experts = crate::experts::predicted_expert_counts(pairs, layer, k_used).len();
+        let (costs, sim) = match self {
+            WarmTarget::Single { cache } => {
+                let guard = cache.read();
+                let cm = guard.cost_model();
+                (cm.tier_costs(), cm.sim_expert_bytes)
+            }
+            WarmTarget::Cluster { router } => router.staging_costs(),
+        };
+        crate::memory::layer_window_secs(&costs, sim, experts)
+    }
+
     /// Warm one MoE layer's predicted union (non-blocking, prefetch
-    /// timeline) wherever this target stages experts.
+    /// timeline) wherever this target stages experts.  `layers_ahead`
+    /// sets the fetches' deadlines; `max_lead` clamps their tier lead
+    /// (`--prefetch-depth`).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn warm_layer(
         &self,
         bundle: &ModelBundle,
@@ -796,39 +869,110 @@ impl WarmTarget {
         block: usize,
         layer: usize,
         k_used: usize,
+        layers_ahead: usize,
+        max_lead: usize,
     ) -> Result<()> {
         match self {
             WarmTarget::Single { cache } => {
-                warm_layer(bundle, cache, pairs, block, layer, k_used)
+                warm_layer(bundle, cache, pairs, block, layer, k_used, layers_ahead, max_lead)
             }
             WarmTarget::Cluster { router } => {
-                router.warm_layer(bundle, pairs, block, layer, k_used)
+                router.warm_layer(bundle, pairs, block, layer, k_used, layers_ahead, max_lead)
             }
         }
     }
 
-    /// Fetch plan for every MoE layer after the first.
+    /// Fetch plan for every MoE layer after the first, planned before
+    /// compute begins (layer `j` is `j + 1` layer windows away).  Only
+    /// fetches whose tier-derived lead covers that distance are staged
+    /// this early — the rest wait for the depth-window warmer to reach
+    /// them just-in-time (at `--prefetch-depth 1` nothing qualifies and
+    /// this plan is empty: the one-layer-ahead baseline).
     pub(crate) fn plan_deeper(
         &self,
         pairs: &[(&HashTable, &[f32])],
         moe_blocks: &[usize],
         k_used: usize,
+        max_lead: usize,
     ) -> DeeperPlan {
         match self {
             WarmTarget::Single { cache } => {
-                DeeperPlan::Single(plan_deeper_layers(cache, pairs, moe_blocks, k_used))
+                let guard = cache.read();
+                let mut plan = Vec::new();
+                for (layer, &block) in moe_blocks.iter().enumerate().skip(1) {
+                    let ahead = layer + 1;
+                    plan.extend(
+                        plan_prefetch_layer(pairs, block, layer, k_used, ahead, max_lead, &guard)
+                            .into_iter()
+                            .filter(|f| f.lead_layers >= ahead),
+                    );
+                }
+                DeeperPlan::Single(plan)
             }
             WarmTarget::Cluster { router } => {
                 let mut plan = Vec::new();
                 for (layer, &block) in moe_blocks.iter().enumerate().skip(1) {
-                    plan.extend(router.plan_layer(pairs, block, layer, k_used));
+                    let ahead = layer + 1;
+                    plan.extend(
+                        router
+                            .plan_layer(pairs, block, layer, k_used, ahead, max_lead)
+                            .into_iter()
+                            .filter(|f| f.lead_layers >= ahead),
+                    );
                 }
                 DeeperPlan::Cluster(plan)
             }
         }
     }
 
-    /// Execute a deferred plan on the prefetch timeline.
+    /// One staging round of the depth-window warmer: while compute is
+    /// about to enter layer `round`, probe layers `round .. round +
+    /// depth` and collect every missing fetch whose tier lead covers
+    /// its distance (`layers_ahead = probe - round + 1`; the `round`
+    /// layer itself is always included — lead ≥ 1).
+    pub(crate) fn plan_window(
+        &self,
+        pairs: &[(&HashTable, &[f32])],
+        moe_blocks: &[usize],
+        k_used: usize,
+        round: usize,
+        depth: usize,
+    ) -> DeeperPlan {
+        let end = moe_blocks.len().min(round + depth.max(1));
+        match self {
+            WarmTarget::Single { cache } => {
+                let guard = cache.read();
+                let mut plan = Vec::new();
+                for layer in round..end {
+                    let ahead = layer - round + 1;
+                    plan.extend(
+                        plan_prefetch_layer(
+                            pairs, moe_blocks[layer], layer, k_used, ahead, depth, &guard,
+                        )
+                        .into_iter()
+                        .filter(|f| f.lead_layers >= ahead),
+                    );
+                }
+                DeeperPlan::Single(plan)
+            }
+            WarmTarget::Cluster { router } => {
+                let mut plan = Vec::new();
+                for layer in round..end {
+                    let ahead = layer - round + 1;
+                    plan.extend(
+                        router
+                            .plan_layer(pairs, moe_blocks[layer], layer, k_used, ahead, depth)
+                            .into_iter()
+                            .filter(|f| f.lead_layers >= ahead),
+                    );
+                }
+                DeeperPlan::Cluster(plan)
+            }
+        }
+    }
+
+    /// Execute a deferred plan on the prefetch timeline (EDF admission
+    /// into the shared window happens inside the fetch executors).
     pub(crate) fn fetch_deeper(&self, bundle: &ModelBundle, plan: &DeeperPlan) -> Result<()> {
         match (self, plan) {
             (WarmTarget::Single { cache }, DeeperPlan::Single(p)) => {
@@ -855,12 +999,14 @@ impl WarmTarget {
 /// a warmer *error* is logged and otherwise ignored — the gate already
 /// released compute, which then fetched its experts blocking, so the
 /// forward output is complete and correct.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_gated_forward<T>(
     bundle: &ModelBundle,
     target: &WarmTarget,
     pairs: &[(&HashTable, &[f32])],
     moe_blocks: &[usize],
     k_used: usize,
+    prefetch_depth: usize,
     trace_ids: &[u64],
     body: impl FnOnce(ForwardHooks<'_>) -> Result<T>,
 ) -> Result<T> {
@@ -868,7 +1014,9 @@ pub(crate) fn run_gated_forward<T>(
     std::thread::scope(|s| -> Result<T> {
         let warmer = {
             let gate = &gate;
-            s.spawn(move || layer_ahead_warmer(bundle, target, gate, pairs, moe_blocks, k_used))
+            s.spawn(move || {
+                layer_ahead_warmer(bundle, target, gate, pairs, moe_blocks, k_used, prefetch_depth)
+            })
         };
         let result = {
             // release the warmer on every exit path, unwinding included
@@ -889,7 +1037,11 @@ pub(crate) fn run_gated_forward<T>(
 }
 
 /// Execute a fetch plan (non-blocking fetches on the prefetch
-/// timeline); resident entries cost one read-path hit.
+/// timeline); resident entries cost one read-path hit.  The plan is
+/// first admitted earliest-deadline-first into the cache's shared
+/// bandwidth window ([`crate::experts::admit_edf`]): low-confidence
+/// speculative fetches whose deadline the backlog already passed are
+/// deferred to a later just-in-time round instead of burning window.
 fn fetch_planned(
     bundle: &ModelBundle,
     cache: &SharedExpertCache,
@@ -898,12 +1050,23 @@ fn fetch_planned(
     if plan.is_empty() {
         return Ok(());
     }
+    let window = cache.bandwidth_window();
+    let (costs, sim) = {
+        let guard = cache.read();
+        let cm = guard.cost_model();
+        (cm.tier_costs(), cm.sim_expert_bytes)
+    };
+    let rate = window.rate();
+    let adm = crate::experts::admit_edf(plan.to_vec(), window.backlog_secs(), |f| {
+        costs.promote_secs(f.tier, sim) * rate
+    });
+    window.note_deferred(adm.deferred as u64);
     let t_stage = trace::begin();
-    for fetch in plan {
+    for fetch in &adm.admit {
         let key = fetch.key;
         let real = bundle.weights.expert_bytes(key.block, key.expert)?;
         // non-blocking: prefetch misses do not stall the inference thread
-        let _ = cache.ensure(key, real, false, || {
+        let _ = cache.ensure_deadline(key, real, fetch.deadline_secs, || {
             crate::runtime::stage_expert_parts(
                 &bundle.engine,
                 &bundle.weights,
@@ -918,7 +1081,12 @@ fn fetch_planned(
             "prefetch",
             trace::host_pid(),
             t_stage,
-            vec![("experts", ArgValue::U(plan.len() as u64))],
+            vec![
+                ("experts", ArgValue::U(adm.admit.len() as u64)),
+                ("deferred", ArgValue::U(adm.deferred as u64)),
+                ("lead_layers", ArgValue::U(adm.max_lead_layers as u64)),
+                ("deadline_slack_ms", ArgValue::F(adm.min_slack_secs.unwrap_or(0.0) * 1e3)),
+            ],
         );
     }
     Ok(())
@@ -926,6 +1094,7 @@ fn fetch_planned(
 
 /// Warm one MoE layer's predicted expert union (non-blocking fetches on
 /// the prefetch timeline), hottest experts first.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn warm_layer(
     bundle: &ModelBundle,
     cache: &SharedExpertCache,
@@ -933,40 +1102,27 @@ pub(crate) fn warm_layer(
     block: usize,
     layer: usize,
     k_used: usize,
+    layers_ahead: usize,
+    max_lead: usize,
 ) -> Result<()> {
     let plan = {
         let guard = cache.read();
-        plan_prefetch_layer(pairs, block, layer, k_used, &guard)
+        plan_prefetch_layer(pairs, block, layer, k_used, layers_ahead, max_lead, &guard)
     };
     fetch_planned(bundle, cache, &plan)
 }
 
-/// Fetch plan for every MoE layer after the first — what the prefetch
-/// stage warms *after* handing the request to inference, overlapped
-/// with the request's early compute.
-fn plan_deeper_layers(
-    cache: &SharedExpertCache,
-    pairs: &[(&HashTable, &[f32])],
-    moe_blocks: &[usize],
-    k_used: usize,
-) -> Vec<PlannedFetch> {
-    let guard = cache.read();
-    let mut plan = Vec::new();
-    for (layer, &block) in moe_blocks.iter().enumerate().skip(1) {
-        plan.extend(plan_prefetch_layer(pairs, block, layer, k_used, &guard));
-    }
-    plan
-}
-
 /// Batch-former prefetch: warm the first MoE layer's batch-union before
 /// the batch is handed to inference, and return the deeper layers' plan
-/// to fetch after the hand-off (request-ahead overlap).
+/// to fetch after the hand-off (request-ahead overlap, lead-filtered —
+/// see [`WarmTarget::plan_deeper`]).
 fn stage_batch_prefetch(
     bundle: &ModelBundle,
     target: &WarmTarget,
     batch: &[(Request, HashTable)],
     moe_blocks: &[usize],
     k_used: usize,
+    depth: usize,
 ) -> Result<DeeperPlan> {
     let masks: Vec<Vec<f32>> = batch.iter().map(|(req, _)| req.mask()).collect();
     let pairs: Vec<(&HashTable, &[f32])> = batch
@@ -974,14 +1130,22 @@ fn stage_batch_prefetch(
         .zip(masks.iter())
         .map(|((_, table), mask)| (table, mask.as_slice()))
         .collect();
-    target.warm_layer(bundle, &pairs, moe_blocks[0], 0, k_used)?;
-    Ok(target.plan_deeper(&pairs, moe_blocks, k_used))
+    target.warm_layer(bundle, &pairs, moe_blocks[0], 0, k_used, 1, depth)?;
+    Ok(target.plan_deeper(&pairs, moe_blocks, k_used, depth))
 }
 
-/// The layer-ahead warmer body: stage layer 0, then stage layer j+1 as
-/// soon as compute enters layer j.  Any exit path (success, error,
-/// compute finished early) releases the gate so the inference thread
-/// can never deadlock on a dead warmer.
+/// The depth-window warmer body (PR 5's layer-ahead warmer generalized
+/// to a staging depth): when compute is about to enter layer `round`,
+/// probe layers `round .. round + depth`, stage every missing fetch
+/// whose tier-derived lead covers its distance, and EDF-admit the
+/// merged plan into the shared bandwidth window.  Each compute-layer
+/// advance drains one modeled layer window from the link, so deep
+/// SSD promotions issued 2–3 rounds early really do accumulate hideable
+/// window.  `depth == 1` reproduces the one-layer-ahead baseline
+/// exactly.  Any exit path (success, error, compute finished early)
+/// releases the gate so the inference thread can never deadlock on a
+/// dead warmer.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn layer_ahead_warmer(
     bundle: &ModelBundle,
     target: &WarmTarget,
@@ -989,6 +1153,7 @@ pub(crate) fn layer_ahead_warmer(
     pairs: &[(&HashTable, &[f32])],
     moe_blocks: &[usize],
     k_used: usize,
+    depth: usize,
 ) -> Result<()> {
     struct Release<'a>(&'a LayerGate);
     impl Drop for Release<'_> {
@@ -997,12 +1162,20 @@ pub(crate) fn layer_ahead_warmer(
         }
     }
     let _release = Release(gate);
-    for (layer, &block) in moe_blocks.iter().enumerate() {
-        if layer > 0 && !gate.wait_compute_at_least(layer - 1) {
-            break; // forward pass already over — nothing left to warm
+    let depth = depth.max(1);
+    let window = target.bandwidth_window();
+    for round in 0..moe_blocks.len() {
+        if round > 0 {
+            if !gate.wait_compute_at_least(round - 1) {
+                break; // forward pass already over — nothing left to warm
+            }
+            // compute just finished layer round-1: that layer's modeled
+            // staging window drained from the shared link
+            window.drain(target.layer_window_secs(pairs, round - 1, k_used));
         }
-        target.warm_layer(bundle, pairs, block, layer, k_used)?;
-        gate.mark_warmed(layer);
+        let plan = target.plan_window(pairs, moe_blocks, k_used, round, depth);
+        target.fetch_deeper(bundle, &plan)?;
+        gate.mark_warmed(round);
     }
     Ok(())
 }

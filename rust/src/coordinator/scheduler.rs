@@ -27,6 +27,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::batcher::{Batcher, QueueDelayEstimator};
+use crate::coordinator::hash_table::HashTable;
 use crate::coordinator::pipeline::{Pipeline, RequestResult, ServeOutcome};
 use crate::metrics::ServeStats;
 use crate::model::{ForwardHooks, ForwardOptions};
@@ -161,13 +162,33 @@ pub fn replay_open_loop(
         let t_service = trace::begin();
         let t0 = Instant::now();
         let mut provider = pipeline.provider();
-        let out = pipeline.runner.forward_hooked(
-            &req.ids,
-            Some((&table, pipeline.cfg.k_used)),
-            &mut provider,
-            opts,
-            ForwardHooks { layer_gate: None, trace_ids: Some(&trace_ids) },
-        )?;
+        // with prefetch on, the forward runs gated: the depth-window
+        // warmer stages up to `cfg.prefetch_depth` layers ahead of
+        // compute through the shared bandwidth window, so SLO sweeps
+        // can trade prefetch depth against tail latency.  Gating only
+        // reorders non-blocking staging — outputs are bit-identical to
+        // the ungated forward.
+        let out = if pipeline.cfg.prefetch {
+            let mask = req.mask();
+            let pairs: Vec<(&HashTable, &[f32])> = vec![(&table, &mask[..])];
+            pipeline.forward_gated(&pairs, &trace_ids, |hooks| {
+                pipeline.runner.forward_hooked(
+                    &req.ids,
+                    Some((&table, pipeline.cfg.k_used)),
+                    &mut provider,
+                    opts,
+                    hooks,
+                )
+            })?
+        } else {
+            pipeline.runner.forward_hooked(
+                &req.ids,
+                Some((&table, pipeline.cfg.k_used)),
+                &mut provider,
+                opts,
+                ForwardHooks { layer_gate: None, trace_ids: Some(&trace_ids) },
+            )?
+        };
         let service = t0.elapsed().as_secs_f64();
         estimator.observe(table.build_secs + service);
         let latency = wait + table.build_secs + service;

@@ -1,0 +1,457 @@
+//! Cross-layer prefetch bandwidth scheduling: one budgeted, shared
+//! bandwidth window for expert staging, and earliest-deadline-first
+//! admission into it.
+//!
+//! PR 5's overlap model gave every cache its own busy-until prefetch
+//! clock and staged exactly one layer ahead, so an SSD-deep expert whose
+//! ladder time exceeds one layer's compute was exposed on the critical
+//! path no matter how early the hash table predicted it.  This module
+//! replaces the per-cache clock with a [`BandwidthWindow`] — a modeled
+//! backlog queue on the host link that several caches (all the devices
+//! of one box) can share — and adds the admission logic that decides
+//! *which* planned fetches may occupy it, in *what* order:
+//!
+//! - every planned fetch carries a **deadline** (the modeled start of
+//!   its layer's compute, [`crate::memory::fetch_deadline_secs`]) and a
+//!   tier-derived **lead** ([`crate::memory::lead_layers`]: SSD-deep
+//!   experts start 2–3 layers ahead, RAM hops 1, device-resident are
+//!   skipped);
+//! - [`admit_edf`] orders fetches earliest-deadline-first and walks the
+//!   projected backlog, deferring low-confidence predictions that could
+//!   not arrive in time anyway (so they don't burn window that certain
+//!   ones need — they are re-planned just-in-time one layer ahead,
+//!   where they are never deferred);
+//! - [`BandwidthWindow::charge`] credits only the share of a transfer
+//!   that fits between the link's backlog and the fetch's deadline, so
+//!   hidden-transfer credit is bounded by the bandwidth window that
+//!   actually existed AND by the compute window before need-time — a
+//!   9x-ladder SSD promotion staged one layer ahead can no longer claim
+//!   full overlap.
+//!
+//! Everything here is *accounting on the modeled timeline*: admission
+//! reorders and defers non-blocking staging only, never what the
+//! compute path fetches, so f32 outputs are bit-identical with the
+//! scheduler on or off, and the ladder attribution identity
+//! (`ladder_secs() == modeled_transfer_secs`) is untouched — the ledger
+//! still charges every promotion exactly once.
+
+use std::sync::Mutex;
+
+use crate::experts::ExpertKey;
+use crate::memory::Tier;
+
+/// Predictions with top-rank router agreement below this threshold do
+/// not get speculative deep staging when the window is already
+/// backlogged past their deadline ([`admit_edf`]); they fall back to
+/// just-in-time staging one layer ahead.
+pub const MIN_CONFIDENCE: f64 = 0.25;
+
+/// One read of the window's counters — what observability publishes.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct WindowSnapshot {
+    /// modeled transfer seconds queued on the link, not yet drained
+    pub backlog_secs: f64,
+    /// backlog carried into the current epoch by
+    /// [`BandwidthWindow::carry_epoch`] (the drain-or-carry fix: a stats
+    /// reset must not silently discard scheduled work)
+    pub carried_backlog_secs: f64,
+    /// fetches charged into the window this epoch
+    pub admitted: u64,
+    /// fetches deferred by [`admit_edf`] for low prediction confidence
+    pub deferred_low_confidence: u64,
+    /// drain capacity offered to the window this epoch (compute-layer
+    /// advances draining the link)
+    pub offered_drain_secs: f64,
+    /// the share of `offered_drain_secs` that actually drained backlog
+    pub used_drain_secs: f64,
+}
+
+impl WindowSnapshot {
+    /// Fraction of the offered drain capacity the link actually used,
+    /// or `None` before any capacity was offered (a window that never
+    /// opened has no utilization, and `0.0` would read as "idle").
+    pub fn utilization(&self) -> Option<f64> {
+        if self.offered_drain_secs > 0.0 {
+            Some(self.used_drain_secs / self.offered_drain_secs)
+        } else {
+            None
+        }
+    }
+}
+
+#[derive(Debug)]
+struct WindowState {
+    backlog_secs: f64,
+    /// occupancy multiplier: modeled seconds per charged transfer
+    /// second.  `1.0` models the reference PCIe link; `--host-bw`
+    /// scales it (`reference_bw / host_bw`), so a slower host link
+    /// backlogs faster without touching the ladder charge itself
+    rate: f64,
+    carried_backlog_secs: f64,
+    admitted: u64,
+    deferred_low_confidence: u64,
+    offered_drain_secs: f64,
+    used_drain_secs: f64,
+}
+
+/// The modeled prefetch link as a **budgeted, shared resource**: a
+/// backlog queue in modeled seconds that staging charges into and
+/// compute-layer advances drain out of.  Wrap it in an `Arc` to share
+/// one window across every device cache of a box (the cluster path) —
+/// all interior mutability, so charging works through `&self` from
+/// several caches at once.
+#[derive(Debug)]
+pub struct BandwidthWindow {
+    state: Mutex<WindowState>,
+}
+
+impl Default for BandwidthWindow {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BandwidthWindow {
+    pub fn new() -> Self {
+        BandwidthWindow {
+            state: Mutex::new(WindowState {
+                backlog_secs: 0.0,
+                rate: 1.0,
+                carried_backlog_secs: 0.0,
+                admitted: 0,
+                deferred_low_confidence: 0,
+                offered_drain_secs: 0.0,
+                used_drain_secs: 0.0,
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, WindowState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Set the occupancy multiplier (`reference_bw / host_bw`).  Values
+    /// `<= 0` are ignored (the reference link stays in effect).
+    pub fn set_rate(&self, rate: f64) {
+        if rate > 0.0 && rate.is_finite() {
+            self.lock().rate = rate;
+        }
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.lock().rate
+    }
+
+    /// Charge one non-blocking transfer of `secs` modeled seconds whose
+    /// layer compute starts `deadline_secs` from now, and return the
+    /// overlap credit: the share of the transfer that fits between the
+    /// link's current backlog and the deadline,
+    /// `clamp(deadline - backlog, 0, secs)`.  The transfer's occupancy
+    /// (`secs * rate`) joins the backlog either way — an uncreditable
+    /// fetch still consumes the window behind it.
+    pub fn charge(&self, secs: f64, deadline_secs: f64) -> f64 {
+        let mut st = self.lock();
+        let credit = (deadline_secs - st.backlog_secs).clamp(0.0, secs);
+        st.backlog_secs += secs * st.rate;
+        st.admitted += 1;
+        credit
+    }
+
+    /// Offer `secs` of drain capacity (one compute layer advanced):
+    /// the link works off up to that much backlog.
+    pub fn drain(&self, secs: f64) {
+        if secs <= 0.0 {
+            return;
+        }
+        let mut st = self.lock();
+        let used = st.backlog_secs.min(secs);
+        st.backlog_secs -= used;
+        st.offered_drain_secs += secs;
+        st.used_drain_secs += used;
+    }
+
+    /// Modeled transfer seconds currently queued on the link.
+    pub fn backlog_secs(&self) -> f64 {
+        self.lock().backlog_secs
+    }
+
+    /// Record `n` fetches deferred by confidence-weighted admission.
+    pub fn note_deferred(&self, n: u64) {
+        self.lock().deferred_low_confidence += n;
+    }
+
+    /// Start a new stats epoch, **carrying** the scheduled backlog
+    /// forward instead of silently discarding it (the
+    /// `reset_transfer_clock` fix): counters zero, the backlog stays
+    /// queued, and the carried amount is recorded so conservation is
+    /// checkable — `backlog_before == carried + drained` always, with
+    /// drained `== 0` here.  Idempotent: a second reset with no traffic
+    /// in between re-records the same carry.  Returns the carried
+    /// backlog.
+    pub fn carry_epoch(&self) -> f64 {
+        let mut st = self.lock();
+        st.carried_backlog_secs = st.backlog_secs;
+        st.admitted = 0;
+        st.deferred_low_confidence = 0;
+        st.offered_drain_secs = 0.0;
+        st.used_drain_secs = 0.0;
+        st.backlog_secs
+    }
+
+    pub fn snapshot(&self) -> WindowSnapshot {
+        let st = self.lock();
+        WindowSnapshot {
+            backlog_secs: st.backlog_secs,
+            carried_backlog_secs: st.carried_backlog_secs,
+            admitted: st.admitted,
+            deferred_low_confidence: st.deferred_low_confidence,
+            offered_drain_secs: st.offered_drain_secs,
+            used_drain_secs: st.used_drain_secs,
+        }
+    }
+}
+
+/// What the EDF admission needs to know about a planned fetch —
+/// implemented by both the single-device [`super::PlannedFetch`] and
+/// the cluster's [`crate::cluster::ClusterFetch`], so one scheduler
+/// serves both paths.
+pub trait ScheduledFetch {
+    fn key(&self) -> ExpertKey;
+    fn tier(&self) -> Tier;
+    fn token_count(&self) -> usize;
+    fn deadline_secs(&self) -> f64;
+    fn confidence(&self) -> f64;
+    fn layers_ahead(&self) -> usize;
+}
+
+/// Outcome of [`admit_edf`]: the admitted fetches in issue order, plus
+/// the span/observability summary of the round.
+#[derive(Debug)]
+pub struct Admission<T> {
+    /// fetches to issue, earliest deadline first
+    pub admit: Vec<T>,
+    /// low-confidence fetches dropped this round (they re-enter the
+    /// plan just-in-time at one layer ahead, where they always admit)
+    pub deferred: usize,
+    /// tightest `deadline - projected backlog` among admitted fetches
+    /// (negative = already late), for the `prefetch_stage` span
+    pub min_slack_secs: Option<f64>,
+    /// deepest staging lead among admitted fetches, in layers
+    pub max_lead_layers: usize,
+}
+
+/// Order a staging round **earliest-deadline-first** and admit it into
+/// the projected window.  Ties break toward higher prediction
+/// confidence, then the established within-layer order (deepest tier
+/// first, then hottest, then key) — so a low-agreement fetch can never
+/// displace a high-agreement one with an earlier-or-equal deadline.
+///
+/// A fetch is *deferred* (dropped from this round, counted) only when
+/// all three hold: it is speculative (`layers_ahead > 1`), its
+/// confidence is below [`MIN_CONFIDENCE`], and the projected backlog
+/// already exceeds its deadline (zero possible credit — issuing it
+/// would only burn window that certain fetches need).  `occupancy`
+/// maps a fetch to the modeled seconds it would add to the backlog
+/// (`rate`-scaled, matching [`BandwidthWindow::charge`]).
+pub fn admit_edf<T: ScheduledFetch>(
+    mut plan: Vec<T>,
+    backlog_secs: f64,
+    occupancy: impl Fn(&T) -> f64,
+) -> Admission<T> {
+    plan.sort_by(|a, b| {
+        a.deadline_secs()
+            .total_cmp(&b.deadline_secs())
+            .then(b.confidence().total_cmp(&a.confidence()))
+            .then(b.tier().cmp(&a.tier()))
+            .then(b.token_count().cmp(&a.token_count()))
+            .then(a.key().cmp(&b.key()))
+    });
+    let mut admit = Vec::with_capacity(plan.len());
+    let mut deferred = 0usize;
+    let mut min_slack: Option<f64> = None;
+    let mut max_lead = 0usize;
+    let mut projected = backlog_secs;
+    for fetch in plan {
+        let slack = fetch.deadline_secs() - projected;
+        let speculative = fetch.layers_ahead() > 1;
+        if speculative && slack <= 0.0 && fetch.confidence() < MIN_CONFIDENCE {
+            deferred += 1;
+            continue;
+        }
+        projected += occupancy(&fetch);
+        min_slack = Some(min_slack.map_or(slack, |m: f64| m.min(slack)));
+        max_lead = max_lead.max(fetch.layers_ahead());
+        admit.push(fetch);
+    }
+    Admission { admit, deferred, min_slack_secs: min_slack, max_lead_layers: max_lead }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, Clone)]
+    struct Fetch {
+        key: ExpertKey,
+        tier: Tier,
+        tokens: usize,
+        deadline: f64,
+        confidence: f64,
+        ahead: usize,
+    }
+
+    impl ScheduledFetch for Fetch {
+        fn key(&self) -> ExpertKey {
+            self.key
+        }
+        fn tier(&self) -> Tier {
+            self.tier
+        }
+        fn token_count(&self) -> usize {
+            self.tokens
+        }
+        fn deadline_secs(&self) -> f64 {
+            self.deadline
+        }
+        fn confidence(&self) -> f64 {
+            self.confidence
+        }
+        fn layers_ahead(&self) -> usize {
+            self.ahead
+        }
+    }
+
+    fn fetch(expert: usize, deadline: f64, confidence: f64, ahead: usize) -> Fetch {
+        Fetch {
+            key: ExpertKey::new(0, expert),
+            tier: Tier::Ssd,
+            tokens: 1,
+            deadline,
+            confidence,
+            ahead,
+        }
+    }
+
+    #[test]
+    fn charge_credits_up_to_deadline_and_backlogs_the_rest() {
+        let w = BandwidthWindow::new();
+        // empty link: a transfer shorter than its deadline is fully hidden
+        assert_eq!(w.charge(1.0, 3.0), 1.0);
+        // backlog is now 1.0; a same-shape transfer is credited only the
+        // remaining window before its deadline
+        assert_eq!(w.charge(1.0, 1.5), 0.5);
+        // and one whose deadline is already behind the backlog earns zero
+        assert_eq!(w.charge(1.0, 1.0), 0.0);
+        assert!((w.backlog_secs() - 3.0).abs() < 1e-12);
+        let snap = w.snapshot();
+        assert_eq!(snap.admitted, 3);
+    }
+
+    #[test]
+    fn drain_works_off_backlog_and_tracks_utilization() {
+        let w = BandwidthWindow::new();
+        w.charge(1.0, 1.0);
+        w.drain(0.4);
+        assert!((w.backlog_secs() - 0.6).abs() < 1e-12);
+        // over-draining idles the link: offered > used
+        w.drain(1.0);
+        assert_eq!(w.backlog_secs(), 0.0);
+        let snap = w.snapshot();
+        assert!((snap.offered_drain_secs - 1.4).abs() < 1e-12);
+        assert!((snap.used_drain_secs - 1.0).abs() < 1e-12);
+        assert!((snap.utilization().unwrap() - 1.0 / 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_none_before_any_drain() {
+        let w = BandwidthWindow::new();
+        w.charge(1.0, 1.0);
+        assert_eq!(w.snapshot().utilization(), None);
+    }
+
+    #[test]
+    fn rate_scales_occupancy_not_credit() {
+        let w = BandwidthWindow::new();
+        w.set_rate(2.0); // half the host bandwidth: occupancy doubles
+        assert_eq!(w.charge(1.0, 3.0), 1.0, "credit is in transfer seconds");
+        assert!((w.backlog_secs() - 2.0).abs() < 1e-12, "occupancy is rate-scaled");
+        // non-positive / non-finite rates are rejected
+        w.set_rate(0.0);
+        w.set_rate(f64::NAN);
+        assert_eq!(w.rate(), 2.0);
+    }
+
+    #[test]
+    fn carry_epoch_conserves_backlog() {
+        let w = BandwidthWindow::new();
+        w.charge(2.0, 1.0);
+        w.note_deferred(3);
+        let backlog_before = w.backlog_secs();
+        let carried = w.carry_epoch();
+        assert_eq!(carried, backlog_before, "reset must not discard backlog");
+        let snap = w.snapshot();
+        assert_eq!(snap.backlog_secs, backlog_before, "backlog carried, not dropped");
+        assert_eq!(snap.carried_backlog_secs, backlog_before);
+        assert_eq!(snap.admitted, 0, "counters restart per epoch");
+        assert_eq!(snap.deferred_low_confidence, 0);
+        // idempotent: a quiet second reset re-records the same carry
+        assert_eq!(w.carry_epoch(), backlog_before);
+    }
+
+    #[test]
+    fn edf_orders_by_deadline_under_saturation() {
+        // a saturated window (backlog past every deadline) must still
+        // issue in deadline order — EDF is about order, not optimism
+        let plan = vec![
+            fetch(2, 3.0, 0.9, 3),
+            fetch(0, 1.0, 0.9, 1),
+            fetch(1, 2.0, 0.9, 2),
+        ];
+        let adm = admit_edf(plan, 10.0, |_| 1.0);
+        let experts: Vec<usize> = adm.admit.iter().map(|f| f.key.expert).collect();
+        assert_eq!(experts, vec![0, 1, 2]);
+        assert_eq!(adm.deferred, 0, "confident fetches are never deferred");
+        assert!(adm.min_slack_secs.unwrap() < 0.0, "saturated: every slack negative");
+    }
+
+    #[test]
+    fn low_confidence_never_displaces_earlier_deadlines() {
+        // the low-agreement fetch has the LATER deadline; whatever the
+        // window state, it must sort after the certain, earlier one
+        let plan = vec![fetch(7, 5.0, 0.05, 3), fetch(1, 1.0, 0.95, 1)];
+        let adm = admit_edf(plan, 0.0, |_| 10.0);
+        assert_eq!(adm.admit[0].key.expert, 1);
+    }
+
+    #[test]
+    fn speculative_low_confidence_defers_only_when_late() {
+        // backlog already past its deadline AND speculative AND
+        // low-confidence -> deferred
+        let late = fetch(3, 1.0, 0.1, 3);
+        let adm = admit_edf(vec![late.clone()], 2.0, |_| 1.0);
+        assert!(adm.admit.is_empty());
+        assert_eq!(adm.deferred, 1);
+        // same fetch one layer ahead (just-in-time) always admits
+        let jit = Fetch { ahead: 1, ..late.clone() };
+        let adm = admit_edf(vec![jit], 2.0, |_| 1.0);
+        assert_eq!(adm.admit.len(), 1);
+        assert_eq!(adm.deferred, 0);
+        // and a confident speculative fetch admits even when late
+        let sure = Fetch { confidence: 0.9, ..late };
+        let adm = admit_edf(vec![sure], 2.0, |_| 1.0);
+        assert_eq!(adm.admit.len(), 1);
+    }
+
+    #[test]
+    fn equal_deadlines_break_toward_confidence_then_plan_order() {
+        let mut a = fetch(5, 1.0, 0.3, 1);
+        a.tier = Tier::Ram;
+        let b = fetch(6, 1.0, 0.9, 1); // Ssd
+        let c = fetch(4, 1.0, 0.9, 1); // Ssd, lower key
+        let adm = admit_edf(vec![a, b, c], 0.0, |_| 0.1);
+        let experts: Vec<usize> = adm.admit.iter().map(|f| f.key.expert).collect();
+        // confidence first (0.9 before 0.3); among equals, key order
+        assert_eq!(experts, vec![4, 6, 5]);
+        assert_eq!(adm.max_lead_layers, 1);
+    }
+}

@@ -34,6 +34,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
+use crate::experts::bandwidth::BandwidthWindow;
 use crate::experts::policy::EvictionPolicy;
 use crate::experts::ExpertKey;
 use crate::memory::{
@@ -66,11 +67,13 @@ pub struct CacheStats {
     pub modeled_transfer_secs: f64,
     /// the share of `modeled_transfer_secs` credited as hidden on the
     /// prefetch timeline.  Non-blocking fetches queue on one modeled
-    /// link (a busy-until clock): a fetch is credited only for the part
-    /// of its modeled time that fits after the link's backlog, so the
-    /// credit is bounded by the bandwidth window that actually existed
-    /// — a burst of prefetches issued in one instant is not all "free".
-    /// The critical path only pays the difference — see
+    /// link (the [`BandwidthWindow`], shareable across every device
+    /// cache of a box): a fetch is credited only for the part of its
+    /// modeled time that fits between the link's backlog and the
+    /// fetch's deadline, so the credit is bounded by the bandwidth
+    /// window that actually existed AND by the compute window before
+    /// need-time — a burst of prefetches issued in one instant is not
+    /// all "free".  The critical path only pays the difference — see
     /// [`crate::memory::exposed_transfer_secs`]
     pub overlapped_transfer_secs: f64,
     /// transfers that happened on the critical path (inference thread
@@ -158,17 +161,17 @@ pub struct ExpertCache {
     /// really sat in.  The ledger's Device tier mirrors `resident`
     /// exactly — `check_invariants` proves it
     ledger: ResidencyLedger,
-    /// anchor of the virtual prefetch timeline: wall seconds since this
-    /// instant are the compute window prefetch transfers can hide in
-    created: std::time::Instant,
-    /// busy-until clock of the modeled prefetch link (seconds on the
-    /// `created` axis).  Non-blocking fetches queue behind each other on
-    /// this single modeled link; only the part of a transfer that fits
-    /// in the window the link actually had is credited as overlapped,
-    /// so hidden-transfer credit can never exceed the modeled bandwidth
-    /// window (a burst of prefetches issued in one instant is not
-    /// "free" — see `CacheStats::overlapped_transfer_secs`).
-    prefetch_busy_until: f64,
+    /// the modeled prefetch link (a backlog queue in modeled seconds).
+    /// Non-blocking fetches queue behind each other on it; only the
+    /// part of a transfer that fits between the backlog and the fetch's
+    /// deadline is credited as overlapped, so hidden-transfer credit
+    /// can never exceed the modeled bandwidth window (a burst of
+    /// prefetches issued in one instant is not "free" — see
+    /// `CacheStats::overlapped_transfer_secs`).  Per-cache by default;
+    /// [`ExpertCache::share_window`] points every device cache of a box
+    /// at ONE window, making host-RAM bandwidth a shared resource
+    /// (`--host-bw`).
+    window: Arc<BandwidthWindow>,
     /// pin **counts** per expert: under the worker pool several
     /// invocations can pin the same expert concurrently, and the first
     /// unpin must not strip protection from the rest.  Interior
@@ -216,8 +219,7 @@ impl ExpertCache {
             policy,
             resident: HashMap::new(),
             ledger,
-            created: std::time::Instant::now(),
-            prefetch_busy_until: 0.0,
+            window: Arc::new(BandwidthWindow::new()),
             pinned: Mutex::new(HashMap::new()),
             store: None,
             trace_pid: trace::device_pid(0),
@@ -304,9 +306,37 @@ impl ExpertCache {
             binding.store.reset_stats();
         }
         self.pool.reset_peak();
-        // restart the virtual prefetch link: a measured run must not
-        // inherit backlog (or spare window) from warmup traffic
-        self.prefetch_busy_until = self.created.elapsed().as_secs_f64();
+        self.reset_transfer_clock();
+    }
+
+    /// Start a new epoch on the modeled prefetch link, **carrying** any
+    /// scheduled backlog forward explicitly (it stays queued and is
+    /// recorded as carried — [`BandwidthWindow::carry_epoch`]) instead
+    /// of silently discarding it: work the warmup epoch scheduled but
+    /// the link had not absorbed is still in flight when the measured
+    /// epoch opens, and dropping it would both flatter the measured
+    /// run's credit and violate conservation of scheduled seconds.
+    /// Returns the carried backlog.
+    pub fn reset_transfer_clock(&mut self) -> f64 {
+        self.window.carry_epoch()
+    }
+
+    /// The modeled prefetch link this cache charges non-blocking
+    /// staging into.
+    pub fn bandwidth_window(&self) -> Arc<BandwidthWindow> {
+        self.window.clone()
+    }
+
+    /// Point this cache at a shared [`BandwidthWindow`] (all devices of
+    /// one box draw host-RAM bandwidth from one window).  Call before
+    /// traffic: backlog already queued on the old window stays there.
+    pub fn share_window(&mut self, window: Arc<BandwidthWindow>) {
+        self.window = window;
+    }
+
+    /// Modeled transfer seconds currently queued on the prefetch link.
+    pub fn prefetch_backlog_secs(&self) -> f64 {
+        self.window.backlog_secs()
     }
 
     pub fn budget(&self) -> usize {
@@ -395,6 +425,27 @@ impl ExpertCache {
     where
         F: FnOnce() -> Result<[DeviceBuffer; 4]>,
     {
+        self.try_ensure_by(key, real_bytes, blocking, None, fetch)
+    }
+
+    /// [`ExpertCache::try_ensure`] with an explicit staging deadline for
+    /// non-blocking fetches: the modeled seconds until this expert's
+    /// layer computes ([`crate::memory::fetch_deadline_secs`]).  The
+    /// overlap credit is bounded by that deadline — a deep promotion
+    /// staged with more lead earns more hideable window.  `None` (and
+    /// every `blocking` call) falls back to the transfer's own length,
+    /// the one-layer-ahead model's implicit assumption.
+    pub fn try_ensure_by<F>(
+        &mut self,
+        key: ExpertKey,
+        real_bytes: usize,
+        blocking: bool,
+        deadline_secs: Option<f64>,
+        fetch: F,
+    ) -> Result<EnsureOutcome>
+    where
+        F: FnOnce() -> Result<[DeviceBuffer; 4]>,
+    {
         if let Some(r) = self.resident.get(&key) {
             self.stats.hits += 1;
             self.policy.on_access(key);
@@ -477,7 +528,7 @@ impl ExpertCache {
         // charge is tier-aware: the ledger knows whether this expert was
         // one PCIe hop away (RAM) or SSD-deep (NVMe + PCIe, ~9x), and
         // those ladder seconds land on the SAME modeled timeline the
-        // busy-until prefetch clock absorbs below — one timeline, no
+        // shared bandwidth window absorbs below — one timeline, no
         // parallel promote accounting
         let secs = self.ledger.promote(key, sim_bytes);
         self.stats.modeled_transfer_secs += secs;
@@ -500,17 +551,17 @@ impl ExpertCache {
             );
         }
         if !blocking {
-            // virtual prefetch timeline: the transfer starts when the
-            // single modeled link frees up, and only the share that
-            // extends past the link's backlog is hideable.  A burst of
-            // prefetches issued in one instant gets the first transfer
-            // fully credited and each successor credited less by the
-            // queueing delay in front of it — the credit is bounded by
-            // the modeled bandwidth window, not by optimism.
-            let now = self.created.elapsed().as_secs_f64();
-            let begin = now.max(self.prefetch_busy_until);
-            self.prefetch_busy_until = begin + secs;
-            let credit = (secs - (begin - now)).max(0.0);
+            // virtual prefetch timeline: the transfer queues on the
+            // (possibly shared) modeled link, and only the share that
+            // fits between the link's backlog and the fetch's deadline
+            // is hideable.  A burst of prefetches issued in one instant
+            // gets the first transfer fully credited and each successor
+            // credited less by the queueing delay in front of it — and
+            // a deep promotion staged one layer ahead cannot claim more
+            // hiding than one layer's window offers.  The credit is
+            // bounded by the modeled bandwidth window, not by optimism.
+            let deadline = deadline_secs.unwrap_or(secs);
+            let credit = self.window.charge(secs, deadline);
             self.stats.overlapped_transfer_secs += credit;
         }
         Ok(EnsureOutcome::Resident { expert: arc, hit: false, transfer_secs: secs })
@@ -708,11 +759,10 @@ mod tests {
 
     #[test]
     fn overlap_credit_bounded_by_virtual_prefetch_timeline() {
-        // Two back-to-back non-blocking fetches whose modeled time (ms
-        // at paper scale) dwarfs the real wall time between them: the
-        // first transfer is (almost) fully credited, the second queues
-        // behind it on the modeled link and earns (almost) no credit —
-        // so total overlapped credit stays near ONE transfer, not two.
+        // Two back-to-back non-blocking fetches with no drain between
+        // them: the first transfer is fully credited, the second queues
+        // behind it on the modeled link and earns no credit — so total
+        // overlapped credit stays at ONE transfer, not two.
         let real = 66_048usize;
         let mut cache = ExpertCache::new(
             1 << 40,
@@ -733,16 +783,66 @@ mod tests {
         cache.ensure(ExpertKey::new(0, 1), real, false, fetch).unwrap();
         let stats = cache.stats();
         assert!((stats.modeled_transfer_secs - 2.0 * secs_one).abs() < 1e-9);
-        // the second fetch's credit is at most the wall time that passed
-        // between the two calls (microseconds) — far below a full secs_one
+        // deterministic on the modeled link: exactly one transfer of
+        // credit (first full, second fully queued)
         assert!(
-            stats.overlapped_transfer_secs < 1.5 * secs_one,
-            "burst credit {} must be bounded near one transfer ({secs_one})",
+            (stats.overlapped_transfer_secs - secs_one).abs() < 1e-12,
+            "burst credit {} must be exactly one transfer ({secs_one})",
             stats.overlapped_transfer_secs
         );
         assert!(
             stats.exposed_transfer_secs() > 0.4 * secs_one,
             "the queued share must surface as exposed transfer"
+        );
+        assert!(
+            (cache.prefetch_backlog_secs() - 2.0 * secs_one).abs() < 1e-9,
+            "both transfers are queued on the link"
+        );
+    }
+
+    #[test]
+    fn reset_transfer_clock_conserves_scheduled_backlog() {
+        // the drain-or-carry fix: a stats reset between trace epochs
+        // must not silently discard backlog the warmup epoch scheduled
+        // — the queued seconds carry into the new epoch and are
+        // recorded as carried (conservation: backlog_before == carried
+        // + drained, drained == 0 across a reset).
+        let real = 66_048usize;
+        let mut cache = ExpertCache::new(
+            1 << 40,
+            CostModel::paper_scale(real),
+            make_policy("fifo").unwrap(),
+        );
+        let buf = || {
+            crate::runtime::DeviceBuffer(
+                crate::runtime::Literal::from_f32s(&[1], vec![0.0]).unwrap(),
+            )
+        };
+        let fetch = || Ok([buf(), buf(), buf(), buf()]);
+        cache.ensure(ExpertKey::new(0, 0), real, false, fetch).unwrap();
+        cache.ensure(ExpertKey::new(0, 1), real, false, fetch).unwrap();
+        let backlog_before = cache.prefetch_backlog_secs();
+        assert!(backlog_before > 1e-4, "warmup must have scheduled backlog");
+        cache.reset_stats();
+        let snap = cache.bandwidth_window().snapshot();
+        assert!(
+            (snap.backlog_secs - backlog_before).abs() < 1e-12,
+            "backlog must survive the epoch reset (was {backlog_before}, now {})",
+            snap.backlog_secs
+        );
+        assert!(
+            (snap.carried_backlog_secs - backlog_before).abs() < 1e-12,
+            "the carried amount must be recorded explicitly"
+        );
+        assert_eq!(snap.admitted, 0, "per-epoch counters restart");
+        // the carried backlog still queues ahead of new-epoch fetches:
+        // a fetch whose deadline is below the carried backlog earns no
+        // credit in the fresh epoch
+        cache.ensure(ExpertKey::new(0, 2), real, false, fetch).unwrap();
+        assert_eq!(
+            cache.stats().overlapped_transfer_secs,
+            0.0,
+            "carried backlog must still bound new-epoch credit"
         );
     }
 

@@ -13,18 +13,24 @@
 //! for the lock discipline); [`plan_prefetch`] /
 //! [`plan_prefetch_union`] / [`plan_prefetch_layer`] turn hash-table
 //! predictions into ordered fetch plans (per request / per
-//! cross-request batch / per MoE layer for the layer-ahead warmer,
-//! deepest-tier-first so SSD promotions start earliest).
+//! cross-request batch / per MoE layer for the depth-window warmer,
+//! deepest-tier-first so SSD promotions start earliest, each fetch
+//! carrying a deadline, a tier-derived lead and a prediction
+//! confidence); [`BandwidthWindow`] / [`admit_edf`] schedule those
+//! plans earliest-deadline-first into one budgeted, shareable modeled
+//! bandwidth window (the cross-layer prefetch scheduler).
 
+pub mod bandwidth;
 pub mod cache;
 pub mod policy;
 pub mod prefetch;
 pub mod shared;
 
+pub use bandwidth::{admit_edf, Admission, BandwidthWindow, ScheduledFetch, WindowSnapshot};
 pub use cache::{CacheStats, EnsureOutcome, ExpertCache, ResidentExpert, StoreBinding};
 pub use prefetch::{
-    plan_prefetch, plan_prefetch_layer, plan_prefetch_union, predicted_expert_counts,
-    PlannedFetch,
+    layer_confidence, plan_prefetch, plan_prefetch_layer, plan_prefetch_union,
+    predicted_expert_counts, PlannedFetch,
 };
 pub use policy::{make_policy, EvictionPolicy};
 pub use shared::SharedExpertCache;

@@ -19,6 +19,15 @@
 //! token counts are summed across requests, so the heat ordering
 //! reflects the batch, not any single sentence.
 //!
+//! Every planned fetch also carries the cross-layer scheduling
+//! metadata the bandwidth scheduler ([`super::admit_edf`]) consumes: a
+//! **deadline** (modeled start of its layer's compute,
+//! [`crate::memory::fetch_deadline_secs`]), a tier-derived **lead**
+//! ([`crate::memory::lead_layers`]: SSD-deep experts want 2–3 layers
+//! of head start, RAM hops 1) and the layer's hash-prediction
+//! **confidence** (mean top-rank router agreement over the masked
+//! tokens — low-agreement layers don't get speculative bandwidth).
+//!
 //! ```
 //! use sida_moe::coordinator::HashTable;
 //! use sida_moe::experts::{make_policy, plan_prefetch, ExpertCache};
@@ -27,7 +36,7 @@
 //! // two tokens, one MoE layer, k = 1: tokens predicted on experts 3 and 5
 //! let table = HashTable::new(0, 2, 1, 1, vec![3, 5], vec![1.0, 1.0], 0.0).unwrap();
 //! let cache = ExpertCache::new(1 << 30, CostModel::physical(1 << 20), make_policy("fifo").unwrap());
-//! let plan = plan_prefetch(&table, &[1], 1, &[1.0, 1.0], &cache);
+//! let plan = plan_prefetch(&table, &[1], 1, &[1.0, 1.0], &cache, 3);
 //! assert_eq!(plan.len(), 2); // both experts missing from the cold cache
 //! ```
 
@@ -37,7 +46,7 @@ use crate::coordinator::hash_table::HashTable;
 use crate::experts::{ExpertCache, ExpertKey};
 use crate::memory::Tier;
 
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PlannedFetch {
     pub key: ExpertKey,
     /// tokens routed to this expert (priority weight)
@@ -47,33 +56,99 @@ pub struct PlannedFetch {
     /// RAM-resident one, so starting them earliest maximizes what the
     /// prefetch timeline can hide)
     pub tier: Tier,
+    /// how many layers before its layer's compute this plan stages the
+    /// fetch (1 = just-in-time, the one-layer-ahead model)
+    pub layers_ahead: usize,
+    /// tier-derived staging lead ([`crate::memory::lead_layers`]): how
+    /// many layers of head start this tier's ladder seconds want.  The
+    /// depth-window warmer stages a fetch early only within its lead
+    pub lead_layers: usize,
+    /// modeled seconds until this fetch's layer computes, measured from
+    /// issue ([`crate::memory::fetch_deadline_secs`] at `layers_ahead`)
+    /// — the EDF key, and the bound on the fetch's overlap credit
+    pub deadline_secs: f64,
+    /// per-layer router-agreement estimate from the hash table (mean
+    /// top-rank alpha over masked tokens, `[0, 1]`); low-agreement
+    /// predictions don't burn bandwidth that certain ones need
+    pub confidence: f64,
 }
 
-/// Compute the ordered fetch plan for one request.
+impl crate::experts::bandwidth::ScheduledFetch for PlannedFetch {
+    fn key(&self) -> ExpertKey {
+        self.key
+    }
+    fn tier(&self) -> Tier {
+        self.tier
+    }
+    fn token_count(&self) -> usize {
+        self.token_count
+    }
+    fn deadline_secs(&self) -> f64 {
+        self.deadline_secs
+    }
+    fn confidence(&self) -> f64 {
+        self.confidence
+    }
+    fn layers_ahead(&self) -> usize {
+        self.layers_ahead
+    }
+}
+
+/// Compute the ordered fetch plan for one request.  `max_lead` clamps
+/// the tier-derived staging lead (`--prefetch-depth`).
 pub fn plan_prefetch(
     table: &HashTable,
     moe_blocks: &[usize],
     k_used: usize,
     mask: &[f32],
     cache: &ExpertCache,
+    max_lead: usize,
 ) -> Vec<PlannedFetch> {
-    plan_prefetch_union(&[(table, mask)], moe_blocks, k_used, cache)
+    plan_prefetch_union(&[(table, mask)], moe_blocks, k_used, cache, max_lead)
 }
 
 /// Compute the ordered fetch plan for a cross-request batch: the union
 /// of every `(table, mask)` pair's predicted experts, each at most once,
-/// with token counts summed across requests.
+/// with token counts summed across requests.  Planned **before compute
+/// begins**, so layer `j` is `j + 1` layer windows away — that is each
+/// fetch's deadline.
 pub fn plan_prefetch_union(
     requests: &[(&HashTable, &[f32])],
     moe_blocks: &[usize],
     k_used: usize,
     cache: &ExpertCache,
+    max_lead: usize,
 ) -> Vec<PlannedFetch> {
     let mut plan = Vec::new();
     for (layer, &block) in moe_blocks.iter().enumerate() {
-        plan.extend(plan_prefetch_layer(requests, block, layer, k_used, cache));
+        plan.extend(plan_prefetch_layer(
+            requests, block, layer, k_used, layer + 1, max_lead, cache,
+        ));
     }
     plan
+}
+
+/// Per-layer hash-prediction confidence: the mean top-rank router
+/// agreement (`alpha`) over every masked-in token of the batch, in
+/// `[0, 1]`.  An un-predicted layer (no live tokens) reports `1.0` —
+/// there is nothing speculative to defer.
+pub fn layer_confidence(requests: &[(&HashTable, &[f32])], layer: usize) -> f64 {
+    let mut sum = 0.0f64;
+    let mut n = 0usize;
+    for &(table, mask) in requests {
+        for t in 0..table.seq_len {
+            if mask.get(t).copied().unwrap_or(0.0) == 0.0 {
+                continue;
+            }
+            sum += table.alpha_at(t, layer, 0) as f64;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        1.0
+    } else {
+        sum / n as f64
+    }
 }
 
 /// Token counts per predicted expert at one MoE layer, summed over
@@ -101,26 +176,58 @@ pub fn predicted_expert_counts(
 }
 
 /// Fetch plan for **one MoE layer** of a (batch of) request(s) — the
-/// planning unit of the layer-ahead warmer, which stages layer `j+1`'s
-/// union while the inference thread computes layer `j`.  Missing
+/// planning unit of the depth-window warmer, which stages layer `j+a`'s
+/// union while the inference thread computes layer `j` (`a =
+/// layers_ahead`, up to each fetch's tier-derived lead).  Missing
 /// experts only, ordered **deepest tier first** (an SSD-resident
 /// expert's promotion costs the NVMe + PCIe ladder, so it must start
 /// earliest to hide), then hottest (most routed tokens across the
-/// batch) first — hash-prediction value is tier-dependent.
+/// batch) first — hash-prediction value is tier-dependent.  Every
+/// fetch carries its deadline (`layers_ahead` layer windows), its lead
+/// (clamped at `max_lead`, the `--prefetch-depth` knob) and the
+/// layer's prediction confidence for EDF admission
+/// ([`super::admit_edf`]).
 pub fn plan_prefetch_layer(
     requests: &[(&HashTable, &[f32])],
     block: usize,
     layer: usize,
     k_used: usize,
+    layers_ahead: usize,
+    max_lead: usize,
     cache: &ExpertCache,
 ) -> Vec<PlannedFetch> {
     let counts = predicted_expert_counts(requests, layer, k_used);
+    let experts_in_layer = counts.len();
+    let confidence = layer_confidence(requests, layer);
+    let costs = cache.cost_model().tier_costs();
+    let sim_expert = cache.cost_model().sim_expert_bytes;
+    let deadline_secs = crate::memory::fetch_deadline_secs(
+        &costs,
+        sim_expert,
+        experts_in_layer,
+        layers_ahead.max(1),
+    );
     let mut layer_plan: Vec<PlannedFetch> = counts
         .into_iter()
         .filter(|(expert, _)| !cache.contains(&ExpertKey::new(block, *expert)))
         .map(|(expert, token_count)| {
             let key = ExpertKey::new(block, expert);
-            PlannedFetch { key, token_count, tier: cache.tier_of(&key) }
+            let tier = cache.tier_of(&key);
+            PlannedFetch {
+                key,
+                token_count,
+                tier,
+                layers_ahead: layers_ahead.max(1),
+                lead_layers: crate::memory::lead_layers(
+                    &costs,
+                    tier,
+                    sim_expert,
+                    experts_in_layer,
+                    max_lead,
+                ),
+                deadline_secs,
+                confidence,
+            }
         })
         .collect();
     // within a layer: deepest tier first, then hottest experts first
@@ -159,7 +266,7 @@ mod tests {
     fn orders_by_layer_then_heat() {
         let cache = empty_cache();
         let mask = vec![1.0; 4];
-        let plan = plan_prefetch(&table(), &[1, 3], 1, &mask, &cache);
+        let plan = plan_prefetch(&table(), &[1, 3], 1, &mask, &cache, 3);
         // layer 0 (block 1) first: expert 0 (2 tokens) before 1 and 2
         assert_eq!(plan[0].key, ExpertKey::new(1, 0));
         assert_eq!(plan[0].token_count, 2);
@@ -178,9 +285,9 @@ mod tests {
         // invariant instead: a fresh cache contains nothing, so compare
         // plan lengths with/without a mask that removes expert 0's tokens
         let mask_all = vec![1.0; 4];
-        let plan_all = plan_prefetch(&table(), &[1, 3], 1, &mask_all, &cache);
+        let plan_all = plan_prefetch(&table(), &[1, 3], 1, &mask_all, &cache, 3);
         let mask_no01 = vec![0.0, 0.0, 1.0, 1.0];
-        let plan_masked = plan_prefetch(&table(), &[1, 3], 1, &mask_no01, &cache);
+        let plan_masked = plan_prefetch(&table(), &[1, 3], 1, &mask_no01, &cache, 3);
         assert!(plan_masked.len() < plan_all.len());
         let _ = &mut cache;
     }
@@ -189,15 +296,15 @@ mod tests {
     fn k_used_expands_the_plan() {
         let cache = empty_cache();
         let mask = vec![1.0; 4];
-        let p1 = plan_prefetch(&table(), &[1, 3], 1, &mask, &cache);
-        let p2 = plan_prefetch(&table(), &[1, 3], 2, &mask, &cache);
+        let p1 = plan_prefetch(&table(), &[1, 3], 1, &mask, &cache, 3);
+        let p2 = plan_prefetch(&table(), &[1, 3], 2, &mask, &cache, 3);
         assert!(p2.len() >= p1.len());
     }
 
     #[test]
     fn empty_mask_empty_plan() {
         let cache = empty_cache();
-        let plan = plan_prefetch(&table(), &[1, 3], 2, &[0.0; 4], &cache);
+        let plan = plan_prefetch(&table(), &[1, 3], 2, &[0.0; 4], &cache, 3);
         assert!(plan.is_empty());
     }
 
@@ -217,7 +324,7 @@ mod tests {
         cache.invalidate(&hot); // demote: hot is now RAM-resident
         assert_eq!(cache.tier_of(&hot), crate::memory::Tier::Ram);
         let mask = vec![1.0; 4];
-        let plan = plan_prefetch_layer(&[(&table(), &mask[..])], 1, 0, 1, &cache);
+        let plan = plan_prefetch_layer(&[(&table(), &mask[..])], 1, 0, 1, 1, 3, &cache);
         assert_eq!(plan.len(), 3);
         assert_eq!(plan[0].key, ExpertKey::new(1, 1), "SSD-deep first");
         assert_eq!(plan[1].key, ExpertKey::new(1, 2));
@@ -231,11 +338,11 @@ mod tests {
         let cache = empty_cache();
         let t = table();
         let mask = vec![1.0; 4];
-        let single = plan_prefetch(&t, &[1, 3], 1, &mask, &cache);
+        let single = plan_prefetch(&t, &[1, 3], 1, &mask, &cache, 3);
         // the same table twice: identical expert set (each once), but
         // every token count doubled
         let union =
-            plan_prefetch_union(&[(&t, &mask[..]), (&t, &mask[..])], &[1, 3], 1, &cache);
+            plan_prefetch_union(&[(&t, &mask[..]), (&t, &mask[..])], &[1, 3], 1, &cache, 3);
         assert_eq!(union.len(), single.len(), "union must dedupe experts");
         for (u, s) in union.iter().zip(single.iter()) {
             assert_eq!(u.key, s.key);
@@ -251,12 +358,48 @@ mod tests {
         // last two tokens — the union must equal the full-mask plan set
         let m1 = vec![1.0, 1.0, 0.0, 0.0];
         let m2 = vec![0.0, 0.0, 1.0, 1.0];
-        let full = plan_prefetch(&t, &[1, 3], 1, &[1.0; 4], &cache);
-        let union = plan_prefetch_union(&[(&t, &m1[..]), (&t, &m2[..])], &[1, 3], 1, &cache);
+        let full = plan_prefetch(&t, &[1, 3], 1, &[1.0; 4], &cache, 3);
+        let union =
+            plan_prefetch_union(&[(&t, &m1[..]), (&t, &m2[..])], &[1, 3], 1, &cache, 3);
         let mut fk: Vec<_> = full.iter().map(|p| p.key).collect();
         let mut uk: Vec<_> = union.iter().map(|p| p.key).collect();
         fk.sort();
         uk.sort();
         assert_eq!(fk, uk);
+    }
+
+    #[test]
+    fn plans_carry_scheduling_metadata() {
+        let cache = empty_cache();
+        let mask = vec![1.0; 4];
+        let plan = plan_prefetch(&table(), &[1, 3], 1, &mask, &cache, 3);
+        let costs = cache.cost_model().tier_costs();
+        let sim = cache.cost_model().sim_expert_bytes;
+        for p in &plan {
+            // the test table's alpha is uniformly 0.5
+            assert!((p.confidence - 0.5).abs() < 1e-6);
+            // cold cache: everything is SSD-deep, lead in [1, max_lead]
+            assert_eq!(p.tier, crate::memory::Tier::Ssd);
+            assert!((1..=3).contains(&p.lead_layers));
+        }
+        // planned before compute: layer 0 is one window away, layer 1 two
+        let l0: Vec<_> = plan.iter().filter(|p| p.key.block == 1).collect();
+        let l1: Vec<_> = plan.iter().filter(|p| p.key.block == 3).collect();
+        assert!(l0.iter().all(|p| p.layers_ahead == 1));
+        assert!(l1.iter().all(|p| p.layers_ahead == 2));
+        // deadlines are layer windows: layer 0 has 3 predicted experts
+        let w0 = crate::memory::layer_window_secs(&costs, sim, 3);
+        assert!((l0[0].deadline_secs - w0).abs() < 1e-12);
+        assert!(l1[0].deadline_secs > l0[0].deadline_secs);
+    }
+
+    #[test]
+    fn confidence_is_masked_mean_alpha() {
+        let t = table();
+        let full = vec![1.0f32; 4];
+        assert!((layer_confidence(&[(&t, &full[..])], 0) - 0.5).abs() < 1e-9);
+        // an empty mask has nothing speculative to defer
+        let none = vec![0.0f32; 4];
+        assert_eq!(layer_confidence(&[(&t, &none[..])], 0), 1.0);
     }
 }

@@ -143,7 +143,26 @@ impl SharedExpertCache {
     where
         F: Fn() -> Result<[DeviceBuffer; 4]>,
     {
-        self.ensure_impl(key, real_bytes, blocking, false, fetch)
+        self.ensure_impl(key, real_bytes, blocking, false, None, fetch)
+    }
+
+    /// Non-blocking staging with an explicit scheduling deadline (the
+    /// modeled seconds until the expert's layer computes) — the
+    /// depth-window warmer's entry point.  The overlap credit on the
+    /// shared [`crate::experts::BandwidthWindow`] is bounded by this
+    /// deadline, so a fetch staged with more lead earns more hideable
+    /// window (see [`ExpertCache::try_ensure_by`]).
+    pub fn ensure_deadline<F>(
+        &self,
+        key: ExpertKey,
+        real_bytes: usize,
+        deadline_secs: f64,
+        fetch: F,
+    ) -> Result<(Arc<ResidentExpert>, bool, f64)>
+    where
+        F: Fn() -> Result<[DeviceBuffer; 4]>,
+    {
+        self.ensure_impl(key, real_bytes, false, false, Some(deadline_secs), fetch)
     }
 
     /// Ensure residency and pin in one atomic step (pin registered
@@ -160,7 +179,7 @@ impl SharedExpertCache {
     where
         F: Fn() -> Result<[DeviceBuffer; 4]>,
     {
-        self.ensure_impl(key, real_bytes, blocking, true, fetch)
+        self.ensure_impl(key, real_bytes, blocking, true, None, fetch)
     }
 
     fn ensure_impl<F>(
@@ -169,6 +188,7 @@ impl SharedExpertCache {
         real_bytes: usize,
         blocking: bool,
         pin: bool,
+        deadline_secs: Option<f64>,
         fetch: F,
     ) -> Result<(Arc<ResidentExpert>, bool, f64)>
     where
@@ -204,7 +224,7 @@ impl SharedExpertCache {
                 let mut guard = self.write_inner();
                 let deferred = std::mem::take(&mut *lock_tolerant(&self.touched));
                 guard.note_accesses(&deferred);
-                match guard.try_ensure(key, real_bytes, blocking, || fetch())? {
+                match guard.try_ensure_by(key, real_bytes, blocking, deadline_secs, || fetch())? {
                     EnsureOutcome::Resident { expert, hit, transfer_secs } => {
                         if pin {
                             guard.pin(key);
@@ -280,6 +300,24 @@ impl SharedExpertCache {
         guard.reset_stats();
         self.read_hits.store(0, Ordering::Relaxed);
         lock_tolerant(&self.touched).clear();
+    }
+
+    /// The modeled prefetch link this cache charges non-blocking
+    /// staging into (shared across every device cache of a box in the
+    /// cluster path).
+    pub fn bandwidth_window(&self) -> Arc<crate::experts::BandwidthWindow> {
+        self.read_inner().bandwidth_window()
+    }
+
+    /// Point this cache at a shared bandwidth window (construction
+    /// time, before traffic — see [`ExpertCache::share_window`]).
+    pub fn share_window(&self, window: Arc<crate::experts::BandwidthWindow>) {
+        self.write_inner().share_window(window);
+    }
+
+    /// Modeled transfer seconds currently queued on the prefetch link.
+    pub fn prefetch_backlog_secs(&self) -> f64 {
+        self.read_inner().prefetch_backlog_secs()
     }
 
     pub fn check_invariants(&self) -> Result<()> {

@@ -81,6 +81,8 @@ fn serve_cli() -> Cli {
         .opt("ssd-budget", "on-disk store budget (GB, 0 = unbounded)", "0")
         .opt("k-used", "hash experts per token (0 = paper default)", "0")
         .opt("batch", "requests per forward pass (1 = paper batch-1; >1 batches cross-request)", "1")
+        .opt("prefetch-depth", "MoE layers the warmer may stage ahead (1 = baseline)", "3")
+        .opt("host-bw", "modeled host staging bandwidth (bytes/s, 0 = reference PCIe)", "0")
         .opt("pool", "worker threads for expert execution (0 = auto, 1 = sequential)", "0")
         .opt("devices", "modeled devices for expert parallelism (budget is per device)", "1")
         .opt("replicate-top", "hottest experts per MoE layer replicated across devices", "1")
@@ -192,6 +194,8 @@ fn cmd_serve(tail: &[String]) -> Result<()> {
                 ssd_budget_bytes: cfg.ssd_budget_bytes(),
                 real_sleep: cfg.real_sleep,
                 prefetch: cfg.prefetch,
+                prefetch_depth: cfg.prefetch_depth,
+                host_bw: cfg.host_bw,
                 queue_depth: 8,
                 max_batch: cfg.max_batch,
                 pool_threads: cfg.pool_threads,
@@ -431,6 +435,8 @@ fn cmd_server(tail: &[String]) -> Result<()> {
         .opt("store-dir", "on-disk expert store dir (reopen to serve restart-warm)", "")
         .opt("ssd-budget", "on-disk store budget (GB, 0 = unbounded)", "0")
         .opt("batch", "max requests coalesced per forward pass", "8")
+        .opt("prefetch-depth", "MoE layers the warmer may stage ahead (1 = baseline)", "3")
+        .opt("host-bw", "modeled host staging bandwidth (bytes/s, 0 = reference PCIe)", "0")
         .opt("pool", "worker threads for expert execution (0 = auto)", "0")
         .opt("batch-delay-ms", "max time a request waits for its batch to fill", "5")
         .opt("queue-cap", "admission queue bound (overflow is rejected)", "256")
@@ -464,6 +470,8 @@ fn cmd_server(tail: &[String]) -> Result<()> {
             capacity: args.get_usize("queue-cap", 256).max(1),
             ..Default::default()
         },
+        prefetch_depth: args.get_usize("prefetch-depth", 3).max(1),
+        host_bw: args.get_f64("host-bw", 0.0).max(0.0),
         pool_threads: args.get_usize("pool", 0),
         devices: args.get_usize("devices", 1).max(1),
         replicate_top: args.get_usize("replicate-top", 1),

@@ -110,6 +110,60 @@ pub fn exposed_transfer_secs(modeled: f64, overlapped: f64) -> f64 {
     (modeled - overlapped).max(0.0)
 }
 
+/// Modeled staging window of ONE MoE layer: the time the prefetch link
+/// has per layer of compute, estimated as the layer's predicted expert
+/// set moved over the RAM -> device hop (`experts_in_layer` distinct
+/// predicted experts of `sim_expert_bytes` each).  The deadline and
+/// lead arithmetic of the cross-layer prefetch scheduler
+/// ([`crate::experts::BandwidthWindow`]) is denominated in these
+/// windows, so it is cost-model-derived and deterministic — no wall
+/// clock in the schedule.
+pub fn layer_window_secs(
+    costs: &crate::memory::TierCosts,
+    sim_expert_bytes: usize,
+    experts_in_layer: usize,
+) -> f64 {
+    experts_in_layer.max(1) as f64
+        * costs.promote_secs(crate::memory::Tier::Ram, sim_expert_bytes)
+}
+
+/// Tier-derived staging lead: how many layers ahead of compute a fetch
+/// from `tier` must start for its ladder seconds to fit inside the
+/// layer windows before its deadline —
+/// `ceil(promote_secs(tier) / layer_window)`, clamped to
+/// `[1, max_lead]`.  Device-resident experts need no staging (lead 0).
+/// With default [`crate::memory::TierCosts`] an SSD-deep expert lands
+/// at 2–3 layers of lead for typical per-layer expert counts, a
+/// RAM-resident hop at 1 — exactly the ladder ratio (~9x) folded into
+/// layer units.
+pub fn lead_layers(
+    costs: &crate::memory::TierCosts,
+    tier: crate::memory::Tier,
+    sim_expert_bytes: usize,
+    experts_in_layer: usize,
+    max_lead: usize,
+) -> usize {
+    if tier == crate::memory::Tier::Device {
+        return 0;
+    }
+    let window = layer_window_secs(costs, sim_expert_bytes, experts_in_layer);
+    let need = costs.promote_secs(tier, sim_expert_bytes);
+    let lead = if window > 0.0 { (need / window).ceil() as usize } else { 1 };
+    lead.clamp(1, max_lead.max(1))
+}
+
+/// Deadline of a fetch issued `layers_ahead` layers before its layer's
+/// compute begins: that many layer windows from now, on the modeled
+/// timeline the bandwidth window charges against.
+pub fn fetch_deadline_secs(
+    costs: &crate::memory::TierCosts,
+    sim_expert_bytes: usize,
+    experts_in_layer: usize,
+    layers_ahead: usize,
+) -> f64 {
+    layers_ahead as f64 * layer_window_secs(costs, sim_expert_bytes, experts_in_layer)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,5 +213,41 @@ mod tests {
         assert_eq!(exposed_transfer_secs(1.0, 0.25), 0.75);
         assert_eq!(exposed_transfer_secs(1.0, 1.0), 0.0);
         assert_eq!(exposed_transfer_secs(1.0, 2.0), 0.0);
+    }
+
+    #[test]
+    fn lead_layers_follow_the_tier_ladder() {
+        use crate::memory::Tier;
+        let cm = CostModel::paper_scale(66_048);
+        let tc = cm.tier_costs();
+        let b = cm.sim_expert_bytes;
+        // device-resident: nothing to stage
+        assert_eq!(lead_layers(&tc, Tier::Device, b, 4, 3), 0);
+        // a RAM hop always fits inside one layer window
+        for experts in [1, 2, 4, 8] {
+            assert_eq!(lead_layers(&tc, Tier::Ram, b, experts, 3), 1);
+        }
+        // SSD-deep promotions (~9x the RAM hop) need 2-3 layers of lead
+        // at typical per-layer expert counts, saturating the clamp when
+        // layers are narrow
+        for experts in [4, 8] {
+            let lead = lead_layers(&tc, Tier::Ssd, b, experts, 3);
+            assert!((2..=3).contains(&lead), "experts={experts} lead={lead}");
+        }
+        assert_eq!(lead_layers(&tc, Tier::Ssd, b, 1, 3), 3, "clamped at max_lead");
+        // lead never exceeds the knob, never drops below 1 for off-device
+        assert_eq!(lead_layers(&tc, Tier::Ssd, b, 4, 1), 1);
+    }
+
+    #[test]
+    fn deadlines_scale_with_layers_ahead() {
+        let cm = CostModel::paper_scale(66_048);
+        let tc = cm.tier_costs();
+        let b = cm.sim_expert_bytes;
+        let w = layer_window_secs(&tc, b, 4);
+        assert!((fetch_deadline_secs(&tc, b, 4, 1) - w).abs() < 1e-15);
+        assert!((fetch_deadline_secs(&tc, b, 4, 3) - 3.0 * w).abs() < 1e-12);
+        // the window is the layer's expert set over the PCIe hop
+        assert!((w - 4.0 * cm.transfer_secs(b)).abs() < 1e-12);
     }
 }

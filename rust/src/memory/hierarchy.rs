@@ -21,7 +21,7 @@
 //! RAM-resident expert pays one PCIe hop (numerically the cache's
 //! historical H2D cost), an SSD-deep expert pays NVMe + PCIe (~9x).
 //! Those seconds feed the cache's one modeled-transfer timeline (the
-//! busy-until prefetch clock absorbs them); the ledger only *attributes*
+//! shared bandwidth window absorbs them); the ledger only *attributes*
 //! the same seconds per source hop ([`HierarchyStats`]) — there is no
 //! parallel promote clock to drift.
 //!

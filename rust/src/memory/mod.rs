@@ -12,7 +12,9 @@ pub mod hierarchy;
 pub mod pool;
 pub mod store;
 
-pub use cost::{exposed_transfer_secs, CostModel};
+pub use cost::{
+    exposed_transfer_secs, fetch_deadline_secs, layer_window_secs, lead_layers, CostModel,
+};
 pub use hierarchy::{HierarchyStats, ResidencyLedger, Tier, TierCosts, DEFAULT_RAM_BUDGET};
 pub use pool::{DevicePool, ReserveOutcome};
 pub use store::{

@@ -63,6 +63,22 @@ pub struct ServeStats {
     pub interactive_offered: u64,
     /// served interactive requests that completed within their deadline
     pub slo_attained: u64,
+    /// modeled staging seconds still queued on the shared
+    /// [`crate::experts::BandwidthWindow`] at snapshot time — transfer
+    /// work admitted by the EDF scheduler but not yet drained by
+    /// compute-layer advances
+    pub prefetch_backlog_secs: f64,
+    /// backlog seconds carried (not discarded) across `reset_stats`
+    /// epoch boundaries — the drain-or-carry conservation guarantee
+    pub prefetch_carried_backlog_secs: f64,
+    /// fetches admitted into the bandwidth window by the EDF scheduler
+    pub prefetch_admitted: u64,
+    /// speculative fetches deferred because their prediction confidence
+    /// was too low to spend contended window bandwidth on
+    pub prefetch_deferred: u64,
+    /// fraction of drain capacity offered by compute-layer advances
+    /// that the window actually consumed; `None` before any drain
+    pub prefetch_window_utilization: Option<f64>,
 }
 
 impl ServeStats {
@@ -123,12 +139,15 @@ impl ServeStats {
     /// `real_sleep = false` (virtual transfer cost): with real sleeps
     /// the stalls are already inside the measured walls.
     ///
-    /// Known model limits: (a) prefetch-timeline fetches queue on a
-    /// virtual busy-until clock, so a burst of prefetches is credited
-    /// only up to the modeled bandwidth window that actually existed
-    /// (the uncredited share surfaces as exposed transfer) — but the
-    /// window is measured in host wall time, which in virtual mode runs
-    /// faster than paper-scale compute would; (b) a *blocking* fetch's
+    /// Known model limits: (a) prefetch-timeline fetches queue on the
+    /// shared [`BandwidthWindow`](crate::experts::BandwidthWindow), so
+    /// a burst of prefetches is credited only up to the modeled
+    /// bandwidth window that actually existed before each fetch's
+    /// deadline (the uncredited share surfaces as exposed transfer) —
+    /// but the window is one shared modeled link, so when several
+    /// threads charge it concurrently the per-fetch credit split
+    /// depends on arrival interleaving (the total stays bounded by the
+    /// offered window); (b) a *blocking* fetch's
     /// physical staging wall (microseconds at repro scale) lands inside
     /// `expert_wall_secs` while its *modeled* seconds (milliseconds at
     /// paper scale) are billed as exposed transfer — a small double

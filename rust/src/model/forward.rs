@@ -205,11 +205,13 @@ pub struct ForwardOptions {
 }
 
 /// Out-of-band hooks into a forward pass.  [`ForwardHooks::layer_gate`]
-/// couples the pass to a layer-ahead warmer: before dispatching MoE
+/// couples the pass to the depth-window warmer: before dispatching MoE
 /// layer *j* the runner waits until the warmer has staged layer *j*'s
-/// experts (and publishes its progress so the warmer can start on
-/// *j+1*), which keeps every expert fetch on the overlapped prefetch
-/// timeline.
+/// experts (and publishes its progress so the warmer can advance its
+/// window to *j+1 .. j+depth*, each staged fetch scheduled
+/// earliest-deadline-first into the shared bandwidth window — see
+/// `experts::bandwidth`), which keeps every expert fetch on the
+/// overlapped prefetch timeline.
 #[derive(Clone, Copy, Default)]
 pub struct ForwardHooks<'a> {
     pub layer_gate: Option<&'a LayerGate>,

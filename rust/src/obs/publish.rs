@@ -134,6 +134,27 @@ pub fn publish_serve_stats(reg: &Registry, stats: &ServeStats) {
     reg.gauge("sida_exposed_transfer_seconds", "modeled transfer seconds on the critical path")
         .set(stats.exposed_transfer_secs());
 
+    // ---- cross-layer prefetch bandwidth scheduler -------------------------
+    reg.gauge("sida_prefetch_backlog_secs", "staging seconds queued on the bandwidth window")
+        .set(stats.prefetch_backlog_secs);
+    reg.gauge(
+        "sida_prefetch_carried_backlog_secs",
+        "backlog seconds carried across epoch resets (drain-or-carry)",
+    )
+    .set(stats.prefetch_carried_backlog_secs);
+    reg.gauge(
+        "sida_prefetch_window_utilization",
+        "used / offered window drain capacity (NaN: no drain yet)",
+    )
+    .set(opt(stats.prefetch_window_utilization));
+    reg.counter("sida_prefetch_admitted_total", "fetches admitted EDF into the window")
+        .set(stats.prefetch_admitted);
+    reg.counter(
+        "sida_prefetch_deferred_total",
+        "low-confidence speculative fetches deferred by the scheduler",
+    )
+    .set(stats.prefetch_deferred);
+
     // ---- §6 tier ladder ---------------------------------------------------
     let h = &stats.hierarchy;
     reg.gauge("sida_ladder_seconds", "tier-ladder seconds (== modeled transfer attribution)")
@@ -325,12 +346,20 @@ mod tests {
         stats.latency.record(0.020);
         stats.hierarchy.promotions_from_ssd = 3;
         stats.hierarchy.ssd_promote_secs = 0.3;
+        stats.prefetch_backlog_secs = 0.125;
+        stats.prefetch_admitted = 7;
+        stats.prefetch_deferred = 2;
+        stats.prefetch_window_utilization = Some(0.5);
         publish_serve_stats(&reg, &stats);
         // the acceptance floor is 25 exported series; single-device
         // publishing alone must clear it with headroom
         assert!(reg.series_count() >= 25, "only {} series", reg.series_count());
         let text = render_text(&reg);
         assert_eq!(prom::sample(&text, "sida_requests_total"), Some(8.0));
+        assert_eq!(prom::sample(&text, "sida_prefetch_backlog_secs"), Some(0.125));
+        assert_eq!(prom::sample(&text, "sida_prefetch_admitted_total"), Some(7.0));
+        assert_eq!(prom::sample(&text, "sida_prefetch_deferred_total"), Some(2.0));
+        assert_eq!(prom::sample(&text, "sida_prefetch_window_utilization"), Some(0.5));
         assert_eq!(prom::sample(&text, "sida_cache_hits_total"), Some(30.0));
         assert_eq!(prom::sample(&text, "sida_cache_hit_ratio"), Some(0.75));
         assert_eq!(

@@ -92,6 +92,12 @@ pub struct ServerConfig {
     pub ssd_budget_bytes: usize,
     /// hash experts consumed per token
     pub k_used: usize,
+    /// staging depth of the cross-layer prefetch scheduler
+    /// (`--prefetch-depth`; 1 = one-layer-ahead baseline)
+    pub prefetch_depth: usize,
+    /// modeled host-link staging bandwidth, bytes/sec (`--host-bw`;
+    /// 0 = the reference PCIe link)
+    pub host_bw: f64,
     /// batch-forming policy (size/deadline/queue bound)
     pub batch: BatchPolicy,
     /// worker-pool width for concurrent expert execution (0 = auto)
@@ -133,6 +139,8 @@ impl Default for ServerConfig {
             store_dir: String::new(),
             ssd_budget_bytes: 0,
             k_used: 1,
+            prefetch_depth: 3,
+            host_bw: 0.0,
             batch: BatchPolicy::default(),
             pool_threads: 0,
             devices: 1,
@@ -168,6 +176,8 @@ pub struct ServerState {
     /// the device fleet + router when `ServerConfig::devices > 1`
     pub cluster: Option<Arc<ClusterRouter>>,
     pub k_used: usize,
+    /// staging depth of the depth-window warmer (`--prefetch-depth`)
+    pub prefetch_depth: usize,
     /// the single shared admission queue all connections feed
     queue: Mutex<BatchFormer<Sender<ReplyOutcome>>>,
     queue_cv: Condvar,
@@ -232,6 +242,11 @@ impl ServerState {
             core.attach_store(crate::experts::bind_store(&bundle, store));
         }
         let cache = Arc::new(SharedExpertCache::new(core));
+        if cfg.host_bw > 0.0 {
+            cache
+                .bandwidth_window()
+                .set_rate(CostModel::paper_scale(real).h2d_bandwidth / cfg.host_bw);
+        }
         let cluster = if cfg.devices > 1 {
             Some(Arc::new(ClusterRouter::new(
                 &bundle,
@@ -243,6 +258,7 @@ impl ServerState {
                     budget_per_device: cfg.budget_sim_bytes,
                     host_ram_budget: cfg.ram_budget_sim_bytes,
                     ram_policy: cfg.ram_policy.clone(),
+                    host_bw: cfg.host_bw,
                     ..ClusterConfig::default()
                 },
             )?))
@@ -255,6 +271,7 @@ impl ServerState {
             cache,
             cluster,
             k_used: cfg.k_used,
+            prefetch_depth: cfg.prefetch_depth.max(1),
             queue: Mutex::new(BatchFormer::new(cfg.batch)),
             queue_cv: Condvar::new(),
             batching: Mutex::new(BatchingStats::default()),
@@ -439,6 +456,13 @@ fn stats_fields(state: &ServerState) -> Vec<(&'static str, Json)> {
         Some(cl) => cl.hierarchy_total(),
         None => state.cache.hierarchy_stats(),
     };
+    // the shared staging bandwidth window: box-wide in cluster mode
+    // (every device charges the one window), the single cache's
+    // otherwise — same resolution rule as residency above
+    let window = match &state.cluster {
+        Some(router) => router.bandwidth_window().snapshot(),
+        None => state.cache.bandwidth_window().snapshot(),
+    };
     let mut fields = vec![
         ("served", Json::Num(served as f64)),
         ("rejected", Json::Num(rejected as f64)),
@@ -459,6 +483,16 @@ fn stats_fields(state: &ServerState) -> Vec<(&'static str, Json)> {
         ("cache_hits", Json::Num(hits as f64)),
         ("cache_misses", Json::Num(misses as f64)),
         ("transfer_overlapped_secs", Json::Num(overlapped)),
+        ("prefetch_backlog_secs", Json::Num(window.backlog_secs)),
+        ("prefetch_carried_backlog_secs", Json::Num(window.carried_backlog_secs)),
+        ("prefetch_admitted", Json::Num(window.admitted as f64)),
+        ("prefetch_deferred", Json::Num(window.deferred_low_confidence as f64)),
+        (
+            // `null` until compute advances have offered any drain —
+            // distinct from a true 0% utilization
+            "prefetch_window_utilization",
+            window.utilization().map(Json::Num).unwrap_or(Json::Null),
+        ),
         ("device_used_bytes", Json::Num(used as f64)),
         ("ram_used_bytes", Json::Num(hier.ram_bytes as f64)),
         ("ssd_used_bytes", Json::Num(hier.ssd_bytes as f64)),
@@ -663,6 +697,7 @@ fn run_batch(
         &pairs,
         &state.runner.bundle.topology.moe_blocks,
         state.k_used,
+        state.prefetch_depth,
         &trace_ids,
         |hooks| state.runner.forward_batch_hooked(&items, &mut provider, opts, hooks),
     )?;

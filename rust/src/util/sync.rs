@@ -4,11 +4,14 @@
 //! [`LayerGate`] coordinates two threads working through the MoE layers
 //! of one forward pass:
 //!
-//! * the **warmer** stages the predicted expert set of layer *j+1*
-//!   while the compute thread is busy with layer *j* (the paper's
-//!   "dynamical loading ... following the pipeline parallelism
-//!   mechanism", §3.1, refined from request granularity to layer
-//!   granularity), and
+//! * the **warmer** stages the predicted expert sets of the next
+//!   *depth window* of layers (*j+1* .. *j+depth*, each fetch carrying
+//!   a need-time deadline and a tier-derived lead — see
+//!   `experts::bandwidth`) while the compute thread is busy with layer
+//!   *j* (the paper's "dynamical loading ... following the pipeline
+//!   parallelism mechanism", §3.1, refined from request granularity to
+//!   layer granularity; `--prefetch-depth 1` is the classic
+//!   one-layer-ahead baseline), and
 //! * the **compute** thread gates each MoE layer on that layer's
 //!   warm-up having finished, so every expert fetch happens on the
 //!   prefetch timeline (non-blocking, overlapped) and cache hit/miss
